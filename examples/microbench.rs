@@ -1,0 +1,51 @@
+//! Standalone gather microbenchmark CLI (paper Fig. 6 / Fig. 7 shapes on
+//! any system profile, any sweep).
+//!
+//! ```sh
+//! cargo run --release --offline --example microbench -- system2 65536 2052
+//! ```
+
+use ptdirect::config::SystemProfile;
+use ptdirect::coordinator::microbench::{fig6_grid, run_cell};
+use ptdirect::coordinator::report::{ms, ratio, Table};
+use ptdirect::util::bytes::human_bytes;
+use ptdirect::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    ptdirect::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sys = SystemProfile::by_name(args.first().map(String::as_str).unwrap_or("system1"))
+        .ok_or_else(|| anyhow::anyhow!("unknown system"))?;
+    let mut rng = Rng::new(17);
+
+    let (ns, sizes) = if args.len() >= 3 {
+        (
+            vec![args[1].parse::<u64>()?],
+            vec![args[2].parse::<u64>()?],
+        )
+    } else {
+        fig6_grid()
+    };
+
+    let mut t = Table::new(
+        &format!("gather microbenchmark — {} ({} / {})", sys.name, sys.cpu_name, sys.gpu_name),
+        &["N", "feat", "ideal", "Py", "PyD naive", "PyD opt", "Py/ideal", "PyD/ideal"],
+    );
+    for &n in &ns {
+        for &s in &sizes {
+            let c = run_cell(&sys, n, s, &mut rng);
+            t.row(&[
+                n.to_string(),
+                human_bytes(s),
+                ms(c.ideal_s),
+                ms(c.py_s),
+                ms(c.pyd_naive_s),
+                ms(c.pyd_s),
+                ratio(c.py_slowdown()),
+                ratio(c.pyd_slowdown()),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

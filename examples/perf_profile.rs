@@ -1,0 +1,143 @@
+//! Whole-stack profiling harness (EXPERIMENTS.md §Perf).
+//!
+//! Measures the L3 hot paths in isolation:
+//!   1. warp request counting — production O(#warps) vs the O(#elements)
+//!      reference (the simulation hot path of every bench),
+//!   2. feature gather — first-touch vs steady-state (allocator + staging
+//!      pool effects),
+//!   3. PJRT train-step execution + input-literal assembly,
+//!   4. HLO program sizes per artifact.
+//!
+//! ```sh
+//! cargo run --release --offline --example perf_profile
+//! ```
+
+use ptdirect::config::{AccessMode, SystemProfile};
+use ptdirect::coordinator::report::{ms, Table};
+use ptdirect::device::warp::{count_requests, count_requests_naive_ref, WarpModel};
+use ptdirect::featurestore::FeatureStore;
+use ptdirect::runtime::state::{StepBatch, TrainState};
+use ptdirect::runtime::{Manifest, Runtime};
+use ptdirect::util::rng::Rng;
+use ptdirect::util::stats::Summary;
+use ptdirect::util::timer::Timer;
+
+fn time_n<F: FnMut()>(n: u32, mut f: F) -> Summary {
+    let mut s = Summary::new();
+    for _ in 0..n {
+        let t = Timer::start();
+        f();
+        s.add(t.elapsed_s());
+    }
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    ptdirect::util::logging::init();
+    let sys = SystemProfile::system1();
+    let mut rng = Rng::new(0x9E4F);
+
+    // ---- 1. request counting ----
+    let idx: Vec<u32> = (0..262_144).map(|_| rng.gen_range(4_000_000) as u32).collect();
+    let model = WarpModel::default();
+    let mut t = Table::new("1. warp request counting (256K gathers x 4 KiB rows)", &["impl", "median ms", "ratio"]);
+    let fast = time_n(9, || {
+        std::hint::black_box(count_requests(&idx, 1024, model, true));
+    });
+    let slow = time_n(3, || {
+        std::hint::black_box(count_requests_naive_ref(&idx, 1024, model, true));
+    });
+    t.row(&["O(#warps) production".into(), ms(fast.median()), "1.00x".into()]);
+    t.row(&[
+        "O(#elements) reference".into(),
+        ms(slow.median()),
+        format!("{:.1}x slower", slow.median() / fast.median()),
+    ]);
+    t.print();
+
+    // ---- 2. feature gather ----
+    let store = FeatureStore::build(100_000, 602, 41, AccessMode::CpuGather, &sys, 1)?;
+    let gidx: Vec<u32> = (0..2304).map(|_| rng.gen_range(100_000) as u32).collect();
+    let mut out = vec![0f32; gidx.len() * 602];
+    let first = {
+        let t0 = Timer::start();
+        store.gather_into(&gidx, &mut out)?;
+        t0.elapsed_s()
+    };
+    let steady = time_n(20, || {
+        store.gather_into(&gidx, &mut out).unwrap();
+    });
+    let payload = (gidx.len() * 602 * 4) as f64;
+    let mut t = Table::new("2. feature gather (2304 x 602 f32 rows, Py staging path)", &["phase", "median ms", "GB/s"]);
+    t.row(&["first touch".into(), ms(first), format!("{:.1}", payload / first / 1e9)]);
+    t.row(&[
+        "steady state".into(),
+        ms(steady.median()),
+        format!("{:.1}", payload / steady.median() / 1e9),
+    ]);
+    t.print();
+    println!(
+        "staging pool: {} hits / {} misses; roofline = single-core memcpy\n",
+        store.staging_hits(),
+        store.staging_misses()
+    );
+
+    // ---- 3/4. PJRT step + artifact stats ----
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.txt").exists() {
+        let manifest = Manifest::load(dir)?;
+        let rt = Runtime::cpu()?;
+        let mut t = Table::new(
+            "3. PJRT train step (B=64, fanouts 5,5)",
+            &["artifact", "compile s", "assemble ms", "execute ms", "HLO instrs"],
+        );
+        for name in ["sage_product", "gat_product", "sage_reddit"] {
+            let spec = manifest.get(name)?;
+            let loaded = rt.load(dir, spec)?;
+            let mut state = TrainState::init(spec, 3)?;
+            let n0 = spec.layer_sizes[0];
+            let mut rng2 = Rng::new(5);
+            let batch = StepBatch {
+                x0: (0..n0 * spec.in_dim).map(|_| rng2.gen_f32_range(-0.5, 0.5)).collect(),
+                nbrs: (0..spec.fanouts.len())
+                    .map(|l| {
+                        (0..spec.layer_sizes[l + 1] * spec.fanouts[l])
+                            .map(|_| rng2.gen_range(spec.layer_sizes[l] as u64) as i32)
+                            .collect()
+                    })
+                    .collect(),
+                masks: (0..spec.fanouts.len())
+                    .map(|l| vec![1.0; spec.layer_sizes[l + 1] * spec.fanouts[l]])
+                    .collect(),
+                labels: (0..spec.batch).map(|_| rng2.gen_range(spec.classes as u64) as i32).collect(),
+            };
+            // warmup
+            state.step(&loaded, &batch)?;
+            let mut exec = Summary::new();
+            for _ in 0..10 {
+                let m = state.step(&loaded, &batch)?;
+                exec.add(m.exec_s);
+            }
+            // assembly cost = full step wall minus reported exec
+            let mut wall = Summary::new();
+            for _ in 0..10 {
+                let t0 = Timer::start();
+                state.step(&loaded, &batch)?;
+                wall.add(t0.elapsed_s());
+            }
+            let hlo = std::fs::read_to_string(spec.hlo_path(dir))?;
+            let instrs = hlo.lines().filter(|l| l.contains(" = ")).count();
+            t.row(&[
+                name.into(),
+                format!("{:.2}", loaded.compile_s),
+                ms(wall.median() - exec.median()),
+                ms(exec.median()),
+                instrs.to_string(),
+            ]);
+        }
+        t.print();
+    } else {
+        println!("artifacts/ missing — run `make artifacts` for sections 3/4");
+    }
+    Ok(())
+}

@@ -1,0 +1,221 @@
+"""AOT compiler: lower every model variant + standalone kernels to HLO text.
+
+This is the single build-time entry point (``make artifacts``).  It lowers
+
+  * one fused training step per (arch, dataset) variant of paper Fig. 8,
+  * one inference step per variant,
+  * the standalone aligned-gather kernel (runtime microbench cross-check),
+
+to **HLO text** — not serialized ``HloModuleProto``: jax >= 0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published ``xla`` rust crate binds) rejects; the HLO text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Alongside the ``.hlo.txt`` files it writes ``manifest.txt``, a line-oriented
+description of every artifact's calling convention (input/output names,
+roles, dtypes, shapes) that ``rust/src/runtime/artifact.rs`` parses.  Python
+never runs again after this step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import gather_rows, gather_rows_aligned
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dims(shape) -> str:
+    return "x".join(str(d) for d in shape) if shape else "scalar"
+
+
+def _dtype_tag(dt) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(dt)]
+
+
+class Manifest:
+    def __init__(self):
+        self.lines = []
+
+    def begin(self, name, kind, cfg: M.ModelConfig | None):
+        self.lines.append(f"artifact {name}")
+        self.lines.append(f"file {name}.hlo.txt")
+        self.lines.append(f"kind {kind}")
+        if cfg is not None:
+            self.lines += [
+                f"arch {cfg.arch}",
+                f"batch {cfg.batch}",
+                f"hidden {cfg.hidden}",
+                f"in_dim {cfg.in_dim}",
+                f"classes {cfg.classes}",
+                f"fanouts {','.join(map(str, cfg.fanouts))}",
+                f"layer_sizes {','.join(map(str, cfg.layer_sizes))}",
+                f"lr {cfg.lr}",
+                f"momentum {cfg.momentum}",
+            ]
+
+    def io(self, direction, role, name, spec):
+        self.lines.append(
+            f"{direction} {role} {name} {_dtype_tag(spec.dtype)} {_dims(spec.shape)}"
+        )
+
+    def end(self):
+        self.lines.append("end")
+
+    def write(self, path):
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+def lower_variant(cfg: M.ModelConfig, out_dir: str, manifest: Manifest, kinds):
+    names = list(M.param_shapes(cfg).keys())
+    nl = cfg.num_layers
+
+    if "train" in kinds:
+        args = M.example_inputs(cfg)
+        t0 = time.time()
+        lowered = jax.jit(M.make_train_step(cfg)).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{cfg.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.begin(cfg.name, "train", cfg)
+        np_ = len(names)
+        for i, n in enumerate(names):
+            manifest.io("input", "param", n, args[i])
+        for i, n in enumerate(names):
+            manifest.io("input", "momentum", n, args[np_ + i])
+        pos = 2 * np_
+        manifest.io("input", "data", "x0", args[pos])
+        pos += 1
+        for l in range(nl):
+            manifest.io("input", "data", f"nbr{l}", args[pos + l])
+        pos += nl
+        for l in range(nl):
+            manifest.io("input", "data", f"mask{l}", args[pos + l])
+        pos += nl
+        manifest.io("input", "data", "labels", args[pos])
+        f32s = jax.ShapeDtypeStruct((), jnp.float32)
+        manifest.io("output", "metric", "loss", f32s)
+        manifest.io("output", "metric", "acc", f32s)
+        for i, n in enumerate(names):
+            manifest.io("output", "param", n, args[i])
+        for i, n in enumerate(names):
+            manifest.io("output", "momentum", n, args[np_ + i])
+        manifest.end()
+        print(f"  {cfg.name}: {len(text)} chars in {time.time() - t0:.1f}s")
+
+    if "infer" in kinds:
+        args = M.example_infer_inputs(cfg)
+        t0 = time.time()
+        lowered = jax.jit(M.make_infer_step(cfg)).lower(*args)
+        text = to_hlo_text(lowered)
+        name = f"{cfg.name}_infer"
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        manifest.begin(name, "infer", cfg)
+        for i, n in enumerate(names):
+            manifest.io("input", "param", n, args[i])
+        pos = len(names)
+        manifest.io("input", "data", "x0", args[pos])
+        pos += 1
+        for l in range(nl):
+            manifest.io("input", "data", f"nbr{l}", args[pos + l])
+        pos += nl
+        for l in range(nl):
+            manifest.io("input", "data", f"mask{l}", args[pos + l])
+        manifest.io(
+            "output",
+            "metric",
+            "logits",
+            jax.ShapeDtypeStruct((cfg.batch, cfg.classes), jnp.float32),
+        )
+        manifest.end()
+        print(f"  {name}: {len(text)} chars in {time.time() - t0:.1f}s")
+
+
+GATHER_ROWS = 4096
+GATHER_FEATS = 128
+GATHER_BATCH = 512
+
+
+def lower_gather(out_dir: str, manifest: Manifest):
+    """Standalone gather kernels (naive + aligned) for runtime cross-checks."""
+    feats = jax.ShapeDtypeStruct((GATHER_ROWS, GATHER_FEATS), jnp.float32)
+    idx = jax.ShapeDtypeStruct((GATHER_BATCH,), jnp.int32)
+    for name, fn in (
+        ("gather_naive", lambda x, i: (gather_rows(x, i),)),
+        ("gather_aligned", lambda x, i: (gather_rows_aligned(x, i),)),
+    ):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(feats, idx)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        manifest.begin(name, "gather", None)
+        manifest.io("input", "data", "features", feats)
+        manifest.io("input", "data", "idx", idx)
+        manifest.io(
+            "output",
+            "metric",
+            "rows",
+            jax.ShapeDtypeStruct((GATHER_BATCH, GATHER_FEATS), jnp.float32),
+        )
+        manifest.end()
+        print(f"  {name}: {len(text)} chars in {time.time() - t0:.1f}s")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default="", help="comma list; default all")
+    ap.add_argument("--batch", type=int, default=M.DEFAULT_BATCH)
+    ap.add_argument("--hidden", type=int, default=M.DEFAULT_HIDDEN)
+    ap.add_argument(
+        "--fanouts", default=",".join(map(str, M.DEFAULT_FANOUTS))
+    )
+    ap.add_argument("--skip-infer", action="store_true")
+    ap.add_argument("--skip-gather", action="store_true")
+    args = ap.parse_args(argv)
+
+    fanouts = tuple(int(x) for x in args.fanouts.split(","))
+    variants = M.all_variants(args.batch, fanouts, args.hidden)
+    if args.variants:
+        keep = set(args.variants.split(","))
+        variants = [v for v in variants if v.name in keep]
+        missing = keep - {v.name for v in variants}
+        if missing:
+            print(f"unknown variants: {sorted(missing)}", file=sys.stderr)
+            return 2
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = Manifest()
+    kinds = {"train"} | (set() if args.skip_infer else {"infer"})
+    print(f"lowering {len(variants)} variants (kinds={sorted(kinds)}) ...")
+    for cfg in variants:
+        lower_variant(cfg, args.out_dir, manifest, kinds)
+    if not args.skip_gather:
+        lower_gather(args.out_dir, manifest)
+    manifest.write(os.path.join(args.out_dir, "manifest.txt"))
+    print(f"manifest: {os.path.join(args.out_dir, 'manifest.txt')}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

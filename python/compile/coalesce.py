@@ -1,0 +1,114 @@
+"""PCIe request-coalescing model shared with the rust simulator.
+
+This module is the *specification* of how the simulated GPU turns an
+irregular gather into PCIe read requests; ``rust/src/device/warp.rs``
+implements the identical model in O(#cachelines) and the cross-language
+fixture test (``python/tests/test_coalesce.py`` +
+``rust/tests/coalesce_fixture.rs``) pins both to the same numbers, including
+the paper's Fig. 5 toy example (7 -> 5 requests for row 2).
+
+Model (Min et al. 2020, EMOGI; paper §4.5): threads are assigned
+contiguously over the flattened (row, feature) access sequence; each warp of
+``warp`` threads issues one PCIe read request per *distinct cacheline*
+touched by its threads.  The circular-shift optimization rotates each row's
+in-row access order by
+
+    s_r = (t_begin_r - row_start_r) mod cl
+
+so the row's stream lines up with the warp/cacheline grid of global thread
+ids (see kernels/gather.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, List, Sequence, Tuple
+
+# Real-hardware constants: 32-thread warps, 128-byte cachelines, 4-byte feats.
+WARP = 32
+CACHELINE_BYTES = 128
+
+
+@dataclass(frozen=True)
+class GatherTraffic:
+    """Request statistics for one gather."""
+
+    requests: int  # total PCIe read requests
+    cachelines: int  # distinct cachelines touched (lower bound on requests)
+    bytes_moved: int  # requests * cacheline_bytes (I/O amplification incl.)
+    useful_bytes: int  # rows * feat_bytes actually consumed
+
+
+def element_stream(
+    idx: Sequence[int], feat_elems: int, cl_elems: int, shifted: bool
+) -> Iterable[int]:
+    """Absolute element addresses in thread order, optionally circular-shifted."""
+    t_begin = 0
+    for r in idx:
+        start = r * feat_elems
+        s = ((t_begin - start) % cl_elems) if shifted else 0
+        for c in range(feat_elems):
+            yield start + ((c + s) % feat_elems)
+        t_begin += feat_elems
+
+
+def count_requests(
+    idx: Sequence[int],
+    feat_elems: int,
+    *,
+    warp: int = WARP,
+    cl_elems: int = CACHELINE_BYTES // 4,
+    shifted: bool = False,
+) -> GatherTraffic:
+    """Count per-warp distinct-cacheline requests for a gather."""
+    requests = 0
+    all_lines = set()
+    warp_lines: set = set()
+    n_in_warp = 0
+    for addr in element_stream(idx, feat_elems, cl_elems, shifted):
+        warp_lines.add(addr // cl_elems)
+        all_lines.add(addr // cl_elems)
+        n_in_warp += 1
+        if n_in_warp == warp:
+            requests += len(warp_lines)
+            warp_lines = set()
+            n_in_warp = 0
+    if n_in_warp:
+        requests += len(warp_lines)
+    cl_bytes = cl_elems * 4
+    return GatherTraffic(
+        requests=requests,
+        cachelines=len(all_lines),
+        bytes_moved=requests * cl_bytes,
+        useful_bytes=len(idx) * feat_elems * 4,
+    )
+
+
+def per_row_requests(
+    idx: Sequence[int],
+    feat_elems: int,
+    *,
+    warp: int = WARP,
+    cl_elems: int = CACHELINE_BYTES // 4,
+    shifted: bool = False,
+) -> List[int]:
+    """Requests attributed per gathered row (a warp request touching rows
+    a and b counts once for each — matches the paper's Fig. 5 narration
+    which counts the requests servicing row 2)."""
+    counts = [0] * len(idx)
+    # (addr, row) pairs in thread order
+    pairs: List[Tuple[int, int]] = []
+    t_begin = 0
+    for rpos, r in enumerate(idx):
+        start = r * feat_elems
+        s = ((t_begin - start) % cl_elems) if shifted else 0
+        for c in range(feat_elems):
+            pairs.append((start + ((c + s) % feat_elems), rpos))
+        t_begin += feat_elems
+    for w in range(0, len(pairs), warp):
+        by_row = {}
+        for addr, rpos in pairs[w : w + warp]:
+            by_row.setdefault(rpos, set()).add(addr // cl_elems)
+        for rpos, lines in by_row.items():
+            counts[rpos] += len(lines)
+    return counts

@@ -1,0 +1,25 @@
+"""Layer-1 Pallas kernels for the PyTorch-Direct reproduction.
+
+Every kernel here is authored with ``jax.experimental.pallas`` and executed
+under ``interpret=True`` (the CPU PJRT client cannot run Mosaic custom-calls;
+see DESIGN.md §3).  Each kernel is wrapped in a ``jax.custom_vjp`` whose
+backward pass is hand-written in pure jnp, because interpret-mode pallas does
+not support reverse-mode autodiff.  Correctness of both directions is checked
+against :mod:`compile.kernels.ref` by the pytest/hypothesis suite.
+"""
+
+from compile.kernels.gather import (
+    gather_rows,
+    gather_rows_aligned,
+    circular_shift,
+)
+from compile.kernels.sage_agg import sage_mean_agg
+from compile.kernels.gat_attn import gat_attention
+
+__all__ = [
+    "gather_rows",
+    "gather_rows_aligned",
+    "circular_shift",
+    "sage_mean_agg",
+    "gat_attention",
+]

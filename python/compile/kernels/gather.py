@@ -1,0 +1,160 @@
+"""Pallas row-gather kernels — the paper's indexing hot-spot (§4.5).
+
+Two variants are provided:
+
+``gather_rows``
+    The straightforward blocked gather, equivalent to PyTorch's GPU indexing
+    kernel *without* knowledge of memory alignment ("PyD Naive" in Fig. 7).
+
+``gather_rows_aligned``
+    The circular-shift variant (paper Fig. 5): each row's element stream is
+    rotated by ``s_r = (t_begin_r - row_start_r) mod cl`` so the memory system
+    sees cacheline-aligned request windows, then the outputs are written with
+    identically rotated indices so the result is bit-identical to
+    ``gather_rows``.  On real hardware the rotation changes the *access
+    schedule* only; under ``interpret=True`` we execute the same arithmetic so
+    the schedule model in ``rust/src/device/warp.rs`` and this kernel share
+    one definition of the shift.
+
+TPU adaptation (DESIGN.md §3): the warp of the CUDA kernel becomes the VPU
+lane dimension; ``CL_ELEMS = 32`` models the 128-byte GPU cacheline at 4-byte
+elements and doubles as the lane-rotation width.  The batch dimension is
+tiled with a BlockSpec so each grid step touches one [BLOCK_B, F] VMEM tile
+of the output while the feature table stays in HBM (ANY memory space).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 128-byte cacheline / 4-byte feature elements — the constant the paper's
+# alignment optimization is built around (§4.5).
+CL_ELEMS = 32
+
+# Rows of the output produced per grid step.  Chosen so a tile of the widest
+# evaluated feature width (16 KiB = 4096 f32) stays ≤ 2 MiB of VMEM:
+# 128 rows x 4096 elems x 4 B = 2 MiB.
+BLOCK_B = 128
+
+
+def circular_shift(idx: jnp.ndarray, feat_width: int, cl_elems: int = CL_ELEMS):
+    """Per-row shift amounts; see :func:`compile.kernels.ref.circular_shift_ref`.
+
+    Computed mod-first so the arithmetic stays in int32 even for tables with
+    billions of elements (idx * feat_width would overflow otherwise).
+    """
+    f_mod = feat_width % cl_elems
+    rows = jnp.arange(idx.shape[0], dtype=jnp.int32)
+    t_begin = (rows % cl_elems) * f_mod  # == (rows * F) mod cl, up to a mod
+    row_start = (idx.astype(jnp.int32) % cl_elems) * f_mod
+    return ((t_begin - row_start) % cl_elems).astype(jnp.int32)
+
+
+def _gather_kernel(feat_ref, idx_ref, out_ref):
+    """One grid step: gather BLOCK_B rows of the feature table."""
+    out_ref[...] = jnp.take(feat_ref[...], idx_ref[...], axis=0)
+
+
+def _gather_aligned_kernel(feat_ref, idx_ref, shift_ref, out_ref):
+    """Circular-shift gather: rotated read, identically rotated write.
+
+    For each row ``b`` the element served at in-row position ``c`` is
+    ``(c + s_b) % F`` — both on the read side (from the feature table) and on
+    the write side (into the output), so ``out[b] == feat[idx[b]]`` exactly,
+    while the generated address stream starts cacheline-aligned.
+    """
+    f = out_ref.shape[1]
+    idx = idx_ref[...]
+    shift = shift_ref[...]
+    cols = jnp.arange(f, dtype=jnp.int32)
+    # rotated column for every (row, in-row position): [BLOCK_B, F]
+    rot = (cols[None, :] + shift[:, None]) % f
+    rows = jnp.take(feat_ref[...], idx, axis=0)  # HBM reads, schedule = rot
+    served = jnp.take_along_axis(rows, rot, axis=1)
+    # un-rotate on write-out: out[b, rot[b, c]] = served[b, c]
+    out = jnp.zeros_like(rows)
+    b = jnp.arange(idx.shape[0], dtype=jnp.int32)[:, None]
+    out_ref[...] = out.at[b, rot].set(served)
+
+
+def _pad_batch(idx: jnp.ndarray, block: int):
+    b = idx.shape[0]
+    pad = (-b) % block
+    if pad:
+        idx = jnp.concatenate([idx, jnp.zeros((pad,), idx.dtype)])
+    return idx, b
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def gather_rows(features: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """``out[b] = features[idx[b]]`` via a blocked pallas kernel."""
+    return _gather_rows_fwd_impl(features, idx)
+
+
+def _gather_rows_fwd_impl(features, idx):
+    n, f = features.shape
+    idx_p, b = _pad_batch(idx, BLOCK_B)
+    grid = (idx_p.shape[0] // BLOCK_B,)
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, f), lambda i: (0, 0)),  # whole table resident
+            pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((idx_p.shape[0], f), features.dtype),
+        interpret=True,
+    )(features, idx_p)
+    return out[:b]
+
+
+def _gather_rows_fwd(features, idx):
+    return _gather_rows_fwd_impl(features, idx), (features.shape, idx)
+
+
+def _gather_rows_bwd(res, g):
+    (shape, idx) = res
+    # VJP of a gather is a scatter-add of the cotangent rows.
+    df = jnp.zeros(shape, g.dtype).at[idx].add(g)
+    return (df, None)
+
+
+gather_rows.defvjp(_gather_rows_fwd, _gather_rows_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def gather_rows_aligned(features: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Circular-shift aligned gather; numerically identical to ``gather_rows``."""
+    return _gather_rows_aligned_fwd_impl(features, idx)
+
+
+def _gather_rows_aligned_fwd_impl(features, idx):
+    n, f = features.shape
+    idx_p, b = _pad_batch(idx, BLOCK_B)
+    shift = circular_shift(idx_p, f)
+    grid = (idx_p.shape[0] // BLOCK_B,)
+    out = pl.pallas_call(
+        _gather_aligned_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, f), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((idx_p.shape[0], f), features.dtype),
+        interpret=True,
+    )(features, idx_p, shift)
+    return out[:b]
+
+
+def _gather_rows_aligned_fwd(features, idx):
+    return _gather_rows_aligned_fwd_impl(features, idx), (features.shape, idx)
+
+
+gather_rows_aligned.defvjp(_gather_rows_aligned_fwd, _gather_rows_bwd)

@@ -1,0 +1,275 @@
+"""Layer-2: GraphSAGE and GAT block models with fused training step.
+
+The models operate on *message-flow-graph blocks* (the shape the rust
+sampler emits, mirroring DGL's mini-batch structure the paper trains with):
+
+    layer l consumes a source feature matrix  x_l   [n_l, d_l]
+    and per-destination neighbor indices      nbr_l [n_{l+1}, K_l]  (into x_l)
+    with a validity mask                      msk_l [n_{l+1}, K_l]
+    destinations are the prefix x_l[:n_{l+1}] (self features).
+
+All shapes are static: ``n_l = n_{l+1} * (1 + fanout_l)`` and the sampler
+pads with duplicated indices + mask 0.  The training step is one fused HLO
+program: forward, softmax cross-entropy, backward (via the kernels' custom
+VJPs) and an SGD-with-momentum update — rust feeds params and batch, gets
+back (loss, new params, new momenta).  Nothing here runs at serve time;
+``aot.py`` lowers these functions once to ``artifacts/*.hlo.txt``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gather_rows_aligned, gat_attention, sage_mean_agg
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration of one AOT model variant."""
+
+    name: str  # artifact name, e.g. "sage_product"
+    arch: str  # "sage" | "gat"
+    in_dim: int  # dataset feature width (paper Table 4 "#Feat.")
+    hidden: int
+    classes: int
+    batch: int  # root nodes per mini-batch (= n_L)
+    fanouts: Tuple[int, ...]  # per layer, input-side first
+    lr: float = 0.03
+    momentum: float = 0.9
+
+    @property
+    def layer_sizes(self) -> List[int]:
+        """n_0 >= n_1 >= ... >= n_L = batch (node counts per block level)."""
+        sizes = [self.batch]
+        for f in reversed(self.fanouts):
+            sizes.append(sizes[-1] * (1 + f))
+        return list(reversed(sizes))
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.fanouts)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    """Ordered (by name) parameter shape table; rust allocates from this."""
+    dims = [cfg.in_dim] + [cfg.hidden] * (cfg.num_layers - 1) + [cfg.hidden]
+    shapes: Dict[str, Tuple[int, ...]] = {}
+    for l in range(cfg.num_layers):
+        d_in, d_out = dims[l], dims[l + 1]
+        if cfg.arch == "sage":
+            shapes[f"l{l}_w_self"] = (d_in, d_out)
+            shapes[f"l{l}_w_nbr"] = (d_in, d_out)
+            shapes[f"l{l}_b"] = (d_out,)
+        elif cfg.arch == "gat":
+            shapes[f"l{l}_w"] = (d_in, d_out)
+            shapes[f"l{l}_a_dst"] = (d_out,)
+            shapes[f"l{l}_a_nbr"] = (d_out,)
+            shapes[f"l{l}_b"] = (d_out,)
+        else:
+            raise ValueError(cfg.arch)
+    shapes["out_w"] = (cfg.hidden, cfg.classes)
+    shapes["out_b"] = (cfg.classes,)
+    return dict(sorted(shapes.items()))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Glorot-uniform init (python-side; rust has an equivalent initializer)."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            limit = (6.0 / (shape[0] + shape[1])) ** 0.5
+            params[name] = jax.random.uniform(sub, shape, jnp.float32, -limit, limit)
+        else:
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Layers
+# --------------------------------------------------------------------------
+
+
+def sage_layer(params, l, x_src, nbr, mask, *, final: bool):
+    """GraphSAGE layer: W_self . x_self + W_nbr . mean(x_nbrs)."""
+    n_dst = nbr.shape[0]
+    h_nbr = sage_mean_agg(x_src, nbr, mask)  # pallas kernel
+    h = x_src[:n_dst] @ params[f"l{l}_w_self"] + h_nbr @ params[f"l{l}_w_nbr"]
+    h = h + params[f"l{l}_b"]
+    return h if final else jax.nn.relu(h)
+
+
+def gat_layer(params, l, x_src, nbr, mask, *, final: bool):
+    """Single-head GAT layer with self-loop in neighbor slot 0."""
+    n_dst, k = nbr.shape
+    z = x_src @ params[f"l{l}_w"]  # [n_src, d_out]
+    z_dst = z[:n_dst]
+    z_nbr = gather_rows_aligned(z, nbr.reshape(-1)).reshape(n_dst, k, -1)
+    # self-loop slot: prepend the destination itself with mask 1
+    z_all = jnp.concatenate([z_dst[:, None, :], z_nbr], axis=1)
+    m_all = jnp.concatenate([jnp.ones((n_dst, 1), mask.dtype), mask], axis=1)
+    h = gat_attention(z_dst, z_all, params[f"l{l}_a_dst"], params[f"l{l}_a_nbr"], m_all)
+    h = h + params[f"l{l}_b"]
+    return h if final else jax.nn.elu(h)
+
+
+def forward(cfg: ModelConfig, params, x0, nbrs, masks):
+    """Block forward pass -> logits [batch, classes]."""
+    layer = sage_layer if cfg.arch == "sage" else gat_layer
+    h = x0
+    for l in range(cfg.num_layers):
+        h = layer(params, l, h, nbrs[l], masks[l], final=False)
+    logits = h[: cfg.batch] @ params["out_w"] + params["out_b"]
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params, x0, nbrs, masks, labels):
+    """Mean softmax cross-entropy over the batch roots."""
+    logits = forward(cfg, params, x0, nbrs, masks)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).squeeze(1)
+    return nll.mean(), logits
+
+
+def accuracy(logits, labels):
+    return (logits.argmax(axis=-1) == labels).mean()
+
+
+# --------------------------------------------------------------------------
+# Training / inference steps (AOT entry points)
+# --------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig):
+    """Returns train_step(params, momenta, x0, *nbrs, *masks, labels).
+
+    Output tuple: (loss, acc, *new_params, *new_momenta) in sorted-name
+    order — the exact calling convention recorded in the artifact manifest.
+    """
+    names = list(param_shapes(cfg).keys())
+
+    def train_step(*flat):
+        np_ = len(names)
+        params = dict(zip(names, flat[:np_]))
+        momenta = dict(zip(names, flat[np_ : 2 * np_]))
+        pos = 2 * np_
+        x0 = flat[pos]
+        pos += 1
+        nl = cfg.num_layers
+        nbrs = list(flat[pos : pos + nl])
+        pos += nl
+        masks = list(flat[pos : pos + nl])
+        pos += nl
+        labels = flat[pos]
+
+        def scalar_loss(p):
+            loss, logits = loss_fn(cfg, p, x0, nbrs, masks, labels)
+            return loss, logits
+
+        (loss, logits), grads = jax.value_and_grad(scalar_loss, has_aux=True)(params)
+        acc = accuracy(logits, labels)
+        new_params, new_moms = [], []
+        for n in names:
+            m = cfg.momentum * momenta[n] + grads[n]
+            new_moms.append(m)
+            new_params.append(params[n] - cfg.lr * m)
+        return (loss, acc, *new_params, *new_moms)
+
+    return train_step
+
+
+def make_infer_step(cfg: ModelConfig):
+    """Returns infer_step(params, x0, *nbrs, *masks) -> (logits,)."""
+    names = list(param_shapes(cfg).keys())
+
+    def infer_step(*flat):
+        np_ = len(names)
+        params = dict(zip(names, flat[:np_]))
+        pos = np_
+        x0 = flat[pos]
+        pos += 1
+        nl = cfg.num_layers
+        nbrs = list(flat[pos : pos + nl])
+        pos += nl
+        masks = list(flat[pos : pos + nl])
+        return (forward(cfg, params, x0, nbrs, masks),)
+
+    return infer_step
+
+
+def example_inputs(cfg: ModelConfig):
+    """ShapeDtypeStructs for train_step, in calling-convention order."""
+    shapes = param_shapes(cfg)
+    f32 = jnp.float32
+    i32 = jnp.int32
+    args = []
+    for _ in range(2):  # params then momenta
+        args += [jax.ShapeDtypeStruct(s, f32) for s in shapes.values()]
+    sizes = cfg.layer_sizes
+    args.append(jax.ShapeDtypeStruct((sizes[0], cfg.in_dim), f32))  # x0
+    for l in range(cfg.num_layers):
+        args.append(jax.ShapeDtypeStruct((sizes[l + 1], cfg.fanouts[l]), i32))
+    for l in range(cfg.num_layers):
+        args.append(jax.ShapeDtypeStruct((sizes[l + 1], cfg.fanouts[l]), f32))
+    args.append(jax.ShapeDtypeStruct((cfg.batch,), i32))  # labels
+    return args
+
+
+def example_infer_inputs(cfg: ModelConfig):
+    """ShapeDtypeStructs for infer_step."""
+    full = example_inputs(cfg)
+    np_ = len(param_shapes(cfg))
+    return full[:np_] + full[2 * np_ : -1]
+
+
+# --------------------------------------------------------------------------
+# Variant registry — one entry per (model, dataset) pair of paper Fig. 8.
+# Feature widths and class counts follow paper Table 4; batch/fanouts are
+# scaled for the CPU testbed (documented in DESIGN.md §2).
+# --------------------------------------------------------------------------
+
+DATASET_DIMS = {
+    # name: (in_dim, classes)
+    "reddit": (602, 41),
+    "product": (100, 47),
+    "twit": (343, 64),
+    "sk": (293, 64),
+    "paper": (128, 172),
+    "wiki": (800, 64),
+}
+
+DEFAULT_BATCH = 64
+DEFAULT_FANOUTS = (5, 5)
+DEFAULT_HIDDEN = 64
+
+
+def all_variants(
+    batch: int = DEFAULT_BATCH,
+    fanouts: Tuple[int, ...] = DEFAULT_FANOUTS,
+    hidden: int = DEFAULT_HIDDEN,
+) -> List[ModelConfig]:
+    out = []
+    for arch in ("sage", "gat"):
+        for ds, (in_dim, classes) in DATASET_DIMS.items():
+            out.append(
+                ModelConfig(
+                    name=f"{arch}_{ds}",
+                    arch=arch,
+                    in_dim=in_dim,
+                    hidden=hidden,
+                    classes=classes,
+                    batch=batch,
+                    fanouts=fanouts,
+                )
+            )
+    return out

@@ -1,0 +1,103 @@
+"""PCIe coalescing model: paper Fig. 5 fixture + invariants.
+
+The same numbers are pinned on the rust side (rust/tests/coalesce_fixture.rs)
+so the python specification and the rust implementation cannot drift apart.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.coalesce import count_requests, per_row_requests
+
+# Paper Fig. 4/5 toy scaling: warp 32/8 = 4 threads, cacheline 128/8 = 16 B
+# = 4 elements; 11 features per node; gather rows 0, 2, 4.
+FIG5 = dict(idx=[0, 2, 4], feat_elems=11, warp=4, cl_elems=4)
+
+
+def test_fig5_row2_seven_to_five():
+    """The paper's headline toy numbers: row 2 takes 7 requests naive, 5 shifted."""
+    naive = per_row_requests(shifted=False, **FIG5)
+    opt = per_row_requests(shifted=True, **FIG5)
+    assert naive[1] == 7
+    assert opt[1] == 5
+
+
+def test_fig5_totals():
+    naive = count_requests(shifted=False, **FIG5)
+    opt = count_requests(shifted=True, **FIG5)
+    assert naive.requests == 16
+    assert opt.requests == 13
+    assert opt.requests < naive.requests
+
+
+def test_aligned_width_shift_is_noop():
+    """F a multiple of the cacheline -> shift never changes anything."""
+    kw = dict(idx=[5, 1, 9, 3], feat_elems=64, warp=32, cl_elems=32)
+    assert count_requests(shifted=False, **kw) == count_requests(shifted=True, **kw)
+
+
+def test_misaligned_2052B_features_real_constants():
+    """Fig. 7's worst case: 2052-byte rows (513 f32) at warp 32 / 128 B lines.
+
+    Naive accesses straddle lines (~2 requests per warp); the shift restores
+    ~1 per interior warp, giving the paper's ~1.9x request reduction.
+    """
+    idx = list(np.random.default_rng(0).integers(0, 4_000_000, size=64))
+    naive = count_requests(idx, 513)
+    opt = count_requests(idx, 513, shifted=True)
+    ratio = naive.requests / opt.requests
+    assert 1.6 < ratio <= 2.0, ratio
+
+
+def test_io_amplification_accounting():
+    t = count_requests([0, 2], 11, warp=4, cl_elems=4)
+    assert t.useful_bytes == 2 * 11 * 4
+    assert t.bytes_moved == t.requests * 16
+    assert t.bytes_moved >= t.useful_bytes
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    idx=st.lists(st.integers(0, 5000), min_size=1, max_size=40),
+    mult=st.integers(2, 12),
+    extra=st.integers(0, 31),
+    cl=st.sampled_from([4, 8, 16, 32]),
+)
+def test_shift_never_increases_requests_when_gate_passes(idx, mult, extra, cl):
+    """The rust kernel gate (WarpModel::shift_applies) requires f >= 2*cl;
+    within that regime the shift never increases requests.  (For
+    cl <= f < 2*cl the wrap segment can fragment accesses — that is exactly
+    why the gate exists; see test below.)"""
+    f = cl * mult + (extra % cl)
+    naive = count_requests(idx, f, warp=cl, cl_elems=cl)
+    opt = count_requests(idx, f, warp=cl, cl_elems=cl, shifted=True)
+    assert opt.requests <= naive.requests
+    assert opt.cachelines == naive.cachelines  # same data touched
+
+
+def test_shift_can_fragment_short_rows():
+    """Documents the f < 2*cl fragmentation that motivates the gate."""
+    import random
+
+    random.seed(0)
+    violated = False
+    for _ in range(200):
+        idx = [random.randint(0, 3000) for _ in range(random.randint(4, 30))]
+        f = random.randint(17, 31)  # cl=16: between cl and 2*cl
+        a = count_requests(idx, f, warp=16, cl_elems=16).requests
+        b = count_requests(idx, f, warp=16, cl_elems=16, shifted=True).requests
+        if b > a:
+            violated = True
+            break
+    assert violated, "expected at least one fragmentation case below the gate"
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    idx=st.lists(st.integers(0, 5000), min_size=1, max_size=30),
+    f=st.integers(1, 100),
+)
+def test_requests_bounded_by_cachelines_and_threads(idx, f):
+    t = count_requests(idx, f)
+    assert t.requests >= t.cachelines
+    assert t.requests <= len(idx) * f  # at most one request per element

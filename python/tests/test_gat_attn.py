@@ -1,0 +1,82 @@
+"""GAT attention kernel vs oracle: values + the hand-derived softmax VJP."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import gat_attention
+from compile.kernels.ref import gat_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(d, k, f, seed, mask_p=0.8):
+    rng = np.random.default_rng(seed)
+    h_dst = jnp.asarray(rng.standard_normal((d, f)), jnp.float32)
+    h_nbr = jnp.asarray(rng.standard_normal((d, k, f)), jnp.float32)
+    a_dst = jnp.asarray(rng.standard_normal(f), jnp.float32)
+    a_nbr = jnp.asarray(rng.standard_normal(f), jnp.float32)
+    mask = np.asarray((rng.random((d, k)) < mask_p), np.float32)
+    mask[:, 0] = 1.0  # sampler convention: self-loop slot always valid
+    return h_dst, h_nbr, a_dst, a_nbr, jnp.asarray(mask)
+
+
+@pytest.mark.parametrize("d,k,f", [(4, 3, 5), (32, 6, 16), (50, 11, 8)])
+def test_values_match_ref(d, k, f):
+    args = _mk(d, k, f, 0)
+    assert_allclose(
+        np.asarray(gat_attention(*args)),
+        np.asarray(gat_attention_ref(*args)),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_attention_weights_are_convex():
+    """With all-equal neighbor features the output equals that feature."""
+    d, k, f = 8, 4, 6
+    h_dst, _, a_dst, a_nbr, mask = _mk(d, k, f, 1)
+    row = jnp.asarray(np.random.default_rng(2).standard_normal(f), jnp.float32)
+    h_nbr = jnp.broadcast_to(row, (d, k, f))
+    out = np.asarray(gat_attention(h_dst, h_nbr, a_dst, a_nbr, mask))
+    assert_allclose(out, np.broadcast_to(np.asarray(row), (d, f)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("argnum", [0, 1, 2, 3])
+def test_grads_match_ref(argnum):
+    args = _mk(16, 5, 7, 3)
+    w = jnp.asarray(np.random.default_rng(4).standard_normal((16, 7)), jnp.float32)
+
+    def lk(x):
+        a = list(args)
+        a[argnum] = x
+        return (gat_attention(*a) * w).sum()
+
+    def lr(x):
+        a = list(args)
+        a[argnum] = x
+        return (gat_attention_ref(*a) * w).sum()
+
+    g_k = jax.grad(lk)(args[argnum])
+    g_r = jax.grad(lr)(args[argnum])
+    assert_allclose(np.asarray(g_k), np.asarray(g_r), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(1, 40),
+    k=st.integers(1, 8),
+    f=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(d, k, f, seed):
+    args = _mk(d, k, f, seed)
+    assert_allclose(
+        np.asarray(gat_attention(*args)),
+        np.asarray(gat_attention_ref(*args)),
+        rtol=1e-4,
+        atol=1e-5,
+    )

@@ -1,0 +1,101 @@
+"""Gather kernels vs the pure-jnp oracle: values, gradients, alignment."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import circular_shift, gather_rows, gather_rows_aligned
+from compile.kernels.ref import circular_shift_ref, gather_rows_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(n, f, b, seed):
+    rng = np.random.default_rng(seed)
+    feats = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, size=b), jnp.int32)
+    return feats, idx
+
+
+@pytest.mark.parametrize("kernel", [gather_rows, gather_rows_aligned])
+@pytest.mark.parametrize(
+    "n,f,b",
+    [(16, 4, 8), (100, 11, 33), (128, 32, 128), (257, 7, 130), (64, 129, 5)],
+)
+def test_gather_matches_ref(kernel, n, f, b):
+    feats, idx = _mk(n, f, b, 0)
+    assert_allclose(np.asarray(kernel(feats, idx)), np.asarray(gather_rows_ref(feats, idx)))
+
+
+@pytest.mark.parametrize("kernel", [gather_rows, gather_rows_aligned])
+def test_gather_grad_is_scatter_add(kernel):
+    feats, idx = _mk(50, 9, 40, 1)
+    w = jnp.asarray(np.random.default_rng(2).standard_normal((40, 9)), jnp.float32)
+
+    def loss_k(x):
+        return (kernel(x, idx) * w).sum()
+
+    def loss_r(x):
+        return (gather_rows_ref(x, idx) * w).sum()
+
+    assert_allclose(
+        np.asarray(jax.grad(loss_k)(feats)),
+        np.asarray(jax.grad(loss_r)(feats)),
+        rtol=1e-6,
+    )
+
+
+def test_aligned_equals_naive_exactly():
+    """The circular shift must be a pure schedule change: bit-identical output."""
+    feats, idx = _mk(300, 513, 190, 3)
+    a = np.asarray(gather_rows(feats, idx))
+    b = np.asarray(gather_rows_aligned(feats, idx))
+    assert (a == b).all()
+
+
+def test_circular_shift_matches_ref():
+    idx = jnp.asarray([0, 2, 4, 7, 100], jnp.int32)
+    got = np.asarray(circular_shift(idx, 11, 4))
+    want = np.asarray(circular_shift_ref(idx, 11, 4))
+    assert (got == want).all()
+
+
+def test_circular_shift_fig5_offsets():
+    """Paper Fig. 5: rows [0,2,4], F=11, cacheline 4 elems -> row 2 shifts by 1."""
+    idx = jnp.asarray([0, 2, 4], jnp.int32)
+    s = np.asarray(circular_shift(idx, 11, 4))
+    # row0: t_begin 0, start 0 -> 0; row2: (11 - 22) % 4 = 1; row4: (22 - 44) % 4 = 2
+    assert s.tolist() == [0, 1, 2]
+
+
+def test_circular_shift_zero_when_aligned():
+    """Rows whose width is a multiple of the cacheline never need shifting."""
+    idx = jnp.asarray([0, 3, 9, 17], jnp.int32)
+    s = np.asarray(circular_shift(idx, 128, 32))
+    assert (s == 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 80),
+    f=st.integers(1, 70),
+    b=st.integers(1, 90),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_hypothesis_sweep(n, f, b, seed):
+    feats, idx = _mk(n, f, b, seed)
+    got = np.asarray(gather_rows_aligned(feats, idx))
+    want = np.asarray(gather_rows_ref(feats, idx))
+    assert_allclose(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(f=st.integers(1, 200), cl=st.sampled_from([4, 8, 16, 32]), seed=st.integers(0, 10**6))
+def test_shift_bounds(f, cl, seed):
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, 10_000, size=17), jnp.int32)
+    s = np.asarray(circular_shift(idx, f, cl))
+    assert ((0 <= s) & (s < cl)).all()

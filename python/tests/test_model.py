@@ -1,0 +1,117 @@
+"""Model-level tests: shapes, loss decrease, train-step calling convention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = dict(batch=8, fanouts=(3, 3), hidden=16)
+
+
+def _cfg(arch, ds="product"):
+    in_dim, classes = M.DATASET_DIMS[ds]
+    return M.ModelConfig(
+        name=f"{arch}_{ds}",
+        arch=arch,
+        in_dim=in_dim,
+        hidden=SMALL["hidden"],
+        classes=classes,
+        batch=SMALL["batch"],
+        fanouts=SMALL["fanouts"],
+        lr=0.05,
+    )
+
+
+def _batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    sizes = cfg.layer_sizes
+    x0 = jnp.asarray(rng.standard_normal((sizes[0], cfg.in_dim)) * 0.3, jnp.float32)
+    nbrs, masks = [], []
+    for l in range(cfg.num_layers):
+        nbrs.append(
+            jnp.asarray(rng.integers(0, sizes[l], size=(sizes[l + 1], cfg.fanouts[l])), jnp.int32)
+        )
+        masks.append(jnp.ones((sizes[l + 1], cfg.fanouts[l]), jnp.float32))
+    labels = jnp.asarray(rng.integers(0, cfg.classes, size=cfg.batch), jnp.int32)
+    return x0, nbrs, masks, labels
+
+
+def test_layer_sizes():
+    cfg = _cfg("sage")
+    # batch 8, fanouts (3,3): n2=8, n1=8*4=32, n0=32*4=128
+    assert cfg.layer_sizes == [128, 32, 8]
+
+
+@pytest.mark.parametrize("arch", ["sage", "gat"])
+def test_forward_shape(arch):
+    cfg = _cfg(arch)
+    params = M.init_params(cfg)
+    x0, nbrs, masks, _ = _batch(cfg)
+    logits = M.forward(cfg, params, x0, nbrs, masks)
+    assert logits.shape == (cfg.batch, cfg.classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ["sage", "gat"])
+def test_loss_decreases_over_steps(arch):
+    """Real learning signal: fitting a fixed batch must reduce the loss."""
+    cfg = _cfg(arch)
+    params = M.init_params(cfg, seed=1)
+    momenta = {k: jnp.zeros_like(v) for k, v in params.items()}
+    x0, nbrs, masks, labels = _batch(cfg, seed=1)
+    step = jax.jit(M.make_train_step(cfg))
+    names = list(M.param_shapes(cfg).keys())
+
+    losses = []
+    for _ in range(25):
+        flat = [params[n] for n in names] + [momenta[n] for n in names]
+        flat += [x0, *nbrs, *masks, labels]
+        out = step(*flat)
+        loss = float(out[0])
+        losses.append(loss)
+        new_p = out[2 : 2 + len(names)]
+        new_m = out[2 + len(names) : 2 + 2 * len(names)]
+        params = dict(zip(names, new_p))
+        momenta = dict(zip(names, new_m))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_train_step_output_arity():
+    cfg = _cfg("sage")
+    names = list(M.param_shapes(cfg).keys())
+    args = M.example_inputs(cfg)
+    vals = [jnp.zeros(a.shape, a.dtype) for a in args]
+    out = M.make_train_step(cfg)(*vals)
+    assert len(out) == 2 + 2 * len(names)
+
+
+def test_example_inputs_cover_calling_convention():
+    cfg = _cfg("gat")
+    args = M.example_inputs(cfg)
+    n_params = len(M.param_shapes(cfg))
+    # params + momenta + x0 + nbrs + masks + labels
+    assert len(args) == 2 * n_params + 1 + 2 * cfg.num_layers + 1
+    assert args[2 * n_params].shape == (cfg.layer_sizes[0], cfg.in_dim)
+
+
+def test_infer_matches_forward():
+    cfg = _cfg("sage")
+    params = M.init_params(cfg, seed=2)
+    names = list(M.param_shapes(cfg).keys())
+    x0, nbrs, masks, _ = _batch(cfg, seed=2)
+    (logits,) = M.make_infer_step(cfg)(*[params[n] for n in names], x0, *nbrs, *masks)
+    want = M.forward(cfg, params, x0, nbrs, masks)
+    assert_allclose(np.asarray(logits), np.asarray(want), rtol=1e-6)
+
+
+def test_all_variants_registry():
+    vs = M.all_variants()
+    assert len(vs) == 12  # 2 archs x 6 datasets (paper Fig. 8)
+    assert {v.arch for v in vs} == {"sage", "gat"}
+    reddit = next(v for v in vs if v.name == "sage_reddit")
+    assert reddit.in_dim == 602  # paper Table 4

@@ -1,0 +1,144 @@
+//! Ablation benches for the design choices DESIGN.md calls out (beyond the
+//! paper's own figures):
+//!
+//!  A. circular shift on/off across feature widths (generalizes Fig. 7)
+//!  B. UVM page size sensitivity (why page migration loses, §3)
+//!  C. per-row cudaMemcpy vs batched gather (§2.2's strawman)
+//!  D. staging-buffer reuse (allocation churn in the baseline)
+//!  E. pipeline queue depth (backpressure window)
+
+mod bench_common;
+
+use bench_common::expect;
+use ptdirect::config::{AccessMode, SystemProfile};
+use ptdirect::coordinator::report::{ms, ratio, Table};
+use ptdirect::device::warp::{count_requests, WarpModel};
+use ptdirect::featurestore::FeatureStore;
+use ptdirect::interconnect::{DmaEngine, PcieLink, UvmSpace};
+use ptdirect::pipeline::executor::run_pipeline;
+use ptdirect::util::rng::Rng;
+
+fn main() {
+    let sys = SystemProfile::system1();
+    let mut rng = Rng::new(0xAB1A);
+
+    // ---------------- A: circular shift across widths ----------------
+    let mut t = Table::new(
+        "Ablation A — circular shift benefit vs feature width",
+        &["feat B", "naive reqs", "shifted reqs", "reduction", "amp naive", "amp shifted"],
+    );
+    let idx: Vec<u32> = (0..16_384).map(|_| rng.gen_range(4_000_000) as u32).collect();
+    let mut max_red: f64 = 0.0;
+    for feat_bytes in [128u64, 512, 516, 1024, 2052, 4096, 4100, 16384] {
+        let f = feat_bytes / 4;
+        let naive = count_requests(&idx, f, WarpModel::default(), false);
+        let opt = count_requests(&idx, f, WarpModel::default(), true);
+        let red = 1.0 - opt.requests as f64 / naive.requests as f64;
+        max_red = max_red.max(red);
+        t.row(&[
+            feat_bytes.to_string(),
+            naive.requests.to_string(),
+            opt.requests.to_string(),
+            format!("{:.1}%", red * 100.0),
+            format!("{:.3}", naive.amplification()),
+            format!("{:.3}", opt.amplification()),
+        ]);
+        if feat_bytes % 128 == 0 {
+            expect(red.abs() < 1e-9, &format!("{feat_bytes} B aligned: shift is a no-op"));
+        }
+    }
+    t.print();
+    expect(max_red > 0.40, "misaligned widths cut ~half the requests");
+
+    // ---------------- B: UVM page size ----------------
+    let mut t = Table::new(
+        "Ablation B — UVM page-size sensitivity (64K x 1 KiB gather, cold)",
+        &["page", "time ms", "amplification", "vs PyD"],
+    );
+    let idx_small: Vec<u32> = (0..65_536).map(|_| rng.gen_range(4_000_000) as u32).collect();
+    let pyd_t = {
+        let tr = count_requests(&idx_small, 256, WarpModel::default(), true);
+        PcieLink::new(&sys).direct_gather(&tr).time_s
+    };
+    for page in [4096u64, 16384, 65536, 2 << 20] {
+        let mut s = sys.clone();
+        s.uvm_page_bytes = page;
+        let mut uvm = UvmSpace::new(&s, 0.5);
+        let c = uvm.access_rows(&idx_small, 1024);
+        t.row(&[
+            format!("{} KiB", page >> 10),
+            ms(c.time_s),
+            format!("{:.1}x", c.bytes_on_link as f64 / c.useful_bytes as f64),
+            ratio(c.time_s / pyd_t),
+        ]);
+        expect(c.time_s > pyd_t, &format!("UVM@{}K slower than PyD zero-copy", page >> 10));
+    }
+    t.print();
+
+    // ---------------- C: per-row memcpy vs batched gather ----------------
+    let dma = DmaEngine::new(&sys);
+    let batched = dma.cpu_gather_transfer(32_768, 1024);
+    let per_row = dma.per_row_memcpy_transfer(32_768, 1024);
+    println!(
+        "Ablation C — per-row cudaMemcpy: {} vs batched {} ({}) — the §2.2 strawman\n",
+        ms(per_row.time_s),
+        ms(batched.time_s),
+        ratio(per_row.time_s / batched.time_s)
+    );
+    expect(per_row.time_s > 10.0 * batched.time_s, "per-row DMA is >10x worse");
+
+    // ---------------- D: staging reuse ----------------
+    let store = FeatureStore::build(100_000, 256, 16, AccessMode::CpuGather, &sys, 1).unwrap();
+    let gidx: Vec<u32> = (0..8192).map(|_| rng.gen_range(100_000) as u32).collect();
+    for _ in 0..10 {
+        store.gather(&gidx).unwrap();
+    }
+    println!(
+        "Ablation D — staging pool: {} hits / {} misses over 10 steps\n",
+        store_hits(&store),
+        store_misses(&store)
+    );
+    expect(store_hits(&store) >= 9, "staging buffer reused every steady-state step");
+
+    // ---------------- E: queue depth ----------------
+    let mut t = Table::new(
+        "Ablation E — pipeline queue depth (balanced 1 ms stages, 32 items)",
+        &["depth", "wall ms", "overlap", "backpressure ms"],
+    );
+    for depth in [1usize, 2, 4, 8] {
+        let stage = || std::thread::sleep(std::time::Duration::from_millis(1));
+        let r = run_pipeline(
+            32,
+            depth,
+            |i| {
+                stage();
+                Ok(i)
+            },
+            |b| {
+                stage();
+                Ok(b)
+            },
+            |_f| {
+                stage();
+                Ok(())
+            },
+        )
+        .unwrap();
+        let serial = r.stages.sample_s + r.stages.gather_s + r.stages.train_s;
+        t.row(&[
+            depth.to_string(),
+            ms(r.wall_s),
+            format!("{:.2}x", serial / r.wall_s),
+            ms(r.q1_push_wait_s + r.q2_push_wait_s),
+        ]);
+    }
+    t.print();
+}
+
+fn store_hits(s: &FeatureStore) -> u64 {
+    s.staging_hits()
+}
+
+fn store_misses(s: &FeatureStore) -> u64 {
+    s.staging_misses()
+}

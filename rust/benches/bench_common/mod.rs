@@ -1,0 +1,40 @@
+//! Shared helpers for the paper-figure benches (criterion is not vendored;
+//! each bench is a `harness = false` binary that measures, checks the
+//! paper-shape assertions, and prints a table).
+
+#![allow(dead_code)]
+
+use ptdirect::util::stats::Summary;
+use ptdirect::util::timer::Timer;
+
+/// Repeat a closure and collect wall-clock stats (for measured-here parts).
+pub fn measure<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        s.add(t.elapsed_s());
+    }
+    s
+}
+
+/// Bench-scale knob: PTDIRECT_BENCH_STEPS (default given per bench).
+pub fn bench_steps(default: u32) -> u32 {
+    std::env::var("PTDIRECT_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Soft assertion: print PASS/CHECK lines instead of panicking so a bench
+/// always produces its full table; failures are grep-able.
+pub fn expect(cond: bool, what: &str) {
+    if cond {
+        println!("PASS  {what}");
+    } else {
+        println!("CHECK {what}  <-- outside paper band");
+    }
+}

@@ -1,0 +1,115 @@
+//! Paper Fig. 3 — data-loader time share and CPU utilization: CNN vs GNN.
+//!
+//! The paper's motivation figure: data loading is <1% of CNN training time
+//! but 47% (GraphSAGE) / 82% (GAT) of GNN training time, with far higher
+//! CPU utilization, because GNN loading gathers scattered rows and builds
+//! subgraphs on the CPU.
+//!
+//! CNN proxy: contiguous batch reads (prefetch pipelines perfectly with the
+//! big conv compute).  GNN: the real sampled-gather pipeline on reddit.
+
+mod bench_common;
+
+use bench_common::{bench_steps, expect};
+use ptdirect::config::{AccessMode, RunConfig, SystemProfile};
+use ptdirect::coordinator::report::{pct, Table};
+use ptdirect::coordinator::Trainer;
+use ptdirect::interconnect::DmaEngine;
+
+struct CnnProxy {
+    name: &'static str,
+    batch_bytes: u64,
+    flops_per_batch: f64,
+}
+
+/// AlexNet / ResNet-18 on 224x224x3 images, batch 128 (fwd+bwd ~ 3x fwd).
+const CNNS: [CnnProxy; 2] = [
+    CnnProxy {
+        name: "AlexNet",
+        batch_bytes: 128 * 224 * 224 * 3 * 4,
+        flops_per_batch: 128.0 * 1.4e9 * 3.0,
+    },
+    CnnProxy {
+        name: "ResNet-18",
+        batch_bytes: 128 * 224 * 224 * 3 * 4,
+        flops_per_batch: 128.0 * 1.8e9 * 3.0,
+    },
+];
+
+fn main() {
+    let sys = SystemProfile::system1();
+    let steps = bench_steps(30);
+    let mut t = Table::new(
+        "Fig. 3 — data loader share + CPU utilization (System1)",
+        &["workload", "loader share", "cpu util", "notes"],
+    );
+
+    // --- CNNs: contiguous loads overlapped with compute by prefetching ---
+    for cnn in CNNS {
+        let dma = DmaEngine::new(&sys);
+        // image decode/copy is contiguous: full-bandwidth path
+        let load_s = dma.dma_time(cnn.batch_bytes) + cnn.batch_bytes as f64 / sys.host_gather_peak;
+        let compute_s = cnn.flops_per_batch / (sys.gpu_fp32_flops * 0.35);
+        // prefetch hides loading behind compute; only the excess shows up
+        let visible_load = (load_s - compute_s).max(0.0) + 0.002 * compute_s;
+        let share = visible_load / (visible_load + compute_s);
+        let cpu_util = (load_s / compute_s.max(load_s)) * 0.08; // a couple of worker threads
+        t.row(&[
+            cnn.name.into(),
+            pct(share),
+            pct(cpu_util),
+            "contiguous + prefetch".into(),
+        ]);
+        expect(share < 0.01, &format!("{} loader share <1%", cnn.name));
+    }
+
+    // --- GNNs: the real pipeline on reddit (Py baseline, like Fig. 3) ---
+    let mut gnn_shares = Vec::new();
+    for arch in ["sage", "gat"] {
+        let cfg = RunConfig {
+            dataset: "reddit".into(),
+            arch: arch.into(),
+            mode: AccessMode::CpuGather,
+            steps_per_epoch: steps,
+            scale: 8,
+            feature_budget: 96 << 20,
+            skip_train: true,
+            seed: 0xF03,
+            ..RunConfig::default()
+        };
+        let mut trainer = Trainer::new(cfg).expect("trainer");
+        let r = trainer.run_epoch().expect("epoch");
+        let b = &r.breakdown_sim;
+        // "data loading" in Fig. 3 = sampling + gather + copy
+        let loader = b.sample_s + b.transfer_s;
+        let share = loader / b.total_s();
+        gnn_shares.push(share);
+        t.row(&[
+            format!("GraphSAGE/GAT [{arch}] reddit"),
+            pct(share),
+            pct(r.power.cpu_util),
+            "scattered gather + sampling".into(),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "GNN loader shares: sage {} gat {} (paper: 47% / 82%)",
+        pct(gnn_shares[0]),
+        pct(gnn_shares[1])
+    );
+    // Divergence note (EXPERIMENTS.md): the paper's DGL GAT example loads
+    // *full* neighborhoods (no fan-out sampling), which is why its loader
+    // share (82%) exceeds GraphSAGE's; our GAT uses the same sampled
+    // fan-outs as SAGE, so its share sits below SAGE's (heavier compute,
+    // same bytes).  The figure's core contrast — GNN loading dominates
+    // while CNN loading is <1% — reproduces regardless.
+    expect(
+        (0.40..0.75).contains(&gnn_shares[0]),
+        "GraphSAGE loader share ~47-65%",
+    );
+    expect(
+        gnn_shares.iter().all(|&s| s > 0.35),
+        "GNN loading dominates vs CNN <1%",
+    );
+}

@@ -1,0 +1,81 @@
+//! Paper Fig. 6 — irregular host-access microbenchmark.
+//!
+//! Grid: N ∈ {8K, 32K, 128K, 256K} features × S ∈ {256 B, 1 KiB, 4 KiB,
+//! 16 KiB} per feature, on the three Table-5 systems, comparing the
+//! CPU-centric baseline (Py), PyTorch-Direct zero-copy (PyD) and the ideal
+//! pure-payload transfer.
+//!
+//! Paper bands: Py 1.85–2.82x slower than ideal on System1, 3.31–5.01x on
+//! System2; PyD 1.03–1.20x everywhere except the tiny (8K, 256 B) corner;
+//! PyD beats Py by ~2.39x on average.
+
+mod bench_common;
+
+use bench_common::expect;
+use ptdirect::config::SystemProfile;
+use ptdirect::coordinator::microbench::{fig6_grid, run_cell};
+use ptdirect::coordinator::report::{ms, ratio, Table};
+use ptdirect::util::bytes::human_bytes;
+use ptdirect::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xF16);
+    let (ns, sizes) = fig6_grid();
+    let mut all_speedups = Vec::new();
+
+    for sys in SystemProfile::all() {
+        let mut t = Table::new(
+            &format!("Fig. 6 — {} ({} + {})", sys.name, sys.cpu_name, sys.gpu_name),
+            &["N", "feat", "ideal ms", "Py ms", "PyD ms", "Py/ideal", "PyD/ideal", "PyD vs Py"],
+        );
+        let mut py_slow = Vec::new();
+        let mut pyd_slow = Vec::new();
+        for &n in &ns {
+            for &s in &sizes {
+                let c = run_cell(&sys, n, s, &mut rng);
+                t.row(&[
+                    format!("{}K", n >> 10),
+                    human_bytes(s),
+                    ms(c.ideal_s),
+                    ms(c.py_s),
+                    ms(c.pyd_s),
+                    ratio(c.py_slowdown()),
+                    ratio(c.pyd_slowdown()),
+                    ratio(c.pyd_speedup_over_py()),
+                ]);
+                let tiny_corner = n == 8 << 10 && s == 256;
+                if !tiny_corner {
+                    py_slow.push(c.py_slowdown());
+                    pyd_slow.push(c.pyd_slowdown());
+                    all_speedups.push(c.pyd_speedup_over_py());
+                }
+            }
+        }
+        t.print();
+        let (py_min, py_max) = (
+            py_slow.iter().cloned().fold(f64::MAX, f64::min),
+            py_slow.iter().cloned().fold(0.0, f64::max),
+        );
+        let pyd_max = pyd_slow.iter().cloned().fold(0.0, f64::max);
+        println!(
+            "{}: Py slowdown {:.2}x..{:.2}x, PyD max slowdown {:.2}x\n",
+            sys.name, py_min, py_max, pyd_max
+        );
+        match sys.name {
+            "System1" => {
+                expect((1.6..2.3).contains(&py_min), "System1 Py min slowdown ~1.85x");
+                expect((2.3..3.3).contains(&py_max), "System1 Py max slowdown ~2.82x");
+            }
+            "System2" => {
+                expect((2.8..3.8).contains(&py_min), "System2 Py min slowdown ~3.31x");
+                expect((4.3..5.6).contains(&py_max), "System2 Py max slowdown ~5.01x");
+            }
+            _ => {}
+        }
+        expect(pyd_max < 1.25, &format!("{} PyD within 1.03-1.20x of ideal", sys.name));
+    }
+
+    let avg = all_speedups.iter().sum::<f64>() / all_speedups.len() as f64;
+    println!("average PyD speedup over Py: {avg:.2}x (paper: ~2.39x)");
+    expect((1.9..2.9).contains(&avg), "average PyD speedup ~2.39x");
+}

@@ -1,0 +1,56 @@
+//! Paper Fig. 7 — memory-alignment optimization sweep.
+//!
+//! Feature sizes 2048..2076 B in 4 B strides (64K gathers from the 4M-row
+//! table, System1): the naive zero-copy kernel loses most of its benefit on
+//! misaligned widths (paper: 1.17x over Py at 2052 B) while the
+//! circular-shift kernel holds ~1.93x regardless of alignment.
+
+mod bench_common;
+
+use bench_common::expect;
+use ptdirect::config::SystemProfile;
+use ptdirect::coordinator::microbench::{fig7_sizes, run_cell};
+use ptdirect::coordinator::report::{ms, ratio, Table};
+use ptdirect::util::rng::Rng;
+
+fn main() {
+    let sys = SystemProfile::system1();
+    let mut rng = Rng::new(0xF17);
+    let mut t = Table::new(
+        "Fig. 7 — alignment sweep (64K gathers, System1)",
+        &["feat B", "Py ms", "PyD naive ms", "PyD opt ms", "naive vs Py", "opt vs Py", "opt vs naive"],
+    );
+    let mut naive_speedups = Vec::new();
+    let mut opt_speedups = Vec::new();
+    for s in fig7_sizes() {
+        let c = run_cell(&sys, 64 << 10, s, &mut rng);
+        let naive_sp = c.py_s / c.pyd_naive_s;
+        let opt_sp = c.py_s / c.pyd_s;
+        t.row(&[
+            s.to_string(),
+            ms(c.py_s),
+            ms(c.pyd_naive_s),
+            ms(c.pyd_s),
+            ratio(naive_sp),
+            ratio(opt_sp),
+            ratio(c.pyd_naive_s / c.pyd_s),
+        ]);
+        if s % 128 != 0 {
+            naive_speedups.push(naive_sp);
+        }
+        opt_speedups.push(opt_sp);
+    }
+    t.print();
+
+    let naive_avg = naive_speedups.iter().sum::<f64>() / naive_speedups.len() as f64;
+    let opt_avg = opt_speedups.iter().sum::<f64>() / opt_speedups.len() as f64;
+    let opt_spread = opt_speedups.iter().cloned().fold(0.0, f64::max)
+        - opt_speedups.iter().cloned().fold(f64::MAX, f64::min);
+    println!("misaligned naive speedup avg {naive_avg:.2}x (paper ~1.17x at 2052 B)");
+    println!("optimized speedup avg {opt_avg:.2}x (paper ~1.93x-1.95x)");
+    println!("optimized spread across sizes {opt_spread:.3}x (paper: consistent)");
+
+    expect((1.0..1.5).contains(&naive_avg), "naive speedup collapses on misaligned widths");
+    expect((1.6..2.3).contains(&opt_avg), "optimized speedup ~1.93x");
+    expect(opt_spread < 0.3, "optimized benefit consistent across alignments");
+}

@@ -1,0 +1,67 @@
+//! Paper Fig. 9 — whole-system power, Py vs PyD, GraphSAGE + GAT across the
+//! Table-4 datasets (System1; meter-level affine model, idle ≈ 105 W).
+//!
+//! Paper band: PyD saves 12.4%–17.5% of system power during training.
+
+mod bench_common;
+
+use bench_common::{bench_steps, expect};
+use ptdirect::config::{AccessMode, RunConfig};
+use ptdirect::coordinator::report::{pct, Table};
+use ptdirect::coordinator::Trainer;
+use ptdirect::graph::datasets::DATASETS;
+
+fn main() {
+    let steps = bench_steps(30);
+    let mut savings = Vec::new();
+
+    for arch in ["sage", "gat"] {
+        let mut t = Table::new(
+            &format!("Fig. 9 — {arch} system power (System1, idle 105 W)"),
+            &["dataset", "Py W", "PyD W", "saving", "Py cpu util", "PyD cpu util"],
+        );
+        for d in DATASETS {
+            if arch == "gat" && d.abbv == "sk" {
+                continue;
+            }
+            let base = RunConfig {
+                dataset: d.abbv.into(),
+                arch: arch.into(),
+                steps_per_epoch: steps,
+                scale: 256,
+                feature_budget: 96 << 20,
+                skip_train: true,
+                seed: 0xF19,
+                ..RunConfig::default()
+            };
+            let mut reports = Vec::new();
+            for mode in [AccessMode::CpuGather, AccessMode::UnifiedAligned] {
+                let mut trainer =
+                    Trainer::new(RunConfig { mode, ..base.clone() }).expect("trainer");
+                reports.push(trainer.run_epoch().expect("epoch"));
+            }
+            let (py, pyd) = (&reports[0], &reports[1]);
+            let saving = 1.0 - pyd.power.watts / py.power.watts;
+            savings.push(saving);
+            t.row(&[
+                d.abbv.into(),
+                format!("{:.0}", py.power.watts),
+                format!("{:.0}", pyd.power.watts),
+                pct(saving),
+                pct(py.power.cpu_util),
+                pct(pyd.power.cpu_util),
+            ]);
+        }
+        t.print();
+    }
+
+    let avg = savings.iter().sum::<f64>() / savings.len() as f64;
+    let (min_s, max_s) = (
+        savings.iter().cloned().fold(f64::MAX, f64::min),
+        savings.iter().cloned().fold(0.0, f64::max),
+    );
+    println!("power saving {:.1}%..{:.1}% avg {:.1}% (paper 12.4%..17.5%)",
+        min_s * 100.0, max_s * 100.0, avg * 100.0);
+    expect(min_s > 0.05, "PyD always saves power");
+    expect((0.08..0.25).contains(&avg), "avg power saving in/near paper band");
+}

@@ -1,0 +1,51 @@
+//! Paper Table 4 — dataset inventory, full-scale stats vs the generated
+//! scaled graphs (degree preservation check).
+
+mod bench_common;
+
+use bench_common::expect;
+use ptdirect::coordinator::report::Table;
+use ptdirect::graph::datasets::DATASETS;
+use ptdirect::util::bytes::human_bytes;
+
+fn main() {
+    let mut t = Table::new(
+        "Table 4 — datasets (full scale | generated at 1/1024)",
+        &["abbv", "#feat", "size", "#node", "#edge", "gen nodes", "gen edges", "deg err"],
+    );
+    for d in DATASETS {
+        let scale = 1024;
+        let g = d.build_graph(scale, 0x7AB1E4).expect("generator");
+        g.validate().expect("csr invariants");
+        let want_deg = d.edges as f64 / d.nodes as f64;
+        let got_deg = g.avg_degree();
+        let deg_err = (got_deg - want_deg).abs() / want_deg;
+        t.row(&[
+            d.abbv.into(),
+            d.feat_dim.to_string(),
+            human_bytes(d.feature_bytes()),
+            format!("{:.1}M", d.nodes as f64 / 1e6),
+            format!("{:.1}M", d.edges as f64 / 1e6),
+            g.num_nodes().to_string(),
+            g.num_edges().to_string(),
+            format!("{:.2}%", deg_err * 100.0),
+        ]);
+        expect(deg_err < 0.05, &format!("{}: avg degree preserved at scale", d.abbv));
+    }
+    t.print();
+
+    // Paper Table 4 magnitude checks ("Size" column).
+    let gb = |abbv: &str| {
+        DATASETS
+            .iter()
+            .find(|d| d.abbv == abbv)
+            .unwrap()
+            .feature_bytes() as f64
+            / 1e9
+    };
+    expect((gb("twit") - 57.0).abs() < 3.0, "twitter7 feature table ~57 GB");
+    expect((gb("sk") - 59.0).abs() < 3.0, "sk-2005 ~59 GB");
+    expect((gb("paper") - 57.0).abs() < 3.0, "ogbn-papers100M ~57 GB");
+    expect((gb("wiki") - 44.0).abs() < 3.0, "wikipedia_link_en ~44 GB");
+    expect((gb("product") - 0.96).abs() < 0.1, "ogbn-products ~960 MB");
+}

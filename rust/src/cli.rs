@@ -1,0 +1,396 @@
+//! Command-line interface (clap is not vendored; parsing is hand-rolled).
+//!
+//! ```text
+//! ptdirect train      [--dataset D] [--arch A] [--mode M] [--system S]
+//!                     [--epochs N] [--steps N] [--scale K] [--seed S]
+//!                     [--config run.toml] [--skip-train]
+//! ptdirect microbench [--system S] [--n N] [--bytes B]
+//! ptdirect alignment  [--system S]
+//! ptdirect datasets
+//! ptdirect selfcheck  [--artifacts DIR]
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::config::{AccessMode, RunConfig, SystemProfile};
+use crate::coordinator::microbench::{fig6_grid, fig7_sizes, run_cell};
+use crate::coordinator::report::{ms, pct, ratio, Table};
+use crate::coordinator::Trainer;
+use crate::error::{Error, Result};
+use crate::graph::datasets::DATASETS;
+use crate::runtime::Manifest;
+use crate::util::bytes::human_bytes;
+use crate::util::rng::Rng;
+
+/// Parsed command line: subcommand + `--key value` / `--flag` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        args.command = it
+            .next()
+            .cloned()
+            .ok_or_else(|| Error::Config("missing subcommand (try `help`)".into()))?;
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --option, got `{a}`")))?;
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    args.options.insert(key.to_string(), it.next().unwrap().clone());
+                }
+                _ => args.flags.push(key.to_string()),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<u64>()
+                    .map_err(|_| Error::Config(format!("--{key} expects an integer")))
+            })
+            .transpose()
+    }
+}
+
+/// Build a RunConfig from `--config` + CLI overrides.
+pub fn run_config_from(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(d) = args.get("dataset") {
+        cfg.dataset = d.into();
+    }
+    if let Some(a) = args.get("arch") {
+        cfg.arch = a.into();
+    }
+    if let Some(m) = args.get("mode") {
+        cfg.mode =
+            AccessMode::parse(m).ok_or_else(|| Error::Config(format!("unknown mode `{m}`")))?;
+    }
+    if let Some(s) = args.get("system") {
+        cfg.system = SystemProfile::by_name(s)
+            .ok_or_else(|| Error::Config(format!("unknown system `{s}`")))?;
+    }
+    if let Some(e) = args.get_u64("epochs")? {
+        cfg.epochs = e as u32;
+    }
+    if let Some(s) = args.get_u64("steps")? {
+        cfg.steps_per_epoch = s as u32;
+    }
+    if let Some(s) = args.get_u64("scale")? {
+        cfg.scale = s as u32;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.into();
+    }
+    if args.flag("skip-train") {
+        cfg.skip_train = true;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+pub const HELP: &str = "\
+ptdirect — PyTorch-Direct reproduction (rust + JAX + Pallas)
+
+USAGE: ptdirect <COMMAND> [OPTIONS]
+
+COMMANDS:
+  train        run GNN training epochs (end-to-end through PJRT)
+  infer        serve forward-only batches (latency + accuracy; --batches N)
+  microbench   paper Fig. 6 gather microbenchmark
+  alignment    paper Fig. 7 memory-alignment sweep
+  datasets     paper Table 4 dataset presets
+  selfcheck    verify artifacts + runtime round-trip
+  help         this text
+
+COMMON OPTIONS:
+  --dataset reddit|product|twit|sk|paper|wiki   (default product)
+  --arch sage|gat                               (default sage)
+  --mode py|pyd|pyd-naive|uvm|gpu               (default pyd)
+  --system system1|system2|system3              (default system1)
+  --epochs N --steps N --scale K --seed S
+  --config run.toml --artifacts DIR --skip-train
+";
+
+/// Entry point used by main.rs (returns process exit code).
+pub fn run(argv: &[String]) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "infer" => cmd_infer(&args),
+        "microbench" => cmd_microbench(&args),
+        "alignment" => cmd_alignment(&args),
+        "datasets" => cmd_datasets(),
+        "selfcheck" => cmd_selfcheck(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command `{other}` (try help)"))),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = run_config_from(args)?;
+    log::info!(
+        "train: {} {} mode={} system={} epochs={}",
+        cfg.arch,
+        cfg.dataset,
+        cfg.mode.label(),
+        cfg.system.name,
+        cfg.epochs
+    );
+    let mut trainer = Trainer::new(cfg.clone())?;
+    for epoch in 0..cfg.epochs {
+        let r = trainer.run_epoch()?;
+        let b = &r.breakdown_sim;
+        println!(
+            "epoch {epoch}: steps={} loss {:.4} -> {:.4} acc {:.3} | sim: sample {} ms, \
+             feature-copy {} ms, train {} ms, other {} ms | {:.0} W ({} cpu)",
+            r.steps,
+            r.losses.first().copied().unwrap_or(0.0),
+            r.final_loss(),
+            r.accs.last().copied().unwrap_or(0.0),
+            ms(b.sample_s),
+            ms(b.transfer_s),
+            ms(b.train_s),
+            ms(b.other_s),
+            r.power.watts,
+            pct(r.power.cpu_util),
+        );
+        let m = &r.breakdown_measured;
+        println!(
+            "  measured-here: sample {} ms, gather {} ms, train {} ms, other {} ms",
+            ms(m.sample_s),
+            ms(m.transfer_s),
+            ms(m.train_s),
+            ms(m.other_s)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let cfg = run_config_from(args)?;
+    let n_batches = args.get_u64("batches")?.unwrap_or(32);
+    log::info!(
+        "infer: {} {} mode={} system={} batches={n_batches}",
+        cfg.arch,
+        cfg.dataset,
+        cfg.mode.label(),
+        cfg.system.name
+    );
+    let mut runner = crate::coordinator::InferenceRunner::new(cfg)?;
+    let r = runner.run(n_batches)?;
+    println!(
+        "served {} batches: accuracy {:.3} (untrained params -> ~chance)",
+        r.batches, r.accuracy
+    );
+    println!(
+        "measured exec latency: p50 {} ms, p99 {} ms | simulated batch latency: p50 {} ms \
+         (sample {} + copy {} + fwd {} ms totals)",
+        ms(r.exec_latency.median()),
+        ms(r.exec_latency.percentile(0.99)),
+        ms(r.sim_latency.median()),
+        ms(r.breakdown_sim.sample_s),
+        ms(r.breakdown_sim.transfer_s),
+        ms(r.breakdown_sim.train_s),
+    );
+    Ok(())
+}
+
+fn cmd_microbench(args: &Args) -> Result<()> {
+    let sys = match args.get("system") {
+        Some(s) => vec![SystemProfile::by_name(s)
+            .ok_or_else(|| Error::Config(format!("unknown system `{s}`")))?],
+        None => SystemProfile::all(),
+    };
+    let mut rng = Rng::new(args.get_u64("seed")?.unwrap_or(7));
+    let (ns, sizes) = match (args.get_u64("n")?, args.get_u64("bytes")?) {
+        (Some(n), Some(b)) => (vec![n], vec![b]),
+        _ => fig6_grid(),
+    };
+    for sys in sys {
+        let mut t = Table::new(
+            &format!("Fig. 6 microbenchmark — {} ({})", sys.name, sys.gpu_name),
+            &["N", "feat", "ideal ms", "Py ms", "PyD ms", "Py/ideal", "PyD/ideal", "PyD speedup"],
+        );
+        for &n in &ns {
+            for &s in &sizes {
+                let c = run_cell(&sys, n, s, &mut rng);
+                t.row(&[
+                    format!("{}K", n >> 10),
+                    human_bytes(s),
+                    ms(c.ideal_s),
+                    ms(c.py_s),
+                    ms(c.pyd_s),
+                    ratio(c.py_slowdown()),
+                    ratio(c.pyd_slowdown()),
+                    ratio(c.pyd_speedup_over_py()),
+                ]);
+            }
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_alignment(args: &Args) -> Result<()> {
+    let sys = match args.get("system") {
+        Some(s) => SystemProfile::by_name(s)
+            .ok_or_else(|| Error::Config(format!("unknown system `{s}`")))?,
+        None => SystemProfile::system1(),
+    };
+    let mut rng = Rng::new(5);
+    let mut t = Table::new(
+        &format!("Fig. 7 alignment sweep — {}", sys.name),
+        &["feat bytes", "Py ms", "PyD naive ms", "PyD opt ms", "naive speedup", "opt speedup"],
+    );
+    for s in fig7_sizes() {
+        let c = run_cell(&sys, 64 << 10, s, &mut rng);
+        t.row(&[
+            s.to_string(),
+            ms(c.py_s),
+            ms(c.pyd_naive_s),
+            ms(c.pyd_s),
+            ratio(c.py_s / c.pyd_naive_s),
+            ratio(c.py_s / c.pyd_s),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    let mut t = Table::new(
+        "Table 4 datasets",
+        &["abbv", "dataset", "#feat", "size", "#node", "#edge", "avg deg"],
+    );
+    for d in DATASETS {
+        t.row(&[
+            d.abbv.into(),
+            d.full_name.into(),
+            d.feat_dim.to_string(),
+            human_bytes(d.feature_bytes()),
+            format!("{:.1}M", d.nodes as f64 / 1e6),
+            format!("{:.1}M", d.edges as f64 / 1e6),
+            format!("{:.1}", d.edges as f64 / d.nodes as f64),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let manifest = Manifest::load(&dir)?;
+    println!("manifest: {} artifacts", manifest.artifacts.len());
+    let runtime = crate::runtime::Runtime::cpu()?;
+    println!("pjrt platform: {}", runtime.platform());
+    // Round-trip the gather artifact against the rust-side gather.
+    let spec = manifest.get("gather_aligned")?;
+    let loaded = runtime.load(&dir, spec)?;
+    let rows = spec.inputs[0].dims[0];
+    let feat = spec.inputs[0].dims[1];
+    let batch = spec.inputs[1].dims[0];
+    let mut rng = Rng::new(11);
+    let table: Vec<f32> = (0..rows * feat).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+    let idx: Vec<i32> = (0..batch).map(|_| rng.gen_range(rows as u64) as i32).collect();
+    let lit_t = crate::runtime::client::literal_f32(&table, &[rows, feat])?;
+    let lit_i = crate::runtime::client::literal_i32(&idx, &[batch])?;
+    let outs = loaded.execute(&[&lit_t, &lit_i])?;
+    let got = outs[0].to_vec::<f32>().map_err(Error::from)?;
+    let idx_u: Vec<u32> = idx.iter().map(|&i| i as u32).collect();
+    let mut want = vec![0f32; batch * feat];
+    crate::tensor::indexing::gather_rows_into(&table, feat, &idx_u, &mut want);
+    if got != want {
+        return Err(Error::Runtime("gather artifact mismatch vs rust gather".into()));
+    }
+    println!("gather artifact: OK ({} rows x {} feats, bit-exact)", batch, feat);
+    println!("selfcheck: OK");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = Args::parse(&sv(&["train", "--dataset", "reddit", "--skip-train", "--epochs", "2"]))
+            .unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("dataset"), Some("reddit"));
+        assert!(a.flag("skip-train"));
+        assert_eq!(a.get_u64("epochs").unwrap(), Some(2));
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(Args::parse(&sv(&["train", "oops"])).is_err());
+        assert!(Args::parse(&sv(&[])).is_err());
+    }
+
+    #[test]
+    fn run_config_overrides() {
+        let a = Args::parse(&sv(&[
+            "train", "--dataset", "wiki", "--arch", "gat", "--mode", "py", "--system", "system3",
+        ]))
+        .unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        assert_eq!(cfg.dataset, "wiki");
+        assert_eq!(cfg.arch, "gat");
+        assert_eq!(cfg.mode, AccessMode::CpuGather);
+        assert_eq!(cfg.system.name, "System3");
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = Args::parse(&sv(&["train", "--mode", "hyperdrive"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--epochs", "two"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+    }
+
+    #[test]
+    fn datasets_command_runs() {
+        cmd_datasets().unwrap();
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration subsystem: TOML-subset parser, typed run config with
+//! validation, and the paper's Table 5 hardware profiles.
+
+pub mod schema;
+pub mod systems;
+pub mod toml;
+
+pub use schema::{AccessMode, RunConfig};
+pub use systems::{PcieConfig, PowerProfile, SystemProfile};

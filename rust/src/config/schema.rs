@@ -1,0 +1,257 @@
+//! Typed run configuration with TOML loading, defaults, and validation.
+//!
+//! This is the "real config system" of the launcher: every knob of a
+//! training / benchmark run lives here, can be set from a TOML file
+//! (`ptdirect train --config run.toml`) and overridden from the CLI.
+
+use std::path::Path;
+
+use crate::config::systems::SystemProfile;
+use crate::config::toml::Document;
+use crate::error::{Error, Result};
+
+/// How features move from host memory to the (simulated) GPU.
+/// These are the paper's compared designs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AccessMode {
+    /// Baseline PyTorch: CPU gathers into a pinned staging buffer, DMA copies.
+    CpuGather,
+    /// PyTorch-Direct: GPU zero-copy gather, *without* the alignment fix
+    /// ("PyD Naive" of Fig. 7).
+    UnifiedNaive,
+    /// PyTorch-Direct with the circular-shift alignment optimization
+    /// ("PyD Optimized", the paper's full design).
+    UnifiedAligned,
+    /// Conventional UVM page migration (the paper's §3 strawman).
+    Uvm,
+    /// Whole feature table resident in GPU memory (small graphs only).
+    GpuResident,
+}
+
+impl AccessMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "py" | "cpu" | "cpu-gather" | "baseline" => Some(AccessMode::CpuGather),
+            "pyd-naive" | "unified-naive" | "naive" => Some(AccessMode::UnifiedNaive),
+            "pyd" | "unified" | "aligned" | "pyd-opt" => Some(AccessMode::UnifiedAligned),
+            "uvm" => Some(AccessMode::Uvm),
+            "gpu" | "resident" | "gpu-resident" => Some(AccessMode::GpuResident),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AccessMode::CpuGather => "Py",
+            AccessMode::UnifiedNaive => "PyD-Naive",
+            AccessMode::UnifiedAligned => "PyD",
+            AccessMode::Uvm => "UVM",
+            AccessMode::GpuResident => "GPU-Resident",
+        }
+    }
+}
+
+/// Full configuration of a training or benchmark run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Dataset preset name (paper Table 4 abbreviation: reddit, product, ...).
+    pub dataset: String,
+    /// Model architecture: "sage" | "gat".
+    pub arch: String,
+    /// Feature access mode under test.
+    pub mode: AccessMode,
+    /// Hardware profile (Table 5).
+    pub system: SystemProfile,
+    /// Epochs to run.
+    pub epochs: u32,
+    /// Steps per epoch (0 = derive from graph size / batch).
+    pub steps_per_epoch: u32,
+    /// Mini-batch root nodes — must match the AOT artifact.
+    pub batch: usize,
+    /// Sampling fan-outs per layer — must match the AOT artifact.
+    pub fanouts: Vec<usize>,
+    /// Graph scale divisor (1 = paper-size; bigger = smaller graph).
+    pub scale: u32,
+    /// Memory budget for the synthetic feature table, bytes. Datasets whose
+    /// scaled table would exceed this get their scale raised automatically.
+    pub feature_budget: u64,
+    /// RNG seed for graph/sampler/params.
+    pub seed: u64,
+    /// Directory with `manifest.txt` + `*.hlo.txt`.
+    pub artifacts_dir: String,
+    /// Number of sampler worker threads for the pipelined executor.
+    pub sampler_workers: usize,
+    /// Bounded queue depth between pipeline stages (backpressure window).
+    pub queue_depth: usize,
+    /// Skip PJRT execution (pipeline/transfer accounting only).
+    pub skip_train: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "product".into(),
+            arch: "sage".into(),
+            mode: AccessMode::UnifiedAligned,
+            system: SystemProfile::system1(),
+            epochs: 1,
+            steps_per_epoch: 0,
+            batch: 64,
+            fanouts: vec![5, 5],
+            scale: 64,
+            feature_budget: 256 << 20,
+            seed: 0x5EED,
+            artifacts_dir: "artifacts".into(),
+            sampler_workers: 1,
+            queue_depth: 4,
+            skip_train: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML file, starting from defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = Document::parse(text)?;
+        let mut cfg = RunConfig::default();
+        if let Some(v) = doc.get_str("run.dataset") {
+            cfg.dataset = v.into();
+        }
+        if let Some(v) = doc.get_str("run.arch") {
+            cfg.arch = v.into();
+        }
+        if let Some(v) = doc.get_str("run.mode") {
+            cfg.mode = AccessMode::parse(v)
+                .ok_or_else(|| Error::Config(format!("unknown mode `{v}`")))?;
+        }
+        if let Some(v) = doc.get_str("run.system") {
+            cfg.system = SystemProfile::by_name(v)
+                .ok_or_else(|| Error::Config(format!("unknown system `{v}`")))?;
+        }
+        if let Some(v) = doc.get_i64("run.epochs") {
+            cfg.epochs = v as u32;
+        }
+        if let Some(v) = doc.get_i64("run.steps_per_epoch") {
+            cfg.steps_per_epoch = v as u32;
+        }
+        if let Some(v) = doc.get_i64("run.batch") {
+            cfg.batch = v as usize;
+        }
+        if let Some(arr) = doc.get("run.fanouts").and_then(|v| v.as_array()) {
+            cfg.fanouts = arr
+                .iter()
+                .map(|v| {
+                    v.as_i64()
+                        .map(|i| i as usize)
+                        .ok_or_else(|| Error::Config("fanouts must be ints".into()))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = doc.get_i64("run.scale") {
+            cfg.scale = v as u32;
+        }
+        if let Some(v) = doc.get_i64("run.feature_budget_mb") {
+            cfg.feature_budget = (v as u64) << 20;
+        }
+        if let Some(v) = doc.get_i64("run.seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_str("run.artifacts_dir") {
+            cfg.artifacts_dir = v.into();
+        }
+        if let Some(v) = doc.get_i64("run.sampler_workers") {
+            cfg.sampler_workers = v as usize;
+        }
+        if let Some(v) = doc.get_i64("run.queue_depth") {
+            cfg.queue_depth = v as usize;
+        }
+        if let Some(v) = doc.get_bool("run.skip_train") {
+            cfg.skip_train = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Artifact name this run needs ("sage_product").
+    pub fn artifact_name(&self) -> String {
+        format!("{}_{}", self.arch, self.dataset)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.arch != "sage" && self.arch != "gat" {
+            return Err(Error::Config(format!("unknown arch `{}`", self.arch)));
+        }
+        if self.batch == 0 {
+            return Err(Error::Config("batch must be > 0".into()));
+        }
+        if self.fanouts.is_empty() || self.fanouts.iter().any(|&f| f == 0) {
+            return Err(Error::Config("fanouts must be non-empty, positive".into()));
+        }
+        if self.scale == 0 {
+            return Err(Error::Config("scale must be >= 1".into()));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::Config("queue_depth must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides_defaults() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[run]
+dataset = "reddit"
+arch = "gat"
+mode = "py"
+system = "system2"
+epochs = 2
+batch = 32
+fanouts = [3, 4]
+scale = 16
+seed = 99
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset, "reddit");
+        assert_eq!(cfg.arch, "gat");
+        assert_eq!(cfg.mode, AccessMode::CpuGather);
+        assert_eq!(cfg.system.name, "System2");
+        assert_eq!(cfg.batch, 32);
+        assert_eq!(cfg.fanouts, vec![3, 4]);
+        assert_eq!(cfg.artifact_name(), "gat_reddit");
+    }
+
+    #[test]
+    fn bad_mode_rejected() {
+        assert!(RunConfig::from_toml("[run]\nmode = \"warp-drive\"").is_err());
+    }
+
+    #[test]
+    fn bad_arch_rejected() {
+        assert!(RunConfig::from_toml("[run]\narch = \"cnn\"").is_err());
+    }
+
+    #[test]
+    fn mode_aliases() {
+        assert_eq!(AccessMode::parse("PyD"), Some(AccessMode::UnifiedAligned));
+        assert_eq!(AccessMode::parse("baseline"), Some(AccessMode::CpuGather));
+        assert_eq!(AccessMode::parse("uvm"), Some(AccessMode::Uvm));
+        assert_eq!(AccessMode::parse("??"), None);
+    }
+}

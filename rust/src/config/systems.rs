@@ -1,0 +1,266 @@
+//! Evaluation-platform models — paper Table 5.
+//!
+//! A [`SystemProfile`] bundles every hardware constant the simulated half of
+//! the time model needs (DESIGN.md §5): PCIe link parameters, host gather
+//! throughput, per-call overheads, GPU memory capacity, and the affine power
+//! model used for Fig. 9.  The three presets correspond to the paper's
+//! System1/2/3; constants are calibrated so the *ratios* the paper reports
+//! (Py 1.85–5.01x slower than ideal, PyD 1.03–1.20x) fall out of the model,
+//! not hard-coded.
+
+/// PCIe interconnect constants.
+#[derive(Clone, Debug)]
+pub struct PcieConfig {
+    /// Theoretical peak bandwidth (the "ideal" of paper Fig. 6), bytes/s.
+    pub peak_bw: f64,
+    /// Efficiency of large contiguous DMA transfers from pinned memory.
+    pub dma_efficiency: f64,
+    /// Efficiency of GPU zero-copy reads at full coalescing (PyD aligned).
+    pub direct_efficiency: f64,
+    /// Read-request round-trip issue cost when the link is latency-bound
+    /// (seconds per request, fully pipelined requests overlap; this is the
+    /// *per-request* residual cost).
+    pub request_issue_s: f64,
+    /// Cacheline granularity of zero-copy reads (bytes).
+    pub cacheline_bytes: u64,
+    /// Fraction of *duplicate* line traffic absorbed by the GPU L2 when
+    /// adjacent warps straddle the same cacheline (misaligned streams).
+    /// EMOGI (Min et al. 2020) measures ~44% throughput loss for misaligned
+    /// access — between the naive 2.0x line-amplification bound and the
+    /// 1.25x sector bound — which a 0.4 merge fraction reproduces.
+    pub l2_merge_fraction: f64,
+}
+
+/// Affine whole-system power model (paper Fig. 9; meter-level).
+#[derive(Clone, Debug)]
+pub struct PowerProfile {
+    /// Idle draw, watts (paper: "system idle power is about 105 W").
+    pub idle_w: f64,
+    /// CPU package max additional draw at 100% utilization.
+    pub cpu_max_w: f64,
+    /// GPU board max additional draw at 100% utilization.
+    pub gpu_max_w: f64,
+    /// Additional draw attributable to PCIe/memory I/O at full tilt.
+    pub io_max_w: f64,
+}
+
+impl PowerProfile {
+    /// System power given utilizations in [0, 1].
+    pub fn watts(&self, cpu_util: f64, gpu_util: f64, io_util: f64) -> f64 {
+        self.idle_w
+            + self.cpu_max_w * cpu_util.clamp(0.0, 1.0)
+            + self.gpu_max_w * gpu_util.clamp(0.0, 1.0)
+            + self.io_max_w * io_util.clamp(0.0, 1.0)
+    }
+}
+
+/// One evaluation platform (paper Table 5 row).
+#[derive(Clone, Debug)]
+pub struct SystemProfile {
+    pub name: &'static str,
+    pub cpu_name: &'static str,
+    pub gpu_name: &'static str,
+    pub cores: u32,
+    pub threads: u32,
+    /// GPU device memory capacity, bytes (gates GpuResident / sizes UVM).
+    pub gpu_mem_bytes: u64,
+    /// Peak multithreaded host gather throughput for large rows, bytes/s.
+    /// (Scattered-row memcpy; NUMA systems are markedly worse than their
+    /// STREAM numbers, which is exactly the paper's System2 observation.)
+    pub host_gather_peak: f64,
+    /// Row size at which gather throughput reaches half of peak, bytes.
+    /// Models per-row overhead (pointer chasing, cache misses) that makes
+    /// small-feature gathers slow.
+    pub host_gather_half_row: f64,
+    /// CUDA kernel launch + API call overhead per op, seconds.
+    pub kernel_launch_s: f64,
+    /// DMA setup cost per cudaMemcpy call, seconds.
+    pub dma_setup_s: f64,
+    /// UVM page-fault service time per fault group, seconds.
+    pub uvm_fault_s: f64,
+    /// UVM migration granularity, bytes.
+    pub uvm_page_bytes: u64,
+    /// GPU peak fp32 throughput, FLOP/s (spec sheet).
+    pub gpu_fp32_flops: f64,
+    /// Achieved fraction of peak for small-batch GNN kernels (GNN training
+    /// is notoriously memory-bound; 10-20% is typical for these models).
+    pub gpu_efficiency: f64,
+    /// Host-side graph work (sampling, subgraph construction) per examined
+    /// edge, seconds — multithreaded DGL dataloader equivalent.
+    pub sample_s_per_edge: f64,
+    pub pcie: PcieConfig,
+    pub power: PowerProfile,
+}
+
+impl SystemProfile {
+    /// Effective host gather throughput for a given feature-row size.
+    ///
+    /// `g(row) = peak * row / (row + half_row)` — saturating in row size,
+    /// matching the paper's observation that small features hurt the
+    /// CPU-centric baseline the most.
+    pub fn host_gather_bw(&self, row_bytes: f64) -> f64 {
+        self.host_gather_peak * row_bytes / (row_bytes + self.host_gather_half_row)
+    }
+
+    /// The paper's System1: AMD Threadripper 3960X + NVIDIA TITAN Xp 12 GB.
+    pub fn system1() -> Self {
+        SystemProfile {
+            name: "System1",
+            cpu_name: "AMD Threadripper 3960X 24C/48T",
+            gpu_name: "NVIDIA TITAN Xp 12GB",
+            cores: 24,
+            threads: 48,
+            gpu_mem_bytes: 12 << 30,
+            host_gather_peak: 20.0e9,
+            host_gather_half_row: 256.0,
+            kernel_launch_s: 12e-6,
+            dma_setup_s: 14e-6,
+            uvm_fault_s: 25e-6,
+            uvm_page_bytes: 4096,
+            gpu_fp32_flops: 12.1e12,
+            gpu_efficiency: 0.12,
+            sample_s_per_edge: 28e-9,
+            pcie: PcieConfig {
+                peak_bw: 15.75e9, // PCIe 3.0 x16
+                dma_efficiency: 0.88,
+                direct_efficiency: 0.93,
+                request_issue_s: 4.0e-9,
+                cacheline_bytes: 128,
+                l2_merge_fraction: 0.4,
+            },
+            power: PowerProfile {
+                idle_w: 105.0,
+                cpu_max_w: 280.0,
+                gpu_max_w: 250.0,
+                io_max_w: 25.0,
+            },
+        }
+    }
+
+    /// The paper's System2: dual Xeon Gold 6230 + Tesla V100 16 GB.
+    /// NUMA cross-socket traffic makes the CPU-centric gather notably worse
+    /// (the paper measures 3.31–5.01x slowdowns here).
+    pub fn system2() -> Self {
+        SystemProfile {
+            name: "System2",
+            cpu_name: "Dual Intel Xeon Gold 6230 40C/80T",
+            gpu_name: "NVIDIA Tesla V100 16GB",
+            cores: 40,
+            threads: 80,
+            gpu_mem_bytes: 16 << 30,
+            host_gather_peak: 7.8e9,
+            host_gather_half_row: 300.0,
+            kernel_launch_s: 12e-6,
+            dma_setup_s: 16e-6,
+            uvm_fault_s: 22e-6,
+            uvm_page_bytes: 4096,
+            gpu_fp32_flops: 14.9e12,
+            gpu_efficiency: 0.12,
+            sample_s_per_edge: 35e-9,
+            pcie: PcieConfig {
+                peak_bw: 15.75e9,
+                dma_efficiency: 0.88,
+                direct_efficiency: 0.94,
+                request_issue_s: 4.0e-9,
+                cacheline_bytes: 128,
+                l2_merge_fraction: 0.4,
+            },
+            power: PowerProfile {
+                idle_w: 130.0,
+                cpu_max_w: 2.0 * 125.0,
+                gpu_max_w: 300.0,
+                io_max_w: 25.0,
+            },
+        }
+    }
+
+    /// The paper's System3: Intel i7-8700K + GTX 1660 6 GB.
+    pub fn system3() -> Self {
+        SystemProfile {
+            name: "System3",
+            cpu_name: "Intel i7-8700K 6C/12T",
+            gpu_name: "NVIDIA GTX 1660 6GB",
+            cores: 6,
+            threads: 12,
+            gpu_mem_bytes: 6 << 30,
+            host_gather_peak: 11.5e9,
+            host_gather_half_row: 256.0,
+            kernel_launch_s: 14e-6,
+            dma_setup_s: 15e-6,
+            uvm_fault_s: 28e-6,
+            uvm_page_bytes: 4096,
+            gpu_fp32_flops: 5.0e12,
+            gpu_efficiency: 0.12,
+            sample_s_per_edge: 60e-9,
+            pcie: PcieConfig {
+                peak_bw: 15.75e9,
+                dma_efficiency: 0.86,
+                direct_efficiency: 0.92,
+                request_issue_s: 4.5e-9,
+                cacheline_bytes: 128,
+                l2_merge_fraction: 0.4,
+            },
+            power: PowerProfile {
+                idle_w: 70.0,
+                cpu_max_w: 95.0,
+                gpu_max_w: 120.0,
+                io_max_w: 20.0,
+            },
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "system1" | "1" => Some(Self::system1()),
+            "system2" | "2" => Some(Self::system2()),
+            "system3" | "3" => Some(Self::system3()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<Self> {
+        vec![Self::system1(), Self::system2(), Self::system3()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_by_name() {
+        assert_eq!(SystemProfile::by_name("system2").unwrap().name, "System2");
+        assert_eq!(SystemProfile::by_name("3").unwrap().name, "System3");
+        assert!(SystemProfile::by_name("laptop").is_none());
+    }
+
+    #[test]
+    fn gather_bw_saturates_with_row_size() {
+        let s = SystemProfile::system1();
+        let small = s.host_gather_bw(64.0);
+        let big = s.host_gather_bw(16384.0);
+        assert!(small < big);
+        assert!(big <= s.host_gather_peak);
+        // half-row definition: g(half_row) == peak/2
+        let half = s.host_gather_bw(s.host_gather_half_row);
+        assert!((half - s.host_gather_peak / 2.0).abs() < 1e-3 * s.host_gather_peak);
+    }
+
+    #[test]
+    fn numa_system_gathers_slower() {
+        // The paper's core System2 observation: despite 40 cores, the
+        // CPU-centric gather path is the slowest of the three systems.
+        assert!(
+            SystemProfile::system2().host_gather_peak
+                < SystemProfile::system3().host_gather_peak
+        );
+    }
+
+    #[test]
+    fn power_model_monotone_and_clamped() {
+        let p = SystemProfile::system1().power;
+        assert!((p.watts(0.0, 0.0, 0.0) - 105.0).abs() < 1e-9);
+        assert!(p.watts(0.5, 0.2, 0.1) > p.watts(0.1, 0.2, 0.1));
+        assert_eq!(p.watts(2.0, 0.0, 0.0), p.watts(1.0, 0.0, 0.0));
+    }
+}

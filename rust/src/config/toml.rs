@@ -1,0 +1,279 @@
+//! TOML-subset parser (serde/toml are not vendored offline).
+//!
+//! Supported grammar — everything the project's config files use:
+//!   * `[section]` and `[section.subsection]` headers
+//!   * `key = value` with value ∈ {string "..", integer, float, bool,
+//!     flat array [v, v, ...]}
+//!   * `#` comments, blank lines
+//!
+//! Values are stored flat under dotted paths (`section.key`). Unsupported
+//! constructs (multi-line strings, tables-in-arrays, dates) are rejected
+//! with a line-numbered error instead of being silently misparsed.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Flat dotted-path -> value document.
+#[derive(Clone, Debug, Default)]
+pub struct Document {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Document> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() || name.contains('[') {
+                    return Err(err(lineno, "bad section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let val = parse_value(line[eq + 1..].trim(), lineno)?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.values.insert(path, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.values.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+
+    pub fn get_i64(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_i64)
+    }
+
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_f64)
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    /// Keys under `prefix.` with the prefix stripped.
+    pub fn section_keys(&self, prefix: &str) -> Vec<String> {
+        let pre = format!("{prefix}.");
+        self.values
+            .keys()
+            .filter_map(|k| k.strip_prefix(&pre).map(str::to_string))
+            .collect()
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {msg}", lineno + 1))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<Value> {
+    let t = text.trim();
+    if t.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(rest) = t.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = t.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p, lineno)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(lineno, &format!("cannot parse value `{t}`")))
+}
+
+/// Split on commas that are not inside quotes (arrays are flat, no nesting).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = Document::parse(
+            r#"
+# top comment
+title = "ptdirect"
+[run]
+epochs = 3
+lr = 0.0025
+verbose = true
+fanouts = [5, 10]
+tag = "a # not a comment"
+[run.deep]
+x = 1
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("title"), Some("ptdirect"));
+        assert_eq!(doc.get_i64("run.epochs"), Some(3));
+        assert_eq!(doc.get_f64("run.lr"), Some(0.0025));
+        assert_eq!(doc.get_bool("run.verbose"), Some(true));
+        assert_eq!(doc.get_str("run.tag"), Some("a # not a comment"));
+        assert_eq!(doc.get_i64("run.deep.x"), Some(1));
+        let arr = doc.get("run.fanouts").unwrap().as_array().unwrap();
+        assert_eq!(arr, &[Value::Int(5), Value::Int(10)]);
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let doc = Document::parse("x = 4").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(4.0));
+    }
+
+    #[test]
+    fn underscores_in_ints() {
+        let doc = Document::parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.get_i64("n"), Some(1_000_000));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Document::parse("a = 1\nbad line\n").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn rejects_unterminated_string() {
+        assert!(Document::parse("s = \"oops").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_section() {
+        assert!(Document::parse("[run\n").is_err());
+    }
+
+    #[test]
+    fn section_keys_lists_children() {
+        let doc = Document::parse("[a]\nx=1\ny=2\n[b]\nz=3").unwrap();
+        let mut keys = doc.section_keys("a");
+        keys.sort();
+        assert_eq!(keys, vec!["x", "y"]);
+    }
+}

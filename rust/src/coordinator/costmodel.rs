@@ -1,0 +1,124 @@
+//! Paper-testbed cost models for the *measured-here, simulated-there*
+//! split (DESIGN.md §5): GPU step time from a FLOP estimate, host sampling
+//! time from an edges-examined estimate.
+
+use crate::config::SystemProfile;
+use crate::runtime::artifact::ArtifactSpec;
+
+/// FLOP/edge-work estimator for one model variant.
+#[derive(Clone, Debug)]
+pub struct ComputeModel {
+    pub flops_per_step: f64,
+    pub kernel_launches: u64,
+    pub sample_slots_per_step: u64,
+}
+
+impl ComputeModel {
+    /// Estimate from the artifact's shapes.
+    pub fn from_spec(spec: &ArtifactSpec) -> ComputeModel {
+        let arch = spec.arch.as_deref().unwrap_or("sage");
+        let nl = spec.fanouts.len();
+        let mut dims = vec![spec.in_dim];
+        for _ in 0..nl {
+            dims.push(spec.hidden);
+        }
+        let mut fwd = 0f64;
+        let mut launches = 6u64; // loss + optimizer epilogue
+        for l in 0..nl {
+            let n_dst = spec.layer_sizes[l + 1] as f64;
+            let n_src = spec.layer_sizes[l] as f64;
+            let k = spec.fanouts[l] as f64;
+            let (d_in, d_out) = (dims[l] as f64, dims[l + 1] as f64);
+            if arch == "gat" {
+                // projection of all sources + per-slot attention work
+                fwd += 2.0 * n_src * d_in * d_out; // z = x W
+                fwd += n_dst * (k + 1.0) * d_out * 6.0; // scores+softmax+wsum
+                launches += 12;
+            } else {
+                fwd += 2.0 * n_dst * d_in * d_out; // W_self
+                fwd += 2.0 * n_dst * d_in * d_out; // W_nbr
+                fwd += n_dst * k * d_in * 2.0; // masked mean agg
+                launches += 8;
+            }
+        }
+        // classifier head
+        fwd += 2.0 * spec.batch as f64 * spec.hidden as f64 * spec.classes as f64;
+        // backward ~= 2x forward; SGD+momentum ~= 4 ops/param
+        let flops = fwd * 3.0 + spec.param_elems() as f64 * 4.0;
+        // sampling examines each neighbor slot (+ bookkeeping folded into
+        // the per-edge constant)
+        let slots: u64 = (0..nl)
+            .map(|l| (spec.layer_sizes[l + 1] * spec.fanouts[l]) as u64)
+            .sum();
+        ComputeModel {
+            flops_per_step: flops,
+            kernel_launches: launches,
+            sample_slots_per_step: slots,
+        }
+    }
+
+    /// Simulated GPU step time on `sys`.
+    pub fn train_step_s(&self, sys: &SystemProfile) -> f64 {
+        self.flops_per_step / (sys.gpu_fp32_flops * sys.gpu_efficiency)
+            + self.kernel_launches as f64 * sys.kernel_launch_s
+    }
+
+    /// Simulated host sampling time per step on `sys`.
+    pub fn sample_step_s(&self, sys: &SystemProfile) -> f64 {
+        self.sample_slots_per_step as f64 * sys.sample_s_per_edge
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{ArtifactKind, ArtifactSpec};
+
+    fn spec(arch: &str) -> ArtifactSpec {
+        ArtifactSpec {
+            name: format!("{arch}_x"),
+            file: "x.hlo.txt".into(),
+            kind: ArtifactKind::Train,
+            arch: Some(arch.into()),
+            batch: 64,
+            hidden: 64,
+            in_dim: 100,
+            classes: 47,
+            fanouts: vec![5, 5],
+            layer_sizes: vec![2304, 384, 64],
+            lr: 0.003,
+            momentum: 0.9,
+            inputs: vec![],
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn flops_scale_with_arch_and_width() {
+        let sage = ComputeModel::from_spec(&spec("sage"));
+        assert!(sage.flops_per_step > 1e6);
+        let mut wide = spec("sage");
+        wide.in_dim = 800;
+        let sage_w = ComputeModel::from_spec(&wide);
+        assert!(sage_w.flops_per_step > 3.0 * sage.flops_per_step);
+    }
+
+    #[test]
+    fn gat_heavier_than_sage_in_time() {
+        // Paper §5.4: "GAT training is computationally heavier than
+        // GraphSAGE" (per gathered byte), so PyD helps it less.
+        let sys = SystemProfile::system1();
+        let sage = ComputeModel::from_spec(&spec("sage"));
+        let gat = ComputeModel::from_spec(&spec("gat"));
+        assert!(gat.train_step_s(&sys) > 0.5 * sage.train_step_s(&sys));
+        assert!(gat.kernel_launches > sage.kernel_launches);
+    }
+
+    #[test]
+    fn sample_time_counts_all_slots() {
+        let m = ComputeModel::from_spec(&spec("sage"));
+        assert_eq!(m.sample_slots_per_step, (384 * 5 + 64 * 5) as u64);
+        let sys = SystemProfile::system1();
+        assert!(m.sample_step_s(&sys) > 0.0);
+    }
+}

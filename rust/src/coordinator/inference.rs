@@ -1,0 +1,173 @@
+//! Batched inference over the AOT `*_infer` artifacts (paper §4.1:
+//! "PyTorch-Direct aims to enable GPU out-of-memory training *and
+//! inference* for GNN").
+//!
+//! Reuses the training pipeline's sampler + feature store; the forward-only
+//! artifact returns logits for the batch roots.  Reports per-batch latency
+//! (measured PJRT + simulated transfer) and accuracy against the synthetic
+//! labels — the serving-path counterpart of the Fig. 8 trainer.
+
+use std::path::Path;
+
+use crate::config::RunConfig;
+use crate::coordinator::trainer::Breakdown;
+use crate::error::{Error, Result};
+use crate::featurestore::FeatureStore;
+use crate::graph::{Csr, DatasetPreset};
+use crate::runtime::client::{literal_f32, literal_i32};
+use crate::runtime::{ArtifactKind, LoadedArtifact, Manifest, Runtime};
+use crate::sampler::NeighborSampler;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::timer::Timer;
+
+/// Inference run results.
+#[derive(Clone, Debug, Default)]
+pub struct InferenceReport {
+    pub batches: u64,
+    pub accuracy: f64,
+    /// Measured PJRT execution latency per batch (seconds).
+    pub exec_latency: Summary,
+    /// Simulated end-to-end batch latency on the target system (sample +
+    /// transfer + execute estimate).
+    pub sim_latency: Summary,
+    pub breakdown_sim: Breakdown,
+}
+
+/// Forward-only runner over the full data path.
+pub struct InferenceRunner {
+    cfg: RunConfig,
+    preset: DatasetPreset,
+    graph: Csr,
+    store: FeatureStore,
+    artifact: LoadedArtifact,
+    params: Vec<xla::Literal>,
+    rng: Rng,
+}
+
+impl InferenceRunner {
+    /// Build the stack and load `{arch}_{dataset}_infer`.
+    pub fn new(cfg: RunConfig) -> Result<InferenceRunner> {
+        let preset = DatasetPreset::by_abbv(&cfg.dataset)
+            .ok_or_else(|| Error::Config(format!("unknown dataset `{}`", cfg.dataset)))?;
+        let scale = preset.scale_for_budget(cfg.scale, cfg.feature_budget);
+        let graph = preset.build_graph(scale, cfg.seed)?;
+        let store = FeatureStore::build(
+            graph.num_nodes(),
+            preset.feat_dim as usize,
+            preset.classes,
+            cfg.mode,
+            &cfg.system,
+            cfg.seed ^ 0xFEA7,
+        )?;
+        let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+        let spec = manifest.get(&format!("{}_infer", cfg.artifact_name()))?;
+        if spec.kind != ArtifactKind::Infer {
+            return Err(Error::Runtime(format!("{} is not an infer artifact", spec.name)));
+        }
+        let runtime = Runtime::cpu()?;
+        let artifact = runtime.load(Path::new(&cfg.artifacts_dir), spec)?;
+        // Glorot params (a real deployment would load a checkpoint; the
+        // serving *path* — gather, transfer, execute — is what we exercise).
+        let state = crate::runtime::TrainState::init(spec, cfg.seed ^ 0x9A23)?;
+        let params = state
+            .param_names()
+            .iter()
+            .map(|n| {
+                let vals = state.param_values(n)?;
+                let dims: Vec<usize> = spec
+                    .params()
+                    .find(|p| &p.name == n)
+                    .map(|p| p.dims.clone())
+                    .unwrap();
+                literal_f32(&vals, &dims)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let rng = Rng::new(cfg.seed);
+        Ok(InferenceRunner {
+            cfg,
+            preset,
+            graph,
+            store,
+            artifact,
+            params,
+            rng,
+        })
+    }
+
+    /// Serve `n_batches` sampled batches; returns latency + accuracy stats.
+    pub fn run(&mut self, n_batches: u64) -> Result<InferenceReport> {
+        let spec = &self.artifact.spec;
+        let sampler = NeighborSampler::new(&self.graph, &self.cfg.fanouts, self.preset.classes);
+        let mut rng = self.rng.fork(1);
+        let mut report = InferenceReport::default();
+        let mut correct = 0u64;
+        let mut total = 0u64;
+        let n_nodes = self.graph.num_nodes();
+        let dim = self.store.dim();
+        let mut x0 = vec![0f32; spec.layer_sizes[0] * dim];
+
+        for b in 0..n_batches {
+            let seeds: Vec<u32> = (0..self.cfg.batch)
+                .map(|k| ((b as usize * self.cfg.batch + k) % n_nodes) as u32)
+                .collect();
+            let mb = sampler.sample(&seeds, &mut rng);
+            let cost = self.store.gather_into(&mb.src_nodes, &mut x0)?;
+
+            // assemble literals: params, x0, nbrs, masks
+            let x0_lit = literal_f32(&x0, &[spec.layer_sizes[0], spec.in_dim])?;
+            let mut nbr_lits = Vec::new();
+            let mut mask_lits = Vec::new();
+            for (l, layer) in mb.layers.iter().enumerate() {
+                let dims = [spec.layer_sizes[l + 1], spec.fanouts[l]];
+                nbr_lits.push(literal_i32(&layer.nbr, &dims)?);
+                mask_lits.push(literal_f32(&layer.mask, &dims)?);
+            }
+            let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+            inputs.push(&x0_lit);
+            inputs.extend(nbr_lits.iter());
+            inputs.extend(mask_lits.iter());
+
+            let t_exec = Timer::start();
+            let outs = self.artifact.execute(&inputs)?;
+            let exec_s = t_exec.elapsed_s();
+            report.exec_latency.add(exec_s);
+
+            let logits = outs[0].to_vec::<f32>()?;
+            for (i, &label) in mb.labels.iter().enumerate() {
+                let row = &logits[i * spec.classes..(i + 1) * spec.classes];
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j as i32)
+                    .unwrap();
+                if argmax == label {
+                    correct += 1;
+                }
+                total += 1;
+            }
+
+            // simulated per-batch latency on the target system: sampling
+            // estimate + transfer model + forward-only GPU estimate (the
+            // fused train step is fwd + ~2x fwd bwd + update, so fwd ≈ 1/3)
+            let sim_sample = mb
+                .layers
+                .iter()
+                .map(|l| (l.n_dst * l.fanout) as f64)
+                .sum::<f64>()
+                * self.cfg.system.sample_s_per_edge;
+            let sim_fwd =
+                crate::coordinator::costmodel::ComputeModel::from_spec(spec)
+                    .train_step_s(&self.cfg.system)
+                    / 3.0;
+            report.breakdown_sim.sample_s += sim_sample;
+            report.breakdown_sim.transfer_s += cost.time_s;
+            report.breakdown_sim.train_s += sim_fwd;
+            report.sim_latency.add(sim_sample + cost.time_s + sim_fwd);
+            report.batches += 1;
+        }
+        report.accuracy = correct as f64 / total.max(1) as f64;
+        Ok(report)
+    }
+}

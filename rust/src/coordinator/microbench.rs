@@ -1,0 +1,153 @@
+//! Microbenchmark drivers for paper Figs. 6 and 7 (library side; the bench
+//! binaries and the CLI both call these).
+//!
+//! Fig. 6: gather N features of S bytes each from a 4M-row table, compare
+//! Py (CPU gather + DMA) vs PyD (zero-copy aligned) vs ideal, across the
+//! three Table-5 systems.
+//!
+//! Fig. 7: fix N, sweep the feature size from 2048 B to 2076 B in 4 B
+//! steps, compare Py vs PyD-naive vs PyD-optimized.
+
+use crate::config::SystemProfile;
+use crate::device::warp::{count_requests, WarpModel};
+use crate::interconnect::{DmaEngine, PcieLink};
+use crate::util::rng::Rng;
+
+/// Paper's microbenchmark table size ("total number of items is fixed to
+/// 4M for all experiments").
+pub const TABLE_ROWS: u32 = 4_000_000;
+
+/// One (N, S, system) microbenchmark cell.
+#[derive(Clone, Copy, Debug)]
+pub struct MicrobenchCell {
+    pub n_features: u64,
+    pub feat_bytes: u64,
+    pub ideal_s: f64,
+    pub py_s: f64,
+    pub pyd_s: f64,
+    pub pyd_naive_s: f64,
+}
+
+impl MicrobenchCell {
+    pub fn py_slowdown(&self) -> f64 {
+        self.py_s / self.ideal_s
+    }
+
+    pub fn pyd_slowdown(&self) -> f64 {
+        self.pyd_s / self.ideal_s
+    }
+
+    pub fn pyd_speedup_over_py(&self) -> f64 {
+        self.py_s / self.pyd_s
+    }
+}
+
+/// Random gather indices (uniform over the table, like the paper's RNG).
+pub fn random_indices(n: u64, rng: &mut Rng) -> Vec<u32> {
+    (0..n).map(|_| rng.gen_range(TABLE_ROWS as u64) as u32).collect()
+}
+
+/// Evaluate one microbenchmark cell on one system.
+pub fn run_cell(sys: &SystemProfile, n_features: u64, feat_bytes: u64, rng: &mut Rng) -> MicrobenchCell {
+    let idx = random_indices(n_features, rng);
+    let feat_elems = feat_bytes / 4;
+    let link = PcieLink::new(sys);
+    let dma = DmaEngine::new(sys);
+
+    let ideal = link.ideal(n_features * feat_bytes);
+    let py = dma.cpu_gather_transfer(n_features, feat_bytes);
+    let model = WarpModel::default();
+    let opt = count_requests(&idx, feat_elems, model, model.shift_applies(feat_elems));
+    let naive = count_requests(&idx, feat_elems, model, false);
+    MicrobenchCell {
+        n_features,
+        feat_bytes,
+        ideal_s: ideal.time_s,
+        py_s: py.time_s,
+        pyd_s: link.direct_gather(&opt).time_s,
+        pyd_naive_s: link.direct_gather(&naive).time_s,
+    }
+}
+
+/// The paper's Fig. 6 grid: N ∈ {8K..256K}, S ∈ {256 B..16 KiB}.
+pub fn fig6_grid() -> (Vec<u64>, Vec<u64>) {
+    (
+        vec![8 << 10, 32 << 10, 128 << 10, 256 << 10],
+        vec![256, 1024, 4096, 16384],
+    )
+}
+
+/// Fig. 7 sweep: 2048..=2076 B in 4 B strides.
+pub fn fig7_sizes() -> Vec<u64> {
+    (0..8).map(|i| 2048 + 4 * i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_shape_on_all_systems() {
+        // Paper §5.2: Py slowdowns 1.85x-5.01x (excluding the tiny-transfer
+        // corner); PyD within 1.03x-1.20x of ideal.
+        let mut rng = Rng::new(1);
+        for sys in SystemProfile::all() {
+            for &(n, s) in &[(32u64 << 10, 1024u64), (128 << 10, 4096), (256 << 10, 16384)] {
+                let c = run_cell(&sys, n, s, &mut rng);
+                let pys = c.py_slowdown();
+                let pyds = c.pyd_slowdown();
+                assert!(
+                    (1.5..5.6).contains(&pys),
+                    "{}: Py slowdown {pys} at ({n},{s})",
+                    sys.name
+                );
+                assert!(
+                    (1.0..1.30).contains(&pyds),
+                    "{}: PyD slowdown {pyds} at ({n},{s})",
+                    sys.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn system2_py_is_worst() {
+        let mut rng = Rng::new(2);
+        let s1 = run_cell(&SystemProfile::system1(), 128 << 10, 4096, &mut rng);
+        let s2 = run_cell(&SystemProfile::system2(), 128 << 10, 4096, &mut rng);
+        assert!(s2.py_slowdown() > s1.py_slowdown());
+    }
+
+    #[test]
+    fn tiny_transfer_corner_overhead_bound() {
+        // (8K, 256B): the paper exempts this cell — API overheads dominate.
+        let mut rng = Rng::new(3);
+        let c = run_cell(&SystemProfile::system1(), 8 << 10, 256, &mut rng);
+        assert!(c.pyd_slowdown() > 1.05);
+    }
+
+    #[test]
+    fn fig7_alignment_band() {
+        // Paper §5.3: naive ~1.17x over Py at 2052 B; optimized ~1.95x;
+        // optimized benefit roughly constant (~1.93x average).
+        let sys = SystemProfile::system1();
+        let mut rng = Rng::new(4);
+        let mut opt_speedups = Vec::new();
+        for s in fig7_sizes() {
+            let c = run_cell(&sys, 64 << 10, s, &mut rng);
+            let naive_speedup = c.py_s / c.pyd_naive_s;
+            let opt_speedup = c.py_s / c.pyd_s;
+            assert!(opt_speedup >= naive_speedup - 1e-9);
+            if s % 128 != 0 {
+                // misaligned: the gap must be large
+                assert!(
+                    opt_speedup / naive_speedup > 1.4,
+                    "s={s}: opt {opt_speedup} naive {naive_speedup}"
+                );
+            }
+            opt_speedups.push(opt_speedup);
+        }
+        let avg = opt_speedups.iter().sum::<f64>() / opt_speedups.len() as f64;
+        assert!((1.5..2.5).contains(&avg), "avg opt speedup {avg}");
+    }
+}

@@ -1,0 +1,16 @@
+//! The training coordinator: epoch orchestration, simulated-testbed cost
+//! models, the power model (Fig. 9), microbenchmark drivers (Figs. 6/7),
+//! and table-formatted reporting.
+
+pub mod costmodel;
+pub mod inference;
+pub mod microbench;
+pub mod power;
+pub mod report;
+pub mod trainer;
+
+pub use costmodel::ComputeModel;
+pub use inference::{InferenceReport, InferenceRunner};
+pub use power::{epoch_power, PowerReport};
+pub use report::Table;
+pub use trainer::{Breakdown, EpochReport, Trainer};

@@ -1,0 +1,332 @@
+//! The end-to-end trainer: graph -> sampler -> feature store -> PJRT step.
+//!
+//! Every epoch produces two time breakdowns (DESIGN.md §5):
+//!
+//! * **simulated** — the paper-testbed estimate: sampling and training via
+//!   [`ComputeModel`], feature copy via the interconnect models.  This is
+//!   what the Fig. 8 bench compares across access modes.
+//! * **measured** — real wall-clock on this machine (sampling, gather
+//!   memcpys, PJRT execution).  This is the end-to-end integration signal
+//!   (the loss curve is real learning through the AOT artifacts).
+
+use std::path::Path;
+
+use crate::config::{AccessMode, RunConfig};
+use crate::coordinator::costmodel::ComputeModel;
+use crate::coordinator::power::{epoch_power, PowerReport};
+use crate::error::{Error, Result};
+use crate::featurestore::FeatureStore;
+use crate::graph::{Csr, DatasetPreset};
+use crate::runtime::state::{StepBatch, TrainState};
+use crate::runtime::{ArtifactKind, LoadedArtifact, Manifest, Runtime};
+use crate::sampler::NeighborSampler;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// Epoch time breakdown (the stacked bars of paper Fig. 8).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breakdown {
+    /// Neighbor sampling + subgraph construction.
+    pub sample_s: f64,
+    /// Feature gather + host->device transfer ("Feature Copy").
+    pub transfer_s: f64,
+    /// Forward/backward/update ("Training").
+    pub train_s: f64,
+    /// Everything else (batch assembly, bookkeeping).
+    pub other_s: f64,
+}
+
+impl Breakdown {
+    pub fn total_s(&self) -> f64 {
+        self.sample_s + self.transfer_s + self.train_s + self.other_s
+    }
+}
+
+/// One epoch's results.
+#[derive(Clone, Debug, Default)]
+pub struct EpochReport {
+    pub steps: u64,
+    pub breakdown_sim: Breakdown,
+    pub breakdown_measured: Breakdown,
+    pub losses: Vec<f32>,
+    pub accs: Vec<f32>,
+    pub bytes_on_link: u64,
+    pub requests: u64,
+    /// CPU seconds the transfer path consumed (simulated testbed).
+    pub cpu_gather_s: f64,
+    pub power: PowerReport,
+}
+
+impl EpochReport {
+    pub fn mean_loss(&self) -> f32 {
+        if self.losses.is_empty() {
+            return 0.0;
+        }
+        self.losses.iter().sum::<f32>() / self.losses.len() as f32
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// End-to-end trainer over one (dataset, arch, mode, system) configuration.
+pub struct Trainer {
+    pub cfg: RunConfig,
+    pub preset: DatasetPreset,
+    pub scale: u32,
+    graph: Csr,
+    store: FeatureStore,
+    compute: Option<ComputeModel>,
+    artifact: Option<LoadedArtifact>,
+    state: Option<TrainState>,
+    rng: Rng,
+}
+
+impl Trainer {
+    /// Build the full stack.  When `cfg.skip_train` is set the PJRT runtime
+    /// is not loaded (pipeline/transfer accounting only — used by benches
+    /// that sweep all 12 variants without paying 12 compilations).
+    pub fn new(cfg: RunConfig) -> Result<Trainer> {
+        let preset = DatasetPreset::by_abbv(&cfg.dataset)
+            .ok_or_else(|| Error::Config(format!("unknown dataset `{}`", cfg.dataset)))?;
+        let scale = preset.scale_for_budget(cfg.scale, cfg.feature_budget);
+        if scale != cfg.scale {
+            log::info!(
+                "dataset {}: scale raised {} -> {} to fit feature budget",
+                preset.abbv,
+                cfg.scale,
+                scale
+            );
+        }
+        let t = Timer::start();
+        let graph = preset.build_graph(scale, cfg.seed)?;
+        log::info!(
+            "graph {}: {} nodes, {} edges (scale 1/{scale}) in {:.2}s",
+            preset.abbv,
+            graph.num_nodes(),
+            graph.num_edges(),
+            t.elapsed_s()
+        );
+        let store = FeatureStore::build(
+            graph.num_nodes(),
+            preset.feat_dim as usize,
+            preset.classes,
+            cfg.mode,
+            &cfg.system,
+            cfg.seed ^ 0xFEA7,
+        )?;
+
+        let (artifact, state, compute) = if cfg.skip_train {
+            // No PJRT, but still read the manifest (when present) so the
+            // simulated train/sample estimates use the artifact's true
+            // shapes — benches sweep all variants without 12 compilations.
+            let compute = Manifest::load(Path::new(&cfg.artifacts_dir))
+                .ok()
+                .and_then(|m| m.get(&cfg.artifact_name()).ok().cloned())
+                .map(|spec| ComputeModel::from_spec(&spec));
+            (None, None, compute)
+        } else {
+            let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+            let spec = manifest.get(&cfg.artifact_name())?;
+            if spec.kind != ArtifactKind::Train {
+                return Err(Error::Runtime(format!("{} is not a train artifact", spec.name)));
+            }
+            if spec.batch != cfg.batch || spec.fanouts != cfg.fanouts {
+                return Err(Error::Config(format!(
+                    "artifact {} built for batch {} fanouts {:?}; run config has {} {:?} \
+                     (re-run `make artifacts` with matching flags)",
+                    spec.name, spec.batch, spec.fanouts, cfg.batch, cfg.fanouts
+                )));
+            }
+            if spec.in_dim != preset.feat_dim as usize {
+                return Err(Error::Config(format!(
+                    "artifact in_dim {} != dataset feat dim {}",
+                    spec.in_dim, preset.feat_dim
+                )));
+            }
+            let runtime = Runtime::cpu()?;
+            let loaded = runtime.load(Path::new(&cfg.artifacts_dir), spec)?;
+            let state = TrainState::init(spec, cfg.seed ^ 0x9A23)?;
+            let compute = ComputeModel::from_spec(spec);
+            (Some(loaded), Some(state), Some(compute))
+        };
+
+        let rng = Rng::new(cfg.seed);
+        Ok(Trainer {
+            cfg,
+            preset,
+            scale,
+            graph,
+            store,
+            compute,
+            artifact,
+            state,
+            rng,
+        })
+    }
+
+    pub fn graph(&self) -> &Csr {
+        &self.graph
+    }
+
+    pub fn store(&self) -> &FeatureStore {
+        &self.store
+    }
+
+    /// Compute model (None when skip_train and no artifact was loaded).
+    pub fn compute_model(&self) -> Option<&ComputeModel> {
+        self.compute.as_ref()
+    }
+
+    /// Steps one epoch would run at full size.
+    pub fn steps_per_epoch(&self) -> u64 {
+        let by_graph = (self.graph.num_nodes() / self.cfg.batch) as u64;
+        if self.cfg.steps_per_epoch > 0 {
+            by_graph.min(self.cfg.steps_per_epoch as u64)
+        } else {
+            by_graph
+        }
+    }
+
+    /// Run one training epoch.
+    pub fn run_epoch(&mut self) -> Result<EpochReport> {
+        let sampler = NeighborSampler::new(&self.graph, &self.cfg.fanouts, self.preset.classes);
+        let mut rng = self.rng.fork(self.state.as_ref().map(|s| s.steps).unwrap_or(0));
+        let seeds_all = sampler.epoch_seeds(self.cfg.batch, &mut rng);
+        let max_steps = self.steps_per_epoch() as usize;
+
+        let mut report = EpochReport::default();
+        let dim = self.store.dim();
+        let mut x0 = vec![0f32; 0];
+
+        for seeds in seeds_all.into_iter().take(max_steps) {
+            // --- sample (measured) ---
+            let t = Timer::start();
+            let mb = sampler.sample(&seeds, &mut rng);
+            report.breakdown_measured.sample_s += t.elapsed_s();
+            debug_assert!(mb.validate().is_ok());
+
+            // --- gather + transfer ---
+            let rows = mb.gather_rows();
+            x0.resize(rows * dim, 0.0);
+            let t = Timer::start();
+            let cost = self.store.gather_into(&mb.src_nodes, &mut x0)?;
+            report.breakdown_measured.transfer_s += t.elapsed_s();
+            report.breakdown_sim.transfer_s += cost.time_s;
+            report.cpu_gather_s += cost.cpu_time_s;
+            report.bytes_on_link += cost.bytes_on_link;
+            report.requests += cost.requests;
+
+            // --- train (measured through PJRT; simulated via FLOP model) ---
+            if let (Some(artifact), Some(state)) = (self.artifact.as_ref(), self.state.as_mut()) {
+                let t = Timer::start();
+                let batch = StepBatch {
+                    x0: x0.clone(),
+                    nbrs: mb.layers.iter().map(|l| l.nbr.clone()).collect(),
+                    masks: mb.layers.iter().map(|l| l.mask.clone()).collect(),
+                    labels: mb.labels.clone(),
+                };
+                let assemble_s = t.elapsed_s();
+                report.breakdown_measured.other_s += assemble_s;
+                let metrics = state.step(artifact, &batch)?;
+                report.breakdown_measured.train_s += metrics.exec_s;
+                report.losses.push(metrics.loss);
+                report.accs.push(metrics.acc);
+            }
+            report.steps += 1;
+        }
+
+        // --- simulated-testbed sampling + training ---
+        if let Some(cm) = &self.compute {
+            report.breakdown_sim.sample_s = cm.sample_step_s(&self.cfg.system) * report.steps as f64;
+            report.breakdown_sim.train_s = cm.train_step_s(&self.cfg.system) * report.steps as f64;
+        } else {
+            // skip_train: estimate from the sampler shape directly
+            let slots: u64 = self
+                .cfg
+                .fanouts
+                .iter()
+                .rev()
+                .scan(self.cfg.batch, |n_dst, &f| {
+                    let s = (*n_dst * f) as u64;
+                    *n_dst *= 1 + f;
+                    Some(s)
+                })
+                .sum();
+            report.breakdown_sim.sample_s =
+                slots as f64 * self.cfg.system.sample_s_per_edge * report.steps as f64;
+        }
+        report.breakdown_sim.other_s = 0.02 * report.breakdown_sim.total_s();
+
+        report.power = epoch_power(
+            &self.cfg.system,
+            &report.breakdown_sim,
+            report.cpu_gather_s,
+            report.bytes_on_link,
+        );
+        Ok(report)
+    }
+
+    /// Switch access mode in place (rebuilds the feature store only).
+    pub fn set_mode(&mut self, mode: AccessMode) -> Result<()> {
+        if mode == self.cfg.mode {
+            return Ok(());
+        }
+        self.cfg.mode = mode;
+        self.store = FeatureStore::build(
+            self.graph.num_nodes(),
+            self.preset.feat_dim as usize,
+            self.preset.classes,
+            mode,
+            &self.cfg.system,
+            self.cfg.seed ^ 0xFEA7,
+        )?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(mode: AccessMode) -> RunConfig {
+        RunConfig {
+            dataset: "product".into(),
+            mode,
+            scale: 2048,
+            feature_budget: 8 << 20,
+            steps_per_epoch: 3,
+            skip_train: true, // unit tests stay PJRT-free; integration covers it
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn epoch_accounting_pyd_beats_py() {
+        let mut t = Trainer::new(small_cfg(AccessMode::CpuGather)).unwrap();
+        let py = t.run_epoch().unwrap();
+        t.set_mode(AccessMode::UnifiedAligned).unwrap();
+        let pyd = t.run_epoch().unwrap();
+        assert_eq!(py.steps, 3);
+        assert!(py.breakdown_sim.transfer_s > pyd.breakdown_sim.transfer_s);
+        assert!(py.cpu_gather_s > 0.0);
+        assert_eq!(pyd.cpu_gather_s, 0.0);
+    }
+
+    #[test]
+    fn measured_side_really_moves_bytes() {
+        let mut t = Trainer::new(small_cfg(AccessMode::UnifiedAligned)).unwrap();
+        let r = t.run_epoch().unwrap();
+        assert!(r.breakdown_measured.sample_s > 0.0);
+        assert!(r.breakdown_measured.transfer_s > 0.0);
+        assert!(r.bytes_on_link > 0);
+    }
+
+    #[test]
+    fn unknown_dataset_rejected() {
+        let mut cfg = small_cfg(AccessMode::CpuGather);
+        cfg.dataset = "imagenet".into();
+        assert!(Trainer::new(cfg).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Simulated GPU device model.
+//!
+//! We have no GPU in this environment; what the paper's contribution needs
+//! from one is (a) the *memory request stream* its gather kernels generate —
+//! modeled bit-exactly in [`warp`] — and (b) per-launch overheads — constants
+//! in [`crate::config::SystemProfile`].  Actual numerics run on the PJRT CPU
+//! client (see [`crate::runtime`]).
+
+pub mod warp;
+
+pub use warp::{count_requests, count_requests_naive_ref, per_row_requests, GatherTraffic};

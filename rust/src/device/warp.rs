@@ -1,0 +1,468 @@
+//! Warp-level PCIe request coalescing model — paper §4.5 / Fig. 4 & 5.
+//!
+//! This mirrors the Python specification in `python/compile/coalesce.py`
+//! (which in turn mirrors the circular-shift arithmetic in the Pallas
+//! gather kernel); the cross-language fixture test pins both to the same
+//! numbers, including the paper's Fig. 5 toy example (row 2 drops from 7 to
+//! 5 requests).
+//!
+//! Model: the indexing kernel assigns one thread per (row, feature) element,
+//! contiguously over the flattened access sequence.  Each warp issues one
+//! PCIe read request per *distinct cacheline* touched by its threads (Min et
+//! al. 2020).  The circular-shift optimization rotates each row's in-row
+//! access order by `s_r = (t_begin_r - row_start_r) mod cl` so interior
+//! warps see exactly one aligned cacheline window.
+//!
+//! [`count_requests`] is the O(#warps) production implementation used in the
+//! hot simulation path; [`count_requests_naive_ref`] is the obviously
+//! correct O(#elements) oracle the property tests compare against.
+
+/// Parameters of the access-generation model.
+#[derive(Clone, Copy, Debug)]
+pub struct WarpModel {
+    /// Threads per warp (32 on real hardware).
+    pub warp: u64,
+    /// Cacheline size in *elements* (128 B / 4 B = 32 on real hardware).
+    pub cl_elems: u64,
+    /// Element size in bytes (4 for f32 features).
+    pub elem_bytes: u64,
+}
+
+impl Default for WarpModel {
+    fn default() -> Self {
+        WarpModel {
+            warp: 32,
+            cl_elems: 32,
+            elem_bytes: 4,
+        }
+    }
+}
+
+impl WarpModel {
+    /// Whether the circular-shift optimization applies to a feature width.
+    ///
+    /// The paper's kernel "appl[ies] this optimization only when ... the
+    /// feature widths are not naturally aligned to 128-byte granularity";
+    /// we additionally require the row to span at least two cachelines —
+    /// for shorter rows the rotation's wrap segment can *fragment* accesses
+    /// (no interior warp exists to pay for the extra wrap line), which the
+    /// property tests demonstrate; an exhaustive scan (see
+    /// python/tests/test_coalesce.py) shows f >= 2*cl is violation-free.
+    pub fn shift_applies(&self, feat_elems: u64) -> bool {
+        feat_elems >= 2 * self.cl_elems && feat_elems % self.cl_elems != 0
+    }
+}
+
+/// Request statistics for one gather operation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GatherTraffic {
+    /// Total PCIe read requests issued.
+    pub requests: u64,
+    /// Distinct cachelines touched (a lower bound on `requests`).
+    pub cachelines: u64,
+    /// Bytes actually moved over the link: `requests * cacheline_bytes`
+    /// (includes I/O amplification from fragmentation).
+    pub bytes_moved: u64,
+    /// Bytes the application consumes: `rows * feat_elems * elem_bytes`.
+    pub useful_bytes: u64,
+}
+
+impl GatherTraffic {
+    /// I/O amplification factor (>= 1 in practice).
+    pub fn amplification(&self) -> f64 {
+        if self.useful_bytes == 0 {
+            1.0
+        } else {
+            self.bytes_moved as f64 / self.useful_bytes as f64
+        }
+    }
+}
+
+#[inline]
+fn shift_for(t_begin: u64, row_start: u64, cl: u64, shifted: bool) -> u64 {
+    if shifted {
+        // (t_begin - row_start) mod cl, computed without going negative.
+        // cl is a power of two (asserted by count_requests), so mod = mask.
+        let mask = cl - 1;
+        ((t_begin & mask) + cl - (row_start & mask)) & mask
+    } else {
+        0
+    }
+}
+
+/// Count the distinct cachelines hit by threads `[t_lo, t_hi)` of a row whose
+/// access function is `addr(t) = start + ((t - t_row + s) mod f)`.
+///
+/// The rotated in-row sequence consists of at most two contiguous address
+/// runs: positions `[0, f-s)` map to `[start+s, start+f)` and positions
+/// `[f-s, f)` wrap to `[start, start+s)`.  A warp covers a contiguous span
+/// of positions, so it intersects at most both runs; each intersection is an
+/// address interval whose cacheline span is closed-form.
+#[inline]
+fn row_warp_lines(
+    start: u64,
+    f: u64,
+    s: u64,
+    pos_lo: u64,
+    pos_hi: u64,
+    cl_shift: u32,
+    lines: &mut [(u64, u64); 2],
+) -> usize {
+    debug_assert!(s < f.max(1));
+    let mut n = 0;
+    // run A: positions [0, f-s) -> addresses [start+s, start+f)
+    let a_lo = pos_lo.min(f - s);
+    let a_hi = pos_hi.min(f - s);
+    if a_lo < a_hi {
+        let addr_lo = start + s + a_lo;
+        let addr_hi = start + s + a_hi; // exclusive
+        lines[n] = (addr_lo >> cl_shift, (addr_hi - 1) >> cl_shift);
+        n += 1;
+    }
+    // run B: positions [f-s, f) -> addresses [start, start+s)
+    let b_lo = pos_lo.max(f - s);
+    let b_hi = pos_hi;
+    if b_lo < b_hi {
+        let addr_lo = start + (b_lo - (f - s));
+        let addr_hi = start + (b_hi - (f - s));
+        lines[n] = (addr_lo >> cl_shift, (addr_hi - 1) >> cl_shift);
+        n += 1;
+    }
+    n
+}
+
+/// Production request counter: O(#warps) regardless of feature width.
+pub fn count_requests(idx: &[u32], feat_elems: u64, model: WarpModel, shifted: bool) -> GatherTraffic {
+    let WarpModel { warp, cl_elems: cl, elem_bytes } = model;
+    if feat_elems == 0 || idx.is_empty() {
+        return GatherTraffic::default();
+    }
+    assert!(
+        cl.is_power_of_two(),
+        "cacheline size must be a power of two"
+    );
+    let cl_shift = cl.trailing_zeros();
+    let f = feat_elems;
+    let mut requests: u64 = 0;
+
+    // Distinct cachelines across the whole gather (dedup identical rows and
+    // overlapping rows by sorting line intervals).
+    let mut row_line_ranges: Vec<(u64, u64)> = idx
+        .iter()
+        .map(|&r| {
+            let start = r as u64 * f;
+            (start >> cl_shift, (start + f - 1) >> cl_shift)
+        })
+        .collect();
+    row_line_ranges.sort_unstable();
+    let mut cachelines: u64 = 0;
+    let mut last_line: Option<u64> = None;
+    for (lo, hi) in row_line_ranges {
+        let lo_eff = match last_line {
+            Some(l) if l >= lo => {
+                if l >= hi {
+                    continue;
+                }
+                l + 1
+            }
+            _ => lo,
+        };
+        cachelines += hi - lo_eff + 1;
+        last_line = Some(match last_line {
+            Some(l) => l.max(hi),
+            None => hi,
+        });
+    }
+
+    // Per-warp distinct lines. Warps are windows of `warp` consecutive
+    // threads over the concatenated per-row position ranges; the row serving
+    // global thread `t` is simply `t / f`.
+    let total_threads = idx.len() as u64 * f;
+    let mut w_lo: u64 = 0;
+    let mut lines_buf: Vec<(u64, u64)> = Vec::with_capacity(8);
+    while w_lo < total_threads {
+        let w_hi = (w_lo + warp).min(total_threads);
+        lines_buf.clear();
+        let first_row = (w_lo / f) as usize;
+        let last_row = ((w_hi - 1) / f) as usize;
+        if first_row == last_row {
+            // Fast path (dominant when f >= warp): the warp touches one
+            // row, at most two address runs — count their line union
+            // without the buffer + sort machinery. ~3x on the fig6 grid.
+            let rft = first_row as u64 * f;
+            let start = idx[first_row] as u64 * f;
+            let s = shift_for(rft, start, cl, shifted) % f;
+            let mut two = [(0u64, 0u64); 2];
+            let n = row_warp_lines(start, f, s, w_lo - rft, w_hi - rft, cl_shift, &mut two);
+            requests += match n {
+                0 => 0,
+                1 => two[0].1 - two[0].0 + 1,
+                _ => {
+                    let (a, b) = if two[0].0 <= two[1].0 {
+                        (two[0], two[1])
+                    } else {
+                        (two[1], two[0])
+                    };
+                    if b.0 <= a.1 {
+                        a.1.max(b.1) - a.0 + 1 // overlapping/adjacent union
+                    } else {
+                        (a.1 - a.0 + 1) + (b.1 - b.0 + 1)
+                    }
+                }
+            };
+            w_lo = w_hi;
+            continue;
+        }
+        for rpos in first_row..=last_row {
+            let rft = rpos as u64 * f; // row's first global thread id
+            let start = idx[rpos] as u64 * f;
+            // (c + s) mod f only depends on s mod f, so reduce here; the
+            // naive reference applies the same reduction implicitly.
+            let s = shift_for(rft, start, cl, shifted) % f;
+            let pos_lo = w_lo.max(rft) - rft;
+            let pos_hi = w_hi.min(rft + f) - rft;
+            let mut two = [(0u64, 0u64); 2];
+            let n = row_warp_lines(start, f, s, pos_lo, pos_hi, cl_shift, &mut two);
+            for &(lo, hi) in &two[..n] {
+                lines_buf.push((lo, hi));
+            }
+        }
+        // count distinct lines across collected [lo, hi] ranges
+        lines_buf.sort_unstable();
+        let mut cnt: u64 = 0;
+        let mut last: Option<u64> = None;
+        for &(lo, hi) in &lines_buf {
+            let lo_eff = match last {
+                Some(l) if l >= lo => {
+                    if l >= hi {
+                        continue;
+                    }
+                    l + 1
+                }
+                _ => lo,
+            };
+            cnt += hi - lo_eff + 1;
+            last = Some(match last {
+                Some(l) => l.max(hi),
+                None => hi,
+            });
+        }
+        requests += cnt;
+        w_lo = w_hi;
+    }
+
+    GatherTraffic {
+        requests,
+        cachelines,
+        bytes_moved: requests * cl * elem_bytes,
+        useful_bytes: idx.len() as u64 * f * elem_bytes,
+    }
+}
+
+/// Obviously-correct O(#elements) reference (kept for the property tests and
+/// small fixtures; do not use in the simulation hot path).
+pub fn count_requests_naive_ref(
+    idx: &[u32],
+    feat_elems: u64,
+    model: WarpModel,
+    shifted: bool,
+) -> GatherTraffic {
+    use std::collections::HashSet;
+    let WarpModel { warp, cl_elems: cl, elem_bytes } = model;
+    if feat_elems == 0 || idx.is_empty() {
+        return GatherTraffic::default();
+    }
+    let f = feat_elems;
+    let mut requests = 0u64;
+    let mut all: HashSet<u64> = HashSet::new();
+    let mut warp_lines: HashSet<u64> = HashSet::new();
+    let mut n_in_warp = 0u64;
+    let mut t_begin = 0u64;
+    for &r in idx {
+        let start = r as u64 * f;
+        let s = shift_for(t_begin, start, cl, shifted);
+        for c in 0..f {
+            let addr = start + ((c + s) % f);
+            warp_lines.insert(addr / cl);
+            all.insert(addr / cl);
+            n_in_warp += 1;
+            if n_in_warp == warp {
+                requests += warp_lines.len() as u64;
+                warp_lines.clear();
+                n_in_warp = 0;
+            }
+        }
+        t_begin += f;
+    }
+    if n_in_warp > 0 {
+        requests += warp_lines.len() as u64;
+    }
+    GatherTraffic {
+        requests,
+        cachelines: all.len() as u64,
+        bytes_moved: requests * cl * elem_bytes,
+        useful_bytes: idx.len() as u64 * f * elem_bytes,
+    }
+}
+
+/// Per-row request attribution (paper Fig. 5 counts the requests servicing
+/// one row).  O(#elements); fixture-sized inputs only.
+pub fn per_row_requests(idx: &[u32], feat_elems: u64, model: WarpModel, shifted: bool) -> Vec<u64> {
+    use std::collections::HashMap;
+    use std::collections::HashSet;
+    let WarpModel { warp, cl_elems: cl, .. } = model;
+    let f = feat_elems;
+    let mut counts = vec![0u64; idx.len()];
+    if f == 0 || idx.is_empty() {
+        return counts;
+    }
+    // (addr, row position) pairs in thread order
+    let mut pairs: Vec<(u64, usize)> = Vec::with_capacity(idx.len() * f as usize);
+    let mut t_begin = 0u64;
+    for (rpos, &r) in idx.iter().enumerate() {
+        let start = r as u64 * f;
+        let s = shift_for(t_begin, start, cl, shifted);
+        for c in 0..f {
+            pairs.push((start + ((c + s) % f), rpos));
+        }
+        t_begin += f;
+    }
+    for chunk in pairs.chunks(warp as usize) {
+        let mut by_row: HashMap<usize, HashSet<u64>> = HashMap::new();
+        for &(addr, rpos) in chunk {
+            by_row.entry(rpos).or_default().insert(addr / cl);
+        }
+        for (rpos, lines) in by_row {
+            counts[rpos] += lines.len() as u64;
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert, Gen};
+
+    /// Paper Fig. 4/5 toy scaling: warp 4, cacheline 4 elements, 11 features.
+    fn fig5_model() -> WarpModel {
+        WarpModel {
+            warp: 4,
+            cl_elems: 4,
+            elem_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn fig5_row2_seven_to_five() {
+        let idx = [0u32, 2, 4];
+        let naive = per_row_requests(&idx, 11, fig5_model(), false);
+        let opt = per_row_requests(&idx, 11, fig5_model(), true);
+        assert_eq!(naive[1], 7, "paper Fig. 4: row 2 takes 7 requests naive");
+        assert_eq!(opt[1], 5, "paper Fig. 5: circular shift reduces to 5");
+    }
+
+    #[test]
+    fn fig5_totals_match_python_spec() {
+        // Pinned in python/tests/test_coalesce.py as well.
+        let idx = [0u32, 2, 4];
+        let naive = count_requests(&idx, 11, fig5_model(), false);
+        let opt = count_requests(&idx, 11, fig5_model(), true);
+        assert_eq!(naive.requests, 16);
+        assert_eq!(opt.requests, 13);
+        assert_eq!(naive.cachelines, opt.cachelines);
+    }
+
+    #[test]
+    fn fast_matches_naive_reference_on_fixtures() {
+        let model = WarpModel::default();
+        for f in [1u64, 7, 11, 31, 32, 33, 127, 128, 129, 513] {
+            for shifted in [false, true] {
+                let idx: Vec<u32> = vec![0, 5, 5, 17, 2, 900, 901, 3];
+                let a = count_requests(&idx, f, model, shifted);
+                let b = count_requests_naive_ref(&idx, f, model, shifted);
+                assert_eq!(a, b, "f={f} shifted={shifted}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_matches_naive_property() {
+        check(60, |g: &mut Gen| {
+            let f = g.usize_in(1, 200) as u64;
+            let n = g.usize_in(1, 50);
+            let idx = g.vec_u32(n, 0, 4000);
+            let model = WarpModel {
+                warp: *g.choose(&[4u64, 8, 16, 32]),
+                cl_elems: *g.choose(&[4u64, 8, 16, 32]),
+                elem_bytes: 4,
+            };
+            let shifted = g.bool();
+            let a = count_requests(&idx, f, model, shifted);
+            let b = count_requests_naive_ref(&idx, f, model, shifted);
+            prop_assert(a == b, format!("mismatch: {a:?} vs {b:?} (f={f}, idx={idx:?}, model={model:?}, shifted={shifted})"))
+        });
+    }
+
+    #[test]
+    fn shift_never_increases_requests_property() {
+        // Holds whenever the kernel's applicability gate passes (f >= cl);
+        // for sub-cacheline rows the gate keeps the naive schedule.
+        check(60, |g: &mut Gen| {
+            let n = g.usize_in(1, 40);
+            let idx = g.vec_u32(n, 0, 3000);
+            let cl = *g.choose(&[4u64, 8, 16, 32]);
+            let f = g.usize_in(2 * cl as usize, 150.max(2 * cl as usize)) as u64;
+            let model = WarpModel {
+                warp: cl,
+                cl_elems: cl,
+                elem_bytes: 4,
+            };
+            let naive = count_requests(&idx, f, model, false);
+            let opt = count_requests(&idx, f, model, model.shift_applies(f));
+            prop_assert(
+                opt.requests <= naive.requests && opt.cachelines == naive.cachelines,
+                format!("opt={opt:?} naive={naive:?} f={f} idx={idx:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn aligned_width_is_invariant_under_shift() {
+        let model = WarpModel::default();
+        let idx = [5u32, 1, 9, 3, 1000];
+        let a = count_requests(&idx, 128, model, false);
+        let b = count_requests(&idx, 128, model, true);
+        assert_eq!(a, b);
+        assert_eq!(a.amplification(), 1.0);
+    }
+
+    #[test]
+    fn misaligned_2052b_reduction_matches_fig7_shape() {
+        // 513 f32 = 2052 B rows: naive ~2 lines/warp, shifted ~1.
+        let model = WarpModel::default();
+        let mut rng = crate::util::Rng::new(0);
+        let idx: Vec<u32> = (0..64).map(|_| rng.gen_range(4_000_000) as u32).collect();
+        let naive = count_requests(&idx, 513, model, false);
+        let opt = count_requests(&idx, 513, model, true);
+        let ratio = naive.requests as f64 / opt.requests as f64;
+        assert!(ratio > 1.6 && ratio <= 2.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let model = WarpModel::default();
+        assert_eq!(count_requests(&[], 10, model, false).requests, 0);
+        assert_eq!(count_requests(&[1], 0, model, true).requests, 0);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let model = fig5_model();
+        let t = count_requests(&[0, 2], 11, model, false);
+        assert_eq!(t.useful_bytes, 2 * 11 * 4);
+        assert_eq!(t.bytes_moved, t.requests * 16);
+        assert!(t.bytes_moved >= t.useful_bytes);
+        assert!(t.amplification() >= 1.0);
+    }
+}

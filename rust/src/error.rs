@@ -1,0 +1,59 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the ptdirect library.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("device mismatch: {0}")]
+    Device(String),
+
+    /// Mirrors PyTorch-Direct's RuntimeError when unified-only APIs
+    /// (set_propagatedToCUDA, memAdvise) are invoked on non-unified tensors.
+    #[error("tensor is not unified: {0}")]
+    NotUnified(String),
+
+    #[error("dtype mismatch: expected {expected}, got {got}")]
+    DType { expected: String, got: String },
+
+    #[error("index out of bounds: {index} >= {bound}")]
+    IndexOutOfBounds { index: usize, bound: usize },
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("artifact `{0}` not found (run `make artifacts` first)")]
+    ArtifactMissing(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("pipeline error: {0}")]
+    Pipeline(String),
+
+    #[error("gpu memory exceeded: need {need} bytes, capacity {capacity}")]
+    GpuOom { need: u64, capacity: u64 },
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

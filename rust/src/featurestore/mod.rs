@@ -1,0 +1,23 @@
+//! Feature store: the node-feature table plus the paper's competing access
+//! designs behind one interface.
+//!
+//! | mode              | storage device | transfer model                       |
+//! |-------------------|----------------|--------------------------------------|
+//! | `CpuGather` (Py)  | cpu            | host gather -> pinned staging -> DMA |
+//! | `UnifiedNaive`    | unified        | zero-copy, unaligned warp stream     |
+//! | `UnifiedAligned`  | unified        | zero-copy + circular-shift (§4.5)    |
+//! | `Uvm`             | unified        | page-fault migration (§3 strawman)   |
+//! | `GpuResident`     | cuda           | in-memory (small graphs only)        |
+//!
+//! Feature values are synthesized deterministically per node such that the
+//! classification task is *learnable* (the first `classes` dimensions carry
+//! a noisy one-hot of the label) — the end-to-end example's loss curve is
+//! real learning, not noise fitting.
+
+pub mod staging;
+pub mod store;
+pub mod synth;
+
+pub use staging::StagingPool;
+pub use store::FeatureStore;
+pub use synth::SyntheticFeatures;

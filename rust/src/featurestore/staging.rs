@@ -1,0 +1,93 @@
+//! Pinned staging-buffer pool for the CPU-centric baseline (Fig. 2a, ②).
+//!
+//! The baseline PyTorch path gathers scattered rows into a host buffer
+//! before the DMA.  Allocating (and `cudaHostRegister`-ing) such buffers per
+//! step is expensive, so real frameworks reuse them; this pool does the
+//! same and exposes reuse statistics for the ablation bench.
+
+use std::sync::Mutex;
+
+/// Reusable staging buffers keyed by capacity.
+#[derive(Debug, Default)]
+pub struct StagingPool {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    buffers: Vec<Vec<f32>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl StagingPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a buffer with at least `len` elements (zero-length tail beyond
+    /// `len` is unspecified; callers overwrite).
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(pos) = inner.buffers.iter().position(|b| b.capacity() >= len) {
+            let mut buf = inner.buffers.swap_remove(pos);
+            buf.resize(len, 0.0);
+            inner.hits += 1;
+            buf
+        } else {
+            inner.misses += 1;
+            vec![0f32; len]
+        }
+    }
+
+    pub fn give(&self, buf: Vec<f32>) {
+        let mut inner = self.inner.lock().unwrap();
+        // Bound the pool: keep at most 4 buffers (mirrors a small ring of
+        // pinned buffers; unbounded pools would hide leaks).
+        if inner.buffers.len() < 4 {
+            inner.buffers.push(buf);
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.inner.lock().unwrap().hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.inner.lock().unwrap().misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuses_buffers() {
+        let p = StagingPool::new();
+        let b = p.take(1024);
+        p.give(b);
+        let b2 = p.take(512); // smaller fits in recycled capacity
+        assert_eq!(b2.len(), 512);
+        assert_eq!(p.hits(), 1);
+        assert_eq!(p.misses(), 1);
+    }
+
+    #[test]
+    fn grows_on_demand() {
+        let p = StagingPool::new();
+        p.give(p.take(16));
+        let big = p.take(1 << 16);
+        assert_eq!(big.len(), 1 << 16);
+        assert_eq!(p.misses(), 2);
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let p = StagingPool::new();
+        for _ in 0..10 {
+            p.give(vec![0f32; 8]);
+        }
+        assert!(p.inner.lock().unwrap().buffers.len() <= 4);
+    }
+}

@@ -1,0 +1,268 @@
+//! The unified feature store: one table, five access designs.
+
+use std::sync::Mutex;
+
+use crate::config::{AccessMode, SystemProfile};
+use crate::device::warp::{count_requests, WarpModel};
+use crate::error::{Error, Result};
+use crate::featurestore::staging::StagingPool;
+use crate::featurestore::synth::SyntheticFeatures;
+use crate::interconnect::{DmaEngine, PcieLink, TransferCost, UvmSpace};
+use crate::tensor::{Device, Tensor};
+use crate::util::timer::Timer;
+
+/// Node-feature table + access-mode machinery.
+pub struct FeatureStore {
+    table: Tensor,
+    synth: SyntheticFeatures,
+    rows: usize,
+    mode: AccessMode,
+    sys: SystemProfile,
+    staging: StagingPool,
+    uvm: Option<Mutex<UvmSpace>>,
+    /// Cumulative measured CPU seconds spent in real gathers (diagnostic).
+    measured_gather: Mutex<f64>,
+}
+
+impl FeatureStore {
+    /// Build a store of `rows` synthesized feature rows.
+    ///
+    /// `GpuResident` enforces the GPU memory capacity — requesting it for a
+    /// table larger than the device is exactly the out-of-memory wall that
+    /// motivates the paper (§2.2), surfaced as [`Error::GpuOom`].
+    pub fn build(
+        rows: usize,
+        dim: usize,
+        classes: u32,
+        mode: AccessMode,
+        sys: &SystemProfile,
+        seed: u64,
+    ) -> Result<FeatureStore> {
+        let bytes = rows as u64 * dim as u64 * 4;
+        if mode == AccessMode::GpuResident && bytes > sys.gpu_mem_bytes {
+            return Err(Error::GpuOom {
+                need: bytes,
+                capacity: sys.gpu_mem_bytes,
+            });
+        }
+        let synth = SyntheticFeatures::new(dim, classes, seed);
+        let data = synth.build_table(rows);
+        let device = match mode {
+            AccessMode::CpuGather => Device::Cpu,
+            AccessMode::GpuResident => Device::Cuda,
+            _ => Device::Unified, // Listing 2: dataload().to("unified")
+        };
+        let table = Tensor::from_f32(&data, &[rows, dim], device)?;
+        let uvm = if mode == AccessMode::Uvm {
+            Some(Mutex::new(UvmSpace::new(sys, 0.5)))
+        } else {
+            None
+        };
+        Ok(FeatureStore {
+            table,
+            synth,
+            rows,
+            mode,
+            sys: sys.clone(),
+            staging: StagingPool::new(),
+            uvm,
+            measured_gather: Mutex::new(0.0),
+        })
+    }
+
+    pub fn mode(&self) -> AccessMode {
+        self.mode
+    }
+
+    pub fn dim(&self) -> usize {
+        self.synth.dim
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn table(&self) -> &Tensor {
+        &self.table
+    }
+
+    pub fn label(&self, node: u32) -> i32 {
+        self.synth.label(node)
+    }
+
+    pub fn table_bytes(&self) -> u64 {
+        self.rows as u64 * self.synth.dim as u64 * 4
+    }
+
+    pub fn measured_gather_s(&self) -> f64 {
+        *self.measured_gather.lock().unwrap()
+    }
+
+    /// Staging-pool reuse statistics (CpuGather mode; ablation D).
+    pub fn staging_hits(&self) -> u64 {
+        self.staging.hits()
+    }
+
+    pub fn staging_misses(&self) -> u64 {
+        self.staging.misses()
+    }
+
+    /// Gather `idx` rows into `out` (len == idx.len()*dim), returning the
+    /// simulated transfer cost for this store's access mode.
+    pub fn gather_into(&self, idx: &[u32], out: &mut [f32]) -> Result<TransferCost> {
+        let f = self.synth.dim;
+        if out.len() != idx.len() * f {
+            return Err(Error::Shape(format!(
+                "out len {} != {}x{f}",
+                out.len(),
+                idx.len()
+            )));
+        }
+        if let Some(&bad) = idx.iter().find(|&&i| i as usize >= self.rows) {
+            return Err(Error::IndexOutOfBounds {
+                index: bad as usize,
+                bound: self.rows,
+            });
+        }
+        let row_bytes = (f * 4) as u64;
+        let src = self.table.f32_data();
+
+        let cost = match self.mode {
+            AccessMode::CpuGather => {
+                // ① gather into the pinned staging buffer (real memcpys)
+                let timer = Timer::start();
+                let mut staging = self.staging.take(idx.len() * f);
+                crate::tensor::indexing::gather_rows_into(src, f, idx, &mut staging);
+                // ④ DMA lands the contiguous buffer in device memory
+                out.copy_from_slice(&staging);
+                self.staging.give(staging);
+                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
+                DmaEngine::new(&self.sys).cpu_gather_transfer(idx.len() as u64, row_bytes)
+            }
+            AccessMode::UnifiedNaive | AccessMode::UnifiedAligned => {
+                // GPU zero-copy: device fetches rows directly; no staging.
+                let timer = Timer::start();
+                crate::tensor::indexing::gather_rows_into(src, f, idx, out);
+                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
+                let model = WarpModel::default();
+                let shifted =
+                    self.mode == AccessMode::UnifiedAligned && model.shift_applies(f as u64);
+                let traffic = count_requests(idx, f as u64, model, shifted);
+                PcieLink::new(&self.sys).direct_gather(&traffic)
+            }
+            AccessMode::Uvm => {
+                let timer = Timer::start();
+                crate::tensor::indexing::gather_rows_into(src, f, idx, out);
+                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
+                let mut uvm = self.uvm.as_ref().unwrap().lock().unwrap();
+                let mut c = uvm.access_rows(idx, row_bytes);
+                // after migration the GPU still runs the gather kernel
+                c.time_s += self.sys.kernel_launch_s;
+                c
+            }
+            AccessMode::GpuResident => {
+                let timer = Timer::start();
+                crate::tensor::indexing::gather_rows_into(src, f, idx, out);
+                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
+                TransferCost {
+                    time_s: self.sys.kernel_launch_s,
+                    bytes_on_link: 0,
+                    useful_bytes: idx.len() as u64 * row_bytes,
+                    requests: 0,
+                    cpu_time_s: 0.0,
+                }
+            }
+        };
+        Ok(cost)
+    }
+
+    /// Convenience: gather into a fresh Vec.
+    pub fn gather(&self, idx: &[u32]) -> Result<(Vec<f32>, TransferCost)> {
+        let mut out = vec![0f32; idx.len() * self.synth.dim];
+        let cost = self.gather_into(idx, &mut out)?;
+        Ok((out, cost))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> SystemProfile {
+        SystemProfile::system1()
+    }
+
+    fn store(mode: AccessMode) -> FeatureStore {
+        FeatureStore::build(500, 24, 8, mode, &sys(), 42).unwrap()
+    }
+
+    #[test]
+    fn all_modes_return_identical_values() {
+        // The access mode must never change numerics — only cost.
+        let idx: Vec<u32> = vec![5, 499, 5, 0, 123];
+        let reference = store(AccessMode::CpuGather).gather(&idx).unwrap().0;
+        for mode in [
+            AccessMode::UnifiedNaive,
+            AccessMode::UnifiedAligned,
+            AccessMode::Uvm,
+            AccessMode::GpuResident,
+        ] {
+            let (vals, _) = store(mode).gather(&idx).unwrap();
+            assert_eq!(vals, reference, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn gathered_rows_match_synth() {
+        let st = store(AccessMode::UnifiedAligned);
+        let (vals, _) = st.gather(&[7]).unwrap();
+        let mut want = vec![0f32; 24];
+        SyntheticFeatures::new(24, 8, 42).fill_row(7, &mut want);
+        assert_eq!(vals, want);
+    }
+
+    #[test]
+    fn gpu_resident_respects_capacity() {
+        let mut small_sys = sys();
+        small_sys.gpu_mem_bytes = 1024; // 1 KiB GPU
+        let err = FeatureStore::build(500, 24, 8, AccessMode::GpuResident, &small_sys, 1);
+        assert!(matches!(err, Err(Error::GpuOom { .. })));
+        // the unified store has no such limit — the paper's point
+        assert!(FeatureStore::build(500, 24, 8, AccessMode::UnifiedAligned, &small_sys, 1).is_ok());
+    }
+
+    #[test]
+    fn baseline_costs_cpu_time_unified_does_not() {
+        let idx: Vec<u32> = (0..100).collect();
+        let (_, py) = store(AccessMode::CpuGather).gather(&idx).unwrap();
+        let (_, pyd) = store(AccessMode::UnifiedAligned).gather(&idx).unwrap();
+        assert!(py.cpu_time_s > 0.0);
+        assert_eq!(pyd.cpu_time_s, 0.0);
+        assert!(py.time_s > pyd.time_s);
+    }
+
+    #[test]
+    fn uvm_warm_epoch_cheaper_than_cold() {
+        let st = store(AccessMode::Uvm);
+        let idx: Vec<u32> = (0..200).collect();
+        let (_, cold) = st.gather(&idx).unwrap();
+        let (_, warm) = st.gather(&idx).unwrap();
+        assert!(warm.time_s < cold.time_s);
+    }
+
+    #[test]
+    fn staging_pool_reused_across_steps() {
+        let st = store(AccessMode::CpuGather);
+        let idx: Vec<u32> = (0..64).collect();
+        st.gather(&idx).unwrap();
+        st.gather(&idx).unwrap();
+        st.gather(&idx).unwrap();
+        assert!(st.staging.hits() >= 2);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let st = store(AccessMode::UnifiedAligned);
+        assert!(st.gather(&[500]).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Compressed-sparse-row graph storage.
+//!
+//! Node ids are `u32` (the paper's largest graph, ogbn-papers100M, has
+//! 111 M nodes — fits comfortably), edge offsets are `u64` (1.9 B edges in
+//! sk-2005 would overflow u32).
+
+use crate::error::{Error, Result};
+
+/// Immutable CSR adjacency.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    /// `indptr[v]..indptr[v+1]` spans v's neighbor list in `indices`.
+    pub indptr: Vec<u64>,
+    pub indices: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an edge list (src, dst). Parallel edges are kept
+    /// (real-world crawls have them; sampling treats them as weight).
+    pub fn from_edges(n_nodes: usize, edges: &[(u32, u32)]) -> Result<Csr> {
+        let mut degree = vec![0u64; n_nodes];
+        for &(s, d) in edges {
+            if s as usize >= n_nodes || d as usize >= n_nodes {
+                return Err(Error::Graph(format!(
+                    "edge ({s},{d}) out of range for {n_nodes} nodes"
+                )));
+            }
+            degree[s as usize] += 1;
+        }
+        let mut indptr = vec![0u64; n_nodes + 1];
+        for v in 0..n_nodes {
+            indptr[v + 1] = indptr[v] + degree[v];
+        }
+        let mut cursor = indptr.clone();
+        let mut indices = vec![0u32; edges.len()];
+        for &(s, d) in edges {
+            let c = &mut cursor[s as usize];
+            indices[*c as usize] = d;
+            *c += 1;
+        }
+        Ok(Csr { indptr, indices })
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.indices.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.indptr[v as usize + 1] - self.indptr[v as usize]) as usize
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let lo = self.indptr[v as usize] as usize;
+        let hi = self.indptr[v as usize + 1] as usize;
+        &self.indices[lo..hi]
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_nodes() == 0 {
+            0.0
+        } else {
+            self.num_edges() as f64 / self.num_nodes() as f64
+        }
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_nodes() as u32)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Structural invariants; used by tests and after deserialization.
+    pub fn validate(&self) -> Result<()> {
+        if self.indptr.is_empty() {
+            return Err(Error::Graph("empty indptr".into()));
+        }
+        if self.indptr[0] != 0 {
+            return Err(Error::Graph("indptr[0] != 0".into()));
+        }
+        if !self.indptr.windows(2).all(|w| w[0] <= w[1]) {
+            return Err(Error::Graph("indptr not monotone".into()));
+        }
+        if *self.indptr.last().unwrap() as usize != self.indices.len() {
+            return Err(Error::Graph("indptr tail != |indices|".into()));
+        }
+        let n = self.num_nodes() as u32;
+        if let Some(&bad) = self.indices.iter().find(|&&d| d >= n) {
+            return Err(Error::Graph(format!("neighbor {bad} >= {n}")));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert, Gen};
+
+    fn diamond() -> Csr {
+        // 0 -> 1,2 ; 1 -> 3 ; 2 -> 3 ; 3 -> (none)
+        Csr::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3)]).unwrap()
+    }
+
+    #[test]
+    fn basic_topology() {
+        let g = diamond();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[3]);
+        assert_eq!(g.neighbors(3), &[] as &[u32]);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.max_degree(), 2);
+        assert!((g.avg_degree() - 1.0).abs() < 1e-12);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn preserves_parallel_edges() {
+        let g = Csr::from_edges(2, &[(0, 1), (0, 1)]).unwrap();
+        assert_eq!(g.neighbors(0), &[1, 1]);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(Csr::from_edges(2, &[(0, 5)]).is_err());
+        assert!(Csr::from_edges(2, &[(5, 0)]).is_err());
+    }
+
+    #[test]
+    fn from_edges_is_valid_property() {
+        check(40, |g: &mut Gen| {
+            let n = g.usize_in(1, 60);
+            let m = g.usize_in(0, 200);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| {
+                    (
+                        g.usize_in(0, n - 1) as u32,
+                        g.usize_in(0, n - 1) as u32,
+                    )
+                })
+                .collect();
+            let csr = Csr::from_edges(n, &edges).unwrap();
+            csr.validate().map_err(|e| e.to_string())?;
+            prop_assert(csr.num_edges() == m, "edge count preserved")?;
+            // every input edge appears exactly as often as given
+            let mut want = std::collections::HashMap::new();
+            for &e in &edges {
+                *want.entry(e).or_insert(0i64) += 1;
+            }
+            for v in 0..n as u32 {
+                for &d in csr.neighbors(v) {
+                    *want.entry((v, d)).or_insert(0) -= 1;
+                }
+            }
+            prop_assert(want.values().all(|&c| c == 0), "multiset equality")
+        });
+    }
+}

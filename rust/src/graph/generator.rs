@@ -1,0 +1,134 @@
+//! Synthetic graph generators.
+//!
+//! The paper's large graphs (twitter7, sk-2005, ogbn-papers100M, wikipedia)
+//! are web/social crawls with heavy-tailed degree distributions.  What the
+//! gather-traffic experiments depend on is the *degree distribution* and
+//! *edge locality*, both of which R-MAT (Chakrabarti et al. 2004) captures
+//! with four quadrant probabilities; (0.57, 0.19, 0.19, 0.05) is the
+//! standard "social network" parameterization the Graph500 uses.
+
+use crate::error::Result;
+use crate::graph::csr::Csr;
+use crate::util::rng::Rng;
+
+/// R-MAT quadrant probabilities (must sum to 1).
+#[derive(Clone, Copy, Debug)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+    /// Noise added per recursion level to avoid exact self-similarity.
+    pub noise: f64,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        RmatParams {
+            a: 0.57,
+            b: 0.19,
+            c: 0.19,
+            d: 0.05,
+            noise: 0.1,
+        }
+    }
+}
+
+/// Generate an R-MAT graph with `n_nodes` (rounded up to a power of two
+/// internally, then mapped down) and `n_edges` directed edges.
+pub fn rmat(n_nodes: usize, n_edges: usize, params: RmatParams, seed: u64) -> Result<Csr> {
+    assert!(n_nodes > 0);
+    let levels = (usize::BITS - (n_nodes - 1).leading_zeros()).max(1);
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(n_edges);
+    while edges.len() < n_edges {
+        let (mut src, mut dst) = (0usize, 0usize);
+        // Per-edge jittered quadrant probabilities.
+        let jitter = 1.0 + params.noise * (rng.gen_f64() - 0.5);
+        let a = params.a * jitter;
+        let b = params.b;
+        let c = params.c;
+        let norm = a + b + c + params.d * (2.0 - jitter);
+        for _ in 0..levels {
+            let r = rng.gen_f64() * norm;
+            let (sbit, dbit) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            src = (src << 1) | sbit;
+            dst = (dst << 1) | dbit;
+        }
+        if src < n_nodes && dst < n_nodes && src != dst {
+            edges.push((src as u32, dst as u32));
+        }
+    }
+    Csr::from_edges(n_nodes, &edges)
+}
+
+/// Erdős–Rényi-ish uniform random graph (baseline for locality ablations).
+pub fn uniform(n_nodes: usize, n_edges: usize, seed: u64) -> Result<Csr> {
+    let mut rng = Rng::new(seed);
+    let edges: Vec<(u32, u32)> = (0..n_edges)
+        .map(|_| {
+            (
+                rng.gen_range(n_nodes as u64) as u32,
+                rng.gen_range(n_nodes as u64) as u32,
+            )
+        })
+        .collect();
+    Csr::from_edges(n_nodes, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_produces_requested_size() {
+        let g = rmat(1000, 8000, RmatParams::default(), 7).unwrap();
+        assert_eq!(g.num_nodes(), 1000);
+        assert_eq!(g.num_edges(), 8000);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn rmat_is_deterministic() {
+        let a = rmat(500, 2000, RmatParams::default(), 9).unwrap();
+        let b = rmat(500, 2000, RmatParams::default(), 9).unwrap();
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.indptr, b.indptr);
+    }
+
+    #[test]
+    fn rmat_is_heavy_tailed_vs_uniform() {
+        // The social-network parameterization concentrates edges: the top 1%
+        // of nodes should own far more than 1% of edges, unlike uniform.
+        let n = 4096;
+        let m = 65_536;
+        let r = rmat(n, m, RmatParams::default(), 3).unwrap();
+        let u = uniform(n, m, 3).unwrap();
+        let top_share = |g: &Csr| {
+            let mut degs: Vec<usize> = (0..n as u32).map(|v| g.degree(v)).collect();
+            degs.sort_unstable_by(|a, b| b.cmp(a));
+            let top: usize = degs[..n / 100].iter().sum();
+            top as f64 / g.num_edges() as f64
+        };
+        let rs = top_share(&r);
+        let us = top_share(&u);
+        assert!(rs > 2.0 * us, "rmat top-1% share {rs} vs uniform {us}");
+        assert!(r.max_degree() > 4 * u.max_degree());
+    }
+
+    #[test]
+    fn no_self_loops_in_rmat() {
+        let g = rmat(256, 4096, RmatParams::default(), 5).unwrap();
+        for v in 0..g.num_nodes() as u32 {
+            assert!(!g.neighbors(v).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Binary on-disk graph format (magic + version + little-endian arrays).
+//!
+//! Lets expensive generator runs be cached across benchmark invocations
+//! (`ptdirect gen-data` writes, everything else mmap-free reads).
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::graph::csr::Csr;
+
+const MAGIC: &[u8; 8] = b"PTDCSR01";
+
+/// Write a CSR graph.
+pub fn save(csr: &Csr, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(csr.num_nodes() as u64).to_le_bytes())?;
+    w.write_all(&(csr.num_edges() as u64).to_le_bytes())?;
+    for &p in &csr.indptr {
+        w.write_all(&p.to_le_bytes())?;
+    }
+    for &i in &csr.indices {
+        w.write_all(&i.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a CSR graph, validating invariants.
+pub fn load(path: &Path) -> Result<Csr> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Graph(format!(
+            "bad magic in {}: expected PTDCSR01",
+            path.display()
+        )));
+    }
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    r.read_exact(&mut buf8)?;
+    let m = u64::from_le_bytes(buf8) as usize;
+    let mut indptr = vec![0u64; n + 1];
+    for p in indptr.iter_mut() {
+        r.read_exact(&mut buf8)?;
+        *p = u64::from_le_bytes(buf8);
+    }
+    let mut buf4 = [0u8; 4];
+    let mut indices = vec![0u32; m];
+    for i in indices.iter_mut() {
+        r.read_exact(&mut buf4)?;
+        *i = u32::from_le_bytes(buf4);
+    }
+    let csr = Csr { indptr, indices };
+    csr.validate()?;
+    Ok(csr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{rmat, RmatParams};
+
+    #[test]
+    fn roundtrip() {
+        let g = rmat(300, 2400, RmatParams::default(), 11).unwrap();
+        let dir = std::env::temp_dir().join("ptdirect_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.csr");
+        save(&g, &path).unwrap();
+        let h = load(&path).unwrap();
+        assert_eq!(g.indptr, h.indptr);
+        assert_eq!(g.indices, h.indices);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("ptdirect_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.csr");
+        std::fs::write(&path, b"not a graph").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,11 @@
+//! Graph substrate: CSR storage, synthetic generators, dataset presets
+//! (paper Table 4), and a binary on-disk format.
+
+pub mod csr;
+pub mod datasets;
+pub mod generator;
+pub mod io;
+
+pub use csr::Csr;
+pub use datasets::DatasetPreset;
+pub use generator::{rmat, RmatParams};

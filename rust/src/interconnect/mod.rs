@@ -1,0 +1,46 @@
+//! Host↔GPU interconnect simulator.
+//!
+//! Produces *simulated* durations (plain `f64` seconds, DESIGN.md §5) for
+//! the three transfer designs the paper compares:
+//!
+//! * [`dma`] — the CPU-centric baseline: gather into pinned staging, then a
+//!   contiguous `cudaMemcpy` DMA (paper Fig. 2a, steps ①–④).
+//! * [`pcie`] — GPU-centric zero-copy reads driven by the warp request
+//!   stream (paper Fig. 2b), naive or circular-shift aligned.
+//! * [`uvm`] — page-migration unified memory (the §3 strawman), with fault
+//!   cost and page-granularity I/O amplification.
+
+pub mod dma;
+pub mod pcie;
+pub mod uvm;
+
+pub use dma::DmaEngine;
+pub use pcie::PcieLink;
+pub use uvm::UvmSpace;
+
+/// Outcome of one simulated transfer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransferCost {
+    /// Simulated wall-clock on the transfer path, seconds.
+    pub time_s: f64,
+    /// Bytes that crossed the link (including amplification).
+    pub bytes_on_link: u64,
+    /// Bytes the consumer asked for.
+    pub useful_bytes: u64,
+    /// Link-level read requests (zero-copy paths) or DMA descriptors.
+    pub requests: u64,
+    /// Seconds of *CPU* time this path consumed (gather/staging work);
+    /// feeds the utilization + power model.
+    pub cpu_time_s: f64,
+}
+
+impl TransferCost {
+    /// Effective throughput seen by the consumer.
+    pub fn effective_bw(&self) -> f64 {
+        if self.time_s > 0.0 {
+            self.useful_bytes as f64 / self.time_s
+        } else {
+            0.0
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! PCIe link model for GPU zero-copy ("direct") host-memory reads.
+//!
+//! Modern GPUs can dereference unified pointers and issue PCIe read I/O
+//! directly (paper §3).  The achievable throughput is governed by how well
+//! the warp-level accesses coalesce into 128-byte request windows — which is
+//! exactly what [`crate::device::warp`] counts.  The link model converts a
+//! [`GatherTraffic`] into time:
+//!
+//!   time = max(bandwidth-bound, request-rate-bound) + kernel launch
+//!
+//! where the bandwidth bound uses the bytes *on the link* (amplified by
+//! fragmentation) against `peak_bw * direct_efficiency`, and the request
+//! bound models the link's finite outstanding-read slots as a residual
+//! per-request cost.
+
+use crate::config::{PcieConfig, SystemProfile};
+use crate::device::warp::GatherTraffic;
+use crate::interconnect::TransferCost;
+
+/// Zero-copy read path over PCIe.
+#[derive(Clone, Debug)]
+pub struct PcieLink {
+    cfg: PcieConfig,
+    kernel_launch_s: f64,
+}
+
+impl PcieLink {
+    pub fn new(sys: &SystemProfile) -> Self {
+        PcieLink {
+            cfg: sys.pcie.clone(),
+            kernel_launch_s: sys.kernel_launch_s,
+        }
+    }
+
+    pub fn config(&self) -> &PcieConfig {
+        &self.cfg
+    }
+
+    /// The "ideal" transfer of paper Fig. 6: pure payload at theoretical peak.
+    pub fn ideal(&self, useful_bytes: u64) -> TransferCost {
+        TransferCost {
+            time_s: useful_bytes as f64 / self.cfg.peak_bw,
+            bytes_on_link: useful_bytes,
+            useful_bytes,
+            requests: useful_bytes / self.cfg.cacheline_bytes.max(1),
+            cpu_time_s: 0.0,
+        }
+    }
+
+    /// Zero-copy gather driven by a warp request stream.
+    ///
+    /// The GPU L2 absorbs a fraction of the *duplicate* line traffic that
+    /// misaligned streams generate (adjacent warps straddling one line), so
+    /// the bandwidth bound uses the merged byte count; the full request
+    /// count still pays the issue cost.
+    pub fn direct_gather(&self, traffic: &GatherTraffic) -> TransferCost {
+        let bw = self.cfg.peak_bw * self.cfg.direct_efficiency;
+        let excess = traffic.bytes_moved.saturating_sub(traffic.useful_bytes) as f64;
+        let effective_bytes =
+            traffic.useful_bytes as f64 + excess * (1.0 - self.cfg.l2_merge_fraction);
+        let bw_bound = effective_bytes / bw;
+        let req_bound = traffic.requests as f64 * self.cfg.request_issue_s;
+        TransferCost {
+            time_s: bw_bound.max(req_bound) + self.kernel_launch_s,
+            bytes_on_link: effective_bytes as u64,
+            useful_bytes: traffic.useful_bytes,
+            requests: traffic.requests,
+            // Zero CPU involvement — the paper's headline property.
+            cpu_time_s: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::warp::{count_requests, WarpModel};
+
+    fn link() -> PcieLink {
+        PcieLink::new(&SystemProfile::system1())
+    }
+
+    #[test]
+    fn ideal_is_payload_over_peak() {
+        let c = link().ideal(15_750_000_000);
+        assert!((c.time_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aligned_direct_is_near_ideal_for_wide_rows() {
+        // Paper Fig. 6: PyD within 1.03x–1.20x of ideal except tiny transfers.
+        let l = link();
+        let idx: Vec<u32> = (0..32_768u32).map(|i| i * 7 % 100_000).collect();
+        let feat_elems = 1024; // 4 KiB rows
+        let t = count_requests(&idx, feat_elems, WarpModel::default(), true);
+        let direct = l.direct_gather(&t);
+        let ideal = l.ideal(t.useful_bytes);
+        let slowdown = direct.time_s / ideal.time_s;
+        assert!(slowdown > 1.0 && slowdown < 1.25, "slowdown={slowdown}");
+    }
+
+    #[test]
+    fn tiny_transfers_dominated_by_launch_overhead() {
+        // Paper §5.2: "when the total data transfer volume is very small, the
+        // overall execution time is dominated by the CUDA API calls and
+        // kernel launch overheads."
+        let l = link();
+        let idx = [1u32, 2, 3, 4];
+        let t = count_requests(&idx, 64, WarpModel::default(), true);
+        let direct = l.direct_gather(&t);
+        assert!(direct.time_s > 0.9 * l.kernel_launch_s);
+        let ideal = l.ideal(t.useful_bytes);
+        assert!(direct.time_s / ideal.time_s > 2.0);
+    }
+
+    #[test]
+    fn fragmentation_costs_bandwidth() {
+        let l = link();
+        let idx: Vec<u32> = (0..4096u32).map(|i| i.wrapping_mul(2654435761) % 500_000).collect();
+        let naive = count_requests(&idx, 513, WarpModel::default(), false);
+        let opt = count_requests(&idx, 513, WarpModel::default(), true);
+        let t_naive = l.direct_gather(&naive).time_s;
+        let t_opt = l.direct_gather(&opt).time_s;
+        // paper Fig. 7: opt/naive time ratio ~1.67x at 2052 B (1.95/1.17);
+        // this fixture's hashed index set coalesces better than the Fig. 7
+        // uniform draw, so the gap here is smaller — the figure-level band
+        // is asserted by `cargo bench --bench fig7_alignment`.
+        assert!(t_naive / t_opt > 1.2, "ratio={}", t_naive / t_opt);
+    }
+
+    #[test]
+    fn zero_copy_uses_no_cpu() {
+        let l = link();
+        let t = count_requests(&[1, 2, 3], 128, WarpModel::default(), true);
+        assert_eq!(l.direct_gather(&t).cpu_time_s, 0.0);
+    }
+}

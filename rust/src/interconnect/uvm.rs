@@ -1,0 +1,161 @@
+//! UVM page-migration model — the paper's §3 strawman.
+//!
+//! Conventional unified virtual memory moves data at page granularity
+//! (>= 4 KiB) and services misses through a host interrupt path.  For
+//! irregular gathers this causes (a) heavy I/O amplification — a 2 KiB
+//! feature row can fault in an entire 4 KiB page, or two — and (b) a
+//! per-fault service cost orders of magnitude above a PCIe read request
+//! (Gera et al. 2020; Min et al. 2020).  `UvmSpace` keeps an LRU resident
+//! set sized to the GPU memory so repeated epochs model page reuse and
+//! thrashing.
+
+use std::collections::HashMap;
+
+use crate::config::SystemProfile;
+use crate::interconnect::TransferCost;
+use crate::util::bytes::span_units;
+
+/// Page-migration managed address space.
+#[derive(Debug)]
+pub struct UvmSpace {
+    page_bytes: u64,
+    fault_s: f64,
+    bw: f64,
+    capacity_pages: u64,
+    /// page id -> LRU tick
+    resident: HashMap<u64, u64>,
+    tick: u64,
+    pub faults_total: u64,
+    pub evictions_total: u64,
+}
+
+impl UvmSpace {
+    /// `resident_fraction` — fraction of GPU memory available for the
+    /// feature pages (the rest holds model state and activations).
+    pub fn new(sys: &SystemProfile, resident_fraction: f64) -> Self {
+        let cap_bytes = (sys.gpu_mem_bytes as f64 * resident_fraction.clamp(0.01, 1.0)) as u64;
+        UvmSpace {
+            page_bytes: sys.uvm_page_bytes,
+            fault_s: sys.uvm_fault_s,
+            bw: sys.pcie.peak_bw * sys.pcie.dma_efficiency,
+            capacity_pages: (cap_bytes / sys.uvm_page_bytes).max(1),
+            resident: HashMap::new(),
+            tick: 0,
+            faults_total: 0,
+            evictions_total: 0,
+        }
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    pub fn resident_pages(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Access `rows` whose byte extents are produced by the caller;
+    /// returns the simulated cost of the induced faults + migrations.
+    pub fn access_rows(&mut self, idx: &[u32], row_bytes: u64) -> TransferCost {
+        let mut faults = 0u64;
+        let mut migrated_pages = 0u64;
+        for &r in idx {
+            let off = r as u64 * row_bytes;
+            let first = off / self.page_bytes;
+            let n = span_units(off, row_bytes, self.page_bytes);
+            for p in first..first + n {
+                self.tick += 1;
+                if self.resident.contains_key(&p) {
+                    self.resident.insert(p, self.tick); // LRU touch
+                } else {
+                    faults += 1;
+                    migrated_pages += 1;
+                    self.insert_with_eviction(p);
+                }
+            }
+        }
+        self.faults_total += faults;
+        let moved = migrated_pages * self.page_bytes;
+        let useful = idx.len() as u64 * row_bytes;
+        TransferCost {
+            // Fault service costs overlap only partially; model them serial
+            // per fault group of 8 (driver batches nearby faults).
+            time_s: (faults as f64 / 8.0).ceil() * self.fault_s + moved as f64 / self.bw,
+            bytes_on_link: moved,
+            useful_bytes: useful,
+            requests: faults,
+            cpu_time_s: (faults as f64 / 8.0).ceil() * self.fault_s * 0.5, // interrupt handling
+        }
+    }
+
+    fn insert_with_eviction(&mut self, page: u64) {
+        if self.resident.len() as u64 >= self.capacity_pages {
+            // Evict the least recently used page (linear scan is fine: the
+            // map is bounded by capacity_pages and eviction is the rare path
+            // in the benchmarks; see EXPERIMENTS.md §Perf).
+            if let Some((&victim, _)) = self.resident.iter().min_by_key(|(_, &t)| t) {
+                self.resident.remove(&victim);
+                self.evictions_total += 1;
+            }
+        }
+        self.resident.insert(page, self.tick);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space(frac: f64) -> UvmSpace {
+        UvmSpace::new(&SystemProfile::system1(), frac)
+    }
+
+    #[test]
+    fn first_touch_faults_then_hits() {
+        let mut u = space(0.5);
+        let cold = u.access_rows(&[0, 1, 2, 3], 4096);
+        assert_eq!(cold.requests, 4);
+        let warm = u.access_rows(&[0, 1, 2, 3], 4096);
+        assert_eq!(warm.requests, 0);
+        assert_eq!(warm.bytes_on_link, 0);
+    }
+
+    #[test]
+    fn io_amplification_for_sub_page_rows() {
+        let mut u = space(0.5);
+        // 512-byte rows scattered one per page: each faults a full 4 KiB page.
+        let idx: Vec<u32> = (0..64u32).map(|i| i * 8).collect();
+        let c = u.access_rows(&idx, 512);
+        assert!(c.bytes_on_link >= 8 * c.useful_bytes);
+    }
+
+    #[test]
+    fn straddling_rows_fault_two_pages() {
+        let mut u = space(0.5);
+        // 2052-byte row starting at byte 2052 straddles pages 0 and 1... use
+        // row index 1 with row_bytes 2052 -> offset 2052, spans 2052..4104.
+        let c = u.access_rows(&[1], 2052);
+        assert_eq!(c.requests, 2);
+    }
+
+    #[test]
+    fn eviction_under_pressure() {
+        let sys = SystemProfile::system1();
+        let mut u = UvmSpace::new(&sys, 0.0); // clamps to 1% -> still huge; shrink manually
+        u.capacity_pages = 16;
+        let idx: Vec<u32> = (0..64u32).collect();
+        u.access_rows(&idx, 4096);
+        assert!(u.evictions_total > 0);
+        assert!(u.resident_pages() <= 16);
+    }
+
+    #[test]
+    fn uvm_slower_than_ideal_for_irregular_access() {
+        let sys = SystemProfile::system1();
+        let mut u = UvmSpace::new(&sys, 0.5);
+        let idx: Vec<u32> = (0..1000u32).map(|i| i * 97 % 100_000).collect();
+        let c = u.access_rows(&idx, 1024);
+        let ideal = c.useful_bytes as f64 / sys.pcie.peak_bw;
+        assert!(c.time_s > 3.0 * ideal, "uvm={} ideal={}", c.time_s, ideal);
+    }
+}

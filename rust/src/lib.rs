@@ -1,0 +1,39 @@
+//! # ptdirect — PyTorch-Direct reproduced as a Rust + JAX + Pallas stack
+//!
+//! Reproduction of *PyTorch-Direct: Enabling GPU Centric Data Access for
+//! Very Large Graph Neural Network Training with Irregular Accesses*
+//! (Min et al., 2021) as a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the data-pipeline coordinator: graph
+//!   storage and generators, neighbor sampling, the unified-tensor runtime
+//!   with the paper's placement rules and caching allocator, the simulated
+//!   GPU/PCIe/UVM transfer models, the pipelined training loop, and the
+//!   PJRT runtime that executes the AOT-compiled training step.
+//! * **Layer 2 (python/compile/model.py)** — GraphSAGE/GAT block models
+//!   with a fused train step, lowered once to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (gather with
+//!   the circular-shift alignment optimization, SAGE aggregation, GAT
+//!   attention), interpret-mode, validated against pure-jnp oracles.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the JAX
+//! programs once; the rust binary loads and executes them via PJRT.
+//!
+//! See DESIGN.md for the full system inventory and experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod error;
+pub mod featurestore;
+pub mod graph;
+pub mod interconnect;
+pub mod pipeline;
+pub mod runtime;
+pub mod sampler;
+pub mod tensor;
+pub mod util;
+
+pub use config::{AccessMode, RunConfig, SystemProfile};
+pub use error::{Error, Result};

@@ -1,0 +1,12 @@
+//! `ptdirect` — leader binary for the PyTorch-Direct reproduction.
+
+fn main() {
+    ptdirect::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let argv = if argv.is_empty() {
+        vec!["help".to_string()]
+    } else {
+        argv
+    };
+    std::process::exit(ptdirect::cli::run(&argv));
+}

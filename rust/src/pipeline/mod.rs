@@ -1,0 +1,9 @@
+//! Streaming mini-batch pipeline: bounded queues with blocking backpressure
+//! and a staged executor that overlaps sampling, gathering, and training —
+//! the data-loader machinery whose CPU-side cost Fig. 3 profiles.
+
+pub mod executor;
+pub mod queue;
+
+pub use executor::{PipelineReport, StageTimes};
+pub use queue::BoundedQueue;

@@ -1,0 +1,194 @@
+//! Bounded MPMC queue with blocking push (backpressure) and pop.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Bounded multi-producer multi-consumer FIFO.
+///
+/// `push` blocks while the queue is full — this is the backpressure window
+/// between pipeline stages (a slow trainer stalls the sampler instead of
+/// buffering unboundedly).  `close` wakes all waiters; subsequent `pop`s
+/// drain the remaining items then return `None`.
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    /// cumulative seconds producers spent blocked (backpressure metric)
+    push_wait_s: f64,
+    /// cumulative seconds consumers spent blocked (starvation metric)
+    pop_wait_s: f64,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            state: Mutex::new(State {
+                items: VecDeque::with_capacity(capacity),
+                closed: false,
+                push_wait_s: 0.0,
+                pop_wait_s: 0.0,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Blocking push. Returns `Err(item)` if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let t0 = std::time::Instant::now();
+        let mut st = self.state.lock().unwrap();
+        while st.items.len() >= self.capacity && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        st.push_wait_s += t0.elapsed().as_secs_f64();
+        if st.closed {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop. `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let t0 = std::time::Instant::now();
+        let mut st = self.state.lock().unwrap();
+        while st.items.is_empty() && !st.closed {
+            st = self.not_empty.wait(st).unwrap();
+        }
+        st.pop_wait_s += t0.elapsed().as_secs_f64();
+        let item = st.items.pop_front();
+        drop(st);
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.state.lock().unwrap().items.pop_front().inspect(|_| {
+            self.not_full.notify_one();
+        })
+    }
+
+    /// Close the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (producer blocked seconds, consumer blocked seconds).
+    pub fn wait_stats(&self) -> (f64, f64) {
+        let st = self.state.lock().unwrap();
+        (st.push_wait_s, st.pop_wait_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+        assert!(q.push(9).is_err());
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0).unwrap();
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            // blocks until the main thread pops
+            q2.push(1).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(q.len(), 1); // still full, producer blocked
+        assert_eq!(q.pop(), Some(0));
+        producer.join().unwrap();
+        assert_eq!(q.pop(), Some(1));
+        let (push_wait, _) = q.wait_stats();
+        assert!(push_wait > 0.0);
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_duplication() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let n_items = 2000u32;
+        let producers: Vec<_> = (0..2)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..n_items / 2 {
+                        q.push(p * (n_items / 2) + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(x) = q.pop() {
+                        got.push(x);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n_items).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pop_on_closed_empty_is_none_not_deadlock() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(2);
+        q.close();
+        assert_eq!(q.pop(), None);
+    }
+}

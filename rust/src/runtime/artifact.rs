@@ -1,0 +1,351 @@
+//! Manifest parser for the AOT artifact calling convention.
+//!
+//! The manifest is a line-oriented text format written by
+//! `python/compile/aot.py` (kept deliberately trivial — serde is not
+//! available offline, and the format must stay greppable):
+//!
+//! ```text
+//! artifact sage_product
+//! file sage_product.hlo.txt
+//! kind train
+//! arch sage
+//! batch 64
+//! ...
+//! input param l0_b f32 64
+//! input data x0 f32 2304x100
+//! output metric loss f32 scalar
+//! end
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::tensor::DType;
+
+/// What an input/output slot carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoRole {
+    Param,
+    Momentum,
+    Data,
+    Metric,
+}
+
+impl IoRole {
+    fn parse(s: &str) -> Option<IoRole> {
+        match s {
+            "param" => Some(IoRole::Param),
+            "momentum" => Some(IoRole::Momentum),
+            "data" => Some(IoRole::Data),
+            "metric" => Some(IoRole::Metric),
+            _ => None,
+        }
+    }
+}
+
+/// One input or output slot.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub role: IoRole,
+    pub name: String,
+    pub dtype: DType,
+    /// Empty for scalars.
+    pub dims: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Artifact kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Train,
+    Infer,
+    Gather,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<ArtifactKind> {
+        match s {
+            "train" => Some(ArtifactKind::Train),
+            "infer" => Some(ArtifactKind::Infer),
+            "gather" => Some(ArtifactKind::Gather),
+            _ => None,
+        }
+    }
+}
+
+/// One artifact's full calling convention + model hyperparameters.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub arch: Option<String>,
+    pub batch: usize,
+    pub hidden: usize,
+    pub in_dim: usize,
+    pub classes: usize,
+    pub fanouts: Vec<usize>,
+    pub layer_sizes: Vec<usize>,
+    pub lr: f64,
+    pub momentum: f64,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    fn empty(name: String) -> Self {
+        ArtifactSpec {
+            name,
+            file: String::new(),
+            kind: ArtifactKind::Train,
+            arch: None,
+            batch: 0,
+            hidden: 0,
+            in_dim: 0,
+            classes: 0,
+            fanouts: Vec::new(),
+            layer_sizes: Vec::new(),
+            lr: 0.0,
+            momentum: 0.0,
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+        }
+    }
+
+    pub fn params(&self) -> impl Iterator<Item = &IoSpec> {
+        self.inputs.iter().filter(|i| i.role == IoRole::Param)
+    }
+
+    pub fn data_inputs(&self) -> impl Iterator<Item = &IoSpec> {
+        self.inputs.iter().filter(|i| i.role == IoRole::Data)
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params().count()
+    }
+
+    /// Total trainable parameter element count.
+    pub fn param_elems(&self) -> usize {
+        self.params().map(|p| p.numel()).sum()
+    }
+
+    /// Rows the feature gather must deliver per step (= layer_sizes[0]).
+    pub fn gather_rows(&self) -> usize {
+        self.layer_sizes.first().copied().unwrap_or(0)
+    }
+
+    pub fn hlo_path(&self, dir: &Path) -> PathBuf {
+        dir.join(&self.file)
+    }
+}
+
+/// All artifacts in a directory.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(Vec::new());
+    }
+    s.split('x')
+        .map(|d| {
+            d.parse::<usize>()
+                .map_err(|_| Error::Manifest(format!("bad dim `{d}`")))
+        })
+        .collect()
+}
+
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|d| {
+            d.parse::<usize>()
+                .map_err(|_| Error::Manifest(format!("bad int `{d}`")))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        if !path.exists() {
+            return Err(Error::ArtifactMissing(path.display().to_string()));
+        }
+        let text = std::fs::read_to_string(&path)?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut man = Manifest {
+            artifacts: BTreeMap::new(),
+            dir: dir.to_path_buf(),
+        };
+        let mut cur: Option<ArtifactSpec> = None;
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let key = parts.next().unwrap();
+            let rest: Vec<&str> = parts.collect();
+            let err = |msg: &str| Error::Manifest(format!("line {}: {msg}", ln + 1));
+            match key {
+                "artifact" => {
+                    if cur.is_some() {
+                        return Err(err("artifact before previous `end`"));
+                    }
+                    cur = Some(ArtifactSpec::empty(
+                        rest.first().ok_or_else(|| err("missing name"))?.to_string(),
+                    ));
+                }
+                "end" => {
+                    let spec = cur.take().ok_or_else(|| err("end without artifact"))?;
+                    if spec.file.is_empty() {
+                        return Err(err("artifact missing `file`"));
+                    }
+                    man.artifacts.insert(spec.name.clone(), spec);
+                }
+                _ => {
+                    let spec = cur.as_mut().ok_or_else(|| err("field outside artifact"))?;
+                    match key {
+                        "file" => spec.file = rest.concat(),
+                        "kind" => {
+                            spec.kind = ArtifactKind::parse(rest.first().copied().unwrap_or(""))
+                                .ok_or_else(|| err("bad kind"))?
+                        }
+                        "arch" => spec.arch = rest.first().map(|s| s.to_string()),
+                        "batch" => spec.batch = rest[0].parse().map_err(|_| err("bad batch"))?,
+                        "hidden" => spec.hidden = rest[0].parse().map_err(|_| err("bad hidden"))?,
+                        "in_dim" => spec.in_dim = rest[0].parse().map_err(|_| err("bad in_dim"))?,
+                        "classes" => {
+                            spec.classes = rest[0].parse().map_err(|_| err("bad classes"))?
+                        }
+                        "fanouts" => spec.fanouts = parse_usize_list(rest[0])?,
+                        "layer_sizes" => spec.layer_sizes = parse_usize_list(rest[0])?,
+                        "lr" => spec.lr = rest[0].parse().map_err(|_| err("bad lr"))?,
+                        "momentum" => {
+                            spec.momentum = rest[0].parse().map_err(|_| err("bad momentum"))?
+                        }
+                        "input" | "output" => {
+                            if rest.len() != 4 {
+                                return Err(err("io line needs: role name dtype dims"));
+                            }
+                            let io = IoSpec {
+                                role: IoRole::parse(rest[0]).ok_or_else(|| err("bad role"))?,
+                                name: rest[1].to_string(),
+                                dtype: DType::parse(rest[2]).ok_or_else(|| err("bad dtype"))?,
+                                dims: parse_dims(rest[3])?,
+                            };
+                            if key == "input" {
+                                spec.inputs.push(io);
+                            } else {
+                                spec.outputs.push(io);
+                            }
+                        }
+                        _ => return Err(err(&format!("unknown key `{key}`"))),
+                    }
+                }
+            }
+        }
+        if cur.is_some() {
+            return Err(Error::Manifest("unterminated artifact".into()));
+        }
+        Ok(man)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::ArtifactMissing(name.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact sage_tiny
+file sage_tiny.hlo.txt
+kind train
+arch sage
+batch 4
+hidden 8
+in_dim 12
+classes 5
+fanouts 2,2
+layer_sizes 36,12,4
+lr 0.003
+momentum 0.9
+input param l0_b f32 8
+input param l0_w_nbr f32 12x8
+input momentum l0_b f32 8
+input data x0 f32 36x12
+input data nbr0 i32 12x2
+input data labels i32 4
+output metric loss f32 scalar
+output param l0_b f32 8
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        let a = m.get("sage_tiny").unwrap();
+        assert_eq!(a.kind, ArtifactKind::Train);
+        assert_eq!(a.batch, 4);
+        assert_eq!(a.fanouts, vec![2, 2]);
+        assert_eq!(a.layer_sizes, vec![36, 12, 4]);
+        assert_eq!(a.gather_rows(), 36);
+        assert_eq!(a.num_params(), 2);
+        assert_eq!(a.param_elems(), 8 + 96);
+        let loss = &a.outputs[0];
+        assert_eq!(loss.dims, Vec::<usize>::new());
+        assert_eq!(loss.numel(), 1);
+        assert!((a.lr - 0.003).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_artifact_lookup_errors() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert!(matches!(m.get("nope"), Err(Error::ArtifactMissing(_))));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("input param x f32 4\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("artifact a\nfile f\nbogus 1\nend\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("artifact a\nfile f\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("artifact a\nkind train\nend\n", Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        // Integration hook: when `make artifacts` has run, the real manifest
+        // must parse and contain the 12 Fig. 8 variants.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for arch in ["sage", "gat"] {
+            for ds in ["reddit", "product", "twit", "sk", "paper", "wiki"] {
+                let a = m.get(&format!("{arch}_{ds}")).unwrap();
+                assert_eq!(a.kind, ArtifactKind::Train);
+                assert!(a.hlo_path(&m.dir).exists(), "{} hlo missing", a.name);
+            }
+        }
+        assert!(m.get("gather_aligned").is_ok());
+    }
+}

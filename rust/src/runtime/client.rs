@@ -1,0 +1,149 @@
+//! PJRT client wrapper: HLO text -> compile -> execute.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and aot.py).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::{ArtifactSpec, IoRole};
+use crate::tensor::DType;
+use crate::util::timer::Timer;
+
+/// Process-wide PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client (the simulated GPU's executor).
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, dir: &Path, spec: &ArtifactSpec) -> Result<LoadedArtifact> {
+        let path = spec.hlo_path(dir);
+        if !path.exists() {
+            return Err(Error::ArtifactMissing(path.display().to_string()));
+        }
+        let t = Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        log::info!(
+            "compiled artifact `{}` in {:.2}s ({} inputs, {} outputs)",
+            spec.name,
+            t.elapsed_s(),
+            spec.inputs.len(),
+            spec.outputs.len()
+        );
+        Ok(LoadedArtifact {
+            spec: spec.clone(),
+            exe,
+            compile_s: t.elapsed_s(),
+        })
+    }
+}
+
+/// A compiled executable plus its calling convention.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_s: f64,
+}
+
+impl LoadedArtifact {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    ///
+    /// The AOT programs are lowered with `return_tuple=True`, so PJRT hands
+    /// back a single tuple literal which we decompose in manifest order.
+    pub fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "artifact `{}` expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let result = self.exe.execute::<&xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "artifact `{}` returned {} outputs, manifest says {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            )));
+        }
+        Ok(outs)
+    }
+}
+
+/// Build an f32 literal of `dims` from a slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Build an i32 literal of `dims` from a slice.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Build a zeroed literal for an IO spec.
+pub fn literal_zeros(dtype: DType, dims: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = dims.iter().product();
+    match dtype {
+        DType::F32 => literal_f32(&vec![0f32; numel], dims),
+        DType::I32 => literal_i32(&vec![0i32; numel], dims),
+        other => Err(Error::Runtime(format!("unsupported literal dtype {other}"))),
+    }
+}
+
+/// Read back an f32 literal (any shape) as a Vec.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Scalar f32 readout.
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Role-aware input assembly check (used by TrainState; exposed for tests).
+pub fn check_roles(spec: &ArtifactSpec) -> (usize, usize, usize) {
+    let n_param = spec.inputs.iter().filter(|i| i.role == IoRole::Param).count();
+    let n_mom = spec
+        .inputs
+        .iter()
+        .filter(|i| i.role == IoRole::Momentum)
+        .count();
+    let n_data = spec.inputs.iter().filter(|i| i.role == IoRole::Data).count();
+    (n_param, n_mom, n_data)
+}

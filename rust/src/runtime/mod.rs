@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT artifacts (`make artifacts`) and execute them
+//! on the request path with zero Python.
+//!
+//! * [`artifact`] — parser for `artifacts/manifest.txt` (the calling
+//!   convention `python/compile/aot.py` records).
+//! * [`client`] — `xla` crate wrapper: HLO text → compile → execute.
+//! * [`state`] — training state (params/momenta literals) + the step call.
+
+pub mod artifact;
+pub mod client;
+pub mod state;
+
+pub use artifact::{ArtifactKind, ArtifactSpec, IoRole, IoSpec, Manifest};
+pub use client::{LoadedArtifact, Runtime};
+pub use state::TrainState;

@@ -1,0 +1,164 @@
+//! Training state: parameter/momentum literals + the fused step call.
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::{ArtifactSpec, IoRole};
+use crate::runtime::client::{literal_f32, literal_i32, literal_scalar_f32, LoadedArtifact};
+use crate::tensor::DType;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// Batch tensors for one training step, shaped per the artifact manifest.
+#[derive(Clone, Debug)]
+pub struct StepBatch {
+    /// Gathered input features `[layer_sizes[0], in_dim]` (row-major).
+    pub x0: Vec<f32>,
+    /// Per-layer local neighbor indices `[n_dst, fanout]`.
+    pub nbrs: Vec<Vec<i32>>,
+    /// Per-layer masks.
+    pub masks: Vec<Vec<f32>>,
+    /// Root labels `[batch]`.
+    pub labels: Vec<i32>,
+}
+
+/// Step metrics.
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub acc: f32,
+    /// Measured PJRT execution seconds.
+    pub exec_s: f64,
+}
+
+/// Owns the model's mutable state across steps.
+pub struct TrainState {
+    param_names: Vec<String>,
+    params: Vec<xla::Literal>,
+    momenta: Vec<xla::Literal>,
+    pub steps: u64,
+}
+
+impl TrainState {
+    /// Glorot-uniform init from the artifact's parameter shapes (matrices),
+    /// zeros for vectors and momenta — matching `model.init_params`.
+    pub fn init(spec: &ArtifactSpec, seed: u64) -> Result<TrainState> {
+        let mut rng = Rng::new(seed);
+        let mut param_names = Vec::new();
+        let mut params = Vec::new();
+        let mut momenta = Vec::new();
+        for io in spec.inputs.iter().filter(|i| i.role == IoRole::Param) {
+            if io.dtype != DType::F32 {
+                return Err(Error::Runtime(format!("param {} not f32", io.name)));
+            }
+            let n = io.numel();
+            let data: Vec<f32> = if io.dims.len() == 2 {
+                let limit = (6.0 / (io.dims[0] + io.dims[1]) as f64).sqrt() as f32;
+                (0..n).map(|_| rng.gen_f32_range(-limit, limit)).collect()
+            } else {
+                vec![0f32; n]
+            };
+            param_names.push(io.name.clone());
+            params.push(literal_f32(&data, &io.dims)?);
+            momenta.push(literal_f32(&vec![0f32; n], &io.dims)?);
+        }
+        Ok(TrainState {
+            param_names,
+            params,
+            momenta,
+            steps: 0,
+        })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn param_names(&self) -> &[String] {
+        &self.param_names
+    }
+
+    /// Read one parameter back as f32 values (tests / checkpoints).
+    pub fn param_values(&self, name: &str) -> Result<Vec<f32>> {
+        let i = self
+            .param_names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| Error::Runtime(format!("no param {name}")))?;
+        Ok(self.params[i].to_vec::<f32>()?)
+    }
+
+    /// Run one fused train step; updates params/momenta in place.
+    pub fn step(
+        &mut self,
+        artifact: &LoadedArtifact,
+        batch: &StepBatch,
+    ) -> Result<StepMetrics> {
+        let spec = &artifact.spec;
+        let nl = spec.fanouts.len();
+        if batch.nbrs.len() != nl || batch.masks.len() != nl {
+            return Err(Error::Runtime(format!(
+                "batch has {} layers, artifact {}",
+                batch.nbrs.len(),
+                nl
+            )));
+        }
+
+        // data literals in manifest order: x0, nbr0.., mask0.., labels
+        let x0_dims = [spec.layer_sizes[0], spec.in_dim];
+        if batch.x0.len() != x0_dims[0] * x0_dims[1] {
+            return Err(Error::Runtime(format!(
+                "x0 len {} != {}x{}",
+                batch.x0.len(),
+                x0_dims[0],
+                x0_dims[1]
+            )));
+        }
+        let x0 = literal_f32(&batch.x0, &x0_dims)?;
+        let mut nbr_lits = Vec::with_capacity(nl);
+        let mut mask_lits = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let dims = [spec.layer_sizes[l + 1], spec.fanouts[l]];
+            nbr_lits.push(literal_i32(&batch.nbrs[l], &dims)?);
+            mask_lits.push(literal_f32(&batch.masks[l], &dims)?);
+        }
+        let labels = literal_i32(&batch.labels, &[spec.batch])?;
+
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(2 * self.params.len() + 2 * nl + 2);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.momenta.iter());
+        inputs.push(&x0);
+        inputs.extend(nbr_lits.iter());
+        inputs.extend(mask_lits.iter());
+        inputs.push(&labels);
+
+        let t = Timer::start();
+        let mut outs = artifact.execute(&inputs)?;
+        let exec_s = t.elapsed_s();
+
+        // outputs: loss, acc, new params, new momenta
+        let np = self.params.len();
+        if outs.len() != 2 + 2 * np {
+            return Err(Error::Runtime(format!(
+                "expected {} outputs, got {}",
+                2 + 2 * np,
+                outs.len()
+            )));
+        }
+        let loss = literal_scalar_f32(&outs[0])?;
+        let acc = literal_scalar_f32(&outs[1])?;
+        // replace state in-place (drain from the back to avoid clones)
+        let momenta_new: Vec<xla::Literal> = outs.split_off(2 + np);
+        let params_new: Vec<xla::Literal> = outs.split_off(2);
+        self.params = params_new;
+        self.momenta = momenta_new;
+        self.steps += 1;
+
+        if !loss.is_finite() {
+            return Err(Error::Runtime(format!(
+                "non-finite loss at step {}: {loss}",
+                self.steps
+            )));
+        }
+        Ok(StepMetrics { loss, acc, exec_s })
+    }
+}

@@ -1,0 +1,136 @@
+//! Mini-batch block structures (DGL-style MFGs, fixed shapes for AOT).
+
+/// One sampling layer: `n_dst` destinations, each with `fanout` neighbor
+/// slots pointing into the layer's source node array.
+#[derive(Clone, Debug)]
+pub struct LayerBlock {
+    pub n_dst: usize,
+    pub fanout: usize,
+    /// Local neighbor indices, row-major `[n_dst, fanout]`, each in
+    /// `[0, n_src)` where `n_src = n_dst * (1 + fanout)`.
+    pub nbr: Vec<i32>,
+    /// 1.0 = real sampled neighbor, 0.0 = padding (degree < fanout).
+    pub mask: Vec<f32>,
+}
+
+impl LayerBlock {
+    pub fn n_src(&self) -> usize {
+        self.n_dst * (1 + self.fanout)
+    }
+
+    /// Fraction of neighbor slots holding real samples.
+    pub fn fill_ratio(&self) -> f64 {
+        if self.mask.is_empty() {
+            return 0.0;
+        }
+        self.mask.iter().map(|&m| m as f64).sum::<f64>() / self.mask.len() as f64
+    }
+
+    /// Structural invariants (used by tests and debug assertions).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nbr.len() != self.n_dst * self.fanout {
+            return Err(format!(
+                "nbr len {} != {}x{}",
+                self.nbr.len(),
+                self.n_dst,
+                self.fanout
+            ));
+        }
+        if self.mask.len() != self.nbr.len() {
+            return Err("mask/nbr length mismatch".into());
+        }
+        let n_src = self.n_src() as i32;
+        if let Some(&bad) = self.nbr.iter().find(|&&i| i < 0 || i >= n_src) {
+            return Err(format!("nbr {bad} out of [0,{n_src})"));
+        }
+        if self.mask.iter().any(|&m| m != 0.0 && m != 1.0) {
+            return Err("mask values must be 0/1".into());
+        }
+        Ok(())
+    }
+}
+
+/// A complete sampled mini-batch.
+#[derive(Clone, Debug)]
+pub struct MiniBatch {
+    /// Global node ids of the input layer's source array (`n_0` entries) —
+    /// the rows the feature gather must fetch. THE hot set of the paper.
+    pub src_nodes: Vec<u32>,
+    /// Blocks input-side first: `layers[l]` consumes layer `l`'s sources.
+    pub layers: Vec<LayerBlock>,
+    /// Batch roots (global ids), `batch` entries.
+    pub seeds: Vec<u32>,
+    /// Class labels for the roots.
+    pub labels: Vec<i32>,
+}
+
+impl MiniBatch {
+    pub fn batch_size(&self) -> usize {
+        self.seeds.len()
+    }
+
+    /// Total feature rows the gather stage fetches.
+    pub fn gather_rows(&self) -> usize {
+        self.src_nodes.len()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers.is_empty() {
+            return Err("no layers".into());
+        }
+        // chain: n_src of layer l == n_dst of layer l * (1+fanout); and
+        // layer l+1's n_src must equal layer l's n_dst.
+        if self.src_nodes.len() != self.layers[0].n_src() {
+            return Err(format!(
+                "src_nodes {} != layer0 n_src {}",
+                self.src_nodes.len(),
+                self.layers[0].n_src()
+            ));
+        }
+        for w in self.layers.windows(2) {
+            if w[1].n_src() != w[0].n_dst {
+                return Err(format!(
+                    "layer chain mismatch: {} vs {}",
+                    w[1].n_src(),
+                    w[0].n_dst
+                ));
+            }
+        }
+        if self.layers.last().unwrap().n_dst != self.seeds.len() {
+            return Err("last layer n_dst != batch".into());
+        }
+        if self.labels.len() != self.seeds.len() {
+            return Err("labels != seeds".into());
+        }
+        for l in &self.layers {
+            l.validate()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_block_validation() {
+        let ok = LayerBlock {
+            n_dst: 2,
+            fanout: 2,
+            nbr: vec![2, 3, 4, 5],
+            mask: vec![1.0, 1.0, 0.0, 1.0],
+        };
+        ok.validate().unwrap();
+        assert_eq!(ok.n_src(), 6);
+        assert!((ok.fill_ratio() - 0.75).abs() < 1e-12);
+
+        let bad = LayerBlock {
+            n_dst: 2,
+            fanout: 2,
+            nbr: vec![2, 3, 4, 6], // 6 >= n_src
+            mask: vec![1.0; 4],
+        };
+        assert!(bad.validate().is_err());
+    }
+}

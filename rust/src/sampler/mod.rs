@@ -1,0 +1,15 @@
+//! Mini-batch neighbor sampling (the "complicated tasks such as traversing
+//! neighboring nodes" of the paper's abstract).
+//!
+//! Produces fixed-shape message-flow-graph blocks matching the calling
+//! convention of the AOT-compiled models (python/compile/model.py): layer
+//! `l` maps `n_l` source nodes to `n_{l+1}` destination nodes, destinations
+//! are the prefix of the source array, and every destination owns exactly
+//! `fanout_l` neighbor slots (padded + masked when the true degree is
+//! smaller, duplicated when sampling with replacement).
+
+pub mod batch;
+pub mod neighbor;
+
+pub use batch::{LayerBlock, MiniBatch};
+pub use neighbor::NeighborSampler;

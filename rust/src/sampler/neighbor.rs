@@ -1,0 +1,221 @@
+//! Uniform fan-out neighbor sampler (GraphSAGE-style, with replacement).
+
+use crate::graph::csr::Csr;
+use crate::sampler::batch::{LayerBlock, MiniBatch};
+use crate::util::rng::Rng;
+
+/// Sampler over a CSR graph with per-layer fan-outs.
+///
+/// Layer convention follows the AOT models: `fanouts[0]` is the *input-side*
+/// fan-out (between `n_0` and `n_1`); sampling proceeds from the roots
+/// outward, so the construction loop walks fan-outs in reverse.
+pub struct NeighborSampler<'g> {
+    graph: &'g Csr,
+    fanouts: Vec<usize>,
+    classes: u32,
+}
+
+impl<'g> NeighborSampler<'g> {
+    pub fn new(graph: &'g Csr, fanouts: &[usize], classes: u32) -> Self {
+        assert!(!fanouts.is_empty());
+        NeighborSampler {
+            graph,
+            fanouts: fanouts.to_vec(),
+            classes,
+        }
+    }
+
+    /// Deterministic synthetic label for a node (classification target).
+    #[inline]
+    pub fn label_of(node: u32, classes: u32) -> i32 {
+        // Mix bits so labels are uncorrelated with node id magnitude.
+        let mut x = node as u64 ^ 0x9E37_79B9_7F4A_7C15;
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        x ^= x >> 33;
+        (x % classes as u64) as i32
+    }
+
+    /// Sample one mini-batch rooted at `seeds`.
+    pub fn sample(&self, seeds: &[u32], rng: &mut Rng) -> MiniBatch {
+        let num_layers = self.fanouts.len();
+        // nodes per level, roots outward: level[num_layers] = seeds.
+        let mut level_nodes: Vec<Vec<u32>> = vec![Vec::new(); num_layers + 1];
+        level_nodes[num_layers] = seeds.to_vec();
+
+        let mut layers_rev: Vec<LayerBlock> = Vec::with_capacity(num_layers);
+        for l in (0..num_layers).rev() {
+            let fanout = self.fanouts[l];
+            let dst: &Vec<u32> = &level_nodes[l + 1];
+            let n_dst = dst.len();
+            let mut src = Vec::with_capacity(n_dst * (1 + fanout));
+            src.extend_from_slice(dst); // destinations are the src prefix
+            let mut nbr = Vec::with_capacity(n_dst * fanout);
+            let mut mask = Vec::with_capacity(n_dst * fanout);
+            for (j, &v) in dst.iter().enumerate() {
+                let neigh = self.graph.neighbors(v);
+                for k in 0..fanout {
+                    // every (j, k) slot owns src position n_dst + j*fanout + k
+                    nbr.push((n_dst + j * fanout + k) as i32);
+                    if neigh.is_empty() {
+                        // isolated node: point the slot at the node itself,
+                        // masked out so it contributes nothing.
+                        src.push(v);
+                        mask.push(0.0);
+                    } else {
+                        let pick = neigh[rng.gen_range_usize(neigh.len())];
+                        src.push(pick);
+                        mask.push(1.0);
+                    }
+                }
+            }
+            layers_rev.push(LayerBlock {
+                n_dst,
+                fanout,
+                nbr,
+                mask,
+            });
+            level_nodes[l] = src;
+        }
+        layers_rev.reverse(); // input-side first
+
+        let labels = seeds
+            .iter()
+            .map(|&s| Self::label_of(s, self.classes))
+            .collect();
+        MiniBatch {
+            src_nodes: std::mem::take(&mut level_nodes[0]),
+            layers: layers_rev,
+            seeds: seeds.to_vec(),
+            labels,
+        }
+    }
+
+    /// Iterate epoch batches: a shuffled permutation of all nodes, chopped
+    /// into fixed-size root sets (remainder dropped, as DGL does with
+    /// `drop_last=True` — required by the fixed AOT shapes).
+    pub fn epoch_seeds(&self, batch: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+        let mut order: Vec<u32> = (0..self.graph.num_nodes() as u32).collect();
+        rng.shuffle(&mut order);
+        order
+            .chunks_exact(batch)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{rmat, RmatParams};
+    use crate::util::proptest::{check, prop_assert, Gen};
+
+    fn toy_graph() -> Csr {
+        // 0..4 ring + isolated node 5
+        Csr::from_edges(
+            6,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 0), (1, 0), (2, 1)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn block_shapes_match_model_convention() {
+        let g = toy_graph();
+        let s = NeighborSampler::new(&g, &[2, 3], 10);
+        let mut rng = Rng::new(1);
+        let mb = s.sample(&[0, 1], &mut rng);
+        mb.validate().unwrap();
+        // batch 2, fanouts [2,3]: n2=2, n1=2*4=8, n0=8*3=24
+        assert_eq!(mb.layers.len(), 2);
+        assert_eq!(mb.layers[1].n_dst, 2);
+        assert_eq!(mb.layers[1].fanout, 3);
+        assert_eq!(mb.layers[0].n_dst, 8);
+        assert_eq!(mb.layers[0].fanout, 2);
+        assert_eq!(mb.src_nodes.len(), 24);
+        // destinations are the src prefix
+        assert_eq!(&mb.src_nodes[..8], {
+            // level1 nodes = seeds ++ sampled(3 per seed)
+            let l1_len = 2 * (1 + 3);
+            assert_eq!(l1_len, 8);
+            &mb.src_nodes[..8]
+        });
+    }
+
+    #[test]
+    fn isolated_nodes_masked_out() {
+        let g = toy_graph();
+        let s = NeighborSampler::new(&g, &[2], 10);
+        let mut rng = Rng::new(2);
+        let mb = s.sample(&[5], &mut rng);
+        mb.validate().unwrap();
+        assert!(mb.layers[0].mask.iter().all(|&m| m == 0.0));
+        // padding points at the node itself
+        assert!(mb.src_nodes[1..].iter().all(|&n| n == 5));
+    }
+
+    #[test]
+    fn sampled_neighbors_are_real_edges() {
+        let g = rmat(200, 2000, RmatParams::default(), 4).unwrap();
+        let s = NeighborSampler::new(&g, &[4], 10);
+        let mut rng = Rng::new(3);
+        let seeds: Vec<u32> = (0..16).collect();
+        let mb = s.sample(&seeds, &mut rng);
+        let block = &mb.layers[0];
+        for (j, &seed) in seeds.iter().enumerate() {
+            for k in 0..block.fanout {
+                let slot = j * block.fanout + k;
+                if block.mask[slot] == 1.0 {
+                    let src_pos = block.nbr[slot] as usize;
+                    let picked = mb.src_nodes[src_pos];
+                    assert!(
+                        g.neighbors(seed).contains(&picked),
+                        "{picked} not a neighbor of {seed}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labels_deterministic_and_in_range() {
+        let a = NeighborSampler::label_of(12345, 47);
+        let b = NeighborSampler::label_of(12345, 47);
+        assert_eq!(a, b);
+        for n in 0..1000u32 {
+            let l = NeighborSampler::label_of(n, 47);
+            assert!((0..47).contains(&l));
+        }
+    }
+
+    #[test]
+    fn epoch_seeds_partition_nodes() {
+        let g = toy_graph();
+        let s = NeighborSampler::new(&g, &[2], 10);
+        let mut rng = Rng::new(4);
+        let batches = s.epoch_seeds(2, &mut rng);
+        assert_eq!(batches.len(), 3);
+        let mut all: Vec<u32> = batches.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn sampled_batches_always_validate_property() {
+        let g = rmat(300, 1500, RmatParams::default(), 9).unwrap();
+        check(25, |gen: &mut Gen| {
+            let batch = gen.usize_in(1, 16);
+            let f1 = gen.usize_in(1, 5);
+            let f2 = gen.usize_in(1, 5);
+            let seeds: Vec<u32> = gen.vec_u32(batch, 0, 299);
+            let s = NeighborSampler::new(&g, &[f1, f2], 7);
+            let mut rng = Rng::new(gen.u64_in(0, u32::MAX as u64));
+            let mb = s.sample(&seeds, &mut rng);
+            mb.validate().map_err(|e| e)?;
+            prop_assert(
+                mb.gather_rows() == batch * (1 + f2) * (1 + f1),
+                format!("rows {}", mb.gather_rows()),
+            )
+        });
+    }
+}

@@ -1,0 +1,82 @@
+//! Device kinds and `cudaMemAdvise` hints (paper §4.2, Table 2).
+
+/// Where a tensor's storage lives / who may access it.
+///
+/// `Unified` is the paper's new device: physically host-resident, directly
+/// addressable by the (simulated) GPU over PCIe.  CPU tensors are
+/// CPU-accessible only, GPU tensors GPU-only — unified tensors are the type
+/// that "eliminates these limitations" (§4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Device {
+    Cpu,
+    Cuda,
+    Unified,
+}
+
+impl Device {
+    pub fn parse(s: &str) -> Option<Device> {
+        match s.to_ascii_lowercase().as_str() {
+            "cpu" => Some(Device::Cpu),
+            "cuda" | "cuda:0" | "gpu" => Some(Device::Cuda),
+            "unified" => Some(Device::Unified),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Device::Cpu => "cpu",
+            Device::Cuda => "cuda",
+            Device::Unified => "unified",
+        }
+    }
+}
+
+impl std::fmt::Display for Device {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// `cudaMemAdvise` values exposed through the unified tensor API (Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MemAdvise {
+    #[default]
+    None,
+    /// Data will mostly be read; the runtime may replicate read-only copies.
+    ReadMostly,
+    /// Set the preferred physical location to the advise device.
+    PreferredLocation,
+    /// Data will be accessed by the advise device (establish mappings early).
+    AccessedBy,
+}
+
+impl MemAdvise {
+    pub fn parse(s: &str) -> Option<MemAdvise> {
+        match s {
+            "read_mostly" | "ReadMostly" => Some(MemAdvise::ReadMostly),
+            "preferred_location" | "PreferredLocation" => Some(MemAdvise::PreferredLocation),
+            "accessed_by" | "AccessedBy" => Some(MemAdvise::AccessedBy),
+            "none" => Some(MemAdvise::None),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_devices() {
+        assert_eq!(Device::parse("unified"), Some(Device::Unified));
+        assert_eq!(Device::parse("CUDA"), Some(Device::Cuda));
+        assert_eq!(Device::parse("tpu"), None);
+    }
+
+    #[test]
+    fn parse_advise() {
+        assert_eq!(MemAdvise::parse("read_mostly"), Some(MemAdvise::ReadMostly));
+        assert_eq!(MemAdvise::parse("bogus"), None);
+    }
+}

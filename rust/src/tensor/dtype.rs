@@ -1,0 +1,65 @@
+//! Scalar element types.
+
+/// Supported tensor element types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    I64,
+    U8,
+}
+
+impl DType {
+    pub fn size_of(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I64 => 8,
+            DType::U8 => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::U8 => "u8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            "i64" => Some(DType::I64),
+            "u8" => Some(DType::U8),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size_of(), 4);
+        assert_eq!(DType::I64.size_of(), 8);
+        assert_eq!(DType::U8.size_of(), 1);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for d in [DType::F32, DType::I32, DType::I64, DType::U8] {
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::parse("f16"), None);
+    }
+}

@@ -1,0 +1,225 @@
+//! `index_select` — the `features[neighbor_id]` hot path of Listing 2,
+//! with per-access-mode transfer costing.
+//!
+//! This is the operation PyTorch-Direct modifies: for unified tensors the
+//! GPU indexing kernel dereferences host memory directly (optionally with
+//! the §4.5 circular-shift alignment fix); for CPU tensors the baseline
+//! gathers on the host and DMA-copies.  The *data movement* is performed
+//! for real (the output tensor holds the gathered rows — numerics flow into
+//! training); the *device-side timing* comes from the interconnect models.
+
+use crate::config::{AccessMode, SystemProfile};
+use crate::device::warp::{count_requests, GatherTraffic, WarpModel};
+use crate::error::{Error, Result};
+use crate::interconnect::{DmaEngine, PcieLink, TransferCost};
+use crate::tensor::device::Device;
+use crate::tensor::dtype::DType;
+use crate::tensor::tensor::Tensor;
+use crate::util::timer::Timer;
+
+/// Outcome of one `index_select`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IndexSelectReport {
+    /// Simulated transfer cost on the target system.
+    pub cost: TransferCost,
+    /// Warp-level traffic (zero-copy modes only).
+    pub traffic: Option<GatherTraffic>,
+    /// Wall-clock seconds this process actually spent on the gather memcpy
+    /// (diagnostic; the simulation time model does not use it directly).
+    pub measured_gather_s: f64,
+}
+
+/// Gather `idx` rows of a 2-D `features` tensor into a GPU tensor, costing
+/// the transfer according to `mode`.
+///
+/// Device requirements (the paper's semantics):
+/// * `CpuGather` — features on `cpu` (the baseline has no other choice).
+/// * `UnifiedNaive` / `UnifiedAligned` — features must be `unified`;
+///   direct access to plain CPU tensors is exactly what native PyTorch
+///   cannot do.
+/// * `GpuResident` — features must be on `cuda` (and fit its memory;
+///   capacity is enforced by the feature store, which owns placement).
+/// * `Uvm` — stateful (resident set); use `featurestore::UvmStore`.
+pub fn index_select(
+    features: &Tensor,
+    idx: &[u32],
+    mode: AccessMode,
+    sys: &SystemProfile,
+) -> Result<(Tensor, IndexSelectReport)> {
+    if features.dtype() != DType::F32 {
+        return Err(Error::DType {
+            expected: "f32".into(),
+            got: features.dtype().to_string(),
+        });
+    }
+    if features.shape().len() != 2 {
+        return Err(Error::Shape(format!(
+            "index_select expects [n, f], got {:?}",
+            features.shape()
+        )));
+    }
+    let n = features.shape()[0];
+    let f = features.shape()[1];
+    if let Some(&bad) = idx.iter().find(|&&i| i as usize >= n) {
+        return Err(Error::IndexOutOfBounds {
+            index: bad as usize,
+            bound: n,
+        });
+    }
+
+    match (mode, features.device()) {
+        (AccessMode::CpuGather, Device::Cpu) => {}
+        (AccessMode::CpuGather, Device::Unified) => {} // CPU may touch unified
+        (AccessMode::UnifiedNaive | AccessMode::UnifiedAligned, Device::Unified) => {}
+        (AccessMode::GpuResident, Device::Cuda) => {}
+        (AccessMode::Uvm, _) => {
+            return Err(Error::Device(
+                "UVM indexing is stateful; use featurestore::UvmStore".into(),
+            ))
+        }
+        (m, d) => {
+            return Err(Error::Device(format!(
+                "mode {:?} cannot access features on device {d}",
+                m
+            )))
+        }
+    }
+
+    // --- the real data movement (numerics) ---
+    let timer = Timer::start();
+    let mut out = Tensor::zeros(&[idx.len(), f], DType::F32, Device::Cuda);
+    gather_rows_into(features.f32_data(), f, idx, unsafe_f32_mut(&mut out));
+    let measured_gather_s = timer.elapsed_s();
+
+    // --- the simulated device-side cost ---
+    let row_bytes = (f * 4) as u64;
+    let (cost, traffic) = match mode {
+        AccessMode::CpuGather => {
+            let eng = DmaEngine::new(sys);
+            (eng.cpu_gather_transfer(idx.len() as u64, row_bytes), None)
+        }
+        AccessMode::UnifiedNaive | AccessMode::UnifiedAligned => {
+            let model = WarpModel::default();
+            let shifted = mode == AccessMode::UnifiedAligned && model.shift_applies(f as u64);
+            let traffic = count_requests(idx, f as u64, model, shifted);
+            let link = PcieLink::new(sys);
+            (link.direct_gather(&traffic), Some(traffic))
+        }
+        AccessMode::GpuResident => (
+            TransferCost {
+                // device-memory gather: effectively free at this granularity
+                time_s: sys.kernel_launch_s,
+                bytes_on_link: 0,
+                useful_bytes: idx.len() as u64 * row_bytes,
+                requests: 0,
+                cpu_time_s: 0.0,
+            },
+            None,
+        ),
+        AccessMode::Uvm => unreachable!(),
+    };
+
+    Ok((
+        out,
+        IndexSelectReport {
+            cost,
+            traffic,
+            measured_gather_s,
+        },
+    ))
+}
+
+/// Row gather into a destination slice (the measured CPU work).
+pub fn gather_rows_into(src: &[f32], f: usize, idx: &[u32], dst: &mut [f32]) {
+    debug_assert_eq!(dst.len(), idx.len() * f);
+    for (chunk, &r) in dst.chunks_exact_mut(f).zip(idx) {
+        let lo = r as usize * f;
+        chunk.copy_from_slice(&src[lo..lo + f]);
+    }
+}
+
+/// Internal helper: mutable f32 view of a freshly created, uniquely owned
+/// tensor (avoids exposing `f32_mut` publicly).
+fn unsafe_f32_mut(t: &mut Tensor) -> &mut [f32] {
+    // SAFETY: t was just created by the caller and has a unique Arc.
+    let len = t.numel();
+    let ptr = t.f32_data().as_ptr() as *mut f32;
+    unsafe { std::slice::from_raw_parts_mut(ptr, len) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn feats(device: Device) -> Tensor {
+        let mut rng = Rng::new(3);
+        Tensor::rand_f32(&[100, 16], device, &mut rng, -1.0, 1.0)
+    }
+
+    #[test]
+    fn gathers_correct_rows() {
+        let f = feats(Device::Unified);
+        let idx = [3u32, 97, 3, 0];
+        let (out, _) = index_select(&f, &idx, AccessMode::UnifiedAligned, &SystemProfile::system1()).unwrap();
+        assert_eq!(out.shape(), &[4, 16]);
+        let src = f.f32_data();
+        let got = out.f32_data();
+        for (b, &r) in idx.iter().enumerate() {
+            assert_eq!(
+                &got[b * 16..(b + 1) * 16],
+                &src[r as usize * 16..(r as usize + 1) * 16]
+            );
+        }
+    }
+
+    #[test]
+    fn unified_modes_reject_cpu_tensor() {
+        let f = feats(Device::Cpu);
+        let err = index_select(&f, &[1], AccessMode::UnifiedAligned, &SystemProfile::system1());
+        assert!(matches!(err, Err(Error::Device(_))));
+    }
+
+    #[test]
+    fn cpu_gather_may_access_unified() {
+        // "From the CPU's perspective, accessing the unified tensors is
+        // identical to accessing CPU tensors." (§4.1)
+        let f = feats(Device::Unified);
+        assert!(index_select(&f, &[1], AccessMode::CpuGather, &SystemProfile::system1()).is_ok());
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let f = feats(Device::Unified);
+        let err = index_select(&f, &[100], AccessMode::UnifiedAligned, &SystemProfile::system1());
+        assert!(matches!(err, Err(Error::IndexOutOfBounds { .. })));
+    }
+
+    #[test]
+    fn aligned_never_slower_than_naive() {
+        let f = feats(Device::Unified);
+        let idx: Vec<u32> = (0..64).map(|i| (i * 37) % 100).collect();
+        let sys = SystemProfile::system1();
+        let (_, naive) = index_select(&f, &idx, AccessMode::UnifiedNaive, &sys).unwrap();
+        let (_, opt) = index_select(&f, &idx, AccessMode::UnifiedAligned, &sys).unwrap();
+        assert!(opt.cost.time_s <= naive.cost.time_s);
+    }
+
+    #[test]
+    fn baseline_charges_cpu_time_direct_does_not() {
+        let sys = SystemProfile::system1();
+        let fu = feats(Device::Unified);
+        let fc = feats(Device::Cpu);
+        let idx: Vec<u32> = (0..64).collect();
+        let (_, py) = index_select(&fc, &idx, AccessMode::CpuGather, &sys).unwrap();
+        let (_, pyd) = index_select(&fu, &idx, AccessMode::UnifiedAligned, &sys).unwrap();
+        assert!(py.cost.cpu_time_s > 0.0);
+        assert_eq!(pyd.cost.cpu_time_s, 0.0);
+    }
+
+    #[test]
+    fn uvm_mode_directed_to_featurestore() {
+        let f = feats(Device::Unified);
+        assert!(index_select(&f, &[1], AccessMode::Uvm, &SystemProfile::system1()).is_err());
+    }
+}

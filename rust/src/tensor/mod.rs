@@ -1,0 +1,29 @@
+//! The unified-tensor runtime — the paper's §4 systems contribution,
+//! implemented as a library instead of a PyTorch fork.
+//!
+//! * [`dtype`] / [`device`] — scalar types and the three device kinds
+//!   (`cpu`, `cuda`, `unified`), with the per-tensor `propagatedToCUDA`
+//!   placement hint (§4.2).
+//! * [`allocator`] — caching allocator with allocation recycling, modeled
+//!   on the PyTorch CUDA allocator as §4.4 describes.
+//! * [`tensor`] — the `Tensor` type: creation, `.to(device)`,
+//!   `is_unified`, `set_propagated_to_cuda`, `mem_advise`, arithmetic with
+//!   mixed device operands, and advanced indexing.
+//! * [`placement`] — the complete computation/output placement rules of
+//!   paper Table 3.
+//! * [`indexing`] — `index_select` with per-access-mode transfer costing:
+//!   the `features[neighbor_id]` hot path of Listing 2.
+
+pub mod allocator;
+pub mod device;
+pub mod dtype;
+pub mod indexing;
+pub mod placement;
+pub mod tensor;
+
+pub use allocator::{AllocStats, CachingAllocator};
+pub use device::{Device, MemAdvise};
+pub use dtype::DType;
+pub use indexing::{index_select, IndexSelectReport};
+pub use placement::{resolve_placement, OperandKind, Placement};
+pub use tensor::Tensor;

@@ -1,0 +1,213 @@
+//! Computation and storage placement rules — paper §4.3, Table 3 verbatim.
+//!
+//! Given the operand mix of an operator that involves at least one unified
+//! tensor, decide (a) which physical device executes and (b) what kind of
+//! tensor the output is.  The two dispatch keys of §4.4 correspond to the
+//! `UnifiedPropagation` / `UnifiedNonPropagation` operand kinds here.
+
+use crate::tensor::device::Device;
+
+/// Classification of one operand for placement resolution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OperandKind {
+    /// CPU tensor with more than zero dimensions.
+    CpuNonScalar,
+    /// CPU scalar (0-dim) — PyTorch lets these mix with GPU tensors.
+    CpuScalar,
+    Gpu,
+    /// Unified tensor with `propagatedToCUDA == true`.
+    UnifiedPropagation,
+    /// Unified tensor with `propagatedToCUDA == false`.
+    UnifiedNonPropagation,
+}
+
+/// What the output tensor of an operation should be.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutputKind {
+    Gpu,
+    UnifiedPropagation,
+    UnifiedNonPropagation,
+}
+
+/// Resolved placement decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub compute: Device,
+    pub output: OutputKind,
+}
+
+/// Apply paper Table 3.  Panics if no operand is unified (the table is
+/// defined only for operators with unified operands; native dispatch covers
+/// the rest).
+pub fn resolve_placement(operands: &[OperandKind]) -> Placement {
+    let any_unified = operands.iter().any(|o| {
+        matches!(
+            o,
+            OperandKind::UnifiedPropagation | OperandKind::UnifiedNonPropagation
+        )
+    });
+    assert!(
+        any_unified,
+        "placement rules apply only to ops with unified operands"
+    );
+
+    let any_nonprop = operands
+        .iter()
+        .any(|o| *o == OperandKind::UnifiedNonPropagation);
+    let any_prop = operands
+        .iter()
+        .any(|o| *o == OperandKind::UnifiedPropagation);
+    let any_cpu_nonscalar = operands.iter().any(|o| *o == OperandKind::CpuNonScalar);
+    let any_gpu = operands.iter().any(|o| *o == OperandKind::Gpu);
+
+    // Column: "all unified tensors prefer propagation" vs "at least one
+    // unified tensor prefers non-propagation".
+    if !any_nonprop {
+        // -- left column (all unified prefer propagation)
+        if any_cpu_nonscalar {
+            // Row 1: compute on GPU; output unified non-propagation.
+            Placement {
+                compute: Device::Cuda,
+                output: OutputKind::UnifiedNonPropagation,
+            }
+        } else if any_gpu {
+            // Row 2: compute on GPU; output GPU.
+            Placement {
+                compute: Device::Cuda,
+                output: OutputKind::Gpu,
+            }
+        } else {
+            // Row 3 (only CPU scalars / nothing non-unified): GPU / GPU.
+            Placement {
+                compute: Device::Cuda,
+                output: OutputKind::Gpu,
+            }
+        }
+    } else {
+        // -- right column (at least one unified prefers non-propagation)
+        if any_cpu_nonscalar {
+            // Row 1: CPU if no operand prefers propagation, else GPU;
+            // output unified non-propagation.
+            Placement {
+                compute: if any_prop { Device::Cuda } else { Device::Cpu },
+                output: OutputKind::UnifiedNonPropagation,
+            }
+        } else if any_gpu {
+            // Row 2: compute on GPU; output unified propagation.
+            Placement {
+                compute: Device::Cuda,
+                output: OutputKind::UnifiedPropagation,
+            }
+        } else {
+            // Row 3: CPU if no operand prefers propagation, else GPU;
+            // output unified non-propagation.
+            Placement {
+                compute: if any_prop { Device::Cuda } else { Device::Cpu },
+                output: OutputKind::UnifiedNonPropagation,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use OperandKind::*;
+    use OutputKind as Out;
+
+    // The six cells of paper Table 3, exactly.
+
+    #[test]
+    fn row1_left_cpu_nonscalar_all_prop() {
+        let p = resolve_placement(&[CpuNonScalar, UnifiedPropagation]);
+        assert_eq!(p.compute, Device::Cuda);
+        assert_eq!(p.output, Out::UnifiedNonPropagation);
+    }
+
+    #[test]
+    fn row1_right_cpu_nonscalar_some_nonprop() {
+        // no propagation-preferring operand -> CPU
+        let p = resolve_placement(&[CpuNonScalar, UnifiedNonPropagation]);
+        assert_eq!(p.compute, Device::Cpu);
+        assert_eq!(p.output, Out::UnifiedNonPropagation);
+        // mixed preferences -> GPU
+        let p = resolve_placement(&[CpuNonScalar, UnifiedNonPropagation, UnifiedPropagation]);
+        assert_eq!(p.compute, Device::Cuda);
+        assert_eq!(p.output, Out::UnifiedNonPropagation);
+    }
+
+    #[test]
+    fn row2_left_gpu_all_prop() {
+        let p = resolve_placement(&[Gpu, UnifiedPropagation]);
+        assert_eq!(p.compute, Device::Cuda);
+        assert_eq!(p.output, Out::Gpu);
+    }
+
+    #[test]
+    fn row2_right_gpu_some_nonprop() {
+        let p = resolve_placement(&[Gpu, UnifiedNonPropagation]);
+        assert_eq!(p.compute, Device::Cuda);
+        assert_eq!(p.output, Out::UnifiedPropagation);
+    }
+
+    #[test]
+    fn row3_left_scalars_or_pure_unified_all_prop() {
+        let p = resolve_placement(&[CpuScalar, UnifiedPropagation]);
+        assert_eq!(p.compute, Device::Cuda);
+        assert_eq!(p.output, Out::Gpu);
+        let p = resolve_placement(&[UnifiedPropagation, UnifiedPropagation]);
+        assert_eq!(p.compute, Device::Cuda);
+        assert_eq!(p.output, Out::Gpu);
+    }
+
+    #[test]
+    fn row3_right_scalars_or_pure_unified_some_nonprop() {
+        let p = resolve_placement(&[CpuScalar, UnifiedNonPropagation]);
+        assert_eq!(p.compute, Device::Cpu);
+        assert_eq!(p.output, Out::UnifiedNonPropagation);
+        let p = resolve_placement(&[UnifiedNonPropagation, UnifiedPropagation]);
+        assert_eq!(p.compute, Device::Cuda);
+        assert_eq!(p.output, Out::UnifiedNonPropagation);
+    }
+
+    #[test]
+    fn row1_takes_precedence_over_row2() {
+        // Both a CPU non-scalar and a GPU operand present: row 1 applies.
+        let p = resolve_placement(&[CpuNonScalar, Gpu, UnifiedPropagation]);
+        assert_eq!(p.output, Out::UnifiedNonPropagation);
+    }
+
+    #[test]
+    #[should_panic(expected = "unified")]
+    fn requires_unified_operand() {
+        resolve_placement(&[CpuNonScalar, Gpu]);
+    }
+
+    /// Table 3 is a *total* function over every operand mix containing a
+    /// unified tensor — exhaustively enumerate mixes up to 3 operands.
+    #[test]
+    fn total_over_all_mixes() {
+        let kinds = [
+            CpuNonScalar,
+            CpuScalar,
+            Gpu,
+            UnifiedPropagation,
+            UnifiedNonPropagation,
+        ];
+        let mut covered = 0;
+        for &a in &kinds {
+            for &b in &kinds {
+                for &c in &kinds {
+                    let ops = [a, b, c];
+                    if ops.iter().any(|o| {
+                        matches!(o, UnifiedPropagation | UnifiedNonPropagation)
+                    }) {
+                        let _ = resolve_placement(&ops);
+                        covered += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(covered, 5 * 5 * 5 - 3 * 3 * 3); // mixes with >=1 unified
+    }
+}

@@ -1,0 +1,485 @@
+//! The `Tensor` type: PyTorch-Direct's unified tensor as a Rust library.
+//!
+//! API surface mirrors paper Table 1/2:
+//!
+//! ```ignore
+//! let feats = Tensor::rand_f32(&[n, f], Device::Cpu, &mut rng);
+//! let feats = feats.to(Device::Unified);          // Listing 2, line 2
+//! assert!(feats.is_unified());
+//! let mb = index_select(&feats, &idx, mode, &sys); // Listing 2, line 11
+//! ```
+//!
+//! All storage physically lives in host memory (the GPU is simulated); the
+//! `Device` tag governs *who is allowed to touch it* and how transfers are
+//! costed, which is exactly the distinction the paper's runtime draws.
+
+use std::sync::Arc;
+
+use once_cell::sync::Lazy;
+
+use crate::error::{Error, Result};
+use crate::tensor::allocator::{AllocStats, Block, CachingAllocator};
+use crate::tensor::device::{Device, MemAdvise};
+use crate::tensor::dtype::DType;
+use crate::tensor::placement::OperandKind;
+use crate::util::rng::Rng;
+
+/// Per-device global allocators (the paper's "new memory allocator ...
+/// for all unified tensors" plus the native CPU/CUDA ones).
+static CPU_ALLOC: Lazy<CachingAllocator> = Lazy::new(CachingAllocator::new);
+static CUDA_ALLOC: Lazy<CachingAllocator> = Lazy::new(CachingAllocator::new);
+static UNIFIED_ALLOC: Lazy<CachingAllocator> = Lazy::new(CachingAllocator::new);
+
+pub fn allocator_for(device: Device) -> &'static CachingAllocator {
+    match device {
+        Device::Cpu => &CPU_ALLOC,
+        Device::Cuda => &CUDA_ALLOC,
+        Device::Unified => &UNIFIED_ALLOC,
+    }
+}
+
+/// Snapshot of the unified allocator's stats (tests / perf assertions).
+pub fn unified_alloc_stats() -> AllocStats {
+    UNIFIED_ALLOC.stats()
+}
+
+#[derive(Debug)]
+struct Storage {
+    block: Option<Block>,
+    device: Device,
+}
+
+impl Storage {
+    fn block(&self) -> &Block {
+        self.block.as_ref().expect("storage block present until drop")
+    }
+}
+
+impl Drop for Storage {
+    fn drop(&mut self) {
+        if let Some(block) = self.block.take() {
+            allocator_for(self.device).free(block);
+        }
+    }
+}
+
+/// A dense, row-major tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    storage: Arc<Storage>,
+    dtype: DType,
+    shape: Vec<usize>,
+    /// `propagatedToCUDA` placement hint (§4.2); meaningful iff unified.
+    propagated: bool,
+    advise: MemAdvise,
+}
+
+impl Tensor {
+    // ---------------------------------------------------------- creation
+
+    fn alloc_storage(nbytes: usize, device: Device) -> Arc<Storage> {
+        Arc::new(Storage {
+            block: Some(allocator_for(device).alloc(nbytes)),
+            device,
+        })
+    }
+
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize], dtype: DType, device: Device) -> Tensor {
+        let numel: usize = shape.iter().product();
+        Tensor {
+            storage: Self::alloc_storage(numel * dtype.size_of(), device),
+            dtype,
+            shape: shape.to_vec(),
+            propagated: true,
+            advise: MemAdvise::None,
+        }
+    }
+
+    /// Build from f32 data (copies).
+    pub fn from_f32(data: &[f32], shape: &[usize], device: Device) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(Error::Shape(format!(
+                "{} values for shape {shape:?}",
+                data.len()
+            )));
+        }
+        let mut t = Tensor::zeros(shape, DType::F32, device);
+        t.f32_mut().copy_from_slice(data);
+        Ok(t)
+    }
+
+    /// Build from i32 data (copies).
+    pub fn from_i32(data: &[i32], shape: &[usize], device: Device) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(Error::Shape(format!(
+                "{} values for shape {shape:?}",
+                data.len()
+            )));
+        }
+        let mut t = Tensor::zeros(shape, DType::I32, device);
+        t.i32_mut().copy_from_slice(data);
+        Ok(t)
+    }
+
+    /// Uniform random f32 in [lo, hi) — `torch.rand`-alike (Table 1's
+    /// `torch.ones(128, device="unified")` pattern).
+    pub fn rand_f32(
+        shape: &[usize],
+        device: Device,
+        rng: &mut Rng,
+        lo: f32,
+        hi: f32,
+    ) -> Tensor {
+        let mut t = Tensor::zeros(shape, DType::F32, device);
+        for v in t.f32_mut() {
+            *v = rng.gen_f32_range(lo, hi);
+        }
+        t
+    }
+
+    /// 0-dim CPU scalar.
+    pub fn scalar_f32(v: f32) -> Tensor {
+        let mut t = Tensor::zeros(&[], DType::F32, Device::Cpu);
+        t.f32_mut()[0] = v;
+        t
+    }
+
+    // ---------------------------------------------------------- metadata
+
+    pub fn device(&self) -> Device {
+        self.storage.device
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.numel() * self.dtype.size_of()
+    }
+
+    /// `tensor.is_unified` of Table 1.
+    pub fn is_unified(&self) -> bool {
+        self.device() == Device::Unified
+    }
+
+    pub fn propagated_to_cuda(&self) -> bool {
+        self.propagated
+    }
+
+    pub fn advise(&self) -> MemAdvise {
+        self.advise
+    }
+
+    /// Classify this tensor for the Table 3 placement rules.
+    pub fn operand_kind(&self) -> OperandKind {
+        match self.device() {
+            Device::Cpu => {
+                if self.shape.is_empty() {
+                    OperandKind::CpuScalar
+                } else {
+                    OperandKind::CpuNonScalar
+                }
+            }
+            Device::Cuda => OperandKind::Gpu,
+            Device::Unified => {
+                if self.propagated {
+                    OperandKind::UnifiedPropagation
+                } else {
+                    OperandKind::UnifiedNonPropagation
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------- data access
+
+    /// f32 view (CPU-side; valid for all devices in the simulation, which
+    /// is precisely the property the paper grants only to unified tensors —
+    /// callers outside tests must go through the featurestore/indexing
+    /// layers that enforce and cost device access).
+    pub fn f32_data(&self) -> &[f32] {
+        assert_eq!(self.dtype, DType::F32, "dtype mismatch");
+        &self.storage.block().as_f32()[..self.numel()]
+    }
+
+    pub fn i32_data(&self) -> &[i32] {
+        assert_eq!(self.dtype, DType::I32, "dtype mismatch");
+        &self.storage.block().as_i32()[..self.numel()]
+    }
+
+    fn f32_mut(&mut self) -> &mut [f32] {
+        assert_eq!(self.dtype, DType::F32);
+        let numel = self.numel();
+        let storage = Arc::get_mut(&mut self.storage)
+            .expect("mutation requires unique ownership (copy-on-write not needed here)");
+        &mut storage.block.as_mut().unwrap().as_f32_mut()[..numel]
+    }
+
+    fn i32_mut(&mut self) -> &mut [i32] {
+        assert_eq!(self.dtype, DType::I32);
+        let numel = self.numel();
+        let storage = Arc::get_mut(&mut self.storage)
+            .expect("mutation requires unique ownership");
+        &mut storage.block.as_mut().unwrap().as_i32_mut()[..numel]
+    }
+
+    // ---------------------------------------------------------- movement
+
+    /// `tensor.to(device)` — copies into fresh storage on `device`.
+    /// `to(Unified)` is Listing 2's two-line migration; no data layout
+    /// change occurs (unified tensors live in host memory).
+    pub fn to(&self, device: Device) -> Tensor {
+        if device == self.device() {
+            return self.clone();
+        }
+        let mut storage = Self::alloc_storage(self.nbytes(), device);
+        {
+            let s = Arc::get_mut(&mut storage).unwrap();
+            let dst = s.block.as_mut().unwrap().as_bytes_mut();
+            dst[..self.nbytes()].copy_from_slice(&self.storage.block().as_bytes()[..self.nbytes()]);
+        }
+        Tensor {
+            storage,
+            dtype: self.dtype,
+            shape: self.shape.clone(),
+            propagated: self.propagated,
+            advise: MemAdvise::None, // advise is a property of the allocation
+        }
+    }
+
+    /// `unified_tensor.set_propagatedToCUDA(flag)` — switches the placement
+    /// hint without allocation or copy (§4.2); RuntimeError on non-unified.
+    pub fn set_propagated_to_cuda(&mut self, flag: bool) -> Result<()> {
+        if !self.is_unified() {
+            return Err(Error::NotUnified("set_propagatedToCUDA".into()));
+        }
+        self.propagated = flag;
+        Ok(())
+    }
+
+    /// `unified_tensor.memAdvise(advise, device)` (Table 2); RuntimeError on
+    /// non-unified tensors, exactly as §4.2 specifies.
+    pub fn mem_advise(&mut self, advise: MemAdvise) -> Result<()> {
+        if !self.is_unified() {
+            return Err(Error::NotUnified("memAdvise".into()));
+        }
+        self.advise = advise;
+        Ok(())
+    }
+
+    // -------------------------------------------------------- arithmetic
+
+    /// Elementwise add with the paper's mixed-device semantics: any
+    /// combination involving a unified tensor is legal and placed per
+    /// Table 3; same-device native combinations are legal; CPU×GPU without
+    /// a unified operand is the classic PyTorch device-mismatch error.
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        if self.dtype != DType::F32 || other.dtype != DType::F32 {
+            return Err(Error::DType {
+                expected: "f32".into(),
+                got: format!("{}/{}", self.dtype, other.dtype),
+            });
+        }
+        let (out_shape, scalar_rhs, scalar_lhs) = if self.shape == other.shape {
+            (self.shape.clone(), false, false)
+        } else if other.shape.is_empty() {
+            (self.shape.clone(), true, false)
+        } else if self.shape.is_empty() {
+            (other.shape.clone(), false, true)
+        } else {
+            return Err(Error::Shape(format!(
+                "add: {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        };
+
+        let any_unified = self.is_unified() || other.is_unified();
+        let (out_device, out_prop) = if any_unified {
+            let placement = crate::tensor::placement::resolve_placement(&[
+                self.operand_kind(),
+                other.operand_kind(),
+            ]);
+            match placement.output {
+                crate::tensor::placement::OutputKind::Gpu => (Device::Cuda, true),
+                crate::tensor::placement::OutputKind::UnifiedPropagation => {
+                    (Device::Unified, true)
+                }
+                crate::tensor::placement::OutputKind::UnifiedNonPropagation => {
+                    (Device::Unified, false)
+                }
+            }
+        } else if self.device() == other.device() {
+            (self.device(), true)
+        } else if other.shape.is_empty() || self.shape.is_empty() {
+            // scalar promotion across devices is allowed in PyTorch
+            (
+                if self.shape.is_empty() {
+                    other.device()
+                } else {
+                    self.device()
+                },
+                true,
+            )
+        } else {
+            return Err(Error::Device(format!(
+                "cannot add {} tensor to {} tensor without unified type",
+                self.device(),
+                other.device()
+            )));
+        };
+
+        let mut out = Tensor::zeros(&out_shape, DType::F32, out_device);
+        out.propagated = out_prop;
+        {
+            let a = self.f32_data();
+            let b = other.f32_data();
+            let dst = out.f32_mut();
+            if scalar_rhs {
+                let s = b[0];
+                for (d, &x) in dst.iter_mut().zip(a) {
+                    *d = x + s;
+                }
+            } else if scalar_lhs {
+                let s = a[0];
+                for (d, &y) in dst.iter_mut().zip(b) {
+                    *d = s + y;
+                }
+            } else {
+                for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+                    *d = x + y;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Sum of all elements (test/metric helper).
+    pub fn sum_f32(&self) -> f32 {
+        self.f32_data().iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creation_and_metadata() {
+        let t = Tensor::zeros(&[2, 3], DType::F32, Device::Cpu);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.nbytes(), 24);
+        assert!(!t.is_unified());
+        assert_eq!(t.device(), Device::Cpu);
+    }
+
+    #[test]
+    fn to_unified_is_two_line_migration() {
+        // Listing 1 -> Listing 2: dataload().to("unified")
+        let mut rng = Rng::new(1);
+        let feats = Tensor::rand_f32(&[10, 4], Device::Cpu, &mut rng, -1.0, 1.0);
+        let uni = feats.to(Device::Unified);
+        assert!(uni.is_unified());
+        assert_eq!(uni.f32_data(), feats.f32_data());
+    }
+
+    #[test]
+    fn from_f32_shape_checked() {
+        assert!(Tensor::from_f32(&[1.0, 2.0], &[3], Device::Cpu).is_err());
+        let t = Tensor::from_f32(&[1.0, 2.0, 3.0], &[3], Device::Cpu).unwrap();
+        assert_eq!(t.f32_data(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn set_propagated_requires_unified() {
+        let mut cpu = Tensor::zeros(&[2], DType::F32, Device::Cpu);
+        assert!(matches!(
+            cpu.set_propagated_to_cuda(false),
+            Err(Error::NotUnified(_))
+        ));
+        let mut uni = cpu.to(Device::Unified);
+        uni.set_propagated_to_cuda(false).unwrap();
+        assert!(!uni.propagated_to_cuda());
+    }
+
+    #[test]
+    fn mem_advise_requires_unified() {
+        let mut cpu = Tensor::zeros(&[2], DType::F32, Device::Cpu);
+        assert!(cpu.mem_advise(MemAdvise::ReadMostly).is_err());
+        let mut uni = cpu.to(Device::Unified);
+        uni.mem_advise(MemAdvise::ReadMostly).unwrap();
+        assert_eq!(uni.advise(), MemAdvise::ReadMostly);
+    }
+
+    #[test]
+    fn add_same_device() {
+        let a = Tensor::from_f32(&[1.0, 2.0], &[2], Device::Cpu).unwrap();
+        let b = Tensor::from_f32(&[10.0, 20.0], &[2], Device::Cpu).unwrap();
+        let c = a.add(&b).unwrap();
+        assert_eq!(c.f32_data(), &[11.0, 22.0]);
+        assert_eq!(c.device(), Device::Cpu);
+    }
+
+    #[test]
+    fn add_cpu_gpu_without_unified_fails() {
+        let a = Tensor::from_f32(&[1.0, 2.0], &[2], Device::Cpu).unwrap();
+        let b = Tensor::from_f32(&[1.0, 2.0], &[2], Device::Cuda).unwrap();
+        assert!(matches!(a.add(&b), Err(Error::Device(_))));
+    }
+
+    #[test]
+    fn add_unified_plus_cpu_follows_table3_row1() {
+        // "unified_tensor + cpu_tensor" of paper Table 1: legal, and the
+        // output is unified non-propagation per Table 3 row 1.
+        let u = Tensor::from_f32(&[1.0, 2.0], &[2], Device::Unified).unwrap();
+        let c = Tensor::from_f32(&[5.0, 6.0], &[2], Device::Cpu).unwrap();
+        let out = u.add(&c).unwrap();
+        assert_eq!(out.f32_data(), &[6.0, 8.0]);
+        assert!(out.is_unified());
+        assert!(!out.propagated_to_cuda());
+    }
+
+    #[test]
+    fn add_unified_plus_gpu_gives_gpu_output() {
+        // Table 3 row 2, left column.
+        let u = Tensor::from_f32(&[1.0], &[1], Device::Unified).unwrap();
+        let g = Tensor::from_f32(&[2.0], &[1], Device::Cuda).unwrap();
+        let out = u.add(&g).unwrap();
+        assert_eq!(out.device(), Device::Cuda);
+    }
+
+    #[test]
+    fn add_unified_plus_scalar_gives_gpu_output() {
+        // Table 3 row 3, left column ("binary ... operators accept GPU
+        // scalar and CPU scalar as the two operands").
+        let u = Tensor::from_f32(&[1.0, 2.0], &[2], Device::Unified).unwrap();
+        let s = Tensor::scalar_f32(10.0);
+        let out = u.add(&s).unwrap();
+        assert_eq!(out.f32_data(), &[11.0, 12.0]);
+        assert_eq!(out.device(), Device::Cuda);
+    }
+
+    #[test]
+    fn allocator_recycling_via_tensor_lifecycle() {
+        let before = unified_alloc_stats();
+        for _ in 0..10 {
+            let t = Tensor::zeros(&[1024], DType::F32, Device::Unified);
+            drop(t);
+        }
+        let after = unified_alloc_stats();
+        assert_eq!(after.allocs - before.allocs, 10);
+        // at most one backing alloc for this class in this loop
+        assert!(after.backing_allocs - before.backing_allocs <= 1);
+    }
+}

@@ -1,0 +1,91 @@
+//! Byte-size formatting and alignment arithmetic.
+
+/// Format a byte count with binary units ("1.5 GiB").
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format seconds adaptively ("12.3 ms", "4.5 s").
+pub fn human_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} us", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Round `x` up to a multiple of `align` (align must be a power of two).
+#[inline]
+pub fn align_up(x: usize, align: usize) -> usize {
+    debug_assert!(align.is_power_of_two());
+    (x + align - 1) & !(align - 1)
+}
+
+/// Round `x` down to a multiple of `align` (align must be a power of two).
+#[inline]
+pub fn align_down(x: usize, align: usize) -> usize {
+    debug_assert!(align.is_power_of_two());
+    x & !(align - 1)
+}
+
+/// Number of `align`-sized units covering `[off, off+len)`.
+#[inline]
+pub fn span_units(off: u64, len: u64, align: u64) -> u64 {
+    if len == 0 {
+        return 0;
+    }
+    let first = off / align;
+    let last = (off + len - 1) / align;
+    last - first + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(1_572_864), "1.5 MiB");
+    }
+
+    #[test]
+    fn human_duration_scales() {
+        assert_eq!(human_duration(2.5), "2.50 s");
+        assert_eq!(human_duration(0.0123), "12.30 ms");
+        assert_eq!(human_duration(4.5e-6), "4.50 us");
+    }
+
+    #[test]
+    fn align_roundtrips() {
+        assert_eq!(align_up(0, 128), 0);
+        assert_eq!(align_up(1, 128), 128);
+        assert_eq!(align_up(128, 128), 128);
+        assert_eq!(align_down(129, 128), 128);
+    }
+
+    #[test]
+    fn span_units_counts_straddles() {
+        // 11 bytes starting at byte 120 with 128B lines -> lines 0 and 1
+        assert_eq!(span_units(120, 11, 128), 2);
+        assert_eq!(span_units(0, 128, 128), 1);
+        assert_eq!(span_units(0, 129, 128), 2);
+        assert_eq!(span_units(5, 0, 128), 0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Small self-contained utilities shared by every subsystem.
+//!
+//! The offline build environment vendors only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (rand, rayon, serde, proptest,
+//! criterion) are unavailable — each of the modules below is a from-scratch
+//! replacement scoped to exactly what this project needs.
+
+pub mod bytes;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Timer;

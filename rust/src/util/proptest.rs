@@ -1,0 +1,159 @@
+//! Miniature property-based testing harness (proptest is not vendored).
+//!
+//! Usage:
+//! ```ignore
+//! check(128, |g| {
+//!     let n = g.usize_in(1, 100);
+//!     let xs = g.vec_u32(n, 0, 1000);
+//!     prop_assert(invariant(&xs), format!("violated for {xs:?}"));
+//! });
+//! ```
+//! On failure the harness re-runs with the failing seed printed so the case
+//! can be reproduced with [`check_seeded`].  A bounded shrink pass retries
+//! the property with progressively smaller size hints.
+
+use crate::util::rng::Rng;
+
+/// Generator handed to each property iteration.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in [0.0, 1.0]; shrinking lowers it so ranges get smaller.
+    size: f64,
+    pub seed: u64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+            seed,
+        }
+    }
+
+    /// usize uniform in [lo, hi], scaled toward `lo` while shrinking.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).floor() as usize;
+        lo + if span == 0 {
+            0
+        } else {
+            self.rng.gen_range_usize(span + 1)
+        }
+    }
+
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        self.usize_in(lo as usize, hi as usize) as u64
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.gen_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_u32(&mut self, len: usize, lo: u32, hi: u32) -> Vec<u32> {
+        (0..len)
+            .map(|_| lo + self.rng.gen_range((hi - lo + 1) as u64) as u32)
+            .collect()
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.gen_f32_range(lo, hi)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.gen_range_usize(xs.len())]
+    }
+}
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `prop` for `iters` random cases; panic with the seed on failure.
+pub fn check(iters: u64, prop: impl Fn(&mut Gen) -> PropResult) {
+    check_with_base_seed(iters, 0xDEAD_BEEF, prop)
+}
+
+/// Run with an explicit base seed (each iteration derives its own).
+pub fn check_with_base_seed(
+    iters: u64,
+    base_seed: u64,
+    prop: impl Fn(&mut Gen) -> PropResult,
+) {
+    for i in 0..iters {
+        let seed = base_seed.wrapping_add(i).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: retry the same seed with smaller size hints and report
+            // the smallest size that still fails.
+            let mut fail_size = 1.0;
+            let mut fail_msg = msg;
+            for &size in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                let mut g2 = Gen::new(seed, size);
+                match prop(&mut g2) {
+                    Err(m) => {
+                        fail_size = size;
+                        fail_msg = m;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property failed (iter {i}, seed {seed:#x}, size {fail_size}): {fail_msg}\n\
+                 reproduce with check_seeded({seed:#x}, {fail_size}, prop)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn check_seeded(seed: u64, size: f64, prop: impl Fn(&mut Gen) -> PropResult) {
+    let mut g = Gen::new(seed, size);
+    if let Err(msg) = prop(&mut g) {
+        panic!("property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(64, |g| {
+            let n = g.usize_in(0, 50);
+            let v = g.vec_u32(n, 0, 9);
+            prop_assert(v.iter().all(|&x| x <= 9), "range violated")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(64, |g| {
+            let n = g.usize_in(0, 100);
+            prop_assert(n < 90, format!("n={n}"))
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check(128, |g| {
+            let x = g.usize_in(3, 7);
+            let f = g.f64_in(-1.0, 1.0);
+            prop_assert((3..=7).contains(&x) && (-1.0..1.0).contains(&f), "bounds")
+        });
+    }
+}

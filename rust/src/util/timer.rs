@@ -1,0 +1,99 @@
+//! Wall-clock timing helpers used by the measured half of the time model
+//! (DESIGN.md §5). Simulated durations are plain `f64` seconds and never go
+//! through these types.
+
+use std::time::Instant;
+
+/// One-shot timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    /// Elapsed seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+/// Accumulating stopwatch for per-stage busy time.
+#[derive(Clone, Debug, Default)]
+pub struct Stopwatch {
+    total_s: f64,
+    laps: u64,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and accumulate its duration.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.total_s += t.elapsed_s();
+        self.laps += 1;
+        out
+    }
+
+    pub fn add_s(&mut self, s: f64) {
+        self.total_s += s;
+        self.laps += 1;
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.total_s
+    }
+
+    pub fn laps(&self) -> u64 {
+        self.laps
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.laps == 0 {
+            0.0
+        } else {
+            self.total_s / self.laps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.add_s(0.5);
+        sw.add_s(1.5);
+        assert_eq!(sw.total_s(), 2.0);
+        assert_eq!(sw.laps(), 2);
+        assert_eq!(sw.mean_s(), 1.0);
+    }
+
+    #[test]
+    fn stopwatch_times_closures() {
+        let mut sw = Stopwatch::new();
+        let v = sw.time(|| 42);
+        assert_eq!(v, 42);
+        assert!(sw.total_s() >= 0.0);
+        assert_eq!(sw.laps(), 1);
+    }
+}

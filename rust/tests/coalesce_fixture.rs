@@ -1,0 +1,71 @@
+//! Cross-language fixture: the rust warp/coalescing model must agree with
+//! the python specification (`python/compile/coalesce.py`) on pinned
+//! numbers, including the paper's Fig. 5 toy example.  The same constants
+//! are asserted in `python/tests/test_coalesce.py` — if either side
+//! drifts, one of the two suites goes red.
+
+use ptdirect::device::warp::{count_requests, per_row_requests, WarpModel};
+
+/// Paper Fig. 4/5 scaling: warp 4 threads, cacheline 4 elements (16 B),
+/// 11 features per node, gather rows [0, 2, 4].
+fn fig5_model() -> WarpModel {
+    WarpModel {
+        warp: 4,
+        cl_elems: 4,
+        elem_bytes: 4,
+    }
+}
+
+#[test]
+fn fig5_pinned_totals() {
+    let idx = [0u32, 2, 4];
+    let naive = count_requests(&idx, 11, fig5_model(), false);
+    let opt = count_requests(&idx, 11, fig5_model(), true);
+    // pinned in python/tests/test_coalesce.py::test_fig5_totals
+    assert_eq!(naive.requests, 16);
+    assert_eq!(opt.requests, 13);
+    assert_eq!(naive.cachelines, 10);
+    assert_eq!(opt.cachelines, 10);
+    assert_eq!(naive.useful_bytes, 3 * 11 * 4);
+}
+
+#[test]
+fn fig5_pinned_row2_attribution() {
+    let idx = [0u32, 2, 4];
+    let naive = per_row_requests(&idx, 11, fig5_model(), false);
+    let opt = per_row_requests(&idx, 11, fig5_model(), true);
+    // The paper's narration: "Alignment reduces the total number of PCIe
+    // requests from 7 to 5 in this case" (the row-2 accesses of Fig. 4/5).
+    assert_eq!(naive[1], 7);
+    assert_eq!(opt[1], 5);
+}
+
+#[test]
+fn realistic_2052b_pinned_window() {
+    // 513-element (2052 B) rows at real constants; a deterministic index
+    // set pinned against the python model.
+    let idx: Vec<u32> = (0..64u32).map(|i| i * 7919 % 100_000).collect();
+    let model = WarpModel::default();
+    let naive = count_requests(&idx, 513, model, false);
+    let opt = count_requests(&idx, 513, model, true);
+    let ratio = naive.requests as f64 / opt.requests as f64;
+    assert!(
+        (1.6..2.0).contains(&ratio),
+        "naive/opt request ratio {ratio}"
+    );
+    // amplification bounds: naive near 2x, opt near 1x
+    assert!(naive.amplification() > 1.7);
+    assert!(opt.amplification() < 1.25);
+}
+
+#[test]
+fn shift_gate_matches_scan() {
+    // The applicability gate (f >= 2*cl, misaligned) — the python scan in
+    // test_coalesce.py demonstrates violations below it.
+    let m = WarpModel::default();
+    assert!(!m.shift_applies(16)); // sub-cacheline
+    assert!(!m.shift_applies(33)); // between cl and 2cl
+    assert!(!m.shift_applies(64)); // aligned multiple
+    assert!(m.shift_applies(65)); // >= 2cl, misaligned
+    assert!(m.shift_applies(513)); // the Fig. 7 regime
+}

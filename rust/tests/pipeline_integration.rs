@@ -1,0 +1,111 @@
+//! Integration over the streaming pipeline with real sampler + feature
+//! store stages, plus failure injection.
+
+use std::sync::Mutex;
+
+use ptdirect::config::{AccessMode, SystemProfile};
+use ptdirect::error::Error;
+use ptdirect::featurestore::FeatureStore;
+use ptdirect::graph::generator::{rmat, RmatParams};
+use ptdirect::pipeline::executor::run_pipeline;
+use ptdirect::pipeline::queue::BoundedQueue;
+use ptdirect::sampler::NeighborSampler;
+use ptdirect::util::rng::Rng;
+
+#[test]
+fn pipelined_epoch_with_real_stages() {
+    let sys = SystemProfile::system1();
+    let graph = rmat(2000, 20_000, RmatParams::default(), 5).unwrap();
+    let store =
+        FeatureStore::build(2000, 32, 8, AccessMode::UnifiedAligned, &sys, 5).unwrap();
+    let sampler = NeighborSampler::new(&graph, &[3, 3], 8);
+    let rng = Mutex::new(Rng::new(9));
+
+    let total_rows = Mutex::new(0usize);
+    let report = run_pipeline(
+        40,
+        4,
+        |i| {
+            let seeds: Vec<u32> = (0..16u32).map(|k| (i as u32 * 16 + k) % 2000).collect();
+            Ok(sampler.sample(&seeds, &mut rng.lock().unwrap()))
+        },
+        |mb| {
+            let (x0, cost) = store.gather(&mb.src_nodes)?;
+            Ok((mb, x0, cost))
+        },
+        |(mb, x0, _cost)| {
+            assert_eq!(x0.len(), mb.src_nodes.len() * 32);
+            *total_rows.lock().unwrap() += mb.src_nodes.len();
+            Ok(())
+        },
+    )
+    .unwrap();
+    assert_eq!(report.items, 40);
+    // 16 roots * (1+3) * (1+3) = 256 rows per batch
+    assert_eq!(*total_rows.lock().unwrap(), 40 * 256);
+    assert!(report.stages.sample_s > 0.0 && report.stages.gather_s > 0.0);
+}
+
+#[test]
+fn gather_failure_mid_pipeline_aborts_without_hanging() {
+    let sys = SystemProfile::system1();
+    let graph = rmat(500, 3000, RmatParams::default(), 6).unwrap();
+    let store = FeatureStore::build(500, 8, 4, AccessMode::CpuGather, &sys, 6).unwrap();
+    let sampler = NeighborSampler::new(&graph, &[2], 4);
+    let rng = Mutex::new(Rng::new(1));
+
+    let r = run_pipeline(
+        100,
+        2,
+        |i| {
+            let seeds: Vec<u32> = vec![(i % 500) as u32; 4];
+            Ok((i, sampler.sample(&seeds, &mut rng.lock().unwrap())))
+        },
+        |(i, mb)| {
+            if i == 7 {
+                // inject an out-of-bounds gather
+                store.gather(&[9999]).map(|_| ())?;
+            }
+            let (x0, _) = store.gather(&mb.src_nodes)?;
+            Ok(x0)
+        },
+        |_x0| Ok(()),
+    );
+    match r {
+        Err(Error::IndexOutOfBounds { .. }) => {}
+        Err(e) => panic!("unexpected error {e}"),
+        Ok(_) => panic!("expected injected failure"),
+    }
+}
+
+#[test]
+fn closed_queue_rejects_producers_immediately() {
+    let q: BoundedQueue<u32> = BoundedQueue::new(2);
+    q.push(1).unwrap();
+    q.close();
+    assert!(q.push(2).is_err());
+    assert_eq!(q.pop(), Some(1));
+    assert_eq!(q.pop(), None);
+}
+
+#[test]
+fn deep_pipeline_stress_no_deadlock() {
+    // Rapid-fire tiny items through depth-1 queues from multiple runs; a
+    // regression guard for the close-on-error protocol.
+    for round in 0..5u64 {
+        let fail_at = round * 13 + 3;
+        let _ = run_pipeline(
+            64,
+            1,
+            |i| Ok(i),
+            move |b| {
+                if b == fail_at {
+                    Err(Error::Pipeline("boom".into()))
+                } else {
+                    Ok(b)
+                }
+            },
+            |_f| Ok(()),
+        );
+    }
+}

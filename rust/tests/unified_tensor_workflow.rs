@@ -1,0 +1,100 @@
+//! Integration over the unified-tensor API: the Listing 1 -> Listing 2
+//! migration exercised end to end, plus failure injection.
+
+use ptdirect::config::{AccessMode, SystemProfile};
+use ptdirect::tensor::{index_select, Device, MemAdvise, Tensor};
+use ptdirect::util::proptest::{check, prop_assert, Gen};
+use ptdirect::util::rng::Rng;
+
+#[test]
+fn listing2_migration_workflow() {
+    let sys = SystemProfile::system1();
+    let mut rng = Rng::new(1);
+
+    // Listing 1: features on CPU, gather via CPU, copy to GPU.
+    let features_cpu = Tensor::rand_f32(&[5000, 64], Device::Cpu, &mut rng, -1.0, 1.0);
+    let idx: Vec<u32> = (0..256).map(|_| rng.gen_range(5000) as u32).collect();
+    let (out_py, rep_py) = index_select(&features_cpu, &idx, AccessMode::CpuGather, &sys).unwrap();
+
+    // Listing 2: two-line change — to("unified"), direct indexing.
+    let features_uni = features_cpu.to(Device::Unified);
+    let (out_pyd, rep_pyd) =
+        index_select(&features_uni, &idx, AccessMode::UnifiedAligned, &sys).unwrap();
+
+    // identical numerics, cheaper transfer, zero CPU time
+    assert_eq!(out_py.f32_data(), out_pyd.f32_data());
+    assert!(rep_pyd.cost.time_s < rep_py.cost.time_s);
+    assert_eq!(rep_pyd.cost.cpu_time_s, 0.0);
+    assert!(rep_py.cost.cpu_time_s > 0.0);
+    // both outputs landed on the (simulated) GPU
+    assert_eq!(out_py.device(), Device::Cuda);
+    assert_eq!(out_pyd.device(), Device::Cuda);
+}
+
+#[test]
+fn placement_rules_through_arithmetic() {
+    // Table 1's "unified_tensor + cpu_tensor" on real tensors, then the
+    // advanced hints of Table 2.
+    let mut u = Tensor::from_f32(&[1.0, 2.0, 3.0], &[3], Device::Unified).unwrap();
+    let c = Tensor::from_f32(&[10.0, 10.0, 10.0], &[3], Device::Cpu).unwrap();
+    let out = u.add(&c).unwrap();
+    assert!(out.is_unified());
+    assert!(!out.propagated_to_cuda()); // Table 3 row 1
+
+    u.set_propagated_to_cuda(false).unwrap();
+    let out2 = u.add(&c).unwrap();
+    assert!(out2.is_unified());
+
+    u.mem_advise(MemAdvise::ReadMostly).unwrap();
+    assert_eq!(u.advise(), MemAdvise::ReadMostly);
+}
+
+#[test]
+fn non_unified_hint_apis_raise() {
+    // §4.2: RuntimeError on non-unified tensors.
+    for device in [Device::Cpu, Device::Cuda] {
+        let mut t = Tensor::zeros(&[4], ptdirect::tensor::DType::F32, device);
+        assert!(t.set_propagated_to_cuda(true).is_err());
+        assert!(t.mem_advise(MemAdvise::AccessedBy).is_err());
+    }
+}
+
+#[test]
+fn gather_modes_agree_property() {
+    // Property: for random tables/indices, every access mode yields the
+    // same rows (cost differs; values never).
+    let sys = SystemProfile::system1();
+    check(20, |g: &mut Gen| {
+        let n = g.usize_in(2, 400);
+        let f = g.usize_in(1, 96);
+        let b = g.usize_in(1, 128);
+        let mut rng = Rng::new(g.seed);
+        let cpu = Tensor::rand_f32(&[n, f], Device::Cpu, &mut rng, -1.0, 1.0);
+        let uni = cpu.to(Device::Unified);
+        let idx: Vec<u32> = g.vec_u32(b, 0, (n - 1) as u32);
+        let (a, _) = index_select(&cpu, &idx, AccessMode::CpuGather, &sys).unwrap();
+        let (c, _) = index_select(&uni, &idx, AccessMode::UnifiedNaive, &sys).unwrap();
+        let (d, _) = index_select(&uni, &idx, AccessMode::UnifiedAligned, &sys).unwrap();
+        prop_assert(
+            a.f32_data() == c.f32_data() && a.f32_data() == d.f32_data(),
+            "mode outputs diverged",
+        )
+    });
+}
+
+#[test]
+fn allocator_recycles_across_step_like_churn() {
+    let before = ptdirect::tensor::tensor::unified_alloc_stats();
+    for _ in 0..50 {
+        let t = Tensor::zeros(&[2048], ptdirect::tensor::DType::F32, Device::Unified);
+        let u = t.to(Device::Unified); // clone-ish path
+        drop(u);
+        drop(t);
+    }
+    let after = ptdirect::tensor::tensor::unified_alloc_stats();
+    let backing = after.backing_allocs - before.backing_allocs;
+    assert!(
+        backing <= 2,
+        "steady-state churn performed {backing} backing allocations"
+    );
+}
