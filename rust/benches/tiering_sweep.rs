@@ -1,0 +1,193 @@
+//! Tiering sweep — simulated transfer time vs hot-set fraction.
+//!
+//! The acceptance shape for the tiered feature store (see README "Tiered
+//! access mode" and the Data Tiering paper, arXiv:2111.05894):
+//!
+//!  * hot-frac 0 must cost exactly what `UnifiedAligned` costs (the cold
+//!    tier *is* that path);
+//!  * hot-frac 1 must cost what `GpuResident` costs (kernel launch only);
+//!  * in between, transfer time interpolates monotonically downward;
+//!  * on a degree-skewed (power-law) trace, a 25% hot set already beats
+//!    `UnifiedAligned` — frequency follows degree, so the top-degree
+//!    prefix absorbs most of the traffic.
+//!
+//! A second table replays the same epoch against a *cold* cache with LFU
+//! promotion enabled: the hit rate climbs epoch over epoch (cache warming).
+
+mod bench_common;
+
+use bench_common::expect;
+use ptdirect::config::{AccessMode, SystemProfile};
+use ptdirect::coordinator::report::{ms, pct, ratio, Table};
+use ptdirect::featurestore::{degree_ranking, FeatureStore, TierConfig};
+use ptdirect::graph::generator::{rmat, RmatParams};
+use ptdirect::graph::Csr;
+use ptdirect::util::rng::Rng;
+
+const NODES: usize = 20_000;
+const EDGES: usize = 200_000;
+/// 129 f32 = 516 B rows: misaligned, so the cold tier exercises the
+/// circular-shift path exactly like `UnifiedAligned` does.
+const DIM: usize = 129;
+const CLASSES: u32 = 16;
+const BATCHES: usize = 64;
+const BATCH_ROWS: usize = 1024;
+const SEED: u64 = 42;
+
+/// Degree-proportional access trace: pick a uniform random *edge* and take
+/// its source, so a node's draw probability is its out-degree share —
+/// the frequency profile neighbor-sampled training induces, and a
+/// power-law under R-MAT.
+fn skewed_trace(graph: &Csr, rng: &mut Rng) -> Vec<Vec<u32>> {
+    let mut edge_src = vec![0u32; graph.num_edges()];
+    for v in 0..graph.num_nodes() as u32 {
+        let lo = graph.indptr[v as usize] as usize;
+        let hi = graph.indptr[v as usize + 1] as usize;
+        for s in &mut edge_src[lo..hi] {
+            *s = v;
+        }
+    }
+    (0..BATCHES)
+        .map(|_| {
+            (0..BATCH_ROWS)
+                .map(|_| edge_src[rng.gen_range_usize(edge_src.len())])
+                .collect()
+        })
+        .collect()
+}
+
+/// Replay the trace; returns (total simulated transfer seconds, hit rate).
+fn replay(store: &FeatureStore, trace: &[Vec<u32>]) -> (f64, f64) {
+    let before = store.tier_stats();
+    let mut total = 0.0;
+    for batch in trace {
+        let (_, cost) = store.gather(batch).expect("gather");
+        total += cost.time_s;
+    }
+    let hit_rate = match (store.tier_stats(), before) {
+        (Some(now), Some(b)) => now.since(&b).hit_rate(),
+        (Some(now), None) => now.hit_rate(),
+        _ => 0.0,
+    };
+    (total, hit_rate)
+}
+
+fn tiered_store(hot_frac: f64, promote: bool, ranking: Option<Vec<u32>>) -> FeatureStore {
+    FeatureStore::build_tiered(
+        NODES,
+        DIM,
+        CLASSES,
+        &SystemProfile::system1(),
+        SEED,
+        TierConfig {
+            hot_frac,
+            reserve_bytes: 0,
+            promote,
+            ranking,
+        },
+    )
+    .expect("tiered store")
+}
+
+fn main() {
+    let sys = SystemProfile::system1();
+    let graph = rmat(NODES, EDGES, RmatParams::default(), 0x71E5).expect("graph");
+    let mut rng = Rng::new(0x5EE9);
+    let trace = skewed_trace(&graph, &mut rng);
+    let ranking = degree_ranking(&graph);
+
+    let ua = FeatureStore::build(NODES, DIM, CLASSES, AccessMode::UnifiedAligned, &sys, SEED)
+        .expect("unified store");
+    let (t_ua, _) = replay(&ua, &trace);
+    let gpu = FeatureStore::build(NODES, DIM, CLASSES, AccessMode::GpuResident, &sys, SEED)
+        .expect("gpu store");
+    let (t_gpu, _) = replay(&gpu, &trace);
+
+    // ---- static degree-ranked sweep ----
+    let mut t = Table::new(
+        &format!(
+            "Tiering sweep — {BATCHES} x {BATCH_ROWS}-row degree-skewed gathers, \
+             {NODES} x {DIM} f32 table (System1)"
+        ),
+        &["hot frac", "hot rows", "hit rate", "transfer ms", "vs PyD", "vs GPU-res"],
+    );
+    let mut times = Vec::new();
+    let mut t_quarter = f64::NAN;
+    for i in 0..=10 {
+        let frac = i as f64 / 10.0;
+        let store = tiered_store(frac, false, Some(ranking.clone()));
+        let (time, hit_rate) = replay(&store, &trace);
+        let stats = store.tier_stats().expect("tier stats");
+        t.row(&[
+            format!("{frac:.1}"),
+            stats.hot_rows.to_string(),
+            pct(hit_rate),
+            ms(time),
+            ratio(time / t_ua),
+            ratio(time / t_gpu),
+        ]);
+        times.push(time);
+    }
+    {
+        let store = tiered_store(0.25, false, Some(ranking.clone()));
+        let (time, hit_rate) = replay(&store, &trace);
+        t.row(&[
+            "0.25".into(),
+            store.tier_stats().unwrap().hot_rows.to_string(),
+            pct(hit_rate),
+            ms(time),
+            ratio(time / t_ua),
+            ratio(time / t_gpu),
+        ]);
+        t_quarter = time;
+    }
+    t.print();
+    println!("endpoints: PyD {} ms, GPU-resident {} ms", ms(t_ua), ms(t_gpu));
+
+    let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(1e-12);
+    expect(
+        rel(times[0], t_ua) < 1e-9,
+        "hot-frac 0 matches UnifiedAligned exactly",
+    );
+    expect(
+        rel(times[10], t_gpu) < 1e-9,
+        "hot-frac 1 matches GpuResident (kernel-launch epsilon)",
+    );
+    let monotone = times.windows(2).all(|w| w[1] <= w[0] + 1e-12);
+    expect(monotone, "transfer time monotonically nonincreasing in hot-frac");
+    expect(
+        times[10] < times[0],
+        "fully-hot tier strictly beats fully-cold",
+    );
+    expect(
+        t_quarter < t_ua,
+        "25% hot set beats UnifiedAligned on the skewed trace",
+    );
+
+    // ---- LFU warming: cold start, promotion on ----
+    let mut warm = Table::new(
+        "LFU warming — hot-frac 0.25, cold start, same epoch replayed",
+        &["epoch", "hit rate", "transfer ms", "promotions", "hot rows"],
+    );
+    let store = tiered_store(0.25, true, None);
+    let mut rates = Vec::new();
+    for epoch in 0..3 {
+        let snap = store.tier_stats().unwrap();
+        let (time, hit_rate) = replay(&store, &trace);
+        let delta = store.tier_stats().unwrap().since(&snap);
+        warm.row(&[
+            epoch.to_string(),
+            pct(hit_rate),
+            ms(time),
+            delta.promotions.to_string(),
+            delta.hot_rows.to_string(),
+        ]);
+        rates.push(hit_rate);
+    }
+    warm.print();
+    expect(rates[0] < rates[2], "promotion warms the cache epoch over epoch");
+    expect(
+        store.tier_stats().unwrap().hot_bytes <= store.tier_stats().unwrap().capacity_bytes,
+        "hot bytes never exceed the configured budget",
+    );
+}

@@ -12,7 +12,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::config::{AccessMode, RunConfig, SystemProfile};
+use crate::config::{AccessMode, Backend, RunConfig, SystemProfile};
 use crate::coordinator::microbench::{fig6_grid, fig7_sizes, run_cell};
 use crate::coordinator::report::{ms, pct, ratio, Table};
 use crate::coordinator::Trainer;
@@ -68,6 +68,15 @@ impl Args {
             })
             .transpose()
     }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| Error::Config(format!("--{key} expects a number")))
+            })
+            .transpose()
+    }
 }
 
 /// Build a RunConfig from `--config` + CLI overrides.
@@ -108,6 +117,19 @@ pub fn run_config_from(args: &Args) -> Result<RunConfig> {
     if args.flag("skip-train") {
         cfg.skip_train = true;
     }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = Backend::parse(b)
+            .ok_or_else(|| Error::Config(format!("unknown backend `{b}`")))?;
+    }
+    if let Some(f) = args.get_f64("hot-frac")? {
+        cfg.hot_frac = f;
+    }
+    if let Some(f) = args.get_f64("gpu-reserve")? {
+        cfg.gpu_reserve_frac = f;
+    }
+    if args.flag("no-promote") {
+        cfg.tier_promote = false;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -129,10 +151,24 @@ COMMANDS:
 COMMON OPTIONS:
   --dataset reddit|product|twit|sk|paper|wiki   (default product)
   --arch sage|gat                               (default sage)
-  --mode py|pyd|pyd-naive|uvm|gpu               (default pyd)
+  --mode py|pyd|pyd-naive|uvm|gpu|tiered        (default pyd)
   --system system1|system2|system3              (default system1)
+  --backend auto|pjrt|native                    (default auto)
   --epochs N --steps N --scale K --seed S
   --config run.toml --artifacts DIR --skip-train
+
+TIERED ACCESS MODE (--mode tiered):
+  A degree-ranked hot set of feature rows is pinned in (simulated) GPU
+  memory and served at device speed — kernel launch only, like gpu mode —
+  while the remaining cold rows go through the pyd zero-copy PCIe path.
+  Capacity is the GPU memory left after --gpu-reserve, capped by
+  --hot-frac; an online LFU policy promotes frequently-missed rows, so
+  repeated epochs warm the cache.  This follows the Data Tiering follow-up
+  paper (arXiv:2111.05894) to PyTorch-Direct.
+  --hot-frac F      target hot fraction of the feature rows, 0..1 (0.25)
+  --gpu-reserve F   GPU-memory fraction reserved for model/activations (0.5)
+  --no-promote      disable online LFU promotion (static placement)
+  Per-epoch reporting gains tier columns: hit rate, hot bytes, promotions.
 ";
 
 /// Entry point used by main.rs (returns process exit code).
@@ -191,6 +227,19 @@ fn cmd_train(args: &Args) -> Result<()> {
             r.power.watts,
             pct(r.power.cpu_util),
         );
+        if let Some(tier) = &r.tier {
+            println!(
+                "  tier: hit rate {} ({} hits / {} misses), hot {} / cap {}, \
+                 {} promotions, {} evictions",
+                pct(tier.hit_rate()),
+                tier.hits,
+                tier.misses,
+                human_bytes(tier.hot_bytes),
+                human_bytes(tier.capacity_bytes),
+                tier.promotions,
+                tier.evictions,
+            );
+        }
         let m = &r.breakdown_measured;
         println!(
             "  measured-here: sample {} ms, gather {} ms, train {} ms, other {} ms",
@@ -392,5 +441,46 @@ mod tests {
     #[test]
     fn datasets_command_runs() {
         cmd_datasets().unwrap();
+    }
+
+    #[test]
+    fn tiered_cli_overrides() {
+        let a = Args::parse(&sv(&[
+            "train",
+            "--mode",
+            "tiered",
+            "--backend",
+            "native",
+            "--hot-frac",
+            "0.4",
+            "--gpu-reserve",
+            "0.3",
+            "--no-promote",
+        ]))
+        .unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        assert_eq!(cfg.mode, AccessMode::Tiered);
+        assert_eq!(cfg.backend, Backend::Native);
+        assert!((cfg.hot_frac - 0.4).abs() < 1e-12);
+        assert!((cfg.gpu_reserve_frac - 0.3).abs() < 1e-12);
+        assert!(!cfg.tier_promote);
+    }
+
+    #[test]
+    fn tiered_cli_rejects_bad_values() {
+        let a = Args::parse(&sv(&["train", "--hot-frac", "2.0"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--hot-frac", "lots"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--backend", "quantum"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+    }
+
+    #[test]
+    fn help_documents_tiered_mode() {
+        assert!(HELP.contains("tiered"));
+        assert!(HELP.contains("--hot-frac"));
+        assert!(HELP.contains("--gpu-reserve"));
+        assert!(HELP.contains("--backend"));
     }
 }

@@ -26,6 +26,11 @@ pub enum AccessMode {
     Uvm,
     /// Whole feature table resident in GPU memory (small graphs only).
     GpuResident,
+    /// Tiered hot cache: a degree/frequency-ranked hot set pinned in GPU
+    /// memory (kernel-launch-only, like `GpuResident`) over the
+    /// `UnifiedAligned` zero-copy cold tier — the Data Tiering follow-up
+    /// (arXiv:2111.05894) layered on the paper's unified tensors.
+    Tiered,
 }
 
 impl AccessMode {
@@ -36,6 +41,7 @@ impl AccessMode {
             "pyd" | "unified" | "aligned" | "pyd-opt" => Some(AccessMode::UnifiedAligned),
             "uvm" => Some(AccessMode::Uvm),
             "gpu" | "resident" | "gpu-resident" => Some(AccessMode::GpuResident),
+            "tiered" | "tier" | "hot-cache" => Some(AccessMode::Tiered),
             _ => None,
         }
     }
@@ -47,6 +53,50 @@ impl AccessMode {
             AccessMode::UnifiedAligned => "PyD",
             AccessMode::Uvm => "UVM",
             AccessMode::GpuResident => "GPU-Resident",
+            AccessMode::Tiered => "Tiered",
+        }
+    }
+
+    /// All modes, in the order benches sweep them.
+    pub fn all() -> [AccessMode; 6] {
+        [
+            AccessMode::CpuGather,
+            AccessMode::UnifiedNaive,
+            AccessMode::UnifiedAligned,
+            AccessMode::Uvm,
+            AccessMode::GpuResident,
+            AccessMode::Tiered,
+        ]
+    }
+}
+
+/// Which engine executes the training step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// PJRT when AOT artifacts are present, native otherwise.
+    Auto,
+    /// The AOT/PJRT path only (errors without artifacts).
+    Pjrt,
+    /// The built-in deterministic trainer (softmax regression over the
+    /// gathered root features) — works everywhere, no artifacts needed.
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(Backend::Auto),
+            "pjrt" | "xla" => Some(Backend::Pjrt),
+            "native" => Some(Backend::Native),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::Pjrt => "pjrt",
+            Backend::Native => "native",
         }
     }
 }
@@ -85,6 +135,16 @@ pub struct RunConfig {
     pub queue_depth: usize,
     /// Skip PJRT execution (pipeline/transfer accounting only).
     pub skip_train: bool,
+    /// Training-step engine (see [`Backend`]).
+    pub backend: Backend,
+    /// `Tiered` mode: target hot fraction of the feature rows in [0, 1].
+    pub hot_frac: f64,
+    /// `Tiered` mode: fraction of GPU memory reserved for model parameters
+    /// and activations — the hot tier only uses what remains.
+    pub gpu_reserve_frac: f64,
+    /// `Tiered` mode: enable online LFU promotion (cache warming across
+    /// epochs).
+    pub tier_promote: bool,
 }
 
 impl Default for RunConfig {
@@ -105,6 +165,10 @@ impl Default for RunConfig {
             sampler_workers: 1,
             queue_depth: 4,
             skip_train: false,
+            backend: Backend::Auto,
+            hot_frac: 0.25,
+            gpu_reserve_frac: 0.5,
+            tier_promote: true,
         }
     }
 }
@@ -173,6 +237,19 @@ impl RunConfig {
         if let Some(v) = doc.get_bool("run.skip_train") {
             cfg.skip_train = v;
         }
+        if let Some(v) = doc.get_str("run.backend") {
+            cfg.backend = Backend::parse(v)
+                .ok_or_else(|| Error::Config(format!("unknown backend `{v}`")))?;
+        }
+        if let Some(v) = doc.get_f64("run.hot_frac") {
+            cfg.hot_frac = v;
+        }
+        if let Some(v) = doc.get_f64("run.gpu_reserve_frac") {
+            cfg.gpu_reserve_frac = v;
+        }
+        if let Some(v) = doc.get_bool("run.tier_promote") {
+            cfg.tier_promote = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -197,6 +274,18 @@ impl RunConfig {
         }
         if self.queue_depth == 0 {
             return Err(Error::Config("queue_depth must be >= 1".into()));
+        }
+        if !(0.0..=1.0).contains(&self.hot_frac) {
+            return Err(Error::Config(format!(
+                "hot_frac must be in [0, 1], got {}",
+                self.hot_frac
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.gpu_reserve_frac) {
+            return Err(Error::Config(format!(
+                "gpu_reserve_frac must be in [0, 1], got {}",
+                self.gpu_reserve_frac
+            )));
         }
         Ok(())
     }
@@ -252,6 +341,42 @@ seed = 99
         assert_eq!(AccessMode::parse("PyD"), Some(AccessMode::UnifiedAligned));
         assert_eq!(AccessMode::parse("baseline"), Some(AccessMode::CpuGather));
         assert_eq!(AccessMode::parse("uvm"), Some(AccessMode::Uvm));
+        assert_eq!(AccessMode::parse("tiered"), Some(AccessMode::Tiered));
+        assert_eq!(AccessMode::parse("hot-cache"), Some(AccessMode::Tiered));
         assert_eq!(AccessMode::parse("??"), None);
+        assert_eq!(AccessMode::all().len(), 6);
+    }
+
+    #[test]
+    fn tiered_knobs_parse_and_validate() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[run]
+mode = "tiered"
+backend = "native"
+hot_frac = 0.4
+gpu_reserve_frac = 0.25
+tier_promote = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.mode, AccessMode::Tiered);
+        assert_eq!(cfg.backend, Backend::Native);
+        assert!((cfg.hot_frac - 0.4).abs() < 1e-12);
+        assert!((cfg.gpu_reserve_frac - 0.25).abs() < 1e-12);
+        assert!(!cfg.tier_promote);
+
+        assert!(RunConfig::from_toml("[run]\nhot_frac = 1.5").is_err());
+        assert!(RunConfig::from_toml("[run]\ngpu_reserve_frac = -0.1").is_err());
+        assert!(RunConfig::from_toml("[run]\nbackend = \"quantum\"").is_err());
+    }
+
+    #[test]
+    fn backend_aliases() {
+        assert_eq!(Backend::parse("auto"), Some(Backend::Auto));
+        assert_eq!(Backend::parse("PJRT"), Some(Backend::Pjrt));
+        assert_eq!(Backend::parse("native"), Some(Backend::Native));
+        assert_eq!(Backend::parse("cuda"), None);
+        assert_eq!(Backend::Native.label(), "native");
     }
 }

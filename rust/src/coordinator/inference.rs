@@ -52,14 +52,9 @@ impl InferenceRunner {
             .ok_or_else(|| Error::Config(format!("unknown dataset `{}`", cfg.dataset)))?;
         let scale = preset.scale_for_budget(cfg.scale, cfg.feature_budget);
         let graph = preset.build_graph(scale, cfg.seed)?;
-        let store = FeatureStore::build(
-            graph.num_nodes(),
-            preset.feat_dim as usize,
-            preset.classes,
-            cfg.mode,
-            &cfg.system,
-            cfg.seed ^ 0xFEA7,
-        )?;
+        // Shares the trainer's store construction so `Tiered` inference
+        // gets the same degree-ranked hot set and capacity knobs.
+        let store = crate::coordinator::trainer::build_store(&cfg, &graph, &preset)?;
         let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
         let spec = manifest.get(&format!("{}_infer", cfg.artifact_name()))?;
         if spec.kind != ArtifactKind::Infer {

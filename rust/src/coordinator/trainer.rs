@@ -11,14 +11,16 @@
 
 use std::path::Path;
 
-use crate::config::{AccessMode, RunConfig};
+use crate::config::{AccessMode, Backend, RunConfig};
 use crate::coordinator::costmodel::ComputeModel;
 use crate::coordinator::power::{epoch_power, PowerReport};
 use crate::error::{Error, Result};
-use crate::featurestore::FeatureStore;
-use crate::graph::{Csr, DatasetPreset};
+use crate::featurestore::tiered::TierConfig;
+use crate::featurestore::{FeatureStore, TierStats};
+use crate::runtime::native::{self, NativeTrainState};
 use crate::runtime::state::{StepBatch, TrainState};
 use crate::runtime::{ArtifactKind, LoadedArtifact, Manifest, Runtime};
+use crate::graph::{Csr, DatasetPreset};
 use crate::sampler::NeighborSampler;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -55,6 +57,9 @@ pub struct EpochReport {
     /// CPU seconds the transfer path consumed (simulated testbed).
     pub cpu_gather_s: f64,
     pub power: PowerReport,
+    /// Hot-tier statistics for this epoch (`Tiered` mode only): counters
+    /// are per-epoch deltas, gauges (hot bytes/capacity) are end-of-epoch.
+    pub tier: Option<TierStats>,
 }
 
 impl EpochReport {
@@ -70,6 +75,35 @@ impl EpochReport {
     }
 }
 
+/// Build the feature store a run config asks for; `Tiered` mode derives
+/// its hot-set placement (degree ranking) and capacity from the graph and
+/// the config's `hot_frac`/`gpu_reserve_frac`/`tier_promote` knobs.
+pub(crate) fn build_store(
+    cfg: &RunConfig,
+    graph: &Csr,
+    preset: &DatasetPreset,
+) -> Result<FeatureStore> {
+    if cfg.mode == AccessMode::Tiered {
+        FeatureStore::build_tiered(
+            graph.num_nodes(),
+            preset.feat_dim as usize,
+            preset.classes,
+            &cfg.system,
+            cfg.seed ^ 0xFEA7,
+            TierConfig::from_run(cfg, graph),
+        )
+    } else {
+        FeatureStore::build(
+            graph.num_nodes(),
+            preset.feat_dim as usize,
+            preset.classes,
+            cfg.mode,
+            &cfg.system,
+            cfg.seed ^ 0xFEA7,
+        )
+    }
+}
+
 /// End-to-end trainer over one (dataset, arch, mode, system) configuration.
 pub struct Trainer {
     pub cfg: RunConfig,
@@ -80,6 +114,7 @@ pub struct Trainer {
     compute: Option<ComputeModel>,
     artifact: Option<LoadedArtifact>,
     state: Option<TrainState>,
+    native: Option<NativeTrainState>,
     rng: Rng,
 }
 
@@ -108,16 +143,9 @@ impl Trainer {
             graph.num_edges(),
             t.elapsed_s()
         );
-        let store = FeatureStore::build(
-            graph.num_nodes(),
-            preset.feat_dim as usize,
-            preset.classes,
-            cfg.mode,
-            &cfg.system,
-            cfg.seed ^ 0xFEA7,
-        )?;
+        let store = build_store(&cfg, &graph, &preset)?;
 
-        let (artifact, state, compute) = if cfg.skip_train {
+        let (artifact, state, compute, native) = if cfg.skip_train {
             // No PJRT, but still read the manifest (when present) so the
             // simulated train/sample estimates use the artifact's true
             // shapes — benches sweep all variants without 12 compilations.
@@ -125,31 +153,62 @@ impl Trainer {
                 .ok()
                 .and_then(|m| m.get(&cfg.artifact_name()).ok().cloned())
                 .map(|spec| ComputeModel::from_spec(&spec));
-            (None, None, compute)
+            (None, None, compute, None)
         } else {
-            let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
-            let spec = manifest.get(&cfg.artifact_name())?;
-            if spec.kind != ArtifactKind::Train {
-                return Err(Error::Runtime(format!("{} is not a train artifact", spec.name)));
+            let manifest = Manifest::load(Path::new(&cfg.artifacts_dir));
+            let use_pjrt = match cfg.backend {
+                Backend::Pjrt => true,
+                Backend::Native => false,
+                // Auto: the PJRT path when *this run's* artifact exists,
+                // the built-in native trainer otherwise.  Config/artifact
+                // mismatches (batch, fanouts, dims) still error below —
+                // they mean the artifact is present but stale.
+                Backend::Auto => manifest
+                    .as_ref()
+                    .map(|m| m.get(&cfg.artifact_name()).is_ok())
+                    .unwrap_or(false),
+            };
+            if use_pjrt {
+                let manifest = manifest?;
+                let spec = manifest.get(&cfg.artifact_name())?;
+                if spec.kind != ArtifactKind::Train {
+                    return Err(Error::Runtime(format!(
+                        "{} is not a train artifact",
+                        spec.name
+                    )));
+                }
+                if spec.batch != cfg.batch || spec.fanouts != cfg.fanouts {
+                    return Err(Error::Config(format!(
+                        "artifact {} built for batch {} fanouts {:?}; run config has {} {:?} \
+                         (re-run `make artifacts` with matching flags)",
+                        spec.name, spec.batch, spec.fanouts, cfg.batch, cfg.fanouts
+                    )));
+                }
+                if spec.in_dim != preset.feat_dim as usize {
+                    return Err(Error::Config(format!(
+                        "artifact in_dim {} != dataset feat dim {}",
+                        spec.in_dim, preset.feat_dim
+                    )));
+                }
+                let runtime = Runtime::cpu()?;
+                let loaded = runtime.load(Path::new(&cfg.artifacts_dir), spec)?;
+                let state = TrainState::init(spec, cfg.seed ^ 0x9A23)?;
+                let compute = ComputeModel::from_spec(spec);
+                (Some(loaded), Some(state), Some(compute), None)
+            } else {
+                log::info!(
+                    "backend: native trainer (softmax regression, lr {}) — no AOT artifacts \
+                     needed",
+                    native::DEFAULT_LR
+                );
+                let nstate = NativeTrainState::init(
+                    preset.feat_dim as usize,
+                    preset.classes,
+                    native::DEFAULT_LR,
+                    cfg.seed ^ 0x9A23,
+                );
+                (None, None, None, Some(nstate))
             }
-            if spec.batch != cfg.batch || spec.fanouts != cfg.fanouts {
-                return Err(Error::Config(format!(
-                    "artifact {} built for batch {} fanouts {:?}; run config has {} {:?} \
-                     (re-run `make artifacts` with matching flags)",
-                    spec.name, spec.batch, spec.fanouts, cfg.batch, cfg.fanouts
-                )));
-            }
-            if spec.in_dim != preset.feat_dim as usize {
-                return Err(Error::Config(format!(
-                    "artifact in_dim {} != dataset feat dim {}",
-                    spec.in_dim, preset.feat_dim
-                )));
-            }
-            let runtime = Runtime::cpu()?;
-            let loaded = runtime.load(Path::new(&cfg.artifacts_dir), spec)?;
-            let state = TrainState::init(spec, cfg.seed ^ 0x9A23)?;
-            let compute = ComputeModel::from_spec(spec);
-            (Some(loaded), Some(state), Some(compute))
         };
 
         let rng = Rng::new(cfg.seed);
@@ -162,6 +221,7 @@ impl Trainer {
             compute,
             artifact,
             state,
+            native,
             rng,
         })
     }
@@ -199,6 +259,7 @@ impl Trainer {
         let mut report = EpochReport::default();
         let dim = self.store.dim();
         let mut x0 = vec![0f32; 0];
+        let tier_epoch_start = self.store.tier_stats();
 
         for seeds in seeds_all.into_iter().take(max_steps) {
             // --- sample (measured) ---
@@ -230,6 +291,13 @@ impl Trainer {
                 let assemble_s = t.elapsed_s();
                 report.breakdown_measured.other_s += assemble_s;
                 let metrics = state.step(artifact, &batch)?;
+                report.breakdown_measured.train_s += metrics.exec_s;
+                report.losses.push(metrics.loss);
+                report.accs.push(metrics.acc);
+            } else if let Some(native) = self.native.as_mut() {
+                // Native backend: softmax regression over the root rows
+                // (the prefix of x0) — deterministic, mode-invariant.
+                let metrics = native.step(&x0, &mb.labels)?;
                 report.breakdown_measured.train_s += metrics.exec_s;
                 report.losses.push(metrics.loss);
                 report.accs.push(metrics.acc);
@@ -265,6 +333,10 @@ impl Trainer {
             report.cpu_gather_s,
             report.bytes_on_link,
         );
+        report.tier = self.store.tier_stats().map(|now| match &tier_epoch_start {
+            Some(start) => now.since(start),
+            None => now,
+        });
         Ok(report)
     }
 
@@ -274,14 +346,7 @@ impl Trainer {
             return Ok(());
         }
         self.cfg.mode = mode;
-        self.store = FeatureStore::build(
-            self.graph.num_nodes(),
-            self.preset.feat_dim as usize,
-            self.preset.classes,
-            mode,
-            &self.cfg.system,
-            self.cfg.seed ^ 0xFEA7,
-        )?;
+        self.store = build_store(&self.cfg, &self.graph, &self.preset)?;
         Ok(())
     }
 }
@@ -327,6 +392,77 @@ mod tests {
     fn unknown_dataset_rejected() {
         let mut cfg = small_cfg(AccessMode::CpuGather);
         cfg.dataset = "imagenet".into();
+        assert!(Trainer::new(cfg).is_err());
+    }
+
+    #[test]
+    fn tiered_epoch_reports_hits_and_beats_unified() {
+        let mut t = Trainer::new(small_cfg(AccessMode::UnifiedAligned)).unwrap();
+        let ua = t.run_epoch().unwrap();
+        assert!(ua.tier.is_none(), "tier stats must be Tiered-only");
+        t.set_mode(AccessMode::Tiered).unwrap();
+        let tiered = t.run_epoch().unwrap();
+        let stats = tiered.tier.expect("tiered mode reports tier stats");
+        assert!(stats.hits > 0, "degree-ranked hot set never hit");
+        assert!(stats.misses > 0, "a 25% hot set cannot serve everything");
+        assert!(stats.hot_bytes <= stats.capacity_bytes);
+        assert!(
+            tiered.breakdown_sim.transfer_s < ua.breakdown_sim.transfer_s,
+            "tiered {} !< unified {}",
+            tiered.breakdown_sim.transfer_s,
+            ua.breakdown_sim.transfer_s
+        );
+    }
+
+    #[test]
+    fn native_backend_trains_without_artifacts() {
+        let mut cfg = small_cfg(AccessMode::UnifiedAligned);
+        cfg.skip_train = false;
+        cfg.backend = Backend::Native;
+        cfg.artifacts_dir = "definitely/not/a/real/dir".into();
+        let mut t = Trainer::new(cfg).unwrap();
+        let r = t.run_epoch().unwrap();
+        assert_eq!(r.losses.len(), 3);
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        assert!(r.accs.iter().all(|a| (0.0..=1.0).contains(a)));
+        assert!(r.breakdown_measured.train_s > 0.0);
+    }
+
+    #[test]
+    fn auto_backend_falls_back_to_native_without_artifacts() {
+        let mut cfg = small_cfg(AccessMode::UnifiedAligned);
+        cfg.skip_train = false;
+        cfg.backend = Backend::Auto;
+        cfg.artifacts_dir = "definitely/not/a/real/dir".into();
+        let mut t = Trainer::new(cfg).unwrap();
+        assert!(!t.run_epoch().unwrap().losses.is_empty());
+    }
+
+    #[test]
+    fn auto_backend_falls_back_when_this_runs_artifact_is_missing() {
+        // A manifest that exists but lacks this run's artifact must not
+        // commit Auto to the PJRT path — the native fallback trains fine.
+        let dir = std::env::temp_dir().join("ptdirect_auto_fallback_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "artifact sage_other\nfile sage_other.hlo.txt\nkind train\nend\n",
+        )
+        .unwrap();
+        let mut cfg = small_cfg(AccessMode::UnifiedAligned);
+        cfg.skip_train = false;
+        cfg.backend = Backend::Auto;
+        cfg.artifacts_dir = dir.to_str().unwrap().into();
+        let mut t = Trainer::new(cfg).unwrap();
+        assert!(!t.run_epoch().unwrap().losses.is_empty());
+    }
+
+    #[test]
+    fn pjrt_backend_requires_artifacts() {
+        let mut cfg = small_cfg(AccessMode::UnifiedAligned);
+        cfg.skip_train = false;
+        cfg.backend = Backend::Pjrt;
+        cfg.artifacts_dir = "definitely/not/a/real/dir".into();
         assert!(Trainer::new(cfg).is_err());
     }
 }

@@ -1,53 +1,83 @@
-//! Library-wide error type.
+//! Library-wide error type (hand-rolled; thiserror is not vendored offline).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the ptdirect library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
-    #[error("device mismatch: {0}")]
     Device(String),
 
     /// Mirrors PyTorch-Direct's RuntimeError when unified-only APIs
     /// (set_propagatedToCUDA, memAdvise) are invoked on non-unified tensors.
-    #[error("tensor is not unified: {0}")]
     NotUnified(String),
 
-    #[error("dtype mismatch: expected {expected}, got {got}")]
     DType { expected: String, got: String },
 
-    #[error("index out of bounds: {index} >= {bound}")]
     IndexOutOfBounds { index: usize, bound: usize },
 
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error("graph error: {0}")]
     Graph(String),
 
-    #[error("manifest error: {0}")]
     Manifest(String),
 
-    #[error("artifact `{0}` not found (run `make artifacts` first)")]
     ArtifactMissing(String),
 
-    #[error("runtime error: {0}")]
     Runtime(String),
 
-    #[error("pipeline error: {0}")]
     Pipeline(String),
 
-    #[error("gpu memory exceeded: need {need} bytes, capacity {capacity}")]
     GpuOom { need: u64, capacity: u64 },
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("xla error: {0}")]
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(s) => write!(f, "shape mismatch: {s}"),
+            Error::Device(s) => write!(f, "device mismatch: {s}"),
+            Error::NotUnified(s) => write!(f, "tensor is not unified: {s}"),
+            Error::DType { expected, got } => {
+                write!(f, "dtype mismatch: expected {expected}, got {got}")
+            }
+            Error::IndexOutOfBounds { index, bound } => {
+                write!(f, "index out of bounds: {index} >= {bound}")
+            }
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Graph(s) => write!(f, "graph error: {s}"),
+            Error::Manifest(s) => write!(f, "manifest error: {s}"),
+            Error::ArtifactMissing(s) => {
+                write!(f, "artifact `{s}` not found (run `make artifacts` first)")
+            }
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::Pipeline(s) => write!(f, "pipeline error: {s}"),
+            Error::GpuOom { need, capacity } => {
+                write!(f, "gpu memory exceeded: need {need} bytes, capacity {capacity}")
+            }
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(s) => write!(f, "xla error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -57,3 +87,29 @@ impl From<xla::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_variant_wording() {
+        assert_eq!(
+            Error::IndexOutOfBounds { index: 9, bound: 4 }.to_string(),
+            "index out of bounds: 9 >= 4"
+        );
+        assert_eq!(
+            Error::GpuOom { need: 10, capacity: 4 }.to_string(),
+            "gpu memory exceeded: need 10 bytes, capacity 4"
+        );
+        assert!(Error::Config("x".into()).to_string().contains("config error"));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let err: Error = io.into();
+        assert!(err.to_string().contains("gone"));
+        assert!(std::error::Error::source(&err).is_some());
+    }
+}

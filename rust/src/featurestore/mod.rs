@@ -8,6 +8,9 @@
 //! | `UnifiedAligned`  | unified        | zero-copy + circular-shift (§4.5)    |
 //! | `Uvm`             | unified        | page-fault migration (§3 strawman)   |
 //! | `GpuResident`     | cuda           | in-memory (small graphs only)        |
+//! | `Tiered`          | unified        | hot rows free (GPU-resident cache),  |
+//! |                   |                | cold rows via the aligned zero-copy  |
+//! |                   |                | path (see [`tiered`])                |
 //!
 //! Feature values are synthesized deterministically per node such that the
 //! classification task is *learnable* (the first `classes` dimensions carry
@@ -17,7 +20,9 @@
 pub mod staging;
 pub mod store;
 pub mod synth;
+pub mod tiered;
 
 pub use staging::StagingPool;
 pub use store::FeatureStore;
 pub use synth::SyntheticFeatures;
+pub use tiered::{degree_ranking, TierConfig, TierStats, TieredCache};

@@ -1,4 +1,4 @@
-//! The unified feature store: one table, five access designs.
+//! The unified feature store: one table, six access designs.
 
 use std::sync::Mutex;
 
@@ -7,6 +7,7 @@ use crate::device::warp::{count_requests, WarpModel};
 use crate::error::{Error, Result};
 use crate::featurestore::staging::StagingPool;
 use crate::featurestore::synth::SyntheticFeatures;
+use crate::featurestore::tiered::{TierConfig, TierStats, TieredCache};
 use crate::interconnect::{DmaEngine, PcieLink, TransferCost, UvmSpace};
 use crate::tensor::{Device, Tensor};
 use crate::util::timer::Timer;
@@ -20,6 +21,7 @@ pub struct FeatureStore {
     sys: SystemProfile,
     staging: StagingPool,
     uvm: Option<Mutex<UvmSpace>>,
+    tier: Option<Mutex<TieredCache>>,
     /// Cumulative measured CPU seconds spent in real gathers (diagnostic).
     measured_gather: Mutex<f64>,
 }
@@ -30,6 +32,10 @@ impl FeatureStore {
     /// `GpuResident` enforces the GPU memory capacity — requesting it for a
     /// table larger than the device is exactly the out-of-memory wall that
     /// motivates the paper (§2.2), surfaced as [`Error::GpuOom`].
+    ///
+    /// `Tiered` built through here starts with [`TierConfig::default`]
+    /// (cold cache, LFU warming); use [`FeatureStore::build_tiered`] to
+    /// supply a degree ranking and capacity knobs.
     pub fn build(
         rows: usize,
         dim: usize,
@@ -37,6 +43,30 @@ impl FeatureStore {
         mode: AccessMode,
         sys: &SystemProfile,
         seed: u64,
+    ) -> Result<FeatureStore> {
+        Self::build_inner(rows, dim, classes, mode, sys, seed, None)
+    }
+
+    /// Build a `Tiered` store with explicit tier placement/capacity knobs.
+    pub fn build_tiered(
+        rows: usize,
+        dim: usize,
+        classes: u32,
+        sys: &SystemProfile,
+        seed: u64,
+        tier_cfg: TierConfig,
+    ) -> Result<FeatureStore> {
+        Self::build_inner(rows, dim, classes, AccessMode::Tiered, sys, seed, Some(tier_cfg))
+    }
+
+    fn build_inner(
+        rows: usize,
+        dim: usize,
+        classes: u32,
+        mode: AccessMode,
+        sys: &SystemProfile,
+        seed: u64,
+        tier_cfg: Option<TierConfig>,
     ) -> Result<FeatureStore> {
         let bytes = rows as u64 * dim as u64 * 4;
         if mode == AccessMode::GpuResident && bytes > sys.gpu_mem_bytes {
@@ -50,11 +80,19 @@ impl FeatureStore {
         let device = match mode {
             AccessMode::CpuGather => Device::Cpu,
             AccessMode::GpuResident => Device::Cuda,
+            // Tiered's source of truth is the unified table; the hot set is
+            // placement metadata, not a second copy.
             _ => Device::Unified, // Listing 2: dataload().to("unified")
         };
         let table = Tensor::from_f32(&data, &[rows, dim], device)?;
         let uvm = if mode == AccessMode::Uvm {
             Some(Mutex::new(UvmSpace::new(sys, 0.5)))
+        } else {
+            None
+        };
+        let tier = if mode == AccessMode::Tiered {
+            let cfg = tier_cfg.unwrap_or_default();
+            Some(Mutex::new(TieredCache::new(rows, dim as u64 * 4, sys, &cfg)))
         } else {
             None
         };
@@ -66,6 +104,7 @@ impl FeatureStore {
             sys: sys.clone(),
             staging: StagingPool::new(),
             uvm,
+            tier,
             measured_gather: Mutex::new(0.0),
         })
     }
@@ -107,6 +146,23 @@ impl FeatureStore {
         self.staging.misses()
     }
 
+    /// Hot-tier counters/gauges (`Tiered` mode only).
+    pub fn tier_stats(&self) -> Option<TierStats> {
+        self.tier.as_ref().map(|t| t.lock().unwrap().stats())
+    }
+
+    /// Simulated cost of a GPU zero-copy gather of `idx` over PCIe —
+    /// shared by the `UnifiedNaive`/`UnifiedAligned` arms and the tiered
+    /// cold path, so "tiered at hot_frac 0 costs exactly UnifiedAligned"
+    /// holds structurally rather than by duplicated arithmetic.
+    fn zero_copy_cost(&self, idx: &[u32], aligned: bool) -> TransferCost {
+        let f = self.synth.dim as u64;
+        let model = WarpModel::default();
+        let shifted = aligned && model.shift_applies(f);
+        let traffic = count_requests(idx, f, model, shifted);
+        PcieLink::new(&self.sys).direct_gather(&traffic)
+    }
+
     /// Gather `idx` rows into `out` (len == idx.len()*dim), returning the
     /// simulated transfer cost for this store's access mode.
     pub fn gather_into(&self, idx: &[u32], out: &mut [f32]) -> Result<TransferCost> {
@@ -144,11 +200,7 @@ impl FeatureStore {
                 let timer = Timer::start();
                 crate::tensor::indexing::gather_rows_into(src, f, idx, out);
                 *self.measured_gather.lock().unwrap() += timer.elapsed_s();
-                let model = WarpModel::default();
-                let shifted =
-                    self.mode == AccessMode::UnifiedAligned && model.shift_applies(f as u64);
-                let traffic = count_requests(idx, f as u64, model, shifted);
-                PcieLink::new(&self.sys).direct_gather(&traffic)
+                self.zero_copy_cost(idx, self.mode == AccessMode::UnifiedAligned)
             }
             AccessMode::Uvm => {
                 let timer = Timer::start();
@@ -170,6 +222,38 @@ impl FeatureStore {
                     useful_bytes: idx.len() as u64 * row_bytes,
                     requests: 0,
                     cpu_time_s: 0.0,
+                }
+            }
+            AccessMode::Tiered => {
+                let timer = Timer::start();
+                crate::tensor::indexing::gather_rows_into(src, f, idx, out);
+                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
+                let cold = self
+                    .tier
+                    .as_ref()
+                    .expect("tiered store has a cache")
+                    .lock()
+                    .unwrap()
+                    .record(idx);
+                let useful = idx.len() as u64 * row_bytes;
+                if cold.is_empty() {
+                    // Entire batch in the hot tier: a device-memory gather,
+                    // kernel launch only — the GpuResident endpoint.
+                    TransferCost {
+                        time_s: self.sys.kernel_launch_s,
+                        bytes_on_link: 0,
+                        useful_bytes: useful,
+                        requests: 0,
+                        cpu_time_s: 0.0,
+                    }
+                } else {
+                    // One gather kernel serves both tiers; only the cold
+                    // subset drives PCIe traffic, through the same aligned
+                    // zero-copy model as UnifiedAligned (so hot_frac = 0
+                    // reproduces that mode's cost exactly).
+                    let mut cost = self.zero_copy_cost(&cold, true);
+                    cost.useful_bytes = useful;
+                    cost
                 }
             }
         };
@@ -206,6 +290,7 @@ mod tests {
             AccessMode::UnifiedAligned,
             AccessMode::Uvm,
             AccessMode::GpuResident,
+            AccessMode::Tiered,
         ] {
             let (vals, _) = store(mode).gather(&idx).unwrap();
             assert_eq!(vals, reference, "{mode:?}");
@@ -264,5 +349,78 @@ mod tests {
     fn out_of_bounds_rejected() {
         let st = store(AccessMode::UnifiedAligned);
         assert!(st.gather(&[500]).is_err());
+    }
+
+    fn tiered_store(hot_frac: f64) -> FeatureStore {
+        FeatureStore::build_tiered(
+            500,
+            24,
+            8,
+            &sys(),
+            42,
+            crate::featurestore::tiered::TierConfig {
+                hot_frac,
+                reserve_bytes: 0,
+                promote: false,
+                ranking: Some((0..500).collect()),
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn tiered_at_zero_matches_unified_aligned_exactly() {
+        let idx: Vec<u32> = (0..128u32).map(|i| i * 37 % 500).collect();
+        let (_, ua) = store(AccessMode::UnifiedAligned).gather(&idx).unwrap();
+        let (_, tz) = tiered_store(0.0).gather(&idx).unwrap();
+        assert_eq!(tz.time_s, ua.time_s);
+        assert_eq!(tz.bytes_on_link, ua.bytes_on_link);
+        assert_eq!(tz.requests, ua.requests);
+        assert_eq!(tz.useful_bytes, ua.useful_bytes);
+    }
+
+    #[test]
+    fn tiered_at_one_matches_gpu_resident() {
+        let idx: Vec<u32> = (0..128u32).collect();
+        let (_, gpu) = store(AccessMode::GpuResident).gather(&idx).unwrap();
+        let (_, th) = tiered_store(1.0).gather(&idx).unwrap();
+        assert_eq!(th.time_s, gpu.time_s); // kernel launch only
+        assert_eq!(th.bytes_on_link, 0);
+        assert_eq!(th.requests, 0);
+    }
+
+    #[test]
+    fn tiered_accounts_every_row_and_stays_in_budget() {
+        let st = tiered_store(0.25);
+        let idx: Vec<u32> = (0..300u32).map(|i| i * 7 % 500).collect();
+        st.gather(&idx).unwrap();
+        st.gather(&idx).unwrap();
+        let stats = st.tier_stats().unwrap();
+        assert_eq!(stats.hits + stats.misses, 600);
+        assert!(stats.hits > 0 && stats.misses > 0);
+        assert!(stats.hot_bytes <= stats.capacity_bytes);
+        assert_eq!(stats.capacity_rows, 125);
+    }
+
+    #[test]
+    fn tiered_cost_between_endpoints_and_monotone() {
+        let idx: Vec<u32> = (0..256u32).map(|i| i * 13 % 500).collect();
+        let mut last = f64::INFINITY;
+        for frac in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let (_, c) = tiered_store(frac).gather(&idx).unwrap();
+            assert!(
+                c.time_s <= last + 1e-15,
+                "transfer time rose when hot_frac grew to {frac}"
+            );
+            last = c.time_s;
+        }
+        let (_, ua) = store(AccessMode::UnifiedAligned).gather(&idx).unwrap();
+        assert!(last < ua.time_s, "fully hot tier should beat zero-copy");
+    }
+
+    #[test]
+    fn non_tiered_modes_report_no_tier_stats() {
+        assert!(store(AccessMode::UnifiedAligned).tier_stats().is_none());
+        assert!(tiered_store(0.5).tier_stats().is_some());
     }
 }

@@ -1,0 +1,432 @@
+//! Tiered hot-cache feature tier: a GPU-resident hot set over the unified
+//! cold tier.
+//!
+//! The paper's unified-tensor modes make *every* gathered row pay PCIe
+//! cost.  The follow-up "Graph Neural Network Training with Data Tiering"
+//! (arXiv:2111.05894) observes that GNN feature accesses are extremely
+//! skewed — access frequency is proportional to node degree under neighbor
+//! sampling — so pinning the hottest rows in GPU memory recovers most of
+//! the GPU-resident speedup without the out-of-memory wall; GIDS
+//! (arXiv:2306.16384) ships the same hot/cold split in production.
+//!
+//! [`TieredCache`] tracks which rows are hot.  Placement comes from two
+//! sources that compose:
+//!
+//! * a static *ranking* (descending node degree, [`degree_ranking`]) used
+//!   to pre-seed the hot set, and
+//! * an optional online LFU promotion policy: per-row access frequencies
+//!   are counted on every gather, and a cold row that becomes more frequent
+//!   than the coldest hot row displaces it (lazy min-heap, stale entries
+//!   repaired on inspection).  Repeated epochs therefore warm the cache
+//!   even from an empty start.
+//!
+//! Capacity is `SystemProfile::gpu_mem_bytes` minus a configurable
+//! model/activation reserve, and additionally capped by the `hot_frac`
+//! sweep knob.  The cache never stores feature *values* — the single
+//! unified table remains the source of truth, so numerics are identical
+//! across access modes by construction; only the [`TransferCost`]
+//! attribution changes (hot rows are kernel-launch-only like `GpuResident`,
+//! cold rows pay the `UnifiedAligned` zero-copy PCIe path).
+//!
+//! [`TransferCost`]: crate::interconnect::TransferCost
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::{RunConfig, SystemProfile};
+use crate::graph::Csr;
+
+/// Placement/capacity knobs for the tiered store.
+#[derive(Clone, Debug)]
+pub struct TierConfig {
+    /// Target hot fraction of the table's rows in [0, 1] (the sweep axis of
+    /// `cargo bench --bench tiering_sweep`).
+    pub hot_frac: f64,
+    /// GPU bytes reserved for model parameters + activations; the hot tier
+    /// may only use what remains of `gpu_mem_bytes`.
+    pub reserve_bytes: u64,
+    /// Enable online LFU promotion (epoch-over-epoch warming).
+    pub promote: bool,
+    /// Static placement ranking, hottest first (usually descending degree).
+    /// `None` starts the cache cold and relies on promotion.
+    pub ranking: Option<Vec<u32>>,
+}
+
+impl Default for TierConfig {
+    fn default() -> Self {
+        TierConfig {
+            hot_frac: 0.25,
+            reserve_bytes: 0,
+            promote: true,
+            ranking: None,
+        }
+    }
+}
+
+impl TierConfig {
+    /// Derive the tier configuration a training run wants: degree ranking
+    /// from its graph plus the `hot_frac`/reserve/promotion knobs of the
+    /// run config.
+    pub fn from_run(cfg: &RunConfig, graph: &Csr) -> TierConfig {
+        TierConfig {
+            hot_frac: cfg.hot_frac,
+            reserve_bytes: (cfg.system.gpu_mem_bytes as f64
+                * cfg.gpu_reserve_frac.clamp(0.0, 1.0)) as u64,
+            promote: cfg.tier_promote,
+            ranking: Some(degree_ranking(graph)),
+        }
+    }
+}
+
+/// Node ids ordered by descending degree (ties broken by id, so the
+/// ranking — and with it every simulated cost — is deterministic).
+pub fn degree_ranking(graph: &Csr) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..graph.num_nodes() as u32).collect();
+    order.sort_by_key(|&v| (Reverse(graph.degree(v)), v));
+    order
+}
+
+/// Counters and gauges of the tier (counters are cumulative; see
+/// [`TierStats::since`] for per-epoch deltas).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Rows served from the GPU-resident hot tier.
+    pub hits: u64,
+    /// Rows served over PCIe from the unified cold tier.
+    pub misses: u64,
+    /// Online LFU promotions performed.
+    pub promotions: u64,
+    /// Hot rows displaced by promotions.
+    pub evictions: u64,
+    /// Current hot-set size, rows / bytes.
+    pub hot_rows: usize,
+    pub hot_bytes: u64,
+    /// Hot-set capacity, rows / bytes (never exceeded).
+    pub capacity_rows: usize,
+    pub capacity_bytes: u64,
+}
+
+impl TierStats {
+    /// Fraction of requested rows served from the hot tier.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Counter deltas relative to an `earlier` snapshot; gauges keep their
+    /// current (end-state) values.
+    pub fn since(&self, earlier: &TierStats) -> TierStats {
+        TierStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            promotions: self.promotions - earlier.promotions,
+            evictions: self.evictions - earlier.evictions,
+            ..*self
+        }
+    }
+}
+
+/// Hot-set membership + LFU machinery for one feature table.
+#[derive(Debug)]
+pub struct TieredCache {
+    /// Per-row hot membership.
+    hot: Vec<bool>,
+    /// Per-row access counts (LFU signal).
+    freq: Vec<u64>,
+    /// Lazy min-heap over hot rows as `(freq-at-insert, row)`; entries go
+    /// stale when a row's frequency moves or it is evicted, and are
+    /// repaired/discarded on inspection.
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
+    hot_rows: usize,
+    capacity_rows: usize,
+    row_bytes: u64,
+    promote: bool,
+    hits: u64,
+    misses: u64,
+    promotions: u64,
+    evictions: u64,
+}
+
+impl TieredCache {
+    /// Build the cache for a `rows`-row table of `row_bytes`-byte rows.
+    ///
+    /// Capacity = min(`hot_frac` · rows, (gpu_mem − reserve) / row_bytes).
+    /// When a ranking is supplied its prefix is pre-seeded hot; otherwise
+    /// the cache starts cold and (if enabled) warms through promotion.
+    pub fn new(rows: usize, row_bytes: u64, sys: &SystemProfile, cfg: &TierConfig) -> TieredCache {
+        let budget_bytes = sys.gpu_mem_bytes.saturating_sub(cfg.reserve_bytes);
+        let budget_rows = if row_bytes == 0 {
+            0
+        } else {
+            (budget_bytes / row_bytes).min(rows as u64) as usize
+        };
+        let target_rows = (cfg.hot_frac.clamp(0.0, 1.0) * rows as f64).floor() as usize;
+        let capacity_rows = target_rows.min(budget_rows);
+        let mut cache = TieredCache {
+            hot: vec![false; rows],
+            freq: vec![0; rows],
+            heap: BinaryHeap::new(),
+            hot_rows: 0,
+            capacity_rows,
+            row_bytes,
+            promote: cfg.promote,
+            hits: 0,
+            misses: 0,
+            promotions: 0,
+            evictions: 0,
+        };
+        if let Some(ranking) = &cfg.ranking {
+            for &v in ranking.iter().take(capacity_rows) {
+                if (v as usize) < rows && !cache.hot[v as usize] {
+                    cache.insert_hot(v);
+                }
+            }
+        }
+        cache
+    }
+
+    pub fn capacity_rows(&self) -> usize {
+        self.capacity_rows
+    }
+
+    pub fn hot_rows(&self) -> usize {
+        self.hot_rows
+    }
+
+    pub fn is_hot(&self, row: u32) -> bool {
+        self.hot[row as usize]
+    }
+
+    pub fn stats(&self) -> TierStats {
+        TierStats {
+            hits: self.hits,
+            misses: self.misses,
+            promotions: self.promotions,
+            evictions: self.evictions,
+            hot_rows: self.hot_rows,
+            hot_bytes: self.hot_rows as u64 * self.row_bytes,
+            capacity_rows: self.capacity_rows,
+            capacity_bytes: self.capacity_rows as u64 * self.row_bytes,
+        }
+    }
+
+    /// Account one gather: splits `idx` into hits and the returned cold
+    /// subset (original order preserved — the cold rows form the PCIe
+    /// request stream), bumps LFU frequencies, then applies promotions.
+    ///
+    /// Promotion runs *after* the split on purpose: the batch that first
+    /// touches a row still pays its cold cost; only later batches benefit.
+    pub fn record(&mut self, idx: &[u32]) -> Vec<u32> {
+        let mut cold = Vec::new();
+        for &r in idx {
+            let ri = r as usize;
+            self.freq[ri] += 1;
+            if self.hot[ri] {
+                self.hits += 1;
+            } else {
+                self.misses += 1;
+                cold.push(r);
+            }
+        }
+        if self.promote && self.capacity_rows > 0 && !cold.is_empty() {
+            let mut candidates = cold.clone();
+            candidates.sort_unstable();
+            candidates.dedup();
+            for r in candidates {
+                self.maybe_promote(r);
+            }
+        }
+        cold
+    }
+
+    fn maybe_promote(&mut self, r: u32) {
+        if self.hot[r as usize] {
+            return;
+        }
+        if self.hot_rows < self.capacity_rows {
+            self.insert_hot(r);
+            self.promotions += 1;
+            return;
+        }
+        match self.refresh_min() {
+            Some((min_freq, _)) if self.freq[r as usize] > min_freq => {
+                self.evict_min();
+                self.insert_hot(r);
+                self.promotions += 1;
+            }
+            _ => {}
+        }
+    }
+
+    fn insert_hot(&mut self, r: u32) {
+        debug_assert!(!self.hot[r as usize]);
+        self.hot[r as usize] = true;
+        self.hot_rows += 1;
+        self.heap.push(Reverse((self.freq[r as usize], r)));
+    }
+
+    /// Make the heap top a valid `(current_freq, hot_row)` minimum, fixing
+    /// stale entries (evicted rows, outdated frequencies) along the way.
+    fn refresh_min(&mut self) -> Option<(u64, u32)> {
+        while let Some(&Reverse((f, row))) = self.heap.peek() {
+            if !self.hot[row as usize] {
+                self.heap.pop(); // row was evicted; duplicate entry
+                continue;
+            }
+            let current = self.freq[row as usize];
+            if current != f {
+                self.heap.pop();
+                self.heap.push(Reverse((current, row)));
+                continue;
+            }
+            return Some((f, row));
+        }
+        None
+    }
+
+    fn evict_min(&mut self) {
+        if let Some((_, row)) = self.refresh_min() {
+            self.heap.pop();
+            self.hot[row as usize] = false;
+            self.hot_rows -= 1;
+            self.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> SystemProfile {
+        SystemProfile::system1()
+    }
+
+    fn cfg(hot_frac: f64, promote: bool, ranking: Option<Vec<u32>>) -> TierConfig {
+        TierConfig {
+            hot_frac,
+            reserve_bytes: 0,
+            promote,
+            ranking,
+        }
+    }
+
+    #[test]
+    fn capacity_is_min_of_frac_and_budget() {
+        // 100 rows of 1 KiB; hot_frac 0.5 -> 50 rows unless budget is lower.
+        let c = TieredCache::new(100, 1024, &sys(), &cfg(0.5, false, None));
+        assert_eq!(c.capacity_rows(), 50);
+
+        let mut small = sys();
+        small.gpu_mem_bytes = 10 * 1024; // room for 10 rows
+        let c = TieredCache::new(100, 1024, &small, &cfg(0.5, false, None));
+        assert_eq!(c.capacity_rows(), 10);
+    }
+
+    #[test]
+    fn reserve_shrinks_budget() {
+        let mut s = sys();
+        s.gpu_mem_bytes = 20 * 1024;
+        let mut tc = cfg(1.0, false, Some((0..100).collect()));
+        tc.reserve_bytes = 10 * 1024;
+        let c = TieredCache::new(100, 1024, &s, &tc);
+        assert_eq!(c.capacity_rows(), 10);
+        assert_eq!(c.stats().hot_bytes, 10 * 1024);
+        assert!(c.stats().hot_bytes <= s.gpu_mem_bytes - tc.reserve_bytes);
+    }
+
+    #[test]
+    fn ranking_prefix_preseeds_hot() {
+        let ranking = vec![7u32, 3, 9, 1];
+        let c = TieredCache::new(10, 4, &sys(), &cfg(0.2, false, Some(ranking)));
+        assert_eq!(c.capacity_rows(), 2);
+        assert!(c.is_hot(7) && c.is_hot(3));
+        assert!(!c.is_hot(9) && !c.is_hot(1));
+    }
+
+    #[test]
+    fn record_splits_hits_and_misses() {
+        let mut c = TieredCache::new(10, 4, &sys(), &cfg(0.2, false, Some(vec![0, 1])));
+        let cold = c.record(&[0, 5, 1, 5, 9]);
+        assert_eq!(cold, vec![5, 5, 9]);
+        let s = c.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 3);
+        assert_eq!(s.hits + s.misses, 5);
+    }
+
+    #[test]
+    fn zero_frac_means_everything_cold() {
+        let mut c = TieredCache::new(50, 8, &sys(), &cfg(0.0, true, Some((0..50).collect())));
+        for _ in 0..5 {
+            let cold = c.record(&[1, 2, 3]);
+            assert_eq!(cold.len(), 3);
+        }
+        assert_eq!(c.stats().hits, 0);
+        assert_eq!(c.stats().hot_rows, 0);
+    }
+
+    #[test]
+    fn cold_start_warms_through_promotion() {
+        let mut c = TieredCache::new(100, 4, &sys(), &cfg(0.1, true, None));
+        assert_eq!(c.hot_rows(), 0);
+        let idx = [4u32, 8, 15, 16, 23, 42];
+        let first = c.record(&idx);
+        assert_eq!(first.len(), idx.len()); // cold epoch pays full cost
+        let second = c.record(&idx);
+        assert!(second.len() < idx.len(), "promotion never warmed the cache");
+        assert!(c.stats().promotions > 0);
+        assert!(c.hot_rows() <= c.capacity_rows());
+    }
+
+    #[test]
+    fn promotion_respects_capacity_and_evicts_lfu() {
+        // capacity 2; rows 1,2 get hot; then row 3 becomes more frequent
+        // than row 1 and displaces the LFU minimum.
+        let mut c = TieredCache::new(10, 4, &sys(), &cfg(0.2, true, None));
+        c.record(&[1, 2]); // both promoted (capacity free)
+        assert!(c.is_hot(1) && c.is_hot(2));
+        c.record(&[2]); // freq: r1=1, r2=2
+        for _ in 0..3 {
+            c.record(&[3]); // freq r3 grows past r1
+        }
+        assert!(c.is_hot(3), "hotter row was not promoted");
+        assert!(!c.is_hot(1), "LFU minimum was not evicted");
+        assert_eq!(c.hot_rows(), 2);
+        assert!(c.stats().evictions >= 1);
+    }
+
+    #[test]
+    fn promotion_disabled_keeps_static_placement() {
+        let mut c = TieredCache::new(10, 4, &sys(), &cfg(0.2, false, Some(vec![0, 1])));
+        for _ in 0..10 {
+            c.record(&[5, 6, 7]);
+        }
+        assert!(c.is_hot(0) && c.is_hot(1));
+        assert!(!c.is_hot(5) && !c.is_hot(6) && !c.is_hot(7));
+        assert_eq!(c.stats().promotions, 0);
+    }
+
+    #[test]
+    fn stats_since_gives_epoch_deltas() {
+        let mut c = TieredCache::new(10, 4, &sys(), &cfg(0.2, false, Some(vec![0, 1])));
+        c.record(&[0, 5]);
+        let snap = c.stats();
+        c.record(&[0, 1, 5]);
+        let delta = c.stats().since(&snap);
+        assert_eq!(delta.hits, 2);
+        assert_eq!(delta.misses, 1);
+        assert!((delta.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degree_ranking_orders_by_degree_then_id() {
+        let g = Csr::from_edges(4, &[(2, 0), (2, 1), (2, 3), (0, 1), (0, 2), (1, 0)]).unwrap();
+        // degrees: 0 -> 2, 1 -> 1, 2 -> 3, 3 -> 0
+        assert_eq!(degree_ranking(&g), vec![2, 0, 1, 3]);
+    }
+}

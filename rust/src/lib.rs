@@ -7,8 +7,12 @@
 //! * **Layer 3 (this crate)** — the data-pipeline coordinator: graph
 //!   storage and generators, neighbor sampling, the unified-tensor runtime
 //!   with the paper's placement rules and caching allocator, the simulated
-//!   GPU/PCIe/UVM transfer models, the pipelined training loop, and the
-//!   PJRT runtime that executes the AOT-compiled training step.
+//!   GPU/PCIe/UVM transfer models, the tiered hot-cache feature store
+//!   (GPU-resident hot set over the unified cold tier, after the Data
+//!   Tiering follow-up paper — see [`featurestore::tiered`]), the
+//!   pipelined training loop, and two training backends: the PJRT runtime
+//!   that executes the AOT-compiled training step, and a built-in native
+//!   trainer ([`runtime::native`]) that works without artifacts.
 //! * **Layer 2 (python/compile/model.py)** — GraphSAGE/GAT block models
 //!   with a fused train step, lowered once to HLO text.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (gather with

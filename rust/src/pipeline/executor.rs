@@ -7,8 +7,6 @@
 //! executor measures the real work, the interconnect models the missing
 //! hardware).
 
-use crossbeam_utils::thread;
-
 use crate::error::{Error, Result};
 use crate::pipeline::queue::BoundedQueue;
 use crate::util::timer::Timer;
@@ -63,7 +61,7 @@ where
     let wall = Timer::start();
 
     let mut report = PipelineReport::default();
-    let result: Result<StageTimes> = thread::scope(|scope| {
+    let result: Result<StageTimes> = std::thread::scope(|scope| {
         let q1 = &q1;
         let q2 = &q2;
         let sample = &sample;
@@ -71,7 +69,7 @@ where
 
         // Every stage must close its queues on *all* exit paths (including
         // errors), or the neighbors block forever on a dead queue.
-        let sampler = scope.spawn(move |_| -> Result<f64> {
+        let sampler = scope.spawn(move || -> Result<f64> {
             let result = (|| {
                 let mut busy = 0.0;
                 for i in 0..n_items {
@@ -88,7 +86,7 @@ where
             result
         });
 
-        let gatherer = scope.spawn(move |_| -> Result<f64> {
+        let gatherer = scope.spawn(move || -> Result<f64> {
             let result = (|| {
                 let mut busy = 0.0;
                 while let Some(b) = q1.pop() {
@@ -127,8 +125,12 @@ where
             }
         }
 
-        let sample_busy = sampler.join().expect("sampler panicked")?;
-        let gather_busy = gatherer.join().expect("gatherer panicked")?;
+        let sample_busy = sampler
+            .join()
+            .map_err(|_| Error::Pipeline("sampler thread panicked".into()))??;
+        let gather_busy = gatherer
+            .join()
+            .map_err(|_| Error::Pipeline("gatherer thread panicked".into()))??;
         if let Some(e) = train_err {
             return Err(e);
         }
@@ -138,8 +140,7 @@ where
             gather_s: gather_busy,
             train_s: train_busy,
         })
-    })
-    .map_err(|_| Error::Pipeline("pipeline thread panicked".into()))?;
+    });
 
     report.stages = result?;
     report.wall_s = wall.elapsed_s();

@@ -76,9 +76,11 @@ impl<T> BoundedQueue<T> {
 
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
-        self.state.lock().unwrap().items.pop_front().inspect(|_| {
+        let item = self.state.lock().unwrap().items.pop_front();
+        if item.is_some() {
             self.not_full.notify_one();
-        })
+        }
+        item
     }
 
     /// Close the queue: producers fail, consumers drain then get `None`.

@@ -5,11 +5,15 @@
 //!   convention `python/compile/aot.py` records).
 //! * [`client`] — `xla` crate wrapper: HLO text → compile → execute.
 //! * [`state`] — training state (params/momenta literals) + the step call.
+//! * [`native`] — built-in deterministic trainer (no artifacts, no PJRT):
+//!   the fallback backend every environment can execute.
 
 pub mod artifact;
 pub mod client;
+pub mod native;
 pub mod state;
 
 pub use artifact::{ArtifactKind, ArtifactSpec, IoRole, IoSpec, Manifest};
 pub use client::{LoadedArtifact, Runtime};
+pub use native::NativeTrainState;
 pub use state::TrainState;

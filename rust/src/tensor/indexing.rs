@@ -77,6 +77,12 @@ pub fn index_select(
                 "UVM indexing is stateful; use featurestore::UvmStore".into(),
             ))
         }
+        (AccessMode::Tiered, _) => {
+            return Err(Error::Device(
+                "tiered indexing is stateful; use featurestore::FeatureStore::build_tiered"
+                    .into(),
+            ))
+        }
         (m, d) => {
             return Err(Error::Device(format!(
                 "mode {:?} cannot access features on device {d}",
@@ -116,7 +122,7 @@ pub fn index_select(
             },
             None,
         ),
-        AccessMode::Uvm => unreachable!(),
+        AccessMode::Uvm | AccessMode::Tiered => unreachable!(),
     };
 
     Ok((

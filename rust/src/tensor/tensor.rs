@@ -13,9 +13,7 @@
 //! `Device` tag governs *who is allowed to touch it* and how transfers are
 //! costed, which is exactly the distinction the paper's runtime draws.
 
-use std::sync::Arc;
-
-use once_cell::sync::Lazy;
+use std::sync::{Arc, OnceLock};
 
 use crate::error::{Error, Result};
 use crate::tensor::allocator::{AllocStats, Block, CachingAllocator};
@@ -26,21 +24,21 @@ use crate::util::rng::Rng;
 
 /// Per-device global allocators (the paper's "new memory allocator ...
 /// for all unified tensors" plus the native CPU/CUDA ones).
-static CPU_ALLOC: Lazy<CachingAllocator> = Lazy::new(CachingAllocator::new);
-static CUDA_ALLOC: Lazy<CachingAllocator> = Lazy::new(CachingAllocator::new);
-static UNIFIED_ALLOC: Lazy<CachingAllocator> = Lazy::new(CachingAllocator::new);
+static CPU_ALLOC: OnceLock<CachingAllocator> = OnceLock::new();
+static CUDA_ALLOC: OnceLock<CachingAllocator> = OnceLock::new();
+static UNIFIED_ALLOC: OnceLock<CachingAllocator> = OnceLock::new();
 
 pub fn allocator_for(device: Device) -> &'static CachingAllocator {
     match device {
-        Device::Cpu => &CPU_ALLOC,
-        Device::Cuda => &CUDA_ALLOC,
-        Device::Unified => &UNIFIED_ALLOC,
+        Device::Cpu => CPU_ALLOC.get_or_init(CachingAllocator::new),
+        Device::Cuda => CUDA_ALLOC.get_or_init(CachingAllocator::new),
+        Device::Unified => UNIFIED_ALLOC.get_or_init(CachingAllocator::new),
     }
 }
 
 /// Snapshot of the unified allocator's stats (tests / perf assertions).
 pub fn unified_alloc_stats() -> AllocStats {
-    UNIFIED_ALLOC.stats()
+    UNIFIED_ALLOC.get_or_init(CachingAllocator::new).stats()
 }
 
 #[derive(Debug)]

@@ -4,13 +4,17 @@
 //! `info`. Output goes to stderr with a monotonic timestamp.
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use log::{Level, LevelFilter, Log, Metadata, Record};
-use once_cell::sync::Lazy;
 
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+fn start_instant() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 struct StderrLogger;
 
@@ -23,7 +27,7 @@ impl Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = START.elapsed().as_secs_f64();
+        let t = start_instant().elapsed().as_secs_f64();
         let lvl = match record.level() {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
@@ -42,7 +46,7 @@ pub fn init() {
     if INSTALLED.swap(true, Ordering::SeqCst) {
         return;
     }
-    Lazy::force(&START);
+    let _ = start_instant();
     let level = match std::env::var("PTDIRECT_LOG").as_deref() {
         Ok("error") => LevelFilter::Error,
         Ok("warn") => LevelFilter::Warn,

@@ -1,9 +1,10 @@
 //! Small self-contained utilities shared by every subsystem.
 //!
-//! The offline build environment vendors only the `xla` crate's dependency
-//! closure, so the usual ecosystem crates (rand, rayon, serde, proptest,
-//! criterion) are unavailable — each of the modules below is a from-scratch
-//! replacement scoped to exactly what this project needs.
+//! The offline build environment vendors only tiny shim crates (`log`,
+//! `xla`, `anyhow` under rust/vendor/), so the usual ecosystem crates
+//! (rand, rayon, serde, proptest, criterion) are unavailable — each of the
+//! modules below is a from-scratch replacement scoped to exactly what this
+//! project needs.
 
 pub mod bytes;
 pub mod logging;

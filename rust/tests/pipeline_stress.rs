@@ -1,0 +1,148 @@
+//! Stress tests for the staged pipeline executor: randomized per-stage
+//! latencies across 100 seeds must neither deadlock nor lose/duplicate
+//! items, and injected failures in any stage must abort promptly through
+//! the queue close-on-error protocol of `pipeline/executor.rs`.
+//!
+//! Deadlocks surface as a test-harness hang/timeout, which is exactly the
+//! regression signal these guards exist for.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use ptdirect::error::Error;
+use ptdirect::pipeline::executor::run_pipeline;
+use ptdirect::util::rng::Rng;
+
+/// Deterministic per-item jitter so every seed exercises a different
+/// interleaving of fast and slow items in each stage.
+fn jitter_sleep(base_us: u64, item: u64) {
+    let us = base_us * (item % 7 + 1) / 7;
+    if us > 0 {
+        std::thread::sleep(Duration::from_micros(us));
+    }
+}
+
+#[test]
+fn randomized_latencies_100_seeds_exact_item_counts() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed);
+        let depth = 1 + rng.gen_range_usize(4); // 1..=4
+        let n_items = 16 + rng.gen_range(48); // 16..=63
+        let sample_us = rng.gen_range(80);
+        let gather_us = rng.gen_range(80);
+        let train_us = rng.gen_range(80);
+
+        let trained = AtomicU64::new(0);
+        let checksum = AtomicU64::new(0);
+        let report = run_pipeline(
+            n_items,
+            depth,
+            |i| {
+                jitter_sleep(sample_us, i);
+                Ok(i)
+            },
+            |b| {
+                jitter_sleep(gather_us, b);
+                Ok(b)
+            },
+            |f| {
+                jitter_sleep(train_us, f);
+                trained.fetch_add(1, Ordering::Relaxed);
+                checksum.fetch_add(f, Ordering::Relaxed);
+                Ok(())
+            },
+        )
+        .unwrap_or_else(|e| panic!("seed {seed}: pipeline failed: {e}"));
+
+        assert_eq!(report.items, n_items, "seed {seed}: report undercounts");
+        assert_eq!(
+            trained.load(Ordering::Relaxed),
+            n_items,
+            "seed {seed}: trainer saw a different item count"
+        );
+        // sum 0..n-1 — catches duplicated or substituted items, not just
+        // miscounts
+        assert_eq!(
+            checksum.load(Ordering::Relaxed),
+            n_items * (n_items - 1) / 2,
+            "seed {seed}: item payloads lost or duplicated"
+        );
+    }
+}
+
+#[test]
+fn injected_failures_abort_cleanly_across_100_seeds() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed ^ 0xE44);
+        let depth = 1 + rng.gen_range_usize(3);
+        let fail_stage = rng.gen_range(3);
+        let fail_at = rng.gen_range(48);
+
+        let result = run_pipeline(
+            64,
+            depth,
+            move |i| {
+                if fail_stage == 0 && i == fail_at {
+                    Err(Error::Pipeline(format!("sampler down at {i}")))
+                } else {
+                    Ok(i)
+                }
+            },
+            move |b| {
+                if fail_stage == 1 && b == fail_at {
+                    Err(Error::Pipeline(format!("gatherer down at {b}")))
+                } else {
+                    Ok(b)
+                }
+            },
+            move |f| {
+                if fail_stage == 2 && f == fail_at {
+                    Err(Error::Pipeline(format!("trainer down at {f}")))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+        match result {
+            Err(Error::Pipeline(_)) => {}
+            Err(e) => panic!("seed {seed}: unexpected error kind {e}"),
+            Ok(r) => panic!("seed {seed}: injected failure vanished ({} items)", r.items),
+        }
+    }
+}
+
+#[test]
+fn unbalanced_stage_mix_keeps_exact_counts() {
+    // One stage much slower than the others, all queue depths, both
+    // directions — the backpressure and starvation corners.
+    for &(slow_stage, depth) in &[(0usize, 1usize), (1, 1), (2, 1), (0, 8), (2, 8)] {
+        let delay = |stage: usize| {
+            if stage == slow_stage {
+                Duration::from_micros(200)
+            } else {
+                Duration::from_micros(5)
+            }
+        };
+        let trained = AtomicU64::new(0);
+        let r = run_pipeline(
+            32,
+            depth,
+            |i| {
+                std::thread::sleep(delay(0));
+                Ok(i)
+            },
+            |b| {
+                std::thread::sleep(delay(1));
+                Ok(b)
+            },
+            |_f| {
+                std::thread::sleep(delay(2));
+                trained.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(r.items, 32);
+        assert_eq!(trained.load(Ordering::Relaxed), 32);
+    }
+}

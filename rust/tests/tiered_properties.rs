@@ -1,0 +1,188 @@
+//! Property-based tests (via the in-tree `util::proptest` harness) for the
+//! tiered feature store's invariants:
+//!
+//!  * hit + miss counts equal the rows requested, whatever the placement
+//!    or promotion history;
+//!  * hot-set bytes never exceed the configured budget (GPU memory minus
+//!    reserve, capped by `hot_frac`);
+//!  * gathered values always match `SyntheticFeatures::fill_row` — the
+//!    cache is placement metadata, never a second copy of the data;
+//!  * the hot-frac endpoints reproduce `UnifiedAligned` (0) and
+//!    `GpuResident` (1) costs exactly.
+
+use ptdirect::config::{AccessMode, SystemProfile};
+use ptdirect::featurestore::{FeatureStore, SyntheticFeatures, TierConfig};
+use ptdirect::util::proptest::{check, prop_assert, Gen};
+use ptdirect::util::rng::Rng;
+
+fn random_tier_cfg(g: &mut Gen, rows: usize) -> TierConfig {
+    let ranking = if g.bool() {
+        let mut order: Vec<u32> = (0..rows as u32).collect();
+        Rng::new(g.seed ^ 0xC0FFEE).shuffle(&mut order);
+        Some(order)
+    } else {
+        None
+    };
+    TierConfig {
+        hot_frac: g.f64_in(0.0, 1.0),
+        reserve_bytes: 0,
+        promote: g.bool(),
+        ranking,
+    }
+}
+
+fn random_gathers(g: &mut Gen, rows: usize) -> Vec<Vec<u32>> {
+    let n_gathers = g.usize_in(1, 6);
+    (0..n_gathers)
+        .map(|_| {
+            let len = g.usize_in(1, 200);
+            g.vec_u32(len, 0, (rows - 1) as u32)
+        })
+        .collect()
+}
+
+#[test]
+fn hits_plus_misses_equal_rows_requested() {
+    check(30, |g: &mut Gen| {
+        let rows = g.usize_in(2, 400);
+        let dim = g.usize_in(1, 64);
+        let cfg = random_tier_cfg(g, rows);
+        let store =
+            FeatureStore::build_tiered(rows, dim, 8, &SystemProfile::system1(), g.seed, cfg)
+                .map_err(|e| e.to_string())?;
+        let mut requested = 0u64;
+        for idx in random_gathers(g, rows) {
+            store.gather(&idx).map_err(|e| e.to_string())?;
+            requested += idx.len() as u64;
+        }
+        let stats = store.tier_stats().expect("tiered store has stats");
+        prop_assert(
+            stats.hits + stats.misses == requested,
+            format!(
+                "hits {} + misses {} != requested {requested}",
+                stats.hits, stats.misses
+            ),
+        )
+    });
+}
+
+#[test]
+fn hot_bytes_never_exceed_budget() {
+    check(30, |g: &mut Gen| {
+        let rows = g.usize_in(2, 300);
+        let dim = g.usize_in(1, 64);
+        let row_bytes = dim as u64 * 4;
+        // Shrink the GPU so the budget actually binds, and reserve a slice.
+        let mut sys = SystemProfile::system1();
+        sys.gpu_mem_bytes = g.u64_in(0, 64) * row_bytes;
+        let mut cfg = random_tier_cfg(g, rows);
+        cfg.reserve_bytes = g.u64_in(0, 16) * row_bytes;
+        cfg.promote = true; // promotion churn must respect the budget too
+        let budget = sys.gpu_mem_bytes.saturating_sub(cfg.reserve_bytes);
+        let store = FeatureStore::build_tiered(rows, dim, 8, &sys, g.seed, cfg)
+            .map_err(|e| e.to_string())?;
+        for idx in random_gathers(g, rows) {
+            store.gather(&idx).map_err(|e| e.to_string())?;
+            let stats = store.tier_stats().unwrap();
+            prop_assert(
+                stats.hot_bytes <= budget && stats.hot_bytes <= stats.capacity_bytes,
+                format!(
+                    "hot {} bytes > budget {budget} (capacity {})",
+                    stats.hot_bytes, stats.capacity_bytes
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gathered_values_match_fill_row_regardless_of_promotion_history() {
+    check(25, |g: &mut Gen| {
+        let rows = g.usize_in(2, 200);
+        let dim = g.usize_in(1, 48);
+        let classes = 8u32;
+        let seed = g.seed ^ 0xFEA7;
+        let cfg = random_tier_cfg(g, rows);
+        let store = FeatureStore::build_tiered(
+            rows,
+            dim,
+            classes,
+            &SystemProfile::system1(),
+            seed,
+            cfg,
+        )
+        .map_err(|e| e.to_string())?;
+        let synth = SyntheticFeatures::new(dim, classes, seed);
+        let mut want_row = vec![0f32; dim];
+        for idx in random_gathers(g, rows) {
+            let (vals, _) = store.gather(&idx).map_err(|e| e.to_string())?;
+            for (chunk, &r) in vals.chunks_exact(dim).zip(&idx) {
+                synth.fill_row(r, &mut want_row);
+                prop_assert(
+                    chunk == want_row.as_slice(),
+                    format!("row {r} diverged from SyntheticFeatures::fill_row"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hot_frac_endpoints_reproduce_the_reference_modes() {
+    check(25, |g: &mut Gen| {
+        let rows = g.usize_in(2, 300);
+        let dim = g.usize_in(1, 64);
+        let sys = SystemProfile::system1();
+        let seed = g.seed;
+        let idx = g.vec_u32(g.usize_in(1, 150), 0, (rows - 1) as u32);
+
+        let ua = FeatureStore::build(rows, dim, 8, AccessMode::UnifiedAligned, &sys, seed)
+            .map_err(|e| e.to_string())?;
+        let (_, c_ua) = ua.gather(&idx).map_err(|e| e.to_string())?;
+        let cold = FeatureStore::build_tiered(
+            rows,
+            dim,
+            8,
+            &sys,
+            seed,
+            TierConfig {
+                hot_frac: 0.0,
+                reserve_bytes: 0,
+                promote: g.bool(),
+                ranking: Some((0..rows as u32).collect()),
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        let (_, c_cold) = cold.gather(&idx).map_err(|e| e.to_string())?;
+        prop_assert(
+            c_cold.time_s == c_ua.time_s
+                && c_cold.requests == c_ua.requests
+                && c_cold.bytes_on_link == c_ua.bytes_on_link,
+            format!("hot-frac 0 diverged from UnifiedAligned: {c_cold:?} vs {c_ua:?}"),
+        )?;
+
+        let hot = FeatureStore::build_tiered(
+            rows,
+            dim,
+            8,
+            &sys,
+            seed,
+            TierConfig {
+                hot_frac: 1.0,
+                reserve_bytes: 0,
+                promote: false,
+                ranking: Some((0..rows as u32).collect()),
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        let (_, c_hot) = hot.gather(&idx).map_err(|e| e.to_string())?;
+        prop_assert(
+            c_hot.time_s == sys.kernel_launch_s
+                && c_hot.requests == 0
+                && c_hot.bytes_on_link == 0,
+            format!("hot-frac 1 is not kernel-launch-only: {c_hot:?}"),
+        )
+    });
+}

@@ -1,0 +1,69 @@
+//! Minimal vendored stand-in for `anyhow` (no registry access offline).
+//! Provides the boxed dynamic [`Error`], the [`Result`] alias, and the
+//! [`anyhow!`] macro — the subset the examples use.
+
+use std::fmt;
+
+/// Boxed dynamic error.  Like the real crate, `Error` deliberately does
+/// *not* implement `std::error::Error`, which keeps the blanket
+/// `From<E: std::error::Error>` conversion coherent.
+pub struct Error {
+    inner: Box<dyn std::error::Error + Send + Sync + 'static>,
+}
+
+impl Error {
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error {
+            inner: message.to_string().into(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { inner: Box::new(e) }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            let _ = "x".parse::<i32>()?;
+            Ok(())
+        }
+        let err = inner().unwrap_err();
+        assert!(format!("{err}").contains("invalid digit"));
+        assert!(format!("{err:?}").contains("invalid digit"));
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = anyhow!("bad {}", 7);
+        assert_eq!(e.to_string(), "bad 7");
+    }
+}

@@ -1,0 +1,264 @@
+//! Offline stub of the `xla` crate (PJRT bindings).
+//!
+//! The real crate links `libxla_extension`, which is not present in this
+//! build environment.  This stub keeps the exact API surface ptdirect's
+//! runtime layer compiles against:
+//!
+//! * [`Literal`] is fully functional (typed shape + byte storage, round
+//!   trips through `to_vec`/`get_first_element`), so training state can be
+//!   constructed and inspected without PJRT.
+//! * [`PjRtClient::cpu`] and everything downstream of it return a clear
+//!   "PJRT unavailable" error, which callers surface verbatim; the
+//!   coordinator's native backend (see ptdirect::runtime::native) is the
+//!   execution path that works everywhere.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type: a message, plus `Display`/`Error` impls so it threads
+/// through the host crate's error conversions unchanged.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Error {
+        Error(s.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is not available in this build (xla is a stub; use the native backend)"
+    ))
+}
+
+/// Element types ptdirect materializes literals for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn size_of(&self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+        }
+    }
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+/// A typed, shaped value — the one piece of the real crate that works fully
+/// in the stub (host-memory storage, no device involved).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = dims.iter().product();
+        if numel * ty.size_of() != data.len() {
+            return Err(Error(format!(
+                "literal data is {} bytes but shape {:?} of {:?} needs {}",
+                data.len(),
+                dims,
+                ty,
+                numel * ty.size_of()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.to_vec(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Read the literal back as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let size = std::mem::size_of::<T>();
+        let n = self.data.len() / size;
+        let mut out: Vec<T> = Vec::with_capacity(n);
+        // SAFETY: the destination buffer is freshly allocated with capacity
+        // for `n` elements of T; the source holds exactly `n * size` bytes
+        // (enforced at construction) and a byte-wise copy is valid for the
+        // plain-old-data types implementing NativeType.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                n * size,
+            );
+            out.set_len(n);
+        }
+        Ok(out)
+    }
+
+    /// First element of the literal.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("literal is empty".into()))
+    }
+
+    /// Decompose a tuple literal.  The stub never produces tuples (they only
+    /// come back from PJRT execution), so this is always an error here.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module text.  The stub validates the file exists and is
+/// readable; the contents are carried opaquely.
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client handle.  Construction fails in the stub.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle (never constructible through the stub).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle (never constructible through the stub).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips_f32() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_ne_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+        assert_eq!(lit.dims(), &[3]);
+    }
+
+    #[test]
+    fn literal_round_trips_i32() {
+        let vals = [7i32, -9];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_ne_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vals);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4])
+            .is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0u8; 4]).unwrap();
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn pjrt_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("PJRT"));
+    }
+}
