@@ -1,4 +1,4 @@
-//! Whole-stack profiling harness (EXPERIMENTS.md §Perf).
+//! Whole-stack profiling harness (DESIGN.md §7).
 //!
 //! Measures the L3 hot paths in isolation:
 //!   1. warp request counting — production O(#warps) vs the O(#elements)

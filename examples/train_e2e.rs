@@ -4,7 +4,7 @@
 //! RMAT graph -> fan-out sampler -> feature store -> AOT train step on the
 //! PJRT runtime — for several hundred steps in both access modes, logging
 //! the loss curve and the paper's headline metrics (feature-copy time
-//! reduction, epoch speedup).  Results are recorded in EXPERIMENTS.md.
+//! reduction, epoch speedup).  See DESIGN.md §7 for the experiment index.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --offline --example train_e2e

@@ -98,7 +98,7 @@ fn main() {
         pct(gnn_shares[0]),
         pct(gnn_shares[1])
     );
-    // Divergence note (EXPERIMENTS.md): the paper's DGL GAT example loads
+    // Divergence note (DESIGN.md §7): the paper's DGL GAT example loads
     // *full* neighborhoods (no fan-out sampling), which is why its loader
     // share (82%) exceeds GraphSAGE's; our GAT uses the same sampled
     // fan-outs as SAGE, so its share sits below SAGE's (heavier compute,

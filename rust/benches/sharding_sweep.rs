@@ -1,0 +1,235 @@
+//! Sharding sweep — simulated transfer time vs GPU count and placement
+//! policy (DESIGN.md §6; the multi-GPU follow-up arXiv:2103.03330).
+//!
+//! Acceptance shape for the sharded feature store:
+//!
+//!  * N = 1 must cost exactly what `Tiered` costs with the same knobs
+//!    (the degeneracy contract), and with hot-frac 0 exactly what
+//!    `UnifiedAligned` costs;
+//!  * transfer time is monotone nonincreasing as N grows 1 -> 8: each GPU
+//!    gathers a smaller sub-batch, and peer reads ride NVLink, which is
+//!    several times faster than the host PCIe path;
+//!  * peer traffic responds to the placement policy: `degree` placement
+//!    spreads the globally hottest rows across all shards (high aggregate
+//!    hit rate, peer-heavy), while `contig` wastes hot-tier capacity on
+//!    cold id ranges (host-heavy) — on an R-MAT graph whose degree
+//!    correlates with node id.
+
+mod bench_common;
+
+use bench_common::expect;
+use ptdirect::config::{AccessMode, ShardPolicy, SystemProfile};
+use ptdirect::coordinator::report::{ms, pct, ratio, Table};
+use ptdirect::featurestore::{degree_ranking, FeatureStore, ShardConfig, TierConfig};
+use ptdirect::graph::generator::{rmat, RmatParams};
+use ptdirect::graph::Csr;
+use ptdirect::util::rng::Rng;
+
+const NODES: usize = 20_000;
+const EDGES: usize = 200_000;
+/// 129 f32 = 516 B rows: misaligned, so cold/peer streams exercise the
+/// circular-shift path exactly like `UnifiedAligned` does.
+const DIM: usize = 129;
+const CLASSES: u32 = 16;
+const BATCHES: usize = 64;
+const BATCH_ROWS: usize = 1024;
+const SEED: u64 = 42;
+const HOT_FRAC: f64 = 0.25;
+
+/// Degree-proportional access trace (see `tiering_sweep`): pick a uniform
+/// random edge and take its source, the frequency profile neighbor-sampled
+/// training induces.
+fn skewed_trace(graph: &Csr, rng: &mut Rng) -> Vec<Vec<u32>> {
+    let mut edge_src = vec![0u32; graph.num_edges()];
+    for v in 0..graph.num_nodes() as u32 {
+        let lo = graph.indptr[v as usize] as usize;
+        let hi = graph.indptr[v as usize + 1] as usize;
+        for s in &mut edge_src[lo..hi] {
+            *s = v;
+        }
+    }
+    (0..BATCHES)
+        .map(|_| {
+            (0..BATCH_ROWS)
+                .map(|_| edge_src[rng.gen_range_usize(edge_src.len())])
+                .collect()
+        })
+        .collect()
+}
+
+/// Replay the trace; returns total simulated transfer seconds.
+fn replay(store: &FeatureStore, trace: &[Vec<u32>]) -> f64 {
+    let mut total = 0.0;
+    for batch in trace {
+        let (_, cost) = store.gather(batch).expect("gather");
+        total += cost.time_s;
+    }
+    total
+}
+
+fn tier_cfg(ranking: Vec<u32>) -> TierConfig {
+    TierConfig {
+        hot_frac: HOT_FRAC,
+        reserve_bytes: 0,
+        promote: false, // static placement: comparisons stay deterministic
+        ranking: Some(ranking),
+    }
+}
+
+fn sharded_store(num_gpus: usize, policy: ShardPolicy, ranking: Vec<u32>) -> FeatureStore {
+    FeatureStore::build_sharded(
+        NODES,
+        DIM,
+        CLASSES,
+        &SystemProfile::system1(),
+        SEED,
+        ShardConfig {
+            num_gpus,
+            policy,
+            tier: tier_cfg(ranking),
+        },
+    )
+    .expect("sharded store")
+}
+
+fn main() {
+    let sys = SystemProfile::system1();
+    let graph = rmat(NODES, EDGES, RmatParams::default(), 0x71E5).expect("graph");
+    let mut rng = Rng::new(0x5EE9);
+    let trace = skewed_trace(&graph, &mut rng);
+    let ranking = degree_ranking(&graph);
+
+    // Single-GPU references.
+    let ua = FeatureStore::build(NODES, DIM, CLASSES, AccessMode::UnifiedAligned, &sys, SEED)
+        .expect("unified store");
+    let t_ua = replay(&ua, &trace);
+    let tiered =
+        FeatureStore::build_tiered(NODES, DIM, CLASSES, &sys, SEED, tier_cfg(ranking.clone()))
+            .expect("tiered store");
+    let t_tiered = replay(&tiered, &trace);
+
+    // ---- GPU-count sweep (hash placement) ----
+    let mut t = Table::new(
+        &format!(
+            "Sharding sweep — {BATCHES} x {BATCH_ROWS}-row degree-skewed gathers, \
+             {NODES} x {DIM} f32 table, hot-frac {HOT_FRAC} per shard (System1)"
+        ),
+        &[
+            "N", "policy", "transfer ms", "local %", "peer %", "host %", "imbalance",
+            "vs N=1",
+        ],
+    );
+    let mut times = Vec::new();
+    for n in [1usize, 2, 4, 8] {
+        let store = sharded_store(n, ShardPolicy::Hash, ranking.clone());
+        let time = replay(&store, &trace);
+        let stats = store.shard_stats().expect("shard stats");
+        let totals = stats.totals();
+        let rows = totals.rows_served() as f64;
+        t.row(&[
+            n.to_string(),
+            "hash".into(),
+            ms(time),
+            pct(totals.local_rows as f64 / rows),
+            pct(totals.peer_rows as f64 / rows),
+            pct(totals.host_rows as f64 / rows),
+            ratio(stats.load_imbalance()),
+            ratio(time / times.first().copied().unwrap_or(time)),
+        ]);
+        times.push(time);
+    }
+    t.print();
+    println!(
+        "references: UnifiedAligned {} ms, Tiered(hot {HOT_FRAC}) {} ms",
+        ms(t_ua),
+        ms(t_tiered)
+    );
+
+    let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(1e-12);
+    expect(
+        rel(times[0], t_tiered) < 1e-12,
+        "N=1 reproduces the tiered cost model bit-exactly",
+    );
+    {
+        let cold = FeatureStore::build_sharded(
+            NODES,
+            DIM,
+            CLASSES,
+            &sys,
+            SEED,
+            ShardConfig {
+                num_gpus: 1,
+                policy: ShardPolicy::Hash,
+                tier: TierConfig {
+                    hot_frac: 0.0,
+                    ..tier_cfg(ranking.clone())
+                },
+            },
+        )
+        .expect("cold sharded store");
+        expect(
+            rel(replay(&cold, &trace), t_ua) < 1e-12,
+            "N=1 at hot-frac 0 reproduces UnifiedAligned exactly",
+        );
+    }
+    let monotone = times.windows(2).all(|w| w[1] <= w[0] + 1e-12);
+    expect(monotone, "transfer time monotonically nonincreasing in N (1 -> 8)");
+    expect(
+        *times.last().unwrap() < times[0],
+        "8-way sharding strictly beats a single GPU",
+    );
+
+    // ---- placement-policy sweep at N = 4 ----
+    let mut pt = Table::new(
+        "Placement policies at N = 4 — peer traffic responds to placement",
+        &[
+            "policy", "transfer ms", "hit rate", "peer rows", "host rows", "imbalance",
+        ],
+    );
+    let mut by_policy = Vec::new();
+    for policy in ShardPolicy::all() {
+        let store = sharded_store(4, policy, ranking.clone());
+        let time = replay(&store, &trace);
+        let stats = store.shard_stats().expect("shard stats");
+        let totals = stats.totals();
+        let rows = totals.rows_served();
+        pt.row(&[
+            policy.label().into(),
+            ms(time),
+            pct((totals.local_rows + totals.peer_rows) as f64 / rows as f64),
+            totals.peer_rows.to_string(),
+            totals.host_rows.to_string(),
+            ratio(stats.load_imbalance()),
+        ]);
+        by_policy.push((policy, totals));
+    }
+    pt.print();
+
+    let peer = |p: ShardPolicy| {
+        by_policy
+            .iter()
+            .find(|(q, _)| *q == p)
+            .map(|(_, t)| t.peer_rows)
+            .unwrap_or(0)
+    };
+    let host = |p: ShardPolicy| {
+        by_policy
+            .iter()
+            .find(|(q, _)| *q == p)
+            .map(|(_, t)| t.host_rows)
+            .unwrap_or(0)
+    };
+    expect(
+        peer(ShardPolicy::Degree) > peer(ShardPolicy::Contig),
+        "degree placement sees more peer traffic than contig (hot rows spread)",
+    );
+    expect(
+        host(ShardPolicy::Contig) > host(ShardPolicy::Degree),
+        "contig placement leaks more traffic to the host path than degree",
+    );
+    expect(
+        peer(ShardPolicy::Hash) != peer(ShardPolicy::Contig)
+            || host(ShardPolicy::Hash) != host(ShardPolicy::Contig),
+        "hash and contig placements produce distinct traffic mixes",
+    );
+}

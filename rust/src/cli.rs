@@ -12,9 +12,9 @@
 
 use std::collections::BTreeMap;
 
-use crate::config::{AccessMode, Backend, RunConfig, SystemProfile};
+use crate::config::{AccessMode, Backend, RunConfig, ShardPolicy, SystemProfile};
 use crate::coordinator::microbench::{fig6_grid, fig7_sizes, run_cell};
-use crate::coordinator::report::{ms, pct, ratio, Table};
+use crate::coordinator::report::{ms, pct, ratio, shard_table, Table};
 use crate::coordinator::Trainer;
 use crate::error::{Error, Result};
 use crate::graph::datasets::DATASETS;
@@ -130,6 +130,19 @@ pub fn run_config_from(args: &Args) -> Result<RunConfig> {
     if args.flag("no-promote") {
         cfg.tier_promote = false;
     }
+    if let Some(n) = args.get_u64("num-gpus")? {
+        // Checked conversion: a wrapping `as` cast could smuggle huge
+        // values into the valid [1, 64] window.
+        cfg.num_gpus = u32::try_from(n)
+            .map_err(|_| Error::Config(format!("--num-gpus {n} out of range")))?;
+    }
+    if let Some(p) = args.get("shard-policy") {
+        cfg.shard_policy = ShardPolicy::parse(p)
+            .ok_or_else(|| Error::Config(format!("unknown shard policy `{p}`")))?;
+    }
+    // `--system` replaced the whole profile above; restore the TOML's
+    // NVLink bandwidth override on top of the newly selected profile.
+    cfg.apply_nvlink_override();
     cfg.validate()?;
     Ok(cfg)
 }
@@ -151,7 +164,7 @@ COMMANDS:
 COMMON OPTIONS:
   --dataset reddit|product|twit|sk|paper|wiki   (default product)
   --arch sage|gat                               (default sage)
-  --mode py|pyd|pyd-naive|uvm|gpu|tiered        (default pyd)
+  --mode py|pyd|pyd-naive|uvm|gpu|tiered|sharded (default pyd)
   --system system1|system2|system3              (default system1)
   --backend auto|pjrt|native                    (default auto)
   --epochs N --steps N --scale K --seed S
@@ -169,6 +182,23 @@ TIERED ACCESS MODE (--mode tiered):
   --gpu-reserve F   GPU-memory fraction reserved for model/activations (0.5)
   --no-promote      disable online LFU promotion (static placement)
   Per-epoch reporting gains tier columns: hit rate, hot bytes, promotions.
+
+SHARDED ACCESS MODE (--mode sharded):
+  The feature table is partitioned across N simulated GPUs; each GPU pins
+  the hottest rows of its own shard (the tiered machinery, per GPU — the
+  tier flags above all apply, with --hot-frac scaled per shard), reads
+  peer-owned hot rows over NVLink, and falls back to the host zero-copy
+  path for rows cold everywhere.  --num-gpus 1 reproduces tiered mode
+  bit-exactly.  After the multi-GPU follow-up (arXiv:2103.03330).
+  --num-gpus N         simulated GPUs, 1..64 (default 1)
+  --shard-policy P     hash|degree|contig row placement (default hash):
+                       hash   = uniform random shards,
+                       degree = round-robin over the degree ranking
+                                (spreads hot rows evenly),
+                       contig = contiguous id ranges (cheapest metadata,
+                                skew-prone on id-correlated graphs)
+  Per-epoch reporting gains a per-GPU table: local/peer/host row, byte and
+  time splits, plus the load-imbalance factor (slowest GPU over mean).
 ";
 
 /// Entry point used by main.rs (returns process exit code).
@@ -239,6 +269,20 @@ fn cmd_train(args: &Args) -> Result<()> {
                 tier.promotions,
                 tier.evictions,
             );
+        }
+        if let Some(shard) = &r.shard {
+            let totals = shard.totals();
+            println!(
+                "  shard: {} local / {} peer / {} host rows, peer {} host {}, \
+                 imbalance {:.2}x",
+                totals.local_rows,
+                totals.peer_rows,
+                totals.host_rows,
+                human_bytes(totals.peer_bytes),
+                human_bytes(totals.host_bytes),
+                shard.load_imbalance(),
+            );
+            shard_table(shard).print();
         }
         let m = &r.breakdown_measured;
         println!(
@@ -482,5 +526,72 @@ mod tests {
         assert!(HELP.contains("--hot-frac"));
         assert!(HELP.contains("--gpu-reserve"));
         assert!(HELP.contains("--backend"));
+    }
+
+    #[test]
+    fn sharded_cli_overrides() {
+        let a = Args::parse(&sv(&[
+            "train",
+            "--mode",
+            "sharded",
+            "--num-gpus",
+            "4",
+            "--shard-policy",
+            "degree",
+            "--hot-frac",
+            "0.3",
+        ]))
+        .unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        assert_eq!(cfg.mode, AccessMode::Sharded);
+        assert_eq!(cfg.num_gpus, 4);
+        assert_eq!(cfg.shard_policy, ShardPolicy::Degree);
+        assert!((cfg.hot_frac - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharded_cli_rejects_bad_values() {
+        let a = Args::parse(&sv(&["train", "--num-gpus", "0"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--num-gpus", "100"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        // 2^32 + 1 must not wrap into the valid window via `as` truncation.
+        let a = Args::parse(&sv(&["train", "--num-gpus", "4294967297"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--shard-policy", "modulo"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+    }
+
+    #[test]
+    fn system_override_keeps_toml_nvlink_bandwidth() {
+        // --system replaces the whole profile after TOML loading; the
+        // nvlink_gb_per_s override must survive onto the new profile.
+        // Per-process dir: a fixed /tmp path collides across users on
+        // shared machines.
+        let dir = std::env::temp_dir()
+            .join(format!("ptdirect_nvlink_override_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.toml");
+        std::fs::write(&path, "[run]\nmode = \"sharded\"\nnvlink_gb_per_s = 100.0\n").unwrap();
+        let a = Args::parse(&sv(&[
+            "train",
+            "--config",
+            path.to_str().unwrap(),
+            "--system",
+            "system2",
+        ]))
+        .unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(cfg.system.name, "System2");
+        assert!((cfg.system.nvlink.peak_bw - 100e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn help_documents_sharded_mode() {
+        assert!(HELP.contains("sharded"));
+        assert!(HELP.contains("--num-gpus"));
+        assert!(HELP.contains("--shard-policy"));
+        assert!(HELP.contains("hash|degree|contig"));
     }
 }

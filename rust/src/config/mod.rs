@@ -5,5 +5,5 @@ pub mod schema;
 pub mod systems;
 pub mod toml;
 
-pub use schema::{AccessMode, Backend, RunConfig};
-pub use systems::{PcieConfig, PowerProfile, SystemProfile};
+pub use schema::{AccessMode, Backend, RunConfig, ShardPolicy};
+pub use systems::{NvlinkConfig, PcieConfig, PowerProfile, SystemProfile};

@@ -31,6 +31,13 @@ pub enum AccessMode {
     /// `UnifiedAligned` zero-copy cold tier — the Data Tiering follow-up
     /// (arXiv:2111.05894) layered on the paper's unified tensors.
     Tiered,
+    /// Multi-GPU sharded store: the feature table is partitioned across
+    /// `num_gpus` simulated GPUs (policy-controlled, see [`ShardPolicy`]);
+    /// each GPU keeps its own hot tier over its shard, peers exchange hot
+    /// rows over NVLink, and rows cold everywhere fall back to the host
+    /// unified zero-copy path — the multi-GPU extension of the same group
+    /// (arXiv:2103.03330; GIDS, arXiv:2306.16384).  See DESIGN.md §6.
+    Sharded,
 }
 
 impl AccessMode {
@@ -42,6 +49,7 @@ impl AccessMode {
             "uvm" => Some(AccessMode::Uvm),
             "gpu" | "resident" | "gpu-resident" => Some(AccessMode::GpuResident),
             "tiered" | "tier" | "hot-cache" => Some(AccessMode::Tiered),
+            "sharded" | "shard" | "multi-gpu" => Some(AccessMode::Sharded),
             _ => None,
         }
     }
@@ -54,11 +62,12 @@ impl AccessMode {
             AccessMode::Uvm => "UVM",
             AccessMode::GpuResident => "GPU-Resident",
             AccessMode::Tiered => "Tiered",
+            AccessMode::Sharded => "Sharded",
         }
     }
 
     /// All modes, in the order benches sweep them.
-    pub fn all() -> [AccessMode; 6] {
+    pub fn all() -> [AccessMode; 7] {
         [
             AccessMode::CpuGather,
             AccessMode::UnifiedNaive,
@@ -66,7 +75,56 @@ impl AccessMode {
             AccessMode::Uvm,
             AccessMode::GpuResident,
             AccessMode::Tiered,
+            AccessMode::Sharded,
         ]
+    }
+}
+
+/// How the `Sharded` mode assigns feature rows to GPU shards.
+///
+/// Every policy is a total function of the node id (plus, for `Degree`,
+/// the degree ranking), so each row has exactly one owner and the union of
+/// the shards covers the full node range — invariants pinned by
+/// `rust/tests/sharded_properties.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShardPolicy {
+    /// Multiplicative hash of the node id: shards are uniform random
+    /// samples of the table, so both shard *sizes* and per-shard degree
+    /// profiles balance in expectation.
+    Hash,
+    /// Round-robin over the descending-degree ranking: rank `i` goes to
+    /// GPU `i % N`, so every shard holds an equal slice of the hottest
+    /// rows (the best placement for skewed access — each GPU's hot tier
+    /// caches globally hot rows).
+    Degree,
+    /// Contiguous ranges of node ids (`rows/N` each): the cheapest
+    /// placement metadata, but on graphs whose degree correlates with id
+    /// (R-MAT, most crawls) the hot rows concentrate in one shard and the
+    /// aggregate hot tier wastes capacity on cold regions.
+    Contig,
+}
+
+impl ShardPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hash" => Some(ShardPolicy::Hash),
+            "degree" | "deg" => Some(ShardPolicy::Degree),
+            "contig" | "contiguous" | "range" => Some(ShardPolicy::Contig),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardPolicy::Hash => "hash",
+            ShardPolicy::Degree => "degree",
+            ShardPolicy::Contig => "contig",
+        }
+    }
+
+    /// All policies, in the order benches sweep them.
+    pub fn all() -> [ShardPolicy; 3] {
+        [ShardPolicy::Hash, ShardPolicy::Degree, ShardPolicy::Contig]
     }
 }
 
@@ -145,6 +203,16 @@ pub struct RunConfig {
     /// `Tiered` mode: enable online LFU promotion (cache warming across
     /// epochs).
     pub tier_promote: bool,
+    /// `Sharded` mode: number of simulated GPUs the feature table is
+    /// partitioned across (1 degenerates bit-exactly to `Tiered`).
+    pub num_gpus: u32,
+    /// `Sharded` mode: row-to-shard placement policy.
+    pub shard_policy: ShardPolicy,
+    /// NVLink peer-bandwidth override in gigaBYTES per second (the unit
+    /// the `SystemProfile` constants use; named to rule out a gigaBITS
+    /// misreading).  Stored rather than applied in place so it survives a
+    /// later `system` replacement — see [`RunConfig::apply_nvlink_override`].
+    pub nvlink_gb_per_s: Option<f64>,
 }
 
 impl Default for RunConfig {
@@ -169,6 +237,9 @@ impl Default for RunConfig {
             hot_frac: 0.25,
             gpu_reserve_frac: 0.5,
             tier_promote: true,
+            num_gpus: 1,
+            shard_policy: ShardPolicy::Hash,
+            nvlink_gb_per_s: None,
         }
     }
 }
@@ -250,8 +321,39 @@ impl RunConfig {
         if let Some(v) = doc.get_bool("run.tier_promote") {
             cfg.tier_promote = v;
         }
+        if let Some(v) = doc.get_i64("run.num_gpus") {
+            // Checked conversion: a wrapping `as` cast could smuggle huge
+            // or negative values into the valid [1, 64] window.
+            cfg.num_gpus = u32::try_from(v)
+                .map_err(|_| Error::Config(format!("num_gpus {v} out of range")))?;
+        }
+        if let Some(v) = doc.get_str("run.shard_policy") {
+            cfg.shard_policy = ShardPolicy::parse(v)
+                .ok_or_else(|| Error::Config(format!("unknown shard policy `{v}`")))?;
+        }
+        if let Some(v) = doc.get_f64("run.nvlink_gb_per_s") {
+            // `v <= 0.0` alone would wave NaN through (comparisons with
+            // NaN are false) and poison every downstream cost.
+            if !(v.is_finite() && v > 0.0) {
+                return Err(Error::Config(format!(
+                    "nvlink_gb_per_s must be positive and finite, got {v}"
+                )));
+            }
+            cfg.nvlink_gb_per_s = Some(v);
+        }
+        cfg.apply_nvlink_override();
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Re-apply the `nvlink_gb_per_s` override onto the current system
+    /// profile.  Needed wherever the profile is replaced *after* TOML
+    /// loading (the CLI's `--system` flag) — applying in place at parse
+    /// time alone would silently clobber the configured bandwidth.
+    pub fn apply_nvlink_override(&mut self) {
+        if let Some(v) = self.nvlink_gb_per_s {
+            self.system.nvlink.peak_bw = v * 1e9;
+        }
     }
 
     /// Artifact name this run needs ("sage_product").
@@ -285,6 +387,12 @@ impl RunConfig {
             return Err(Error::Config(format!(
                 "gpu_reserve_frac must be in [0, 1], got {}",
                 self.gpu_reserve_frac
+            )));
+        }
+        if !(1..=64).contains(&self.num_gpus) {
+            return Err(Error::Config(format!(
+                "num_gpus must be in [1, 64], got {}",
+                self.num_gpus
             )));
         }
         Ok(())
@@ -343,8 +451,49 @@ seed = 99
         assert_eq!(AccessMode::parse("uvm"), Some(AccessMode::Uvm));
         assert_eq!(AccessMode::parse("tiered"), Some(AccessMode::Tiered));
         assert_eq!(AccessMode::parse("hot-cache"), Some(AccessMode::Tiered));
+        assert_eq!(AccessMode::parse("sharded"), Some(AccessMode::Sharded));
+        assert_eq!(AccessMode::parse("multi-gpu"), Some(AccessMode::Sharded));
         assert_eq!(AccessMode::parse("??"), None);
-        assert_eq!(AccessMode::all().len(), 6);
+        assert_eq!(AccessMode::all().len(), 7);
+    }
+
+    #[test]
+    fn shard_policy_aliases() {
+        assert_eq!(ShardPolicy::parse("hash"), Some(ShardPolicy::Hash));
+        assert_eq!(ShardPolicy::parse("DEG"), Some(ShardPolicy::Degree));
+        assert_eq!(ShardPolicy::parse("range"), Some(ShardPolicy::Contig));
+        assert_eq!(ShardPolicy::parse("modulo"), None);
+        assert_eq!(ShardPolicy::all().len(), 3);
+        assert_eq!(ShardPolicy::Degree.label(), "degree");
+    }
+
+    #[test]
+    fn sharded_knobs_parse_and_validate() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[run]
+mode = "sharded"
+num_gpus = 4
+shard_policy = "degree"
+hot_frac = 0.3
+nvlink_gb_per_s = 100.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.mode, AccessMode::Sharded);
+        assert_eq!(cfg.num_gpus, 4);
+        assert_eq!(cfg.shard_policy, ShardPolicy::Degree);
+        assert!((cfg.system.nvlink.peak_bw - 100e9).abs() < 1.0);
+
+        assert!(RunConfig::from_toml("[run]\nnum_gpus = 0").is_err());
+        assert!(RunConfig::from_toml("[run]\nnum_gpus = 65").is_err());
+        assert!(RunConfig::from_toml("[run]\nnum_gpus = -1").is_err());
+        // 2^32 + 1 must not wrap into the valid window via `as` truncation.
+        assert!(RunConfig::from_toml("[run]\nnum_gpus = 4294967297").is_err());
+        assert!(RunConfig::from_toml("[run]\nshard_policy = \"modulo\"").is_err());
+        assert!(RunConfig::from_toml("[run]\nnvlink_gb_per_s = -3.0").is_err());
+        assert!(RunConfig::from_toml("[run]\nnvlink_gb_per_s = nan").is_err());
+        assert!(RunConfig::from_toml("[run]\nnvlink_gb_per_s = inf").is_err());
     }
 
     #[test]

@@ -31,6 +31,33 @@ pub struct PcieConfig {
     pub l2_merge_fraction: f64,
 }
 
+/// NVLink peer-interconnect constants (the `Sharded` mode's GPU↔GPU path;
+/// DESIGN.md §6).
+///
+/// Shaped exactly like [`PcieConfig`] so the peer link model
+/// ([`crate::interconnect::NvlinkLink`]) can mirror the zero-copy PCIe
+/// costing: a bandwidth bound over the (L2-merged) line traffic against
+/// `peak_bw * direct_efficiency`, raced against a per-request issue bound.
+/// Peer reads still coalesce at cacheline granularity — the requester's
+/// warp stream is the same; only the link underneath changes.
+#[derive(Clone, Debug)]
+pub struct NvlinkConfig {
+    /// Aggregate per-direction NVLink bandwidth available to one GPU (its
+    /// peer-ingress budget, shared across however many peers it reads
+    /// from in a step), bytes/s.
+    pub peak_bw: f64,
+    /// Efficiency of zero-copy peer reads at full coalescing.
+    pub direct_efficiency: f64,
+    /// Residual per-request issue cost, seconds (NVLink's shorter, on-board
+    /// round trip beats PCIe's).
+    pub request_issue_s: f64,
+    /// Cacheline granularity of peer reads (bytes).
+    pub cacheline_bytes: u64,
+    /// Fraction of duplicate line traffic absorbed by the requester's L2
+    /// (same mechanism as [`PcieConfig::l2_merge_fraction`]).
+    pub l2_merge_fraction: f64,
+}
+
 /// Affine whole-system power model (paper Fig. 9; meter-level).
 #[derive(Clone, Debug)]
 pub struct PowerProfile {
@@ -89,6 +116,11 @@ pub struct SystemProfile {
     /// edge, seconds — multithreaded DGL dataloader equivalent.
     pub sample_s_per_edge: f64,
     pub pcie: PcieConfig,
+    /// Peer-interconnect constants for the simulated multi-GPU variant of
+    /// this platform (`--mode sharded`).  The paper's testbeds are
+    /// single-GPU; these model the NVLink bridge/switch their multi-GPU
+    /// SKUs ship (System2's V100 has real NVLink 2.0).
+    pub nvlink: NvlinkConfig,
     pub power: PowerProfile,
 }
 
@@ -125,6 +157,14 @@ impl SystemProfile {
                 dma_efficiency: 0.88,
                 direct_efficiency: 0.93,
                 request_issue_s: 4.0e-9,
+                cacheline_bytes: 128,
+                l2_merge_fraction: 0.4,
+            },
+            // Pascal-generation 2-way bridge (NVLink 1.0-class).
+            nvlink: NvlinkConfig {
+                peak_bw: 40.0e9,
+                direct_efficiency: 0.92,
+                request_issue_s: 2.0e-9,
                 cacheline_bytes: 128,
                 l2_merge_fraction: 0.4,
             },
@@ -165,6 +205,14 @@ impl SystemProfile {
                 cacheline_bytes: 128,
                 l2_merge_fraction: 0.4,
             },
+            // V100 NVLink 2.0: 6 links x 25 GB/s per direction.
+            nvlink: NvlinkConfig {
+                peak_bw: 150.0e9,
+                direct_efficiency: 0.92,
+                request_issue_s: 2.0e-9,
+                cacheline_bytes: 128,
+                l2_merge_fraction: 0.4,
+            },
             power: PowerProfile {
                 idle_w: 130.0,
                 cpu_max_w: 2.0 * 125.0,
@@ -197,6 +245,14 @@ impl SystemProfile {
                 dma_efficiency: 0.86,
                 direct_efficiency: 0.92,
                 request_issue_s: 4.5e-9,
+                cacheline_bytes: 128,
+                l2_merge_fraction: 0.4,
+            },
+            // Consumer Turing part: modest 2-way bridge.
+            nvlink: NvlinkConfig {
+                peak_bw: 25.0e9,
+                direct_efficiency: 0.90,
+                request_issue_s: 2.5e-9,
                 cacheline_bytes: 128,
                 l2_merge_fraction: 0.4,
             },
@@ -254,6 +310,21 @@ mod tests {
             SystemProfile::system2().host_gather_peak
                 < SystemProfile::system3().host_gather_peak
         );
+    }
+
+    #[test]
+    fn nvlink_beats_pcie_on_every_profile() {
+        // The sharded mode's premise: peer reads are cheaper than host
+        // reads, per byte and per request, on every platform.
+        for s in SystemProfile::all() {
+            assert!(
+                s.nvlink.peak_bw * s.nvlink.direct_efficiency
+                    > s.pcie.peak_bw * s.pcie.direct_efficiency,
+                "{}: NVLink effective bw must exceed PCIe",
+                s.name
+            );
+            assert!(s.nvlink.request_issue_s < s.pcie.request_issue_s, "{}", s.name);
+        }
     }
 
     #[test]

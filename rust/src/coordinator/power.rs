@@ -42,12 +42,22 @@ pub struct PowerReport {
 /// Average power over an epoch with the given breakdown.
 ///
 /// `cpu_gather_s` must be the CPU seconds spent gathering (zero for the
-/// GPU-centric modes — that is the entire Fig. 9 story).
+/// GPU-centric modes — that is the entire Fig. 9 story).  Link bytes are
+/// split per link: `host_bytes_on_link` is normalized by the PCIe peak,
+/// `peer_bytes_on_link` (the `Sharded` mode's NVLink traffic, zero
+/// everywhere else) by the much larger NVLink peak — charging peer bytes
+/// against PCIe bandwidth would saturate `io_util` with traffic that
+/// never touches the host link.  Both peaks are *per-link* budgets (every
+/// simulated GPU owns its own PCIe link and NVLink ingress — the topology
+/// the sharded timing model prices, DESIGN.md §6), so callers must pass
+/// per-link-average byte loads: the trainer divides its fleet-wide sums
+/// by `num_gpus` (1 outside `Sharded` mode).
 pub fn epoch_power(
     sys: &SystemProfile,
     b: &Breakdown,
     cpu_gather_s: f64,
-    bytes_on_link: u64,
+    host_bytes_on_link: u64,
+    peer_bytes_on_link: u64,
 ) -> PowerReport {
     let epoch = b.total_s().max(1e-12);
     let cpu_util = ((b.sample_s * CPU_W_SAMPLE + cpu_gather_s * CPU_W_GATHER)
@@ -57,7 +67,9 @@ pub fn epoch_power(
         .clamp(0.0, 1.0);
     let gpu_util = ((b.train_s * GPU_W_TRAIN + b.transfer_s * GPU_W_TRANSFER) / epoch)
         .clamp(0.0, 1.0);
-    let io_util = (bytes_on_link as f64 / epoch / sys.pcie.peak_bw).clamp(0.0, 1.0);
+    let io_util = (host_bytes_on_link as f64 / epoch / sys.pcie.peak_bw
+        + peer_bytes_on_link as f64 / epoch / sys.nvlink.peak_bw)
+        .clamp(0.0, 1.0);
     let watts = sys.power.watts(cpu_util, gpu_util, io_util);
     PowerReport {
         cpu_util,
@@ -86,10 +98,10 @@ mod tests {
         let sys = SystemProfile::system1();
         // Py: 10s epoch with 3s CPU gather inside the 4s transfer phase.
         let py = breakdown(2.0, 4.0, 3.5, 0.5);
-        let p_py = epoch_power(&sys, &py, 3.0, 40 << 30);
+        let p_py = epoch_power(&sys, &py, 3.0, 40 << 30, 0);
         // PyD: gather gone, transfer shrinks, same train.
         let pyd = breakdown(2.0, 1.8, 3.5, 0.5);
-        let p_pyd = epoch_power(&sys, &pyd, 0.0, 42 << 30);
+        let p_pyd = epoch_power(&sys, &pyd, 0.0, 42 << 30, 0);
         assert!(p_pyd.watts < p_py.watts);
         let saving = 1.0 - p_pyd.watts / p_py.watts;
         assert!(
@@ -101,14 +113,26 @@ mod tests {
     #[test]
     fn idle_epoch_is_idle_power() {
         let sys = SystemProfile::system1();
-        let p = epoch_power(&sys, &breakdown(0.0, 0.0, 0.0, 1.0), 0.0, 0);
+        let p = epoch_power(&sys, &breakdown(0.0, 0.0, 0.0, 1.0), 0.0, 0, 0);
         assert!(p.watts < sys.power.idle_w + 0.2 * sys.power.cpu_max_w);
     }
 
     #[test]
     fn utils_clamped() {
         let sys = SystemProfile::system2();
-        let p = epoch_power(&sys, &breakdown(100.0, 100.0, 100.0, 0.0), 300.0, u64::MAX);
+        let p = epoch_power(&sys, &breakdown(100.0, 100.0, 100.0, 0.0), 300.0, u64::MAX, u64::MAX);
         assert!(p.cpu_util <= 1.0 && p.gpu_util <= 1.0 && p.io_util <= 1.0);
+    }
+
+    #[test]
+    fn peer_bytes_load_nvlink_not_pcie() {
+        // The same byte volume costs less io_util as NVLink peer traffic
+        // than as host PCIe traffic (NVLink peak is several times higher).
+        let sys = SystemProfile::system1();
+        let b = breakdown(1.0, 1.0, 1.0, 0.1);
+        let as_host = epoch_power(&sys, &b, 0.0, 8 << 30, 0);
+        let as_peer = epoch_power(&sys, &b, 0.0, 0, 8 << 30);
+        assert!(as_peer.io_util < as_host.io_util);
+        assert!(as_peer.watts <= as_host.watts);
     }
 }

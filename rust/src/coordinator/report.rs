@@ -1,5 +1,9 @@
 //! Plain-text table formatting for benches and the CLI (criterion is not
-//! vendored; every bench prints paper-style tables through this).
+//! vendored; every bench prints paper-style tables through this), plus the
+//! per-GPU epoch table of the sharded mode.
+
+use crate::featurestore::ShardStats;
+use crate::util::bytes::human_bytes;
 
 /// Column-aligned text table.
 #[derive(Clone, Debug, Default)]
@@ -70,6 +74,40 @@ pub fn ms(s: f64) -> String {
     format!("{:.2}", s * 1e3)
 }
 
+/// Per-GPU epoch columns for a sharded run (`EpochReport::shard`): row and
+/// byte splits across the local/peer/host paths, link occupancy, and the
+/// busy time whose spread is the load-imbalance factor.
+pub fn shard_table(stats: &ShardStats) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "per-GPU epoch breakdown — {} GPUs, {} placement (imbalance {:.2}x)",
+            stats.num_gpus(),
+            stats.policy.label(),
+            stats.load_imbalance()
+        ),
+        &[
+            "gpu", "shard rows", "hot/cap", "local", "peer", "host", "peer B", "host B",
+            "peer ms", "host ms", "busy ms",
+        ],
+    );
+    for (g, s) in stats.per_gpu.iter().enumerate() {
+        t.row(&[
+            g.to_string(),
+            s.shard_rows.to_string(),
+            format!("{}/{}", s.hot_rows, s.capacity_rows),
+            s.local_rows.to_string(),
+            s.peer_rows.to_string(),
+            s.host_rows.to_string(),
+            human_bytes(s.peer_bytes),
+            human_bytes(s.host_bytes),
+            ms(s.peer_time_s),
+            ms(s.host_time_s),
+            ms(s.busy_s),
+        ]);
+    }
+    t
+}
+
 /// Format a ratio as "1.23x".
 pub fn ratio(r: f64) -> String {
     format!("{r:.2}x")
@@ -108,5 +146,20 @@ mod tests {
         assert_eq!(ms(0.0123), "12.30");
         assert_eq!(ratio(1.234), "1.23x");
         assert_eq!(pct(0.471), "47.1%");
+    }
+
+    #[test]
+    fn shard_table_has_one_row_per_gpu() {
+        use crate::config::ShardPolicy;
+        use crate::featurestore::GpuShardStats;
+        let stats = ShardStats {
+            policy: ShardPolicy::Degree,
+            per_gpu: vec![GpuShardStats::default(); 3],
+        };
+        let t = shard_table(&stats);
+        assert_eq!(t.rows(), 3);
+        let r = t.render();
+        assert!(r.contains("3 GPUs"));
+        assert!(r.contains("degree"));
     }
 }

@@ -11,17 +11,26 @@
 //! | `Tiered`          | unified        | hot rows free (GPU-resident cache),  |
 //! |                   |                | cold rows via the aligned zero-copy  |
 //! |                   |                | path (see [`tiered`])                |
+//! | `Sharded`         | unified + N gpus | per-GPU hot tiers over shards of  |
+//! |                   |                | the table; peer rows over NVLink,    |
+//! |                   |                | cold rows via the host zero-copy     |
+//! |                   |                | path (see [`sharded`])               |
 //!
 //! Feature values are synthesized deterministically per node such that the
 //! classification task is *learnable* (the first `classes` dimensions carry
 //! a noisy one-hot of the label) — the end-to-end example's loss curve is
-//! real learning, not noise fitting.
+//! real learning, not noise fitting.  Whatever the access mode, the table
+//! is a single source of truth: tier and shard structures are placement
+//! metadata only, so numerics are bitwise identical across modes
+//! (DESIGN.md §5).
 
+pub mod sharded;
 pub mod staging;
 pub mod store;
 pub mod synth;
 pub mod tiered;
 
+pub use sharded::{assign_owners, GpuShardStats, ShardConfig, ShardStats, ShardedStore};
 pub use staging::StagingPool;
 pub use store::FeatureStore;
 pub use synth::SyntheticFeatures;

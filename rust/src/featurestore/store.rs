@@ -1,14 +1,15 @@
-//! The unified feature store: one table, six access designs.
+//! The unified feature store: one table, seven access designs.
 
 use std::sync::Mutex;
 
 use crate::config::{AccessMode, SystemProfile};
 use crate::device::warp::{count_requests, WarpModel};
 use crate::error::{Error, Result};
+use crate::featurestore::sharded::{ShardConfig, ShardStats, ShardedStore};
 use crate::featurestore::staging::StagingPool;
 use crate::featurestore::synth::SyntheticFeatures;
 use crate::featurestore::tiered::{TierConfig, TierStats, TieredCache};
-use crate::interconnect::{DmaEngine, PcieLink, TransferCost, UvmSpace};
+use crate::interconnect::{DmaEngine, PathSplit, PcieLink, TransferCost, UvmSpace};
 use crate::tensor::{Device, Tensor};
 use crate::util::timer::Timer;
 
@@ -22,6 +23,7 @@ pub struct FeatureStore {
     staging: StagingPool,
     uvm: Option<Mutex<UvmSpace>>,
     tier: Option<Mutex<TieredCache>>,
+    shard: Option<Mutex<ShardedStore>>,
     /// Cumulative measured CPU seconds spent in real gathers (diagnostic).
     measured_gather: Mutex<f64>,
 }
@@ -35,7 +37,9 @@ impl FeatureStore {
     ///
     /// `Tiered` built through here starts with [`TierConfig::default`]
     /// (cold cache, LFU warming); use [`FeatureStore::build_tiered`] to
-    /// supply a degree ranking and capacity knobs.
+    /// supply a degree ranking and capacity knobs.  `Sharded` likewise
+    /// starts with [`ShardConfig::default`] (one GPU); use
+    /// [`FeatureStore::build_sharded`] for real partitioning.
     pub fn build(
         rows: usize,
         dim: usize,
@@ -44,7 +48,7 @@ impl FeatureStore {
         sys: &SystemProfile,
         seed: u64,
     ) -> Result<FeatureStore> {
-        Self::build_inner(rows, dim, classes, mode, sys, seed, None)
+        Self::build_inner(rows, dim, classes, mode, sys, seed, None, None)
     }
 
     /// Build a `Tiered` store with explicit tier placement/capacity knobs.
@@ -56,9 +60,40 @@ impl FeatureStore {
         seed: u64,
         tier_cfg: TierConfig,
     ) -> Result<FeatureStore> {
-        Self::build_inner(rows, dim, classes, AccessMode::Tiered, sys, seed, Some(tier_cfg))
+        Self::build_inner(
+            rows,
+            dim,
+            classes,
+            AccessMode::Tiered,
+            sys,
+            seed,
+            Some(tier_cfg),
+            None,
+        )
     }
 
+    /// Build a `Sharded` store with explicit shard placement + tier knobs.
+    pub fn build_sharded(
+        rows: usize,
+        dim: usize,
+        classes: u32,
+        sys: &SystemProfile,
+        seed: u64,
+        shard_cfg: ShardConfig,
+    ) -> Result<FeatureStore> {
+        Self::build_inner(
+            rows,
+            dim,
+            classes,
+            AccessMode::Sharded,
+            sys,
+            seed,
+            None,
+            Some(shard_cfg),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn build_inner(
         rows: usize,
         dim: usize,
@@ -67,6 +102,7 @@ impl FeatureStore {
         sys: &SystemProfile,
         seed: u64,
         tier_cfg: Option<TierConfig>,
+        shard_cfg: Option<ShardConfig>,
     ) -> Result<FeatureStore> {
         let bytes = rows as u64 * dim as u64 * 4;
         if mode == AccessMode::GpuResident && bytes > sys.gpu_mem_bytes {
@@ -96,6 +132,12 @@ impl FeatureStore {
         } else {
             None
         };
+        let shard = if mode == AccessMode::Sharded {
+            let cfg = shard_cfg.unwrap_or_default();
+            Some(Mutex::new(ShardedStore::new(rows, dim as u64 * 4, sys, &cfg)))
+        } else {
+            None
+        };
         Ok(FeatureStore {
             table,
             synth,
@@ -105,6 +147,7 @@ impl FeatureStore {
             staging: StagingPool::new(),
             uvm,
             tier,
+            shard,
             measured_gather: Mutex::new(0.0),
         })
     }
@@ -149,6 +192,11 @@ impl FeatureStore {
     /// Hot-tier counters/gauges (`Tiered` mode only).
     pub fn tier_stats(&self) -> Option<TierStats> {
         self.tier.as_ref().map(|t| t.lock().unwrap().stats())
+    }
+
+    /// Per-GPU shard counters/gauges (`Sharded` mode only).
+    pub fn shard_stats(&self) -> Option<ShardStats> {
+        self.shard.as_ref().map(|s| s.lock().unwrap().stats())
     }
 
     /// Simulated cost of a GPU zero-copy gather of `idx` over PCIe —
@@ -208,7 +256,8 @@ impl FeatureStore {
                 *self.measured_gather.lock().unwrap() += timer.elapsed_s();
                 let mut uvm = self.uvm.as_ref().unwrap().lock().unwrap();
                 let mut c = uvm.access_rows(idx, row_bytes);
-                // after migration the GPU still runs the gather kernel
+                // after migration the GPU still runs the gather kernel;
+                // split.host_time_s stays launch-free (link occupancy).
                 c.time_s += self.sys.kernel_launch_s;
                 c
             }
@@ -222,6 +271,10 @@ impl FeatureStore {
                     useful_bytes: idx.len() as u64 * row_bytes,
                     requests: 0,
                     cpu_time_s: 0.0,
+                    split: PathSplit {
+                        local_bytes: idx.len() as u64 * row_bytes,
+                        ..PathSplit::default()
+                    },
                 }
             }
             AccessMode::Tiered => {
@@ -245,6 +298,10 @@ impl FeatureStore {
                         useful_bytes: useful,
                         requests: 0,
                         cpu_time_s: 0.0,
+                        split: PathSplit {
+                            local_bytes: useful,
+                            ..PathSplit::default()
+                        },
                     }
                 } else {
                     // One gather kernel serves both tiers; only the cold
@@ -253,8 +310,20 @@ impl FeatureStore {
                     // reproduces that mode's cost exactly).
                     let mut cost = self.zero_copy_cost(&cold, true);
                     cost.useful_bytes = useful;
+                    cost.split.local_bytes = useful - cost.split.host_bytes;
                     cost
                 }
+            }
+            AccessMode::Sharded => {
+                let timer = Timer::start();
+                crate::tensor::indexing::gather_rows_into(src, f, idx, out);
+                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
+                self.shard
+                    .as_ref()
+                    .expect("sharded store has placement")
+                    .lock()
+                    .unwrap()
+                    .gather_cost(idx, f as u64, &self.sys)
             }
         };
         Ok(cost)
@@ -291,6 +360,7 @@ mod tests {
             AccessMode::Uvm,
             AccessMode::GpuResident,
             AccessMode::Tiered,
+            AccessMode::Sharded,
         ] {
             let (vals, _) = store(mode).gather(&idx).unwrap();
             assert_eq!(vals, reference, "{mode:?}");
@@ -422,5 +492,62 @@ mod tests {
     fn non_tiered_modes_report_no_tier_stats() {
         assert!(store(AccessMode::UnifiedAligned).tier_stats().is_none());
         assert!(tiered_store(0.5).tier_stats().is_some());
+    }
+
+    fn sharded_store(num_gpus: usize, hot_frac: f64) -> FeatureStore {
+        FeatureStore::build_sharded(
+            500,
+            24,
+            8,
+            &sys(),
+            42,
+            crate::featurestore::sharded::ShardConfig {
+                num_gpus,
+                policy: crate::config::ShardPolicy::Hash,
+                tier: crate::featurestore::tiered::TierConfig {
+                    hot_frac,
+                    reserve_bytes: 0,
+                    promote: false,
+                    ranking: Some((0..500).collect()),
+                },
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sharded_n1_matches_tiered_bit_exactly() {
+        let idx: Vec<u32> = (0..256u32).map(|i| i * 37 % 500).collect();
+        for hot_frac in [0.0, 0.25, 1.0] {
+            let (_, ti) = tiered_store(hot_frac).gather(&idx).unwrap();
+            let (_, sh) = sharded_store(1, hot_frac).gather(&idx).unwrap();
+            assert_eq!(sh.time_s, ti.time_s, "hot_frac {hot_frac}");
+            assert_eq!(sh.bytes_on_link, ti.bytes_on_link);
+            assert_eq!(sh.requests, ti.requests);
+            assert_eq!(sh.useful_bytes, ti.useful_bytes);
+            assert_eq!(sh.split.peer_bytes, 0, "one GPU has no peers");
+        }
+    }
+
+    #[test]
+    fn sharded_accounts_every_row_across_paths() {
+        let st = sharded_store(4, 0.4);
+        let idx: Vec<u32> = (0..300u32).map(|i| i * 7 % 500).collect();
+        let (_, cost) = st.gather(&idx).unwrap();
+        let stats = st.shard_stats().unwrap();
+        let totals = stats.totals();
+        assert_eq!(totals.rows_served(), 300);
+        assert_eq!(
+            totals.local_bytes + totals.peer_bytes + totals.host_bytes,
+            cost.useful_bytes
+        );
+        assert_eq!(stats.num_gpus(), 4);
+    }
+
+    #[test]
+    fn non_sharded_modes_report_no_shard_stats() {
+        assert!(store(AccessMode::UnifiedAligned).shard_stats().is_none());
+        assert!(tiered_store(0.5).shard_stats().is_none());
+        assert!(sharded_store(2, 0.5).shard_stats().is_some());
     }
 }

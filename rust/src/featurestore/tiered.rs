@@ -158,13 +158,30 @@ impl TieredCache {
     /// When a ranking is supplied its prefix is pre-seeded hot; otherwise
     /// the cache starts cold and (if enabled) warms through promotion.
     pub fn new(rows: usize, row_bytes: u64, sys: &SystemProfile, cfg: &TierConfig) -> TieredCache {
+        Self::with_row_basis(rows, rows, row_bytes, sys, cfg)
+    }
+
+    /// Like [`TieredCache::new`], but `hot_frac` (and the GPU-memory
+    /// budget) apply to `basis_rows` instead of the full table — the
+    /// sharded store builds one cache per GPU this way, with `basis_rows`
+    /// set to that GPU's shard size while membership/frequency vectors
+    /// still span the whole table (row ids stay global).
+    ///
+    /// `basis_rows == rows` reproduces [`TieredCache::new`] exactly.
+    pub fn with_row_basis(
+        rows: usize,
+        basis_rows: usize,
+        row_bytes: u64,
+        sys: &SystemProfile,
+        cfg: &TierConfig,
+    ) -> TieredCache {
         let budget_bytes = sys.gpu_mem_bytes.saturating_sub(cfg.reserve_bytes);
         let budget_rows = if row_bytes == 0 {
             0
         } else {
-            (budget_bytes / row_bytes).min(rows as u64) as usize
+            (budget_bytes / row_bytes).min(basis_rows as u64) as usize
         };
-        let target_rows = (cfg.hot_frac.clamp(0.0, 1.0) * rows as f64).floor() as usize;
+        let target_rows = (cfg.hot_frac.clamp(0.0, 1.0) * basis_rows as f64).floor() as usize;
         let capacity_rows = target_rows.min(budget_rows);
         let mut cache = TieredCache {
             hot: vec![false; rows],
@@ -325,6 +342,17 @@ mod tests {
         small.gpu_mem_bytes = 10 * 1024; // room for 10 rows
         let c = TieredCache::new(100, 1024, &small, &cfg(0.5, false, None));
         assert_eq!(c.capacity_rows(), 10);
+    }
+
+    #[test]
+    fn row_basis_scales_capacity_to_the_shard() {
+        // 100-row table, but hot_frac applies to a 40-row shard.
+        let c = TieredCache::with_row_basis(100, 40, 1024, &sys(), &cfg(0.5, false, None));
+        assert_eq!(c.capacity_rows(), 20);
+        // basis == rows reproduces `new` exactly.
+        let a = TieredCache::new(100, 1024, &sys(), &cfg(0.5, false, None));
+        let b = TieredCache::with_row_basis(100, 100, 1024, &sys(), &cfg(0.5, false, None));
+        assert_eq!(a.capacity_rows(), b.capacity_rows());
     }
 
     #[test]

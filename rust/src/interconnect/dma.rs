@@ -8,7 +8,7 @@
 //! throughput and adds the simulated DMA time.
 
 use crate::config::SystemProfile;
-use crate::interconnect::TransferCost;
+use crate::interconnect::{PathSplit, TransferCost};
 
 /// DMA engine + host gather cost model.
 #[derive(Clone, Debug)]
@@ -46,6 +46,12 @@ impl DmaEngine {
             useful_bytes: useful,
             requests: 1, // one DMA descriptor per call
             cpu_time_s: gather_s,
+            split: PathSplit {
+                host_bytes: useful,
+                host_bytes_on_link: useful,
+                host_time_s: gather_s + dma_s,
+                ..PathSplit::default()
+            },
         }
     }
 
@@ -60,6 +66,12 @@ impl DmaEngine {
             useful_bytes: useful,
             requests: rows,
             cpu_time_s: self.sys.dma_setup_s * rows as f64, // API call churn
+            split: PathSplit {
+                host_bytes: useful,
+                host_bytes_on_link: useful,
+                host_time_s: per_row * rows as f64,
+                ..PathSplit::default()
+            },
         }
     }
 }

@@ -1,7 +1,7 @@
-//! Host↔GPU interconnect simulator.
+//! Host↔GPU (and GPU↔GPU) interconnect simulator.
 //!
 //! Produces *simulated* durations (plain `f64` seconds, DESIGN.md §5) for
-//! the three transfer designs the paper compares:
+//! the transfer designs the paper and its follow-ups compare:
 //!
 //! * [`dma`] — the CPU-centric baseline: gather into pinned staging, then a
 //!   contiguous `cudaMemcpy` DMA (paper Fig. 2a, steps ①–④).
@@ -9,14 +9,119 @@
 //!   stream (paper Fig. 2b), naive or circular-shift aligned.
 //! * [`uvm`] — page-migration unified memory (the §3 strawman), with fault
 //!   cost and page-granularity I/O amplification.
+//! * [`nvlink`] — GPU↔GPU peer zero-copy reads for the sharded multi-GPU
+//!   store (DESIGN.md §6), symmetric in shape with [`pcie`].
 
 pub mod dma;
+pub mod nvlink;
 pub mod pcie;
 pub mod uvm;
 
 pub use dma::DmaEngine;
+pub use nvlink::NvlinkLink;
 pub use pcie::PcieLink;
 pub use uvm::UvmSpace;
+
+use crate::device::warp::GatherTraffic;
+
+/// Byte/time attribution of one transfer across the three access paths of
+/// the cost matrix (DESIGN.md §4): requester-local HBM, NVLink peer, and
+/// the host link (PCIe zero-copy, DMA, or UVM migration).
+///
+/// Single-path modes fill exactly one class (`CpuGather`/`Uvm`/the unified
+/// modes are all-host, `GpuResident` is all-local); `Tiered` splits
+/// local/host; `Sharded` uses all three.  `*_bytes` count *useful* payload
+/// (the requester's perspective); `*_bytes_on_link` decompose
+/// [`TransferCost::bytes_on_link`] (amplification included) per link, which
+/// is what the power model's per-link I/O utilization consumes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PathSplit {
+    /// Useful bytes served from the requesting GPU's own device memory.
+    pub local_bytes: u64,
+    /// Useful bytes fetched from a peer GPU's hot tier over NVLink.
+    pub peer_bytes: u64,
+    /// Useful bytes fetched from host memory over the host link.
+    pub host_bytes: u64,
+    /// Amplified bytes that crossed the NVLink / host link respectively
+    /// (their sum is [`TransferCost::bytes_on_link`]).
+    pub peer_bytes_on_link: u64,
+    pub host_bytes_on_link: u64,
+    /// Simulated seconds of NVLink occupancy (summed across GPUs).  For
+    /// the zero-copy links this excludes the gather-kernel launch, which
+    /// is charged once per step in [`TransferCost::time_s`].
+    pub peer_time_s: f64,
+    /// Simulated seconds of host-link occupancy (summed across GPUs);
+    /// launch-free for zero-copy, gather+DMA serial time for `CpuGather`,
+    /// fault+migration time for `Uvm`.
+    pub host_time_s: f64,
+}
+
+/// Which link a [`ZeroCopyLink`] cost is attributed to in [`PathSplit`].
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum LinkPath {
+    Host,
+    Peer,
+}
+
+/// The shared two-bound zero-copy costing used by both direct-access
+/// links — PCIe host reads ([`PcieLink`]) and NVLink peer reads
+/// ([`NvlinkLink`]):
+///
+/// ```text
+/// time = max(bandwidth-bound, request-rate-bound) + kernel launch
+/// ```
+///
+/// One implementation, parameterized by the link constants, makes the
+/// PCIe/NVLink symmetry structural rather than copy-paste — the `Sharded`
+/// N=1 degeneracy contract (DESIGN.md §6) leans on the two links pricing
+/// identical traffic with identical arithmetic.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ZeroCopyLink {
+    pub peak_bw: f64,
+    pub direct_efficiency: f64,
+    pub request_issue_s: f64,
+    pub l2_merge_fraction: f64,
+    pub kernel_launch_s: f64,
+}
+
+impl ZeroCopyLink {
+    /// Cost a warp-request stream: the L2 merges a fraction of the
+    /// duplicate line traffic, the merged byte count pays the bandwidth
+    /// bound, the full request count pays the issue bound, and one kernel
+    /// launch covers the gather.
+    pub(crate) fn gather(&self, traffic: &GatherTraffic, path: LinkPath) -> TransferCost {
+        let bw = self.peak_bw * self.direct_efficiency;
+        let excess = traffic.bytes_moved.saturating_sub(traffic.useful_bytes) as f64;
+        let effective_bytes =
+            traffic.useful_bytes as f64 + excess * (1.0 - self.l2_merge_fraction);
+        let bw_bound = effective_bytes / bw;
+        let req_bound = traffic.requests as f64 * self.request_issue_s;
+        let link_time_s = bw_bound.max(req_bound);
+        let split = match path {
+            LinkPath::Host => PathSplit {
+                host_bytes: traffic.useful_bytes,
+                host_bytes_on_link: effective_bytes as u64,
+                host_time_s: link_time_s,
+                ..PathSplit::default()
+            },
+            LinkPath::Peer => PathSplit {
+                peer_bytes: traffic.useful_bytes,
+                peer_bytes_on_link: effective_bytes as u64,
+                peer_time_s: link_time_s,
+                ..PathSplit::default()
+            },
+        };
+        TransferCost {
+            time_s: link_time_s + self.kernel_launch_s,
+            bytes_on_link: effective_bytes as u64,
+            useful_bytes: traffic.useful_bytes,
+            requests: traffic.requests,
+            // Zero CPU involvement — the paper's headline property.
+            cpu_time_s: 0.0,
+            split,
+        }
+    }
+}
 
 /// Outcome of one simulated transfer.
 #[derive(Clone, Copy, Debug, Default)]
@@ -32,6 +137,8 @@ pub struct TransferCost {
     /// Seconds of *CPU* time this path consumed (gather/staging work);
     /// feeds the utilization + power model.
     pub cpu_time_s: f64,
+    /// Per-path attribution of the useful bytes and link time.
+    pub split: PathSplit,
 }
 
 impl TransferCost {

@@ -1,0 +1,125 @@
+//! NVLink peer-to-peer link model — the GPU↔GPU path of the sharded
+//! feature store (DESIGN.md §6).
+//!
+//! In the multi-GPU extension of PyTorch-Direct ("Large Graph
+//! Convolutional Network Training with GPU-Oriented Data Communication
+//! Architecture", arXiv:2103.03330), each GPU pins a shard of the feature
+//! table in its own device memory and peers dereference each other's
+//! memory directly over NVLink — the same zero-copy access pattern as the
+//! host PCIe path, driven by the identical warp request stream, just over
+//! a link with several times the bandwidth and a shorter issue round trip.
+//!
+//! The model is therefore deliberately symmetric with
+//! [`PcieLink`](crate::interconnect::PcieLink):
+//!
+//! ```text
+//! time = max(bandwidth-bound, request-rate-bound) + kernel launch
+//! ```
+//!
+//! with the bandwidth bound taken over the L2-merged line traffic against
+//! `peak_bw * direct_efficiency` of the [`NvlinkConfig`], and the request
+//! bound as a residual per-request cost.  The symmetry is load-bearing:
+//! `--mode sharded --num-gpus 1` produces *no* peer traffic and must
+//! degenerate bit-exactly to the single-GPU tiered cost model, which only
+//! holds because the peer path adds no asymmetric terms.
+
+use crate::config::{NvlinkConfig, SystemProfile};
+use crate::device::warp::GatherTraffic;
+use crate::interconnect::{LinkPath, TransferCost, ZeroCopyLink};
+
+/// Zero-copy peer read path over NVLink.
+#[derive(Clone, Debug)]
+pub struct NvlinkLink {
+    cfg: NvlinkConfig,
+    kernel_launch_s: f64,
+}
+
+impl NvlinkLink {
+    pub fn new(sys: &SystemProfile) -> Self {
+        NvlinkLink {
+            cfg: sys.nvlink.clone(),
+            kernel_launch_s: sys.kernel_launch_s,
+        }
+    }
+
+    pub fn config(&self) -> &NvlinkConfig {
+        &self.cfg
+    }
+
+    /// Zero-copy peer gather driven by a warp request stream.
+    ///
+    /// Same two-bound shape as
+    /// [`PcieLink::direct_gather`](crate::interconnect::PcieLink::direct_gather):
+    /// the requester's L2 merges a fraction of the duplicate line traffic,
+    /// the merged byte count pays the bandwidth bound, the full request
+    /// count pays the issue bound, and one kernel launch covers the gather.
+    ///
+    /// The traffic may span several peers: callers count requests *per
+    /// owner* (a cacheline never straddles two GPUs' memories) and sum the
+    /// components — this link then models the requester's shared NVLink
+    /// ingress budget, per [`NvlinkConfig::peak_bw`]'s semantics.  The
+    /// arithmetic is the shared `ZeroCopyLink` of `interconnect/mod.rs`,
+    /// attributed to the peer path, so the symmetry with PCIe is
+    /// structural.
+    pub fn peer_gather(&self, traffic: &GatherTraffic) -> TransferCost {
+        ZeroCopyLink {
+            peak_bw: self.cfg.peak_bw,
+            direct_efficiency: self.cfg.direct_efficiency,
+            request_issue_s: self.cfg.request_issue_s,
+            l2_merge_fraction: self.cfg.l2_merge_fraction,
+            kernel_launch_s: self.kernel_launch_s,
+        }
+        .gather(traffic, LinkPath::Peer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::warp::{count_requests, WarpModel};
+    use crate::interconnect::PcieLink;
+
+    fn sys() -> SystemProfile {
+        SystemProfile::system1()
+    }
+
+    #[test]
+    fn peer_read_beats_host_read_for_the_same_traffic() {
+        let s = sys();
+        let idx: Vec<u32> = (0..8192u32).map(|i| i * 13 % 100_000).collect();
+        let t = count_requests(&idx, 256, WarpModel::default(), false);
+        let peer = NvlinkLink::new(&s).peer_gather(&t);
+        let host = PcieLink::new(&s).direct_gather(&t);
+        assert!(peer.time_s < host.time_s, "peer {} !< host {}", peer.time_s, host.time_s);
+        assert_eq!(peer.useful_bytes, host.useful_bytes);
+    }
+
+    #[test]
+    fn tiny_peer_transfers_dominated_by_launch() {
+        let s = sys();
+        let t = count_requests(&[1, 2, 3], 64, WarpModel::default(), false);
+        let c = NvlinkLink::new(&s).peer_gather(&t);
+        assert!(c.time_s > 0.9 * s.kernel_launch_s);
+    }
+
+    #[test]
+    fn peer_path_attributes_bytes_to_peer_split() {
+        let s = sys();
+        let t = count_requests(&[5, 6, 7, 8], 128, WarpModel::default(), false);
+        let c = NvlinkLink::new(&s).peer_gather(&t);
+        assert_eq!(c.split.peer_bytes, c.useful_bytes);
+        assert_eq!(c.split.host_bytes, 0);
+        assert_eq!(c.split.local_bytes, 0);
+        assert_eq!(c.cpu_time_s, 0.0);
+    }
+
+    #[test]
+    fn fragmentation_costs_peer_bandwidth_too() {
+        let s = sys();
+        let idx: Vec<u32> = (0..4096u32).map(|i| i.wrapping_mul(2654435761) % 500_000).collect();
+        let naive = count_requests(&idx, 513, WarpModel::default(), false);
+        let opt = count_requests(&idx, 513, WarpModel::default(), true);
+        let l = NvlinkLink::new(&s);
+        assert!(l.peer_gather(&naive).time_s > l.peer_gather(&opt).time_s);
+    }
+}

@@ -15,7 +15,7 @@
 
 use crate::config::{PcieConfig, SystemProfile};
 use crate::device::warp::GatherTraffic;
-use crate::interconnect::TransferCost;
+use crate::interconnect::{LinkPath, PathSplit, TransferCost, ZeroCopyLink};
 
 /// Zero-copy read path over PCIe.
 #[derive(Clone, Debug)]
@@ -38,12 +38,19 @@ impl PcieLink {
 
     /// The "ideal" transfer of paper Fig. 6: pure payload at theoretical peak.
     pub fn ideal(&self, useful_bytes: u64) -> TransferCost {
+        let time_s = useful_bytes as f64 / self.cfg.peak_bw;
         TransferCost {
-            time_s: useful_bytes as f64 / self.cfg.peak_bw,
+            time_s,
             bytes_on_link: useful_bytes,
             useful_bytes,
             requests: useful_bytes / self.cfg.cacheline_bytes.max(1),
             cpu_time_s: 0.0,
+            split: PathSplit {
+                host_bytes: useful_bytes,
+                host_bytes_on_link: useful_bytes,
+                host_time_s: time_s,
+                ..PathSplit::default()
+            },
         }
     }
 
@@ -52,22 +59,17 @@ impl PcieLink {
     /// The GPU L2 absorbs a fraction of the *duplicate* line traffic that
     /// misaligned streams generate (adjacent warps straddling one line), so
     /// the bandwidth bound uses the merged byte count; the full request
-    /// count still pays the issue cost.
+    /// count still pays the issue cost — the shared `ZeroCopyLink`
+    /// arithmetic (see `interconnect/mod.rs`), attributed to the host path.
     pub fn direct_gather(&self, traffic: &GatherTraffic) -> TransferCost {
-        let bw = self.cfg.peak_bw * self.cfg.direct_efficiency;
-        let excess = traffic.bytes_moved.saturating_sub(traffic.useful_bytes) as f64;
-        let effective_bytes =
-            traffic.useful_bytes as f64 + excess * (1.0 - self.cfg.l2_merge_fraction);
-        let bw_bound = effective_bytes / bw;
-        let req_bound = traffic.requests as f64 * self.cfg.request_issue_s;
-        TransferCost {
-            time_s: bw_bound.max(req_bound) + self.kernel_launch_s,
-            bytes_on_link: effective_bytes as u64,
-            useful_bytes: traffic.useful_bytes,
-            requests: traffic.requests,
-            // Zero CPU involvement — the paper's headline property.
-            cpu_time_s: 0.0,
+        ZeroCopyLink {
+            peak_bw: self.cfg.peak_bw,
+            direct_efficiency: self.cfg.direct_efficiency,
+            request_issue_s: self.cfg.request_issue_s,
+            l2_merge_fraction: self.cfg.l2_merge_fraction,
+            kernel_launch_s: self.kernel_launch_s,
         }
+        .gather(traffic, LinkPath::Host)
     }
 }
 

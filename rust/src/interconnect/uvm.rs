@@ -12,7 +12,7 @@
 use std::collections::HashMap;
 
 use crate::config::SystemProfile;
-use crate::interconnect::TransferCost;
+use crate::interconnect::{PathSplit, TransferCost};
 use crate::util::bytes::span_units;
 
 /// Page-migration managed address space.
@@ -77,14 +77,21 @@ impl UvmSpace {
         self.faults_total += faults;
         let moved = migrated_pages * self.page_bytes;
         let useful = idx.len() as u64 * row_bytes;
+        // Fault service costs overlap only partially; model them serial
+        // per fault group of 8 (driver batches nearby faults).
+        let time_s = (faults as f64 / 8.0).ceil() * self.fault_s + moved as f64 / self.bw;
         TransferCost {
-            // Fault service costs overlap only partially; model them serial
-            // per fault group of 8 (driver batches nearby faults).
-            time_s: (faults as f64 / 8.0).ceil() * self.fault_s + moved as f64 / self.bw,
+            time_s,
             bytes_on_link: moved,
             useful_bytes: useful,
             requests: faults,
             cpu_time_s: (faults as f64 / 8.0).ceil() * self.fault_s * 0.5, // interrupt handling
+            split: PathSplit {
+                host_bytes: useful,
+                host_bytes_on_link: moved,
+                host_time_s: time_s,
+                ..PathSplit::default()
+            },
         }
     }
 
@@ -92,7 +99,7 @@ impl UvmSpace {
         if self.resident.len() as u64 >= self.capacity_pages {
             // Evict the least recently used page (linear scan is fine: the
             // map is bounded by capacity_pages and eviction is the rare path
-            // in the benchmarks; see EXPERIMENTS.md §Perf).
+            // in the benchmarks; see DESIGN.md §7).
             if let Some((&victim, _)) = self.resident.iter().min_by_key(|(_, &t)| t) {
                 self.resident.remove(&victim);
                 self.evictions_total += 1;

@@ -7,12 +7,14 @@
 //! * **Layer 3 (this crate)** — the data-pipeline coordinator: graph
 //!   storage and generators, neighbor sampling, the unified-tensor runtime
 //!   with the paper's placement rules and caching allocator, the simulated
-//!   GPU/PCIe/UVM transfer models, the tiered hot-cache feature store
-//!   (GPU-resident hot set over the unified cold tier, after the Data
-//!   Tiering follow-up paper — see [`featurestore::tiered`]), the
-//!   pipelined training loop, and two training backends: the PJRT runtime
-//!   that executes the AOT-compiled training step, and a built-in native
-//!   trainer ([`runtime::native`]) that works without artifacts.
+//!   GPU/PCIe/UVM/NVLink transfer models, the tiered hot-cache feature
+//!   store (GPU-resident hot set over the unified cold tier, after the
+//!   Data Tiering follow-up paper — see [`featurestore::tiered`]), the
+//!   multi-GPU sharded store (per-GPU hot tiers with NVLink peer access —
+//!   see [`featurestore::sharded`]), the pipelined training loop, and two
+//!   training backends: the PJRT runtime that executes the AOT-compiled
+//!   training step, and a built-in native trainer ([`runtime::native`])
+//!   that works without artifacts.
 //! * **Layer 2 (python/compile/model.py)** — GraphSAGE/GAT block models
 //!   with a fused train step, lowered once to HLO text.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (gather with
@@ -22,8 +24,8 @@
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! programs once; the rust binary loads and executes them via PJRT.
 //!
-//! See DESIGN.md for the full system inventory and experiment index, and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! See DESIGN.md §1 for the full system inventory and DESIGN.md §7 for
+//! the validation/experiment index.
 
 pub mod cli;
 pub mod config;

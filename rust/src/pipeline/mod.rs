@@ -1,6 +1,17 @@
 //! Streaming mini-batch pipeline: bounded queues with blocking backpressure
 //! and a staged executor that overlaps sampling, gathering, and training —
 //! the data-loader machinery whose CPU-side cost Fig. 3 profiles.
+//!
+//! Structure: [`BoundedQueue`] is a condvar-based MPMC channel with a
+//! fixed depth (the backpressure window — `RunConfig::queue_depth`, set
+//! via the `run.queue_depth` TOML key); the
+//! [`executor`] wires sampler workers → gather → train stages through two
+//! such queues and reports per-stage busy/blocked times
+//! ([`StageTimes`]).  Real threads move real batches; the *simulated*
+//! transfer durations ride along in each batch's metadata rather than
+//! being slept (DESIGN.md §5 — the pipeline overlaps measured work while
+//! the epoch model stays analytic).  Error injection and randomized
+//! latencies are exercised by `tests/pipeline_stress.rs`.
 
 pub mod executor;
 pub mod queue;

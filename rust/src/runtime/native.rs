@@ -10,7 +10,16 @@
 //! assert the paper's core correctness property: the access mode may only
 //! change *cost*, never *numerics*.  Every operation here is plain `f32`
 //! arithmetic in a fixed order, so identically-seeded runs produce
-//! bitwise-identical loss sequences across all access modes.
+//! bitwise-identical loss sequences across all access modes — including
+//! `Tiered` and `Sharded` at any GPU count, since both are placement
+//! metadata over the same table (DESIGN.md §5/§6).
+//!
+//! Selection: `--backend native` forces this trainer; `--backend auto`
+//! falls back to it whenever the run's AOT artifact is absent, so every
+//! CLI path (and CI) trains end-to-end in a container with no XLA build.
+//! It is intentionally *not* a GNN — the cost model supplies the
+//! simulated GNN step time (DESIGN.md §5); this backend only has to make
+//! the numerics real, deterministic, and learnable.
 
 use crate::error::{Error, Result};
 use crate::runtime::state::StepMetrics;

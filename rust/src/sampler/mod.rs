@@ -7,6 +7,16 @@
 //! are the prefix of the source array, and every destination owns exactly
 //! `fanout_l` neighbor slots (padded + masked when the true degree is
 //! smaller, duplicated when sampling with replacement).
+//!
+//! The sampler is the *producer* side of the §5 split (DESIGN.md): its
+//! `src_nodes` array is the gather index stream every access mode costs —
+//! identical whatever the mode, which is what makes loss trajectories
+//! bitwise comparable across them.  Sampling itself is host work: the
+//! simulated epoch charges it per examined edge
+//! (`SystemProfile::sample_s_per_edge`), the measured side times the real
+//! traversal.  [`NeighborSampler`] seeds deterministically from the run
+//! RNG, so a `(seed, batch, fanouts)` triple fully determines every batch
+//! — the property the end-to-end suite leans on.
 
 pub mod batch;
 pub mod neighbor;

@@ -83,6 +83,12 @@ pub fn index_select(
                     .into(),
             ))
         }
+        (AccessMode::Sharded, _) => {
+            return Err(Error::Device(
+                "sharded indexing is stateful; use featurestore::FeatureStore::build_sharded"
+                    .into(),
+            ))
+        }
         (m, d) => {
             return Err(Error::Device(format!(
                 "mode {:?} cannot access features on device {d}",
@@ -119,10 +125,14 @@ pub fn index_select(
                 useful_bytes: idx.len() as u64 * row_bytes,
                 requests: 0,
                 cpu_time_s: 0.0,
+                split: crate::interconnect::PathSplit {
+                    local_bytes: idx.len() as u64 * row_bytes,
+                    ..Default::default()
+                },
             },
             None,
         ),
-        AccessMode::Uvm | AccessMode::Tiered => unreachable!(),
+        AccessMode::Uvm | AccessMode::Tiered | AccessMode::Sharded => unreachable!(),
     };
 
     Ok((

@@ -1,0 +1,218 @@
+//! Property-based tests (via the in-tree `util::proptest` harness) for the
+//! sharded feature store's invariants:
+//!
+//!  * every placement policy routes every row to exactly one owner GPU,
+//!    and the shards cover the full node range;
+//!  * local + peer + host rows equal the rows requested, whatever the
+//!    placement, policy, or promotion history;
+//!  * per-GPU hot-set bytes never exceed the configured budget (GPU
+//!    memory minus reserve, capped by the per-shard `hot_frac`);
+//!  * gathered values always match `SyntheticFeatures::fill_row` — shard
+//!    and tier structures are placement metadata, never a second copy;
+//!  * `num_gpus = 1` reproduces the single-GPU tiered cost bit-exactly.
+
+use ptdirect::config::{ShardPolicy, SystemProfile};
+use ptdirect::featurestore::{
+    assign_owners, FeatureStore, ShardConfig, SyntheticFeatures, TierConfig,
+};
+use ptdirect::util::proptest::{check, prop_assert, Gen};
+use ptdirect::util::rng::Rng;
+
+fn random_policy(g: &mut Gen) -> ShardPolicy {
+    *g.choose(&ShardPolicy::all())
+}
+
+fn random_shard_cfg(g: &mut Gen, rows: usize) -> ShardConfig {
+    let ranking = if g.bool() {
+        let mut order: Vec<u32> = (0..rows as u32).collect();
+        Rng::new(g.seed ^ 0xC0FFEE).shuffle(&mut order);
+        Some(order)
+    } else {
+        None
+    };
+    ShardConfig {
+        num_gpus: g.usize_in(1, 8),
+        policy: random_policy(g),
+        tier: TierConfig {
+            hot_frac: g.f64_in(0.0, 1.0),
+            reserve_bytes: 0,
+            promote: g.bool(),
+            ranking,
+        },
+    }
+}
+
+fn random_gathers(g: &mut Gen, rows: usize) -> Vec<Vec<u32>> {
+    let n_gathers = g.usize_in(1, 6);
+    (0..n_gathers)
+        .map(|_| {
+            let len = g.usize_in(1, 200);
+            g.vec_u32(len, 0, (rows - 1) as u32)
+        })
+        .collect()
+}
+
+#[test]
+fn every_policy_routes_every_row_to_exactly_one_owner() {
+    check(40, |g: &mut Gen| {
+        let rows = g.usize_in(1, 2000);
+        let n = g.usize_in(1, 16);
+        let ranking: Vec<u32> = (0..rows as u32).rev().collect();
+        for policy in ShardPolicy::all() {
+            let owner = assign_owners(rows, n, policy, Some(&ranking));
+            prop_assert(
+                owner.len() == rows,
+                format!("{policy:?}: {} owners for {rows} rows", owner.len()),
+            )?;
+            if let Some(&bad) = owner.iter().find(|&&o| o as usize >= n) {
+                return prop_assert(false, format!("{policy:?}: owner {bad} >= {n} GPUs"));
+            }
+            // Coverage: shard sizes sum back to the full node range.
+            let mut sizes = vec![0usize; n];
+            for &o in &owner {
+                sizes[o as usize] += 1;
+            }
+            prop_assert(
+                sizes.iter().sum::<usize>() == rows,
+                format!("{policy:?}: shards do not partition the table"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn local_peer_host_rows_equal_rows_requested() {
+    check(30, |g: &mut Gen| {
+        let rows = g.usize_in(2, 400);
+        let dim = g.usize_in(1, 64);
+        let cfg = random_shard_cfg(g, rows);
+        let store =
+            FeatureStore::build_sharded(rows, dim, 8, &SystemProfile::system1(), g.seed, cfg)
+                .map_err(|e| e.to_string())?;
+        let mut requested = 0u64;
+        for idx in random_gathers(g, rows) {
+            store.gather(&idx).map_err(|e| e.to_string())?;
+            requested += idx.len() as u64;
+        }
+        let totals = store.shard_stats().expect("sharded store has stats").totals();
+        prop_assert(
+            totals.rows_served() == requested,
+            format!(
+                "local {} + peer {} + host {} != requested {requested}",
+                totals.local_rows, totals.peer_rows, totals.host_rows
+            ),
+        )
+    });
+}
+
+#[test]
+fn per_gpu_hot_bytes_never_exceed_budget() {
+    check(30, |g: &mut Gen| {
+        let rows = g.usize_in(2, 300);
+        let dim = g.usize_in(1, 64);
+        let row_bytes = dim as u64 * 4;
+        // Shrink the GPU so the budget actually binds, and reserve a slice.
+        let mut sys = SystemProfile::system1();
+        sys.gpu_mem_bytes = g.u64_in(0, 64) * row_bytes;
+        let mut cfg = random_shard_cfg(g, rows);
+        cfg.tier.reserve_bytes = g.u64_in(0, 16) * row_bytes;
+        cfg.tier.promote = true; // promotion churn must respect budgets too
+        let budget = sys.gpu_mem_bytes.saturating_sub(cfg.tier.reserve_bytes);
+        let store = FeatureStore::build_sharded(rows, dim, 8, &sys, g.seed, cfg)
+            .map_err(|e| e.to_string())?;
+        for idx in random_gathers(g, rows) {
+            store.gather(&idx).map_err(|e| e.to_string())?;
+            for (gpu, s) in store.shard_stats().unwrap().per_gpu.iter().enumerate() {
+                prop_assert(
+                    s.hot_bytes <= budget && s.hot_bytes <= s.capacity_bytes,
+                    format!(
+                        "gpu {gpu}: hot {} bytes > budget {budget} (capacity {})",
+                        s.hot_bytes, s.capacity_bytes
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gathered_values_match_fill_row_regardless_of_placement() {
+    check(25, |g: &mut Gen| {
+        let rows = g.usize_in(2, 200);
+        let dim = g.usize_in(1, 48);
+        let classes = 8u32;
+        let seed = g.seed ^ 0xFEA7;
+        let cfg = random_shard_cfg(g, rows);
+        let store = FeatureStore::build_sharded(
+            rows,
+            dim,
+            classes,
+            &SystemProfile::system1(),
+            seed,
+            cfg,
+        )
+        .map_err(|e| e.to_string())?;
+        let synth = SyntheticFeatures::new(dim, classes, seed);
+        let mut want_row = vec![0f32; dim];
+        for idx in random_gathers(g, rows) {
+            let (vals, _) = store.gather(&idx).map_err(|e| e.to_string())?;
+            for (chunk, &r) in vals.chunks_exact(dim).zip(&idx) {
+                synth.fill_row(r, &mut want_row);
+                prop_assert(
+                    chunk == want_row.as_slice(),
+                    format!("row {r} diverged from SyntheticFeatures::fill_row"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn one_gpu_reproduces_the_tiered_cost_bit_exactly() {
+    check(25, |g: &mut Gen| {
+        let rows = g.usize_in(2, 300);
+        let dim = g.usize_in(1, 64);
+        let sys = SystemProfile::system1();
+        let seed = g.seed;
+        let hot_frac = g.f64_in(0.0, 1.0);
+        let promote = g.bool();
+        let policy = random_policy(g);
+        let idx = g.vec_u32(g.usize_in(1, 150), 0, (rows - 1) as u32);
+        let ranking: Vec<u32> = (0..rows as u32).collect();
+
+        let tier_cfg = TierConfig {
+            hot_frac,
+            reserve_bytes: 0,
+            promote,
+            ranking: Some(ranking.clone()),
+        };
+        let tiered = FeatureStore::build_tiered(rows, dim, 8, &sys, seed, tier_cfg.clone())
+            .map_err(|e| e.to_string())?;
+        let (_, c_ti) = tiered.gather(&idx).map_err(|e| e.to_string())?;
+
+        let sharded = FeatureStore::build_sharded(
+            rows,
+            dim,
+            8,
+            &sys,
+            seed,
+            ShardConfig {
+                num_gpus: 1,
+                policy,
+                tier: tier_cfg,
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        let (_, c_sh) = sharded.gather(&idx).map_err(|e| e.to_string())?;
+        prop_assert(
+            c_sh.time_s == c_ti.time_s
+                && c_sh.bytes_on_link == c_ti.bytes_on_link
+                && c_sh.requests == c_ti.requests
+                && c_sh.split.peer_bytes == 0,
+            format!("N=1 {policy:?} diverged from tiered: {c_sh:?} vs {c_ti:?}"),
+        )
+    });
+}
