@@ -9,7 +9,7 @@
 
 mod bench_common;
 
-use bench_common::expect;
+use bench_common::{expect, scaled};
 use ptdirect::config::{AccessMode, SystemProfile};
 use ptdirect::coordinator::report::{ms, ratio, Table};
 use ptdirect::device::warp::{count_requests, WarpModel};
@@ -27,7 +27,8 @@ fn main() {
         "Ablation A — circular shift benefit vs feature width",
         &["feat B", "naive reqs", "shifted reqs", "reduction", "amp naive", "amp shifted"],
     );
-    let idx: Vec<u32> = (0..16_384).map(|_| rng.gen_range(4_000_000) as u32).collect();
+    let idx: Vec<u32> =
+        (0..scaled(16_384, 2_048)).map(|_| rng.gen_range(4_000_000) as u32).collect();
     let mut max_red: f64 = 0.0;
     for feat_bytes in [128u64, 512, 516, 1024, 2052, 4096, 4100, 16384] {
         let f = feat_bytes / 4;
@@ -55,7 +56,8 @@ fn main() {
         "Ablation B — UVM page-size sensitivity (64K x 1 KiB gather, cold)",
         &["page", "time ms", "amplification", "vs PyD"],
     );
-    let idx_small: Vec<u32> = (0..65_536).map(|_| rng.gen_range(4_000_000) as u32).collect();
+    let idx_small: Vec<u32> =
+        (0..scaled(65_536, 8_192)).map(|_| rng.gen_range(4_000_000) as u32).collect();
     let pyd_t = {
         let tr = count_requests(&idx_small, 256, WarpModel::default(), true);
         PcieLink::new(&sys).direct_gather(&tr).time_s

@@ -4,6 +4,9 @@
 
 #![allow(dead_code)]
 
+use ptdirect::featurestore::{FeatureStore, TierConfig};
+use ptdirect::graph::Csr;
+use ptdirect::util::rng::Rng;
 use ptdirect::util::stats::Summary;
 use ptdirect::util::timer::Timer;
 
@@ -21,12 +24,88 @@ pub fn measure<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> Summary {
     s
 }
 
-/// Bench-scale knob: PTDIRECT_BENCH_STEPS (default given per bench).
+/// Whether the bench was invoked with `--quick` (the CI smoke
+/// configuration: tiny scale, full code path, seconds not minutes).
+/// Exact-shape checks (endpoint bit-exactness, monotonicity) hold at any
+/// scale; paper-band checks may print CHECK lines at smoke scale, which
+/// the smoke step ignores — it only gates on the bench running to
+/// completion.
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}
+
+/// Pick the full-scale or `--quick` value for a bench-size knob.
+pub fn scaled<T>(full: T, quick_val: T) -> T {
+    if quick() {
+        quick_val
+    } else {
+        full
+    }
+}
+
+/// Bench-scale knob: PTDIRECT_BENCH_STEPS (default given per bench;
+/// `--quick` caps it at 3 for the CI smoke run).
 pub fn bench_steps(default: u32) -> u32 {
-    std::env::var("PTDIRECT_BENCH_STEPS")
+    let steps = std::env::var("PTDIRECT_BENCH_STEPS")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(default)
+        .unwrap_or(default);
+    if quick() {
+        steps.min(3)
+    } else {
+        steps
+    }
+}
+
+/// Degree-proportional access trace shared by the tier/shard/storage
+/// sweeps: pick a uniform random *edge* and take its source, so a node's
+/// draw probability is its out-degree share — the frequency profile
+/// neighbor-sampled training induces, and a power-law under R-MAT.
+pub fn skewed_trace(
+    graph: &Csr,
+    rng: &mut Rng,
+    batches: usize,
+    batch_rows: usize,
+) -> Vec<Vec<u32>> {
+    let mut edge_src = vec![0u32; graph.num_edges()];
+    for v in 0..graph.num_nodes() as u32 {
+        let lo = graph.indptr[v as usize] as usize;
+        let hi = graph.indptr[v as usize + 1] as usize;
+        for s in &mut edge_src[lo..hi] {
+            *s = v;
+        }
+    }
+    (0..batches)
+        .map(|_| {
+            (0..batch_rows)
+                .map(|_| edge_src[rng.gen_range_usize(edge_src.len())])
+                .collect()
+        })
+        .collect()
+}
+
+/// Replay a gather trace against a store; returns total simulated
+/// transfer seconds.  Shared by the tier/shard/storage sweeps so their
+/// cross-bench degeneracy comparisons price traces identically.
+pub fn replay(store: &FeatureStore, trace: &[Vec<u32>]) -> f64 {
+    let mut total = 0.0;
+    for batch in trace {
+        let (_, cost) = store.gather(batch).expect("gather");
+        total += cost.time_s;
+    }
+    total
+}
+
+/// Static (promotion-off) tier configuration shared by the sweep benches:
+/// deterministic placement, so comparisons across stores and benches stay
+/// bit-reproducible.
+pub fn static_tier_cfg(hot_frac: f64, ranking: Vec<u32>) -> TierConfig {
+    TierConfig {
+        hot_frac,
+        reserve_bytes: 0,
+        promote: false,
+        ranking: Some(ranking),
+    }
 }
 
 /// Soft assertion: print PASS/CHECK lines instead of panicking so a bench

@@ -10,7 +10,7 @@
 
 mod bench_common;
 
-use bench_common::{bench_steps, expect};
+use bench_common::{bench_steps, expect, scaled};
 use ptdirect::config::{AccessMode, RunConfig, SystemProfile};
 use ptdirect::coordinator::report::{pct, Table};
 use ptdirect::coordinator::Trainer;
@@ -71,7 +71,7 @@ fn main() {
             arch: arch.into(),
             mode: AccessMode::CpuGather,
             steps_per_epoch: steps,
-            scale: 8,
+            scale: scaled(8, 64),
             feature_budget: 96 << 20,
             skip_train: true,
             seed: 0xF03,

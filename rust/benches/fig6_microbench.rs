@@ -11,7 +11,7 @@
 
 mod bench_common;
 
-use bench_common::expect;
+use bench_common::{expect, quick};
 use ptdirect::config::SystemProfile;
 use ptdirect::coordinator::microbench::{fig6_grid, run_cell};
 use ptdirect::coordinator::report::{ms, ratio, Table};
@@ -20,7 +20,14 @@ use ptdirect::util::rng::Rng;
 
 fn main() {
     let mut rng = Rng::new(0xF16);
-    let (ns, sizes) = fig6_grid();
+    let (mut ns, mut sizes) = fig6_grid();
+    if quick() {
+        // CI smoke: a 2x2 corner of the grid (keeps non-tiny cells so the
+        // band stats stay defined; paper bands may print CHECK at this
+        // scale, which the smoke step ignores).
+        ns.truncate(2);
+        sizes.truncate(2);
+    }
     let mut all_speedups = Vec::new();
 
     for sys in SystemProfile::all() {

@@ -7,7 +7,7 @@
 
 mod bench_common;
 
-use bench_common::expect;
+use bench_common::{expect, scaled};
 use ptdirect::config::SystemProfile;
 use ptdirect::coordinator::microbench::{fig7_sizes, run_cell};
 use ptdirect::coordinator::report::{ms, ratio, Table};
@@ -16,14 +16,15 @@ use ptdirect::util::rng::Rng;
 fn main() {
     let sys = SystemProfile::system1();
     let mut rng = Rng::new(0xF17);
+    let gathers = scaled(64u64 << 10, 8 << 10);
     let mut t = Table::new(
-        "Fig. 7 — alignment sweep (64K gathers, System1)",
+        &format!("Fig. 7 — alignment sweep ({}K gathers, System1)", gathers >> 10),
         &["feat B", "Py ms", "PyD naive ms", "PyD opt ms", "naive vs Py", "opt vs Py", "opt vs naive"],
     );
     let mut naive_speedups = Vec::new();
     let mut opt_speedups = Vec::new();
     for s in fig7_sizes() {
-        let c = run_cell(&sys, 64 << 10, s, &mut rng);
+        let c = run_cell(&sys, gathers, s, &mut rng);
         let naive_sp = c.py_s / c.pyd_naive_s;
         let opt_sp = c.py_s / c.pyd_s;
         t.row(&[

@@ -12,7 +12,7 @@
 
 mod bench_common;
 
-use bench_common::{bench_steps, expect};
+use bench_common::{bench_steps, expect, scaled};
 use ptdirect::config::{AccessMode, RunConfig};
 use ptdirect::coordinator::report::{ms, pct, ratio, Table};
 use ptdirect::coordinator::Trainer;
@@ -37,7 +37,7 @@ fn main() {
                 dataset: d.abbv.into(),
                 arch: arch.into(),
                 steps_per_epoch: steps,
-                scale: 256,
+                scale: scaled(256, 2048),
                 feature_budget: 96 << 20,
                 skip_train: true, // simulated breakdown; e2e runs cover PJRT
                 seed: 0xF18,

@@ -5,7 +5,7 @@
 
 mod bench_common;
 
-use bench_common::{bench_steps, expect};
+use bench_common::{bench_steps, expect, scaled};
 use ptdirect::config::{AccessMode, RunConfig};
 use ptdirect::coordinator::report::{pct, Table};
 use ptdirect::coordinator::Trainer;
@@ -28,7 +28,7 @@ fn main() {
                 dataset: d.abbv.into(),
                 arch: arch.into(),
                 steps_per_epoch: steps,
-                scale: 256,
+                scale: scaled(256, 2048),
                 feature_budget: 96 << 20,
                 skip_train: true,
                 seed: 0xF19,

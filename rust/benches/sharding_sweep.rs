@@ -17,12 +17,11 @@
 
 mod bench_common;
 
-use bench_common::expect;
+use bench_common::{expect, replay, scaled, skewed_trace, static_tier_cfg};
 use ptdirect::config::{AccessMode, ShardPolicy, SystemProfile};
 use ptdirect::coordinator::report::{ms, pct, ratio, Table};
 use ptdirect::featurestore::{degree_ranking, FeatureStore, ShardConfig, TierConfig};
 use ptdirect::graph::generator::{rmat, RmatParams};
-use ptdirect::graph::Csr;
 use ptdirect::util::rng::Rng;
 
 const NODES: usize = 20_000;
@@ -31,49 +30,12 @@ const EDGES: usize = 200_000;
 /// circular-shift path exactly like `UnifiedAligned` does.
 const DIM: usize = 129;
 const CLASSES: u32 = 16;
-const BATCHES: usize = 64;
 const BATCH_ROWS: usize = 1024;
 const SEED: u64 = 42;
 const HOT_FRAC: f64 = 0.25;
 
-/// Degree-proportional access trace (see `tiering_sweep`): pick a uniform
-/// random edge and take its source, the frequency profile neighbor-sampled
-/// training induces.
-fn skewed_trace(graph: &Csr, rng: &mut Rng) -> Vec<Vec<u32>> {
-    let mut edge_src = vec![0u32; graph.num_edges()];
-    for v in 0..graph.num_nodes() as u32 {
-        let lo = graph.indptr[v as usize] as usize;
-        let hi = graph.indptr[v as usize + 1] as usize;
-        for s in &mut edge_src[lo..hi] {
-            *s = v;
-        }
-    }
-    (0..BATCHES)
-        .map(|_| {
-            (0..BATCH_ROWS)
-                .map(|_| edge_src[rng.gen_range_usize(edge_src.len())])
-                .collect()
-        })
-        .collect()
-}
-
-/// Replay the trace; returns total simulated transfer seconds.
-fn replay(store: &FeatureStore, trace: &[Vec<u32>]) -> f64 {
-    let mut total = 0.0;
-    for batch in trace {
-        let (_, cost) = store.gather(batch).expect("gather");
-        total += cost.time_s;
-    }
-    total
-}
-
 fn tier_cfg(ranking: Vec<u32>) -> TierConfig {
-    TierConfig {
-        hot_frac: HOT_FRAC,
-        reserve_bytes: 0,
-        promote: false, // static placement: comparisons stay deterministic
-        ranking: Some(ranking),
-    }
+    static_tier_cfg(HOT_FRAC, ranking)
 }
 
 fn sharded_store(num_gpus: usize, policy: ShardPolicy, ranking: Vec<u32>) -> FeatureStore {
@@ -94,9 +56,10 @@ fn sharded_store(num_gpus: usize, policy: ShardPolicy, ranking: Vec<u32>) -> Fea
 
 fn main() {
     let sys = SystemProfile::system1();
+    let batches = scaled(64usize, 8);
     let graph = rmat(NODES, EDGES, RmatParams::default(), 0x71E5).expect("graph");
     let mut rng = Rng::new(0x5EE9);
-    let trace = skewed_trace(&graph, &mut rng);
+    let trace = skewed_trace(&graph, &mut rng, batches, BATCH_ROWS);
     let ranking = degree_ranking(&graph);
 
     // Single-GPU references.
@@ -111,7 +74,7 @@ fn main() {
     // ---- GPU-count sweep (hash placement) ----
     let mut t = Table::new(
         &format!(
-            "Sharding sweep — {BATCHES} x {BATCH_ROWS}-row degree-skewed gathers, \
+            "Sharding sweep — {batches} x {BATCH_ROWS}-row degree-skewed gathers, \
              {NODES} x {DIM} f32 table, hot-frac {HOT_FRAC} per shard (System1)"
         ),
         &[

@@ -1,0 +1,190 @@
+//! Storage sweep — simulated transfer time vs the host-resident fraction
+//! of the feature table (DESIGN.md §8; GIDS, arXiv:2306.16384).
+//!
+//! Acceptance shape for the NVMe three-tier store (EXPERIMENTS.md
+//! documents the expected curve):
+//!
+//!  * host-frac 1 must cost exactly what `Tiered` costs with the same
+//!    knobs — and therefore exactly what `Sharded` N=1 costs (the
+//!    degeneracy chain extends one tier down);
+//!  * transfer time grows monotonically as host-frac drops from 1.0 to
+//!    0.1: every row that spills trades a cacheline-granular PCIe
+//!    zero-copy read for a block-granular NVMe read that is slower per
+//!    byte *and* per command;
+//!  * block-read I/O amplification is >= 1 whenever storage is touched,
+//!    and adjacent-row traces coalesce into fewer IOs than scattered
+//!    ones (the read-coalescing model).
+
+mod bench_common;
+
+use bench_common::{expect, replay, scaled, skewed_trace, static_tier_cfg};
+use ptdirect::config::{ShardPolicy, SystemProfile};
+use ptdirect::coordinator::report::{ms, pct, ratio, Table};
+use ptdirect::featurestore::{
+    degree_ranking, FeatureStore, NvmeStoreConfig, ShardConfig, TierConfig,
+};
+use ptdirect::graph::generator::{rmat, RmatParams};
+use ptdirect::interconnect::count_block_ios;
+use ptdirect::util::rng::Rng;
+
+const NODES: usize = 20_000;
+const EDGES: usize = 200_000;
+/// 129 f32 = 516 B rows: misaligned for the host zero-copy path (the
+/// circular-shift model applies) and sub-block for the storage path
+/// (4 KiB blocks hold ~7.9 rows, so spill-layout adjacency matters).
+const DIM: usize = 129;
+const CLASSES: u32 = 16;
+const BATCH_ROWS: usize = 1024;
+const SEED: u64 = 42;
+const HOT_FRAC: f64 = 0.1;
+
+fn tier_cfg(ranking: Vec<u32>) -> TierConfig {
+    static_tier_cfg(HOT_FRAC, ranking)
+}
+
+fn nvme_store(host_frac: f64, ranking: Vec<u32>) -> FeatureStore {
+    FeatureStore::build_nvme(
+        NODES,
+        DIM,
+        CLASSES,
+        &SystemProfile::system1(),
+        SEED,
+        NvmeStoreConfig {
+            host_frac,
+            tier: tier_cfg(ranking),
+        },
+    )
+    .expect("nvme store")
+}
+
+fn main() {
+    let sys = SystemProfile::system1();
+    let batches = scaled(64usize, 8);
+    let graph = rmat(NODES, EDGES, RmatParams::default(), 0x71E5).expect("graph");
+    let mut rng = Rng::new(0x5EEA);
+    let trace = skewed_trace(&graph, &mut rng, batches, BATCH_ROWS);
+    let ranking = degree_ranking(&graph);
+
+    // Single-tier references with the same hot-tier knobs.
+    let tiered =
+        FeatureStore::build_tiered(NODES, DIM, CLASSES, &sys, SEED, tier_cfg(ranking.clone()))
+            .expect("tiered store");
+    let t_tiered = replay(&tiered, &trace);
+    let sharded = FeatureStore::build_sharded(
+        NODES,
+        DIM,
+        CLASSES,
+        &sys,
+        SEED,
+        ShardConfig {
+            num_gpus: 1,
+            policy: ShardPolicy::Hash,
+            tier: tier_cfg(ranking.clone()),
+        },
+    )
+    .expect("sharded store");
+    let t_sharded = replay(&sharded, &trace);
+
+    // ---- host-frac sweep, 1.0 -> 0.1 ----
+    let mut t = Table::new(
+        &format!(
+            "Storage sweep — {batches} x {BATCH_ROWS}-row degree-skewed gathers, \
+             {NODES} x {DIM} f32 table, hot-frac {HOT_FRAC} (System1)"
+        ),
+        &[
+            "host frac", "spilled", "gpu %", "host %", "storage %", "IOs", "amp",
+            "transfer ms", "vs frac 1",
+        ],
+    );
+    let fracs = [1.0f64, 0.9, 0.75, 0.5, 0.25, 0.1];
+    let mut times = Vec::new();
+    let mut amps = Vec::new();
+    for &frac in &fracs {
+        let store = nvme_store(frac, ranking.clone());
+        let time = replay(&store, &trace);
+        let stats = store.nvme_stats().expect("nvme stats");
+        let rows = stats.rows_served() as f64;
+        t.row(&[
+            format!("{frac:.2}"),
+            stats.spilled_rows.to_string(),
+            pct(stats.tier.hits as f64 / rows),
+            pct(stats.host_rows as f64 / rows),
+            pct(stats.storage_rows as f64 / rows),
+            stats.ios.to_string(),
+            format!("{:.2}x", stats.amplification()),
+            ms(time),
+            ratio(time / times.first().copied().unwrap_or(time)),
+        ]);
+        times.push(time);
+        amps.push((frac, stats.storage_rows, stats.amplification()));
+    }
+    t.print();
+    println!(
+        "references: Tiered(hot {HOT_FRAC}) {} ms, Sharded N=1 {} ms",
+        ms(t_tiered),
+        ms(t_sharded)
+    );
+
+    let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(1e-12);
+    expect(
+        rel(times[0], t_tiered) < 1e-12,
+        "host-frac 1 reproduces the tiered cost model bit-exactly",
+    );
+    expect(
+        rel(times[0], t_sharded) < 1e-12,
+        "host-frac 1 reproduces the sharded N=1 cost model bit-exactly",
+    );
+    let monotone = times.windows(2).all(|w| w[1] >= w[0] - 1e-12);
+    expect(
+        monotone,
+        "transfer time monotonically nondecreasing as host-frac drops 1.0 -> 0.1",
+    );
+    expect(
+        *times.last().unwrap() > times[0],
+        "a 10% host tier strictly costs more than fully host-resident",
+    );
+    expect(
+        amps.iter()
+            .filter(|&&(_, rows, _)| rows > 0)
+            .all(|&(_, _, a)| a >= 1.0 - 1e-12),
+        "block-read I/O amplification >= 1 whenever storage is touched",
+    );
+    expect(
+        amps.iter().all(|&(frac, rows, _)| frac < 1.0 || rows == 0),
+        "host-frac 1 never reads storage",
+    );
+    expect(
+        // The coldest spilled ranks can be degree-0 nodes a
+        // degree-proportional trace never draws, so near-1 fractions may
+        // legitimately stay storage-quiet; by half-spilled the trace must
+        // be hitting storage.
+        amps.iter().any(|&(frac, rows, _)| frac <= 0.5 && rows > 0),
+        "a half-spilled table sees storage traffic",
+    );
+
+    // ---- read coalescing: adjacent vs scattered spilled rows ----
+    // The spilled cold store packs rows in id order, so an id-adjacent
+    // request set shares 4 KiB blocks while an id-strided one cannot.
+    let row_bytes = DIM as u64 * 4;
+    let n = 512u32;
+    let adjacent: Vec<u32> = (0..n).collect();
+    let scattered: Vec<u32> = (0..n).map(|i| i * 64).collect();
+    let t_adj = count_block_ios(&adjacent, row_bytes, sys.nvme.block_bytes);
+    let t_sca = count_block_ios(&scattered, row_bytes, sys.nvme.block_bytes);
+    println!(
+        "coalescing: {} adjacent rows -> {} IOs (amp {:.2}x); scattered -> {} IOs (amp {:.2}x)",
+        n,
+        t_adj.ios,
+        t_adj.amplification(),
+        t_sca.ios,
+        t_sca.amplification()
+    );
+    expect(
+        t_adj.ios < t_sca.ios,
+        "adjacent spilled rows coalesce into fewer block reads than scattered",
+    );
+    expect(
+        t_adj.amplification() < t_sca.amplification(),
+        "coalescing shrinks I/O amplification",
+    );
+}

@@ -3,18 +3,18 @@
 
 mod bench_common;
 
-use bench_common::expect;
+use bench_common::{expect, scaled};
 use ptdirect::coordinator::report::Table;
 use ptdirect::graph::datasets::DATASETS;
 use ptdirect::util::bytes::human_bytes;
 
 fn main() {
+    let scale = scaled(1024u32, 8192);
     let mut t = Table::new(
-        "Table 4 — datasets (full scale | generated at 1/1024)",
+        &format!("Table 4 — datasets (full scale | generated at 1/{scale})"),
         &["abbv", "#feat", "size", "#node", "#edge", "gen nodes", "gen edges", "deg err"],
     );
     for d in DATASETS {
-        let scale = 1024;
         let g = d.build_graph(scale, 0x7AB1E4).expect("generator");
         g.validate().expect("csr invariants");
         let want_deg = d.edges as f64 / d.nodes as f64;

@@ -16,12 +16,11 @@
 
 mod bench_common;
 
-use bench_common::expect;
+use bench_common::{expect, replay as replay_time, scaled, skewed_trace};
 use ptdirect::config::{AccessMode, SystemProfile};
 use ptdirect::coordinator::report::{ms, pct, ratio, Table};
 use ptdirect::featurestore::{degree_ranking, FeatureStore, TierConfig};
 use ptdirect::graph::generator::{rmat, RmatParams};
-use ptdirect::graph::Csr;
 use ptdirect::util::rng::Rng;
 
 const NODES: usize = 20_000;
@@ -30,40 +29,14 @@ const EDGES: usize = 200_000;
 /// circular-shift path exactly like `UnifiedAligned` does.
 const DIM: usize = 129;
 const CLASSES: u32 = 16;
-const BATCHES: usize = 64;
 const BATCH_ROWS: usize = 1024;
 const SEED: u64 = 42;
 
-/// Degree-proportional access trace: pick a uniform random *edge* and take
-/// its source, so a node's draw probability is its out-degree share —
-/// the frequency profile neighbor-sampled training induces, and a
-/// power-law under R-MAT.
-fn skewed_trace(graph: &Csr, rng: &mut Rng) -> Vec<Vec<u32>> {
-    let mut edge_src = vec![0u32; graph.num_edges()];
-    for v in 0..graph.num_nodes() as u32 {
-        let lo = graph.indptr[v as usize] as usize;
-        let hi = graph.indptr[v as usize + 1] as usize;
-        for s in &mut edge_src[lo..hi] {
-            *s = v;
-        }
-    }
-    (0..BATCHES)
-        .map(|_| {
-            (0..BATCH_ROWS)
-                .map(|_| edge_src[rng.gen_range_usize(edge_src.len())])
-                .collect()
-        })
-        .collect()
-}
-
-/// Replay the trace; returns (total simulated transfer seconds, hit rate).
+/// Replay the trace (the shared `bench_common::replay` pricing); returns
+/// (total simulated transfer seconds, this replay's hit rate).
 fn replay(store: &FeatureStore, trace: &[Vec<u32>]) -> (f64, f64) {
     let before = store.tier_stats();
-    let mut total = 0.0;
-    for batch in trace {
-        let (_, cost) = store.gather(batch).expect("gather");
-        total += cost.time_s;
-    }
+    let total = replay_time(store, trace);
     let hit_rate = match (store.tier_stats(), before) {
         (Some(now), Some(b)) => now.since(&b).hit_rate(),
         (Some(now), None) => now.hit_rate(),
@@ -91,9 +64,10 @@ fn tiered_store(hot_frac: f64, promote: bool, ranking: Option<Vec<u32>>) -> Feat
 
 fn main() {
     let sys = SystemProfile::system1();
+    let batches = scaled(64usize, 8);
     let graph = rmat(NODES, EDGES, RmatParams::default(), 0x71E5).expect("graph");
     let mut rng = Rng::new(0x5EE9);
-    let trace = skewed_trace(&graph, &mut rng);
+    let trace = skewed_trace(&graph, &mut rng, batches, BATCH_ROWS);
     let ranking = degree_ranking(&graph);
 
     let ua = FeatureStore::build(NODES, DIM, CLASSES, AccessMode::UnifiedAligned, &sys, SEED)
@@ -106,7 +80,7 @@ fn main() {
     // ---- static degree-ranked sweep ----
     let mut t = Table::new(
         &format!(
-            "Tiering sweep — {BATCHES} x {BATCH_ROWS}-row degree-skewed gathers, \
+            "Tiering sweep — {batches} x {BATCH_ROWS}-row degree-skewed gathers, \
              {NODES} x {DIM} f32 table (System1)"
         ),
         &["hot frac", "hot rows", "hit rate", "transfer ms", "vs PyD", "vs GPU-res"],

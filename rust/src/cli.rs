@@ -140,9 +140,35 @@ pub fn run_config_from(args: &Args) -> Result<RunConfig> {
         cfg.shard_policy = ShardPolicy::parse(p)
             .ok_or_else(|| Error::Config(format!("unknown shard policy `{p}`")))?;
     }
-    // `--system` replaced the whole profile above; restore the TOML's
-    // NVLink bandwidth override on top of the newly selected profile.
-    cfg.apply_nvlink_override();
+    if let Some(f) = args.get_f64("host-frac")? {
+        cfg.host_frac = f;
+    }
+    if let Some(v) = args.get_f64("nvme-gb-per-s")? {
+        if !(v.is_finite() && v > 0.0) {
+            return Err(Error::Config(format!(
+                "--nvme-gb-per-s must be positive and finite, got {v}"
+            )));
+        }
+        cfg.nvme_gb_per_s = Some(v);
+    }
+    if let Some(v) = args.get_f64("nvme-iops")? {
+        if !(v.is_finite() && v > 0.0) {
+            return Err(Error::Config(format!(
+                "--nvme-iops must be positive and finite, got {v}"
+            )));
+        }
+        cfg.nvme_iops = Some(v);
+    }
+    if let Some(n) = args.get_u64("nvme-queue-depth")? {
+        let qd = u32::try_from(n)
+            .ok()
+            .filter(|&q| q >= 1)
+            .ok_or_else(|| Error::Config(format!("--nvme-queue-depth {n} out of range")))?;
+        cfg.nvme_queue_depth = Some(qd);
+    }
+    // `--system` replaced the whole profile above; restore the TOML's (and
+    // the CLI's) NVLink/NVMe overrides on top of the selected profile.
+    cfg.apply_link_overrides();
     cfg.validate()?;
     Ok(cfg)
 }
@@ -164,7 +190,7 @@ COMMANDS:
 COMMON OPTIONS:
   --dataset reddit|product|twit|sk|paper|wiki   (default product)
   --arch sage|gat                               (default sage)
-  --mode py|pyd|pyd-naive|uvm|gpu|tiered|sharded (default pyd)
+  --mode py|pyd|pyd-naive|uvm|gpu|tiered|sharded|nvme (default pyd)
   --system system1|system2|system3              (default system1)
   --backend auto|pjrt|native                    (default auto)
   --epochs N --steps N --scale K --seed S
@@ -199,6 +225,21 @@ SHARDED ACCESS MODE (--mode sharded):
                                 skew-prone on id-correlated graphs)
   Per-epoch reporting gains a per-GPU table: local/peer/host row, byte and
   time splits, plus the load-imbalance factor (slowest GPU over mean).
+
+NVME STORAGE MODE (--mode nvme):
+  For feature tables bigger than host memory (GIDS, arXiv:2306.16384):
+  host memory holds only the hottest --host-frac of the rows (by degree
+  ranking); the rest spill to a simulated NVMe cold store read by
+  GPU-initiated 4 KiB block commands (no CPU on the path).  The GPU hot
+  tier sits on top — all tiered flags apply.  --host-frac 1 reproduces
+  tiered mode bit-exactly; adjacent spilled rows coalesce into shared
+  blocks, and the per-epoch report shows the I/O amplification.
+  --host-frac F          fraction of rows host memory holds, 0..1 (0.5)
+  --nvme-gb-per-s B      override SSD read bandwidth, GB/s
+  --nvme-iops N          override SSD IOPS ceiling
+  --nvme-queue-depth Q   override outstanding-command budget, >= 1
+  Per-epoch reporting gains nvme columns: GPU/host/storage row split,
+  block reads (IOs), I/O amplification, and SSD utilization.
 ";
 
 /// Entry point used by main.rs (returns process exit code).
@@ -268,6 +309,21 @@ fn cmd_train(args: &Args) -> Result<()> {
                 human_bytes(tier.capacity_bytes),
                 tier.promotions,
                 tier.evictions,
+            );
+        }
+        if let Some(nvme) = &r.nvme {
+            println!(
+                "  nvme: hit rate {} ({} gpu / {} host / {} storage rows), \
+                 {} IOs, {} on link, amp {:.2}x, spilled {} rows, ssd {}",
+                pct(nvme.hit_rate()),
+                nvme.tier.hits,
+                nvme.host_rows,
+                nvme.storage_rows,
+                nvme.ios,
+                human_bytes(nvme.storage_bytes_on_link),
+                nvme.amplification(),
+                nvme.spilled_rows,
+                pct(r.power.storage_util),
             );
         }
         if let Some(shard) = &r.shard {
@@ -593,5 +649,75 @@ mod tests {
         assert!(HELP.contains("--num-gpus"));
         assert!(HELP.contains("--shard-policy"));
         assert!(HELP.contains("hash|degree|contig"));
+    }
+
+    #[test]
+    fn nvme_cli_overrides() {
+        let a = Args::parse(&sv(&[
+            "train",
+            "--mode",
+            "nvme",
+            "--host-frac",
+            "0.3",
+            "--hot-frac",
+            "0.1",
+            "--nvme-gb-per-s",
+            "7.0",
+            "--nvme-iops",
+            "1000000",
+            "--nvme-queue-depth",
+            "64",
+        ]))
+        .unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        assert_eq!(cfg.mode, AccessMode::Nvme);
+        assert!((cfg.host_frac - 0.3).abs() < 1e-12);
+        assert!((cfg.hot_frac - 0.1).abs() < 1e-12);
+        assert!((cfg.system.nvme.peak_bw - 7e9).abs() < 1.0);
+        assert!((cfg.system.nvme.iops - 1e6).abs() < 1e-6);
+        assert_eq!(cfg.system.nvme.queue_depth, 64);
+    }
+
+    #[test]
+    fn nvme_cli_rejects_bad_values() {
+        let a = Args::parse(&sv(&["train", "--host-frac", "1.5"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--nvme-gb-per-s", "-2"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--nvme-iops", "nan"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--nvme-queue-depth", "0"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        // 2^32 + 1 must not wrap into the valid window via `as` truncation.
+        let a = Args::parse(&sv(&["train", "--nvme-queue-depth", "4294967297"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+    }
+
+    #[test]
+    fn system_override_keeps_cli_nvme_constants() {
+        // --system replaces the whole profile; CLI nvme overrides must be
+        // re-applied on top of the newly selected profile.
+        let a = Args::parse(&sv(&[
+            "train",
+            "--mode",
+            "nvme",
+            "--nvme-gb-per-s",
+            "12.5",
+            "--system",
+            "system3",
+        ]))
+        .unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        assert_eq!(cfg.system.name, "System3");
+        assert!((cfg.system.nvme.peak_bw - 12.5e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn help_documents_nvme_mode() {
+        assert!(HELP.contains("nvme"));
+        assert!(HELP.contains("--host-frac"));
+        assert!(HELP.contains("--nvme-gb-per-s"));
+        assert!(HELP.contains("--nvme-iops"));
+        assert!(HELP.contains("--nvme-queue-depth"));
     }
 }

@@ -6,4 +6,4 @@ pub mod systems;
 pub mod toml;
 
 pub use schema::{AccessMode, Backend, RunConfig, ShardPolicy};
-pub use systems::{NvlinkConfig, PcieConfig, PowerProfile, SystemProfile};
+pub use systems::{NvlinkConfig, NvmeConfig, PcieConfig, PowerProfile, SystemProfile};

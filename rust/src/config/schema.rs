@@ -38,6 +38,11 @@ pub enum AccessMode {
     /// unified zero-copy path — the multi-GPU extension of the same group
     /// (arXiv:2103.03330; GIDS, arXiv:2306.16384).  See DESIGN.md §6.
     Sharded,
+    /// Three-tier storage mode: GPU hot tier over a `host_frac`-bounded
+    /// host unified tier over an NVMe cold store with GPU-initiated block
+    /// reads — the GIDS extension (arXiv:2306.16384) for graphs whose
+    /// feature table exceeds host memory.  See DESIGN.md §8.
+    Nvme,
 }
 
 impl AccessMode {
@@ -50,6 +55,7 @@ impl AccessMode {
             "gpu" | "resident" | "gpu-resident" => Some(AccessMode::GpuResident),
             "tiered" | "tier" | "hot-cache" => Some(AccessMode::Tiered),
             "sharded" | "shard" | "multi-gpu" => Some(AccessMode::Sharded),
+            "nvme" | "storage" | "ssd" | "gids" => Some(AccessMode::Nvme),
             _ => None,
         }
     }
@@ -63,11 +69,12 @@ impl AccessMode {
             AccessMode::GpuResident => "GPU-Resident",
             AccessMode::Tiered => "Tiered",
             AccessMode::Sharded => "Sharded",
+            AccessMode::Nvme => "NVMe",
         }
     }
 
     /// All modes, in the order benches sweep them.
-    pub fn all() -> [AccessMode; 7] {
+    pub fn all() -> [AccessMode; 8] {
         [
             AccessMode::CpuGather,
             AccessMode::UnifiedNaive,
@@ -76,6 +83,7 @@ impl AccessMode {
             AccessMode::GpuResident,
             AccessMode::Tiered,
             AccessMode::Sharded,
+            AccessMode::Nvme,
         ]
     }
 }
@@ -211,8 +219,21 @@ pub struct RunConfig {
     /// NVLink peer-bandwidth override in gigaBYTES per second (the unit
     /// the `SystemProfile` constants use; named to rule out a gigaBITS
     /// misreading).  Stored rather than applied in place so it survives a
-    /// later `system` replacement — see [`RunConfig::apply_nvlink_override`].
+    /// later `system` replacement — see [`RunConfig::apply_link_overrides`].
     pub nvlink_gb_per_s: Option<f64>,
+    /// `Nvme` mode: fraction of the feature table's rows host memory
+    /// holds, in [0, 1].  The degree-ranking prefix stays host-resident;
+    /// the remaining rows spill to the NVMe cold store.  `1.0` degenerates
+    /// bit-exactly to `Tiered` (nothing spills).
+    pub host_frac: f64,
+    /// NVMe sequential-read bandwidth override, gigaBYTES per second.
+    /// Stored like [`RunConfig::nvlink_gb_per_s`] so it survives a later
+    /// `system` replacement.
+    pub nvme_gb_per_s: Option<f64>,
+    /// NVMe device IOPS-ceiling override (4 KiB read commands per second).
+    pub nvme_iops: Option<f64>,
+    /// NVMe outstanding-command (queue depth) override.
+    pub nvme_queue_depth: Option<u32>,
 }
 
 impl Default for RunConfig {
@@ -240,6 +261,10 @@ impl Default for RunConfig {
             num_gpus: 1,
             shard_policy: ShardPolicy::Hash,
             nvlink_gb_per_s: None,
+            host_frac: 0.5,
+            nvme_gb_per_s: None,
+            nvme_iops: None,
+            nvme_queue_depth: None,
         }
     }
 }
@@ -341,18 +366,56 @@ impl RunConfig {
             }
             cfg.nvlink_gb_per_s = Some(v);
         }
-        cfg.apply_nvlink_override();
+        if let Some(v) = doc.get_f64("run.host_frac") {
+            cfg.host_frac = v;
+        }
+        if let Some(v) = doc.get_f64("run.nvme_gb_per_s") {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(Error::Config(format!(
+                    "nvme_gb_per_s must be positive and finite, got {v}"
+                )));
+            }
+            cfg.nvme_gb_per_s = Some(v);
+        }
+        if let Some(v) = doc.get_f64("run.nvme_iops") {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(Error::Config(format!(
+                    "nvme_iops must be positive and finite, got {v}"
+                )));
+            }
+            cfg.nvme_iops = Some(v);
+        }
+        if let Some(v) = doc.get_i64("run.nvme_queue_depth") {
+            // Checked conversion + positivity: depth 0 would starve the
+            // link model's command rate into a division artifact.
+            let qd = u32::try_from(v)
+                .ok()
+                .filter(|&q| q >= 1)
+                .ok_or_else(|| Error::Config(format!("nvme_queue_depth {v} out of range")))?;
+            cfg.nvme_queue_depth = Some(qd);
+        }
+        cfg.apply_link_overrides();
         cfg.validate()?;
         Ok(cfg)
     }
 
-    /// Re-apply the `nvlink_gb_per_s` override onto the current system
-    /// profile.  Needed wherever the profile is replaced *after* TOML
-    /// loading (the CLI's `--system` flag) — applying in place at parse
-    /// time alone would silently clobber the configured bandwidth.
-    pub fn apply_nvlink_override(&mut self) {
+    /// Re-apply the stored link overrides (`nvlink_gb_per_s`, `nvme_*`)
+    /// onto the current system profile.  Needed wherever the profile is
+    /// replaced *after* TOML loading (the CLI's `--system` flag) —
+    /// applying in place at parse time alone would silently clobber the
+    /// configured constants.
+    pub fn apply_link_overrides(&mut self) {
         if let Some(v) = self.nvlink_gb_per_s {
             self.system.nvlink.peak_bw = v * 1e9;
+        }
+        if let Some(v) = self.nvme_gb_per_s {
+            self.system.nvme.peak_bw = v * 1e9;
+        }
+        if let Some(v) = self.nvme_iops {
+            self.system.nvme.iops = v;
+        }
+        if let Some(v) = self.nvme_queue_depth {
+            self.system.nvme.queue_depth = v;
         }
     }
 
@@ -393,6 +456,12 @@ impl RunConfig {
             return Err(Error::Config(format!(
                 "num_gpus must be in [1, 64], got {}",
                 self.num_gpus
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.host_frac) {
+            return Err(Error::Config(format!(
+                "host_frac must be in [0, 1], got {}",
+                self.host_frac
             )));
         }
         Ok(())
@@ -453,8 +522,11 @@ seed = 99
         assert_eq!(AccessMode::parse("hot-cache"), Some(AccessMode::Tiered));
         assert_eq!(AccessMode::parse("sharded"), Some(AccessMode::Sharded));
         assert_eq!(AccessMode::parse("multi-gpu"), Some(AccessMode::Sharded));
+        assert_eq!(AccessMode::parse("nvme"), Some(AccessMode::Nvme));
+        assert_eq!(AccessMode::parse("gids"), Some(AccessMode::Nvme));
+        assert_eq!(AccessMode::parse("storage"), Some(AccessMode::Nvme));
         assert_eq!(AccessMode::parse("??"), None);
-        assert_eq!(AccessMode::all().len(), 7);
+        assert_eq!(AccessMode::all().len(), 8);
     }
 
     #[test]
@@ -518,6 +590,36 @@ tier_promote = false
         assert!(RunConfig::from_toml("[run]\nhot_frac = 1.5").is_err());
         assert!(RunConfig::from_toml("[run]\ngpu_reserve_frac = -0.1").is_err());
         assert!(RunConfig::from_toml("[run]\nbackend = \"quantum\"").is_err());
+    }
+
+    #[test]
+    fn nvme_knobs_parse_and_validate() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[run]
+mode = "nvme"
+host_frac = 0.4
+nvme_gb_per_s = 7.0
+nvme_iops = 1000000
+nvme_queue_depth = 64
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.mode, AccessMode::Nvme);
+        assert!((cfg.host_frac - 0.4).abs() < 1e-12);
+        assert!((cfg.system.nvme.peak_bw - 7e9).abs() < 1.0);
+        assert!((cfg.system.nvme.iops - 1e6).abs() < 1e-6);
+        assert_eq!(cfg.system.nvme.queue_depth, 64);
+
+        assert!(RunConfig::from_toml("[run]\nhost_frac = 1.5").is_err());
+        assert!(RunConfig::from_toml("[run]\nhost_frac = -0.1").is_err());
+        assert!(RunConfig::from_toml("[run]\nnvme_gb_per_s = -3.0").is_err());
+        assert!(RunConfig::from_toml("[run]\nnvme_gb_per_s = nan").is_err());
+        assert!(RunConfig::from_toml("[run]\nnvme_iops = inf").is_err());
+        assert!(RunConfig::from_toml("[run]\nnvme_queue_depth = 0").is_err());
+        assert!(RunConfig::from_toml("[run]\nnvme_queue_depth = -1").is_err());
+        // 2^32 + 1 must not wrap into the valid window via `as` truncation.
+        assert!(RunConfig::from_toml("[run]\nnvme_queue_depth = 4294967297").is_err());
     }
 
     #[test]

@@ -58,6 +58,36 @@ pub struct NvlinkConfig {
     pub l2_merge_fraction: f64,
 }
 
+/// NVMe storage-link constants (the `Nvme` mode's GPU↔SSD path;
+/// DESIGN.md §8).
+///
+/// GIDS (arXiv:2306.16384) extends the zero-copy paradigm past host
+/// memory: GPU threads submit NVMe read commands directly (BaM-style),
+/// so cold feature rows stream from storage without CPU involvement.
+/// The link is block-granular — every command reads a whole
+/// [`NvmeConfig::block_bytes`] block — and its throughput is the lesser
+/// of a bandwidth bound and a command-rate bound, where the achievable
+/// command rate is capped both by the device's IOPS ceiling and by how
+/// many commands the submission queues keep in flight
+/// (`queue_depth / read_latency_s`, Little's law).
+#[derive(Clone, Debug)]
+pub struct NvmeConfig {
+    /// Peak sequential-read bandwidth, bytes/s.
+    pub peak_bw: f64,
+    /// Device random-read command ceiling, commands/s (4 KiB reads).
+    pub iops: f64,
+    /// Outstanding-command budget the GPU submission queues sustain.
+    /// Effective command rate is `min(iops, queue_depth / read_latency_s)`
+    /// — shallow queues leave the device idle between completions.
+    pub queue_depth: u32,
+    /// Per-command service latency, seconds (submission to completion).
+    pub read_latency_s: f64,
+    /// Read granularity, bytes (the NVMe block / page size).  Rows smaller
+    /// than a block amplify I/O unless adjacent rows coalesce into shared
+    /// blocks ([`crate::interconnect::count_block_ios`]).
+    pub block_bytes: u64,
+}
+
 /// Affine whole-system power model (paper Fig. 9; meter-level).
 #[derive(Clone, Debug)]
 pub struct PowerProfile {
@@ -69,15 +99,19 @@ pub struct PowerProfile {
     pub gpu_max_w: f64,
     /// Additional draw attributable to PCIe/memory I/O at full tilt.
     pub io_max_w: f64,
+    /// NVMe SSD max additional draw over idle at 100% read utilization
+    /// (the `Nvme` storage tier's active power; DESIGN.md §8).
+    pub ssd_max_w: f64,
 }
 
 impl PowerProfile {
     /// System power given utilizations in [0, 1].
-    pub fn watts(&self, cpu_util: f64, gpu_util: f64, io_util: f64) -> f64 {
+    pub fn watts(&self, cpu_util: f64, gpu_util: f64, io_util: f64, storage_util: f64) -> f64 {
         self.idle_w
             + self.cpu_max_w * cpu_util.clamp(0.0, 1.0)
             + self.gpu_max_w * gpu_util.clamp(0.0, 1.0)
             + self.io_max_w * io_util.clamp(0.0, 1.0)
+            + self.ssd_max_w * storage_util.clamp(0.0, 1.0)
     }
 }
 
@@ -121,6 +155,10 @@ pub struct SystemProfile {
     /// single-GPU; these model the NVLink bridge/switch their multi-GPU
     /// SKUs ship (System2's V100 has real NVLink 2.0).
     pub nvlink: NvlinkConfig,
+    /// NVMe storage-link constants for the beyond-host-memory cold tier
+    /// (`--mode nvme`, DESIGN.md §8); the SSD class each platform would
+    /// plausibly carry.
+    pub nvme: NvmeConfig,
     pub power: PowerProfile,
 }
 
@@ -168,11 +206,20 @@ impl SystemProfile {
                 cacheline_bytes: 128,
                 l2_merge_fraction: 0.4,
             },
+            // Workstation PCIe 3.0 x4 NVMe (970 Pro class).
+            nvme: NvmeConfig {
+                peak_bw: 3.2e9,
+                iops: 600_000.0,
+                queue_depth: 256,
+                read_latency_s: 90e-6,
+                block_bytes: 4096,
+            },
             power: PowerProfile {
                 idle_w: 105.0,
                 cpu_max_w: 280.0,
                 gpu_max_w: 250.0,
                 io_max_w: 25.0,
+                ssd_max_w: 9.0,
             },
         }
     }
@@ -213,11 +260,21 @@ impl SystemProfile {
                 cacheline_bytes: 128,
                 l2_merge_fraction: 0.4,
             },
+            // Datacenter U.2 NVMe (P4510 class): deeper queues, steadier
+            // latency, slightly lower peak than the consumer parts.
+            nvme: NvmeConfig {
+                peak_bw: 3.0e9,
+                iops: 750_000.0,
+                queue_depth: 512,
+                read_latency_s: 80e-6,
+                block_bytes: 4096,
+            },
             power: PowerProfile {
                 idle_w: 130.0,
                 cpu_max_w: 2.0 * 125.0,
                 gpu_max_w: 300.0,
                 io_max_w: 25.0,
+                ssd_max_w: 12.0,
             },
         }
     }
@@ -256,11 +313,20 @@ impl SystemProfile {
                 cacheline_bytes: 128,
                 l2_merge_fraction: 0.4,
             },
+            // Budget desktop NVMe (660p class): QLC, shallow queues.
+            nvme: NvmeConfig {
+                peak_bw: 1.8e9,
+                iops: 220_000.0,
+                queue_depth: 128,
+                read_latency_s: 120e-6,
+                block_bytes: 4096,
+            },
             power: PowerProfile {
                 idle_w: 70.0,
                 cpu_max_w: 95.0,
                 gpu_max_w: 120.0,
                 io_max_w: 20.0,
+                ssd_max_w: 6.0,
             },
         }
     }
@@ -330,8 +396,33 @@ mod tests {
     #[test]
     fn power_model_monotone_and_clamped() {
         let p = SystemProfile::system1().power;
-        assert!((p.watts(0.0, 0.0, 0.0) - 105.0).abs() < 1e-9);
-        assert!(p.watts(0.5, 0.2, 0.1) > p.watts(0.1, 0.2, 0.1));
-        assert_eq!(p.watts(2.0, 0.0, 0.0), p.watts(1.0, 0.0, 0.0));
+        assert!((p.watts(0.0, 0.0, 0.0, 0.0) - 105.0).abs() < 1e-9);
+        assert!(p.watts(0.5, 0.2, 0.1, 0.0) > p.watts(0.1, 0.2, 0.1, 0.0));
+        assert_eq!(p.watts(2.0, 0.0, 0.0, 0.0), p.watts(1.0, 0.0, 0.0, 0.0));
+        // SSD active power is its own affine term, clamped like the rest.
+        assert!(p.watts(0.0, 0.0, 0.0, 1.0) > p.watts(0.0, 0.0, 0.0, 0.0));
+        assert_eq!(p.watts(0.0, 0.0, 0.0, 5.0), p.watts(0.0, 0.0, 0.0, 1.0));
+    }
+
+    #[test]
+    fn nvme_sits_below_the_host_link_on_every_profile() {
+        // The storage tier's premise: NVMe is the slowest, costliest tier —
+        // below PCIe zero-copy in bandwidth on every platform — and its
+        // queue-depth budget is deep enough to reach the device's IOPS
+        // ceiling (shallow-queue starvation is a config override scenario,
+        // not the default).
+        for s in SystemProfile::all() {
+            assert!(
+                s.nvme.peak_bw < s.pcie.peak_bw * s.pcie.direct_efficiency,
+                "{}: NVMe bw must sit below effective PCIe",
+                s.name
+            );
+            assert!(
+                s.nvme.queue_depth as f64 / s.nvme.read_latency_s >= s.nvme.iops,
+                "{}: default queue depth must saturate device IOPS",
+                s.name
+            );
+            assert_eq!(s.nvme.block_bytes, 4096, "{}", s.name);
+        }
     }
 }

@@ -35,6 +35,8 @@ pub struct PowerReport {
     pub cpu_util: f64,
     pub gpu_util: f64,
     pub io_util: f64,
+    /// NVMe read utilization (the `Nvme` storage tier; zero elsewhere).
+    pub storage_util: f64,
     pub watts: f64,
     pub energy_j: f64,
 }
@@ -52,12 +54,20 @@ pub struct PowerReport {
 /// the sharded timing model prices, DESIGN.md §6), so callers must pass
 /// per-link-average byte loads: the trainer divides its fleet-wide sums
 /// by `num_gpus` (1 outside `Sharded` mode).
+///
+/// `storage_bytes_on_link` (the `Nvme` mode's block-read traffic, zero
+/// everywhere else) is normalized by the NVMe peak into its own
+/// `storage_util`, which drives the SSD active-power term
+/// (`PowerProfile::ssd_max_w`, DESIGN.md §8) rather than the PCIe/NVLink
+/// I/O term — the SSD's draw scales with its own read duty cycle, not
+/// with the host link's.
 pub fn epoch_power(
     sys: &SystemProfile,
     b: &Breakdown,
     cpu_gather_s: f64,
     host_bytes_on_link: u64,
     peer_bytes_on_link: u64,
+    storage_bytes_on_link: u64,
 ) -> PowerReport {
     let epoch = b.total_s().max(1e-12);
     let cpu_util = ((b.sample_s * CPU_W_SAMPLE + cpu_gather_s * CPU_W_GATHER)
@@ -70,11 +80,14 @@ pub fn epoch_power(
     let io_util = (host_bytes_on_link as f64 / epoch / sys.pcie.peak_bw
         + peer_bytes_on_link as f64 / epoch / sys.nvlink.peak_bw)
         .clamp(0.0, 1.0);
-    let watts = sys.power.watts(cpu_util, gpu_util, io_util);
+    let storage_util =
+        (storage_bytes_on_link as f64 / epoch / sys.nvme.peak_bw).clamp(0.0, 1.0);
+    let watts = sys.power.watts(cpu_util, gpu_util, io_util, storage_util);
     PowerReport {
         cpu_util,
         gpu_util,
         io_util,
+        storage_util,
         watts,
         energy_j: watts * epoch,
     }
@@ -98,10 +111,10 @@ mod tests {
         let sys = SystemProfile::system1();
         // Py: 10s epoch with 3s CPU gather inside the 4s transfer phase.
         let py = breakdown(2.0, 4.0, 3.5, 0.5);
-        let p_py = epoch_power(&sys, &py, 3.0, 40 << 30, 0);
+        let p_py = epoch_power(&sys, &py, 3.0, 40 << 30, 0, 0);
         // PyD: gather gone, transfer shrinks, same train.
         let pyd = breakdown(2.0, 1.8, 3.5, 0.5);
-        let p_pyd = epoch_power(&sys, &pyd, 0.0, 42 << 30, 0);
+        let p_pyd = epoch_power(&sys, &pyd, 0.0, 42 << 30, 0, 0);
         assert!(p_pyd.watts < p_py.watts);
         let saving = 1.0 - p_pyd.watts / p_py.watts;
         assert!(
@@ -113,15 +126,23 @@ mod tests {
     #[test]
     fn idle_epoch_is_idle_power() {
         let sys = SystemProfile::system1();
-        let p = epoch_power(&sys, &breakdown(0.0, 0.0, 0.0, 1.0), 0.0, 0, 0);
+        let p = epoch_power(&sys, &breakdown(0.0, 0.0, 0.0, 1.0), 0.0, 0, 0, 0);
         assert!(p.watts < sys.power.idle_w + 0.2 * sys.power.cpu_max_w);
     }
 
     #[test]
     fn utils_clamped() {
         let sys = SystemProfile::system2();
-        let p = epoch_power(&sys, &breakdown(100.0, 100.0, 100.0, 0.0), 300.0, u64::MAX, u64::MAX);
+        let p = epoch_power(
+            &sys,
+            &breakdown(100.0, 100.0, 100.0, 0.0),
+            300.0,
+            u64::MAX,
+            u64::MAX,
+            u64::MAX,
+        );
         assert!(p.cpu_util <= 1.0 && p.gpu_util <= 1.0 && p.io_util <= 1.0);
+        assert!(p.storage_util <= 1.0);
     }
 
     #[test]
@@ -130,9 +151,27 @@ mod tests {
         // than as host PCIe traffic (NVLink peak is several times higher).
         let sys = SystemProfile::system1();
         let b = breakdown(1.0, 1.0, 1.0, 0.1);
-        let as_host = epoch_power(&sys, &b, 0.0, 8 << 30, 0);
-        let as_peer = epoch_power(&sys, &b, 0.0, 0, 8 << 30);
+        let as_host = epoch_power(&sys, &b, 0.0, 8 << 30, 0, 0);
+        let as_peer = epoch_power(&sys, &b, 0.0, 0, 8 << 30, 0);
         assert!(as_peer.io_util < as_host.io_util);
         assert!(as_peer.watts <= as_host.watts);
+    }
+
+    #[test]
+    fn storage_bytes_drive_ssd_power_not_io_util() {
+        // Block reads heat the SSD term, not the PCIe/NVLink I/O term —
+        // and a storage-quiet epoch pays no SSD active power at all.
+        let sys = SystemProfile::system1();
+        let b = breakdown(1.0, 1.0, 1.0, 0.1);
+        let quiet = epoch_power(&sys, &b, 0.0, 0, 0, 0);
+        let busy = epoch_power(&sys, &b, 0.0, 0, 0, 4 << 30);
+        assert_eq!(quiet.storage_util, 0.0);
+        assert!(busy.storage_util > 0.0);
+        assert_eq!(busy.io_util, quiet.io_util);
+        assert!(busy.watts > quiet.watts);
+        assert!(
+            busy.watts - quiet.watts <= sys.power.ssd_max_w + 1e-9,
+            "SSD term bounded by its max draw"
+        );
     }
 }

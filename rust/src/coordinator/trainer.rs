@@ -15,9 +15,10 @@ use crate::config::{AccessMode, Backend, RunConfig};
 use crate::coordinator::costmodel::ComputeModel;
 use crate::coordinator::power::{epoch_power, PowerReport};
 use crate::error::{Error, Result};
+use crate::featurestore::nvme::NvmeStoreConfig;
 use crate::featurestore::sharded::ShardConfig;
 use crate::featurestore::tiered::TierConfig;
-use crate::featurestore::{FeatureStore, ShardStats, TierStats};
+use crate::featurestore::{FeatureStore, NvmeStats, ShardStats, TierStats};
 use crate::runtime::native::{self, NativeTrainState};
 use crate::runtime::state::{StepBatch, TrainState};
 use crate::runtime::{ArtifactKind, LoadedArtifact, Manifest, Runtime};
@@ -65,6 +66,10 @@ pub struct EpochReport {
     /// local/peer/host row+byte+time splits and the load-imbalance factor
     /// (counters are per-epoch deltas, gauges end-of-epoch).
     pub shard: Option<ShardStats>,
+    /// Three-tier storage statistics for this epoch (`Nvme` mode only):
+    /// GPU-hit / host / storage row splits, block-read counts, and I/O
+    /// amplification (counters are per-epoch deltas, gauges end-of-epoch).
+    pub nvme: Option<NvmeStats>,
 }
 
 impl EpochReport {
@@ -84,7 +89,8 @@ impl EpochReport {
 /// its hot-set placement (degree ranking) and capacity from the graph and
 /// the config's `hot_frac`/`gpu_reserve_frac`/`tier_promote` knobs;
 /// `Sharded` additionally partitions the table per
-/// `num_gpus`/`shard_policy`.
+/// `num_gpus`/`shard_policy`; `Nvme` bounds the host tier by `host_frac`
+/// and spills the degree-ranking tail to the simulated NVMe cold store.
 pub(crate) fn build_store(
     cfg: &RunConfig,
     graph: &Csr,
@@ -107,6 +113,15 @@ pub(crate) fn build_store(
             &cfg.system,
             cfg.seed ^ 0xFEA7,
             ShardConfig::from_run(cfg, graph),
+        )
+    } else if cfg.mode == AccessMode::Nvme {
+        FeatureStore::build_nvme(
+            graph.num_nodes(),
+            preset.feat_dim as usize,
+            preset.classes,
+            &cfg.system,
+            cfg.seed ^ 0xFEA7,
+            NvmeStoreConfig::from_run(cfg, graph),
         )
     } else {
         FeatureStore::build(
@@ -277,9 +292,12 @@ impl Trainer {
         let mut x0 = vec![0f32; 0];
         let tier_epoch_start = self.store.tier_stats();
         let shard_epoch_start = self.store.shard_stats();
-        // Per-link byte accumulators for the power model: host (PCIe/DMA)
-        // and NVLink peer traffic are normalized by different peaks.
-        let (mut host_link_bytes, mut peer_link_bytes) = (0u64, 0u64);
+        let nvme_epoch_start = self.store.nvme_stats();
+        // Per-link byte accumulators for the power model: host (PCIe/DMA),
+        // NVLink peer, and NVMe storage traffic are normalized by
+        // different peaks (and the storage bytes drive the SSD term).
+        let (mut host_link_bytes, mut peer_link_bytes, mut storage_link_bytes) =
+            (0u64, 0u64, 0u64);
 
         for seeds in seeds_all.into_iter().take(max_steps) {
             // --- sample (measured) ---
@@ -299,6 +317,7 @@ impl Trainer {
             report.bytes_on_link += cost.bytes_on_link;
             host_link_bytes += cost.split.host_bytes_on_link;
             peer_link_bytes += cost.split.peer_bytes_on_link;
+            storage_link_bytes += cost.split.storage_bytes_on_link;
             report.requests += cost.requests;
 
             // --- train (measured through PJRT; simulated via FLOP model) ---
@@ -367,12 +386,19 @@ impl Trainer {
             report.cpu_gather_s,
             host_link_bytes / n_links,
             peer_link_bytes / n_links,
+            // One SSD regardless of GPU count (only `Nvme` mode produces
+            // storage traffic, and it is single-GPU).
+            storage_link_bytes,
         );
         report.tier = self.store.tier_stats().map(|now| match &tier_epoch_start {
             Some(start) => now.since(start),
             None => now,
         });
         report.shard = self.store.shard_stats().map(|now| match &shard_epoch_start {
+            Some(start) => now.since(start),
+            None => now,
+        });
+        report.nvme = self.store.nvme_stats().map(|now| match &nvme_epoch_start {
             Some(start) => now.since(start),
             None => now,
         });
@@ -457,6 +483,33 @@ mod tests {
     // epoch splits are covered one layer up (`tests/e2e_train.rs`) and
     // one layer down (`featurestore::sharded`/`store` unit tests,
     // `tests/sharded_properties.rs`) — no trainer-level duplicate.
+
+    #[test]
+    fn nvme_epoch_reports_tier_splits_and_pays_for_spilling() {
+        let mut resident = small_cfg(AccessMode::Nvme);
+        resident.host_frac = 1.0;
+        let r_res = Trainer::new(resident).unwrap().run_epoch().unwrap();
+        assert!(r_res.nvme.is_some(), "nvme mode reports storage stats");
+        assert_eq!(r_res.nvme.unwrap().storage_rows, 0, "host_frac 1 never spills");
+        assert_eq!(r_res.power.storage_util, 0.0);
+
+        let mut spilled = small_cfg(AccessMode::Nvme);
+        spilled.host_frac = 0.1;
+        let r_sp = Trainer::new(spilled).unwrap().run_epoch().unwrap();
+        let stats = r_sp.nvme.expect("nvme epoch reports storage stats");
+        assert!(stats.storage_rows > 0, "10% host tier must spill");
+        assert!(stats.ios > 0);
+        assert!(stats.amplification() >= 1.0);
+        assert!(r_sp.power.storage_util > 0.0);
+        assert!(
+            r_sp.breakdown_sim.transfer_s > r_res.breakdown_sim.transfer_s,
+            "spilling must cost transfer time: {} !> {}",
+            r_sp.breakdown_sim.transfer_s,
+            r_res.breakdown_sim.transfer_s
+        );
+        // Storage reads are GPU-initiated: still no CPU on the path.
+        assert_eq!(r_sp.cpu_gather_s, 0.0);
+    }
 
     #[test]
     fn native_backend_trains_without_artifacts() {

@@ -15,21 +15,42 @@
 //! |                   |                | the table; peer rows over NVLink,    |
 //! |                   |                | cold rows via the host zero-copy     |
 //! |                   |                | path (see [`sharded`])               |
+//! | `Nvme`            | unified + nvme | GPU hot tier over a `host_frac`-     |
+//! |                   |                | bounded host tier; spilled rows via  |
+//! |                   |                | GPU-initiated block reads (see       |
+//! |                   |                | [`nvme`])                            |
 //!
 //! Feature values are synthesized deterministically per node such that the
 //! classification task is *learnable* (the first `classes` dimensions carry
 //! a noisy one-hot of the label) — the end-to-end example's loss curve is
 //! real learning, not noise fitting.  Whatever the access mode, the table
-//! is a single source of truth: tier and shard structures are placement
-//! metadata only, so numerics are bitwise identical across modes
+//! is a single source of truth: tier, shard, and storage structures are
+//! placement metadata only, so numerics are bitwise identical across modes
 //! (DESIGN.md §5).
+//!
+//! ```
+//! use ptdirect::config::{AccessMode, SystemProfile};
+//! use ptdirect::featurestore::FeatureStore;
+//!
+//! // 500 rows × 24 f32, gathered through the zero-copy unified design.
+//! let sys = SystemProfile::system1();
+//! let store = FeatureStore::build(500, 24, 8, AccessMode::UnifiedAligned, &sys, 42).unwrap();
+//! let (values, cost) = store.gather(&[5, 499, 5]).unwrap();
+//! assert_eq!(values.len(), 3 * 24);
+//! assert_eq!(cost.useful_bytes, 3 * 24 * 4);
+//! // Same indices, any mode → bitwise identical values (only cost moves).
+//! let gpu = FeatureStore::build(500, 24, 8, AccessMode::GpuResident, &sys, 42).unwrap();
+//! assert_eq!(gpu.gather(&[5, 499, 5]).unwrap().0, values);
+//! ```
 
+pub mod nvme;
 pub mod sharded;
 pub mod staging;
 pub mod store;
 pub mod synth;
 pub mod tiered;
 
+pub use nvme::{NvmeStats, NvmeStore, NvmeStoreConfig};
 pub use sharded::{assign_owners, GpuShardStats, ShardConfig, ShardStats, ShardedStore};
 pub use staging::StagingPool;
 pub use store::FeatureStore;

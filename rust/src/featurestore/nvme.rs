@@ -1,0 +1,476 @@
+//! Three-tier storage feature store: GPU hot tier over a bounded host
+//! unified tier over an NVMe cold store (DESIGN.md §8).
+//!
+//! The paper's unified tensors assume the feature table fits in host
+//! memory; GIDS (arXiv:2306.16384) drops that assumption by letting GPU
+//! threads read NVMe blocks directly, and Data Tiering (arXiv:2111.05894)
+//! shows the degree-skew argument generalizes across tiers: the hotter a
+//! row, the higher up the hierarchy it belongs.  [`NvmeStore`] composes
+//! the three tiers:
+//!
+//! | tier    | holds                                   | cost model         |
+//! |---------|------------------------------------------|--------------------|
+//! | GPU hot | hottest rows ([`TieredCache`], `hot_frac`) | kernel launch only |
+//! | host    | degree-ranking prefix, `host_frac` of rows | PCIe zero-copy     |
+//! | NVMe    | everything that spilled                  | [`NvmeLink`] blocks |
+//!
+//! Placement is static and degree-ranked: the hottest `host_frac · rows`
+//! rows (by the supplied ranking) stay host-resident; the rest spill to
+//! the cold store, which packs spilled rows in **id order** so
+//! neighboring rows share 4 KiB blocks (read coalescing,
+//! [`count_block_ios`]).  The GPU hot tier floats above both with the
+//! unchanged [`TieredCache`] machinery — LFU promotion can pull a
+//! storage-resident row all the way into GPU memory, exactly the GIDS
+//! GPU-cache-over-storage design.
+//!
+//! Like every other mode, this is placement metadata only: the single
+//! unified table remains the source of truth, numerics are bitwise
+//! identical, and only the [`TransferCost`] attribution changes.  The
+//! storage read and the host zero-copy read *serialize* on the simulated
+//! host link (the SSD hangs off the same PCIe root complex the zero-copy
+//! reads traverse), so a step costs one kernel launch plus the sum of the
+//! two launch-free link occupancies — which makes `host_frac = 1`
+//! degenerate bit-exactly to the tiered cost model (no storage term at
+//! all), the endpoint contract `benches/storage_sweep.rs` pins.
+//!
+//! ```
+//! use ptdirect::config::SystemProfile;
+//! use ptdirect::featurestore::{NvmeStore, NvmeStoreConfig, TierConfig};
+//!
+//! // 100-row table, 516 B rows, no GPU cache, 40% host-resident.
+//! let sys = SystemProfile::system1();
+//! let cfg = NvmeStoreConfig {
+//!     host_frac: 0.4,
+//!     tier: TierConfig { hot_frac: 0.0, ranking: None, ..TierConfig::default() },
+//! };
+//! let mut store = NvmeStore::new(100, 516, &sys, &cfg);
+//! assert_eq!(store.host_resident_rows(), 40);
+//! let cost = store.gather_cost(&[0, 50, 99], 129, &sys);
+//! assert_eq!(cost.split.host_bytes, 516);        // row 0 is host-resident
+//! assert_eq!(cost.split.storage_bytes, 2 * 516); // rows 50, 99 spilled
+//! assert!(store.stats().amplification() >= 1.0);
+//! ```
+//!
+//! [`TransferCost`]: crate::interconnect::TransferCost
+//! [`NvmeLink`]: crate::interconnect::NvmeLink
+//! [`count_block_ios`]: crate::interconnect::count_block_ios
+
+use crate::config::{RunConfig, SystemProfile};
+use crate::device::warp::{count_requests, WarpModel};
+use crate::featurestore::tiered::{TierConfig, TierStats, TieredCache};
+use crate::graph::Csr;
+use crate::interconnect::{count_block_ios, NvmeLink, PathSplit, PcieLink, TransferCost};
+
+/// Placement + capacity knobs for the three-tier store.
+#[derive(Clone, Debug)]
+pub struct NvmeStoreConfig {
+    /// Fraction of the table's rows host memory holds, in [0, 1].  The
+    /// degree-ranking prefix stays host-resident; the rest spill to NVMe.
+    /// `1.0` keeps everything in host memory (bit-exact `Tiered`
+    /// degeneracy); `0.0` spills the whole table.
+    pub host_frac: f64,
+    /// GPU hot-tier knobs (the unchanged tiered machinery on top).
+    pub tier: TierConfig,
+}
+
+impl Default for NvmeStoreConfig {
+    fn default() -> Self {
+        NvmeStoreConfig {
+            host_frac: 0.5,
+            tier: TierConfig::default(),
+        }
+    }
+}
+
+impl NvmeStoreConfig {
+    /// Derive the storage configuration a training run wants: the run's
+    /// `host_frac` knob plus the tier knobs (degree ranking from the
+    /// graph, `hot_frac`, reserve, promotion).
+    pub fn from_run(cfg: &RunConfig, graph: &Csr) -> NvmeStoreConfig {
+        NvmeStoreConfig {
+            host_frac: cfg.host_frac,
+            tier: TierConfig::from_run(cfg, graph),
+        }
+    }
+}
+
+/// Counters and gauges of the three-tier store (counters cumulative;
+/// per-epoch deltas via [`NvmeStats::since`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NvmeStats {
+    /// GPU hot-tier counters/gauges (`tier.hits` are GPU-served rows;
+    /// `tier.misses` split into `host_rows + storage_rows` below).
+    pub tier: TierStats,
+    /// Cold rows served from host memory over the PCIe zero-copy path.
+    pub host_rows: u64,
+    /// Cold rows read from the NVMe store.
+    pub storage_rows: u64,
+    /// NVMe read commands (block reads) issued.
+    pub ios: u64,
+    /// Useful bytes of storage-served rows (requested basis).
+    pub storage_bytes: u64,
+    /// Block-granular bytes the SSD read (`ios × block_bytes`).
+    pub storage_bytes_on_link: u64,
+    /// Distinct-row payload behind the storage reads (the amplification
+    /// denominator; see [`NvmeTraffic`](crate::interconnect::NvmeTraffic)).
+    pub storage_distinct_bytes: u64,
+    /// Rows resident in host memory / spilled to storage (gauges).
+    pub host_resident_rows: usize,
+    pub spilled_rows: usize,
+}
+
+impl NvmeStats {
+    /// Rows served across all three tiers.
+    pub fn rows_served(&self) -> u64 {
+        self.tier.hits + self.host_rows + self.storage_rows
+    }
+
+    /// Fraction of requested rows served from the GPU hot tier.
+    pub fn hit_rate(&self) -> f64 {
+        self.tier.hit_rate()
+    }
+
+    /// Cumulative block-read I/O amplification (≥ 1 whenever storage was
+    /// touched; 1.0 on a storage-quiet epoch).
+    pub fn amplification(&self) -> f64 {
+        if self.storage_distinct_bytes == 0 {
+            1.0
+        } else {
+            self.storage_bytes_on_link as f64 / self.storage_distinct_bytes as f64
+        }
+    }
+
+    /// Counter deltas relative to an `earlier` snapshot; gauges keep their
+    /// current (end-state) values.
+    pub fn since(&self, earlier: &NvmeStats) -> NvmeStats {
+        NvmeStats {
+            tier: self.tier.since(&earlier.tier),
+            host_rows: self.host_rows - earlier.host_rows,
+            storage_rows: self.storage_rows - earlier.storage_rows,
+            ios: self.ios - earlier.ios,
+            storage_bytes: self.storage_bytes - earlier.storage_bytes,
+            storage_bytes_on_link: self.storage_bytes_on_link - earlier.storage_bytes_on_link,
+            storage_distinct_bytes: self.storage_distinct_bytes
+                - earlier.storage_distinct_bytes,
+            ..*self
+        }
+    }
+}
+
+/// Placement metadata + tier machinery for one feature table with an NVMe
+/// cold store underneath.
+#[derive(Debug)]
+pub struct NvmeStore {
+    /// GPU hot tier over the whole table (global row ids, like the
+    /// sharded store's per-GPU tiers).
+    cache: TieredCache,
+    /// Per-row cold-store slot: `u32::MAX` marks a host-resident row;
+    /// spilled rows get consecutive slots in id order, so rows adjacent
+    /// in the table stay adjacent on disk and their block reads coalesce.
+    slot: Vec<u32>,
+    row_bytes: u64,
+    host_resident_rows: usize,
+    spilled_rows: usize,
+    /// Cumulative counters (gauges derive from `cache` + placement).
+    host_rows: u64,
+    storage_rows: u64,
+    ios: u64,
+    storage_bytes: u64,
+    storage_bytes_on_link: u64,
+    storage_distinct_bytes: u64,
+}
+
+const HOST_RESIDENT: u32 = u32::MAX;
+
+impl NvmeStore {
+    /// Build placement + tiers for a `rows`-row table of `row_bytes`-byte
+    /// rows: the first `host_frac · rows` entries of the ranking stay
+    /// host-resident (id order when no ranking is supplied), the rest
+    /// spill to packed cold-store slots; the GPU hot tier sits on top with
+    /// the unchanged [`TieredCache`] capacity rules.
+    pub fn new(rows: usize, row_bytes: u64, sys: &SystemProfile, cfg: &NvmeStoreConfig) -> NvmeStore {
+        let cache = TieredCache::new(rows, row_bytes, sys, &cfg.tier);
+        let host_cap = (cfg.host_frac.clamp(0.0, 1.0) * rows as f64).floor() as usize;
+        let mut host = vec![false; rows];
+        let mut marked = 0usize;
+        if let Some(ranking) = &cfg.tier.ranking {
+            for &v in ranking.iter() {
+                if marked >= host_cap {
+                    break;
+                }
+                let vi = v as usize;
+                if vi < rows && !host[vi] {
+                    host[vi] = true;
+                    marked += 1;
+                }
+            }
+        }
+        // Coverage fallback: a missing or short ranking fills the host
+        // tier in id order, so `host_frac` always bounds the split.
+        for h in host.iter_mut() {
+            if marked >= host_cap {
+                break;
+            }
+            if !*h {
+                *h = true;
+                marked += 1;
+            }
+        }
+        let mut slot = vec![HOST_RESIDENT; rows];
+        let mut next = 0u32;
+        for (r, s) in slot.iter_mut().enumerate() {
+            if !host[r] {
+                *s = next;
+                next += 1;
+            }
+        }
+        NvmeStore {
+            cache,
+            slot,
+            row_bytes,
+            host_resident_rows: marked,
+            spilled_rows: rows - marked,
+            host_rows: 0,
+            storage_rows: 0,
+            ios: 0,
+            storage_bytes: 0,
+            storage_bytes_on_link: 0,
+            storage_distinct_bytes: 0,
+        }
+    }
+
+    /// Whether a row lives in host memory (vs the NVMe store).  The GPU
+    /// hot tier is orthogonal — a spilled row can still be cached hot.
+    pub fn is_host_resident(&self, row: u32) -> bool {
+        self.slot[row as usize] == HOST_RESIDENT
+    }
+
+    pub fn host_resident_rows(&self) -> usize {
+        self.host_resident_rows
+    }
+
+    pub fn spilled_rows(&self) -> usize {
+        self.spilled_rows
+    }
+
+    /// Snapshot of counters + gauges.
+    pub fn stats(&self) -> NvmeStats {
+        NvmeStats {
+            tier: self.cache.stats(),
+            host_rows: self.host_rows,
+            storage_rows: self.storage_rows,
+            ios: self.ios,
+            storage_bytes: self.storage_bytes,
+            storage_bytes_on_link: self.storage_bytes_on_link,
+            storage_distinct_bytes: self.storage_distinct_bytes,
+            host_resident_rows: self.host_resident_rows,
+            spilled_rows: self.spilled_rows,
+        }
+    }
+
+    /// Account one gather step and return its simulated cost.
+    ///
+    /// The hot tier splits off its hits first (unchanged [`TieredCache`]
+    /// accounting, promotions included); the cold remainder partitions by
+    /// residency into a host zero-copy stream (order preserved — it is
+    /// the warp request sequence) and a storage block-read set.  One
+    /// gather kernel serves all tiers, and the two launch-free link
+    /// occupancies serialize on the shared PCIe root:
+    ///
+    /// ```text
+    /// time = kernel_launch + host_link_time + storage_link_time
+    /// ```
+    pub fn gather_cost(
+        &mut self,
+        idx: &[u32],
+        feat_elems: u64,
+        sys: &SystemProfile,
+    ) -> TransferCost {
+        let useful = idx.len() as u64 * self.row_bytes;
+        let cold = self.cache.record(idx);
+        if cold.is_empty() {
+            // Entire batch in the GPU hot tier: device-memory gather,
+            // kernel launch only — identical to the tiered fast path.
+            return TransferCost {
+                time_s: sys.kernel_launch_s,
+                bytes_on_link: 0,
+                useful_bytes: useful,
+                requests: 0,
+                cpu_time_s: 0.0,
+                split: PathSplit {
+                    local_bytes: useful,
+                    ..PathSplit::default()
+                },
+            };
+        }
+        let mut host_stream = Vec::new();
+        let mut storage_slots = Vec::new();
+        for &r in &cold {
+            let s = self.slot[r as usize];
+            if s == HOST_RESIDENT {
+                host_stream.push(r);
+            } else {
+                storage_slots.push(s);
+            }
+        }
+
+        let mut time_s = sys.kernel_launch_s;
+        let mut bytes_on_link = 0u64;
+        let mut requests = 0u64;
+        let mut split = PathSplit::default();
+
+        if !host_stream.is_empty() {
+            // Same arithmetic as the tiered cold path (aligned zero-copy),
+            // so `host_frac = 1` reproduces `Tiered` bit-exactly.
+            let model = WarpModel::default();
+            let shifted = model.shift_applies(feat_elems);
+            let c = PcieLink::new(sys)
+                .direct_gather(&count_requests(&host_stream, feat_elems, model, shifted));
+            time_s += c.split.host_time_s;
+            bytes_on_link += c.bytes_on_link;
+            requests += c.requests;
+            split.host_bytes = c.split.host_bytes;
+            split.host_bytes_on_link = c.split.host_bytes_on_link;
+            split.host_time_s = c.split.host_time_s;
+        }
+        if !storage_slots.is_empty() {
+            let traffic = count_block_ios(&storage_slots, self.row_bytes, sys.nvme.block_bytes);
+            let c = NvmeLink::new(sys).read(&traffic);
+            time_s += c.split.storage_time_s;
+            bytes_on_link += c.bytes_on_link;
+            requests += c.requests;
+            split.storage_bytes = c.split.storage_bytes;
+            split.storage_bytes_on_link = c.split.storage_bytes_on_link;
+            split.storage_time_s = c.split.storage_time_s;
+            self.ios += traffic.ios;
+            self.storage_bytes += traffic.useful_bytes;
+            self.storage_bytes_on_link += traffic.bytes_on_link;
+            self.storage_distinct_bytes += traffic.distinct_bytes;
+        }
+        self.host_rows += host_stream.len() as u64;
+        self.storage_rows += storage_slots.len() as u64;
+        split.local_bytes = useful - split.host_bytes - split.storage_bytes;
+
+        TransferCost {
+            time_s,
+            bytes_on_link,
+            useful_bytes: useful,
+            requests,
+            cpu_time_s: 0.0,
+            split,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> SystemProfile {
+        SystemProfile::system1()
+    }
+
+    fn cfg(host_frac: f64, hot_frac: f64, ranking: Option<Vec<u32>>) -> NvmeStoreConfig {
+        NvmeStoreConfig {
+            host_frac,
+            tier: TierConfig {
+                hot_frac,
+                reserve_bytes: 0,
+                promote: false,
+                ranking,
+            },
+        }
+    }
+
+    #[test]
+    fn ranking_prefix_stays_host_resident() {
+        let ranking = vec![7u32, 3, 9, 1];
+        let st = NvmeStore::new(10, 64, &sys(), &cfg(0.2, 0.0, Some(ranking)));
+        assert_eq!(st.host_resident_rows(), 2);
+        assert_eq!(st.spilled_rows(), 8);
+        assert!(st.is_host_resident(7) && st.is_host_resident(3));
+        assert!(!st.is_host_resident(9) && !st.is_host_resident(1));
+    }
+
+    #[test]
+    fn missing_ranking_falls_back_to_id_order() {
+        let st = NvmeStore::new(10, 64, &sys(), &cfg(0.3, 0.0, None));
+        assert_eq!(st.host_resident_rows(), 3);
+        assert!(st.is_host_resident(0) && st.is_host_resident(2));
+        assert!(!st.is_host_resident(3));
+    }
+
+    #[test]
+    fn spilled_slots_are_packed_in_id_order() {
+        // host_frac 0: every row spills; slots must equal row ids.
+        let st = NvmeStore::new(8, 64, &sys(), &cfg(0.0, 0.0, None));
+        for r in 0..8u32 {
+            assert_eq!(st.slot[r as usize], r);
+        }
+        // With rows 0..2 host-resident, rows 3.. pack from slot 0.
+        let st = NvmeStore::new(8, 64, &sys(), &cfg(0.375, 0.0, None));
+        assert_eq!(st.slot[3], 0);
+        assert_eq!(st.slot[7], 4);
+    }
+
+    #[test]
+    fn host_frac_endpoints_cover_everything_or_nothing() {
+        let all_host = NvmeStore::new(100, 64, &sys(), &cfg(1.0, 0.0, None));
+        assert_eq!(all_host.spilled_rows(), 0);
+        let none_host = NvmeStore::new(100, 64, &sys(), &cfg(0.0, 0.0, None));
+        assert_eq!(none_host.host_resident_rows(), 0);
+        assert_eq!(none_host.spilled_rows(), 100);
+    }
+
+    #[test]
+    fn rows_conserve_across_the_three_tiers() {
+        let ranking: Vec<u32> = (0..200).collect();
+        let mut st = NvmeStore::new(200, 64, &sys(), &cfg(0.5, 0.2, Some(ranking)));
+        let idx: Vec<u32> = (0..300u32).map(|i| i * 7 % 200).collect();
+        let c = st.gather_cost(&idx, 16, &sys());
+        let s = st.stats();
+        assert_eq!(s.rows_served(), 300);
+        assert!(s.tier.hits > 0 && s.host_rows > 0 && s.storage_rows > 0);
+        assert_eq!(
+            c.split.local_bytes + c.split.host_bytes + c.split.storage_bytes,
+            c.useful_bytes
+        );
+        assert!(s.amplification() >= 1.0);
+    }
+
+    #[test]
+    fn fully_hot_batch_costs_kernel_launch_only() {
+        let ranking: Vec<u32> = (0..50).collect();
+        let mut st = NvmeStore::new(50, 64, &sys(), &cfg(0.0, 1.0, Some(ranking)));
+        let idx: Vec<u32> = (0..50).collect();
+        let c = st.gather_cost(&idx, 16, &sys());
+        assert_eq!(c.time_s, sys().kernel_launch_s);
+        assert_eq!(c.bytes_on_link, 0);
+        assert_eq!(st.stats().storage_rows, 0);
+    }
+
+    #[test]
+    fn storage_time_serializes_after_host_time() {
+        // Half the cold rows on storage: step time must carry both link
+        // occupancies on top of the one launch.
+        let ranking: Vec<u32> = (0..100).collect();
+        let mut st = NvmeStore::new(100, 516, &sys(), &cfg(0.5, 0.0, Some(ranking)));
+        let idx: Vec<u32> = (0..100).collect();
+        let c = st.gather_cost(&idx, 129, &sys());
+        assert!(c.split.host_time_s > 0.0);
+        assert!(c.split.storage_time_s > 0.0);
+        let want = sys().kernel_launch_s + c.split.host_time_s + c.split.storage_time_s;
+        assert!((c.time_s - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn stats_since_gives_epoch_deltas() {
+        let mut st = NvmeStore::new(100, 64, &sys(), &cfg(0.5, 0.0, None));
+        st.gather_cost(&(0..100u32).collect::<Vec<_>>(), 16, &sys());
+        let snap = st.stats();
+        st.gather_cost(&(0..50u32).collect::<Vec<_>>(), 16, &sys());
+        let d = st.stats().since(&snap);
+        assert_eq!(d.host_rows + d.storage_rows + d.tier.hits, 50);
+        assert!(d.ios > 0);
+    }
+}

@@ -1,10 +1,11 @@
-//! The unified feature store: one table, seven access designs.
+//! The unified feature store: one table, eight access designs.
 
 use std::sync::Mutex;
 
 use crate::config::{AccessMode, SystemProfile};
 use crate::device::warp::{count_requests, WarpModel};
 use crate::error::{Error, Result};
+use crate::featurestore::nvme::{NvmeStats, NvmeStore, NvmeStoreConfig};
 use crate::featurestore::sharded::{ShardConfig, ShardStats, ShardedStore};
 use crate::featurestore::staging::StagingPool;
 use crate::featurestore::synth::SyntheticFeatures;
@@ -24,6 +25,7 @@ pub struct FeatureStore {
     uvm: Option<Mutex<UvmSpace>>,
     tier: Option<Mutex<TieredCache>>,
     shard: Option<Mutex<ShardedStore>>,
+    nvme: Option<Mutex<NvmeStore>>,
     /// Cumulative measured CPU seconds spent in real gathers (diagnostic).
     measured_gather: Mutex<f64>,
 }
@@ -39,7 +41,10 @@ impl FeatureStore {
     /// (cold cache, LFU warming); use [`FeatureStore::build_tiered`] to
     /// supply a degree ranking and capacity knobs.  `Sharded` likewise
     /// starts with [`ShardConfig::default`] (one GPU); use
-    /// [`FeatureStore::build_sharded`] for real partitioning.
+    /// [`FeatureStore::build_sharded`] for real partitioning.  `Nvme`
+    /// starts with [`NvmeStoreConfig::default`] (half the table
+    /// host-resident); use [`FeatureStore::build_nvme`] for real
+    /// placement knobs.
     pub fn build(
         rows: usize,
         dim: usize,
@@ -48,7 +53,7 @@ impl FeatureStore {
         sys: &SystemProfile,
         seed: u64,
     ) -> Result<FeatureStore> {
-        Self::build_inner(rows, dim, classes, mode, sys, seed, None, None)
+        Self::build_inner(rows, dim, classes, mode, sys, seed, None, None, None)
     }
 
     /// Build a `Tiered` store with explicit tier placement/capacity knobs.
@@ -68,6 +73,7 @@ impl FeatureStore {
             sys,
             seed,
             Some(tier_cfg),
+            None,
             None,
         )
     }
@@ -90,6 +96,30 @@ impl FeatureStore {
             seed,
             None,
             Some(shard_cfg),
+            None,
+        )
+    }
+
+    /// Build an `Nvme` three-tier store with explicit `host_frac` + tier
+    /// knobs (DESIGN.md §8).
+    pub fn build_nvme(
+        rows: usize,
+        dim: usize,
+        classes: u32,
+        sys: &SystemProfile,
+        seed: u64,
+        nvme_cfg: NvmeStoreConfig,
+    ) -> Result<FeatureStore> {
+        Self::build_inner(
+            rows,
+            dim,
+            classes,
+            AccessMode::Nvme,
+            sys,
+            seed,
+            None,
+            None,
+            Some(nvme_cfg),
         )
     }
 
@@ -103,6 +133,7 @@ impl FeatureStore {
         seed: u64,
         tier_cfg: Option<TierConfig>,
         shard_cfg: Option<ShardConfig>,
+        nvme_cfg: Option<NvmeStoreConfig>,
     ) -> Result<FeatureStore> {
         let bytes = rows as u64 * dim as u64 * 4;
         if mode == AccessMode::GpuResident && bytes > sys.gpu_mem_bytes {
@@ -138,6 +169,12 @@ impl FeatureStore {
         } else {
             None
         };
+        let nvme = if mode == AccessMode::Nvme {
+            let cfg = nvme_cfg.unwrap_or_default();
+            Some(Mutex::new(NvmeStore::new(rows, dim as u64 * 4, sys, &cfg)))
+        } else {
+            None
+        };
         Ok(FeatureStore {
             table,
             synth,
@@ -148,6 +185,7 @@ impl FeatureStore {
             uvm,
             tier,
             shard,
+            nvme,
             measured_gather: Mutex::new(0.0),
         })
     }
@@ -197,6 +235,11 @@ impl FeatureStore {
     /// Per-GPU shard counters/gauges (`Sharded` mode only).
     pub fn shard_stats(&self) -> Option<ShardStats> {
         self.shard.as_ref().map(|s| s.lock().unwrap().stats())
+    }
+
+    /// Three-tier storage counters/gauges (`Nvme` mode only).
+    pub fn nvme_stats(&self) -> Option<NvmeStats> {
+        self.nvme.as_ref().map(|s| s.lock().unwrap().stats())
     }
 
     /// Simulated cost of a GPU zero-copy gather of `idx` over PCIe —
@@ -325,6 +368,17 @@ impl FeatureStore {
                     .unwrap()
                     .gather_cost(idx, f as u64, &self.sys)
             }
+            AccessMode::Nvme => {
+                let timer = Timer::start();
+                crate::tensor::indexing::gather_rows_into(src, f, idx, out);
+                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
+                self.nvme
+                    .as_ref()
+                    .expect("nvme store has placement")
+                    .lock()
+                    .unwrap()
+                    .gather_cost(idx, f as u64, &self.sys)
+            }
         };
         Ok(cost)
     }
@@ -361,6 +415,7 @@ mod tests {
             AccessMode::GpuResident,
             AccessMode::Tiered,
             AccessMode::Sharded,
+            AccessMode::Nvme,
         ] {
             let (vals, _) = store(mode).gather(&idx).unwrap();
             assert_eq!(vals, reference, "{mode:?}");
@@ -549,5 +604,76 @@ mod tests {
         assert!(store(AccessMode::UnifiedAligned).shard_stats().is_none());
         assert!(tiered_store(0.5).shard_stats().is_none());
         assert!(sharded_store(2, 0.5).shard_stats().is_some());
+    }
+
+    fn nvme_store(host_frac: f64, hot_frac: f64) -> FeatureStore {
+        FeatureStore::build_nvme(
+            500,
+            24,
+            8,
+            &sys(),
+            42,
+            crate::featurestore::nvme::NvmeStoreConfig {
+                host_frac,
+                tier: crate::featurestore::tiered::TierConfig {
+                    hot_frac,
+                    reserve_bytes: 0,
+                    promote: false,
+                    ranking: Some((0..500).collect()),
+                },
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn nvme_at_host_frac_one_matches_tiered_bit_exactly() {
+        let idx: Vec<u32> = (0..256u32).map(|i| i * 37 % 500).collect();
+        for hot_frac in [0.0, 0.25, 1.0] {
+            let (_, ti) = tiered_store(hot_frac).gather(&idx).unwrap();
+            let (_, nv) = nvme_store(1.0, hot_frac).gather(&idx).unwrap();
+            assert_eq!(nv.time_s, ti.time_s, "hot_frac {hot_frac}");
+            assert_eq!(nv.bytes_on_link, ti.bytes_on_link);
+            assert_eq!(nv.requests, ti.requests);
+            assert_eq!(nv.useful_bytes, ti.useful_bytes);
+            assert_eq!(nv.split.storage_bytes, 0, "nothing spills at host_frac 1");
+        }
+    }
+
+    #[test]
+    fn nvme_spill_costs_more_than_host_resident() {
+        let idx: Vec<u32> = (0..256u32).map(|i| i * 37 % 500).collect();
+        let (_, resident) = nvme_store(1.0, 0.1).gather(&idx).unwrap();
+        let (_, spilled) = nvme_store(0.2, 0.1).gather(&idx).unwrap();
+        assert!(
+            spilled.time_s > resident.time_s,
+            "spilled {} !> resident {}",
+            spilled.time_s,
+            resident.time_s
+        );
+        assert!(spilled.split.storage_bytes > 0);
+    }
+
+    #[test]
+    fn nvme_accounts_every_row_across_tiers() {
+        let st = nvme_store(0.5, 0.2);
+        let idx: Vec<u32> = (0..300u32).map(|i| i * 7 % 500).collect();
+        let (_, cost) = st.gather(&idx).unwrap();
+        let stats = st.nvme_stats().unwrap();
+        assert_eq!(stats.rows_served(), 300);
+        assert_eq!(
+            cost.split.local_bytes + cost.split.host_bytes + cost.split.storage_bytes,
+            cost.useful_bytes
+        );
+        assert!(stats.amplification() >= 1.0);
+        assert_eq!(stats.host_resident_rows, 250);
+        assert_eq!(stats.spilled_rows, 250);
+    }
+
+    #[test]
+    fn non_nvme_modes_report_no_nvme_stats() {
+        assert!(store(AccessMode::UnifiedAligned).nvme_stats().is_none());
+        assert!(tiered_store(0.5).nvme_stats().is_none());
+        assert!(nvme_store(0.5, 0.2).nvme_stats().is_some());
     }
 }

@@ -28,6 +28,19 @@
 //! attribution changes (hot rows are kernel-launch-only like `GpuResident`,
 //! cold rows pay the `UnifiedAligned` zero-copy PCIe path).
 //!
+//! ```
+//! use ptdirect::config::SystemProfile;
+//! use ptdirect::featurestore::{TierConfig, TieredCache};
+//!
+//! // 100-row table, 64 B rows, 20% hot, rows 0 and 1 pre-seeded hot.
+//! let sys = SystemProfile::system1();
+//! let cfg = TierConfig { hot_frac: 0.2, ranking: Some(vec![0, 1]), ..TierConfig::default() };
+//! let mut cache = TieredCache::new(100, 64, &sys, &cfg);
+//! let cold = cache.record(&[0, 5, 1]);
+//! assert_eq!(cold, vec![5]); // rows 0 and 1 hit; 5 pays the cold path
+//! assert_eq!(cache.stats().hits, 2);
+//! ```
+//!
 //! [`TransferCost`]: crate::interconnect::TransferCost
 
 use std::cmp::Reverse;

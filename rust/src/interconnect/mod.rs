@@ -11,27 +11,48 @@
 //!   cost and page-granularity I/O amplification.
 //! * [`nvlink`] — GPU↔GPU peer zero-copy reads for the sharded multi-GPU
 //!   store (DESIGN.md §6), symmetric in shape with [`pcie`].
+//! * [`nvme`] — GPU-initiated NVMe block reads for the beyond-host-memory
+//!   cold store (DESIGN.md §8), GIDS-style: block-granular, costed by
+//!   bandwidth vs command rate under a queue-depth budget.
+//!
+//! ```
+//! use ptdirect::config::SystemProfile;
+//! use ptdirect::device::warp::{count_requests, WarpModel};
+//! use ptdirect::interconnect::PcieLink;
+//!
+//! // Price a zero-copy gather of three feature rows (64 f32 each).
+//! let sys = SystemProfile::system1();
+//! let traffic = count_requests(&[7, 8, 4000], 64, WarpModel::default(), true);
+//! let cost = PcieLink::new(&sys).direct_gather(&traffic);
+//! assert_eq!(cost.useful_bytes, 3 * 64 * 4);
+//! assert!(cost.time_s >= sys.kernel_launch_s);
+//! assert_eq!(cost.cpu_time_s, 0.0); // zero-copy: no CPU on the path
+//! ```
 
 pub mod dma;
 pub mod nvlink;
+pub mod nvme;
 pub mod pcie;
 pub mod uvm;
 
 pub use dma::DmaEngine;
 pub use nvlink::NvlinkLink;
+pub use nvme::{count_block_ios, NvmeLink, NvmeTraffic};
 pub use pcie::PcieLink;
 pub use uvm::UvmSpace;
 
 use crate::device::warp::GatherTraffic;
 
-/// Byte/time attribution of one transfer across the three access paths of
-/// the cost matrix (DESIGN.md §4): requester-local HBM, NVLink peer, and
-/// the host link (PCIe zero-copy, DMA, or UVM migration).
+/// Byte/time attribution of one transfer across the four access paths of
+/// the cost matrix (DESIGN.md §4/§8): requester-local HBM, NVLink peer,
+/// the host link (PCIe zero-copy, DMA, or UVM migration), and the NVMe
+/// storage link.
 ///
 /// Single-path modes fill exactly one class (`CpuGather`/`Uvm`/the unified
 /// modes are all-host, `GpuResident` is all-local); `Tiered` splits
-/// local/host; `Sharded` uses all three.  `*_bytes` count *useful* payload
-/// (the requester's perspective); `*_bytes_on_link` decompose
+/// local/host; `Sharded` uses local/peer/host; `Nvme` uses
+/// local/host/storage.  `*_bytes` count *useful* payload (the requester's
+/// perspective); `*_bytes_on_link` decompose
 /// [`TransferCost::bytes_on_link`] (amplification included) per link, which
 /// is what the power model's per-link I/O utilization consumes.
 #[derive(Clone, Copy, Debug, Default)]
@@ -42,10 +63,14 @@ pub struct PathSplit {
     pub peer_bytes: u64,
     /// Useful bytes fetched from host memory over the host link.
     pub host_bytes: u64,
-    /// Amplified bytes that crossed the NVLink / host link respectively
-    /// (their sum is [`TransferCost::bytes_on_link`]).
+    /// Useful bytes read from the NVMe cold store.
+    pub storage_bytes: u64,
+    /// Amplified bytes that crossed the NVLink / host / storage link
+    /// respectively (their sum is [`TransferCost::bytes_on_link`]).
     pub peer_bytes_on_link: u64,
     pub host_bytes_on_link: u64,
+    /// Block-granular bytes the SSD actually read (`ios × block_bytes`).
+    pub storage_bytes_on_link: u64,
     /// Simulated seconds of NVLink occupancy (summed across GPUs).  For
     /// the zero-copy links this excludes the gather-kernel launch, which
     /// is charged once per step in [`TransferCost::time_s`].
@@ -54,6 +79,9 @@ pub struct PathSplit {
     /// launch-free for zero-copy, gather+DMA serial time for `CpuGather`,
     /// fault+migration time for `Uvm`.
     pub host_time_s: f64,
+    /// Simulated seconds of NVMe-link occupancy (launch-free, like the
+    /// other link occupancies).
+    pub storage_time_s: f64,
 }
 
 /// Which link a [`ZeroCopyLink`] cost is attributed to in [`PathSplit`].

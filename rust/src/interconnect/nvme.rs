@@ -1,0 +1,302 @@
+//! NVMe storage-link model — the GPU↔SSD path of the three-tier store
+//! (DESIGN.md §8).
+//!
+//! GIDS ("Accelerating Sampling and Aggregation Operations in GNN
+//! Frameworks with GPU Initiated Direct Storage Accesses",
+//! arXiv:2306.16384) extends the PyTorch-Direct zero-copy paradigm past
+//! host memory: GPU threads submit NVMe read commands directly (BaM-style
+//! queue pairs in pinned memory), so feature rows colder than the host
+//! tier stream from storage with *zero CPU involvement* — the same
+//! headline property as the PCIe/NVLink zero-copy paths, one tier down.
+//!
+//! The link differs from the byte-granular interconnects in two ways the
+//! model must capture:
+//!
+//! * **Block granularity.**  Every command reads a whole
+//!   [`NvmeConfig::block_bytes`] block (4 KiB), so sub-block feature rows
+//!   amplify I/O — unless adjacent rows in the cold-store layout coalesce
+//!   into shared blocks, which [`count_block_ios`] counts exactly (the
+//!   storage analogue of the warp model's cacheline coalescing).
+//! * **Command-rate ceiling.**  Throughput is the lesser of the bandwidth
+//!   bound and a command-rate bound, where the achievable command rate is
+//!   `min(iops, queue_depth / read_latency_s)` — the device's ceiling,
+//!   further capped by how many commands the submission queues keep in
+//!   flight (Little's law; shallow queues starve the device).
+//!
+//! ```text
+//! time = max(bytes_on_link / peak_bw, ios / min(iops, qd / latency)) + launch
+//! ```
+//!
+//! The two-bound shape mirrors [`ZeroCopyLink`](crate::interconnect) on
+//! purpose: the storage tier composes under the host tier with the same
+//! race-the-bounds arithmetic, just with block reads instead of cacheline
+//! requests.
+//!
+//! ```
+//! use ptdirect::config::SystemProfile;
+//! use ptdirect::interconnect::{count_block_ios, NvmeLink};
+//!
+//! let sys = SystemProfile::system1();
+//! // Four adjacent 516 B rows share 4 KiB blocks; scattered rows don't.
+//! let adjacent = count_block_ios(&[0, 1, 2, 3], 516, 4096);
+//! let scattered = count_block_ios(&[0, 100, 200, 300], 516, 4096);
+//! assert!(adjacent.ios < scattered.ios);
+//! assert!(adjacent.amplification() >= 1.0);
+//!
+//! let cost = NvmeLink::new(&sys).read(&scattered);
+//! assert_eq!(cost.cpu_time_s, 0.0); // GPU-initiated: no CPU on the path
+//! assert_eq!(cost.bytes_on_link, scattered.bytes_on_link);
+//! ```
+
+use crate::config::{NvmeConfig, SystemProfile};
+use crate::interconnect::{PathSplit, TransferCost};
+
+/// Block-level I/O statistics for one storage gather (the NVMe analogue
+/// of [`GatherTraffic`](crate::device::warp::GatherTraffic)).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NvmeTraffic {
+    /// NVMe read commands issued (= distinct blocks read; duplicate and
+    /// adjacent rows coalesce, see [`count_block_ios`]).
+    pub ios: u64,
+    /// Bytes the SSD actually read: `ios × block_bytes`.
+    pub bytes_on_link: u64,
+    /// Bytes the application asked for: requested rows (duplicates
+    /// included) × row size — the requester's perspective, consistent
+    /// with the other links.
+    pub useful_bytes: u64,
+    /// Deduplicated row payload: *distinct* requested rows × row size.
+    /// The amplification denominator — duplicates are served from the
+    /// first block read, so counting them would understate amplification.
+    pub distinct_bytes: u64,
+}
+
+impl NvmeTraffic {
+    /// Block-read I/O amplification: bytes read from the device over the
+    /// distinct row payload.  Always ≥ 1 — every distinct requested byte
+    /// lives in exactly one counted block, and blocks are read whole
+    /// (pinned by `tests/nvme_properties.rs`).
+    pub fn amplification(&self) -> f64 {
+        if self.distinct_bytes == 0 {
+            1.0
+        } else {
+            self.bytes_on_link as f64 / self.distinct_bytes as f64
+        }
+    }
+}
+
+/// Count the distinct `block_bytes`-sized blocks a gather of cold-store
+/// `slots` touches (the read-coalescing model of DESIGN.md §8).
+///
+/// `slots` are positions in the *packed* cold-store layout — the store
+/// assigns spilled rows consecutive slots in id order, so rows adjacent
+/// in the table stay adjacent on disk and share blocks.  Each slot
+/// occupies bytes `[slot × row_bytes, (slot + 1) × row_bytes)`; a slot's
+/// read spans every block that range overlaps, and blocks shared between
+/// duplicate or neighboring slots are read once.
+pub fn count_block_ios(slots: &[u32], row_bytes: u64, block_bytes: u64) -> NvmeTraffic {
+    let bs = block_bytes.max(1);
+    let useful_bytes = slots.len() as u64 * row_bytes;
+    let mut sorted: Vec<u32> = slots.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let distinct_bytes = sorted.len() as u64 * row_bytes;
+    let mut ios = 0u64;
+    // Sorted ascending slots have nondecreasing block ranges, so one pass
+    // with the last counted block suffices to dedupe shared blocks.
+    let mut last_counted: Option<u64> = None;
+    if row_bytes > 0 {
+        for &s in &sorted {
+            let start_b = s as u64 * row_bytes / bs;
+            let end_b = (s as u64 * row_bytes + row_bytes - 1) / bs;
+            let from = match last_counted {
+                Some(l) if l >= start_b => l + 1,
+                _ => start_b,
+            };
+            if end_b >= from {
+                ios += end_b - from + 1;
+                last_counted = Some(end_b);
+            }
+        }
+    }
+    NvmeTraffic {
+        ios,
+        bytes_on_link: ios * bs,
+        useful_bytes,
+        distinct_bytes,
+    }
+}
+
+/// GPU-initiated block-read path to the NVMe cold store.
+#[derive(Clone, Debug)]
+pub struct NvmeLink {
+    cfg: NvmeConfig,
+    kernel_launch_s: f64,
+}
+
+impl NvmeLink {
+    pub fn new(sys: &SystemProfile) -> Self {
+        NvmeLink {
+            cfg: sys.nvme.clone(),
+            kernel_launch_s: sys.kernel_launch_s,
+        }
+    }
+
+    pub fn config(&self) -> &NvmeConfig {
+        &self.cfg
+    }
+
+    /// Effective command rate: the device IOPS ceiling capped by what the
+    /// queue-depth budget keeps in flight (`qd / latency`, Little's law).
+    pub fn effective_iops(&self) -> f64 {
+        let qd_rate = self.cfg.queue_depth as f64 / self.cfg.read_latency_s.max(1e-12);
+        self.cfg.iops.min(qd_rate).max(1.0)
+    }
+
+    /// Cost a block-read gather: the block bytes pay the bandwidth bound,
+    /// the command count pays the rate bound, and one kernel launch covers
+    /// the GPU-side gather (shared with the other tiers when the storage
+    /// read is part of a composite step — the store charges the launch
+    /// once and sums the launch-free link occupancies).
+    pub fn read(&self, traffic: &NvmeTraffic) -> TransferCost {
+        let bw_bound = traffic.bytes_on_link as f64 / self.cfg.peak_bw;
+        let io_bound = traffic.ios as f64 / self.effective_iops();
+        let link_time_s = bw_bound.max(io_bound);
+        TransferCost {
+            time_s: link_time_s + self.kernel_launch_s,
+            bytes_on_link: traffic.bytes_on_link,
+            useful_bytes: traffic.useful_bytes,
+            requests: traffic.ios,
+            // GPU-initiated direct storage access — the GIDS headline.
+            cpu_time_s: 0.0,
+            split: PathSplit {
+                storage_bytes: traffic.useful_bytes,
+                storage_bytes_on_link: traffic.bytes_on_link,
+                storage_time_s: link_time_s,
+                ..PathSplit::default()
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::warp::{count_requests, WarpModel};
+    use crate::interconnect::PcieLink;
+
+    fn sys() -> SystemProfile {
+        SystemProfile::system1()
+    }
+
+    #[test]
+    fn adjacent_rows_coalesce_into_shared_blocks() {
+        // 8 × 512 B adjacent rows = exactly one 4 KiB block.
+        let t = count_block_ios(&[0, 1, 2, 3, 4, 5, 6, 7], 512, 4096);
+        assert_eq!(t.ios, 1);
+        assert_eq!(t.bytes_on_link, 4096);
+        assert!((t.amplification() - 1.0).abs() < 1e-12);
+        // The same 8 rows scattered one-per-block cost 8 reads.
+        let s = count_block_ios(&[0, 8, 16, 24, 32, 40, 48, 56], 512, 4096);
+        assert_eq!(s.ios, 8);
+        assert!((s.amplification() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_rows_read_once() {
+        let t = count_block_ios(&[42, 42, 42], 512, 4096);
+        assert_eq!(t.ios, 1);
+        assert_eq!(t.useful_bytes, 3 * 512);
+        assert_eq!(t.distinct_bytes, 512);
+    }
+
+    #[test]
+    fn straddling_rows_count_both_blocks_without_double_reads() {
+        // 3000 B rows: slot 1 spans blocks 0 and 1; slot 2 spans 1 and 2.
+        // Block 1 is shared and must be read once: slots {1, 2} = 3 blocks.
+        let t = count_block_ios(&[1, 2], 3000, 4096);
+        assert_eq!(t.ios, 3);
+        // A lone straddling row still reads both its blocks.
+        let lone = count_block_ios(&[1], 3000, 4096);
+        assert_eq!(lone.ios, 2);
+    }
+
+    #[test]
+    fn amplification_at_least_one_for_random_slot_sets() {
+        for seed in 0..20u64 {
+            let slots: Vec<u32> = (0..200u32)
+                .map(|i| (i as u64 * (seed * 2 + 3) * 2654435761 % 10_000) as u32)
+                .collect();
+            for row_bytes in [64u64, 516, 2052, 4096, 5000] {
+                let t = count_block_ios(&slots, row_bytes, 4096);
+                assert!(
+                    t.amplification() >= 1.0 - 1e-12,
+                    "seed {seed} row_bytes {row_bytes}: amp {}",
+                    t.amplification()
+                );
+                assert!(t.bytes_on_link >= t.distinct_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_row_traffic_is_free() {
+        let t = count_block_ios(&[], 512, 4096);
+        assert_eq!(t.ios, 0);
+        assert_eq!(t.bytes_on_link, 0);
+        let z = count_block_ios(&[1, 2], 0, 4096);
+        assert_eq!(z.ios, 0);
+        assert!((z.amplification() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn storage_read_slower_than_host_zero_copy_for_same_rows() {
+        // The tier ordering premise: the same row set costs more from
+        // storage than over the host zero-copy path.
+        let s = sys();
+        let rows: Vec<u32> = (0..4096u32).map(|i| i * 13 % 100_000).collect();
+        let dim = 129u64; // 516 B rows
+        let host = PcieLink::new(&s)
+            .direct_gather(&count_requests(&rows, dim, WarpModel::default(), true));
+        let storage = NvmeLink::new(&s).read(&count_block_ios(&rows, dim * 4, 4096));
+        assert!(
+            storage.time_s > host.time_s,
+            "storage {} !> host {}",
+            storage.time_s,
+            host.time_s
+        );
+    }
+
+    #[test]
+    fn shallow_queue_starves_the_device() {
+        let mut s = sys();
+        let rows: Vec<u32> = (0..8192u32).map(|i| i * 97 % 50_000).collect();
+        let t = count_block_ios(&rows, 516, 4096);
+        let deep = NvmeLink::new(&s).read(&t);
+        s.nvme.queue_depth = 4; // 4 / 90 µs ≈ 44 k IOPS « device ceiling
+        let shallow = NvmeLink::new(&s).read(&t);
+        assert!(shallow.time_s > deep.time_s);
+        // Deepening past saturation changes nothing: device-bound.
+        s.nvme.queue_depth = 1 << 20;
+        let very_deep = NvmeLink::new(&s).read(&t);
+        assert_eq!(very_deep.time_s, deep.time_s);
+    }
+
+    #[test]
+    fn storage_split_attributes_bytes_to_storage_only() {
+        let c = NvmeLink::new(&sys()).read(&count_block_ios(&[5, 900, 44], 516, 4096));
+        assert_eq!(c.split.storage_bytes, c.useful_bytes);
+        assert_eq!(c.split.storage_bytes_on_link, c.bytes_on_link);
+        assert_eq!(c.split.host_bytes, 0);
+        assert_eq!(c.split.peer_bytes, 0);
+        assert_eq!(c.split.local_bytes, 0);
+        assert!(c.split.storage_time_s > 0.0);
+        assert_eq!(c.cpu_time_s, 0.0);
+    }
+
+    #[test]
+    fn tiny_storage_reads_dominated_by_launch() {
+        let s = sys();
+        let c = NvmeLink::new(&s).read(&count_block_ios(&[1], 64, 4096));
+        assert!(c.time_s > 0.9 * s.kernel_launch_s);
+    }
+}

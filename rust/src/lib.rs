@@ -11,7 +11,9 @@
 //!   store (GPU-resident hot set over the unified cold tier, after the
 //!   Data Tiering follow-up paper — see [`featurestore::tiered`]), the
 //!   multi-GPU sharded store (per-GPU hot tiers with NVLink peer access —
-//!   see [`featurestore::sharded`]), the pipelined training loop, and two
+//!   see [`featurestore::sharded`]), the NVMe storage tier for
+//!   beyond-host-memory tables (GPU-initiated block reads, GIDS-style —
+//!   see [`featurestore::nvme`]), the pipelined training loop, and two
 //!   training backends: the PJRT runtime that executes the AOT-compiled
 //!   training step, and a built-in native trainer ([`runtime::native`])
 //!   that works without artifacts.

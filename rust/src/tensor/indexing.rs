@@ -89,6 +89,11 @@ pub fn index_select(
                     .into(),
             ))
         }
+        (AccessMode::Nvme, _) => {
+            return Err(Error::Device(
+                "nvme indexing is stateful; use featurestore::FeatureStore::build_nvme".into(),
+            ))
+        }
         (m, d) => {
             return Err(Error::Device(format!(
                 "mode {:?} cannot access features on device {d}",
@@ -132,7 +137,9 @@ pub fn index_select(
             },
             None,
         ),
-        AccessMode::Uvm | AccessMode::Tiered | AccessMode::Sharded => unreachable!(),
+        AccessMode::Uvm | AccessMode::Tiered | AccessMode::Sharded | AccessMode::Nvme => {
+            unreachable!()
+        }
     };
 
     Ok((

@@ -5,8 +5,8 @@
 //!   through the native backend (no AOT artifacts required), pinning the
 //!   paper's core correctness property: the access mode changes *cost*,
 //!   never *numerics* — identically-seeded runs must produce bitwise
-//!   identical loss trajectories in all seven modes, including `Tiered`
-//!   and `Sharded` at any GPU count.
+//!   identical loss trajectories in all eight modes, including `Tiered`,
+//!   `Sharded` at any GPU count, and `Nvme` at any host fraction.
 //! * **Artifact section** — the same stack through PJRT when
 //!   `make artifacts` has produced a manifest; skipped (with a note)
 //!   otherwise.
@@ -153,6 +153,76 @@ fn sharded_epoch_accounts_every_row_and_scales_past_one_gpu() {
         r4.breakdown_sim.transfer_s,
         r1.breakdown_sim.transfer_s
     );
+}
+
+#[test]
+fn nvme_shares_the_loss_trajectory_at_every_host_frac() {
+    // Storage placement is metadata over the one table: whatever fraction
+    // of the rows spills to NVMe, the loss trajectory must stay bitwise
+    // identical to the single-tier reference modes.
+    let mut reference = Trainer::new(cfg(AccessMode::UnifiedAligned)).unwrap();
+    let ref_losses = reference.run_epoch().unwrap().losses;
+    for host_frac in [0.0, 0.1, 0.5, 1.0] {
+        let mut c = cfg(AccessMode::Nvme);
+        c.host_frac = host_frac;
+        let mut t = Trainer::new(c).unwrap();
+        let r = t.run_epoch().unwrap();
+        assert_eq!(
+            r.losses, ref_losses,
+            "nvme host_frac={host_frac} numerics diverged"
+        );
+    }
+}
+
+#[test]
+fn nvme_host_frac_one_cost_degenerates_to_tiered_bit_exactly() {
+    let mut ti = Trainer::new(cfg(AccessMode::Tiered)).unwrap();
+    let r_ti = ti.run_epoch().unwrap();
+    let mut c = cfg(AccessMode::Nvme);
+    c.host_frac = 1.0;
+    let mut nv = Trainer::new(c).unwrap();
+    let r_nv = nv.run_epoch().unwrap();
+    assert_eq!(r_nv.breakdown_sim.transfer_s, r_ti.breakdown_sim.transfer_s);
+    assert_eq!(r_nv.bytes_on_link, r_ti.bytes_on_link);
+    assert_eq!(r_nv.requests, r_ti.requests);
+    assert_eq!(r_nv.losses, r_ti.losses);
+    let stats = r_nv.nvme.expect("nvme epoch reports storage stats");
+    assert_eq!(stats.storage_rows, 0, "host_frac 1 never touches storage");
+    assert_eq!(stats.ios, 0);
+}
+
+#[test]
+fn nvme_epoch_accounts_every_row_and_pays_for_spilling() {
+    let mut c_res = cfg(AccessMode::Nvme);
+    c_res.host_frac = 1.0;
+    let r_res = Trainer::new(c_res).unwrap().run_epoch().unwrap();
+    let mut c_sp = cfg(AccessMode::Nvme);
+    c_sp.host_frac = 0.1;
+    let r_sp = Trainer::new(c_sp).unwrap().run_epoch().unwrap();
+
+    // GPU hits + host rows + storage rows must cover exactly the gathered
+    // rows: batch 64 roots expanded by fanouts [5, 5] -> 64 * 6 * 6 per
+    // step.
+    let rows_per_step = 64 * 6 * 6;
+    for r in [&r_res, &r_sp] {
+        let stats = r.nvme.as_ref().expect("nvme epoch reports storage stats");
+        assert_eq!(stats.rows_served(), STEPS as u64 * rows_per_step);
+        assert!(stats.amplification() >= 1.0);
+    }
+    let sp = r_sp.nvme.as_ref().unwrap();
+    assert!(sp.storage_rows > 0, "a 10% host tier must spill");
+    assert!(sp.ios > 0);
+    // Spilling trades PCIe cacheline reads for NVMe block reads: strictly
+    // slower, never cheaper, and still CPU-free (GPU-initiated).
+    assert!(
+        r_sp.breakdown_sim.transfer_s > r_res.breakdown_sim.transfer_s,
+        "nvme spill {} !> host-resident {}",
+        r_sp.breakdown_sim.transfer_s,
+        r_res.breakdown_sim.transfer_s
+    );
+    assert_eq!(r_sp.cpu_gather_s, 0.0);
+    assert!(r_sp.power.storage_util > 0.0);
+    assert_eq!(r_res.power.storage_util, 0.0);
 }
 
 #[test]

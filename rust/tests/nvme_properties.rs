@@ -1,0 +1,255 @@
+//! Property-based tests (via the in-tree `util::proptest` harness) for the
+//! NVMe three-tier store's invariants (DESIGN.md §8):
+//!
+//!  * GPU hits + host rows + storage rows equal the rows requested,
+//!    whatever the placement, promotion history, or host fraction;
+//!  * the `host_frac` endpoints reproduce the reference modes: 1.0 is
+//!    bit-exactly the tiered cost model (nothing spills), 0.0 with a cold
+//!    GPU tier serves every row from storage;
+//!  * block-read I/O amplification is always ≥ 1, the SSD's link bytes
+//!    are exactly `ios × block_bytes`, and duplicate rows never re-read;
+//!  * gathered values always match `SyntheticFeatures::fill_row` — the
+//!    storage split is placement metadata, never a second copy;
+//!  * deepening the NVMe queue never makes a read slower (the
+//!    queue-depth bound is monotone).
+
+use ptdirect::config::SystemProfile;
+use ptdirect::featurestore::{FeatureStore, NvmeStoreConfig, SyntheticFeatures, TierConfig};
+use ptdirect::interconnect::{count_block_ios, NvmeLink};
+use ptdirect::util::proptest::{check, prop_assert, Gen};
+use ptdirect::util::rng::Rng;
+
+fn random_nvme_cfg(g: &mut Gen, rows: usize) -> NvmeStoreConfig {
+    let ranking = if g.bool() {
+        let mut order: Vec<u32> = (0..rows as u32).collect();
+        Rng::new(g.seed ^ 0xC0FFEE).shuffle(&mut order);
+        Some(order)
+    } else {
+        None
+    };
+    NvmeStoreConfig {
+        host_frac: g.f64_in(0.0, 1.0),
+        tier: TierConfig {
+            hot_frac: g.f64_in(0.0, 1.0),
+            reserve_bytes: 0,
+            promote: g.bool(),
+            ranking,
+        },
+    }
+}
+
+fn random_gathers(g: &mut Gen, rows: usize) -> Vec<Vec<u32>> {
+    let n_gathers = g.usize_in(1, 6);
+    (0..n_gathers)
+        .map(|_| {
+            let len = g.usize_in(1, 200);
+            g.vec_u32(len, 0, (rows - 1) as u32)
+        })
+        .collect()
+}
+
+#[test]
+fn rows_conserve_across_the_three_tiers() {
+    check(30, |g: &mut Gen| {
+        let rows = g.usize_in(2, 400);
+        let dim = g.usize_in(1, 64);
+        let cfg = random_nvme_cfg(g, rows);
+        let host_cap = (cfg.host_frac * rows as f64).floor() as usize;
+        let store = FeatureStore::build_nvme(rows, dim, 8, &SystemProfile::system1(), g.seed, cfg)
+            .map_err(|e| e.to_string())?;
+        let mut requested = 0u64;
+        for idx in random_gathers(g, rows) {
+            store.gather(&idx).map_err(|e| e.to_string())?;
+            requested += idx.len() as u64;
+        }
+        let stats = store.nvme_stats().expect("nvme store has stats");
+        prop_assert(
+            stats.rows_served() == requested,
+            format!(
+                "gpu {} + host {} + storage {} != requested {requested}",
+                stats.tier.hits, stats.host_rows, stats.storage_rows
+            ),
+        )?;
+        prop_assert(
+            stats.host_resident_rows == host_cap
+                && stats.spilled_rows == rows - host_cap,
+            format!(
+                "placement split {}/{} violates host_frac cap {host_cap} of {rows}",
+                stats.host_resident_rows, stats.spilled_rows
+            ),
+        )
+    });
+}
+
+#[test]
+fn io_amplification_at_least_one_and_link_bytes_are_block_granular() {
+    check(30, |g: &mut Gen| {
+        let rows = g.usize_in(2, 400);
+        let dim = g.usize_in(1, 64);
+        let sys = SystemProfile::system1();
+        let cfg = random_nvme_cfg(g, rows);
+        let store = FeatureStore::build_nvme(rows, dim, 8, &sys, g.seed, cfg)
+            .map_err(|e| e.to_string())?;
+        for idx in random_gathers(g, rows) {
+            let (_, cost) = store.gather(&idx).map_err(|e| e.to_string())?;
+            prop_assert(
+                cost.split.local_bytes + cost.split.host_bytes + cost.split.storage_bytes
+                    == cost.useful_bytes,
+                "per-gather byte split does not cover the batch",
+            )?;
+        }
+        let stats = store.nvme_stats().unwrap();
+        prop_assert(
+            stats.amplification() >= 1.0 - 1e-12,
+            format!("amplification {} < 1", stats.amplification()),
+        )?;
+        prop_assert(
+            stats.storage_bytes_on_link == stats.ios * sys.nvme.block_bytes,
+            format!(
+                "link bytes {} != {} IOs x {} B blocks",
+                stats.storage_bytes_on_link, stats.ios, sys.nvme.block_bytes
+            ),
+        )?;
+        prop_assert(
+            stats.storage_bytes_on_link >= stats.storage_distinct_bytes,
+            "block reads must cover every distinct requested byte",
+        )
+    });
+}
+
+#[test]
+fn host_frac_one_is_bit_exactly_tiered() {
+    check(25, |g: &mut Gen| {
+        let rows = g.usize_in(2, 300);
+        let dim = g.usize_in(1, 64);
+        let sys = SystemProfile::system1();
+        let seed = g.seed;
+        let mut cfg = random_nvme_cfg(g, rows);
+        cfg.host_frac = 1.0;
+        let tier_cfg = cfg.tier.clone();
+        let nvme = FeatureStore::build_nvme(rows, dim, 8, &sys, seed, cfg)
+            .map_err(|e| e.to_string())?;
+        let tiered = FeatureStore::build_tiered(rows, dim, 8, &sys, seed, tier_cfg)
+            .map_err(|e| e.to_string())?;
+        for idx in random_gathers(g, rows) {
+            let (_, nv) = nvme.gather(&idx).map_err(|e| e.to_string())?;
+            let (_, ti) = tiered.gather(&idx).map_err(|e| e.to_string())?;
+            prop_assert(
+                nv.time_s == ti.time_s
+                    && nv.bytes_on_link == ti.bytes_on_link
+                    && nv.requests == ti.requests
+                    && nv.useful_bytes == ti.useful_bytes,
+                format!(
+                    "host_frac 1 diverged from tiered: {} vs {} s, {} vs {} B",
+                    nv.time_s, ti.time_s, nv.bytes_on_link, ti.bytes_on_link
+                ),
+            )?;
+            prop_assert(nv.split.storage_bytes == 0, "host_frac 1 read storage")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn host_frac_zero_with_cold_gpu_tier_serves_everything_from_storage() {
+    check(25, |g: &mut Gen| {
+        let rows = g.usize_in(2, 300);
+        let dim = g.usize_in(1, 64);
+        let sys = SystemProfile::system1();
+        let cfg = NvmeStoreConfig {
+            host_frac: 0.0,
+            tier: TierConfig {
+                hot_frac: 0.0,
+                reserve_bytes: 0,
+                promote: false,
+                ranking: None,
+            },
+        };
+        let store = FeatureStore::build_nvme(rows, dim, 8, &sys, g.seed, cfg)
+            .map_err(|e| e.to_string())?;
+        let mut requested = 0u64;
+        for idx in random_gathers(g, rows) {
+            let (_, cost) = store.gather(&idx).map_err(|e| e.to_string())?;
+            requested += idx.len() as u64;
+            prop_assert(
+                cost.split.host_bytes == 0 && cost.split.local_bytes == 0,
+                "fully spilled store leaked rows to a faster tier",
+            )?;
+        }
+        let stats = store.nvme_stats().unwrap();
+        prop_assert(
+            stats.storage_rows == requested && stats.host_rows == 0,
+            format!("storage {} / host {} != {requested} / 0", stats.storage_rows, stats.host_rows),
+        )
+    });
+}
+
+#[test]
+fn gathered_values_match_fill_row_regardless_of_spill_placement() {
+    check(25, |g: &mut Gen| {
+        let rows = g.usize_in(2, 200);
+        let dim = g.usize_in(1, 48);
+        let classes = 8u32;
+        let seed = g.seed ^ 0xFEA7;
+        let cfg = random_nvme_cfg(g, rows);
+        let store =
+            FeatureStore::build_nvme(rows, dim, classes, &SystemProfile::system1(), seed, cfg)
+                .map_err(|e| e.to_string())?;
+        let synth = SyntheticFeatures::new(dim, classes, seed);
+        let mut want_row = vec![0f32; dim];
+        for idx in random_gathers(g, rows) {
+            let (vals, _) = store.gather(&idx).map_err(|e| e.to_string())?;
+            for (chunk, &r) in vals.chunks_exact(dim).zip(&idx) {
+                synth.fill_row(r, &mut want_row);
+                prop_assert(
+                    chunk == want_row.as_slice(),
+                    format!("row {r} diverged from SyntheticFeatures::fill_row"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn deeper_queues_never_slow_a_read_down() {
+    check(30, |g: &mut Gen| {
+        let slots = g.vec_u32(g.usize_in(1, 500), 0, 50_000);
+        let row_bytes = g.u64_in(4, 8192);
+        let mut sys = SystemProfile::system1();
+        let traffic = count_block_ios(&slots, row_bytes, sys.nvme.block_bytes);
+        let mut last = f64::INFINITY;
+        for qd in [1u32, 4, 16, 64, 256, 4096] {
+            sys.nvme.queue_depth = qd;
+            let t = NvmeLink::new(&sys).read(&traffic).time_s;
+            prop_assert(
+                t <= last + 1e-15,
+                format!("read got slower when queue depth grew to {qd}"),
+            )?;
+            last = t;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn duplicate_rows_in_a_batch_never_reread_blocks() {
+    check(25, |g: &mut Gen| {
+        let base = g.vec_u32(g.usize_in(1, 200), 0, 10_000);
+        let row_bytes = g.u64_in(4, 4096);
+        let bs = 4096;
+        let once = count_block_ios(&base, row_bytes, bs);
+        let mut doubled = base.clone();
+        doubled.extend_from_slice(&base);
+        let twice = count_block_ios(&doubled, row_bytes, bs);
+        prop_assert(
+            twice.ios == once.ios && twice.bytes_on_link == once.bytes_on_link,
+            format!("duplicated batch re-read blocks: {} -> {}", once.ios, twice.ios),
+        )?;
+        prop_assert(
+            twice.useful_bytes == 2 * once.useful_bytes
+                && twice.distinct_bytes == once.distinct_bytes,
+            "useful/distinct byte accounting wrong under duplication",
+        )
+    });
+}
