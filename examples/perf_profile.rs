@@ -40,7 +40,10 @@ fn main() -> anyhow::Result<()> {
     // ---- 1. request counting ----
     let idx: Vec<u32> = (0..262_144).map(|_| rng.gen_range(4_000_000) as u32).collect();
     let model = WarpModel::default();
-    let mut t = Table::new("1. warp request counting (256K gathers x 4 KiB rows)", &["impl", "median ms", "ratio"]);
+    let mut t = Table::new(
+        "1. warp request counting (256K gathers x 4 KiB rows)",
+        &["impl", "median ms", "ratio"],
+    );
     let fast = time_n(9, || {
         std::hint::black_box(count_requests(&idx, 1024, model, true));
     });
@@ -68,7 +71,10 @@ fn main() -> anyhow::Result<()> {
         store.gather_into(&gidx, &mut out).unwrap();
     });
     let payload = (gidx.len() * 602 * 4) as f64;
-    let mut t = Table::new("2. feature gather (2304 x 602 f32 rows, Py staging path)", &["phase", "median ms", "GB/s"]);
+    let mut t = Table::new(
+        "2. feature gather (2304 x 602 f32 rows, Py staging path)",
+        &["phase", "median ms", "GB/s"],
+    );
     t.row(&["first touch".into(), ms(first), format!("{:.1}", payload / first / 1e9)]);
     t.row(&[
         "steady state".into(),
@@ -109,7 +115,9 @@ fn main() -> anyhow::Result<()> {
                 masks: (0..spec.fanouts.len())
                     .map(|l| vec![1.0; spec.layer_sizes[l + 1] * spec.fanouts[l]])
                     .collect(),
-                labels: (0..spec.batch).map(|_| rng2.gen_range(spec.classes as u64) as i32).collect(),
+                labels: (0..spec.batch)
+                    .map(|_| rng2.gen_range(spec.classes as u64) as i32)
+                    .collect(),
             };
             // warmup
             state.step(&loaded, &batch)?;

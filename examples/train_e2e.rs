@@ -40,7 +40,10 @@ fn main() -> anyhow::Result<()> {
     println!("# end-to-end: {arch} on {dataset}, {steps} steps per mode\n");
     let mut table = Table::new(
         "epoch breakdown (simulated testbed = System1)",
-        &["mode", "sample ms", "feature copy ms", "train ms", "other ms", "epoch ms", "loss start", "loss end", "acc end"],
+        &[
+            "mode", "sample ms", "feature copy ms", "train ms", "other ms", "epoch ms",
+            "loss start", "loss end", "acc end",
+        ],
     );
 
     let mut results = Vec::new();

@@ -19,7 +19,10 @@ fn main() {
     let gathers = scaled(64u64 << 10, 8 << 10);
     let mut t = Table::new(
         &format!("Fig. 7 — alignment sweep ({}K gathers, System1)", gathers >> 10),
-        &["feat B", "Py ms", "PyD naive ms", "PyD opt ms", "naive vs Py", "opt vs Py", "opt vs naive"],
+        &[
+            "feat B", "Py ms", "PyD naive ms", "PyD opt ms", "naive vs Py", "opt vs Py",
+            "opt vs naive",
+        ],
     );
     let mut naive_speedups = Vec::new();
     let mut opt_speedups = Vec::new();

@@ -26,7 +26,10 @@ fn main() {
     for arch in ["sage", "gat"] {
         let mut t = Table::new(
             &format!("Fig. 8 — {arch} epoch breakdown (System1, {steps} steps/config)"),
-            &["dataset", "mode", "sample ms", "copy ms", "train ms", "other ms", "epoch ms", "copy cut", "speedup"],
+            &[
+                "dataset", "mode", "sample ms", "copy ms", "train ms", "other ms", "epoch ms",
+                "copy cut", "speedup",
+            ],
         );
         for d in DATASETS {
             // Paper skips GAT on sk (DGL out-of-host-memory); mirror that.

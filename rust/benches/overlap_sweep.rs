@@ -1,0 +1,147 @@
+//! Overlap-engine sweep (DESIGN.md §9): prefetch depth 0 -> 8 across all
+//! five storage modes (py, pyd, tiered, sharded, nvme) on the Fig. 8
+//! workload.
+//!
+//! Structural checks (hold at any scale):
+//! * depth 0 reproduces the additive serial breakdown bit-exactly,
+//! * the overlapped epoch is monotone non-increasing in depth,
+//! * it never exceeds the serial sum and never undercuts the busiest
+//!   single resource,
+//! * depth >= 2 lands strictly below the serial sum for `pyd`
+//!   (UnifiedAligned) — sampling hides under the zero-copy transfer.
+//!
+//! Paper band: with the pipeline enabled, the PyD-over-Py epoch speedup
+//! grows past the serial Fig. 8 ratio (the paper's end-to-end ~1.6x claim
+//! rides on exactly this overlap); the CPU-centric baseline cannot hide
+//! its gather — it fights the sampler for cores — while the GPU-centric
+//! modes stream over links the CPU never touches.
+
+mod bench_common;
+
+use bench_common::{bench_steps, expect, scaled};
+use ptdirect::config::{AccessMode, RunConfig, ShardPolicy};
+use ptdirect::coordinator::report::{critical_path_summary, ms, ratio, Table};
+use ptdirect::coordinator::simclock::ResourceKind;
+use ptdirect::coordinator::{OverlapReport, Trainer};
+
+const REL_EPS: f64 = 1e-9;
+
+fn mode_cfg(mode: AccessMode, steps: u32) -> RunConfig {
+    RunConfig {
+        dataset: "product".into(),
+        arch: "sage".into(),
+        mode,
+        steps_per_epoch: steps,
+        scale: scaled(256, 2048),
+        feature_budget: 96 << 20,
+        skip_train: true, // simulated breakdown; e2e runs cover training
+        seed: 0xF18,
+        // Static placement: identical gather traffic at every depth, so
+        // the per-depth comparisons are bit-reproducible.
+        tier_promote: false,
+        num_gpus: if mode == AccessMode::Sharded { 4 } else { 1 },
+        shard_policy: ShardPolicy::Degree,
+        host_frac: 0.5,
+        ..RunConfig::default()
+    }
+}
+
+/// Sweep one mode over depths 0..=8; returns the per-depth overlap
+/// reports (index == depth).
+fn sweep(mode: AccessMode, steps: u32) -> Vec<OverlapReport> {
+    let mut trainer = Trainer::new(mode_cfg(mode, steps)).expect("trainer");
+    let label = mode.label();
+    let mut t = Table::new(
+        &format!("overlap sweep — {label} (product, System1, {steps} steps)"),
+        &["depth", "serial ms", "overlapped ms", "speedup", "bound by"],
+    );
+    let mut reports = Vec::new();
+    for depth in 0..=8u32 {
+        trainer.cfg.prefetch_depth = depth;
+        let r = trainer.run_epoch().expect("epoch");
+        let o = r.overlap;
+        if depth == 0 {
+            expect(
+                o.overlapped_s == r.breakdown_sim.total_s(),
+                &format!("{label}: depth 0 bit-exact with the serial breakdown"),
+            );
+        }
+        t.row(&[
+            depth.to_string(),
+            ms(o.serial_s),
+            ms(o.overlapped_s),
+            ratio(o.speedup()),
+            o.bound_by.label().into(),
+        ]);
+        reports.push(o);
+    }
+    t.print();
+    println!("  depth 8 critical path: {}", critical_path_summary(&reports[8]));
+
+    // Structural bounds across the sweep.
+    let mut monotone = true;
+    let mut bounded = true;
+    for pair in reports.windows(2) {
+        monotone &= pair[1].overlapped_s <= pair[0].overlapped_s * (1.0 + REL_EPS);
+    }
+    for o in &reports {
+        bounded &= o.overlapped_s <= o.serial_s * (1.0 + REL_EPS);
+        for kind in ResourceKind::all() {
+            // The sampler is multi-lane; its busy time bounds the epoch
+            // only after dividing by the lane count (1 in this config).
+            let lanes = if kind == ResourceKind::Sampler {
+                trainer.cfg.sampler_workers.max(1) as f64
+            } else {
+                1.0
+            };
+            bounded &= o.overlapped_s >= o.busy.get(kind) / lanes - REL_EPS * o.serial_s;
+        }
+    }
+    expect(monotone, &format!("{label}: overlapped time monotone in depth"));
+    expect(
+        bounded,
+        &format!("{label}: overlapped in [max resource busy, serial sum]"),
+    );
+    reports
+}
+
+fn main() {
+    let steps = bench_steps(30);
+    let modes = [
+        AccessMode::CpuGather,
+        AccessMode::UnifiedAligned,
+        AccessMode::Tiered,
+        AccessMode::Sharded,
+        AccessMode::Nvme,
+    ];
+    let mut by_mode = Vec::new();
+    for mode in modes {
+        by_mode.push((mode, sweep(mode, steps)));
+    }
+
+    // --- the acceptance contract: pyd overlaps strictly at depth >= 2 ---
+    let pyd = &by_mode[1].1;
+    expect(
+        pyd[2].overlapped_s < pyd[2].serial_s,
+        "pyd: depth 2 strictly below the serial sum",
+    );
+
+    // --- paper band: PyD over Py, serial vs pipelined (Fig. 8 + §5.3) ---
+    let py = &by_mode[0].1;
+    let serial_speedup = py[0].serial_s / pyd[0].serial_s;
+    let piped_speedup = py[4].overlapped_s / pyd[4].overlapped_s;
+    println!(
+        "PyD over Py: serial {} -> pipelined (depth 4) {} (paper: serial \
+         1.01x-1.45x, ~1.6x end-to-end once the copy hides under compute)",
+        ratio(serial_speedup),
+        ratio(piped_speedup),
+    );
+    expect(
+        piped_speedup >= serial_speedup * 0.95,
+        "pipelining does not erode the PyD advantage",
+    );
+    expect(
+        (1.0..3.0).contains(&piped_speedup),
+        "pipelined PyD-over-Py speedup within the paper band",
+    );
+}

@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 
 use crate::config::{AccessMode, Backend, RunConfig, ShardPolicy, SystemProfile};
 use crate::coordinator::microbench::{fig6_grid, fig7_sizes, run_cell};
-use crate::coordinator::report::{ms, pct, ratio, shard_table, Table};
+use crate::coordinator::report::{critical_path_summary, ms, pct, ratio, shard_table, Table};
 use crate::coordinator::Trainer;
 use crate::error::{Error, Result};
 use crate::graph::datasets::DATASETS;
@@ -166,6 +166,26 @@ pub fn run_config_from(args: &Args) -> Result<RunConfig> {
             .ok_or_else(|| Error::Config(format!("--nvme-queue-depth {n} out of range")))?;
         cfg.nvme_queue_depth = Some(qd);
     }
+    if let Some(n) = args.get_u64("prefetch-depth")? {
+        // Checked conversion: a wrapping `as` cast could smuggle huge
+        // values past the [0, 1024] validation window.
+        cfg.prefetch_depth = u32::try_from(n)
+            .map_err(|_| Error::Config(format!("--prefetch-depth {n} out of range")))?;
+    }
+    if args.flag("no-overlap") {
+        cfg.no_overlap = true;
+    }
+    if let Some(q) = args.get_u64("queue-depth")? {
+        // Checked conversion; the [1, 65536] window is enforced by
+        // `RunConfig::validate`, so absurd values error instead of
+        // reaching the queue allocator.
+        cfg.queue_depth = usize::try_from(q)
+            .map_err(|_| Error::Config(format!("--queue-depth {q} out of range")))?;
+    }
+    if let Some(w) = args.get_u64("sampler-workers")? {
+        cfg.sampler_workers = usize::try_from(w)
+            .map_err(|_| Error::Config(format!("--sampler-workers {w} out of range")))?;
+    }
     // `--system` replaced the whole profile above; restore the TOML's (and
     // the CLI's) NVLink/NVMe overrides on top of the selected profile.
     cfg.apply_link_overrides();
@@ -225,6 +245,21 @@ SHARDED ACCESS MODE (--mode sharded):
                                 skew-prone on id-correlated graphs)
   Per-epoch reporting gains a per-GPU table: local/peer/host row, byte and
   time splits, plus the load-imbalance factor (slowest GPU over mean).
+
+OVERLAP ENGINE (all modes):
+  Each epoch is scheduled twice: the additive serial breakdown (sample +
+  feature-copy + train + other) and a discrete-event pipelined timeline
+  where every step's sample -> gather -> transfer -> train DAG runs on
+  stateful shared resources (CPU sampler lanes, the PCIe link, NVLink,
+  the NVMe queue, the GPU) under a bounded prefetch window.  The per-epoch
+  report shows both totals plus which resource bound the critical path,
+  and the measured pipeline's queue backpressure next to them.
+  --prefetch-depth N   steps in flight ahead of training, 0..1024 (2);
+                       0 = serial (bit-exact legacy accounting),
+                       1 = windowed but still serial, >= 2 overlaps
+  --no-overlap         force the serial timeline (same as depth 0)
+  --queue-depth N      measured pipeline's bounded-queue capacity (4)
+  --sampler-workers N  simulated CPU sampler lanes (1)
 
 NVME STORAGE MODE (--mode nvme):
   For feature tables bigger than host memory (GIDS, arXiv:2306.16384):
@@ -340,13 +375,29 @@ fn cmd_train(args: &Args) -> Result<()> {
             );
             shard_table(shard).print();
         }
-        let m = &r.breakdown_measured;
+        let o = &r.overlap;
         println!(
-            "  measured-here: sample {} ms, gather {} ms, train {} ms, other {} ms",
+            "  overlap: serial {} ms -> overlapped {} ms ({} at depth {}) | critical path: {}",
+            ms(o.serial_s),
+            ms(o.overlapped_s),
+            ratio(o.speedup()),
+            o.prefetch_depth,
+            critical_path_summary(o),
+        );
+        let m = &r.breakdown_measured;
+        let p = &r.pipeline;
+        println!(
+            "  measured-here: sample {} ms, gather {} ms, train {} ms, other {} ms \
+             (pipelined wall {} ms; waits q1 push/pop {}/{} ms, q2 push/pop {}/{} ms)",
             ms(m.sample_s),
             ms(m.transfer_s),
             ms(m.train_s),
-            ms(m.other_s)
+            ms(m.other_s),
+            ms(p.wall_s),
+            ms(p.q1_push_wait_s),
+            ms(p.q1_pop_wait_s),
+            ms(p.q2_push_wait_s),
+            ms(p.q2_pop_wait_s),
         );
     }
     Ok(())
@@ -649,6 +700,56 @@ mod tests {
         assert!(HELP.contains("--num-gpus"));
         assert!(HELP.contains("--shard-policy"));
         assert!(HELP.contains("hash|degree|contig"));
+    }
+
+    #[test]
+    fn overlap_cli_overrides() {
+        let a = Args::parse(&sv(&[
+            "train",
+            "--prefetch-depth",
+            "6",
+            "--queue-depth",
+            "8",
+            "--sampler-workers",
+            "2",
+        ]))
+        .unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        assert_eq!(cfg.prefetch_depth, 6);
+        assert_eq!(cfg.queue_depth, 8);
+        assert_eq!(cfg.sampler_workers, 2);
+        assert_eq!(cfg.effective_prefetch_depth(), 6);
+
+        let a = Args::parse(&sv(&["train", "--prefetch-depth", "4", "--no-overlap"])).unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        assert!(cfg.no_overlap);
+        assert_eq!(cfg.effective_prefetch_depth(), 0);
+    }
+
+    #[test]
+    fn overlap_cli_rejects_bad_values() {
+        let a = Args::parse(&sv(&["train", "--prefetch-depth", "4096"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        // 2^32 + 2 must not wrap into the valid window via `as` truncation.
+        let a = Args::parse(&sv(&["train", "--prefetch-depth", "4294967298"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--queue-depth", "0"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        // Absurd sizes must error at config time, not abort in the
+        // queue/lane allocators.
+        let a = Args::parse(&sv(&["train", "--queue-depth", "18446744073709551615"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--sampler-workers", "1000000000000"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+    }
+
+    #[test]
+    fn help_documents_the_overlap_engine() {
+        assert!(HELP.contains("--prefetch-depth"));
+        assert!(HELP.contains("--no-overlap"));
+        assert!(HELP.contains("--queue-depth"));
+        assert!(HELP.contains("--sampler-workers"));
+        assert!(HELP.contains("critical path"));
     }
 
     #[test]

@@ -234,6 +234,16 @@ pub struct RunConfig {
     pub nvme_iops: Option<f64>,
     /// NVMe outstanding-command (queue depth) override.
     pub nvme_queue_depth: Option<u32>,
+    /// Bounded prefetch window of the simulated overlap engine
+    /// (DESIGN.md §9): up to this many steps may be in flight ahead of
+    /// training (`sample(i)` waits for `train(i - depth)`).  `0` disables
+    /// overlap and reproduces the serial additive accounting bit-exactly;
+    /// `1` still serializes (one step in flight); `>= 2` pipelines.
+    pub prefetch_depth: u32,
+    /// Force the serial (unpipelined) timeline regardless of
+    /// `prefetch_depth` — the `--no-overlap` escape hatch; equivalent to
+    /// depth 0.
+    pub no_overlap: bool,
 }
 
 impl Default for RunConfig {
@@ -265,6 +275,8 @@ impl Default for RunConfig {
             nvme_gb_per_s: None,
             nvme_iops: None,
             nvme_queue_depth: None,
+            prefetch_depth: 2,
+            no_overlap: false,
         }
     }
 }
@@ -325,10 +337,15 @@ impl RunConfig {
             cfg.artifacts_dir = v.into();
         }
         if let Some(v) = doc.get_i64("run.sampler_workers") {
-            cfg.sampler_workers = v as usize;
+            // Checked conversions: a wrapping `as` cast would turn a
+            // negative TOML value into a huge lane/queue allocation
+            // instead of a config error (the caps live in `validate`).
+            cfg.sampler_workers = usize::try_from(v)
+                .map_err(|_| Error::Config(format!("sampler_workers {v} out of range")))?;
         }
         if let Some(v) = doc.get_i64("run.queue_depth") {
-            cfg.queue_depth = v as usize;
+            cfg.queue_depth = usize::try_from(v)
+                .map_err(|_| Error::Config(format!("queue_depth {v} out of range")))?;
         }
         if let Some(v) = doc.get_bool("run.skip_train") {
             cfg.skip_train = v;
@@ -394,9 +411,29 @@ impl RunConfig {
                 .ok_or_else(|| Error::Config(format!("nvme_queue_depth {v} out of range")))?;
             cfg.nvme_queue_depth = Some(qd);
         }
+        if let Some(v) = doc.get_i64("run.prefetch_depth") {
+            // Checked conversion: a wrapping `as` cast could smuggle huge
+            // or negative values past the [0, 1024] validation window.
+            cfg.prefetch_depth = u32::try_from(v)
+                .map_err(|_| Error::Config(format!("prefetch_depth {v} out of range")))?;
+        }
+        if let Some(v) = doc.get_bool("run.no_overlap") {
+            cfg.no_overlap = v;
+        }
         cfg.apply_link_overrides();
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The prefetch window the overlap engine actually runs with:
+    /// `--no-overlap` forces the serial depth-0 timeline whatever
+    /// `prefetch_depth` says.
+    pub fn effective_prefetch_depth(&self) -> u32 {
+        if self.no_overlap {
+            0
+        } else {
+            self.prefetch_depth
+        }
     }
 
     /// Re-apply the stored link overrides (`nvlink_gb_per_s`, `nvme_*`)
@@ -437,8 +474,17 @@ impl RunConfig {
         if self.scale == 0 {
             return Err(Error::Config("scale must be >= 1".into()));
         }
-        if self.queue_depth == 0 {
-            return Err(Error::Config("queue_depth must be >= 1".into()));
+        if !(1..=65536).contains(&self.queue_depth) {
+            return Err(Error::Config(format!(
+                "queue_depth must be in [1, 65536], got {}",
+                self.queue_depth
+            )));
+        }
+        if self.sampler_workers > 1024 {
+            return Err(Error::Config(format!(
+                "sampler_workers must be in [0, 1024], got {}",
+                self.sampler_workers
+            )));
         }
         if !(0.0..=1.0).contains(&self.hot_frac) {
             return Err(Error::Config(format!(
@@ -462,6 +508,12 @@ impl RunConfig {
             return Err(Error::Config(format!(
                 "host_frac must be in [0, 1], got {}",
                 self.host_frac
+            )));
+        }
+        if self.prefetch_depth > 1024 {
+            return Err(Error::Config(format!(
+                "prefetch_depth must be in [0, 1024], got {}",
+                self.prefetch_depth
             )));
         }
         Ok(())
@@ -620,6 +672,44 @@ nvme_queue_depth = 64
         assert!(RunConfig::from_toml("[run]\nnvme_queue_depth = -1").is_err());
         // 2^32 + 1 must not wrap into the valid window via `as` truncation.
         assert!(RunConfig::from_toml("[run]\nnvme_queue_depth = 4294967297").is_err());
+    }
+
+    #[test]
+    fn overlap_knobs_parse_and_validate() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[run]
+prefetch_depth = 6
+no_overlap = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.prefetch_depth, 6);
+        assert!(cfg.no_overlap);
+        assert_eq!(cfg.effective_prefetch_depth(), 0, "--no-overlap wins");
+
+        let cfg = RunConfig::from_toml("[run]\nprefetch_depth = 0").unwrap();
+        assert_eq!(cfg.effective_prefetch_depth(), 0);
+        assert_eq!(RunConfig::default().effective_prefetch_depth(), 2);
+
+        assert!(RunConfig::from_toml("[run]\nprefetch_depth = -1").is_err());
+        assert!(RunConfig::from_toml("[run]\nprefetch_depth = 4096").is_err());
+        // 2^32 + 2 must not wrap into the valid window via `as` truncation.
+        assert!(RunConfig::from_toml("[run]\nprefetch_depth = 4294967298").is_err());
+    }
+
+    #[test]
+    fn pipeline_knobs_parse_and_validate() {
+        let cfg = RunConfig::from_toml("[run]\nqueue_depth = 8\nsampler_workers = 2").unwrap();
+        assert_eq!(cfg.queue_depth, 8);
+        assert_eq!(cfg.sampler_workers, 2);
+
+        // Negative values must error, not wrap into huge allocations.
+        assert!(RunConfig::from_toml("[run]\nqueue_depth = -1").is_err());
+        assert!(RunConfig::from_toml("[run]\nsampler_workers = -1").is_err());
+        assert!(RunConfig::from_toml("[run]\nqueue_depth = 0").is_err());
+        assert!(RunConfig::from_toml("[run]\nqueue_depth = 100000").is_err());
+        assert!(RunConfig::from_toml("[run]\nsampler_workers = 100000").is_err());
     }
 
     #[test]

@@ -48,7 +48,12 @@ pub fn random_indices(n: u64, rng: &mut Rng) -> Vec<u32> {
 }
 
 /// Evaluate one microbenchmark cell on one system.
-pub fn run_cell(sys: &SystemProfile, n_features: u64, feat_bytes: u64, rng: &mut Rng) -> MicrobenchCell {
+pub fn run_cell(
+    sys: &SystemProfile,
+    n_features: u64,
+    feat_bytes: u64,
+    rng: &mut Rng,
+) -> MicrobenchCell {
     let idx = random_indices(n_features, rng);
     let feat_elems = feat_bytes / 4;
     let link = PcieLink::new(sys);

@@ -1,16 +1,21 @@
 //! The training coordinator: epoch orchestration, simulated-testbed cost
-//! models, the power model (Fig. 9), microbenchmark drivers (Figs. 6/7),
-//! and table-formatted reporting.
+//! models, the discrete-event overlap engine (DESIGN.md §9), the power
+//! model (Fig. 9), microbenchmark drivers (Figs. 6/7), and
+//! table-formatted reporting.
 
 pub mod costmodel;
 pub mod inference;
 pub mod microbench;
 pub mod power;
 pub mod report;
+pub mod schedule;
+pub mod simclock;
 pub mod trainer;
 
 pub use costmodel::ComputeModel;
 pub use inference::{InferenceReport, InferenceRunner};
 pub use power::{epoch_power, PowerReport};
 pub use report::Table;
+pub use schedule::{schedule_epoch, OverlapParams, OverlapReport};
+pub use simclock::{ResourceBusy, ResourceKind, SimResource};
 pub use trainer::{Breakdown, EpochReport, Trainer};

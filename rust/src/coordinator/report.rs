@@ -1,7 +1,10 @@
 //! Plain-text table formatting for benches and the CLI (criterion is not
 //! vendored; every bench prints paper-style tables through this), plus the
-//! per-GPU epoch table of the sharded mode.
+//! per-GPU epoch table of the sharded mode and the overlap engine's
+//! critical-path summary line.
 
+use crate::coordinator::schedule::OverlapReport;
+use crate::coordinator::simclock::ResourceKind;
 use crate::featurestore::ShardStats;
 use crate::util::bytes::human_bytes;
 
@@ -113,6 +116,21 @@ pub fn ratio(r: f64) -> String {
     format!("{r:.2}x")
 }
 
+/// One-line critical-path attribution for the per-epoch report:
+/// nonzero resource shares in reporting order, then the binding resource
+/// — e.g. `"sampler 31% / host-link 61% / gpu 8% -> bound by host-link"`.
+pub fn critical_path_summary(o: &OverlapReport) -> String {
+    let shares: Vec<String> = ResourceKind::all()
+        .iter()
+        .filter(|&&k| o.critical.get(k) > 0.0)
+        .map(|&k| format!("{} {}", k.label(), pct(o.critical_share(k))))
+        .collect();
+    if shares.is_empty() {
+        return "idle".into();
+    }
+    format!("{} -> bound by {}", shares.join(" / "), o.bound_by.label())
+}
+
 /// Format a fraction as "12.3%".
 pub fn pct(f: f64) -> String {
     format!("{:.1}%", f * 100.0)
@@ -146,6 +164,28 @@ mod tests {
         assert_eq!(ms(0.0123), "12.30");
         assert_eq!(ratio(1.234), "1.23x");
         assert_eq!(pct(0.471), "47.1%");
+    }
+
+    #[test]
+    fn critical_path_summary_names_shares_and_binder() {
+        use crate::coordinator::simclock::ResourceBusy;
+        let mut critical = ResourceBusy::default();
+        critical.add(ResourceKind::Sampler, 1.0);
+        critical.add(ResourceKind::HostLink, 3.0);
+        let o = OverlapReport {
+            prefetch_depth: 2,
+            serial_s: 5.0,
+            overlapped_s: 4.0,
+            busy: ResourceBusy::default(),
+            critical,
+            bound_by: ResourceKind::HostLink,
+        };
+        let line = critical_path_summary(&o);
+        assert!(line.contains("sampler 25.0%"), "{line}");
+        assert!(line.contains("host-link 75.0%"), "{line}");
+        assert!(line.ends_with("bound by host-link"), "{line}");
+        assert!(!line.contains("gpu"), "zero shares must be elided: {line}");
+        assert_eq!(critical_path_summary(&OverlapReport::default()), "idle");
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Discrete-event simulation substrate for the overlap engine
+//! (DESIGN.md §9): the shared hardware resources of the simulated testbed
+//! as stateful busy-until lanes.
+//!
+//! The serial cost accounting of DESIGN.md §5 prices every stage in
+//! isolation and adds the results.  The overlap engine keeps the exact
+//! same per-stage durations but *schedules* them onto the resources below,
+//! so stages of different steps overlap when (and only when) they use
+//! different hardware — which is how the paper's pipelined epoch hides the
+//! feature-copy time under training compute.
+//!
+//! A [`SimResource`] is one piece of hardware with one or more service
+//! lanes (the CPU sampler has `sampler_workers` lanes; the links and the
+//! GPU have one).  Lanes are busy-until scalars: the scheduler asks when a
+//! lane frees ([`SimResource::peek`]), picks the start time, and commits
+//! the occupancy ([`SimResource::occupy`]).  Service order per lane is
+//! *fixed in step order* — this is what makes the schedule deterministic
+//! and the epoch makespan provably monotone non-increasing in the prefetch
+//! window (pinned by `tests/overlap_properties.rs`): relaxing a gate can
+//! only move every downstream start earlier, never reorder the queue.
+//!
+//! ```
+//! use ptdirect::coordinator::simclock::{ResourceKind, SimResource};
+//!
+//! let mut link = SimResource::new(ResourceKind::HostLink, 1);
+//! assert_eq!(link.peek(0), (0.0, None));
+//! link.occupy(0, 0.5, 1.0, 7); // event 7 holds the link over [0.5, 1.5)
+//! assert_eq!(link.peek(0), (1.5, Some(7)));
+//! assert_eq!(link.busy_s(), 1.0);
+//! ```
+
+/// The shared hardware resources a training step's stages contend for.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ResourceKind {
+    /// CPU sampler lanes (neighbor sampling, plus the CPU half of the
+    /// baseline's gather/staging work — they fight for the same cores).
+    Sampler,
+    /// The host link: PCIe zero-copy reads, DMA copies, UVM migrations.
+    HostLink,
+    /// The NVLink peer-ingress budget of the sharded store.
+    PeerLink,
+    /// The NVMe command queue / storage link of the three-tier store.
+    StorageLink,
+    /// The GPU compute engine (training steps; kernel-launch-only
+    /// transfers are attributed here without occupying it).
+    #[default]
+    Gpu,
+}
+
+impl ResourceKind {
+    /// All kinds, in reporting order.
+    pub fn all() -> [ResourceKind; 5] {
+        [
+            ResourceKind::Sampler,
+            ResourceKind::HostLink,
+            ResourceKind::PeerLink,
+            ResourceKind::StorageLink,
+            ResourceKind::Gpu,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ResourceKind::Sampler => "sampler",
+            ResourceKind::HostLink => "host-link",
+            ResourceKind::PeerLink => "peer-link",
+            ResourceKind::StorageLink => "storage-link",
+            ResourceKind::Gpu => "gpu",
+        }
+    }
+}
+
+/// Seconds accounted per resource (busy time, or critical-path share).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResourceBusy {
+    pub sampler_s: f64,
+    pub host_link_s: f64,
+    pub peer_link_s: f64,
+    pub storage_link_s: f64,
+    pub gpu_s: f64,
+}
+
+impl ResourceBusy {
+    pub fn add(&mut self, kind: ResourceKind, seconds: f64) {
+        match kind {
+            ResourceKind::Sampler => self.sampler_s += seconds,
+            ResourceKind::HostLink => self.host_link_s += seconds,
+            ResourceKind::PeerLink => self.peer_link_s += seconds,
+            ResourceKind::StorageLink => self.storage_link_s += seconds,
+            ResourceKind::Gpu => self.gpu_s += seconds,
+        }
+    }
+
+    pub fn get(&self, kind: ResourceKind) -> f64 {
+        match kind {
+            ResourceKind::Sampler => self.sampler_s,
+            ResourceKind::HostLink => self.host_link_s,
+            ResourceKind::PeerLink => self.peer_link_s,
+            ResourceKind::StorageLink => self.storage_link_s,
+            ResourceKind::Gpu => self.gpu_s,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.sampler_s + self.host_link_s + self.peer_link_s + self.storage_link_s + self.gpu_s
+    }
+
+    /// Resource with the largest share (ties resolved in
+    /// [`ResourceKind::all`] order, so the result is deterministic).
+    pub fn max_kind(&self) -> ResourceKind {
+        let mut best = ResourceKind::Sampler;
+        let mut best_s = self.get(best);
+        for kind in ResourceKind::all() {
+            let s = self.get(kind);
+            if s > best_s {
+                best = kind;
+                best_s = s;
+            }
+        }
+        best
+    }
+}
+
+/// One piece of simulated hardware: `lanes` busy-until scalars plus the
+/// id of each lane's most recent user (for critical-path bookkeeping) and
+/// cumulative occupied seconds.
+#[derive(Clone, Debug)]
+pub struct SimResource {
+    kind: ResourceKind,
+    free_s: Vec<f64>,
+    last_user: Vec<Option<usize>>,
+    busy_s: f64,
+}
+
+impl SimResource {
+    pub fn new(kind: ResourceKind, lanes: usize) -> SimResource {
+        let lanes = lanes.max(1);
+        SimResource {
+            kind,
+            free_s: vec![0.0; lanes],
+            last_user: vec![None; lanes],
+            busy_s: 0.0,
+        }
+    }
+
+    pub fn kind(&self) -> ResourceKind {
+        self.kind
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.free_s.len()
+    }
+
+    /// When `lane` next frees, and which event holds it until then.
+    pub fn peek(&self, lane: usize) -> (f64, Option<usize>) {
+        (self.free_s[lane], self.last_user[lane])
+    }
+
+    /// Commit event `user` to `lane` over `[start_s, start_s + dur_s)`.
+    /// Service order is the caller's (fixed, step order); starting before
+    /// the lane frees is a scheduler bug.
+    pub fn occupy(&mut self, lane: usize, start_s: f64, dur_s: f64, user: usize) {
+        debug_assert!(
+            start_s >= self.free_s[lane],
+            "lane {lane} of {:?} occupied at {start_s} while busy until {}",
+            self.kind,
+            self.free_s[lane]
+        );
+        self.free_s[lane] = start_s + dur_s;
+        self.last_user[lane] = Some(user);
+        self.busy_s += dur_s;
+    }
+
+    /// Total seconds this resource has been occupied.
+    pub fn busy_s(&self) -> f64 {
+        self.busy_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_track_busy_until_and_last_user() {
+        let mut r = SimResource::new(ResourceKind::Sampler, 2);
+        assert_eq!(r.lanes(), 2);
+        r.occupy(0, 0.0, 2.0, 1);
+        r.occupy(1, 0.5, 1.0, 2);
+        assert_eq!(r.peek(0), (2.0, Some(1)));
+        assert_eq!(r.peek(1), (1.5, Some(2)));
+        assert!((r.busy_s() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_lanes_clamps_to_one() {
+        let r = SimResource::new(ResourceKind::Gpu, 0);
+        assert_eq!(r.lanes(), 1);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "occupied")]
+    fn occupying_a_busy_lane_is_a_bug() {
+        let mut r = SimResource::new(ResourceKind::HostLink, 1);
+        r.occupy(0, 0.0, 2.0, 1);
+        r.occupy(0, 1.0, 1.0, 2); // starts inside [0, 2)
+    }
+
+    #[test]
+    fn busy_accumulates_by_kind() {
+        let mut b = ResourceBusy::default();
+        b.add(ResourceKind::HostLink, 1.0);
+        b.add(ResourceKind::HostLink, 0.5);
+        b.add(ResourceKind::Gpu, 2.0);
+        assert!((b.get(ResourceKind::HostLink) - 1.5).abs() < 1e-12);
+        assert!((b.total() - 3.5).abs() < 1e-12);
+        assert_eq!(b.max_kind(), ResourceKind::Gpu);
+    }
+
+    #[test]
+    fn max_kind_tie_break_is_deterministic() {
+        let mut b = ResourceBusy::default();
+        b.add(ResourceKind::Gpu, 1.0);
+        b.add(ResourceKind::Sampler, 1.0);
+        // Equal shares: reporting order wins (Sampler precedes Gpu).
+        assert_eq!(b.max_kind(), ResourceKind::Sampler);
+        assert_eq!(ResourceBusy::default().max_kind(), ResourceKind::Sampler);
+    }
+
+    #[test]
+    fn labels_cover_every_kind() {
+        for kind in ResourceKind::all() {
+            assert!(!kind.label().is_empty());
+        }
+        assert_eq!(ResourceKind::all().len(), 5);
+    }
+}

@@ -4,21 +4,32 @@
 //!
 //! * **simulated** — the paper-testbed estimate: sampling and training via
 //!   [`ComputeModel`], feature copy via the interconnect models.  This is
-//!   what the Fig. 8 bench compares across access modes.
-//! * **measured** — real wall-clock on this machine (sampling, gather
-//!   memcpys, PJRT execution).  This is the end-to-end integration signal
-//!   (the loss curve is real learning through the AOT artifacts).
+//!   what the Fig. 8 bench compares across access modes.  On top of the
+//!   additive per-stage breakdown, the discrete-event overlap engine
+//!   ([`crate::coordinator::schedule`], DESIGN.md §9) schedules every
+//!   step's stages onto the shared resources and reports the *pipelined*
+//!   epoch time plus critical-path attribution.
+//! * **measured** — real wall-clock on this machine.  The epoch actually
+//!   runs through the staged pipeline executor (sample ∥ gather ∥ train
+//!   behind `queue_depth`-bounded queues), so the per-queue backpressure
+//!   gauges land in the report next to the simulated critical path.  The
+//!   stages process steps in FIFO order, which keeps batches, gathers,
+//!   and loss trajectories bitwise identical to a serial loop.
 
 use std::path::Path;
+use std::sync::Mutex;
 
 use crate::config::{AccessMode, Backend, RunConfig};
 use crate::coordinator::costmodel::ComputeModel;
 use crate::coordinator::power::{epoch_power, PowerReport};
+use crate::coordinator::schedule::{schedule_epoch, OverlapParams, OverlapReport};
 use crate::error::{Error, Result};
 use crate::featurestore::nvme::NvmeStoreConfig;
 use crate::featurestore::sharded::ShardConfig;
 use crate::featurestore::tiered::TierConfig;
 use crate::featurestore::{FeatureStore, NvmeStats, ShardStats, TierStats};
+use crate::interconnect::ResourceDemand;
+use crate::pipeline::executor::{run_pipeline, PipelineReport};
 use crate::runtime::native::{self, NativeTrainState};
 use crate::runtime::state::{StepBatch, TrainState};
 use crate::runtime::{ArtifactKind, LoadedArtifact, Manifest, Runtime};
@@ -70,6 +81,14 @@ pub struct EpochReport {
     /// GPU-hit / host / storage row splits, block-read counts, and I/O
     /// amplification (counters are per-epoch deltas, gauges end-of-epoch).
     pub nvme: Option<NvmeStats>,
+    /// Measured pipeline execution of this epoch: wall clock, per-stage
+    /// busy time, and the q1/q2 push/pop blocked seconds (the measured
+    /// backpressure printed next to the simulated critical path).
+    pub pipeline: PipelineReport,
+    /// Simulated overlapped timeline from the discrete-event engine:
+    /// serial vs pipelined epoch seconds, per-resource busy time, and
+    /// critical-path attribution (DESIGN.md §9).
+    pub overlap: OverlapReport,
 }
 
 impl EpochReport {
@@ -281,15 +300,22 @@ impl Trainer {
     }
 
     /// Run one training epoch.
+    ///
+    /// The measured side runs through the staged pipeline executor
+    /// (sample ∥ gather ∥ train behind bounded queues); each stage
+    /// processes steps in FIFO order, so batches and loss trajectories
+    /// are bitwise identical to a serial loop — only the wall clock and
+    /// the queue-wait gauges change.
     pub fn run_epoch(&mut self) -> Result<EpochReport> {
+        let max_steps = self.steps_per_epoch() as usize;
+        let queue_depth = self.cfg.queue_depth;
         let sampler = NeighborSampler::new(&self.graph, &self.cfg.fanouts, self.preset.classes);
         let mut rng = self.rng.fork(self.state.as_ref().map(|s| s.steps).unwrap_or(0));
         let seeds_all = sampler.epoch_seeds(self.cfg.batch, &mut rng);
-        let max_steps = self.steps_per_epoch() as usize;
+        let seeds: Vec<Vec<u32>> = seeds_all.into_iter().take(max_steps).collect();
 
         let mut report = EpochReport::default();
         let dim = self.store.dim();
-        let mut x0 = vec![0f32; 0];
         let tier_epoch_start = self.store.tier_stats();
         let shard_epoch_start = self.store.shard_stats();
         let nvme_epoch_start = self.store.nvme_stats();
@@ -298,58 +324,90 @@ impl Trainer {
         // different peaks (and the storage bytes drive the SSD term).
         let (mut host_link_bytes, mut peer_link_bytes, mut storage_link_bytes) =
             (0u64, 0u64, 0u64);
+        // Per-step resource demands for the overlap engine.
+        let mut demands: Vec<ResourceDemand> = Vec::with_capacity(seeds.len());
 
-        for seeds in seeds_all.into_iter().take(max_steps) {
-            // --- sample (measured) ---
-            let t = Timer::start();
-            let mb = sampler.sample(&seeds, &mut rng);
-            report.breakdown_measured.sample_s += t.elapsed_s();
-            debug_assert!(mb.validate().is_ok());
+        let pipe = {
+            let store = &self.store;
+            let sampler = &sampler;
+            let seeds = &seeds;
+            let rng = Mutex::new(rng);
+            let artifact = self.artifact.as_ref();
+            let mut state = self.state.as_mut();
+            let mut native = self.native.as_mut();
+            let report = &mut report;
+            let demands = &mut demands;
+            let host_link_bytes = &mut host_link_bytes;
+            let peer_link_bytes = &mut peer_link_bytes;
+            let storage_link_bytes = &mut storage_link_bytes;
+            run_pipeline(
+                seeds.len() as u64,
+                queue_depth,
+                // --- sample (worker thread; locks the epoch RNG, and the
+                // single sampler thread visits steps in order, so the RNG
+                // stream matches the serial loop exactly) ---
+                |i| {
+                    let mb = sampler.sample(&seeds[i as usize], &mut rng.lock().unwrap());
+                    debug_assert!(mb.validate().is_ok());
+                    Ok(mb)
+                },
+                // --- gather + simulated transfer costing (worker thread;
+                // FIFO order keeps tier/shard/storage cache accounting
+                // step-granular like the serial loop) ---
+                |mb| {
+                    let mut x0 = vec![0f32; mb.gather_rows() * dim];
+                    let cost = store.gather_into(&mb.src_nodes, &mut x0)?;
+                    Ok((mb, x0, cost))
+                },
+                // --- train (calling thread, FIFO) ---
+                |(mb, x0, cost)| {
+                    report.breakdown_sim.transfer_s += cost.time_s;
+                    report.cpu_gather_s += cost.cpu_time_s;
+                    report.bytes_on_link += cost.bytes_on_link;
+                    *host_link_bytes += cost.split.host_bytes_on_link;
+                    *peer_link_bytes += cost.split.peer_bytes_on_link;
+                    *storage_link_bytes += cost.split.storage_bytes_on_link;
+                    report.requests += cost.requests;
+                    demands.push(cost.demand());
 
-            // --- gather + transfer ---
-            let rows = mb.gather_rows();
-            x0.resize(rows * dim, 0.0);
-            let t = Timer::start();
-            let cost = self.store.gather_into(&mb.src_nodes, &mut x0)?;
-            report.breakdown_measured.transfer_s += t.elapsed_s();
-            report.breakdown_sim.transfer_s += cost.time_s;
-            report.cpu_gather_s += cost.cpu_time_s;
-            report.bytes_on_link += cost.bytes_on_link;
-            host_link_bytes += cost.split.host_bytes_on_link;
-            peer_link_bytes += cost.split.peer_bytes_on_link;
-            storage_link_bytes += cost.split.storage_bytes_on_link;
-            report.requests += cost.requests;
+                    if let (Some(artifact), Some(state)) = (artifact, state.as_deref_mut()) {
+                        let t = Timer::start();
+                        // x0 is an owned per-step buffer now (the gather
+                        // stage allocates it), so it moves into the batch —
+                        // the old serial loop cloned a reused buffer here.
+                        let batch = StepBatch {
+                            x0,
+                            nbrs: mb.layers.iter().map(|l| l.nbr.clone()).collect(),
+                            masks: mb.layers.iter().map(|l| l.mask.clone()).collect(),
+                            labels: mb.labels.clone(),
+                        };
+                        let assemble_s = t.elapsed_s();
+                        report.breakdown_measured.other_s += assemble_s;
+                        let metrics = state.step(artifact, &batch)?;
+                        report.breakdown_measured.train_s += metrics.exec_s;
+                        report.losses.push(metrics.loss);
+                        report.accs.push(metrics.acc);
+                    } else if let Some(native) = native.as_deref_mut() {
+                        // Native backend: softmax regression over the root
+                        // rows (the prefix of x0) — deterministic,
+                        // mode-invariant.
+                        let metrics = native.step(&x0, &mb.labels)?;
+                        report.breakdown_measured.train_s += metrics.exec_s;
+                        report.losses.push(metrics.loss);
+                        report.accs.push(metrics.acc);
+                    }
+                    report.steps += 1;
+                    Ok(())
+                },
+            )?
+        };
+        report.breakdown_measured.sample_s = pipe.stages.sample_s;
+        report.breakdown_measured.transfer_s = pipe.stages.gather_s;
+        report.pipeline = pipe;
 
-            // --- train (measured through PJRT; simulated via FLOP model) ---
-            if let (Some(artifact), Some(state)) = (self.artifact.as_ref(), self.state.as_mut()) {
-                let t = Timer::start();
-                let batch = StepBatch {
-                    x0: x0.clone(),
-                    nbrs: mb.layers.iter().map(|l| l.nbr.clone()).collect(),
-                    masks: mb.layers.iter().map(|l| l.mask.clone()).collect(),
-                    labels: mb.labels.clone(),
-                };
-                let assemble_s = t.elapsed_s();
-                report.breakdown_measured.other_s += assemble_s;
-                let metrics = state.step(artifact, &batch)?;
-                report.breakdown_measured.train_s += metrics.exec_s;
-                report.losses.push(metrics.loss);
-                report.accs.push(metrics.acc);
-            } else if let Some(native) = self.native.as_mut() {
-                // Native backend: softmax regression over the root rows
-                // (the prefix of x0) — deterministic, mode-invariant.
-                let metrics = native.step(&x0, &mb.labels)?;
-                report.breakdown_measured.train_s += metrics.exec_s;
-                report.losses.push(metrics.loss);
-                report.accs.push(metrics.acc);
-            }
-            report.steps += 1;
-        }
-
-        // --- simulated-testbed sampling + training ---
-        if let Some(cm) = &self.compute {
-            report.breakdown_sim.sample_s = cm.sample_step_s(&self.cfg.system) * report.steps as f64;
-            report.breakdown_sim.train_s = cm.train_step_s(&self.cfg.system) * report.steps as f64;
+        // --- simulated-testbed sampling + training (per-step constants) ---
+        let (sample_step_s, train_step_s) = if let Some(cm) = &self.compute {
+            (cm.sample_step_s(&self.cfg.system), cm.train_step_s(&self.cfg.system))
         } else {
             // skip_train: estimate from the sampler shape directly
             let slots: u64 = self
@@ -363,10 +421,26 @@ impl Trainer {
                     Some(s)
                 })
                 .sum();
-            report.breakdown_sim.sample_s =
-                slots as f64 * self.cfg.system.sample_s_per_edge * report.steps as f64;
-        }
+            (slots as f64 * self.cfg.system.sample_s_per_edge, 0.0)
+        };
+        report.breakdown_sim.sample_s = sample_step_s * report.steps as f64;
+        report.breakdown_sim.train_s = train_step_s * report.steps as f64;
         report.breakdown_sim.other_s = 0.02 * report.breakdown_sim.total_s();
+
+        // --- overlap engine: schedule the epoch's step DAGs onto the
+        // shared resources (DESIGN.md §9).  Depth 0 returns the additive
+        // serial breakdown above bit-exactly.
+        report.overlap = schedule_epoch(
+            &demands,
+            &OverlapParams {
+                sample_step_s,
+                train_step_s,
+                other_s: report.breakdown_sim.other_s,
+                serial_s: report.breakdown_sim.total_s(),
+                prefetch_depth: self.cfg.effective_prefetch_depth(),
+                sampler_lanes: self.cfg.sampler_workers.max(1),
+            },
+        );
 
         // Topology (DESIGN.md §6): every simulated GPU owns its own PCIe
         // link to host memory and its own NVLink ingress budget, and the
@@ -509,6 +583,62 @@ mod tests {
         );
         // Storage reads are GPU-initiated: still no CPU on the path.
         assert_eq!(r_sp.cpu_gather_s, 0.0);
+    }
+
+    #[test]
+    fn depth_zero_overlap_is_the_serial_breakdown_bit_exactly() {
+        for mode in AccessMode::all() {
+            let mut cfg = small_cfg(mode);
+            cfg.prefetch_depth = 0;
+            let r = Trainer::new(cfg).unwrap().run_epoch().unwrap();
+            assert_eq!(
+                r.overlap.overlapped_s,
+                r.breakdown_sim.total_s(),
+                "{mode:?}: depth 0 must anchor to the serial sum"
+            );
+            assert_eq!(r.overlap.serial_s, r.breakdown_sim.total_s(), "{mode:?}");
+            assert_eq!(r.overlap.prefetch_depth, 0);
+        }
+    }
+
+    #[test]
+    fn no_overlap_flag_forces_the_serial_timeline() {
+        let mut cfg = small_cfg(AccessMode::UnifiedAligned);
+        cfg.prefetch_depth = 8;
+        cfg.no_overlap = true;
+        let r = Trainer::new(cfg).unwrap().run_epoch().unwrap();
+        assert_eq!(r.overlap.overlapped_s, r.breakdown_sim.total_s());
+    }
+
+    #[test]
+    fn overlapped_epoch_sits_between_the_structural_bounds() {
+        let mut cfg = small_cfg(AccessMode::UnifiedAligned);
+        cfg.prefetch_depth = 4;
+        let r = Trainer::new(cfg).unwrap().run_epoch().unwrap();
+        let o = &r.overlap;
+        assert!(
+            o.overlapped_s < o.serial_s,
+            "depth 4 must hide sampling under the zero-copy transfer: {} !< {}",
+            o.overlapped_s,
+            o.serial_s
+        );
+        for kind in crate::coordinator::simclock::ResourceKind::all() {
+            assert!(
+                o.overlapped_s >= o.busy.get(kind) - 1e-15,
+                "{kind:?} busier than the epoch"
+            );
+        }
+        assert!(o.critical.total() > 0.0);
+    }
+
+    #[test]
+    fn pipelined_epoch_surfaces_queue_stats() {
+        let mut t = Trainer::new(small_cfg(AccessMode::UnifiedAligned)).unwrap();
+        let r = t.run_epoch().unwrap();
+        assert_eq!(r.pipeline.items, r.steps);
+        assert!(r.pipeline.wall_s > 0.0);
+        assert!(r.pipeline.stages.sample_s > 0.0);
+        assert!(r.pipeline.stages.gather_s > 0.0);
     }
 
     #[test]

@@ -132,7 +132,12 @@ fn row_warp_lines(
 }
 
 /// Production request counter: O(#warps) regardless of feature width.
-pub fn count_requests(idx: &[u32], feat_elems: u64, model: WarpModel, shifted: bool) -> GatherTraffic {
+pub fn count_requests(
+    idx: &[u32],
+    feat_elems: u64,
+    model: WarpModel,
+    shifted: bool,
+) -> GatherTraffic {
     let WarpModel { warp, cl_elems: cl, elem_bytes } = model;
     if feat_elems == 0 || idx.is_empty() {
         return GatherTraffic::default();
@@ -400,7 +405,10 @@ mod tests {
             let shifted = g.bool();
             let a = count_requests(&idx, f, model, shifted);
             let b = count_requests_naive_ref(&idx, f, model, shifted);
-            prop_assert(a == b, format!("mismatch: {a:?} vs {b:?} (f={f}, idx={idx:?}, model={model:?}, shifted={shifted})"))
+            prop_assert(
+                a == b,
+                format!("mismatch: {a:?} vs {b:?} (f={f}, idx={idx:?}, shifted={shifted})"),
+            )
         });
     }
 

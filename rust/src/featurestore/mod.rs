@@ -44,6 +44,7 @@
 //! ```
 
 pub mod nvme;
+pub mod placement;
 pub mod sharded;
 pub mod staging;
 pub mod store;

@@ -57,6 +57,7 @@
 
 use crate::config::{RunConfig, SystemProfile};
 use crate::device::warp::{count_requests, WarpModel};
+use crate::featurestore::placement;
 use crate::featurestore::tiered::{TierConfig, TierStats, TieredCache};
 use crate::graph::Csr;
 use crate::interconnect::{count_block_ios, NvmeLink, PathSplit, PcieLink, TransferCost};
@@ -188,34 +189,19 @@ impl NvmeStore {
     /// host-resident (id order when no ranking is supplied), the rest
     /// spill to packed cold-store slots; the GPU hot tier sits on top with
     /// the unchanged [`TieredCache`] capacity rules.
-    pub fn new(rows: usize, row_bytes: u64, sys: &SystemProfile, cfg: &NvmeStoreConfig) -> NvmeStore {
+    pub fn new(
+        rows: usize,
+        row_bytes: u64,
+        sys: &SystemProfile,
+        cfg: &NvmeStoreConfig,
+    ) -> NvmeStore {
         let cache = TieredCache::new(rows, row_bytes, sys, &cfg.tier);
         let host_cap = (cfg.host_frac.clamp(0.0, 1.0) * rows as f64).floor() as usize;
-        let mut host = vec![false; rows];
-        let mut marked = 0usize;
-        if let Some(ranking) = &cfg.tier.ranking {
-            for &v in ranking.iter() {
-                if marked >= host_cap {
-                    break;
-                }
-                let vi = v as usize;
-                if vi < rows && !host[vi] {
-                    host[vi] = true;
-                    marked += 1;
-                }
-            }
-        }
-        // Coverage fallback: a missing or short ranking fills the host
-        // tier in id order, so `host_frac` always bounds the split.
-        for h in host.iter_mut() {
-            if marked >= host_cap {
-                break;
-            }
-            if !*h {
-                *h = true;
-                marked += 1;
-            }
-        }
+        // Ranked prefix with id-order fallback (shared placement helper),
+        // so `host_frac` always bounds the host/storage split.
+        let host =
+            placement::ranked_prefix_mask(rows, host_cap, cfg.tier.ranking.as_deref());
+        let marked = host.iter().filter(|&&h| h).count();
         let mut slot = vec![HOST_RESIDENT; rows];
         let mut next = 0u32;
         for (r, s) in slot.iter_mut().enumerate() {

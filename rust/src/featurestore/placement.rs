@@ -1,0 +1,151 @@
+//! Shared degree-ranking placement helpers for the tiered memory
+//! hierarchy.
+//!
+//! Three stores place rows by walking a hottest-first ranking (descending
+//! node degree, [`degree_ranking`]) and keeping a bounded prefix:
+//!
+//! * the tiered cache pre-seeds its GPU hot set from the ranking prefix,
+//! * the sharded store seeds each GPU from the global ranking restricted
+//!   to that GPU's shard,
+//! * the NVMe store keeps the ranking prefix host-resident and spills the
+//!   tail to storage.
+//!
+//! Each used to re-derive the prefix walk inline; this module is the one
+//! implementation they share, so the "hottest rows sit highest in the
+//! hierarchy" rule (Data Tiering, arXiv:2111.05894) stays a single piece
+//! of arithmetic.
+//!
+//! ```
+//! use ptdirect::featurestore::placement::{ranked_prefix, ranked_prefix_mask};
+//!
+//! // Hottest-first ranking over a 6-row table; keep the top 3.
+//! let ranking = [4u32, 4, 9, 1, 0, 2]; // duplicates and out-of-range ignored
+//! assert_eq!(ranked_prefix(6, 3, &ranking), vec![4, 1, 0]);
+//!
+//! // Mask form with id-order fallback: a missing ranking still fills cap.
+//! let mask = ranked_prefix_mask(6, 3, None);
+//! assert_eq!(mask, vec![true, true, true, false, false, false]);
+//! ```
+//!
+//! [`degree_ranking`]: crate::featurestore::tiered::degree_ranking
+
+/// First `cap` *distinct, in-range* row ids of `ranking`, in ranking
+/// order.  Duplicates and out-of-range entries are skipped (not counted
+/// against `cap`), so a noisy ranking still yields a full prefix whenever
+/// it covers enough rows.
+pub fn ranked_prefix(rows: usize, cap: usize, ranking: &[u32]) -> Vec<u32> {
+    let cap = cap.min(rows);
+    let mut chosen = vec![false; rows];
+    let mut prefix = Vec::with_capacity(cap);
+    for &v in ranking {
+        if prefix.len() >= cap {
+            break;
+        }
+        let vi = v as usize;
+        if vi < rows && !chosen[vi] {
+            chosen[vi] = true;
+            prefix.push(v);
+        }
+    }
+    prefix
+}
+
+/// Membership mask of the ranked prefix, filled to exactly
+/// `min(cap, rows)` rows by an id-order fallback — a missing or short
+/// ranking never shrinks the placement below its budget (the NVMe host
+/// tier leans on this: `host_frac` always bounds the host/storage split).
+pub fn ranked_prefix_mask(rows: usize, cap: usize, ranking: Option<&[u32]>) -> Vec<bool> {
+    let cap = cap.min(rows);
+    let mut mask = vec![false; rows];
+    let mut marked = 0usize;
+    if let Some(rk) = ranking {
+        for v in ranked_prefix(rows, cap, rk) {
+            mask[v as usize] = true;
+            marked += 1;
+        }
+    }
+    for m in mask.iter_mut() {
+        if marked >= cap {
+            break;
+        }
+        if !*m {
+            *m = true;
+            marked += 1;
+        }
+    }
+    mask
+}
+
+/// Restrict a global hottest-first `ranking` to the rows `owner` assigns
+/// to `gpu` (out-of-range entries dropped, order preserved) — each GPU of
+/// the sharded store seeds its hot tier from this slice, so the hottest
+/// *owned* rows go hot first.
+pub fn shard_slice(rows: usize, ranking: &[u32], owner: &[u8], gpu: u8) -> Vec<u32> {
+    ranking
+        .iter()
+        .copied()
+        .filter(|&r| (r as usize) < rows && owner[r as usize] == gpu)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_takes_ranking_order() {
+        assert_eq!(ranked_prefix(10, 3, &[7, 3, 9, 1]), vec![7, 3, 9]);
+        assert_eq!(ranked_prefix(10, 8, &[7, 3]), vec![7, 3]);
+    }
+
+    #[test]
+    fn prefix_skips_duplicates_and_out_of_range_without_losing_budget() {
+        // Duplicates and out-of-range ids don't consume cap slots.
+        assert_eq!(ranked_prefix(5, 3, &[4, 4, 99, 1, 0, 2]), vec![4, 1, 0]);
+    }
+
+    #[test]
+    fn prefix_cap_clamps_to_rows() {
+        assert_eq!(ranked_prefix(2, 10, &[1, 0, 1]), vec![1, 0]);
+        assert!(ranked_prefix(5, 0, &[1, 2, 3]).is_empty());
+    }
+
+    #[test]
+    fn mask_marks_the_prefix() {
+        let mask = ranked_prefix_mask(5, 2, Some(&[3, 1, 0]));
+        assert_eq!(mask, vec![false, true, false, true, false]);
+    }
+
+    #[test]
+    fn mask_falls_back_to_id_order() {
+        // No ranking: the first `cap` ids fill in.
+        assert_eq!(
+            ranked_prefix_mask(5, 3, None),
+            vec![true, true, true, false, false]
+        );
+        // Short ranking: its rows first, id order tops up to cap.
+        let mask = ranked_prefix_mask(5, 3, Some(&[4]));
+        assert_eq!(mask, vec![true, true, false, false, true]);
+    }
+
+    #[test]
+    fn mask_always_marks_exactly_cap_rows() {
+        for cap in 0..=6 {
+            let mask = ranked_prefix_mask(4, cap, Some(&[2, 2, 9, 0]));
+            assert_eq!(
+                mask.iter().filter(|&&m| m).count(),
+                cap.min(4),
+                "cap {cap}"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_slice_keeps_order_and_ownership() {
+        let owner = vec![0u8, 1, 0, 1, 0];
+        let ranking = vec![3u32, 0, 99, 4, 1, 2];
+        assert_eq!(shard_slice(5, &ranking, &owner, 0), vec![0, 4, 2]);
+        assert_eq!(shard_slice(5, &ranking, &owner, 1), vec![3, 1]);
+        assert!(shard_slice(5, &ranking, &owner, 2).is_empty());
+    }
+}

@@ -37,6 +37,7 @@
 
 use crate::config::{RunConfig, ShardPolicy, SystemProfile};
 use crate::device::warp::{count_requests, GatherTraffic, WarpModel};
+use crate::featurestore::placement;
 use crate::featurestore::tiered::{TierConfig, TierStats, TieredCache};
 use crate::graph::Csr;
 use crate::interconnect::{NvlinkLink, PathSplit, PcieLink, TransferCost};
@@ -258,7 +259,12 @@ impl ShardedStore {
     /// (gpu_mem − reserve) / row_bytes)` — `hot_frac` scales with the
     /// shard, so the aggregate hot set tracks the single-GPU tiered
     /// configuration whatever `num_gpus` is.
-    pub fn new(rows: usize, row_bytes: u64, sys: &SystemProfile, cfg: &ShardConfig) -> ShardedStore {
+    pub fn new(
+        rows: usize,
+        row_bytes: u64,
+        sys: &SystemProfile,
+        cfg: &ShardConfig,
+    ) -> ShardedStore {
         let n = cfg.num_gpus.clamp(1, 255);
         let owner = assign_owners(rows, n, cfg.policy, cfg.tier.ranking.as_deref());
         let mut shard_rows = vec![0usize; n];
@@ -269,12 +275,11 @@ impl ShardedStore {
             .map(|g| {
                 // This GPU seeds from the global ranking restricted to its
                 // shard, so the hottest owned rows go hot first.
-                let ranking = cfg.tier.ranking.as_ref().map(|rk| {
-                    rk.iter()
-                        .copied()
-                        .filter(|&r| (r as usize) < rows && owner[r as usize] as usize == g)
-                        .collect::<Vec<u32>>()
-                });
+                let ranking = cfg
+                    .tier
+                    .ranking
+                    .as_ref()
+                    .map(|rk| placement::shard_slice(rows, rk, &owner, g as u8));
                 let tier_cfg = TierConfig {
                     hot_frac: cfg.tier.hot_frac,
                     reserve_bytes: cfg.tier.reserve_bytes,
@@ -544,7 +549,8 @@ mod tests {
     fn n1_has_no_peer_traffic_and_matches_tiered_time() {
         let rows = 800usize;
         let dim = 65u64; // misaligned 260 B rows exercise the shift path
-        let mut st = ShardedStore::new(rows, dim * 4, &sys(), &shard_cfg(1, ShardPolicy::Hash, 0.25));
+        let mut st =
+            ShardedStore::new(rows, dim * 4, &sys(), &shard_cfg(1, ShardPolicy::Hash, 0.25));
         let mut tier = TieredCache::new(
             rows,
             dim * 4,

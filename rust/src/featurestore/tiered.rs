@@ -210,10 +210,8 @@ impl TieredCache {
             evictions: 0,
         };
         if let Some(ranking) = &cfg.ranking {
-            for &v in ranking.iter().take(capacity_rows) {
-                if (v as usize) < rows && !cache.hot[v as usize] {
-                    cache.insert_hot(v);
-                }
+            for v in crate::featurestore::placement::ranked_prefix(rows, capacity_rows, ranking) {
+                cache.insert_hot(v);
             }
         }
         cache

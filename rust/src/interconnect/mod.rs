@@ -178,4 +178,41 @@ impl TransferCost {
             0.0
         }
     }
+
+    /// Per-resource occupancy demand of this transfer — the busy-until
+    /// interface the discrete-event overlap engine schedules
+    /// (`coordinator::schedule`, DESIGN.md §9) instead of the pre-summed
+    /// `time_s`.  Decomposes the transfer into the CPU share
+    /// ([`TransferCost::cpu_time_s`]: staging gathers, fault servicing —
+    /// work that contends with sampling for cores) and the launch-free
+    /// per-link occupancies of [`PathSplit`]; `total_s` keeps the serial
+    /// duration so the engine's per-step times stay exactly the serial
+    /// accounting's.
+    pub fn demand(&self) -> ResourceDemand {
+        ResourceDemand {
+            total_s: self.time_s,
+            cpu_s: self.cpu_time_s,
+            host_s: self.split.host_time_s,
+            peer_s: self.split.peer_time_s,
+            storage_s: self.split.storage_time_s,
+        }
+    }
+}
+
+/// Resource-occupancy view of one transfer (see [`TransferCost::demand`]):
+/// what the overlap engine needs to schedule a step's feature copy onto
+/// the shared links instead of adding a bare duration.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResourceDemand {
+    /// Total simulated transfer duration (== [`TransferCost::time_s`]).
+    pub total_s: f64,
+    /// CPU seconds on the path (gather/staging/fault work; zero for every
+    /// GPU-initiated design — the paper's headline property).
+    pub cpu_s: f64,
+    /// Launch-free host-link occupancy seconds.
+    pub host_s: f64,
+    /// Launch-free NVLink peer occupancy seconds.
+    pub peer_s: f64,
+    /// Launch-free NVMe storage-link occupancy seconds.
+    pub storage_s: f64,
 }

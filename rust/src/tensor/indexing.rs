@@ -184,7 +184,8 @@ mod tests {
     fn gathers_correct_rows() {
         let f = feats(Device::Unified);
         let idx = [3u32, 97, 3, 0];
-        let (out, _) = index_select(&f, &idx, AccessMode::UnifiedAligned, &SystemProfile::system1()).unwrap();
+        let (out, _) =
+            index_select(&f, &idx, AccessMode::UnifiedAligned, &SystemProfile::system1()).unwrap();
         assert_eq!(out.shape(), &[4, 16]);
         let src = f.f32_data();
         let got = out.f32_data();

@@ -1,0 +1,220 @@
+//! Property tests for the discrete-event overlap engine (DESIGN.md §9):
+//!
+//! * the overlapped epoch time is monotone non-increasing in
+//!   `--prefetch-depth`,
+//! * it is bounded by `[max over resources of busy/lanes, serial sum]`
+//!   (links and GPU are single-lane; the sampler divides across its
+//!   lanes),
+//! * depth 0 is bit-exact with the pre-engine serial breakdown in every
+//!   access mode, and
+//! * the critical-path attribution is conservative (its durations sum to
+//!   the makespan).
+
+use ptdirect::config::{AccessMode, RunConfig};
+use ptdirect::coordinator::schedule::{schedule_epoch, OverlapParams};
+use ptdirect::coordinator::simclock::ResourceKind;
+use ptdirect::coordinator::Trainer;
+use ptdirect::interconnect::ResourceDemand;
+use ptdirect::util::proptest::{check, prop_assert, Gen};
+
+/// Relative slack for comparisons between totals that are summed in
+/// different orders (the serial formula multiplies per-step constants;
+/// the event engine accumulates them step by step).
+const REL_EPS: f64 = 1e-9;
+
+fn random_demands(g: &mut Gen, n: usize) -> Vec<ResourceDemand> {
+    (0..n)
+        .map(|_| {
+            // Pick a link mix: host-only, peer+host, storage+host, or
+            // launch-only — the shapes the five access modes emit.
+            let shape = g.usize_in(0, 3);
+            let link_s = g.f64_in(0.0, 3e-3);
+            let cpu_s = if g.bool() { g.f64_in(0.0, 1e-3) } else { 0.0 };
+            let (host_s, peer_s, storage_s) = match shape {
+                0 => (link_s, 0.0, 0.0),
+                1 => (link_s * 0.6, link_s * 0.4, 0.0),
+                2 => (link_s * 0.3, 0.0, link_s * 0.7),
+                _ => (0.0, 0.0, 0.0),
+            };
+            ResourceDemand {
+                total_s: cpu_s + link_s,
+                cpu_s,
+                host_s,
+                peer_s,
+                storage_s,
+            }
+        })
+        .collect()
+}
+
+fn serial_of(demands: &[ResourceDemand], p: &OverlapParams) -> f64 {
+    let n = demands.len() as f64;
+    let stages = p.sample_step_s * n
+        + demands.iter().map(|d| d.total_s).sum::<f64>()
+        + p.train_step_s * n;
+    stages + 0.02 * stages
+}
+
+#[test]
+fn overlapped_time_is_monotone_and_bounded_for_random_epochs() {
+    check(96, |g| {
+        let n = g.usize_in(1, 32);
+        let demands = random_demands(g, n);
+        let mut p = OverlapParams {
+            sample_step_s: g.f64_in(0.0, 2e-3),
+            train_step_s: g.f64_in(0.0, 2e-3),
+            other_s: 0.0,
+            serial_s: 0.0,
+            prefetch_depth: 0,
+            sampler_lanes: g.usize_in(1, 3),
+        };
+        let stages = serial_of(&demands, &p);
+        p.other_s = stages - stages / 1.02; // ~the 2% bookkeeping share
+        p.serial_s = stages;
+
+        let mut last = f64::INFINITY;
+        for depth in 0..=8u32 {
+            p.prefetch_depth = depth;
+            let r = schedule_epoch(&demands, &p);
+            prop_assert(
+                r.overlapped_s <= last * (1.0 + REL_EPS),
+                format!("depth {depth}: {} rose above {last}", r.overlapped_s),
+            )?;
+            prop_assert(
+                r.overlapped_s <= p.serial_s * (1.0 + REL_EPS),
+                format!("depth {depth}: overlapped {} > serial {}", r.overlapped_s, p.serial_s),
+            )?;
+            // Lower bound: no single-lane resource can be busier than the
+            // epoch is long (the sampler has `lanes` servers, so its busy
+            // time divides by the lane count).
+            for kind in ResourceKind::all() {
+                let lanes = if kind == ResourceKind::Sampler {
+                    p.sampler_lanes as f64
+                } else {
+                    1.0
+                };
+                let busy = r.busy.get(kind);
+                prop_assert(
+                    r.overlapped_s >= busy / lanes - REL_EPS * p.serial_s.max(1e-12),
+                    format!("depth {depth}: {kind:?} busy {busy} > epoch {}", r.overlapped_s),
+                )?;
+            }
+            last = r.overlapped_s;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn critical_path_durations_sum_to_the_makespan() {
+    check(64, |g| {
+        let n = g.usize_in(1, 24);
+        let demands = random_demands(g, n);
+        let mut p = OverlapParams {
+            sample_step_s: g.f64_in(0.0, 2e-3),
+            train_step_s: g.f64_in(0.0, 2e-3),
+            other_s: g.f64_in(0.0, 1e-3),
+            serial_s: 0.0,
+            prefetch_depth: g.u64_in(1, 8) as u32,
+            sampler_lanes: g.usize_in(1, 3),
+        };
+        p.serial_s = serial_of(&demands, &p) + p.other_s;
+        let r = schedule_epoch(&demands, &p);
+        let makespan = r.overlapped_s - p.other_s;
+        prop_assert(
+            (r.critical.total() - makespan).abs() <= REL_EPS * makespan.max(1e-12),
+            format!("critical {} != makespan {makespan}", r.critical.total()),
+        )
+    });
+}
+
+fn small_cfg(mode: AccessMode) -> RunConfig {
+    RunConfig {
+        dataset: "product".into(),
+        mode,
+        scale: 2048,
+        feature_budget: 8 << 20,
+        steps_per_epoch: 4,
+        skip_train: true,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn depth_zero_is_bit_exact_with_the_serial_breakdown_in_every_mode() {
+    for mode in AccessMode::all() {
+        let mut cfg = small_cfg(mode);
+        cfg.prefetch_depth = 0;
+        let r = Trainer::new(cfg).unwrap().run_epoch().unwrap();
+        let b = &r.breakdown_sim;
+        assert_eq!(
+            r.overlap.overlapped_s,
+            b.sample_s + b.transfer_s + b.train_s + b.other_s,
+            "{mode:?}: depth 0 must reproduce the additive serial sum bit-exactly"
+        );
+        assert_eq!(r.overlap.serial_s, r.overlap.overlapped_s, "{mode:?}");
+    }
+}
+
+#[test]
+fn every_mode_overlaps_within_bounds_at_depth_four() {
+    for mode in AccessMode::all() {
+        let mut cfg = small_cfg(mode);
+        cfg.prefetch_depth = 4;
+        let r = Trainer::new(cfg).unwrap().run_epoch().unwrap();
+        let o = &r.overlap;
+        assert!(
+            o.overlapped_s <= o.serial_s * (1.0 + REL_EPS),
+            "{mode:?}: overlapped {} > serial {}",
+            o.overlapped_s,
+            o.serial_s
+        );
+        for kind in ResourceKind::all() {
+            assert!(
+                o.overlapped_s >= o.busy.get(kind) - REL_EPS * o.serial_s,
+                "{mode:?}: {kind:?} busy {} exceeds the epoch {}",
+                o.busy.get(kind),
+                o.overlapped_s
+            );
+        }
+        assert!(o.critical.total() > 0.0, "{mode:?}: empty critical path");
+    }
+}
+
+#[test]
+fn trainer_epochs_are_monotone_in_prefetch_depth() {
+    // Through the full trainer stack (promotion off so the tier state is
+    // identical across runs): deeper windows never slow the epoch.
+    for mode in [AccessMode::CpuGather, AccessMode::UnifiedAligned, AccessMode::Nvme] {
+        let mut last = f64::INFINITY;
+        for depth in [0u32, 1, 2, 4, 8] {
+            let mut cfg = small_cfg(mode);
+            cfg.prefetch_depth = depth;
+            cfg.tier_promote = false;
+            let r = Trainer::new(cfg).unwrap().run_epoch().unwrap();
+            assert!(
+                r.overlap.overlapped_s <= last * (1.0 + REL_EPS),
+                "{mode:?} depth {depth}: {} rose above {last}",
+                r.overlap.overlapped_s
+            );
+            last = r.overlap.overlapped_s;
+        }
+    }
+}
+
+#[test]
+fn unified_aligned_overlaps_strictly_below_serial_at_depth_two() {
+    // The acceptance contract: depth >= 2 hides sampling under the
+    // zero-copy transfer, so the pipelined epoch lands strictly below the
+    // serial sum while the serial breakdown itself is untouched.
+    let mut cfg = small_cfg(AccessMode::UnifiedAligned);
+    cfg.prefetch_depth = 2;
+    let r = Trainer::new(cfg).unwrap().run_epoch().unwrap();
+    assert!(
+        r.overlap.overlapped_s < r.overlap.serial_s,
+        "depth 2 must overlap: {} !< {}",
+        r.overlap.overlapped_s,
+        r.overlap.serial_s
+    );
+    assert_eq!(r.overlap.serial_s, r.breakdown_sim.total_s());
+}
