@@ -1,0 +1,216 @@
+//! Dedup sweep — transfer reduction from minibatch gather deduplication
+//! (DESIGN.md §10; arXiv:2103.03330, GIDS arXiv:2306.16384).
+//!
+//! Acceptance shape (EXPERIMENTS.md documents the expected curves):
+//!
+//!  * on a degree-skewed trace, the planned (deduplicated) gather moves
+//!    strictly fewer link bytes than the naive duplicated gather in every
+//!    transfer-paying mode, and never costs more simulated time;
+//!  * gathered values are bitwise identical either way (scatter ∘
+//!    gather-unique is the identity on row values);
+//!  * the dedup ratio of real neighbor-sampled minibatches grows with
+//!    fanout — deeper/wider sampling overlaps more, so the traffic the
+//!    compaction removes grows with exactly the configurations that hurt
+//!    the naive path most.
+
+mod bench_common;
+
+use bench_common::{expect, scaled, skewed_trace, static_tier_cfg};
+use ptdirect::config::{AccessMode, ShardPolicy, SystemProfile};
+use ptdirect::coordinator::report::{ms, ratio, Table};
+use ptdirect::featurestore::{
+    degree_ranking, FeatureStore, NvmeStoreConfig, ShardConfig,
+};
+use ptdirect::graph::generator::{rmat, RmatParams};
+use ptdirect::sampler::{GatherPlan, NeighborSampler};
+use ptdirect::util::bytes::human_bytes;
+use ptdirect::util::rng::Rng;
+
+const NODES: usize = 20_000;
+const EDGES: usize = 200_000;
+/// 129 f32 = 516 B rows: misaligned, so the circular-shift path runs.
+const DIM: usize = 129;
+const CLASSES: u32 = 16;
+const BATCH_ROWS: usize = 1024;
+const SEED: u64 = 42;
+const HOT_FRAC: f64 = 0.1;
+
+/// Build one store per compared mode with shared placement knobs.
+fn build_store(mode: AccessMode, ranking: &[u32]) -> FeatureStore {
+    let sys = SystemProfile::system1();
+    match mode {
+        AccessMode::Tiered => FeatureStore::build_tiered(
+            NODES,
+            DIM,
+            CLASSES,
+            &sys,
+            SEED,
+            static_tier_cfg(HOT_FRAC, ranking.to_vec()),
+        ),
+        AccessMode::Sharded => FeatureStore::build_sharded(
+            NODES,
+            DIM,
+            CLASSES,
+            &sys,
+            SEED,
+            ShardConfig {
+                num_gpus: 4,
+                policy: ShardPolicy::Degree,
+                tier: static_tier_cfg(HOT_FRAC, ranking.to_vec()),
+            },
+        ),
+        AccessMode::Nvme => FeatureStore::build_nvme(
+            NODES,
+            DIM,
+            CLASSES,
+            &sys,
+            SEED,
+            NvmeStoreConfig {
+                host_frac: 0.5,
+                tier: static_tier_cfg(HOT_FRAC, ranking.to_vec()),
+            },
+        ),
+        _ => FeatureStore::build(NODES, DIM, CLASSES, mode, &sys, SEED),
+    }
+    .expect("store")
+}
+
+/// Replay a trace naively (duplicated stream); returns (seconds, bytes).
+fn replay_naive(store: &FeatureStore, trace: &[Vec<u32>]) -> (f64, u64) {
+    let (mut time, mut bytes) = (0.0, 0u64);
+    for batch in trace {
+        let (_, cost) = store.gather(batch).expect("gather");
+        time += cost.time_s;
+        bytes += cost.bytes_on_link;
+    }
+    (time, bytes)
+}
+
+/// Replay a trace through per-batch [`GatherPlan`]s; returns
+/// (seconds, bytes, requested rows, unique rows).
+fn replay_planned(store: &FeatureStore, trace: &[Vec<u32>]) -> (f64, u64, u64, u64) {
+    let (mut time, mut bytes) = (0.0, 0u64);
+    let (mut requested, mut unique) = (0u64, 0u64);
+    let mut out = Vec::new();
+    for batch in trace {
+        let plan = GatherPlan::build(batch);
+        out.resize(plan.requested_rows() * DIM, 0.0f32);
+        let cost = store.gather_planned(&plan, &mut out).expect("planned gather");
+        time += cost.time_s;
+        bytes += cost.bytes_on_link;
+        requested += plan.requested_rows() as u64;
+        unique += plan.unique_rows() as u64;
+    }
+    (time, bytes, requested, unique)
+}
+
+fn main() {
+    let batches = scaled(64usize, 8);
+    let graph = rmat(NODES, EDGES, RmatParams::default(), 0x71E5).expect("graph");
+    let mut rng = Rng::new(0x5EEA);
+    let trace = skewed_trace(&graph, &mut rng, batches, BATCH_ROWS);
+    let ranking = degree_ranking(&graph);
+
+    // ---- per-mode on/off comparison ----
+    let modes = [
+        AccessMode::CpuGather,
+        AccessMode::UnifiedNaive,
+        AccessMode::UnifiedAligned,
+        AccessMode::Tiered,
+        AccessMode::Sharded,
+        AccessMode::Nvme,
+    ];
+    let mut t = Table::new(
+        &format!(
+            "Dedup sweep — {batches} x {BATCH_ROWS}-row degree-skewed gathers, \
+             {NODES} x {DIM} f32 table (System1)"
+        ),
+        &[
+            "mode", "requested", "unique", "ratio", "naive B", "dedup B", "B saved",
+            "naive ms", "dedup ms", "speedup",
+        ],
+    );
+    let mut all_bytes_strict = true;
+    let mut all_time_sane = true;
+    for &mode in &modes {
+        let (naive_s, naive_b) = replay_naive(&build_store(mode, &ranking), &trace);
+        let (dedup_s, dedup_b, req, uniq) =
+            replay_planned(&build_store(mode, &ranking), &trace);
+        all_bytes_strict &= dedup_b < naive_b;
+        all_time_sane &= dedup_s <= naive_s + 1e-15;
+        t.row(&[
+            mode.label().into(),
+            req.to_string(),
+            uniq.to_string(),
+            ratio(req as f64 / uniq.max(1) as f64),
+            human_bytes(naive_b),
+            human_bytes(dedup_b),
+            human_bytes(naive_b.saturating_sub(dedup_b)),
+            ms(naive_s),
+            ms(dedup_s),
+            ratio(naive_s / dedup_s.max(1e-12)),
+        ]);
+    }
+    t.print();
+    expect(
+        all_bytes_strict,
+        "dedup strictly reduces link bytes in every transfer-paying mode",
+    );
+    expect(all_time_sane, "dedup never increases simulated transfer time");
+
+    // ---- numerics: scatter ∘ gather-unique == naive gather ----
+    let probe = &trace[0];
+    let st = build_store(AccessMode::UnifiedAligned, &ranking);
+    let (naive_vals, _) = st.gather(probe).expect("gather");
+    let plan = GatherPlan::build(probe);
+    let mut planned_vals = vec![0.0f32; plan.requested_rows() * DIM];
+    build_store(AccessMode::UnifiedAligned, &ranking)
+        .gather_planned(&plan, &mut planned_vals)
+        .expect("planned gather");
+    expect(
+        planned_vals == naive_vals,
+        "planned gather bitwise identical to the naive gather",
+    );
+
+    // ---- dedup ratio vs fanout on real neighbor-sampled batches ----
+    let mut t = Table::new(
+        "Dedup ratio vs fanout — 512-root minibatches on the R-MAT graph",
+        &["fanouts", "requested/batch", "unique/batch", "ratio"],
+    );
+    let n_batches = scaled(8usize, 2);
+    let mut ratios = Vec::new();
+    for fanout in [3usize, 5, 10, 15] {
+        let sampler = NeighborSampler::new(&graph, &[fanout, fanout], CLASSES);
+        let mut srng = Rng::new(0xFA0);
+        let (mut req, mut uniq) = (0u64, 0u64);
+        for b in 0..n_batches {
+            let seeds: Vec<u32> =
+                (0..512u32).map(|k| (b as u32 * 512 + k * 7) % NODES as u32).collect();
+            let mb = sampler.sample(&seeds, &mut srng);
+            let plan = mb.compact();
+            req += plan.requested_rows() as u64;
+            uniq += plan.unique_rows() as u64;
+        }
+        let r = req as f64 / uniq.max(1) as f64;
+        t.row(&[
+            format!("[{fanout}, {fanout}]"),
+            (req / n_batches as u64).to_string(),
+            (uniq / n_batches as u64).to_string(),
+            ratio(r),
+        ]);
+        ratios.push(r);
+    }
+    t.print();
+    expect(
+        ratios.iter().all(|&r| r >= 1.0),
+        "dedup ratio >= 1 at every fanout",
+    );
+    expect(
+        ratios.windows(2).all(|w| w[1] >= w[0] - 1e-9),
+        "dedup ratio grows with fanout (overlap compounds)",
+    );
+    expect(
+        *ratios.last().unwrap() > 1.5,
+        "wide fanouts produce substantial duplication on a skewed graph",
+    );
+}

@@ -75,6 +75,9 @@ fn main() {
             feature_budget: 96 << 20,
             skip_train: true,
             seed: 0xF03,
+            // Paper-calibrated bands: DGL's loader had no minibatch
+            // gather dedup, so pin the legacy duplicated stream.
+            dedup: false,
             ..RunConfig::default()
         };
         let mut trainer = Trainer::new(cfg).expect("trainer");

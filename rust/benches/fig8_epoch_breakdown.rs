@@ -44,6 +44,10 @@ fn main() {
                 feature_budget: 96 << 20,
                 skip_train: true, // simulated breakdown; e2e runs cover PJRT
                 seed: 0xF18,
+                // The paper's testbed had no minibatch gather dedup; pin
+                // the legacy duplicated stream so the Fig. 8 bands stay
+                // calibrated (dedup_sweep covers the dedup-on story).
+                dedup: false,
                 ..RunConfig::default()
             };
             let mut epochs = Vec::new();

@@ -32,6 +32,9 @@ fn main() {
                 feature_budget: 96 << 20,
                 skip_train: true,
                 seed: 0xF19,
+                // Paper-calibrated bands: the Fig. 9 testbed had no
+                // minibatch gather dedup (see fig8_epoch_breakdown).
+                dedup: false,
                 ..RunConfig::default()
             };
             let mut reports = Vec::new();

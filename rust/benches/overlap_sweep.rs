@@ -42,6 +42,10 @@ fn mode_cfg(mode: AccessMode, steps: u32) -> RunConfig {
         num_gpus: if mode == AccessMode::Sharded { 4 } else { 1 },
         shard_policy: ShardPolicy::Degree,
         host_frac: 0.5,
+        // The paper's ~1.6x pipelined-speedup band predates the gather
+        // dedup; pin the legacy stream so the depth-sweep comparisons
+        // stay calibrated (dedup_sweep covers the dedup-on story).
+        dedup: false,
         ..RunConfig::default()
     }
 }

@@ -175,6 +175,23 @@ pub fn run_config_from(args: &Args) -> Result<RunConfig> {
     if args.flag("no-overlap") {
         cfg.no_overlap = true;
     }
+    // `--dedup` re-enables after a TOML `dedup = false`; `--no-dedup`
+    // wins when both are given (the regression-anchor escape hatch).
+    if args.flag("dedup") {
+        cfg.dedup = true;
+    }
+    if args.flag("no-dedup") {
+        cfg.dedup = false;
+    }
+    if let Some(c) = args.get_u64("classes")? {
+        // Checked conversion only; the [1, 2^20] window (and the
+        // modulo-by-zero rejection of 0) lives once in
+        // `RunConfig::validate`, which runs below.
+        cfg.classes = Some(
+            u32::try_from(c)
+                .map_err(|_| Error::Config(format!("--classes {c} out of range")))?,
+        );
+    }
     if let Some(q) = args.get_u64("queue-depth")? {
         // Checked conversion; the [1, 65536] window is enforced by
         // `RunConfig::validate`, so absurd values error instead of
@@ -214,7 +231,21 @@ COMMON OPTIONS:
   --system system1|system2|system3              (default system1)
   --backend auto|pjrt|native                    (default auto)
   --epochs N --steps N --scale K --seed S
+  --classes C   override the preset's synthetic label count (>= 1)
   --config run.toml --artifacts DIR --skip-train
+
+GATHER DEDUPLICATION (all modes):
+  Each mini-batch's requested node set is compacted to its unique rows
+  before the feature gather: every store fetches each distinct row once
+  and a cheap device-side scatter rebuilds the requested layout, so the
+  transfer (PCIe/NVLink/NVMe alike) shrinks by the batch's duplication
+  factor while losses stay bitwise identical.  On by default.
+  --dedup      enable minibatch gather deduplication (default)
+  --no-dedup   fetch the duplicated stream as-is (bit-exact legacy
+               accounting — the regression anchor)
+  Per-epoch reporting gains a dedup line: requested vs unique rows, the
+  dedup ratio, and the useful payload saved (an upper bound on link-byte
+  savings: duplicates a hot tier served never crossed a link anyway).
 
 TIERED ACCESS MODE (--mode tiered):
   A degree-ranked hot set of feature rows is pinned in (simulated) GPU
@@ -333,6 +364,18 @@ fn cmd_train(args: &Args) -> Result<()> {
             r.power.watts,
             pct(r.power.cpu_util),
         );
+        if r.dedup.enabled {
+            // "payload saved" is the requested-row reduction in useful
+            // bytes — an upper bound on link-byte savings (duplicates
+            // served by a hot tier never crossed a link to begin with).
+            println!(
+                "  dedup: {} requested -> {} unique rows ({}), {} useful payload saved",
+                r.dedup.requested_rows,
+                r.dedup.unique_rows,
+                ratio(r.dedup.ratio()),
+                human_bytes(r.dedup.bytes_saved),
+            );
+        }
         if let Some(tier) = &r.tier {
             println!(
                 "  tier: hit rate {} ({} hits / {} misses), hot {} / cap {}, \
@@ -750,6 +793,50 @@ mod tests {
         assert!(HELP.contains("--queue-depth"));
         assert!(HELP.contains("--sampler-workers"));
         assert!(HELP.contains("critical path"));
+    }
+
+    #[test]
+    fn dedup_cli_flags() {
+        let cfg = run_config_from(&Args::parse(&sv(&["train"])).unwrap()).unwrap();
+        assert!(cfg.dedup, "dedup must default on");
+        let a = Args::parse(&sv(&["train", "--no-dedup"])).unwrap();
+        assert!(!run_config_from(&a).unwrap().dedup);
+        // --no-dedup wins over --dedup (the regression-anchor escape hatch).
+        let a = Args::parse(&sv(&["train", "--dedup", "--no-dedup"])).unwrap();
+        assert!(!run_config_from(&a).unwrap().dedup);
+    }
+
+    #[test]
+    fn dedup_cli_overrides_toml() {
+        let dir = std::env::temp_dir()
+            .join(format!("ptdirect_dedup_override_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.toml");
+        std::fs::write(&path, "[run]\ndedup = false\n").unwrap();
+        let a =
+            Args::parse(&sv(&["train", "--config", path.to_str().unwrap(), "--dedup"])).unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(cfg.dedup, "--dedup must re-enable after TOML dedup=false");
+    }
+
+    #[test]
+    fn classes_cli_validates() {
+        let a = Args::parse(&sv(&["train", "--classes", "12"])).unwrap();
+        assert_eq!(run_config_from(&a).unwrap().classes, Some(12));
+        let a = Args::parse(&sv(&["train", "--classes", "0"])).unwrap();
+        let err = run_config_from(&a).unwrap_err();
+        assert!(err.to_string().contains("classes must be >= 1"), "{err}");
+        // 2^32 must not wrap into the valid window via `as` truncation.
+        let a = Args::parse(&sv(&["train", "--classes", "4294967296"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+    }
+
+    #[test]
+    fn help_documents_dedup_and_classes() {
+        assert!(HELP.contains("--dedup"));
+        assert!(HELP.contains("--no-dedup"));
+        assert!(HELP.contains("--classes"));
     }
 
     #[test]

@@ -244,6 +244,19 @@ pub struct RunConfig {
     /// `prefetch_depth` — the `--no-overlap` escape hatch; equivalent to
     /// depth 0.
     pub no_overlap: bool,
+    /// Deduplicate each mini-batch's requested node set before the
+    /// feature gather (`GatherPlan`, DESIGN.md §10): every access mode
+    /// fetches each distinct row once and scatters it back to the
+    /// requested slots, so transfer costs shrink by the batch's
+    /// duplication factor while numerics stay bitwise identical.  On by
+    /// default; `--no-dedup` restores the duplicated stream bit-exactly
+    /// (the regression anchor).
+    pub dedup: bool,
+    /// Override the dataset preset's synthetic-label class count
+    /// (`None` keeps the preset's Table 4 value).  Labels are computed
+    /// `node_hash % classes`, so zero is rejected at parse time instead
+    /// of panicking deep in the epoch loop.
+    pub classes: Option<u32>,
 }
 
 impl Default for RunConfig {
@@ -277,6 +290,8 @@ impl Default for RunConfig {
             nvme_queue_depth: None,
             prefetch_depth: 2,
             no_overlap: false,
+            dedup: true,
+            classes: None,
         }
     }
 }
@@ -420,6 +435,17 @@ impl RunConfig {
         if let Some(v) = doc.get_bool("run.no_overlap") {
             cfg.no_overlap = v;
         }
+        if let Some(v) = doc.get_bool("run.dedup") {
+            cfg.dedup = v;
+        }
+        if let Some(v) = doc.get_i64("run.classes") {
+            // Checked conversion catches negatives and 2^32 wraps; the
+            // [1, 2^20] window (and the modulo-by-zero rejection of 0)
+            // lives once in `validate`, which every parse path runs.
+            cfg.classes = Some(u32::try_from(v).map_err(|_| {
+                Error::Config(format!("classes {v} out of range"))
+            })?);
+        }
         cfg.apply_link_overrides();
         cfg.validate()?;
         Ok(cfg)
@@ -515,6 +541,18 @@ impl RunConfig {
                 "prefetch_depth must be in [0, 1024], got {}",
                 self.prefetch_depth
             )));
+        }
+        if let Some(c) = self.classes {
+            // Zero is a modulo-by-zero panic in `label_of`; the upper
+            // bound keeps the native trainer's `dim x classes` weight
+            // table allocatable.  This is the single home of the rule —
+            // the CLI/TOML parse sites only do checked int conversion.
+            if !(1u32..=1 << 20).contains(&c) {
+                return Err(Error::Config(format!(
+                    "classes must be >= 1 and <= 1048576 (labels are node_hash % classes), \
+                     got {c}"
+                )));
+            }
         }
         Ok(())
     }
@@ -696,6 +734,31 @@ no_overlap = true
         assert!(RunConfig::from_toml("[run]\nprefetch_depth = 4096").is_err());
         // 2^32 + 2 must not wrap into the valid window via `as` truncation.
         assert!(RunConfig::from_toml("[run]\nprefetch_depth = 4294967298").is_err());
+    }
+
+    #[test]
+    fn dedup_knob_parses_and_defaults_on() {
+        assert!(RunConfig::default().dedup, "dedup must default on");
+        let cfg = RunConfig::from_toml("[run]\ndedup = false").unwrap();
+        assert!(!cfg.dedup);
+        let cfg = RunConfig::from_toml("[run]\ndedup = true").unwrap();
+        assert!(cfg.dedup);
+    }
+
+    #[test]
+    fn classes_knob_parses_and_rejects_zero_at_parse_time() {
+        assert_eq!(RunConfig::default().classes, None);
+        let cfg = RunConfig::from_toml("[run]\nclasses = 12").unwrap();
+        assert_eq!(cfg.classes, Some(12));
+
+        // The modulo-by-zero satellite: `classes = 0` must be a config
+        // error with a clear message, not a panic deep in the epoch loop.
+        let err = RunConfig::from_toml("[run]\nclasses = 0").unwrap_err();
+        assert!(err.to_string().contains("classes must be >= 1"), "{err}");
+        assert!(RunConfig::from_toml("[run]\nclasses = -3").is_err());
+        // 2^32 must not wrap into the valid window via `as` truncation.
+        assert!(RunConfig::from_toml("[run]\nclasses = 4294967296").is_err());
+        assert!(RunConfig::from_toml("[run]\nclasses = 2000000").is_err());
     }
 
     #[test]

@@ -48,8 +48,9 @@ pub struct InferenceRunner {
 impl InferenceRunner {
     /// Build the stack and load `{arch}_{dataset}_infer`.
     pub fn new(cfg: RunConfig) -> Result<InferenceRunner> {
-        let preset = DatasetPreset::by_abbv(&cfg.dataset)
+        let mut preset = DatasetPreset::by_abbv(&cfg.dataset)
             .ok_or_else(|| Error::Config(format!("unknown dataset `{}`", cfg.dataset)))?;
+        crate::coordinator::trainer::apply_classes_override(&cfg, &mut preset);
         let scale = preset.scale_for_budget(cfg.scale, cfg.feature_budget);
         let graph = preset.build_graph(scale, cfg.seed)?;
         // Shares the trainer's store construction so `Tiered` inference
@@ -60,6 +61,7 @@ impl InferenceRunner {
         if spec.kind != ArtifactKind::Infer {
             return Err(Error::Runtime(format!("{} is not an infer artifact", spec.name)));
         }
+        crate::coordinator::trainer::check_artifact_classes(&cfg, spec, preset.classes)?;
         let runtime = Runtime::cpu()?;
         let artifact = runtime.load(Path::new(&cfg.artifacts_dir), spec)?;
         // Glorot params (a real deployment would load a checkpoint; the
@@ -107,7 +109,13 @@ impl InferenceRunner {
                 .map(|k| ((b as usize * self.cfg.batch + k) % n_nodes) as u32)
                 .collect();
             let mb = sampler.sample(&seeds, &mut rng);
-            let cost = self.store.gather_into(&mb.src_nodes, &mut x0)?;
+            // Serving uses the same dedup plan as training: fetch each
+            // distinct row once, scatter back (bitwise-identical x0).
+            let cost = if self.cfg.dedup {
+                self.store.gather_planned(&mb.compact(), &mut x0)?
+            } else {
+                self.store.gather_into(&mb.src_nodes, &mut x0)?
+            };
 
             // assemble literals: params, x0, nbrs, masks
             let x0_lit = literal_f32(&x0, &[spec.layer_sizes[0], spec.in_dim])?;

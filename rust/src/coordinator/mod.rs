@@ -18,4 +18,4 @@ pub use power::{epoch_power, PowerReport};
 pub use report::Table;
 pub use schedule::{schedule_epoch, OverlapParams, OverlapReport};
 pub use simclock::{ResourceBusy, ResourceKind, SimResource};
-pub use trainer::{Breakdown, EpochReport, Trainer};
+pub use trainer::{Breakdown, DedupReport, EpochReport, Trainer};

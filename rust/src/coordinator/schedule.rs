@@ -18,6 +18,12 @@
 //! scheduled onto the stateful [`SimResource`]s of `simclock`, under a
 //! `prefetch_depth`-bounded window: `sample(i)` may not start before
 //! `train(i - depth)` has finished (at most `depth` steps in flight).
+//! The per-step [`ResourceDemand`]s arrive already shaped by the gather
+//! deduplication (DESIGN.md §10): with `--dedup` (the default) every
+//! link occupancy reflects the compacted unique-row stream, so the
+//! engine pipelines the reduced traffic; `--no-dedup` feeds it the
+//! legacy duplicated-stream demands.  Either way the depth-0 anchor
+//! below returns that run's own serial sum bit-exactly.
 //! Per-stage durations are exactly the ones the serial accounting uses:
 //! the transfer window is [`TransferCost::time_s`] split via
 //! [`ResourceDemand`] into its CPU share (a CPU event), a chain-only GPU

@@ -32,7 +32,7 @@ use crate::interconnect::ResourceDemand;
 use crate::pipeline::executor::{run_pipeline, PipelineReport};
 use crate::runtime::native::{self, NativeTrainState};
 use crate::runtime::state::{StepBatch, TrainState};
-use crate::runtime::{ArtifactKind, LoadedArtifact, Manifest, Runtime};
+use crate::runtime::{ArtifactKind, ArtifactSpec, LoadedArtifact, Manifest, Runtime};
 use crate::graph::{Csr, DatasetPreset};
 use crate::sampler::NeighborSampler;
 use crate::util::rng::Rng;
@@ -54,6 +54,40 @@ pub struct Breakdown {
 impl Breakdown {
     pub fn total_s(&self) -> f64 {
         self.sample_s + self.transfer_s + self.train_s + self.other_s
+    }
+}
+
+/// Per-epoch minibatch-deduplication accounting (DESIGN.md §10): how many
+/// feature rows the sampled batches *requested* versus how many the
+/// [`GatherPlan`](crate::sampler::GatherPlan) actually fetched, and the
+/// useful transfer bytes the compaction saved.  With `--no-dedup` the
+/// plan is skipped entirely (`enabled = false`, unique == requested,
+/// nothing saved).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DedupReport {
+    /// Whether gather deduplication ran this epoch (`RunConfig::dedup`).
+    pub enabled: bool,
+    /// Feature rows the sampled batches requested (duplicates included).
+    pub requested_rows: u64,
+    /// Distinct rows actually fetched after per-batch compaction.
+    pub unique_rows: u64,
+    /// Useful payload bytes the compaction eliminated
+    /// (`(requested - unique) x row_bytes`).  An *upper bound* on the
+    /// link-byte savings: duplicate rows a hot tier would have served
+    /// never crossed a link in the first place (and `GpuResident` moves
+    /// no link bytes at all) — compare `EpochReport::bytes_on_link`
+    /// across dedup on/off for the exact link delta.
+    pub bytes_saved: u64,
+}
+
+impl DedupReport {
+    /// Requested over unique rows (≥ 1; 1.0 on an empty epoch).
+    pub fn ratio(&self) -> f64 {
+        if self.unique_rows == 0 {
+            1.0
+        } else {
+            self.requested_rows as f64 / self.unique_rows as f64
+        }
     }
 }
 
@@ -89,6 +123,9 @@ pub struct EpochReport {
     /// serial vs pipelined epoch seconds, per-resource busy time, and
     /// critical-path attribution (DESIGN.md §9).
     pub overlap: OverlapReport,
+    /// Minibatch gather-deduplication accounting (DESIGN.md §10):
+    /// requested vs unique rows and the transfer bytes saved.
+    pub dedup: DedupReport,
 }
 
 impl EpochReport {
@@ -154,6 +191,35 @@ pub(crate) fn build_store(
     }
 }
 
+/// Apply a run's `--classes` override onto its dataset preset — shared
+/// by the trainer and the inference runner so the semantics cannot
+/// drift.  `RunConfig::validate` already rejected values outside
+/// `[1, 2^20]` (labels are `node_hash % classes`).
+pub(crate) fn apply_classes_override(cfg: &RunConfig, preset: &mut DatasetPreset) {
+    if let Some(c) = cfg.classes {
+        preset.classes = c;
+    }
+}
+
+/// Reject a PJRT artifact whose compiled class count diverges from an
+/// overridden label count: labels would be hashed modulo one value while
+/// the compiled graph computes loss over another — the run would finish
+/// with silently wrong numbers.
+pub(crate) fn check_artifact_classes(
+    cfg: &RunConfig,
+    spec: &ArtifactSpec,
+    classes: u32,
+) -> Result<()> {
+    if cfg.classes.is_some() && spec.classes != classes as usize {
+        return Err(Error::Config(format!(
+            "artifact {} compiled for {} classes; --classes overrode the run to {} \
+             (drop the override or re-run `make artifacts`)",
+            spec.name, spec.classes, classes
+        )));
+    }
+    Ok(())
+}
+
 /// End-to-end trainer over one (dataset, arch, mode, system) configuration.
 pub struct Trainer {
     pub cfg: RunConfig,
@@ -173,8 +239,9 @@ impl Trainer {
     /// is not loaded (pipeline/transfer accounting only — used by benches
     /// that sweep all 12 variants without paying 12 compilations).
     pub fn new(cfg: RunConfig) -> Result<Trainer> {
-        let preset = DatasetPreset::by_abbv(&cfg.dataset)
+        let mut preset = DatasetPreset::by_abbv(&cfg.dataset)
             .ok_or_else(|| Error::Config(format!("unknown dataset `{}`", cfg.dataset)))?;
+        apply_classes_override(&cfg, &mut preset);
         let scale = preset.scale_for_budget(cfg.scale, cfg.feature_budget);
         if scale != cfg.scale {
             log::info!(
@@ -193,6 +260,18 @@ impl Trainer {
             graph.num_edges(),
             t.elapsed_s()
         );
+        if cfg.batch > graph.num_nodes() {
+            // `epoch_seeds` drops the remainder (DGL drop_last), so an
+            // oversized batch silently yields *zero* batches and every
+            // per-epoch average would divide by an empty step list.
+            return Err(Error::Config(format!(
+                "batch {} exceeds the graph's {} nodes (dataset {} at scale {scale}): every \
+                 epoch would yield zero batches — lower --batch or --scale",
+                cfg.batch,
+                graph.num_nodes(),
+                preset.abbv
+            )));
+        }
         let store = build_store(&cfg, &graph, &preset)?;
 
         let (artifact, state, compute, native) = if cfg.skip_train {
@@ -240,6 +319,7 @@ impl Trainer {
                         spec.in_dim, preset.feat_dim
                     )));
                 }
+                check_artifact_classes(&cfg, spec, preset.classes)?;
                 let runtime = Runtime::cpu()?;
                 let loaded = runtime.load(Path::new(&cfg.artifacts_dir), spec)?;
                 let state = TrainState::init(spec, cfg.seed ^ 0x9A23)?;
@@ -316,6 +396,9 @@ impl Trainer {
 
         let mut report = EpochReport::default();
         let dim = self.store.dim();
+        let dedup_on = self.cfg.dedup;
+        let row_bytes = dim as u64 * 4;
+        report.dedup.enabled = dedup_on;
         let tier_epoch_start = self.store.tier_stats();
         let shard_epoch_start = self.store.shard_stats();
         let nvme_epoch_start = self.store.nvme_stats();
@@ -353,14 +436,30 @@ impl Trainer {
                 },
                 // --- gather + simulated transfer costing (worker thread;
                 // FIFO order keeps tier/shard/storage cache accounting
-                // step-granular like the serial loop) ---
+                // step-granular like the serial loop).  With dedup on,
+                // the batch is compacted to its unique node set first:
+                // every store prices the deduplicated stream and a
+                // scatter rebuilds the requested layout bitwise
+                // identically (DESIGN.md §10) ---
                 |mb| {
                     let mut x0 = vec![0f32; mb.gather_rows() * dim];
-                    let cost = store.gather_into(&mb.src_nodes, &mut x0)?;
-                    Ok((mb, x0, cost))
+                    if dedup_on {
+                        let plan = mb.compact();
+                        let cost = store.gather_planned(&plan, &mut x0)?;
+                        let unique = plan.unique_rows() as u64;
+                        Ok((mb, x0, cost, unique))
+                    } else {
+                        let cost = store.gather_into(&mb.src_nodes, &mut x0)?;
+                        let unique = mb.gather_rows() as u64;
+                        Ok((mb, x0, cost, unique))
+                    }
                 },
                 // --- train (calling thread, FIFO) ---
-                |(mb, x0, cost)| {
+                |(mb, x0, cost, unique_rows)| {
+                    let requested_rows = mb.gather_rows() as u64;
+                    report.dedup.requested_rows += requested_rows;
+                    report.dedup.unique_rows += unique_rows;
+                    report.dedup.bytes_saved += (requested_rows - unique_rows) * row_bytes;
                     report.breakdown_sim.transfer_s += cost.time_s;
                     report.cpu_gather_s += cost.cpu_time_s;
                     report.bytes_on_link += cost.bytes_on_link;
@@ -503,6 +602,64 @@ mod tests {
             steps_per_epoch: 3,
             skip_train: true, // unit tests stay PJRT-free; integration covers it
             ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn dedup_cuts_transfer_without_changing_the_request_count() {
+        // Same config, dedup on vs off: the epoch requests the same rows,
+        // fetches strictly fewer, and pays strictly fewer link bytes.
+        let mut on = Trainer::new(small_cfg(AccessMode::UnifiedAligned)).unwrap();
+        let r_on = on.run_epoch().unwrap();
+        let mut cfg = small_cfg(AccessMode::UnifiedAligned);
+        cfg.dedup = false;
+        let mut off = Trainer::new(cfg).unwrap();
+        let r_off = off.run_epoch().unwrap();
+
+        assert!(r_on.dedup.enabled);
+        assert!(!r_off.dedup.enabled);
+        assert_eq!(r_on.dedup.requested_rows, r_off.dedup.requested_rows);
+        assert_eq!(r_off.dedup.unique_rows, r_off.dedup.requested_rows);
+        assert_eq!(r_off.dedup.bytes_saved, 0);
+        assert!(
+            r_on.dedup.unique_rows < r_on.dedup.requested_rows,
+            "overlapping neighborhoods must deduplicate"
+        );
+        assert!(r_on.dedup.ratio() > 1.0);
+        assert!(r_on.dedup.bytes_saved > 0);
+        assert!(r_on.bytes_on_link < r_off.bytes_on_link);
+        assert!(r_on.breakdown_sim.transfer_s < r_off.breakdown_sim.transfer_s);
+    }
+
+    #[test]
+    fn oversized_batch_is_rejected_at_build_time() {
+        // `epoch_seeds` would silently yield zero batches (drop_last) and
+        // the per-epoch averages would divide by an empty step list.
+        let mut cfg = small_cfg(AccessMode::UnifiedAligned);
+        cfg.batch = 1 << 20; // far beyond the scaled graph's node count
+        match Trainer::new(cfg) {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("zero batches"), "unhelpful message: {msg}")
+            }
+            Err(e) => panic!("expected Config error, got {e}"),
+            Ok(_) => panic!("oversized batch accepted"),
+        }
+    }
+
+    #[test]
+    fn classes_override_threads_through_to_labels() {
+        let mut cfg = small_cfg(AccessMode::UnifiedAligned);
+        cfg.classes = Some(3);
+        cfg.skip_train = false;
+        cfg.backend = Backend::Native;
+        cfg.artifacts_dir = "definitely/not/a/real/dir".into();
+        let mut t = Trainer::new(cfg).unwrap();
+        let r = t.run_epoch().unwrap();
+        assert_eq!(r.losses.len(), 3);
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        for node in 0..50u32 {
+            let l = t.store().label(node);
+            assert!((0..3).contains(&l), "label {l} outside --classes 3");
         }
     }
 

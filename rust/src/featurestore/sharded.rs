@@ -356,6 +356,13 @@ impl ShardedStore {
     /// promotions are step-granular exactly like the single-GPU tiered
     /// store.  Step time is the max over GPUs; per-GPU occupancy lands in
     /// the accumulators behind [`ShardedStore::stats`].
+    ///
+    /// Under the default gather deduplication (DESIGN.md §10) `idx` is
+    /// the batch's compacted unique stream: the per-GPU sub-batches, the
+    /// per-owner peer streams, and the host fallback then all price
+    /// distinct rows only — duplicate hub rows stop multiplying NVLink
+    /// and PCIe traffic.  `--no-dedup` hands in the raw duplicated
+    /// stream, as before.
     pub fn gather_cost(
         &mut self,
         idx: &[u32],
@@ -610,6 +617,28 @@ mod tests {
         assert_eq!(totals.local_rows, 2);
         assert_eq!(totals.peer_rows, 4);
         assert_eq!(totals.host_rows, 0);
+    }
+
+    #[test]
+    fn compacted_stream_cuts_peer_and_host_traffic() {
+        // A duplicated batch versus its compaction against identical
+        // fresh stores: the unique stream must move strictly fewer bytes
+        // across NVLink + host links while serving the same distinct rows.
+        let duplicated: Vec<u32> = (0..600u32).map(|i| i * 7 % 150).collect();
+        let plan = crate::sampler::compact::GatherPlan::build(&duplicated);
+        let cfg = shard_cfg(4, ShardPolicy::Degree, 0.3);
+        let mut dup_store = ShardedStore::new(1000, 64, &sys(), &cfg);
+        let mut ded_store = ShardedStore::new(1000, 64, &sys(), &cfg);
+        let c_dup = dup_store.gather_cost(&duplicated, 16, &sys());
+        let c_ded = ded_store.gather_cost(plan.unique_nodes(), 16, &sys());
+        assert!(
+            c_ded.bytes_on_link < c_dup.bytes_on_link,
+            "dedup {} !< naive {}",
+            c_ded.bytes_on_link,
+            c_dup.bytes_on_link
+        );
+        assert!(c_ded.time_s <= c_dup.time_s);
+        assert_eq!(ded_store.stats().totals().rows_served(), 150);
     }
 
     #[test]

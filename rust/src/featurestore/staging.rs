@@ -5,7 +5,7 @@
 //! step is expensive, so real frameworks reuse them; this pool does the
 //! same and exposes reuse statistics for the ablation bench.
 
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 
 /// Reusable staging buffers keyed by capacity.
 #[derive(Debug, Default)]
@@ -25,10 +25,18 @@ impl StagingPool {
         Self::default()
     }
 
+    /// Poison-recovering lock, matching the feature store's guarantee: a
+    /// panicked stage thread must not turn every later baseline gather
+    /// into an `.unwrap()` cascade (the pool state — spare buffers and
+    /// counters — is valid at every suspension point).
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Take a buffer with at least `len` elements (zero-length tail beyond
     /// `len` is unspecified; callers overwrite).
     pub fn take(&self, len: usize) -> Vec<f32> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock();
         if let Some(pos) = inner.buffers.iter().position(|b| b.capacity() >= len) {
             let mut buf = inner.buffers.swap_remove(pos);
             buf.resize(len, 0.0);
@@ -41,7 +49,7 @@ impl StagingPool {
     }
 
     pub fn give(&self, buf: Vec<f32>) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock();
         // Bound the pool: keep at most 4 buffers (mirrors a small ring of
         // pinned buffers; unbounded pools would hide leaks).
         if inner.buffers.len() < 4 {
@@ -50,11 +58,11 @@ impl StagingPool {
     }
 
     pub fn hits(&self) -> u64 {
-        self.inner.lock().unwrap().hits
+        self.lock().hits
     }
 
     pub fn misses(&self) -> u64 {
-        self.inner.lock().unwrap().misses
+        self.lock().misses
     }
 }
 

@@ -1,6 +1,6 @@
 //! The unified feature store: one table, eight access designs.
 
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 
 use crate::config::{AccessMode, SystemProfile};
 use crate::device::warp::{count_requests, WarpModel};
@@ -31,6 +31,15 @@ pub struct FeatureStore {
 }
 
 impl FeatureStore {
+    /// Poison-recovering lock for the store's internal state: a panic in
+    /// a pipeline stage must degrade into a clean failed epoch, not an
+    /// `.unwrap()` cascade on the next stats call or gather — the guarded
+    /// values (counters and placement metadata) are valid at every
+    /// suspension point, so resuming past a poison is sound.
+    fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+        m.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Build a store of `rows` synthesized feature rows.
     ///
     /// `GpuResident` enforces the GPU memory capacity — requesting it for a
@@ -215,7 +224,7 @@ impl FeatureStore {
     }
 
     pub fn measured_gather_s(&self) -> f64 {
-        *self.measured_gather.lock().unwrap()
+        *Self::lock(&self.measured_gather)
     }
 
     /// Staging-pool reuse statistics (CpuGather mode; ablation D).
@@ -229,17 +238,17 @@ impl FeatureStore {
 
     /// Hot-tier counters/gauges (`Tiered` mode only).
     pub fn tier_stats(&self) -> Option<TierStats> {
-        self.tier.as_ref().map(|t| t.lock().unwrap().stats())
+        self.tier.as_ref().map(|t| Self::lock(t).stats())
     }
 
     /// Per-GPU shard counters/gauges (`Sharded` mode only).
     pub fn shard_stats(&self) -> Option<ShardStats> {
-        self.shard.as_ref().map(|s| s.lock().unwrap().stats())
+        self.shard.as_ref().map(|s| Self::lock(s).stats())
     }
 
     /// Three-tier storage counters/gauges (`Nvme` mode only).
     pub fn nvme_stats(&self) -> Option<NvmeStats> {
-        self.nvme.as_ref().map(|s| s.lock().unwrap().stats())
+        self.nvme.as_ref().map(|s| Self::lock(s).stats())
     }
 
     /// Simulated cost of a GPU zero-copy gather of `idx` over PCIe —
@@ -283,21 +292,21 @@ impl FeatureStore {
                 // ④ DMA lands the contiguous buffer in device memory
                 out.copy_from_slice(&staging);
                 self.staging.give(staging);
-                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
+                *Self::lock(&self.measured_gather) += timer.elapsed_s();
                 DmaEngine::new(&self.sys).cpu_gather_transfer(idx.len() as u64, row_bytes)
             }
             AccessMode::UnifiedNaive | AccessMode::UnifiedAligned => {
                 // GPU zero-copy: device fetches rows directly; no staging.
                 let timer = Timer::start();
                 crate::tensor::indexing::gather_rows_into(src, f, idx, out);
-                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
+                *Self::lock(&self.measured_gather) += timer.elapsed_s();
                 self.zero_copy_cost(idx, self.mode == AccessMode::UnifiedAligned)
             }
             AccessMode::Uvm => {
                 let timer = Timer::start();
                 crate::tensor::indexing::gather_rows_into(src, f, idx, out);
-                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
-                let mut uvm = self.uvm.as_ref().unwrap().lock().unwrap();
+                *Self::lock(&self.measured_gather) += timer.elapsed_s();
+                let mut uvm = Self::lock(self.uvm.as_ref().unwrap());
                 let mut c = uvm.access_rows(idx, row_bytes);
                 // after migration the GPU still runs the gather kernel;
                 // split.host_time_s stays launch-free (link occupancy).
@@ -307,7 +316,7 @@ impl FeatureStore {
             AccessMode::GpuResident => {
                 let timer = Timer::start();
                 crate::tensor::indexing::gather_rows_into(src, f, idx, out);
-                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
+                *Self::lock(&self.measured_gather) += timer.elapsed_s();
                 TransferCost {
                     time_s: self.sys.kernel_launch_s,
                     bytes_on_link: 0,
@@ -323,14 +332,9 @@ impl FeatureStore {
             AccessMode::Tiered => {
                 let timer = Timer::start();
                 crate::tensor::indexing::gather_rows_into(src, f, idx, out);
-                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
-                let cold = self
-                    .tier
-                    .as_ref()
-                    .expect("tiered store has a cache")
-                    .lock()
-                    .unwrap()
-                    .record(idx);
+                *Self::lock(&self.measured_gather) += timer.elapsed_s();
+                let tier = self.tier.as_ref().expect("tiered store has a cache");
+                let cold = Self::lock(tier).record(idx);
                 let useful = idx.len() as u64 * row_bytes;
                 if cold.is_empty() {
                     // Entire batch in the hot tier: a device-memory gather,
@@ -360,26 +364,55 @@ impl FeatureStore {
             AccessMode::Sharded => {
                 let timer = Timer::start();
                 crate::tensor::indexing::gather_rows_into(src, f, idx, out);
-                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
-                self.shard
-                    .as_ref()
-                    .expect("sharded store has placement")
-                    .lock()
-                    .unwrap()
+                *Self::lock(&self.measured_gather) += timer.elapsed_s();
+                Self::lock(self.shard.as_ref().expect("sharded store has placement"))
                     .gather_cost(idx, f as u64, &self.sys)
             }
             AccessMode::Nvme => {
                 let timer = Timer::start();
                 crate::tensor::indexing::gather_rows_into(src, f, idx, out);
-                *self.measured_gather.lock().unwrap() += timer.elapsed_s();
-                self.nvme
-                    .as_ref()
-                    .expect("nvme store has placement")
-                    .lock()
-                    .unwrap()
+                *Self::lock(&self.measured_gather) += timer.elapsed_s();
+                Self::lock(self.nvme.as_ref().expect("nvme store has placement"))
                     .gather_cost(idx, f as u64, &self.sys)
             }
         };
+        Ok(cost)
+    }
+
+    /// Gather through a [`GatherPlan`]: fetch each *distinct* requested
+    /// row once — so the whole cost machinery of this store's mode (warp
+    /// request coalescing, hot-tier hit accounting, per-shard peer
+    /// streams, NVMe block I/Os) prices the deduplicated id stream — then
+    /// scatter the unique rows back to the requested layout via the
+    /// plan's inverse map.
+    ///
+    /// `out` keeps the requested shape (`plan.requested_rows() * dim`)
+    /// and is bitwise identical to [`FeatureStore::gather_into`] on the
+    /// original duplicated stream; only the returned [`TransferCost`]
+    /// (and the mode's tier/shard/storage counters) shrink.  Stateful
+    /// tiers therefore count one hit *or* miss per distinct row per
+    /// batch, and LFU frequencies bump once per batch per row — the
+    /// `--no-dedup` path restores the per-occurrence accounting.
+    ///
+    /// [`GatherPlan`]: crate::sampler::compact::GatherPlan
+    pub fn gather_planned(
+        &self,
+        plan: &crate::sampler::compact::GatherPlan,
+        out: &mut [f32],
+    ) -> Result<TransferCost> {
+        let f = self.synth.dim;
+        if out.len() != plan.requested_rows() * f {
+            return Err(Error::Shape(format!(
+                "out len {} != {}x{f}",
+                out.len(),
+                plan.requested_rows()
+            )));
+        }
+        let mut uniq = vec![0f32; plan.unique_rows() * f];
+        let cost = self.gather_into(plan.unique_nodes(), &mut uniq)?;
+        let timer = Timer::start();
+        plan.scatter_rows(&uniq, f, out);
+        *Self::lock(&self.measured_gather) += timer.elapsed_s();
         Ok(cost)
     }
 
@@ -429,6 +462,100 @@ mod tests {
         let mut want = vec![0f32; 24];
         SyntheticFeatures::new(24, 8, 42).fill_row(7, &mut want);
         assert_eq!(vals, want);
+    }
+
+    #[test]
+    fn planned_gather_is_bitwise_identical_in_every_mode() {
+        // 300 slots over ~40 distinct rows: heavy duplication.
+        let idx: Vec<u32> = (0..300u32).map(|i| i * 17 % 40).collect();
+        let plan = crate::sampler::compact::GatherPlan::build(&idx);
+        for mode in AccessMode::all() {
+            let st = store(mode);
+            let (naive, _) = st.gather(&idx).unwrap();
+            let fresh = store(mode); // fresh tiers: same pre-gather state
+            let mut planned = vec![0f32; idx.len() * 24];
+            fresh.gather_planned(&plan, &mut planned).unwrap();
+            assert_eq!(planned, naive, "{mode:?} dedup changed numerics");
+        }
+    }
+
+    #[test]
+    fn planned_gather_costs_the_unique_stream() {
+        let idx: Vec<u32> = (0..300u32).map(|i| i * 17 % 40).collect();
+        let plan = crate::sampler::compact::GatherPlan::build(&idx);
+        for mode in AccessMode::all() {
+            let via_plan = {
+                let st = store(mode);
+                let mut out = vec![0f32; idx.len() * 24];
+                st.gather_planned(&plan, &mut out).unwrap()
+            };
+            let via_unique = store(mode).gather(plan.unique_nodes()).unwrap().1;
+            assert_eq!(via_plan.time_s, via_unique.time_s, "{mode:?}");
+            assert_eq!(via_plan.bytes_on_link, via_unique.bytes_on_link, "{mode:?}");
+            assert_eq!(via_plan.requests, via_unique.requests, "{mode:?}");
+            assert_eq!(via_plan.useful_bytes, via_unique.useful_bytes, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn planned_gather_strictly_cuts_duplicated_traffic() {
+        // The acceptance shape of the dedup PR, at the store level where
+        // the arithmetic is exact: a duplicated stream must cost strictly
+        // more link bytes than its compaction in every transfer-paying
+        // mode.
+        let idx: Vec<u32> = (0..300u32).map(|i| i * 17 % 40).collect();
+        let plan = crate::sampler::compact::GatherPlan::build(&idx);
+        for mode in [
+            AccessMode::CpuGather,
+            AccessMode::UnifiedNaive,
+            AccessMode::UnifiedAligned,
+            AccessMode::Tiered,
+            AccessMode::Sharded,
+            AccessMode::Nvme,
+        ] {
+            let naive = store(mode).gather(&idx).unwrap().1;
+            let planned = {
+                let st = store(mode);
+                let mut out = vec![0f32; idx.len() * 24];
+                st.gather_planned(&plan, &mut out).unwrap()
+            };
+            assert!(
+                planned.bytes_on_link < naive.bytes_on_link,
+                "{mode:?}: dedup {} !< naive {}",
+                planned.bytes_on_link,
+                naive.bytes_on_link
+            );
+            assert!(planned.useful_bytes < naive.useful_bytes, "{mode:?}");
+            assert!(planned.time_s <= naive.time_s, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn store_survives_poisoned_internal_locks() {
+        // A panicked pipeline stage must not wedge the store: every
+        // internal mutex recovers from poisoning, so the next epoch's
+        // gathers and stats calls keep working instead of cascading
+        // `.unwrap()` panics.
+        let st = store(AccessMode::Tiered);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _gauge = st.measured_gather.lock().unwrap();
+            let _tier = st.tier.as_ref().unwrap().lock().unwrap();
+            panic!("poison the held locks");
+        }));
+        assert!(st.measured_gather.is_poisoned());
+        assert!(st.tier.as_ref().unwrap().is_poisoned());
+        st.gather(&[1, 2, 3]).unwrap();
+        assert!(st.measured_gather_s() >= 0.0);
+        let stats = st.tier_stats().expect("tier stats after poison");
+        assert_eq!(stats.hits + stats.misses, 3);
+    }
+
+    #[test]
+    fn planned_gather_rejects_wrong_output_shape() {
+        let st = store(AccessMode::UnifiedAligned);
+        let plan = crate::sampler::compact::GatherPlan::build(&[1, 2, 1]);
+        let mut too_small = vec![0f32; 2 * 24];
+        assert!(st.gather_planned(&plan, &mut too_small).is_err());
     }
 
     #[test]

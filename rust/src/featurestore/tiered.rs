@@ -248,6 +248,11 @@ impl TieredCache {
     ///
     /// Promotion runs *after* the split on purpose: the batch that first
     /// touches a row still pays its cold cost; only later batches benefit.
+    ///
+    /// Under the default gather deduplication (DESIGN.md §10) `idx` is
+    /// already the batch's *compacted* unique stream, so hits/misses and
+    /// LFU frequencies count each distinct row once per batch; with
+    /// `--no-dedup` every duplicated occurrence counts, as before.
     pub fn record(&mut self, idx: &[u32]) -> Vec<u32> {
         let mut cold = Vec::new();
         for &r in idx {
@@ -396,6 +401,23 @@ mod tests {
         assert_eq!(s.hits, 2);
         assert_eq!(s.misses, 3);
         assert_eq!(s.hits + s.misses, 5);
+    }
+
+    #[test]
+    fn compacted_stream_counts_each_distinct_row_once() {
+        // The dedup subsystem hands `record` the unique stream: the cold
+        // subset (and with it the whole PCIe request stream) shrinks from
+        // per-occurrence to per-distinct-row.
+        let duplicated = [5u32, 9, 5, 5, 9, 0];
+        let compacted = crate::sampler::compact::GatherPlan::build(&duplicated);
+        let mut dup = TieredCache::new(10, 4, &sys(), &cfg(0.2, false, Some(vec![0, 1])));
+        let mut ded = TieredCache::new(10, 4, &sys(), &cfg(0.2, false, Some(vec![0, 1])));
+        let cold_dup = dup.record(&duplicated);
+        let cold_ded = ded.record(compacted.unique_nodes());
+        assert_eq!(cold_dup, vec![5, 9, 5, 5, 9]);
+        assert_eq!(cold_ded, vec![5, 9], "compacted cold stream must be distinct");
+        assert_eq!(ded.stats().hits + ded.stats().misses, 3);
+        assert_eq!(dup.stats().hits + dup.stats().misses, 6);
     }
 
     #[test]

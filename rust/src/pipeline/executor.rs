@@ -7,9 +7,46 @@
 //! executor measures the real work, the interconnect models the missing
 //! hardware).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
 use crate::error::{Error, Result};
 use crate::pipeline::queue::BoundedQueue;
 use crate::util::timer::Timer;
+
+/// Close a queue when dropped — including during a panic unwind.  Every
+/// stage closes its queues on *all* exit paths; without this, a panicking
+/// stage would strand its neighbors blocked forever on a queue nobody
+/// will ever close again (the executor's join would then deadlock).
+struct CloseOnDrop<'q, T>(&'q BoundedQueue<T>);
+
+impl<T> Drop for CloseOnDrop<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// Render a caught panic payload for the pipeline error message.
+fn panic_msg(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run a stage function, converting a panic into a pipeline [`Error`] so
+/// the failed batch surfaces as an `Err` and shutdown stays clean (the
+/// shared queues would otherwise see poisoned locks and hung peers).
+fn run_stage<R>(stage_name: &str, f: impl FnOnce() -> Result<R>) -> Result<R> {
+    catch_unwind(AssertUnwindSafe(f)).unwrap_or_else(|payload| {
+        Err(Error::Pipeline(format!(
+            "{stage_name} stage panicked: {}",
+            panic_msg(payload)
+        )))
+    })
+}
 
 /// Per-stage busy seconds (real wall-clock inside each stage function).
 #[derive(Clone, Copy, Debug, Default)]
@@ -41,7 +78,11 @@ pub struct PipelineReport {
 /// * `gather(batch)` attaches features;
 /// * `train(fed)` consumes it.
 ///
-/// Any stage error aborts the pipeline and is returned.
+/// Any stage error aborts the pipeline and is returned.  A stage *panic*
+/// is contained the same way: caught, converted into [`Error::Pipeline`]
+/// with the panic payload, and propagated after both queues close — one
+/// bad batch reads as a failed epoch, never as a poisoned-lock cascade or
+/// a hung join (`tests/pipeline_stress.rs` injects panics per stage).
 pub fn run_pipeline<B, F, S, G, T>(
     n_items: u64,
     queue_depth: usize,
@@ -67,42 +108,40 @@ where
         let sample = &sample;
         let gather = &gather;
 
-        // Every stage must close its queues on *all* exit paths (including
-        // errors), or the neighbors block forever on a dead queue.
+        // Every stage must close its queues on *all* exit paths —
+        // including panics, hence the drop guards — or the neighbors
+        // block forever on a dead queue.  Stage functions additionally
+        // run under `run_stage`, which converts a panic into a pipeline
+        // `Err` carrying the payload, so one failed batch aborts the
+        // epoch cleanly instead of cascading poisoned-lock panics.
         let sampler = scope.spawn(move || -> Result<f64> {
-            let result = (|| {
-                let mut busy = 0.0;
-                for i in 0..n_items {
-                    let t = Timer::start();
-                    let b = sample(i)?;
-                    busy += t.elapsed_s();
-                    if q1.push(b).is_err() {
-                        break; // downstream aborted
-                    }
+            let _close_q1 = CloseOnDrop(q1);
+            let mut busy = 0.0;
+            for i in 0..n_items {
+                let t = Timer::start();
+                let b = run_stage("sample", || sample(i))?;
+                busy += t.elapsed_s();
+                if q1.push(b).is_err() {
+                    break; // downstream aborted
                 }
-                Ok(busy)
-            })();
-            q1.close();
-            result
+            }
+            Ok(busy)
         });
 
         let gatherer = scope.spawn(move || -> Result<f64> {
-            let result = (|| {
-                let mut busy = 0.0;
-                while let Some(b) = q1.pop() {
-                    let t = Timer::start();
-                    let f = gather(b)?;
-                    busy += t.elapsed_s();
-                    if q2.push(f).is_err() {
-                        break;
-                    }
+            // Closing q1 too stops a sampler blocked on a full queue.
+            let _close_q1 = CloseOnDrop(q1);
+            let _close_q2 = CloseOnDrop(q2);
+            let mut busy = 0.0;
+            while let Some(b) = q1.pop() {
+                let t = Timer::start();
+                let f = run_stage("gather", || gather(b))?;
+                busy += t.elapsed_s();
+                if q2.push(f).is_err() {
+                    break;
                 }
-                Ok(busy)
-            })();
-            // closing q1 stops a sampler blocked on a full queue
-            q1.close();
-            q2.close();
-            result
+            }
+            Ok(busy)
         });
 
         // Trainer runs on the calling thread.
@@ -111,7 +150,7 @@ where
         let mut items = 0u64;
         while let Some(f) = q2.pop() {
             let t = Timer::start();
-            match train(f) {
+            match run_stage("train", || train(f)) {
                 Ok(()) => {
                     train_busy += t.elapsed_s();
                     items += 1;
@@ -205,6 +244,90 @@ mod tests {
             },
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn gather_panic_becomes_a_pipeline_error_not_a_hang() {
+        let r = run_pipeline(
+            100,
+            2,
+            |i| Ok(i),
+            |b| {
+                if b == 10 {
+                    panic!("injected gather panic at {b}");
+                }
+                Ok(b)
+            },
+            |_f| Ok(()),
+        );
+        match r {
+            Err(Error::Pipeline(msg)) => {
+                assert!(msg.contains("panicked"), "message lost the cause: {msg}");
+                assert!(msg.contains("injected gather panic"), "payload dropped: {msg}");
+            }
+            other => panic!("expected Pipeline error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sample_panic_becomes_a_pipeline_error_not_a_hang() {
+        let r = run_pipeline(
+            100,
+            2,
+            |i| {
+                if i == 3 {
+                    panic!("sampler died");
+                }
+                Ok(i)
+            },
+            |b| Ok(b),
+            |_f| Ok(()),
+        );
+        assert!(matches!(r, Err(Error::Pipeline(m)) if m.contains("sample stage panicked")));
+    }
+
+    #[test]
+    fn train_panic_becomes_a_pipeline_error_not_a_hang() {
+        let r = run_pipeline(
+            100,
+            2,
+            |i| Ok(i),
+            |b| Ok(b),
+            |f| {
+                if f == 5 {
+                    panic!("trainer died");
+                }
+                Ok(())
+            },
+        );
+        assert!(matches!(r, Err(Error::Pipeline(m)) if m.contains("train stage panicked")));
+    }
+
+    #[test]
+    fn executor_is_reusable_after_a_stage_panic() {
+        // The shared queues must come back clean: a panicked run followed
+        // by a healthy one on fresh queues processes everything.
+        let _ = run_pipeline(
+            20,
+            1,
+            |i| Ok(i),
+            |b: u64| if b == 0 { panic!("boom") } else { Ok(b) },
+            |_f| Ok(()),
+        );
+        let mut seen = 0u64;
+        let r = run_pipeline(
+            20,
+            1,
+            |i| Ok(i),
+            |b| Ok(b),
+            |_f| {
+                seen += 1;
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(r.items, 20);
+        assert_eq!(seen, 20);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Bounded MPMC queue with blocking push (backpressure) and pop.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 
 /// Bounded multi-producer multi-consumer FIFO.
 ///
@@ -9,6 +9,19 @@ use std::sync::{Condvar, Mutex};
 /// between pipeline stages (a slow trainer stalls the sampler instead of
 /// buffering unboundedly).  `close` wakes all waiters; subsequent `pop`s
 /// drain the remaining items then return `None`.
+///
+/// Two robustness properties the executor leans on:
+///
+/// * the `push_wait_s`/`pop_wait_s` gauges count **only condvar-blocked
+///   seconds** — lock-acquisition latency and the instant closed/non-full
+///   paths contribute nothing, so the backpressure metric the overlap
+///   report prints is actual stall time, not bookkeeping noise;
+/// * every lock acquisition recovers from poisoning
+///   ([`PoisonError::into_inner`]): a panicked peer thread must degrade
+///   into a clean close-and-drain shutdown, not cascade `.unwrap()`
+///   panics (or a deadlock) through every other stage.  The queue state
+///   is a plain `VecDeque` + counters, valid at every await point, so
+///   resuming past a poison is sound.
 pub struct BoundedQueue<T> {
     state: Mutex<State<T>>,
     not_full: Condvar,
@@ -41,14 +54,25 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Poison-recovering lock (see the type docs): the queue must keep
+    /// functioning after a peer stage thread panicked.
+    fn lock(&self) -> MutexGuard<'_, State<T>> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Blocking push. Returns `Err(item)` if the queue is closed.
     pub fn push(&self, item: T) -> Result<(), T> {
-        let t0 = std::time::Instant::now();
-        let mut st = self.state.lock().unwrap();
-        while st.items.len() >= self.capacity && !st.closed {
-            st = self.not_full.wait(st).unwrap();
+        let mut st = self.lock();
+        if st.items.len() >= self.capacity && !st.closed {
+            // Time only the condvar-blocked window: the uncontended path
+            // (and the instant closed-path rejection) must not inflate
+            // the backpressure gauge.
+            let t0 = std::time::Instant::now();
+            while st.items.len() >= self.capacity && !st.closed {
+                st = self.not_full.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            st.push_wait_s += t0.elapsed().as_secs_f64();
         }
-        st.push_wait_s += t0.elapsed().as_secs_f64();
         if st.closed {
             return Err(item);
         }
@@ -60,12 +84,17 @@ impl<T> BoundedQueue<T> {
 
     /// Blocking pop. `None` once closed *and* drained.
     pub fn pop(&self) -> Option<T> {
-        let t0 = std::time::Instant::now();
-        let mut st = self.state.lock().unwrap();
-        while st.items.is_empty() && !st.closed {
-            st = self.not_empty.wait(st).unwrap();
+        let mut st = self.lock();
+        if st.items.is_empty() && !st.closed {
+            // Same blocked-only accounting as `push`: draining a
+            // non-empty queue (or returning `None` on a closed one) is
+            // not starvation and must cost the gauge nothing.
+            let t0 = std::time::Instant::now();
+            while st.items.is_empty() && !st.closed {
+                st = self.not_empty.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            st.pop_wait_s += t0.elapsed().as_secs_f64();
         }
-        st.pop_wait_s += t0.elapsed().as_secs_f64();
         let item = st.items.pop_front();
         drop(st);
         if item.is_some() {
@@ -76,7 +105,7 @@ impl<T> BoundedQueue<T> {
 
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
-        let item = self.state.lock().unwrap().items.pop_front();
+        let item = self.lock().items.pop_front();
         if item.is_some() {
             self.not_full.notify_one();
         }
@@ -85,7 +114,7 @@ impl<T> BoundedQueue<T> {
 
     /// Close the queue: producers fail, consumers drain then get `None`.
     pub fn close(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock();
         st.closed = true;
         drop(st);
         self.not_full.notify_all();
@@ -93,17 +122,29 @@ impl<T> BoundedQueue<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        self.lock().items.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// (producer blocked seconds, consumer blocked seconds).
+    /// (producer blocked seconds, consumer blocked seconds) — condvar
+    /// stall time only, not lock or bookkeeping overhead.
     pub fn wait_stats(&self) -> (f64, f64) {
-        let st = self.state.lock().unwrap();
+        let st = self.lock();
         (st.push_wait_s, st.pop_wait_s)
+    }
+
+    /// Poison the state mutex on purpose (panic while holding the guard)
+    /// so tests can pin the recover-from-poison behavior.
+    #[cfg(test)]
+    fn poison_for_test(&self) {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = self.state.lock().unwrap();
+            panic!("deliberate poison");
+        }));
+        assert!(self.state.is_poisoned(), "test setup failed to poison");
     }
 }
 
@@ -192,5 +233,65 @@ mod tests {
         let q: BoundedQueue<i32> = BoundedQueue::new(2);
         q.close();
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn unblocked_operations_accumulate_zero_wait() {
+        // The satellite bugfix: the gauges must count condvar-blocked
+        // seconds only.  A never-full, never-empty-while-popping workload
+        // (and the closed fast paths) must leave both at exactly 0.0.
+        let q = BoundedQueue::new(8);
+        for i in 0..200 {
+            q.push(i).unwrap();
+            assert_eq!(q.pop(), Some(i));
+        }
+        q.close();
+        assert_eq!(q.pop(), None); // closed-and-drained fast path
+        assert!(q.push(0).is_err()); // closed-producer fast path
+        let (push_wait, pop_wait) = q.wait_stats();
+        assert_eq!(push_wait, 0.0, "uncontended pushes inflated the gauge");
+        assert_eq!(pop_wait, 0.0, "uncontended pops inflated the gauge");
+    }
+
+    #[test]
+    fn starved_pop_counts_blocked_time() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        q.push(7).unwrap();
+        assert_eq!(consumer.join().unwrap(), Some(7));
+        let (_, pop_wait) = q.wait_stats();
+        assert!(pop_wait > 0.0, "a genuinely starved pop must register");
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_into_clean_shutdown() {
+        // A panicked stage thread must not cascade: push/pop/close on a
+        // poisoned queue keep working (close-and-drain), no unwrap panic.
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.poison_for_test();
+        q.push(2).unwrap();
+        assert_eq!(q.len(), 2);
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert!(q.push(3).is_err());
+        let _ = q.wait_stats();
+    }
+
+    #[test]
+    fn poisoned_lock_does_not_wedge_blocked_waiters() {
+        // A waiter blocked on a poisoned-then-closed queue must wake and
+        // exit instead of panicking inside the condvar loop.
+        let q: Arc<BoundedQueue<i32>> = Arc::new(BoundedQueue::new(1));
+        q.poison_for_test();
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(consumer.join().expect("consumer must not panic"), None);
     }
 }

@@ -69,9 +69,17 @@ impl MiniBatch {
         self.seeds.len()
     }
 
-    /// Total feature rows the gather stage fetches.
+    /// Total feature rows the gather stage *requests* (duplicates
+    /// included — see [`MiniBatch::compact`] for the deduplicated count).
     pub fn gather_rows(&self) -> usize {
         self.src_nodes.len()
+    }
+
+    /// Plan a deduplicated gather of this batch's `src_nodes` stream
+    /// (unique ids + inverse-permutation scatter map; see
+    /// [`GatherPlan`](crate::sampler::compact::GatherPlan)).
+    pub fn compact(&self) -> crate::sampler::compact::GatherPlan {
+        crate::sampler::compact::GatherPlan::build(&self.src_nodes)
     }
 
     pub fn validate(&self) -> Result<(), String> {

@@ -1,0 +1,321 @@
+//! Mini-batch gather compaction: deduplicate the requested node set and
+//! plan a gather-unique / scatter-back execution of the feature fetch.
+//!
+//! Neighbor-sampled mini-batches request one feature row per `(dst,
+//! fanout)` slot, so the gather stream `MiniBatch::src_nodes` is a
+//! *multiset*: hub nodes of a skewed graph appear dozens of times per
+//! batch.  The GPU-oriented communication follow-up (arXiv:2103.03330)
+//! and GIDS (arXiv:2306.16384) both identify deduplicating that stream as
+//! the single largest transfer reduction available — every duplicate row
+//! fetched over PCIe/NVLink/NVMe is pure waste, because the row is already
+//! on its way for the first occurrence.
+//!
+//! [`GatherPlan`] is that deduplication, captured once per batch:
+//!
+//! * [`GatherPlan::unique_nodes`] — the distinct requested ids in
+//!   first-appearance order (the compacted id stream every cost model
+//!   prices: warp request coalescing, hot-tier hit accounting, per-shard
+//!   peer traffic, and NVMe block I/Os all consume this);
+//! * [`GatherPlan::scatter_map`] — the inverse permutation: position `i`
+//!   of the requested stream is served by unique row `scatter_map()[i]`,
+//!   so one cheap device-memory scatter rebuilds the exact `[requested,
+//!   f]` layout the model consumes.  Numerics are bitwise identical to
+//!   the naive duplicated gather by construction (rows are copied, never
+//!   recomputed).
+//!
+//! The plan is pure metadata — it never touches feature values — which is
+//! what lets every access mode share it: the trainer builds one plan per
+//! batch and threads it through
+//! [`FeatureStore::gather_planned`](crate::featurestore::FeatureStore::gather_planned)
+//! (or [`index_select_planned`](crate::tensor::indexing::index_select_planned)
+//! for raw tensors).  `--no-dedup` skips the plan entirely and reproduces
+//! the duplicated stream bit-exactly — the regression anchor pinned by
+//! `tests/dedup_properties.rs`.
+//!
+//! ```
+//! use ptdirect::sampler::GatherPlan;
+//!
+//! let requested = [7u32, 3, 7, 7, 1, 3];
+//! let plan = GatherPlan::build(&requested);
+//! assert_eq!(plan.unique_nodes(), &[7, 3, 1]);        // first-appearance order
+//! assert_eq!(plan.scatter_map(), &[0, 1, 0, 0, 2, 1]); // inverse permutation
+//! assert!(plan.dedup_ratio() == 2.0);                  // 6 requested / 3 unique
+//! ```
+
+use std::collections::HashMap;
+
+/// Deduplicated gather plan for one requested id stream (see the module
+/// docs for the model).
+#[derive(Clone, Debug)]
+pub struct GatherPlan {
+    /// Distinct requested ids, first-appearance order.
+    unique: Vec<u32>,
+    /// `scatter[i]` = index into `unique` serving requested position `i`.
+    scatter: Vec<u32>,
+}
+
+impl GatherPlan {
+    /// Compact a requested id stream: every distinct id keeps its
+    /// first-appearance position in the unique stream (so the compacted
+    /// stream is still the order the warps issue their first-touch
+    /// requests in), and the scatter map records where each requested
+    /// slot finds its row.
+    ///
+    /// This runs once per batch on the gather stage's hot path, so the
+    /// lookup structure matters: when the id range is compact relative
+    /// to the batch (the common case — scaled graphs, skewed batches) a
+    /// dense slot table gives O(1) unhashed lookups; wildly sparse ids
+    /// fall back to a `HashMap`.  Both paths produce the identical plan.
+    pub fn build(requested: &[u32]) -> GatherPlan {
+        const VACANT: u32 = u32::MAX;
+        let mut unique = Vec::new();
+        let mut scatter = Vec::with_capacity(requested.len());
+        let max_id = requested.iter().copied().max().map_or(0, |m| m as usize);
+        if max_id < requested.len().saturating_mul(4).max(1024) {
+            let mut pos = vec![VACANT; max_id + 1];
+            for &r in requested {
+                let slot = &mut pos[r as usize];
+                if *slot == VACANT {
+                    *slot = unique.len() as u32;
+                    unique.push(r);
+                }
+                scatter.push(*slot);
+            }
+        } else {
+            let mut pos: HashMap<u32, u32> = HashMap::with_capacity(requested.len());
+            for &r in requested {
+                let p = match pos.entry(r) {
+                    std::collections::hash_map::Entry::Occupied(e) => *e.get(),
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        let p = unique.len() as u32;
+                        unique.push(r);
+                        e.insert(p);
+                        p
+                    }
+                };
+                scatter.push(p);
+            }
+        }
+        GatherPlan { unique, scatter }
+    }
+
+    /// The compacted id stream — what every cost model should price.
+    pub fn unique_nodes(&self) -> &[u32] {
+        &self.unique
+    }
+
+    /// Inverse permutation: requested position `i` reads unique row
+    /// `scatter_map()[i]`.
+    pub fn scatter_map(&self) -> &[u32] {
+        &self.scatter
+    }
+
+    /// Rows of the original (duplicated) request stream.
+    pub fn requested_rows(&self) -> usize {
+        self.scatter.len()
+    }
+
+    /// Rows actually fetched after deduplication.
+    pub fn unique_rows(&self) -> usize {
+        self.unique.len()
+    }
+
+    /// Duplicate rows the plan eliminates (`requested - unique`).
+    pub fn rows_saved(&self) -> usize {
+        self.scatter.len() - self.unique.len()
+    }
+
+    /// Requested over unique rows (≥ 1; 1.0 for an empty or
+    /// duplicate-free stream).
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.unique.is_empty() {
+            1.0
+        } else {
+            self.scatter.len() as f64 / self.unique.len() as f64
+        }
+    }
+
+    /// Scatter gathered unique rows back to the requested layout:
+    /// `out[i] = uniq[scatter[i]]` row-wise for `f`-wide f32 rows.  This
+    /// is the inverse of the compaction, so `scatter ∘ gather-unique` is
+    /// bitwise identical to gathering the duplicated stream directly
+    /// (pinned by `tests/dedup_properties.rs`).
+    pub fn scatter_rows(&self, uniq: &[f32], f: usize, out: &mut [f32]) {
+        debug_assert_eq!(uniq.len(), self.unique.len() * f);
+        debug_assert_eq!(out.len(), self.scatter.len() * f);
+        for (chunk, &u) in out.chunks_exact_mut(f).zip(&self.scatter) {
+            let lo = u as usize * f;
+            chunk.copy_from_slice(&uniq[lo..lo + f]);
+        }
+    }
+
+    /// Remap a layer's `nbr` slot indices — positions into the requested
+    /// src stream this plan compacted — to positions into
+    /// [`GatherPlan::unique_nodes`].  This is the per-layer view a kernel
+    /// consuming the compacted feature buffer directly would use; the
+    /// default execution path keeps the original indices and scatters the
+    /// rows instead ([`GatherPlan::scatter_rows`]), which is what keeps
+    /// numerics bitwise identical to the naive gather.
+    pub fn remap_nbr(&self, nbr: &[i32]) -> Vec<i32> {
+        nbr.iter().map(|&i| self.scatter[i as usize] as i32).collect()
+    }
+
+    /// Structural invariants (used by tests and debug assertions):
+    /// the unique stream is duplicate-free, the scatter map is in range,
+    /// and `unique[scatter[i]]` round-trips every requested id.
+    pub fn validate(&self, requested: &[u32]) -> Result<(), String> {
+        if self.scatter.len() != requested.len() {
+            return Err(format!(
+                "scatter len {} != requested {}",
+                self.scatter.len(),
+                requested.len()
+            ));
+        }
+        if self.unique.len() > self.scatter.len() && !requested.is_empty() {
+            return Err("more unique rows than requested".into());
+        }
+        let mut seen = std::collections::HashSet::new();
+        if !self.unique.iter().all(|&u| seen.insert(u)) {
+            return Err("unique stream contains duplicates".into());
+        }
+        for (i, (&r, &s)) in requested.iter().zip(&self.scatter).enumerate() {
+            match self.unique.get(s as usize) {
+                Some(&u) if u == r => {}
+                Some(&u) => return Err(format!("slot {i}: unique[{s}] = {u} != requested {r}")),
+                None => return Err(format!("slot {i}: scatter {s} out of range")),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert, Gen};
+
+    #[test]
+    fn unique_keeps_first_appearance_order() {
+        let plan = GatherPlan::build(&[5, 2, 5, 9, 2, 2]);
+        assert_eq!(plan.unique_nodes(), &[5, 2, 9]);
+        assert_eq!(plan.scatter_map(), &[0, 1, 0, 2, 1, 1]);
+        assert_eq!(plan.requested_rows(), 6);
+        assert_eq!(plan.unique_rows(), 3);
+        assert_eq!(plan.rows_saved(), 3);
+        assert!((plan.dedup_ratio() - 2.0).abs() < 1e-12);
+        plan.validate(&[5, 2, 5, 9, 2, 2]).unwrap();
+    }
+
+    #[test]
+    fn duplicate_free_stream_is_identity() {
+        let requested = [3u32, 1, 4, 5, 9];
+        let plan = GatherPlan::build(&requested);
+        assert_eq!(plan.unique_nodes(), &requested);
+        assert_eq!(plan.scatter_map(), &[0, 1, 2, 3, 4]);
+        assert_eq!(plan.dedup_ratio(), 1.0);
+    }
+
+    #[test]
+    fn sparse_ids_take_the_hashmap_path_with_the_same_contract() {
+        // max id >> 4x the batch length forces the sparse fallback; the
+        // plan must be indistinguishable from the dense path's.
+        let requested = [4_000_000_000u32, 7, 4_000_000_000, 123_456_789, 7];
+        let plan = GatherPlan::build(&requested);
+        assert_eq!(plan.unique_nodes(), &[4_000_000_000, 7, 123_456_789]);
+        assert_eq!(plan.scatter_map(), &[0, 1, 0, 2, 1]);
+        plan.validate(&requested).unwrap();
+    }
+
+    #[test]
+    fn dense_and_sparse_paths_agree_property() {
+        // The same logical stream, once with compact ids (dense slot
+        // table) and once shifted into sparse territory (HashMap path):
+        // unique ordering and scatter structure must match exactly.
+        check(30, |g: &mut Gen| {
+            let n = g.usize_in(1, 120);
+            let compact_ids = g.vec_u32(n, 0, 40);
+            let sparse_ids: Vec<u32> =
+                compact_ids.iter().map(|&r| r * 50_000_000 + 3).collect();
+            let a = GatherPlan::build(&compact_ids);
+            let b = GatherPlan::build(&sparse_ids);
+            prop_assert(a.scatter_map() == b.scatter_map(), "scatter maps diverged")?;
+            prop_assert(
+                a.unique_nodes().len() == b.unique_nodes().len(),
+                "unique counts diverged",
+            )?;
+            let mapped: Vec<u32> =
+                a.unique_nodes().iter().map(|&r| r * 50_000_000 + 3).collect();
+            prop_assert(mapped == b.unique_nodes(), "unique order diverged")
+        });
+    }
+
+    #[test]
+    fn empty_stream_is_empty_plan() {
+        let plan = GatherPlan::build(&[]);
+        assert_eq!(plan.unique_rows(), 0);
+        assert_eq!(plan.requested_rows(), 0);
+        assert_eq!(plan.dedup_ratio(), 1.0);
+        plan.validate(&[]).unwrap();
+    }
+
+    #[test]
+    fn scatter_rows_rebuilds_the_requested_layout() {
+        let requested = [2u32, 0, 2, 1];
+        let plan = GatherPlan::build(&requested);
+        // unique = [2, 0, 1]; 2-wide rows keyed by id for readability.
+        let uniq = [20.0, 21.0, 0.0, 1.0, 10.0, 11.0];
+        let mut out = [0f32; 8];
+        plan.scatter_rows(&uniq, 2, &mut out);
+        assert_eq!(out, [20.0, 21.0, 0.0, 1.0, 20.0, 21.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn remap_nbr_points_slots_at_unique_positions() {
+        // Requested stream [7, 3, 7]; a nbr slot pointing at position 2
+        // (the duplicate 7) must remap to unique position 0.
+        let plan = GatherPlan::build(&[7, 3, 7]);
+        assert_eq!(plan.remap_nbr(&[2, 1, 0]), vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn plan_invariants_hold_property() {
+        check(60, |g: &mut Gen| {
+            let n = g.usize_in(0, 400);
+            let requested = g.vec_u32(n, 0, 50); // heavy duplication
+            let plan = GatherPlan::build(&requested);
+            plan.validate(&requested).map_err(|e| e)?;
+            prop_assert(
+                plan.dedup_ratio() >= 1.0 - 1e-12,
+                format!("ratio {} < 1", plan.dedup_ratio()),
+            )?;
+            // unique set == requested set (no row lost, none invented)
+            let mut a: Vec<u32> = plan.unique_nodes().to_vec();
+            let mut b: Vec<u32> = requested.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            b.dedup();
+            prop_assert(a == b, "unique set != requested set")
+        });
+    }
+
+    #[test]
+    fn scatter_gather_identity_property() {
+        check(40, |g: &mut Gen| {
+            let n = g.usize_in(1, 200);
+            let f = g.usize_in(1, 8);
+            let requested = g.vec_u32(n, 0, 60);
+            let rows = 61usize;
+            let table: Vec<f32> = (0..rows * f).map(|i| i as f32).collect();
+            let plan = GatherPlan::build(&requested);
+
+            let mut uniq = vec![0f32; plan.unique_rows() * f];
+            crate::tensor::indexing::gather_rows_into(&table, f, plan.unique_nodes(), &mut uniq);
+            let mut via_plan = vec![0f32; n * f];
+            plan.scatter_rows(&uniq, f, &mut via_plan);
+
+            let mut direct = vec![0f32; n * f];
+            crate::tensor::indexing::gather_rows_into(&table, f, &requested, &mut direct);
+            prop_assert(via_plan == direct, "scatter∘gather != direct gather")
+        });
+    }
+}

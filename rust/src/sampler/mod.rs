@@ -18,8 +18,16 @@
 //! RNG, so a `(seed, batch, fanouts)` triple fully determines every batch
 //! — the property the end-to-end suite leans on.
 
+//!
+//! The `src_nodes` stream is a *multiset* — hub nodes recur across slots —
+//! so [`compact`] plans a deduplicated gather ([`GatherPlan`]): fetch each
+//! distinct row once, scatter back via the inverse permutation.  Enabled
+//! by default (`--no-dedup` restores the duplicated stream bit-exactly).
+
 pub mod batch;
+pub mod compact;
 pub mod neighbor;
 
 pub use batch::{LayerBlock, MiniBatch};
+pub use compact::GatherPlan;
 pub use neighbor::NeighborSampler;

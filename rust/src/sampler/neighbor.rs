@@ -18,6 +18,11 @@ pub struct NeighborSampler<'g> {
 impl<'g> NeighborSampler<'g> {
     pub fn new(graph: &'g Csr, fanouts: &[usize], classes: u32) -> Self {
         assert!(!fanouts.is_empty());
+        // Labels are `node_hash % classes`: zero would be a modulo-by-zero
+        // panic deep in the epoch loop.  `RunConfig` rejects it at parse
+        // time; this guard covers direct library users with a clear
+        // message instead of an arithmetic panic.
+        assert!(classes > 0, "classes must be >= 1 (labels are node_hash % classes)");
         NeighborSampler {
             graph,
             fanouts: fanouts.to_vec(),
@@ -94,6 +99,11 @@ impl<'g> NeighborSampler<'g> {
     /// Iterate epoch batches: a shuffled permutation of all nodes, chopped
     /// into fixed-size root sets (remainder dropped, as DGL does with
     /// `drop_last=True` — required by the fixed AOT shapes).
+    ///
+    /// `batch > num_nodes` therefore yields *zero* batches — the whole
+    /// epoch is "remainder".  The trainer rejects such configs up front
+    /// ([`Trainer::new`](crate::coordinator::Trainer::new)) so per-epoch
+    /// averages never divide by an empty batch list.
     pub fn epoch_seeds(&self, batch: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
         let mut order: Vec<u32> = (0..self.graph.num_nodes() as u32).collect();
         rng.shuffle(&mut order);
@@ -186,6 +196,23 @@ mod tests {
             let l = NeighborSampler::label_of(n, 47);
             assert!((0..47).contains(&l));
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "classes must be >= 1")]
+    fn zero_classes_rejected_with_a_clear_message() {
+        let g = toy_graph();
+        let _ = NeighborSampler::new(&g, &[2], 0);
+    }
+
+    #[test]
+    fn oversized_batch_yields_zero_batches_by_contract() {
+        // Documented drop_last semantics; the trainer layer rejects such
+        // configs before they reach this (see coordinator::trainer tests).
+        let g = toy_graph();
+        let s = NeighborSampler::new(&g, &[2], 10);
+        let mut rng = Rng::new(9);
+        assert!(s.epoch_seeds(7, &mut rng).is_empty());
     }
 
     #[test]

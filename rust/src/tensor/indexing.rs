@@ -12,6 +12,7 @@ use crate::config::{AccessMode, SystemProfile};
 use crate::device::warp::{count_requests, GatherTraffic, WarpModel};
 use crate::error::{Error, Result};
 use crate::interconnect::{DmaEngine, PcieLink, TransferCost};
+use crate::sampler::compact::GatherPlan;
 use crate::tensor::device::Device;
 use crate::tensor::dtype::DType;
 use crate::tensor::tensor::Tensor;
@@ -152,6 +153,34 @@ pub fn index_select(
     ))
 }
 
+/// `index_select` through a [`GatherPlan`]: gather each distinct row
+/// once (the transfer is costed on the deduplicated id stream), then
+/// scatter the unique rows back to the requested positions via the
+/// plan's inverse map.
+///
+/// The output tensor is `[requested_rows, f]` and bitwise identical to
+/// [`index_select`] on the original duplicated stream — rows are copied,
+/// never recomputed — while [`IndexSelectReport::cost`] shrinks to the
+/// unique row set's traffic.  This is the tensor-level form of the
+/// minibatch deduplication the follow-up papers describe
+/// (arXiv:2103.03330 §4; GIDS, arXiv:2306.16384).
+pub fn index_select_planned(
+    features: &Tensor,
+    plan: &GatherPlan,
+    mode: AccessMode,
+    sys: &SystemProfile,
+) -> Result<(Tensor, IndexSelectReport)> {
+    let (uniq, mut report) = index_select(features, plan.unique_nodes(), mode, sys)?;
+    let f = features.shape()[1];
+    let timer = Timer::start();
+    let mut out = Tensor::zeros(&[plan.requested_rows(), f], DType::F32, Device::Cuda);
+    plan.scatter_rows(uniq.f32_data(), f, unsafe_f32_mut(&mut out));
+    // The scatter is a device-memory copy on real hardware; here it is
+    // measured CPU work like the gather itself.
+    report.measured_gather_s += timer.elapsed_s();
+    Ok((out, report))
+}
+
 /// Row gather into a destination slice (the measured CPU work).
 pub fn gather_rows_into(src: &[f32], f: usize, idx: &[u32], dst: &mut [f32]) {
     debug_assert_eq!(dst.len(), idx.len() * f);
@@ -239,6 +268,36 @@ mod tests {
         let (_, pyd) = index_select(&fu, &idx, AccessMode::UnifiedAligned, &sys).unwrap();
         assert!(py.cost.cpu_time_s > 0.0);
         assert_eq!(pyd.cost.cpu_time_s, 0.0);
+    }
+
+    #[test]
+    fn planned_select_is_bitwise_identical_and_cheaper() {
+        let f = feats(Device::Unified);
+        // Heavy duplication: 64 slots over 7 distinct rows.
+        let idx: Vec<u32> = (0..64).map(|i| (i * 13) % 7).collect();
+        let sys = SystemProfile::system1();
+        let (naive, nrep) = index_select(&f, &idx, AccessMode::UnifiedAligned, &sys).unwrap();
+        let plan = GatherPlan::build(&idx);
+        let (planned, prep) =
+            index_select_planned(&f, &plan, AccessMode::UnifiedAligned, &sys).unwrap();
+        assert_eq!(planned.shape(), naive.shape());
+        assert_eq!(planned.f32_data(), naive.f32_data(), "dedup changed numerics");
+        assert!(prep.cost.useful_bytes < nrep.cost.useful_bytes);
+        assert!(prep.cost.bytes_on_link < nrep.cost.bytes_on_link);
+        assert!(prep.cost.time_s <= nrep.cost.time_s);
+    }
+
+    #[test]
+    fn planned_select_costs_the_unique_stream_exactly() {
+        let f = feats(Device::Unified);
+        let idx = [5u32, 5, 9, 5, 9];
+        let sys = SystemProfile::system1();
+        let plan = GatherPlan::build(&idx);
+        let (_, planned) = index_select_planned(&f, &plan, AccessMode::UnifiedNaive, &sys).unwrap();
+        let (_, unique) = index_select(&f, &[5, 9], AccessMode::UnifiedNaive, &sys).unwrap();
+        assert_eq!(planned.cost.time_s, unique.cost.time_s);
+        assert_eq!(planned.cost.requests, unique.cost.requests);
+        assert_eq!(planned.cost.bytes_on_link, unique.cost.bytes_on_link);
     }
 
     #[test]

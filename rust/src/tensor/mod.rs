@@ -24,6 +24,6 @@ pub mod tensor;
 pub use allocator::{AllocStats, CachingAllocator};
 pub use device::{Device, MemAdvise};
 pub use dtype::DType;
-pub use indexing::{index_select, IndexSelectReport};
+pub use indexing::{index_select, index_select_planned, IndexSelectReport};
 pub use placement::{resolve_placement, OperandKind, Placement};
 pub use tensor::Tensor;

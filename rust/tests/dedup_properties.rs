@@ -1,0 +1,186 @@
+//! Cross-layer properties of the minibatch gather-deduplication subsystem
+//! (`sampler::compact::GatherPlan`, DESIGN.md §10):
+//!
+//! * **numerics** — dedup on vs off produces bitwise identical loss and
+//!   accuracy trajectories in all eight access modes (scatter ∘
+//!   gather-unique is the identity on row values);
+//! * **traffic** — on a graph with overlapping neighborhoods, dedup
+//!   strictly reduces the simulated link bytes in every transfer-paying
+//!   mode (py/pyd/tiered/sharded/nvme) and never increases transfer time;
+//! * **accounting** — requested ≥ unique, ratio ≥ 1, the unique set is
+//!   exactly the distinct requested set, and `--no-dedup` restores the
+//!   pre-PR per-occurrence accounting bit-exactly (same losses, same
+//!   bytes, same tier counters).
+
+use ptdirect::config::{AccessMode, Backend, RunConfig, ShardPolicy};
+use ptdirect::coordinator::Trainer;
+use ptdirect::featurestore::FeatureStore;
+use ptdirect::sampler::GatherPlan;
+use ptdirect::util::proptest::{check, prop_assert, Gen};
+
+const STEPS: u32 = 8;
+
+/// Hermetic config mirroring `e2e_train.rs`: native backend, no
+/// artifacts, sharded runs get real partitioning.
+fn cfg(mode: AccessMode, dedup: bool) -> RunConfig {
+    RunConfig {
+        dataset: "product".into(),
+        arch: "sage".into(),
+        mode,
+        steps_per_epoch: STEPS,
+        scale: 2048,
+        feature_budget: 8 << 20,
+        seed: 42,
+        backend: Backend::Native,
+        artifacts_dir: "this-directory-does-not-exist".into(),
+        dedup,
+        num_gpus: if mode == AccessMode::Sharded { 4 } else { 1 },
+        shard_policy: ShardPolicy::Degree,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn losses_bitwise_identical_with_dedup_on_and_off_in_all_modes() {
+    for mode in AccessMode::all() {
+        let mut on = Trainer::new(cfg(mode, true)).unwrap();
+        let mut off = Trainer::new(cfg(mode, false)).unwrap();
+        for epoch in 0..2 {
+            let r_on = on.run_epoch().unwrap();
+            let r_off = off.run_epoch().unwrap();
+            assert_eq!(
+                r_on.losses, r_off.losses,
+                "{mode:?} epoch {epoch}: dedup changed the loss trajectory"
+            );
+            assert_eq!(
+                r_on.accs, r_off.accs,
+                "{mode:?} epoch {epoch}: dedup changed the accuracy trajectory"
+            );
+        }
+    }
+}
+
+#[test]
+fn dedup_strictly_reduces_link_bytes_in_every_transfer_paying_mode() {
+    // The acceptance shape of the PR: on an R-MAT graph with overlapping
+    // neighborhoods (the product preset's generator), dedup-on must move
+    // strictly fewer bytes over the links in every mode that pays for
+    // transfers, without ever costing more simulated time.
+    for mode in [
+        AccessMode::CpuGather,
+        AccessMode::UnifiedNaive,
+        AccessMode::UnifiedAligned,
+        AccessMode::Tiered,
+        AccessMode::Sharded,
+        AccessMode::Nvme,
+    ] {
+        let r_on = Trainer::new(cfg(mode, true)).unwrap().run_epoch().unwrap();
+        let r_off = Trainer::new(cfg(mode, false)).unwrap().run_epoch().unwrap();
+        assert!(
+            r_on.bytes_on_link < r_off.bytes_on_link,
+            "{mode:?}: dedup bytes {} !< naive {}",
+            r_on.bytes_on_link,
+            r_off.bytes_on_link
+        );
+        assert!(
+            r_on.breakdown_sim.transfer_s <= r_off.breakdown_sim.transfer_s,
+            "{mode:?}: dedup transfer {} > naive {}",
+            r_on.breakdown_sim.transfer_s,
+            r_off.breakdown_sim.transfer_s
+        );
+    }
+    // UVM's resident set already absorbs intra-batch duplicates (a
+    // repeated row is a page hit, not a second migration), so dedup can
+    // only tie its link bytes — never worsen them.
+    let r_on = Trainer::new(cfg(AccessMode::Uvm, true)).unwrap().run_epoch().unwrap();
+    let r_off = Trainer::new(cfg(AccessMode::Uvm, false)).unwrap().run_epoch().unwrap();
+    assert!(r_on.bytes_on_link <= r_off.bytes_on_link);
+    assert!(r_on.breakdown_sim.transfer_s <= r_off.breakdown_sim.transfer_s);
+
+    // GpuResident moves nothing over links in either case; its win is the
+    // row count in the dedup report, checked in the accounting test.
+    let r_gpu = Trainer::new(cfg(AccessMode::GpuResident, true))
+        .unwrap()
+        .run_epoch()
+        .unwrap();
+    assert_eq!(r_gpu.bytes_on_link, 0);
+    assert!(r_gpu.dedup.unique_rows < r_gpu.dedup.requested_rows);
+}
+
+#[test]
+fn dedup_accounting_is_consistent_across_modes() {
+    let rows_per_step = 64 * 6 * 6; // batch 64, fanouts [5, 5]
+    for mode in AccessMode::all() {
+        let r = Trainer::new(cfg(mode, true)).unwrap().run_epoch().unwrap();
+        assert!(r.dedup.enabled, "{mode:?}");
+        assert_eq!(r.dedup.requested_rows, STEPS as u64 * rows_per_step, "{mode:?}");
+        assert!(r.dedup.unique_rows <= r.dedup.requested_rows, "{mode:?}");
+        assert!(
+            r.dedup.unique_rows < r.dedup.requested_rows,
+            "{mode:?}: overlapping neighborhoods must deduplicate"
+        );
+        assert!(r.dedup.ratio() > 1.0, "{mode:?}");
+        // 100-dim f32 rows: bytes saved must match the row delta exactly.
+        assert_eq!(
+            r.dedup.bytes_saved,
+            (r.dedup.requested_rows - r.dedup.unique_rows) * 100 * 4,
+            "{mode:?}"
+        );
+    }
+}
+
+#[test]
+fn no_dedup_runs_are_bit_reproducible() {
+    // The regression anchor must itself be deterministic: two identical
+    // --no-dedup runs produce identical reports (losses, bytes, requests,
+    // transfer time), which is what anchors "reproduces pre-PR numbers".
+    for mode in [AccessMode::CpuGather, AccessMode::Tiered, AccessMode::Nvme] {
+        let a = Trainer::new(cfg(mode, false)).unwrap().run_epoch().unwrap();
+        let b = Trainer::new(cfg(mode, false)).unwrap().run_epoch().unwrap();
+        assert_eq!(a.losses, b.losses, "{mode:?}");
+        assert_eq!(a.bytes_on_link, b.bytes_on_link, "{mode:?}");
+        assert_eq!(a.requests, b.requests, "{mode:?}");
+        assert_eq!(a.breakdown_sim.transfer_s, b.breakdown_sim.transfer_s, "{mode:?}");
+        assert_eq!(a.dedup.requested_rows, b.dedup.requested_rows, "{mode:?}");
+    }
+}
+
+#[test]
+fn dedup_and_overlap_engine_compose() {
+    // Depth-0 anchoring must survive dedup: the overlapped timeline at
+    // depth 0 still returns the (now smaller) serial sum bit-exactly.
+    for dedup in [true, false] {
+        let mut c = cfg(AccessMode::UnifiedAligned, dedup);
+        c.prefetch_depth = 0;
+        c.skip_train = true;
+        let r = Trainer::new(c).unwrap().run_epoch().unwrap();
+        assert_eq!(r.overlap.overlapped_s, r.breakdown_sim.total_s(), "dedup={dedup}");
+    }
+}
+
+#[test]
+fn store_level_scatter_gather_identity_property() {
+    // Random duplicated request streams against a real store: the planned
+    // gather must be bitwise identical to the naive gather in every mode,
+    // while pricing exactly the unique stream.
+    let sys = ptdirect::config::SystemProfile::system1();
+    check(12, |g: &mut Gen| {
+        let n = g.usize_in(1, 300);
+        let idx = g.vec_u32(n, 0, 79); // heavy duplication over 80 rows
+        let plan = GatherPlan::build(&idx);
+        plan.validate(&idx).map_err(|e| e)?;
+        for mode in AccessMode::all() {
+            let st = FeatureStore::build(80, 12, 4, mode, &sys, 7).expect("store");
+            let (naive, _) = st.gather(&idx).expect("naive gather");
+            let fresh = FeatureStore::build(80, 12, 4, mode, &sys, 7).expect("store");
+            let mut planned = vec![0f32; idx.len() * 12];
+            let cost = fresh.gather_planned(&plan, &mut planned).expect("planned");
+            prop_assert(planned == naive, format!("{mode:?}: numerics diverged"))?;
+            prop_assert(
+                cost.useful_bytes == plan.unique_rows() as u64 * 12 * 4,
+                format!("{mode:?}: cost not on the unique stream"),
+            )?;
+        }
+        Ok(())
+    });
+}

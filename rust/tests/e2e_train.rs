@@ -135,13 +135,17 @@ fn sharded_epoch_accounts_every_row_and_scales_past_one_gpu() {
     c4.shard_policy = ShardPolicy::Degree;
     let r4 = Trainer::new(c4).unwrap().run_epoch().unwrap();
 
-    // local + peer + host rows must cover exactly the gathered rows:
-    // batch 64 roots expanded by fanouts [5, 5] -> 64 * 6 * 6 per step.
+    // local + peer + host rows must cover exactly the *fetched* rows:
+    // batch 64 roots expanded by fanouts [5, 5] request 64 * 6 * 6 per
+    // step, and the default gather dedup compacts that to the epoch's
+    // unique-row count before the store prices it.
     let rows_per_step = 64 * 6 * 6;
     for (r, n) in [(&r1, 1u64), (&r4, 4u64)] {
         let stats = r.shard.as_ref().expect("sharded epoch reports shard stats");
         assert_eq!(stats.num_gpus() as u64, n);
-        assert_eq!(stats.totals().rows_served(), STEPS as u64 * rows_per_step);
+        assert_eq!(r.dedup.requested_rows, STEPS as u64 * rows_per_step);
+        assert_eq!(stats.totals().rows_served(), r.dedup.unique_rows);
+        assert!(r.dedup.unique_rows < r.dedup.requested_rows);
     }
     assert_eq!(r1.shard.as_ref().unwrap().totals().peer_rows, 0);
     assert!(r4.shard.as_ref().unwrap().totals().peer_rows > 0);
@@ -200,13 +204,14 @@ fn nvme_epoch_accounts_every_row_and_pays_for_spilling() {
     c_sp.host_frac = 0.1;
     let r_sp = Trainer::new(c_sp).unwrap().run_epoch().unwrap();
 
-    // GPU hits + host rows + storage rows must cover exactly the gathered
-    // rows: batch 64 roots expanded by fanouts [5, 5] -> 64 * 6 * 6 per
-    // step.
+    // GPU hits + host rows + storage rows must cover exactly the
+    // *fetched* rows: batch 64 roots expanded by fanouts [5, 5] request
+    // 64 * 6 * 6 per step, compacted by the default gather dedup.
     let rows_per_step = 64 * 6 * 6;
     for r in [&r_res, &r_sp] {
         let stats = r.nvme.as_ref().expect("nvme epoch reports storage stats");
-        assert_eq!(stats.rows_served(), STEPS as u64 * rows_per_step);
+        assert_eq!(r.dedup.requested_rows, STEPS as u64 * rows_per_step);
+        assert_eq!(stats.rows_served(), r.dedup.unique_rows);
         assert!(stats.amplification() >= 1.0);
     }
     let sp = r_sp.nvme.as_ref().unwrap();
@@ -223,6 +228,22 @@ fn nvme_epoch_accounts_every_row_and_pays_for_spilling() {
     assert_eq!(r_sp.cpu_gather_s, 0.0);
     assert!(r_sp.power.storage_util > 0.0);
     assert_eq!(r_res.power.storage_util, 0.0);
+}
+
+#[test]
+fn no_dedup_restores_per_occurrence_accounting() {
+    // The regression anchor: with --no-dedup the store prices the
+    // duplicated stream exactly as before this PR, so hit + miss covers
+    // every requested occurrence again.
+    let mut c = cfg(AccessMode::Tiered);
+    c.dedup = false;
+    let r = Trainer::new(c).unwrap().run_epoch().unwrap();
+    let stats = r.tier.expect("tiered epoch reports tier stats");
+    let rows_per_step = 64 * 6 * 6;
+    assert_eq!(stats.hits + stats.misses, STEPS as u64 * rows_per_step);
+    assert!(!r.dedup.enabled);
+    assert_eq!(r.dedup.unique_rows, r.dedup.requested_rows);
+    assert_eq!(r.dedup.bytes_saved, 0);
 }
 
 #[test]
@@ -264,10 +285,12 @@ fn tiered_epoch_accounts_every_row_and_undercuts_unified() {
     assert_eq!(r_ti.losses, r_ua.losses);
 
     let stats = r_ti.tier.expect("tiered epoch reports tier stats");
-    // hit + miss must cover exactly the gathered rows: batch 64 roots
-    // expanded by fanouts [5, 5] -> 64 * 6 * 6 rows per step.
+    // hit + miss must cover exactly the *fetched* rows: batch 64 roots
+    // expanded by fanouts [5, 5] request 64 * 6 * 6 rows per step, which
+    // the default gather dedup compacts to the epoch's unique count.
     let rows_per_step = 64 * 6 * 6;
-    assert_eq!(stats.hits + stats.misses, STEPS as u64 * rows_per_step);
+    assert_eq!(r_ti.dedup.requested_rows, STEPS as u64 * rows_per_step);
+    assert_eq!(stats.hits + stats.misses, r_ti.dedup.unique_rows);
     assert!(stats.hits > 0, "degree-ranked hot set never hit");
     assert!(stats.hot_bytes <= stats.capacity_bytes);
 

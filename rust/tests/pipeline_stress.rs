@@ -112,6 +112,51 @@ fn injected_failures_abort_cleanly_across_100_seeds() {
 }
 
 #[test]
+fn injected_panics_abort_cleanly_in_every_stage() {
+    // The poisoned-lock satellite: a panic in any stage thread must
+    // surface as a pipeline `Err` carrying the payload — never a hang on
+    // a dead queue, never a `.lock().unwrap()` cascade in the neighbor
+    // stages.  A hang here shows up as a test-harness timeout.
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed ^ 0xBAD);
+        let depth = 1 + rng.gen_range_usize(3);
+        let fail_stage = rng.gen_range(3);
+        let fail_at = rng.gen_range(48);
+
+        let result = run_pipeline(
+            64,
+            depth,
+            move |i| {
+                if fail_stage == 0 && i == fail_at {
+                    panic!("sampler panic at {i}");
+                }
+                Ok(i)
+            },
+            move |b| {
+                if fail_stage == 1 && b == fail_at {
+                    panic!("gatherer panic at {b}");
+                }
+                Ok(b)
+            },
+            move |f| {
+                if fail_stage == 2 && f == fail_at {
+                    panic!("trainer panic at {f}");
+                }
+                Ok(())
+            },
+        );
+        match result {
+            Err(Error::Pipeline(msg)) => assert!(
+                msg.contains("panicked") && msg.contains("panic at"),
+                "seed {seed}: payload lost: {msg}"
+            ),
+            Err(e) => panic!("seed {seed}: unexpected error kind {e}"),
+            Ok(r) => panic!("seed {seed}: injected panic vanished ({} items)", r.items),
+        }
+    }
+}
+
+#[test]
 fn unbalanced_stage_mix_keeps_exact_counts() {
     // One stage much slower than the others, all queue depths, both
     // directions — the backpressure and starvation corners.
