@@ -1,0 +1,175 @@
+//! Serving sweep — tail latency, goodput, and coalescing payoff of the
+//! online inference engine (`--serve`, DESIGN.md §11).
+//!
+//! Acceptance shape (EXPERIMENTS.md documents the expected curves):
+//!
+//!  * mean latency is monotone non-decreasing in the open-loop arrival
+//!    rate (coalescing off: fixed service order, compressed arrivals);
+//!  * at a loaded arrival rate, coalescing fetches strictly fewer unique
+//!    rows than the uncoalesced run requests, and merges batches;
+//!  * a single closed-loop client reproduces the batch inference runner's
+//!    simulated breakdown bit-exactly (the degeneracy anchor);
+//!  * a burst over a shallow admission queue sheds load:
+//!    `admitted + rejected == offered` with `rejected > 0`.
+//!
+//! Emits `BENCH_serving.json` (p50/p95/p99 + goodput per access mode at
+//! the loaded rate) for the CI smoke loop and trend tracking.
+
+mod bench_common;
+
+use bench_common::{expect, scaled};
+use ptdirect::config::{AccessMode, Backend, RunConfig, ShardPolicy};
+use ptdirect::coordinator::report::{latency_line, ms, ratio, Table};
+use ptdirect::coordinator::{InferenceRunner, ServingEngine, ServingReport};
+
+const SEED: u64 = 42;
+
+/// Hermetic serving config: native backend, no artifacts, small graph.
+fn cfg(mode: AccessMode, requests: u64, rps: f64) -> RunConfig {
+    RunConfig {
+        dataset: "product".into(),
+        arch: "sage".into(),
+        mode,
+        scale: 2048,
+        feature_budget: 8 << 20,
+        seed: SEED,
+        backend: Backend::Native,
+        artifacts_dir: "this-directory-does-not-exist".into(),
+        num_gpus: if mode == AccessMode::Sharded { 4 } else { 1 },
+        shard_policy: ShardPolicy::Degree,
+        serve_requests: requests,
+        arrival_rps: rps,
+        admit_depth: 4096, // no shedding in the sweeps; shedding is probed separately
+        ..RunConfig::default()
+    }
+}
+
+fn serve(c: RunConfig) -> ServingReport {
+    ServingEngine::new(c).expect("engine").run().expect("serve")
+}
+
+/// Minimal JSON string escape (keys/labels here are plain ASCII).
+fn json_str(s: &str) -> String {
+    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
+fn main() {
+    let requests = scaled(96u64, 24);
+
+    // ---- rps sweep x coalescing (pyd mode) ----
+    let rates = [500.0, 5_000.0, 50_000.0, 500_000.0];
+    let mut t = Table::new(
+        &format!(
+            "Serving sweep — {requests} requests, open-loop Poisson arrivals, \
+             pyd mode (System1)"
+        ),
+        &[
+            "rps", "coalesce", "batches", "req/batch", "dedup", "p50 ms", "p99 ms",
+            "goodput rps",
+        ],
+    );
+    let mut means = Vec::new();
+    for &rps in &rates {
+        for coalesce in [true, false] {
+            let mut c = cfg(AccessMode::UnifiedAligned, requests, rps);
+            c.coalesce = coalesce;
+            let r = serve(c);
+            if !coalesce {
+                means.push(r.latency.mean());
+            }
+            t.row(&[
+                format!("{rps:.0}"),
+                if coalesce { "on" } else { "off" }.into(),
+                r.batches.to_string(),
+                format!("{:.2}", r.coalesce_factor()),
+                ratio(r.dedup_ratio()),
+                ms(r.latency.percentile(0.50)),
+                ms(r.latency.percentile(0.99)),
+                format!("{:.0}", r.goodput_rps()),
+            ]);
+        }
+    }
+    t.print();
+    expect(
+        means.windows(2).all(|w| w[1] >= w[0] - 1e-12),
+        "mean latency monotone non-decreasing in arrival rate (coalesce off)",
+    );
+
+    // ---- per-mode table at the loaded rate (+ JSON emission) ----
+    let loaded = 50_000.0;
+    let mut t = Table::new(
+        &format!("Serving per mode — {requests} requests at {loaded:.0} rps offered"),
+        &["mode", "p50 ms", "p95 ms", "p99 ms", "goodput rps", "req/batch", "bound by"],
+    );
+    let mut json_rows = Vec::new();
+    let mut coalesce_saves_rows = true;
+    for mode in AccessMode::all() {
+        let r = serve(cfg(mode, requests, loaded));
+        let mut un = cfg(mode, requests, loaded);
+        un.coalesce = false;
+        let r_un = serve(un);
+        coalesce_saves_rows &= r.unique_rows < r_un.requested_rows;
+        t.row(&[
+            mode.label().into(),
+            ms(r.latency.percentile(0.50)),
+            ms(r.latency.percentile(0.95)),
+            ms(r.latency.percentile(0.99)),
+            format!("{:.0}", r.goodput_rps()),
+            format!("{:.2}", r.coalesce_factor()),
+            r.bound_by.label().into(),
+        ]);
+        json_rows.push(format!(
+            "    {{\"mode\": {}, \"p50_ms\": {:.6}, \"p95_ms\": {:.6}, \
+             \"p99_ms\": {:.6}, \"goodput_rps\": {:.3}, \"coalesce_factor\": {:.4}, \
+             \"rejection_rate\": {:.4}}}",
+            json_str(mode.label()),
+            r.latency.percentile(0.50) * 1e3,
+            r.latency.percentile(0.95) * 1e3,
+            r.latency.percentile(0.99) * 1e3,
+            r.goodput_rps(),
+            r.coalesce_factor(),
+            r.rejection_rate(),
+        ));
+        println!("{}: {}", mode.label(), latency_line(&r.latency));
+    }
+    t.print();
+    expect(
+        coalesce_saves_rows,
+        "coalesced gather fetches fewer unique rows than the uncoalesced run requests",
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"serving_sweep\", \"requests\": {requests}, \
+         \"arrival_rps\": {loaded:.1},\n  \"modes\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
+    println!("wrote BENCH_serving.json ({} modes)", AccessMode::all().len());
+
+    // ---- single-client closed-loop degeneracy vs the batch runner ----
+    let mut c = cfg(AccessMode::UnifiedAligned, requests, 0.0);
+    c.clients = 1;
+    let r = serve(c.clone());
+    let infer = InferenceRunner::new(c)
+        .expect("runner")
+        .run(requests)
+        .expect("infer");
+    let (a, b) = (&r.breakdown_sim, &infer.breakdown_sim);
+    expect(
+        a.sample_s == b.sample_s && a.transfer_s == b.transfer_s && a.train_s == b.train_s,
+        "single closed-loop client bitwise reproduces the batch inference breakdown",
+    );
+    expect(r.batches == requests, "one client never coalesces");
+
+    // ---- admission shedding under a hard burst ----
+    let mut c = cfg(AccessMode::CpuGather, requests, 1_000_000.0);
+    c.admit_depth = 2;
+    let r = serve(c);
+    expect(
+        r.admitted + r.rejected == r.offered,
+        "admission books balance (admitted + rejected == offered)",
+    );
+    expect(
+        r.rejected > 0 && r.completed == r.admitted,
+        "a burst over a depth-2 queue sheds load and serves the rest",
+    );
+}

@@ -14,7 +14,9 @@ use std::collections::BTreeMap;
 
 use crate::config::{AccessMode, Backend, RunConfig, ShardPolicy, SystemProfile};
 use crate::coordinator::microbench::{fig6_grid, fig7_sizes, run_cell};
-use crate::coordinator::report::{critical_path_summary, ms, pct, ratio, shard_table, Table};
+use crate::coordinator::report::{
+    critical_path_summary, latency_line, ms, pct, ratio, shard_table, Table,
+};
 use crate::coordinator::Trainer;
 use crate::error::{Error, Result};
 use crate::graph::datasets::DATASETS;
@@ -203,6 +205,34 @@ pub fn run_config_from(args: &Args) -> Result<RunConfig> {
         cfg.sampler_workers = usize::try_from(w)
             .map_err(|_| Error::Config(format!("--sampler-workers {w} out of range")))?;
     }
+    if let Some(n) = args.get_u64("requests")? {
+        cfg.serve_requests = n;
+    }
+    if let Some(r) = args.get_f64("arrival-rps")? {
+        // Finiteness + sign live in `RunConfig::validate` below; this
+        // keeps the single-home rule (one window, one place).
+        cfg.arrival_rps = r;
+    }
+    if let Some(c) = args.get_u64("clients")? {
+        cfg.clients = u32::try_from(c)
+            .map_err(|_| Error::Config(format!("--clients {c} out of range")))?;
+    }
+    if let Some(d) = args.get_u64("admit-depth")? {
+        cfg.admit_depth = usize::try_from(d)
+            .map_err(|_| Error::Config(format!("--admit-depth {d} out of range")))?;
+    }
+    // `--coalesce` re-enables after a TOML `coalesce = false`;
+    // `--no-coalesce` wins when both are given (mirrors --dedup).
+    if args.flag("coalesce") {
+        cfg.coalesce = true;
+    }
+    if args.flag("no-coalesce") {
+        cfg.coalesce = false;
+    }
+    if let Some(l) = args.get_u64("coalesce-limit")? {
+        cfg.coalesce_limit = usize::try_from(l)
+            .map_err(|_| Error::Config(format!("--coalesce-limit {l} out of range")))?;
+    }
     // `--system` replaced the whole profile above; restore the TOML's (and
     // the CLI's) NVLink/NVMe overrides on top of the selected profile.
     cfg.apply_link_overrides();
@@ -218,6 +248,7 @@ USAGE: ptdirect <COMMAND> [OPTIONS]
 COMMANDS:
   train        run GNN training epochs (end-to-end through PJRT)
   infer        serve forward-only batches (latency + accuracy; --batches N)
+  serve        online inference under an arrival stream (tail latency, goodput)
   microbench   paper Fig. 6 gather microbenchmark
   alignment    paper Fig. 7 memory-alignment sweep
   datasets     paper Table 4 dataset presets
@@ -292,6 +323,25 @@ OVERLAP ENGINE (all modes):
   --queue-depth N      measured pipeline's bounded-queue capacity (4)
   --sampler-workers N  simulated CPU sampler lanes (1)
 
+ONLINE SERVING (serve; all access modes):
+  A request-driven serving engine on top of the overlap engine's
+  discrete-event resources: inference requests arrive over simulated
+  time, pass a bounded admission queue (arrivals that find it full are
+  rejected and counted as goodput loss), and concurrent queued requests
+  coalesce into one minibatch whose gather dedups *across* requests —
+  each request's scattered feature block stays bitwise identical to
+  serving it alone.  Reports p50/p95/p99/p999 latency, goodput, queue
+  depth, rejection rate, and which resource bound the run.
+  --requests N        total requests to offer (64)
+  --arrival-rps R     open-loop Poisson arrival rate; 0 = closed loop (0)
+  --clients N         closed-loop concurrent clients, 1..65536 (1);
+                      a single client reproduces the `infer` command's
+                      simulated breakdown bit-exactly
+  --admit-depth D     admission queue capacity, 1..65536 (32)
+  --coalesce          merge queued requests into one batch (default)
+  --no-coalesce       dispatch one request per batch
+  --coalesce-limit K  max requests per coalesced batch, 1..65536 (8)
+
 NVME STORAGE MODE (--mode nvme):
   For feature tables bigger than host memory (GIDS, arXiv:2306.16384):
   host memory holds only the hottest --host-frac of the rows (by degree
@@ -324,6 +374,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
         "microbench" => cmd_microbench(&args),
         "alignment" => cmd_alignment(&args),
         "datasets" => cmd_datasets(),
@@ -471,6 +522,55 @@ fn cmd_infer(args: &Args) -> Result<()> {
         ms(r.breakdown_sim.sample_s),
         ms(r.breakdown_sim.transfer_s),
         ms(r.breakdown_sim.train_s),
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = run_config_from(args)?;
+    log::info!(
+        "serve: {} {} mode={} system={} requests={} {}",
+        cfg.arch,
+        cfg.dataset,
+        cfg.mode.label(),
+        cfg.system.name,
+        cfg.serve_requests,
+        if cfg.arrival_rps > 0.0 {
+            format!("open-loop {} rps", cfg.arrival_rps)
+        } else {
+            format!("closed-loop {} clients", cfg.clients)
+        },
+    );
+    let mut engine = crate::coordinator::ServingEngine::new(cfg)?;
+    let r = engine.run()?;
+    println!(
+        "served {} of {} offered requests in {} batches ({} coalesced/batch), \
+         rejected {} ({}), makespan {} ms, goodput {:.1} rps",
+        r.completed,
+        r.offered,
+        r.batches,
+        ratio(r.coalesce_factor()),
+        r.rejected,
+        pct(r.rejection_rate()),
+        ms(r.makespan_s),
+        r.goodput_rps(),
+    );
+    println!("latency: {}", latency_line(&r.latency));
+    println!(
+        "queue depth: mean {:.1}, max {} | gather dedup {} ({} requested -> {} unique rows)",
+        r.queue_depth.mean(),
+        r.max_queue_depth,
+        ratio(r.dedup_ratio()),
+        r.requested_rows,
+        r.unique_rows,
+    );
+    let b = &r.breakdown_sim;
+    println!(
+        "sim totals: sample {} ms, feature-copy {} ms, execute {} ms | bound by {}",
+        ms(b.sample_s),
+        ms(b.transfer_s),
+        ms(b.train_s),
+        r.bound_by.label(),
     );
     Ok(())
 }
@@ -837,6 +937,68 @@ mod tests {
         assert!(HELP.contains("--dedup"));
         assert!(HELP.contains("--no-dedup"));
         assert!(HELP.contains("--classes"));
+    }
+
+    #[test]
+    fn serving_cli_overrides() {
+        let a = Args::parse(&sv(&[
+            "serve",
+            "--requests",
+            "128",
+            "--arrival-rps",
+            "500",
+            "--admit-depth",
+            "16",
+            "--no-coalesce",
+            "--coalesce-limit",
+            "4",
+        ]))
+        .unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        assert_eq!(cfg.serve_requests, 128);
+        assert!((cfg.arrival_rps - 500.0).abs() < 1e-12);
+        assert_eq!(cfg.admit_depth, 16);
+        assert!(!cfg.coalesce);
+        assert_eq!(cfg.coalesce_limit, 4);
+
+        let a = Args::parse(&sv(&["serve", "--clients", "8"])).unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        assert_eq!(cfg.clients, 8);
+        assert!(cfg.coalesce, "coalescing must default on");
+        // --no-coalesce wins over --coalesce (mirrors --dedup).
+        let a = Args::parse(&sv(&["serve", "--coalesce", "--no-coalesce"])).unwrap();
+        assert!(!run_config_from(&a).unwrap().coalesce);
+    }
+
+    #[test]
+    fn serving_cli_rejects_bad_values() {
+        let a = Args::parse(&sv(&["serve", "--arrival-rps", "-3"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["serve", "--arrival-rps", "nan"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["serve", "--clients", "0"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["serve", "--admit-depth", "0"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["serve", "--coalesce-limit", "0"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        // 2^32 + 1 must not wrap into the valid window via `as` truncation.
+        let a = Args::parse(&sv(&["serve", "--clients", "4294967297"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        // closed loop: more clients than queue slots can never all fit.
+        let a = Args::parse(&sv(&["serve", "--clients", "64", "--admit-depth", "8"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+    }
+
+    #[test]
+    fn help_documents_serving() {
+        assert!(HELP.contains("serve"));
+        assert!(HELP.contains("--requests"));
+        assert!(HELP.contains("--arrival-rps"));
+        assert!(HELP.contains("--clients"));
+        assert!(HELP.contains("--admit-depth"));
+        assert!(HELP.contains("--no-coalesce"));
+        assert!(HELP.contains("--coalesce-limit"));
     }
 
     #[test]

@@ -257,6 +257,25 @@ pub struct RunConfig {
     /// `node_hash % classes`, so zero is rejected at parse time instead
     /// of panicking deep in the epoch loop.
     pub classes: Option<u32>,
+    /// `serve` mode: total inference requests the arrival stream offers.
+    pub serve_requests: u64,
+    /// `serve` mode: Poisson open-loop arrival rate in requests per
+    /// second of simulated time.  `0.0` selects the closed loop driven by
+    /// `clients` instead.
+    pub arrival_rps: f64,
+    /// `serve` mode, closed loop: concurrent clients, each re-issuing the
+    /// moment its previous request completes.
+    pub clients: u32,
+    /// `serve` mode: bounded admission queue; an arrival that finds this
+    /// many requests already queued is rejected (counted goodput loss).
+    pub admit_depth: usize,
+    /// `serve` mode: coalesce queued requests into one minibatch with
+    /// cross-request gather dedup (`CoalescedGatherPlan`).  Per-request
+    /// results stay bitwise identical to serving each request alone; off
+    /// (`--no-coalesce`) dispatches one request per batch.
+    pub coalesce: bool,
+    /// `serve` mode: max requests folded into one coalesced batch.
+    pub coalesce_limit: usize,
 }
 
 impl Default for RunConfig {
@@ -292,6 +311,12 @@ impl Default for RunConfig {
             no_overlap: false,
             dedup: true,
             classes: None,
+            serve_requests: 64,
+            arrival_rps: 0.0,
+            clients: 1,
+            admit_depth: 32,
+            coalesce: true,
+            coalesce_limit: 8,
         }
     }
 }
@@ -446,6 +471,35 @@ impl RunConfig {
                 Error::Config(format!("classes {v} out of range"))
             })?);
         }
+        if let Some(v) = doc.get_i64("run.serve_requests") {
+            cfg.serve_requests = u64::try_from(v)
+                .map_err(|_| Error::Config(format!("serve_requests {v} out of range")))?;
+        }
+        if let Some(v) = doc.get_f64("run.arrival_rps") {
+            // finiteness checked here (NaN passes every range comparison);
+            // the rate itself is validated with the other serving knobs
+            if !v.is_finite() {
+                return Err(Error::Config(format!(
+                    "arrival_rps must be finite, got {v}"
+                )));
+            }
+            cfg.arrival_rps = v;
+        }
+        if let Some(v) = doc.get_i64("run.clients") {
+            cfg.clients = u32::try_from(v)
+                .map_err(|_| Error::Config(format!("clients {v} out of range")))?;
+        }
+        if let Some(v) = doc.get_i64("run.admit_depth") {
+            cfg.admit_depth = usize::try_from(v)
+                .map_err(|_| Error::Config(format!("admit_depth {v} out of range")))?;
+        }
+        if let Some(v) = doc.get_bool("run.coalesce") {
+            cfg.coalesce = v;
+        }
+        if let Some(v) = doc.get_i64("run.coalesce_limit") {
+            cfg.coalesce_limit = usize::try_from(v)
+                .map_err(|_| Error::Config(format!("coalesce_limit {v} out of range")))?;
+        }
         cfg.apply_link_overrides();
         cfg.validate()?;
         Ok(cfg)
@@ -540,6 +594,41 @@ impl RunConfig {
             return Err(Error::Config(format!(
                 "prefetch_depth must be in [0, 1024], got {}",
                 self.prefetch_depth
+            )));
+        }
+        // Serving knobs — single home of the range rules (the CLI/TOML
+        // parse sites only do checked int conversion).
+        if !(self.arrival_rps.is_finite() && self.arrival_rps >= 0.0) {
+            return Err(Error::Config(format!(
+                "arrival_rps must be >= 0 and finite (0 = closed loop), got {}",
+                self.arrival_rps
+            )));
+        }
+        if !(1..=65536).contains(&self.clients) {
+            return Err(Error::Config(format!(
+                "clients must be in [1, 65536], got {}",
+                self.clients
+            )));
+        }
+        if !(1..=65536).contains(&self.admit_depth) {
+            return Err(Error::Config(format!(
+                "admit_depth must be in [1, 65536], got {}",
+                self.admit_depth
+            )));
+        }
+        if !(1..=65536).contains(&self.coalesce_limit) {
+            return Err(Error::Config(format!(
+                "coalesce_limit must be in [1, 65536], got {}",
+                self.coalesce_limit
+            )));
+        }
+        if self.arrival_rps == 0.0 && self.clients as usize > self.admit_depth {
+            // A closed loop never has more than `clients` requests in the
+            // system, so a smaller admission queue would reject requests
+            // that by construction should never be dropped.
+            return Err(Error::Config(format!(
+                "closed-loop serving needs clients <= admit_depth, got {} > {}",
+                self.clients, self.admit_depth
             )));
         }
         if let Some(c) = self.classes {
@@ -773,6 +862,57 @@ no_overlap = true
         assert!(RunConfig::from_toml("[run]\nqueue_depth = 0").is_err());
         assert!(RunConfig::from_toml("[run]\nqueue_depth = 100000").is_err());
         assert!(RunConfig::from_toml("[run]\nsampler_workers = 100000").is_err());
+    }
+
+    #[test]
+    fn serving_knobs_parse_and_validate() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[run]
+serve_requests = 128
+arrival_rps = 250.5
+clients = 4
+admit_depth = 16
+coalesce = false
+coalesce_limit = 4
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve_requests, 128);
+        assert!((cfg.arrival_rps - 250.5).abs() < 1e-12);
+        assert_eq!(cfg.clients, 4);
+        assert_eq!(cfg.admit_depth, 16);
+        assert!(!cfg.coalesce);
+        assert_eq!(cfg.coalesce_limit, 4);
+
+        // serving defaults: closed loop, one client, coalescing on
+        let d = RunConfig::default();
+        assert_eq!(d.arrival_rps, 0.0);
+        assert_eq!(d.clients, 1);
+        assert!(d.coalesce);
+
+        assert!(RunConfig::from_toml("[run]\narrival_rps = -1.0").is_err());
+        assert!(RunConfig::from_toml("[run]\narrival_rps = nan").is_err());
+        assert!(RunConfig::from_toml("[run]\narrival_rps = inf").is_err());
+        assert!(RunConfig::from_toml("[run]\nclients = 0").is_err());
+        assert!(RunConfig::from_toml("[run]\nclients = -2").is_err());
+        assert!(RunConfig::from_toml("[run]\nadmit_depth = 0").is_err());
+        assert!(RunConfig::from_toml("[run]\ncoalesce_limit = 0").is_err());
+        assert!(RunConfig::from_toml("[run]\nserve_requests = -1").is_err());
+        // 2^32 + 1 must not wrap into the valid window via `as` truncation.
+        assert!(RunConfig::from_toml("[run]\nclients = 4294967297").is_err());
+    }
+
+    #[test]
+    fn closed_loop_clients_must_fit_the_admission_queue() {
+        // clients > admit_depth with arrival_rps = 0 would make the closed
+        // loop reject requests that can never legitimately overflow
+        let err =
+            RunConfig::from_toml("[run]\nclients = 64\nadmit_depth = 8").unwrap_err();
+        assert!(err.to_string().contains("clients <= admit_depth"), "{err}");
+        // the same queue is fine under an open-loop arrival stream
+        RunConfig::from_toml("[run]\nclients = 64\nadmit_depth = 8\narrival_rps = 100.0")
+            .unwrap();
     }
 
     #[test]

@@ -13,48 +13,76 @@ pub struct ComputeModel {
     pub sample_slots_per_step: u64,
 }
 
+/// Hidden width assumed when no artifact manifest supplies one (matches the
+/// AOT compiler's default GNN width).
+pub const DEFAULT_HIDDEN: usize = 64;
+
 impl ComputeModel {
     /// Estimate from the artifact's shapes.
     pub fn from_spec(spec: &ArtifactSpec) -> ComputeModel {
-        let arch = spec.arch.as_deref().unwrap_or("sage");
-        let nl = spec.fanouts.len();
-        let mut dims = vec![spec.in_dim];
+        estimate(
+            spec.arch.as_deref().unwrap_or("sage"),
+            spec.batch,
+            spec.hidden,
+            spec.in_dim,
+            spec.classes,
+            &spec.fanouts,
+            &spec.layer_sizes,
+            spec.param_elems(),
+        )
+    }
+
+    /// Estimate from run-config shapes when no artifact manifest exists
+    /// (native-backend inference/serving).  Layer sizes follow the
+    /// sampler's dst-prefix convention and the parameter count mirrors the
+    /// AOT compiler's layouts, so the estimate matches `from_spec` on an
+    /// artifact compiled for the same shapes.
+    pub fn from_shape(
+        arch: &str,
+        batch: usize,
+        fanouts: &[usize],
+        in_dim: usize,
+        hidden: usize,
+        classes: usize,
+    ) -> ComputeModel {
+        let nl = fanouts.len();
+        let layer_sizes = Self::layer_sizes_for(batch, fanouts);
+        let mut dims = vec![in_dim];
         for _ in 0..nl {
-            dims.push(spec.hidden);
+            dims.push(hidden);
         }
-        let mut fwd = 0f64;
-        let mut launches = 6u64; // loss + optimizer epilogue
+        let mut params = 0usize;
         for l in 0..nl {
-            let n_dst = spec.layer_sizes[l + 1] as f64;
-            let n_src = spec.layer_sizes[l] as f64;
-            let k = spec.fanouts[l] as f64;
-            let (d_in, d_out) = (dims[l] as f64, dims[l + 1] as f64);
-            if arch == "gat" {
-                // projection of all sources + per-slot attention work
-                fwd += 2.0 * n_src * d_in * d_out; // z = x W
-                fwd += n_dst * (k + 1.0) * d_out * 6.0; // scores+softmax+wsum
-                launches += 12;
+            let (d_in, d_out) = (dims[l], dims[l + 1]);
+            params += if arch == "gat" {
+                d_in * d_out + 3 * d_out // W + attention pair + bias
             } else {
-                fwd += 2.0 * n_dst * d_in * d_out; // W_self
-                fwd += 2.0 * n_dst * d_in * d_out; // W_nbr
-                fwd += n_dst * k * d_in * 2.0; // masked mean agg
-                launches += 8;
-            }
+                2 * d_in * d_out + d_out // W_self + W_nbr + bias
+            };
         }
-        // classifier head
-        fwd += 2.0 * spec.batch as f64 * spec.hidden as f64 * spec.classes as f64;
-        // backward ~= 2x forward; SGD+momentum ~= 4 ops/param
-        let flops = fwd * 3.0 + spec.param_elems() as f64 * 4.0;
-        // sampling examines each neighbor slot (+ bookkeeping folded into
-        // the per-edge constant)
-        let slots: u64 = (0..nl)
-            .map(|l| (spec.layer_sizes[l + 1] * spec.fanouts[l]) as u64)
-            .sum();
-        ComputeModel {
-            flops_per_step: flops,
-            kernel_launches: launches,
-            sample_slots_per_step: slots,
+        params += hidden * classes + classes; // head
+        estimate(
+            arch,
+            batch,
+            hidden,
+            in_dim,
+            classes,
+            fanouts,
+            &layer_sizes,
+            params,
+        )
+    }
+
+    /// Simulated layer sizes for config shapes (dst-prefix convention:
+    /// `layer_sizes[0]` is the gathered block, `layer_sizes[nl]` the batch).
+    pub fn layer_sizes_for(batch: usize, fanouts: &[usize]) -> Vec<usize> {
+        let nl = fanouts.len();
+        let mut layer_sizes = vec![0usize; nl + 1];
+        layer_sizes[nl] = batch;
+        for l in (0..nl).rev() {
+            layer_sizes[l] = layer_sizes[l + 1] * (1 + fanouts[l]);
         }
+        layer_sizes
     }
 
     /// Simulated GPU step time on `sys`.
@@ -66,6 +94,56 @@ impl ComputeModel {
     /// Simulated host sampling time per step on `sys`.
     pub fn sample_step_s(&self, sys: &SystemProfile) -> f64 {
         self.sample_slots_per_step as f64 * sys.sample_s_per_edge
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn estimate(
+    arch: &str,
+    batch: usize,
+    hidden: usize,
+    in_dim: usize,
+    classes: usize,
+    fanouts: &[usize],
+    layer_sizes: &[usize],
+    param_elems: usize,
+) -> ComputeModel {
+    let nl = fanouts.len();
+    let mut dims = vec![in_dim];
+    for _ in 0..nl {
+        dims.push(hidden);
+    }
+    let mut fwd = 0f64;
+    let mut launches = 6u64; // loss + optimizer epilogue
+    for l in 0..nl {
+        let n_dst = layer_sizes[l + 1] as f64;
+        let n_src = layer_sizes[l] as f64;
+        let k = fanouts[l] as f64;
+        if arch == "gat" {
+            // projection of all sources + per-slot attention work
+            fwd += 2.0 * n_src * dims[l] as f64 * dims[l + 1] as f64; // z = x W
+            fwd += n_dst * (k + 1.0) * dims[l + 1] as f64 * 6.0; // scores+softmax+wsum
+            launches += 12;
+        } else {
+            fwd += 2.0 * n_dst * dims[l] as f64 * dims[l + 1] as f64; // W_self
+            fwd += 2.0 * n_dst * dims[l] as f64 * dims[l + 1] as f64; // W_nbr
+            fwd += n_dst * k * dims[l] as f64 * 2.0; // masked mean agg
+            launches += 8;
+        }
+    }
+    // classifier head
+    fwd += 2.0 * batch as f64 * hidden as f64 * classes as f64;
+    // backward ~= 2x forward; SGD+momentum ~= 4 ops/param
+    let flops = fwd * 3.0 + param_elems as f64 * 4.0;
+    // sampling examines each neighbor slot (+ bookkeeping folded into
+    // the per-edge constant)
+    let slots: u64 = (0..nl)
+        .map(|l| (layer_sizes[l + 1] * fanouts[l]) as u64)
+        .sum();
+    ComputeModel {
+        flops_per_step: flops,
+        kernel_launches: launches,
+        sample_slots_per_step: slots,
     }
 }
 
@@ -112,6 +190,23 @@ mod tests {
         let gat = ComputeModel::from_spec(&spec("gat"));
         assert!(gat.train_step_s(&sys) > 0.5 * sage.train_step_s(&sys));
         assert!(gat.kernel_launches > sage.kernel_launches);
+    }
+
+    #[test]
+    fn from_shape_matches_spec_shapes() {
+        let a = ComputeModel::from_spec(&spec("sage"));
+        let b = ComputeModel::from_shape("sage", 64, &[5, 5], 100, 64, 47);
+        assert_eq!(a.sample_slots_per_step, b.sample_slots_per_step);
+        assert_eq!(a.kernel_launches, b.kernel_launches);
+        // identical except from_shape's analytic optimizer-param term (the
+        // fixture spec carries no IoSpec inputs, so its param_elems() is 0)
+        let params = (2 * 100 * 64 + 64) + (2 * 64 * 64 + 64) + 64 * 47 + 47;
+        let param_term = params as f64 * 4.0;
+        assert!((b.flops_per_step - a.flops_per_step - param_term).abs() < 1e-6);
+        assert_eq!(
+            ComputeModel::layer_sizes_for(64, &[5, 5]),
+            vec![2304, 384, 64]
+        );
     }
 
     #[test]

@@ -6,16 +6,25 @@
 //! artifact returns logits for the batch roots.  Reports per-batch latency
 //! (measured PJRT + simulated transfer) and accuracy against the synthetic
 //! labels — the serving-path counterpart of the Fig. 8 trainer.
+//!
+//! Backend selection mirrors the trainer: `--backend pjrt` requires the
+//! `{arch}_{dataset}_infer` artifact, `--backend native` executes the
+//! built-in softmax model over the gathered roots, and `auto` falls back
+//! to native when the infer artifact is absent — so inference (and the
+//! serving engine built on it) runs end-to-end in a container with no XLA
+//! build.
 
 use std::path::Path;
 
-use crate::config::RunConfig;
+use crate::config::{Backend, RunConfig};
+use crate::coordinator::costmodel::{ComputeModel, DEFAULT_HIDDEN};
 use crate::coordinator::trainer::Breakdown;
 use crate::error::{Error, Result};
 use crate::featurestore::FeatureStore;
 use crate::graph::{Csr, DatasetPreset};
 use crate::runtime::client::{literal_f32, literal_i32};
-use crate::runtime::{ArtifactKind, LoadedArtifact, Manifest, Runtime};
+use crate::runtime::native::{self, NativeTrainState};
+use crate::runtime::{ArtifactKind, ArtifactSpec, LoadedArtifact, Manifest, Runtime};
 use crate::sampler::NeighborSampler;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -26,12 +35,21 @@ use crate::util::timer::Timer;
 pub struct InferenceReport {
     pub batches: u64,
     pub accuracy: f64,
-    /// Measured PJRT execution latency per batch (seconds).
+    /// Measured execution latency per batch (seconds).
     pub exec_latency: Summary,
     /// Simulated end-to-end batch latency on the target system (sample +
     /// transfer + execute estimate).
     pub sim_latency: Summary,
     pub breakdown_sim: Breakdown,
+}
+
+/// Execution backend for the forward pass.
+enum InferExec {
+    Pjrt {
+        artifact: LoadedArtifact,
+        params: Vec<xla::Literal>,
+    },
+    Native(NativeTrainState),
 }
 
 /// Forward-only runner over the full data path.
@@ -40,13 +58,33 @@ pub struct InferenceRunner {
     preset: DatasetPreset,
     graph: Csr,
     store: FeatureStore,
-    artifact: LoadedArtifact,
-    params: Vec<xla::Literal>,
+    exec: InferExec,
+    compute: ComputeModel,
+    /// Rows the feature gather delivers per batch (= layer_sizes[0]).
+    gather_rows: usize,
+    classes: usize,
     rng: Rng,
 }
 
+/// Dims of a named param in the artifact's manifest inputs.  A manifest
+/// whose param names don't match the train state (stale or hand-edited)
+/// is a runtime error naming the missing param, not a panic.
+fn param_dims(spec: &ArtifactSpec, name: &str) -> Result<Vec<usize>> {
+    spec.params()
+        .find(|p| p.name == name)
+        .map(|p| p.dims.clone())
+        .ok_or_else(|| {
+            Error::Runtime(format!(
+                "artifact {} has no param `{name}` among its manifest inputs \
+                 (stale or hand-edited manifest; re-run `make artifacts`)",
+                spec.name
+            ))
+        })
+}
+
 impl InferenceRunner {
-    /// Build the stack and load `{arch}_{dataset}_infer`.
+    /// Build the stack; load `{arch}_{dataset}_infer` or fall back to the
+    /// native forward model per the backend selection rules above.
     pub fn new(cfg: RunConfig) -> Result<InferenceRunner> {
         let mut preset = DatasetPreset::by_abbv(&cfg.dataset)
             .ok_or_else(|| Error::Config(format!("unknown dataset `{}`", cfg.dataset)))?;
@@ -56,45 +94,84 @@ impl InferenceRunner {
         // Shares the trainer's store construction so `Tiered` inference
         // gets the same degree-ranked hot set and capacity knobs.
         let store = crate::coordinator::trainer::build_store(&cfg, &graph, &preset)?;
-        let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
-        let spec = manifest.get(&format!("{}_infer", cfg.artifact_name()))?;
-        if spec.kind != ArtifactKind::Infer {
-            return Err(Error::Runtime(format!("{} is not an infer artifact", spec.name)));
-        }
-        crate::coordinator::trainer::check_artifact_classes(&cfg, spec, preset.classes)?;
-        let runtime = Runtime::cpu()?;
-        let artifact = runtime.load(Path::new(&cfg.artifacts_dir), spec)?;
-        // Glorot params (a real deployment would load a checkpoint; the
-        // serving *path* — gather, transfer, execute — is what we exercise).
-        let state = crate::runtime::TrainState::init(spec, cfg.seed ^ 0x9A23)?;
-        let params = state
-            .param_names()
-            .iter()
-            .map(|n| {
-                let vals = state.param_values(n)?;
-                let dims: Vec<usize> = spec
-                    .params()
-                    .find(|p| &p.name == n)
-                    .map(|p| p.dims.clone())
-                    .unwrap();
-                literal_f32(&vals, &dims)
-            })
-            .collect::<Result<Vec<_>>>()?;
+
+        let infer_name = format!("{}_infer", cfg.artifact_name());
+        let manifest = Manifest::load(Path::new(&cfg.artifacts_dir));
+        let use_pjrt = match cfg.backend {
+            Backend::Pjrt => true,
+            Backend::Native => false,
+            Backend::Auto => manifest
+                .as_ref()
+                .map(|m| m.get(&infer_name).is_ok())
+                .unwrap_or(false),
+        };
+
+        let (exec, compute, gather_rows) = if use_pjrt {
+            let manifest = manifest?;
+            let spec = manifest.get(&infer_name)?;
+            if spec.kind != ArtifactKind::Infer {
+                return Err(Error::Runtime(format!(
+                    "{} is not an infer artifact",
+                    spec.name
+                )));
+            }
+            crate::coordinator::trainer::check_artifact_classes(&cfg, spec, preset.classes)?;
+            let runtime = Runtime::cpu()?;
+            let artifact = runtime.load(Path::new(&cfg.artifacts_dir), spec)?;
+            // Glorot params (a real deployment would load a checkpoint; the
+            // serving *path* — gather, transfer, execute — is what we exercise).
+            let state = crate::runtime::TrainState::init(spec, cfg.seed ^ 0x9A23)?;
+            let params = state
+                .param_names()
+                .iter()
+                .map(|n| {
+                    let vals = state.param_values(n)?;
+                    literal_f32(&vals, &param_dims(spec, n)?)
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let compute = ComputeModel::from_spec(spec);
+            let gather_rows = spec.layer_sizes[0];
+            (InferExec::Pjrt { artifact, params }, compute, gather_rows)
+        } else {
+            log::info!(
+                "backend: native forward model (softmax over roots) — no AOT \
+                 artifacts needed"
+            );
+            let state = NativeTrainState::init(
+                preset.feat_dim as usize,
+                preset.classes,
+                native::DEFAULT_LR,
+                cfg.seed ^ 0x9A23,
+            );
+            let compute = ComputeModel::from_shape(
+                &cfg.arch,
+                cfg.batch,
+                &cfg.fanouts,
+                preset.feat_dim as usize,
+                DEFAULT_HIDDEN,
+                preset.classes as usize,
+            );
+            let gather_rows = ComputeModel::layer_sizes_for(cfg.batch, &cfg.fanouts)[0];
+            (InferExec::Native(state), compute, gather_rows)
+        };
+
+        let classes = preset.classes as usize;
         let rng = Rng::new(cfg.seed);
         Ok(InferenceRunner {
             cfg,
             preset,
             graph,
             store,
-            artifact,
-            params,
+            exec,
+            compute,
+            gather_rows,
+            classes,
             rng,
         })
     }
 
     /// Serve `n_batches` sampled batches; returns latency + accuracy stats.
     pub fn run(&mut self, n_batches: u64) -> Result<InferenceReport> {
-        let spec = &self.artifact.spec;
         let sampler = NeighborSampler::new(&self.graph, &self.cfg.fanouts, self.preset.classes);
         let mut rng = self.rng.fork(1);
         let mut report = InferenceReport::default();
@@ -102,7 +179,8 @@ impl InferenceRunner {
         let mut total = 0u64;
         let n_nodes = self.graph.num_nodes();
         let dim = self.store.dim();
-        let mut x0 = vec![0f32; spec.layer_sizes[0] * dim];
+        let mut x0 = vec![0f32; self.gather_rows * dim];
+        let sim_fwd = self.compute.train_step_s(&self.cfg.system) / 3.0;
 
         for b in 0..n_batches {
             let seeds: Vec<u32> = (0..self.cfg.batch)
@@ -117,39 +195,61 @@ impl InferenceRunner {
                 self.store.gather_into(&mb.src_nodes, &mut x0)?
             };
 
-            // assemble literals: params, x0, nbrs, masks
-            let x0_lit = literal_f32(&x0, &[spec.layer_sizes[0], spec.in_dim])?;
-            let mut nbr_lits = Vec::new();
-            let mut mask_lits = Vec::new();
-            for (l, layer) in mb.layers.iter().enumerate() {
-                let dims = [spec.layer_sizes[l + 1], spec.fanouts[l]];
-                nbr_lits.push(literal_i32(&layer.nbr, &dims)?);
-                mask_lits.push(literal_f32(&layer.mask, &dims)?);
-            }
-            let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
-            inputs.push(&x0_lit);
-            inputs.extend(nbr_lits.iter());
-            inputs.extend(mask_lits.iter());
-
             let t_exec = Timer::start();
-            let outs = self.artifact.execute(&inputs)?;
-            let exec_s = t_exec.elapsed_s();
-            report.exec_latency.add(exec_s);
+            match &self.exec {
+                InferExec::Pjrt { artifact, params } => {
+                    let spec = &artifact.spec;
+                    // assemble literals: params, x0, nbrs, masks
+                    let x0_lit = literal_f32(&x0, &[spec.layer_sizes[0], spec.in_dim])?;
+                    let mut nbr_lits = Vec::new();
+                    let mut mask_lits = Vec::new();
+                    for (l, layer) in mb.layers.iter().enumerate() {
+                        let dims = [spec.layer_sizes[l + 1], spec.fanouts[l]];
+                        nbr_lits.push(literal_i32(&layer.nbr, &dims)?);
+                        mask_lits.push(literal_f32(&layer.mask, &dims)?);
+                    }
+                    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+                    inputs.push(&x0_lit);
+                    inputs.extend(nbr_lits.iter());
+                    inputs.extend(mask_lits.iter());
 
-            let logits = outs[0].to_vec::<f32>()?;
-            for (i, &label) in mb.labels.iter().enumerate() {
-                let row = &logits[i * spec.classes..(i + 1) * spec.classes];
-                let argmax = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(j, _)| j as i32)
-                    .unwrap();
-                if argmax == label {
-                    correct += 1;
+                    let outs = artifact.execute(&inputs)?;
+                    let logits = outs[0].to_vec::<f32>()?;
+                    for (i, &label) in mb.labels.iter().enumerate() {
+                        let row = &logits[i * spec.classes..(i + 1) * spec.classes];
+                        // total_cmp: NaN logits order last instead of panicking
+                        let argmax = row
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.total_cmp(b.1))
+                            .map(|(j, _)| j as i32)
+                            .unwrap();
+                        if argmax == label {
+                            correct += 1;
+                        }
+                        total += 1;
+                    }
                 }
-                total += 1;
+                InferExec::Native(state) => {
+                    // dst-prefix convention: the batch roots are the first
+                    // `labels.len()` rows of the gathered block
+                    let mut logits = vec![0f32; self.classes];
+                    for (i, &label) in mb.labels.iter().enumerate() {
+                        state.logits_into(&x0[i * dim..(i + 1) * dim], &mut logits);
+                        let argmax = logits
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.total_cmp(b.1))
+                            .map(|(j, _)| j as i32)
+                            .unwrap();
+                        if argmax == label {
+                            correct += 1;
+                        }
+                        total += 1;
+                    }
+                }
             }
+            report.exec_latency.add(t_exec.elapsed_s());
 
             // simulated per-batch latency on the target system: sampling
             // estimate + transfer model + forward-only GPU estimate (the
@@ -160,10 +260,6 @@ impl InferenceRunner {
                 .map(|l| (l.n_dst * l.fanout) as f64)
                 .sum::<f64>()
                 * self.cfg.system.sample_s_per_edge;
-            let sim_fwd =
-                crate::coordinator::costmodel::ComputeModel::from_spec(spec)
-                    .train_step_s(&self.cfg.system)
-                    / 3.0;
             report.breakdown_sim.sample_s += sim_sample;
             report.breakdown_sim.transfer_s += cost.time_s;
             report.breakdown_sim.train_s += sim_fwd;
@@ -172,5 +268,56 @@ impl InferenceRunner {
         }
         report.accuracy = correct as f64 / total.max(1) as f64;
         Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{ArtifactKind, IoRole, IoSpec};
+    use crate::tensor::DType;
+
+    fn spec_with_params(names: &[&str]) -> ArtifactSpec {
+        ArtifactSpec {
+            name: "sage_x_infer".into(),
+            file: "x.hlo.txt".into(),
+            kind: ArtifactKind::Infer,
+            arch: Some("sage".into()),
+            batch: 4,
+            hidden: 8,
+            in_dim: 16,
+            classes: 3,
+            fanouts: vec![2],
+            layer_sizes: vec![12, 4],
+            lr: 0.003,
+            momentum: 0.9,
+            inputs: names
+                .iter()
+                .map(|n| IoSpec {
+                    role: IoRole::Param,
+                    name: (*n).into(),
+                    dtype: DType::F32,
+                    dims: vec![16, 8],
+                })
+                .collect(),
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn param_dims_finds_present_param() {
+        let spec = spec_with_params(&["l0_w_self", "l0_w_nbr"]);
+        assert_eq!(param_dims(&spec, "l0_w_nbr").unwrap(), vec![16, 8]);
+    }
+
+    #[test]
+    fn missing_param_is_clear_error_not_panic() {
+        // a hand-edited manifest whose param names drifted from the train
+        // state must produce Error::Runtime naming the missing param
+        let spec = spec_with_params(&["l0_w_self"]);
+        let err = param_dims(&spec, "head_w").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("head_w"), "{msg}");
+        assert!(msg.contains("sage_x_infer"), "{msg}");
     }
 }

@@ -9,6 +9,7 @@ pub mod microbench;
 pub mod power;
 pub mod report;
 pub mod schedule;
+pub mod serving;
 pub mod simclock;
 pub mod trainer;
 
@@ -17,5 +18,6 @@ pub use inference::{InferenceReport, InferenceRunner};
 pub use power::{epoch_power, PowerReport};
 pub use report::Table;
 pub use schedule::{schedule_epoch, OverlapParams, OverlapReport};
+pub use serving::{ServingEngine, ServingReport};
 pub use simclock::{ResourceBusy, ResourceKind, SimResource};
 pub use trainer::{Breakdown, DedupReport, EpochReport, Trainer};

@@ -136,6 +136,20 @@ pub fn pct(f: f64) -> String {
     format!("{:.1}%", f * 100.0)
 }
 
+/// One-line tail-latency summary in milliseconds for a latency
+/// [`Summary`](crate::util::stats::Summary) — the serving engine's SLO
+/// digest: `"p50 1.20ms  p95 3.40ms  p99 5.60ms  p999 7.80ms  max 9.00ms"`.
+pub fn latency_line(s: &crate::util::stats::Summary) -> String {
+    format!(
+        "p50 {}ms  p95 {}ms  p99 {}ms  p999 {}ms  max {}ms",
+        ms(s.percentile(0.50)),
+        ms(s.percentile(0.95)),
+        ms(s.percentile(0.99)),
+        ms(s.percentile(0.999)),
+        ms(s.max())
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +178,18 @@ mod tests {
         assert_eq!(ms(0.0123), "12.30");
         assert_eq!(ratio(1.234), "1.23x");
         assert_eq!(pct(0.471), "47.1%");
+    }
+
+    #[test]
+    fn latency_line_reports_ms_percentiles() {
+        let mut s = crate::util::stats::Summary::new();
+        for i in 1..=1000 {
+            s.add(i as f64 * 1e-3); // 1ms..1000ms
+        }
+        let line = latency_line(&s);
+        assert!(line.starts_with("p50 500.00ms"), "{line}");
+        assert!(line.contains("p99 990.00ms"), "{line}");
+        assert!(line.ends_with("max 1000.00ms"), "{line}");
     }
 
     #[test]

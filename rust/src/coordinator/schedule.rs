@@ -155,6 +155,38 @@ fn dominant_link(d: &ResourceDemand) -> ResourceKind {
     kind
 }
 
+/// Decomposition of one step's transfer window into schedulable segments
+/// (shared by the epoch engine and the serving engine): the launch-only
+/// GPU pre-segment and the scale that fits the per-class link occupancies
+/// inside the window.  See the long comment in [`schedule_epoch`]'s link
+/// stage for the model.
+pub(crate) struct LinkWindow {
+    /// The transfer window minus its CPU share.
+    pub link_dur_s: f64,
+    /// Factor applied to each class occupancy so their sum fits the
+    /// window (1.0 when they already fit).
+    pub scale: f64,
+    /// Chain-only GPU pre-segment (kernel-launch overhead — delays the
+    /// step but occupies no link).
+    pub pre_s: f64,
+}
+
+pub(crate) fn link_window(d: &ResourceDemand) -> LinkWindow {
+    let link_dur_s = (d.total_s - d.cpu_s).max(0.0);
+    let raw_class_s = d.host_s + d.peer_s + d.storage_s;
+    let scale = if raw_class_s > link_dur_s && raw_class_s > 0.0 {
+        link_dur_s / raw_class_s
+    } else {
+        1.0
+    };
+    let pre_s = (link_dur_s - raw_class_s * scale).max(0.0);
+    LinkWindow {
+        link_dur_s,
+        scale,
+        pre_s,
+    }
+}
+
 /// One scheduled stage: its attribution resource, duration, and the event
 /// that bound its start time (`None` for an unconstrained start at t=0).
 struct Event {
@@ -223,18 +255,12 @@ pub fn schedule_epoch(demands: &[ResourceDemand], p: &OverlapParams) -> OverlapR
         // across concurrent GPUs; the baseline's host_time includes its
         // CPU share), they are scaled to fit — per-link busy time never
         // exceeds what the step actually spends on the link.
-        let link_dur = (d.total_s - d.cpu_s).max(0.0);
-        let raw_class_s = d.host_s + d.peer_s + d.storage_s;
-        let scale = if raw_class_s > link_dur && raw_class_s > 0.0 {
-            link_dur / raw_class_s
-        } else {
-            1.0
-        };
-        let pre_s = (link_dur - raw_class_s * scale).max(0.0);
-        if pre_s > 0.0 {
+        let win = link_window(d);
+        let scale = win.scale;
+        if win.pre_s > 0.0 {
             let ev = events.len();
-            events.push(Event { res: ResourceKind::Gpu, dur_s: pre_s, binding: Some(prev) });
-            t += pre_s;
+            events.push(Event { res: ResourceKind::Gpu, dur_s: win.pre_s, binding: Some(prev) });
+            t += win.pre_s;
             prev = ev;
         }
         let (mut start, mut bind) = (t, Some(prev));
@@ -316,7 +342,7 @@ fn serial_anchor(demands: &[ResourceDemand], p: &OverlapParams) -> OverlapReport
     let mut busy = ResourceBusy::default();
     let mut critical = ResourceBusy::default();
     for d in demands {
-        let link_dur = (d.total_s - d.cpu_s).max(0.0);
+        let link_dur = link_window(d).link_dur_s;
         busy.add(ResourceKind::Sampler, p.sample_step_s + d.cpu_s);
         critical.add(ResourceKind::Sampler, p.sample_step_s + d.cpu_s);
         for (kind, s) in [

@@ -1,0 +1,507 @@
+//! Request-driven online inference serving (`--serve`): the ROADMAP's
+//! production-shaped counterpart of the batch inference runner, built on
+//! the discrete-event substrate of `simclock`.
+//!
+//! The batch runner (`coordinator/inference.rs`) measures a closed back-to-
+//! back loop — useful for throughput, blind to *latency under load*, which
+//! is what a deployment actually provisions for (the paper's §4.1 framing:
+//! GPU out-of-memory training *and inference*).  This engine generates an
+//! arrival stream of inference requests, pushes them through a bounded
+//! admission queue, and schedules each dispatched batch's
+//! sample → gather → transfer → execute DAG onto the shared
+//! [`SimResource`]s, reporting tail latency (p50/p95/p99/p999), goodput,
+//! queue depth, and rejection rate.
+//!
+//! **Arrival models.**  `--arrival-rps R` draws Poisson interarrivals
+//! (`-ln(1-u)/R`) from the deterministic [`Rng`] — the open loop, where
+//! load is independent of service capacity and queues actually build.
+//! `--arrival-rps 0` (default) runs `--clients N` in a closed loop: each
+//! client re-issues the moment its previous request completes, so exactly
+//! `N` requests are ever in flight.  A single closed-loop client
+//! degenerates to the batch inference runner's serial rhythm — its
+//! simulated breakdown reproduces `InferenceRunner::run`'s bit-exactly
+//! (pinned by `tests/serving_properties.rs`).
+//!
+//! **Admission.**  An arrival that finds `--admit-depth` requests already
+//! queued is rejected and counted as goodput loss — the knob every SLO
+//! study turns first (shed load early, keep tail latency bounded).
+//!
+//! **Coalescing.**  While a batch is in service, queued requests pile up;
+//! the dispatcher folds up to `--coalesce-limit` of them into one
+//! minibatch via [`CoalescedGatherPlan`], extending the gather dedup
+//! *across* requests — hub rows two clients both need cross the link
+//! once.  The pinned invariant: each member's scattered feature block is
+//! bitwise identical to serving that request alone (rows are copied from
+//! the same gathered table, never recomputed), so coalescing changes
+//! *cost and latency only*, never results.  `--no-coalesce` dispatches
+//! one request per batch.
+//!
+//! Requests draw their seed sets deterministically: request `r` roots at
+//! nodes `(r*batch + k) % n` — the same window rule the batch runner uses
+//! per batch index — and minibatches are sampled in request-id order from
+//! the `fork(1)` sampler stream, so the sampled structure is identical
+//! whether or not batches coalesce (only *grouping* differs).
+//!
+//! [`SimResource`]: crate::coordinator::simclock::SimResource
+//! [`Rng`]: crate::util::rng::Rng
+//! [`CoalescedGatherPlan`]: crate::sampler::CoalescedGatherPlan
+
+use std::collections::VecDeque;
+use std::path::Path;
+
+use crate::config::{Backend, RunConfig};
+use crate::coordinator::costmodel::{ComputeModel, DEFAULT_HIDDEN};
+use crate::coordinator::schedule::link_window;
+use crate::coordinator::simclock::{ResourceBusy, ResourceKind, SimResource};
+use crate::coordinator::trainer::Breakdown;
+use crate::error::{Error, Result};
+use crate::featurestore::FeatureStore;
+use crate::graph::{Csr, DatasetPreset};
+use crate::interconnect::TransferCost;
+use crate::runtime::Manifest;
+use crate::sampler::{CoalescedGatherPlan, MiniBatch, NeighborSampler};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// One serving run's results.
+#[derive(Clone, Debug, Default)]
+pub struct ServingReport {
+    /// Requests the arrival stream offered (`admitted + rejected`).
+    pub offered: u64,
+    pub admitted: u64,
+    /// Arrivals dropped at the admission queue (goodput loss).
+    pub rejected: u64,
+    /// Requests served to completion (== admitted: the queue drains).
+    pub completed: u64,
+    /// Dispatched batches (`completed / batches` ≥ 1 is the mean
+    /// coalescing factor).
+    pub batches: u64,
+    /// Simulated time from the first arrival to the last completion.
+    pub makespan_s: f64,
+    /// Per-request end-to-end latency (arrival → completion), seconds.
+    pub latency: Summary,
+    /// Queue depth sampled at every arrival and dispatch.
+    pub queue_depth: Summary,
+    pub max_queue_depth: usize,
+    /// Simulated stage totals across all batches (the batch runner's
+    /// breakdown, for the single-client degeneracy anchor).
+    pub breakdown_sim: Breakdown,
+    /// Feature rows requested across all batches, before dedup.
+    pub requested_rows: u64,
+    /// Rows actually fetched (after per-request and cross-request dedup).
+    pub unique_rows: u64,
+    /// Seconds each simulated resource was occupied.
+    pub busy: ResourceBusy,
+    /// Resource with the largest busy share — what bound the run.
+    pub bound_by: ResourceKind,
+}
+
+impl ServingReport {
+    /// Completed requests per second of simulated makespan.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.completed as f64 / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of offered requests dropped at admission.
+    pub fn rejection_rate(&self) -> f64 {
+        if self.offered > 0 {
+            self.rejected as f64 / self.offered as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean requests per dispatched batch (1.0 with `--no-coalesce`).
+    pub fn coalesce_factor(&self) -> f64 {
+        if self.batches > 0 {
+            self.completed as f64 / self.batches as f64
+        } else {
+            1.0
+        }
+    }
+
+    /// Requested over fetched rows (cross-request dedup payoff).
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.unique_rows > 0 {
+            self.requested_rows as f64 / self.unique_rows as f64
+        } else {
+            1.0
+        }
+    }
+}
+
+/// A request sitting in the admission queue.
+struct Pending {
+    id: u64,
+    arrival_s: f64,
+    client: u32,
+}
+
+/// Request-driven serving engine over the full data path (sampler +
+/// feature store of the configured access mode) with simulated timing.
+///
+/// The store is stateful (hot-tier promotion, NVMe cache), so one engine
+/// should serve one run; build a fresh engine per experiment point.
+pub struct ServingEngine {
+    cfg: RunConfig,
+    preset: DatasetPreset,
+    graph: Csr,
+    store: FeatureStore,
+    compute: ComputeModel,
+    /// Feature rows one request's gather delivers (= layer_sizes[0]).
+    gather_rows: usize,
+}
+
+impl ServingEngine {
+    /// Build the serving stack.  Uses the `{arch}_{dataset}_infer`
+    /// artifact's shapes when the manifest has them, else the run-config
+    /// shapes — matching `InferenceRunner::new`'s model selection so the
+    /// degeneracy anchor holds in both environments.
+    pub fn new(cfg: RunConfig) -> Result<ServingEngine> {
+        let mut preset = DatasetPreset::by_abbv(&cfg.dataset)
+            .ok_or_else(|| Error::Config(format!("unknown dataset `{}`", cfg.dataset)))?;
+        crate::coordinator::trainer::apply_classes_override(&cfg, &mut preset);
+        let scale = preset.scale_for_budget(cfg.scale, cfg.feature_budget);
+        let graph = preset.build_graph(scale, cfg.seed)?;
+        let store = crate::coordinator::trainer::build_store(&cfg, &graph, &preset)?;
+
+        // Same shape-source rule as `InferenceRunner::new` (the backend
+        // decides, not mere manifest presence) so the single-client
+        // degeneracy anchor holds whether or not artifacts are built.
+        let infer_name = format!("{}_infer", cfg.artifact_name());
+        let manifest = Manifest::load(Path::new(&cfg.artifacts_dir));
+        let use_spec = match cfg.backend {
+            Backend::Pjrt => true,
+            Backend::Native => false,
+            Backend::Auto => manifest
+                .as_ref()
+                .map(|m| m.get(&infer_name).is_ok())
+                .unwrap_or(false),
+        };
+        let (compute, gather_rows) = if use_spec {
+            let manifest = manifest?;
+            let spec = manifest.get(&infer_name)?;
+            (ComputeModel::from_spec(spec), spec.layer_sizes[0])
+        } else {
+            (
+                ComputeModel::from_shape(
+                    &cfg.arch,
+                    cfg.batch,
+                    &cfg.fanouts,
+                    preset.feat_dim as usize,
+                    DEFAULT_HIDDEN,
+                    preset.classes as usize,
+                ),
+                ComputeModel::layer_sizes_for(cfg.batch, &cfg.fanouts)[0],
+            )
+        };
+
+        Ok(ServingEngine {
+            cfg,
+            preset,
+            graph,
+            store,
+            compute,
+            gather_rows,
+        })
+    }
+
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Serve the configured request stream.
+    pub fn run(&mut self) -> Result<ServingReport> {
+        Ok(self.run_inner(false)?.0)
+    }
+
+    /// Serve, additionally returning every admitted request's gathered
+    /// feature block (indexed by request id; rejected ids stay empty).
+    /// This is the hook `tests/serving_properties.rs` uses to pin the
+    /// coalescing invariant: block `r` must be bitwise identical whether
+    /// or not request `r` shared a batch with others.
+    pub fn run_with_blocks(&mut self) -> Result<(ServingReport, Vec<Vec<f32>>)> {
+        self.run_inner(true)
+    }
+
+    fn run_inner(&mut self, capture: bool) -> Result<(ServingReport, Vec<Vec<f32>>)> {
+        let total = self.cfg.serve_requests;
+        let open_loop = self.cfg.arrival_rps > 0.0;
+        let batch = self.cfg.batch;
+        let n_nodes = self.graph.num_nodes();
+        let dim = self.store.dim();
+        let sampler = NeighborSampler::new(&self.graph, &self.cfg.fanouts, self.preset.classes);
+        // fork(1) is the batch runner's sampler stream — requests sample
+        // identically to its batches; fork(2) feeds the arrival draws.
+        let mut base = Rng::new(self.cfg.seed);
+        let mut srng = base.fork(1);
+        let mut arng = base.fork(2);
+        let sim_fwd = self.compute.train_step_s(&self.cfg.system) / 3.0;
+
+        let lanes = self.cfg.sampler_workers.max(1);
+        let mut cpu = SimResource::new(ResourceKind::Sampler, lanes);
+        let mut host = SimResource::new(ResourceKind::HostLink, 1);
+        let mut peer = SimResource::new(ResourceKind::PeerLink, 1);
+        let mut storage = SimResource::new(ResourceKind::StorageLink, 1);
+        let mut gpu = SimResource::new(ResourceKind::Gpu, 1);
+        let mut ev = 0usize; // occupancy tags (no critical-path walk here)
+
+        // Arrival times are non-decreasing by construction: the open loop
+        // is a cumulative sum, and closed-loop re-issues happen at batch
+        // completions, which the FIFO GPU emits in order — so a deque
+        // suffices (no heap, no float ordering).
+        let mut arrivals: VecDeque<(f64, u32)> = VecDeque::new();
+        let mut offered: u64 = 0;
+        if open_loop {
+            let mut t = 0.0;
+            for _ in 0..total {
+                let u = arng.gen_f64();
+                t += -(1.0 - u).ln() / self.cfg.arrival_rps;
+                arrivals.push_back((t, 0));
+            }
+            offered = total;
+        } else {
+            let clients = (self.cfg.clients as u64).min(total);
+            for c in 0..clients {
+                arrivals.push_back((0.0, c as u32));
+            }
+            offered = clients;
+        }
+
+        let mut report = ServingReport::default();
+        let mut blocks: Vec<Vec<f32>> = if capture {
+            vec![Vec::new(); total as usize]
+        } else {
+            Vec::new()
+        };
+        let mut queue: VecDeque<Pending> = VecDeque::new();
+        let mut next_id: u64 = 0;
+
+        while !queue.is_empty() || !arrivals.is_empty() {
+            if queue.is_empty() {
+                // idle until the next arrival (an empty queue can't reject)
+                let (t_a, client) = arrivals.pop_front().unwrap();
+                queue.push_back(Pending {
+                    id: next_id,
+                    arrival_s: t_a,
+                    client,
+                });
+                next_id += 1;
+                report.admitted += 1;
+                report.queue_depth.add(queue.len() as f64);
+                report.max_queue_depth = report.max_queue_depth.max(queue.len());
+                continue;
+            }
+
+            // The next batch starts sampling when a sampler lane frees (or
+            // immediately for the queue head's arrival, if later).
+            let lane = cpu.earliest_lane();
+            let (lane_free, _) = cpu.peek(lane);
+            let t_start = lane_free.max(queue.front().unwrap().arrival_s);
+
+            // Everything arriving up to the dispatch instant faces the
+            // admission check against the queue it actually finds.
+            while let Some(&(t_a, _)) = arrivals.front() {
+                if t_a > t_start {
+                    break;
+                }
+                let (t_a, client) = arrivals.pop_front().unwrap();
+                if queue.len() >= self.cfg.admit_depth {
+                    report.rejected += 1;
+                } else {
+                    queue.push_back(Pending {
+                        id: next_id,
+                        arrival_s: t_a,
+                        client,
+                    });
+                    report.admitted += 1;
+                    report.max_queue_depth = report.max_queue_depth.max(queue.len());
+                }
+                next_id += 1;
+                report.queue_depth.add(queue.len() as f64);
+            }
+
+            // Form the batch: FIFO order == request-id order.
+            let k = if self.cfg.coalesce {
+                queue.len().min(self.cfg.coalesce_limit)
+            } else {
+                1
+            };
+            let members: Vec<Pending> = (0..k).map(|_| queue.pop_front().unwrap()).collect();
+            report.queue_depth.add(queue.len() as f64);
+
+            // Sample each member (id order keeps the fork(1) stream
+            // grouping-independent); the lane serves the whole batch.
+            let mut mbs: Vec<MiniBatch> = Vec::with_capacity(k);
+            let mut sample_dur = 0.0;
+            for m in &members {
+                let seeds: Vec<u32> = (0..batch)
+                    .map(|kk| ((m.id as usize * batch + kk) % n_nodes) as u32)
+                    .collect();
+                let mb = sampler.sample(&seeds, &mut srng);
+                let sim_sample = mb
+                    .layers
+                    .iter()
+                    .map(|l| (l.n_dst * l.fanout) as f64)
+                    .sum::<f64>()
+                    * self.cfg.system.sample_s_per_edge;
+                sample_dur += sim_sample;
+                report.breakdown_sim.sample_s += sim_sample;
+                mbs.push(mb);
+            }
+            cpu.occupy(lane, t_start, sample_dur, ev);
+            ev += 1;
+            let mut t = t_start + sample_dur;
+
+            // Gather (real rows, priced by the store's access mode).
+            let cost = self.gather_batch(&members, &mbs, dim, capture, &mut blocks, &mut report)?;
+            report.breakdown_sim.transfer_s += cost.time_s;
+
+            // Transfer window → CPU share, launch-only pre-segment, and
+            // scaled per-class link occupancies (the epoch engine's
+            // decomposition, shared via `link_window`).
+            let d = cost.demand();
+            if d.cpu_s > 0.0 {
+                cpu.occupy(lane, t, d.cpu_s, ev);
+                ev += 1;
+                t += d.cpu_s;
+            }
+            let win = link_window(&d);
+            t += win.pre_s;
+            let mut start = t;
+            let classes = [
+                (d.host_s, &mut host),
+                (d.peer_s, &mut peer),
+                (d.storage_s, &mut storage),
+            ];
+            for (class_s, res) in &classes {
+                if *class_s > 0.0 {
+                    let (free, _) = res.peek(0);
+                    start = start.max(free);
+                }
+            }
+            let mut seg = start;
+            for (class_s, res) in classes {
+                if class_s > 0.0 {
+                    let dur = class_s * win.scale;
+                    res.occupy(0, seg, dur, ev);
+                    ev += 1;
+                    seg += dur;
+                }
+            }
+
+            // Execute: the forward estimate scales with the member count.
+            let exec_dur = sim_fwd * k as f64;
+            report.breakdown_sim.train_s += exec_dur;
+            let (gpu_free, _) = gpu.peek(0);
+            let exec_start = seg.max(gpu_free);
+            gpu.occupy(0, exec_start, exec_dur, ev);
+            ev += 1;
+            let completion = exec_start + exec_dur;
+            report.makespan_s = report.makespan_s.max(completion);
+            report.batches += 1;
+
+            for m in &members {
+                report.latency.add(completion - m.arrival_s);
+                report.completed += 1;
+                // Closed loop: the member's client comes straight back.
+                if !open_loop && offered < total {
+                    arrivals.push_back((completion, m.client));
+                    offered += 1;
+                }
+            }
+        }
+
+        report.offered = offered;
+        for r in [&cpu, &host, &peer, &storage, &gpu] {
+            report.busy.add(r.kind(), r.busy_s());
+        }
+        report.bound_by = report.busy.max_kind();
+        Ok((report, blocks))
+    }
+
+    /// Gather one dispatched batch's feature rows and scatter them back
+    /// per request.  Four shapes, one invariant — every member's block is
+    /// bitwise what a solo gather of its stream returns:
+    ///
+    /// * coalesce + dedup: one [`CoalescedGatherPlan`] across members
+    ///   (cross-request dedup), unique rows fetched once, scattered per
+    ///   request;
+    /// * coalesce, no dedup: the concatenated duplicated stream in one
+    ///   fetch (fewer transfers, no row elimination);
+    /// * no coalesce + dedup: the batch runner's per-request
+    ///   `gather_planned`;
+    /// * neither: the per-request duplicated gather.
+    fn gather_batch(
+        &mut self,
+        members: &[Pending],
+        mbs: &[MiniBatch],
+        dim: usize,
+        capture: bool,
+        blocks: &mut [Vec<f32>],
+        report: &mut ServingReport,
+    ) -> Result<TransferCost> {
+        debug_assert_eq!(members.len(), mbs.len());
+        if self.cfg.coalesce {
+            if self.cfg.dedup {
+                let streams: Vec<&[u32]> = mbs.iter().map(|mb| mb.src_nodes.as_slice()).collect();
+                let plan = CoalescedGatherPlan::build(&streams);
+                debug_assert!(plan.validate(&streams).is_ok());
+                let mut uniq = vec![0f32; plan.unique_rows() * dim];
+                let cost = self.store.gather_into(plan.unique_nodes(), &mut uniq)?;
+                report.requested_rows += plan.requested_rows() as u64;
+                report.unique_rows += plan.unique_rows() as u64;
+                let mut out = vec![0f32; self.gather_rows * dim];
+                for (r, m) in members.iter().enumerate() {
+                    out.resize(plan.request_rows(r) * dim, 0.0);
+                    plan.scatter_request(r, &uniq, dim, &mut out);
+                    if capture {
+                        blocks[m.id as usize] = out.clone();
+                    }
+                }
+                Ok(cost)
+            } else {
+                let mut concat: Vec<u32> = Vec::new();
+                for mb in mbs {
+                    concat.extend_from_slice(&mb.src_nodes);
+                }
+                let mut out = vec![0f32; concat.len() * dim];
+                let cost = self.store.gather_into(&concat, &mut out)?;
+                report.requested_rows += concat.len() as u64;
+                report.unique_rows += concat.len() as u64;
+                if capture {
+                    let mut lo = 0usize;
+                    for (m, mb) in members.iter().zip(mbs) {
+                        let hi = lo + mb.src_nodes.len() * dim;
+                        blocks[m.id as usize] = out[lo..hi].to_vec();
+                        lo = hi;
+                    }
+                }
+                Ok(cost)
+            }
+        } else {
+            // One member per batch; reuse the batch runner's exact calls
+            // so the single-client degeneracy anchor is structural.
+            let (m, mb) = (&members[0], &mbs[0]);
+            let mut out = vec![0f32; mb.src_nodes.len() * dim];
+            let cost = if self.cfg.dedup {
+                let plan = mb.compact();
+                report.requested_rows += plan.requested_rows() as u64;
+                report.unique_rows += plan.unique_rows() as u64;
+                self.store.gather_planned(&plan, &mut out)?
+            } else {
+                report.requested_rows += mb.src_nodes.len() as u64;
+                report.unique_rows += mb.src_nodes.len() as u64;
+                self.store.gather_into(&mb.src_nodes, &mut out)?
+            };
+            if capture {
+                blocks[m.id as usize] = out;
+            }
+            Ok(cost)
+        }
+    }
+}

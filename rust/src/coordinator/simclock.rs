@@ -171,6 +171,20 @@ impl SimResource {
         self.busy_s += dur_s;
     }
 
+    /// Lane with the earliest free time (ties resolve to the lowest
+    /// index, keeping lane choice deterministic).  The serving engine's
+    /// dispatcher uses this to start the next coalesced batch on whichever
+    /// sampler worker frees first.
+    pub fn earliest_lane(&self) -> usize {
+        let mut best = 0usize;
+        for (lane, &free) in self.free_s.iter().enumerate().skip(1) {
+            if free < self.free_s[best] {
+                best = lane;
+            }
+        }
+        best
+    }
+
     /// Total seconds this resource has been occupied.
     pub fn busy_s(&self) -> f64 {
         self.busy_s
@@ -205,6 +219,16 @@ mod tests {
         let mut r = SimResource::new(ResourceKind::HostLink, 1);
         r.occupy(0, 0.0, 2.0, 1);
         r.occupy(0, 1.0, 1.0, 2); // starts inside [0, 2)
+    }
+
+    #[test]
+    fn earliest_lane_picks_first_free() {
+        let mut r = SimResource::new(ResourceKind::Sampler, 3);
+        assert_eq!(r.earliest_lane(), 0); // all free: lowest index
+        r.occupy(0, 0.0, 2.0, 1);
+        r.occupy(1, 0.0, 0.5, 2);
+        r.occupy(2, 0.0, 0.5, 3);
+        assert_eq!(r.earliest_lane(), 1); // tie at 0.5: lowest index
     }
 
     #[test]

@@ -69,6 +69,23 @@ impl NativeTrainState {
         self.classes
     }
 
+    /// Forward pass for one root row: `out = W^T x + b` (`out` has length
+    /// `classes`).  The same loop order as [`NativeTrainState::step`], so
+    /// inference over a freshly-initialised state is bitwise identical to
+    /// the logits the first training step would compute.
+    pub fn logits_into(&self, xi: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(xi.len(), self.dim);
+        debug_assert_eq!(out.len(), self.classes);
+        let k = self.classes;
+        out.copy_from_slice(&self.b);
+        for (d, &xv) in xi.iter().enumerate() {
+            let wrow = &self.w[d * k..(d + 1) * k];
+            for (l, &wv) in out.iter_mut().zip(wrow) {
+                *l += xv * wv;
+            }
+        }
+    }
+
     /// One SGD step.  `x` is the gathered feature block `[rows, dim]` whose
     /// first `labels.len()` rows are the batch roots; the rest of the block
     /// (sampled neighbors) is ignored by this model.
@@ -104,14 +121,7 @@ impl NativeTrainState {
             let y = y as usize;
             let xi = &x[i * self.dim..(i + 1) * self.dim];
 
-            // logits = W^T x + b
-            logits.copy_from_slice(&self.b);
-            for (d, &xv) in xi.iter().enumerate() {
-                let wrow = &self.w[d * k..(d + 1) * k];
-                for (l, &wv) in logits.iter_mut().zip(wrow) {
-                    *l += xv * wv;
-                }
-            }
+            self.logits_into(xi, &mut logits);
 
             // numerically-stable softmax cross-entropy
             let max_l = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
@@ -121,10 +131,12 @@ impl NativeTrainState {
             }
             loss_sum += denom.ln() - (logits[y] - max_l);
 
+            // total_cmp: NaN logits (divergent lr) order last instead of
+            // panicking, so the step surfaces the non-finite loss error
             let argmax = logits
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(c, _)| c)
                 .unwrap();
             if argmax == y {
@@ -231,6 +243,31 @@ mod tests {
         let la = a.step(&x, &labels).unwrap().loss;
         let lb = b.step(&padded, &labels).unwrap().loss;
         assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn nan_features_error_instead_of_panic() {
+        // NaN propagates into every logit; argmax must stay total-ordered
+        // (no partial_cmp panic) and the step must surface the non-finite
+        // loss as a runtime error.
+        let mut s = NativeTrainState::init(8, 4, DEFAULT_LR, 1);
+        let x = vec![f32::NAN; 8];
+        let err = s.step(&x, &[0]).unwrap_err();
+        assert!(format!("{err}").contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn logits_match_step_order() {
+        let synth = SyntheticFeatures::new(16, 4, 2);
+        let nodes: Vec<u32> = (0..4).collect();
+        let (x, _) = batch(&synth, &nodes);
+        let s = NativeTrainState::init(16, 4, DEFAULT_LR, 5);
+        let mut out = vec![0f32; 4];
+        s.logits_into(&x[..16], &mut out);
+        // bias starts at zero, weights are Glorot: logits must be finite
+        // and not all identical
+        assert!(out.iter().all(|l| l.is_finite()));
+        assert!(out.iter().any(|&l| l != out[0]));
     }
 
     #[test]

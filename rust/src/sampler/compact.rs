@@ -189,6 +189,125 @@ impl GatherPlan {
     }
 }
 
+/// Cross-request gather plan for the serving engine: one [`GatherPlan`]
+/// over the *concatenation* of several requests' id streams, plus the
+/// per-request slot bounds needed to scatter each request's rows back
+/// independently.
+///
+/// Coalescing concurrent inference requests into one minibatch extends the
+/// per-batch dedup across request boundaries — hub rows requested by two
+/// queued clients cross the link once.  The pinned invariant (see
+/// `tests/serving_properties.rs`): [`CoalescedGatherPlan::scatter_request`]
+/// rebuilds each request's `[rows, f]` block bitwise identical to serving
+/// that request alone, because rows are copied from the same gathered
+/// table, never recomputed.
+#[derive(Clone, Debug)]
+pub struct CoalescedGatherPlan {
+    plan: GatherPlan,
+    /// `bounds[r]..bounds[r + 1]` = request `r`'s slots in the
+    /// concatenated stream (`bounds.len() == requests + 1`).
+    bounds: Vec<usize>,
+}
+
+impl CoalescedGatherPlan {
+    /// Build from per-request id streams (FIFO order of the admission
+    /// queue, so the unique stream's first-appearance order is the order
+    /// requests were admitted).
+    pub fn build(streams: &[&[u32]]) -> CoalescedGatherPlan {
+        let total: usize = streams.iter().map(|s| s.len()).sum();
+        let mut concat = Vec::with_capacity(total);
+        let mut bounds = Vec::with_capacity(streams.len() + 1);
+        bounds.push(0);
+        for s in streams {
+            concat.extend_from_slice(s);
+            bounds.push(concat.len());
+        }
+        CoalescedGatherPlan {
+            plan: GatherPlan::build(&concat),
+            bounds,
+        }
+    }
+
+    /// The merged dedup plan over the concatenated stream.
+    pub fn plan(&self) -> &GatherPlan {
+        &self.plan
+    }
+
+    /// Distinct ids across all member requests, first-appearance order.
+    pub fn unique_nodes(&self) -> &[u32] {
+        self.plan.unique_nodes()
+    }
+
+    /// Member request count.
+    pub fn requests(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Rows request `r` asked for.
+    pub fn request_rows(&self, r: usize) -> usize {
+        self.bounds[r + 1] - self.bounds[r]
+    }
+
+    /// Rows of the concatenated (duplicated) stream.
+    pub fn requested_rows(&self) -> usize {
+        self.plan.requested_rows()
+    }
+
+    /// Rows actually fetched after cross-request deduplication.
+    pub fn unique_rows(&self) -> usize {
+        self.plan.unique_rows()
+    }
+
+    /// Requested over unique rows across the whole coalesced batch.
+    pub fn dedup_ratio(&self) -> f64 {
+        self.plan.dedup_ratio()
+    }
+
+    /// Scatter request `r`'s rows out of the gathered unique buffer:
+    /// `out` is that request's own `[request_rows(r), f]` block, laid out
+    /// exactly as an uncoalesced gather of its stream would produce it.
+    pub fn scatter_request(&self, r: usize, uniq: &[f32], f: usize, out: &mut [f32]) {
+        let (lo, hi) = (self.bounds[r], self.bounds[r + 1]);
+        debug_assert_eq!(uniq.len(), self.plan.unique.len() * f);
+        debug_assert_eq!(out.len(), (hi - lo) * f);
+        for (chunk, &u) in out.chunks_exact_mut(f).zip(&self.plan.scatter[lo..hi]) {
+            let base = u as usize * f;
+            chunk.copy_from_slice(&uniq[base..base + f]);
+        }
+    }
+
+    /// Structural invariants on top of [`GatherPlan::validate`]: bounds
+    /// are monotone, cover the concatenation exactly, and each member
+    /// stream round-trips through the merged plan.
+    pub fn validate(&self, streams: &[&[u32]]) -> Result<(), String> {
+        if self.bounds.len() != streams.len() + 1 {
+            return Err(format!(
+                "bounds len {} != streams {} + 1",
+                self.bounds.len(),
+                streams.len()
+            ));
+        }
+        let mut concat = Vec::new();
+        for (r, s) in streams.iter().enumerate() {
+            if self.bounds[r + 1] < self.bounds[r] {
+                return Err(format!("bounds not monotone at request {r}"));
+            }
+            if self.request_rows(r) != s.len() {
+                return Err(format!(
+                    "request {r}: bounds span {} != stream len {}",
+                    self.request_rows(r),
+                    s.len()
+                ));
+            }
+            concat.extend_from_slice(s);
+        }
+        if *self.bounds.last().unwrap() != concat.len() {
+            return Err("bounds do not cover the concatenation".into());
+        }
+        self.plan.validate(&concat)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +415,74 @@ mod tests {
             b.dedup();
             prop_assert(a == b, "unique set != requested set")
         });
+    }
+
+    #[test]
+    fn coalesced_plan_dedups_across_requests() {
+        // id 7 appears in both requests: fetched once, scattered to both
+        let a: &[u32] = &[7, 3];
+        let b: &[u32] = &[7, 9, 3];
+        let plan = CoalescedGatherPlan::build(&[a, b]);
+        assert_eq!(plan.requests(), 2);
+        assert_eq!(plan.unique_nodes(), &[7, 3, 9]);
+        assert_eq!(plan.requested_rows(), 5);
+        assert_eq!(plan.unique_rows(), 3);
+        assert_eq!(plan.request_rows(0), 2);
+        assert_eq!(plan.request_rows(1), 3);
+        plan.validate(&[a, b]).unwrap();
+    }
+
+    #[test]
+    fn coalesced_single_request_degenerates_to_gather_plan() {
+        let s: &[u32] = &[5, 2, 5, 9];
+        let coal = CoalescedGatherPlan::build(&[s]);
+        let solo = GatherPlan::build(s);
+        assert_eq!(coal.unique_nodes(), solo.unique_nodes());
+        assert_eq!(coal.plan().scatter_map(), solo.scatter_map());
+        assert_eq!(coal.requests(), 1);
+    }
+
+    #[test]
+    fn scatter_request_is_bitwise_identical_to_solo_gather_property() {
+        // The pinned serving invariant at the plan level: each member
+        // request's scattered block equals a direct gather of its stream.
+        check(40, |g: &mut Gen| {
+            let f = g.usize_in(1, 6);
+            let n_req = g.usize_in(1, 5);
+            let streams: Vec<Vec<u32>> = (0..n_req)
+                .map(|_| g.vec_u32(g.usize_in(1, 40), 0, 30))
+                .collect();
+            let refs: Vec<&[u32]> = streams.iter().map(|s| s.as_slice()).collect();
+            let plan = CoalescedGatherPlan::build(&refs);
+            plan.validate(&refs).map_err(|e| e)?;
+
+            let table: Vec<f32> = (0..31 * f).map(|i| (i as f32).sin()).collect();
+            let mut uniq = vec![0f32; plan.unique_rows() * f];
+            crate::tensor::indexing::gather_rows_into(&table, f, plan.unique_nodes(), &mut uniq);
+
+            for (r, s) in streams.iter().enumerate() {
+                let mut via_plan = vec![0f32; s.len() * f];
+                plan.scatter_request(r, &uniq, f, &mut via_plan);
+                let mut direct = vec![0f32; s.len() * f];
+                crate::tensor::indexing::gather_rows_into(&table, f, s, &mut direct);
+                prop_assert(
+                    via_plan == direct,
+                    format!("request {r}: coalesced scatter != solo gather"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn coalesced_empty_request_is_allowed() {
+        let a: &[u32] = &[1, 2];
+        let b: &[u32] = &[];
+        let plan = CoalescedGatherPlan::build(&[a, b]);
+        assert_eq!(plan.request_rows(1), 0);
+        let mut out = vec![];
+        plan.scatter_request(1, &[0.0, 0.0], 1, &mut out);
+        plan.validate(&[a, b]).unwrap();
     }
 
     #[test]

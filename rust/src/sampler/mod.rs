@@ -29,5 +29,5 @@ pub mod compact;
 pub mod neighbor;
 
 pub use batch::{LayerBlock, MiniBatch};
-pub use compact::GatherPlan;
+pub use compact::{CoalescedGatherPlan, GatherPlan};
 pub use neighbor::NeighborSampler;

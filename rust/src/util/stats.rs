@@ -1,8 +1,14 @@
 //! Streaming statistics for bench harnesses and pipeline metrics.
 
-/// Welford online mean/variance plus min/max and a sample reservoir for
-/// percentiles (exact when below the reservoir cap, which all benches are).
-#[derive(Clone, Debug, Default)]
+use crate::util::rng::Rng;
+
+/// Welford online mean/variance plus min/max and a bounded percentile
+/// reservoir.  Below [`RESERVOIR_CAP`] every sample is retained and
+/// percentiles are exact; past the cap the reservoir switches to true
+/// uniform reservoir sampling (Vitter's Algorithm R, driven by the
+/// deterministic [`Rng`]), so long-run percentiles stay an unbiased
+/// estimate of the whole stream instead of a snapshot of its warm-up.
+#[derive(Clone, Debug)]
 pub struct Summary {
     n: u64,
     mean: f64,
@@ -10,16 +16,32 @@ pub struct Summary {
     min: f64,
     max: f64,
     samples: Vec<f64>,
+    rng: Rng,
 }
 
 const RESERVOIR_CAP: usize = 65_536;
 
+/// Fixed seed for the reservoir's replacement stream: every `Summary` is
+/// deterministic on its input sequence alone, so reports reproduce
+/// bit-for-bit across runs.
+const RESERVOIR_SEED: u64 = 0x5EED_5A17;
+
+impl Default for Summary {
+    fn default() -> Self {
+        Summary::new()
+    }
+}
+
 impl Summary {
     pub fn new() -> Self {
         Summary {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
-            ..Default::default()
+            samples: Vec::new(),
+            rng: Rng::new(RESERVOIR_SEED),
         }
     }
 
@@ -32,6 +54,14 @@ impl Summary {
         self.max = self.max.max(x);
         if self.samples.len() < RESERVOIR_CAP {
             self.samples.push(x);
+        } else {
+            // Algorithm R: element n replaces a reservoir slot with
+            // probability CAP/n, keeping the reservoir a uniform sample
+            // of everything seen so far.
+            let j = self.rng.gen_range(self.n) as usize;
+            if j < RESERVOIR_CAP {
+                self.samples[j] = x;
+            }
         }
     }
 
@@ -67,13 +97,14 @@ impl Summary {
         if self.n == 0 { 0.0 } else { self.max }
     }
 
-    /// Exact percentile over the retained samples (q in [0,1]).
+    /// Percentile over the retained samples (q in [0,1]): exact below the
+    /// reservoir cap, an unbiased estimate above it.
     pub fn percentile(&self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         // lower nearest-rank convention (floor), so median of an even-sized
         // sample is the lower middle element
         let rank = (q.clamp(0.0, 1.0) * (s.len() - 1) as f64).floor() as usize;
@@ -118,5 +149,73 @@ mod tests {
         }
         assert!(s.percentile(0.1) < s.percentile(0.5));
         assert!(s.percentile(0.5) < s.percentile(0.99));
+    }
+
+    #[test]
+    fn exact_below_cap() {
+        let mut s = Summary::new();
+        for i in 0..RESERVOIR_CAP {
+            s.add(i as f64);
+        }
+        // every sample retained, so percentiles are exact nearest-rank
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(1.0), (RESERVOIR_CAP - 1) as f64);
+        assert_eq!(
+            s.median(),
+            ((RESERVOIR_CAP - 1) as f64 * 0.5).floor()
+        );
+    }
+
+    #[test]
+    fn reservoir_is_unbiased_past_cap() {
+        // Feed 8x the cap in ascending order.  First-N truncation would
+        // pin the median at ~CAP/2 (the warm-up); Algorithm R keeps a
+        // uniform sample of the whole stream, so the sampled median must
+        // track the true stream median within a few percent.
+        let total = RESERVOIR_CAP * 8;
+        let mut s = Summary::new();
+        for i in 0..total {
+            s.add(i as f64);
+        }
+        assert_eq!(s.samples.len(), RESERVOIR_CAP);
+        let true_median = total as f64 / 2.0;
+        let est = s.median();
+        assert!(
+            (est - true_median).abs() / true_median < 0.05,
+            "median estimate {est} vs true {true_median}"
+        );
+        let p99 = s.percentile(0.99);
+        let true_p99 = total as f64 * 0.99;
+        assert!(
+            (p99 - true_p99).abs() / true_p99 < 0.05,
+            "p99 estimate {p99} vs true {true_p99}"
+        );
+    }
+
+    #[test]
+    fn reservoir_deterministic() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for i in 0..(RESERVOIR_CAP * 2) {
+            let x = (i as f64).sin();
+            a.add(x);
+            b.add(x);
+        }
+        assert_eq!(a.percentile(0.9), b.percentile(0.9));
+        assert_eq!(a.samples, b.samples);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan() {
+        // total_cmp orders NaN above +inf; a stray NaN must not panic and
+        // must not corrupt low/mid percentiles.
+        let mut s = Summary::new();
+        for i in 0..100 {
+            s.add(i as f64);
+        }
+        s.add(f64::NAN);
+        let med = s.median();
+        assert!(med.is_finite());
+        assert!((0.0..100.0).contains(&med));
     }
 }

@@ -1,0 +1,199 @@
+//! Cross-layer properties of the online serving engine
+//! (`coordinator::serving`, DESIGN.md §11):
+//!
+//! * **coalescing numerics** — merging queued requests into one minibatch
+//!   (cross-request gather dedup) leaves every request's scattered feature
+//!   block bitwise identical to serving that request alone, in all eight
+//!   access modes (rows are copied from one gathered table, never
+//!   recomputed — tier placement can shift, values cannot);
+//! * **degeneracy** — a single closed-loop client reproduces the batch
+//!   inference runner's simulated breakdown bit-exactly (same sampler
+//!   stream, same gather plans, same cost accounting), coalescing on or
+//!   off;
+//! * **load** — mean end-to-end latency is monotone non-decreasing in the
+//!   open-loop arrival rate (Lindley: compressing arrivals can only grow
+//!   waiting), and `admitted + rejected == offered` always balances;
+//! * **coverage** — `serve` completes in every access mode.
+
+use ptdirect::config::{AccessMode, Backend, RunConfig, ShardPolicy};
+use ptdirect::coordinator::{InferenceRunner, ServingEngine};
+
+const REQUESTS: u64 = 24;
+
+/// Hermetic config mirroring `dedup_properties.rs`: native backend, no
+/// artifacts, sharded runs get real partitioning.
+fn cfg(mode: AccessMode) -> RunConfig {
+    RunConfig {
+        dataset: "product".into(),
+        arch: "sage".into(),
+        mode,
+        scale: 2048,
+        feature_budget: 8 << 20,
+        seed: 42,
+        backend: Backend::Native,
+        artifacts_dir: "this-directory-does-not-exist".into(),
+        num_gpus: if mode == AccessMode::Sharded { 4 } else { 1 },
+        shard_policy: ShardPolicy::Degree,
+        serve_requests: REQUESTS,
+        // open loop, fast enough that requests pile up and coalesce
+        arrival_rps: 50_000.0,
+        admit_depth: 4096, // >= requests: no rejections, so the
+        // coalesced and uncoalesced runs serve the identical request set
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn coalesced_blocks_bitwise_identical_to_uncoalesced_in_all_modes() {
+    for mode in AccessMode::all() {
+        let mut on = ServingEngine::new(cfg(mode)).unwrap();
+        let (r_on, blocks_on) = on.run_with_blocks().unwrap();
+
+        let mut c = cfg(mode);
+        c.coalesce = false;
+        let mut off = ServingEngine::new(c).unwrap();
+        let (r_off, blocks_off) = off.run_with_blocks().unwrap();
+
+        assert_eq!(r_on.completed, REQUESTS, "{mode:?}: coalesced run dropped requests");
+        assert_eq!(r_off.completed, REQUESTS, "{mode:?}: uncoalesced run dropped requests");
+        assert!(
+            r_on.batches < r_on.completed,
+            "{mode:?}: arrival burst never coalesced (batches {} of {})",
+            r_on.batches,
+            r_on.completed
+        );
+        assert_eq!(r_off.batches, r_off.completed, "{mode:?}: --no-coalesce must not merge");
+        for (r, (a, b)) in blocks_on.iter().zip(&blocks_off).enumerate() {
+            assert!(!a.is_empty(), "{mode:?}: request {r} served no block");
+            assert_eq!(a, b, "{mode:?}: request {r}: coalescing changed the feature block");
+        }
+    }
+}
+
+#[test]
+fn coalescing_dedups_across_requests() {
+    // The windowed seed rule makes consecutive requests overlap heavily;
+    // the coalesced gather must fetch strictly fewer rows than requested.
+    let mut e = ServingEngine::new(cfg(AccessMode::UnifiedAligned)).unwrap();
+    let r = e.run().unwrap();
+    assert!(
+        r.unique_rows < r.requested_rows,
+        "no cross-request dedup: {} unique of {} requested",
+        r.unique_rows,
+        r.requested_rows
+    );
+    assert!(r.dedup_ratio() > 1.0);
+}
+
+#[test]
+fn single_closed_loop_client_degenerates_to_batch_inference() {
+    for mode in AccessMode::all() {
+        for coalesce in [true, false] {
+            let mut c = cfg(mode);
+            c.arrival_rps = 0.0; // closed loop
+            c.clients = 1;
+            c.coalesce = coalesce;
+            let mut engine = ServingEngine::new(c.clone()).unwrap();
+            let serve = engine.run().unwrap();
+
+            let mut runner = InferenceRunner::new(c).unwrap();
+            let infer = runner.run(REQUESTS).unwrap();
+
+            assert_eq!(serve.completed, REQUESTS);
+            assert_eq!(serve.batches, REQUESTS, "{mode:?}: one client must never coalesce");
+            let (a, b) = (&serve.breakdown_sim, &infer.breakdown_sim);
+            assert_eq!(
+                a.sample_s, b.sample_s,
+                "{mode:?} coalesce={coalesce}: sampling time diverged from the batch runner"
+            );
+            assert_eq!(
+                a.transfer_s, b.transfer_s,
+                "{mode:?} coalesce={coalesce}: transfer time diverged from the batch runner"
+            );
+            assert_eq!(
+                a.train_s, b.train_s,
+                "{mode:?} coalesce={coalesce}: execute time diverged from the batch runner"
+            );
+        }
+    }
+}
+
+#[test]
+fn latency_is_monotone_in_arrival_rate() {
+    // Fixed request set and service order (coalescing off), arrivals
+    // compressed by rising rps: Lindley's recursion says waiting — hence
+    // end-to-end latency — can only grow.
+    let mut last = f64::NEG_INFINITY;
+    for rps in [200.0, 2_000.0, 20_000.0, 200_000.0] {
+        let mut c = cfg(AccessMode::UnifiedAligned);
+        c.coalesce = false;
+        c.arrival_rps = rps;
+        let r = ServingEngine::new(c).unwrap().run().unwrap();
+        assert_eq!(r.completed, REQUESTS);
+        let mean = r.latency.mean();
+        assert!(
+            mean >= last - 1e-12,
+            "mean latency fell from {last} to {mean} at {rps} rps"
+        );
+        last = mean;
+    }
+}
+
+#[test]
+fn admission_balances_and_sheds_load() {
+    // A queue of 2 under a hard burst must reject, and the books must
+    // balance: every offered request is either admitted or rejected, and
+    // every admitted request completes.
+    let mut c = cfg(AccessMode::CpuGather);
+    c.admit_depth = 2;
+    c.arrival_rps = 1_000_000.0;
+    c.serve_requests = 64;
+    let r = ServingEngine::new(c).unwrap().run().unwrap();
+    assert_eq!(r.offered, 64);
+    assert_eq!(r.admitted + r.rejected, r.offered, "admission books do not balance");
+    assert_eq!(r.completed, r.admitted, "admitted requests must all complete");
+    assert!(r.rejected > 0, "burst over a depth-2 queue must shed load");
+    assert!(r.rejection_rate() > 0.0);
+    assert_eq!(r.latency.count(), r.completed);
+}
+
+#[test]
+fn serve_reports_are_sane_in_all_modes() {
+    for mode in AccessMode::all() {
+        let mut c = cfg(mode);
+        c.serve_requests = 8;
+        let r = ServingEngine::new(c).unwrap().run().unwrap();
+        assert_eq!(r.completed, 8, "{mode:?}");
+        assert_eq!(r.offered, 8, "{mode:?}");
+        assert_eq!(r.rejected, 0, "{mode:?}");
+        assert!(r.makespan_s > 0.0, "{mode:?}: zero makespan");
+        assert!(r.goodput_rps() > 0.0, "{mode:?}");
+        assert_eq!(r.latency.count(), 8, "{mode:?}");
+        assert!(r.latency.min() >= 0.0, "{mode:?}: negative latency");
+        assert!(
+            r.latency.percentile(0.999) >= r.latency.percentile(0.50),
+            "{mode:?}: tail below median"
+        );
+        assert!(r.busy.total() > 0.0, "{mode:?}: no resource was ever busy");
+    }
+}
+
+#[test]
+fn closed_loop_clients_stay_bounded_by_depth() {
+    // N closed-loop clients: at most N requests are ever in the system,
+    // so a depth >= N queue never rejects and the max depth never
+    // exceeds the client count.
+    let mut c = cfg(AccessMode::UnifiedAligned);
+    c.arrival_rps = 0.0;
+    c.clients = 4;
+    c.admit_depth = 8;
+    c.serve_requests = 32;
+    let r = ServingEngine::new(c).unwrap().run().unwrap();
+    assert_eq!(r.completed, 32);
+    assert_eq!(r.rejected, 0);
+    assert!(
+        r.max_queue_depth <= 4,
+        "queue depth {} exceeds the 4 in-flight clients",
+        r.max_queue_depth
+    );
+}
