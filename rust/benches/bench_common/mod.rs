@@ -105,6 +105,7 @@ pub fn static_tier_cfg(hot_frac: f64, ranking: Vec<u32>) -> TierConfig {
         reserve_bytes: 0,
         promote: false,
         ranking: Some(ranking),
+        ..TierConfig::default()
     }
 }
 

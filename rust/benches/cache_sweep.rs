@@ -1,0 +1,205 @@
+//! Cache sweep — eviction policy × page size × cache size over the paged
+//! feature cache (DESIGN.md §12).
+//!
+//! Replays the shared degree-skewed trace (fixed seeds, simulated
+//! pricing) against tiered stores spanning the knob grid:
+//!
+//!  * `static` rows are degree-ranked prefixes (the PyTorch-Direct /
+//!    Data Tiering placement) — their hit rate must be monotone in the
+//!    cache size at every page size;
+//!  * `lfu` / `lru` / `clock` rows start cold and warm through
+//!    promotion — the second replay of the identical epoch should not
+//!    hit less than the first;
+//!  * the `--eviction static --page-rows 1` cell must reproduce the
+//!    legacy promotion-off tiered replay bit-exactly (the refactor
+//!    anchor), and a full-size cache hits on every access;
+//!  * every cell's internal gather pins balance (`pins == unpins`,
+//!    nothing blocked) and residency stays within the page budget.
+//!
+//! Emits `BENCH_cache.json` — one record per grid cell, derived purely
+//! from simulated quantities, so back-to-back runs are byte-identical
+//! (the CI smoke loop diffs two digests).
+
+mod bench_common;
+
+use bench_common::{expect, replay, scaled, skewed_trace, static_tier_cfg};
+use ptdirect::config::{EvictionPolicy, SystemProfile};
+use ptdirect::coordinator::report::{ms, pct, Table};
+use ptdirect::featurestore::{degree_ranking, FeatureStore, TierConfig, TierStats};
+use ptdirect::graph::generator::{rmat, RmatParams};
+use ptdirect::util::rng::Rng;
+
+const NODES: usize = 20_000;
+const EDGES: usize = 200_000;
+/// Misaligned 516 B rows so the cold path prices like `UnifiedAligned`.
+const DIM: usize = 129;
+const CLASSES: u32 = 16;
+const BATCH_ROWS: usize = 1024;
+const SEED: u64 = 42;
+
+const PAGE_ROWS: [usize; 3] = [1, 8, 64];
+const HOT_FRACS: [f64; 3] = [0.1, 0.25, 0.5];
+
+/// Minimal JSON string escape (labels here are plain ASCII).
+fn json_str(s: &str) -> String {
+    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
+fn build(cfg: TierConfig) -> FeatureStore {
+    FeatureStore::build_tiered(NODES, DIM, CLASSES, &SystemProfile::system1(), SEED, cfg)
+        .expect("tiered store")
+}
+
+/// Replay one epoch; returns (simulated transfer seconds, epoch-delta
+/// tier stats).
+fn epoch(store: &FeatureStore, trace: &[Vec<u32>]) -> (f64, TierStats) {
+    let before = store.tier_stats().expect("tier stats");
+    let time = replay(store, trace);
+    (time, store.tier_stats().unwrap().since(&before))
+}
+
+fn main() {
+    let batches = scaled(64usize, 8);
+    let graph = rmat(NODES, EDGES, RmatParams::default(), 0x71E5).expect("graph");
+    let mut rng = Rng::new(0x5EE9);
+    let trace = skewed_trace(&graph, &mut rng, batches, BATCH_ROWS);
+    let ranking = degree_ranking(&graph);
+
+    let mut t = Table::new(
+        &format!(
+            "Cache sweep — {batches} x {BATCH_ROWS}-row degree-skewed gathers, \
+             {NODES} x {DIM} f32 table (System1)"
+        ),
+        &["policy", "pg rows", "hot frac", "cap rows", "hit cold", "hit warm", "xfer ms", "evict"],
+    );
+    let mut json_rows = Vec::new();
+    let mut books_balance = true;
+    let mut budget_held = true;
+    let mut warming_held = true;
+    let mut static_monotone = true;
+    let mut anchor_time = f64::NAN;
+
+    for policy in EvictionPolicy::all() {
+        for &page_rows in &PAGE_ROWS {
+            let mut prev_static_hit = -1.0f64;
+            for &hot_frac in &HOT_FRACS {
+                // Static cells replay the degree-ranked prefix; dynamic
+                // policies start cold and warm through promotion.
+                let is_static = policy == EvictionPolicy::Static;
+                let cfg = if is_static {
+                    TierConfig {
+                        page_rows,
+                        eviction: EvictionPolicy::Static,
+                        ..static_tier_cfg(hot_frac, ranking.clone())
+                    }
+                } else {
+                    TierConfig {
+                        hot_frac,
+                        reserve_bytes: 0,
+                        promote: true,
+                        ranking: None,
+                        page_rows,
+                        eviction: policy,
+                    }
+                };
+                let store = build(cfg);
+                let (_, cold) = epoch(&store, &trace);
+                let (time, warm) = epoch(&store, &trace);
+                let stats = store.tier_stats().unwrap();
+
+                books_balance &= stats.pins == stats.unpins && stats.pin_blocked == 0;
+                budget_held &= stats.hot_rows <= stats.capacity_rows
+                    && stats.resident_pages <= stats.capacity_pages;
+                if is_static {
+                    static_monotone &= warm.hit_rate() >= prev_static_hit - 1e-12;
+                    prev_static_hit = warm.hit_rate();
+                } else {
+                    warming_held &= warm.hit_rate() >= cold.hit_rate() - 1e-9;
+                }
+                if is_static && page_rows == 1 && hot_frac == 0.25 {
+                    anchor_time = time;
+                }
+
+                t.row(&[
+                    policy.label().into(),
+                    page_rows.to_string(),
+                    format!("{hot_frac:.2}"),
+                    stats.capacity_rows.to_string(),
+                    pct(cold.hit_rate()),
+                    pct(warm.hit_rate()),
+                    ms(time),
+                    stats.evictions.to_string(),
+                ]);
+                json_rows.push(format!(
+                    "    {{\"policy\": {}, \"page_rows\": {}, \"hot_frac\": {:.2}, \
+                     \"capacity_rows\": {}, \"hit_rate_cold\": {:.6}, \
+                     \"hit_rate_warm\": {:.6}, \"transfer_ms_warm\": {:.6}, \
+                     \"promotions\": {}, \"evictions\": {}, \"resident_pages\": {}}}",
+                    json_str(policy.label()),
+                    page_rows,
+                    hot_frac,
+                    stats.capacity_rows,
+                    cold.hit_rate(),
+                    warm.hit_rate(),
+                    time * 1e3,
+                    stats.promotions,
+                    stats.evictions,
+                    stats.resident_pages,
+                ));
+            }
+        }
+    }
+    t.print();
+
+    let json = format!(
+        "{{\n  \"bench\": \"cache_sweep\", \"nodes\": {NODES}, \"dim\": {DIM}, \
+         \"batches\": {batches}, \"batch_rows\": {BATCH_ROWS},\n  \"cells\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    std::fs::write("BENCH_cache.json", &json).expect("write BENCH_cache.json");
+    println!("wrote BENCH_cache.json ({} cells)", json_rows.len());
+
+    // ---- structural checks ----
+    expect(books_balance, "gather pins balance in every cell (pins == unpins, none blocked)");
+    expect(budget_held, "residency never exceeds the row/page budget in any cell");
+    expect(
+        static_monotone,
+        "static hit rate monotone non-decreasing in cache size at every page size",
+    );
+    expect(
+        warming_held,
+        "replaying the identical epoch never cools a warming cache",
+    );
+
+    // Anchor: `--eviction static --page-rows 1` IS the legacy
+    // promotion-off tiered replay, bit for bit.
+    let legacy = build(static_tier_cfg(0.25, ranking.clone()));
+    let (legacy_time, legacy_delta) = epoch(&legacy, &trace);
+    let (legacy_time2, _) = epoch(&legacy, &trace);
+    expect(
+        anchor_time == legacy_time && legacy_time == legacy_time2,
+        "static/page-rows-1 cell replays the legacy tiered epoch bit-exactly",
+    );
+    expect(
+        legacy_delta.evictions == 0 && legacy_delta.promotions == 0,
+        "static placement never promotes or evicts",
+    );
+
+    // Endpoint: a full-size preseeded cache hits on every access, for
+    // every policy.
+    let total: u64 = trace.iter().map(|b| b.len() as u64).sum();
+    let mut full_hits = true;
+    for policy in EvictionPolicy::all() {
+        let store = build(TierConfig {
+            hot_frac: 1.0,
+            reserve_bytes: 0,
+            promote: true,
+            ranking: Some(ranking.clone()),
+            page_rows: 1,
+            eviction: policy,
+        });
+        let (_, delta) = epoch(&store, &trace);
+        full_hits &= delta.hits == total && delta.misses == 0;
+    }
+    expect(full_hits, "a full-size preseeded cache hits every access under every policy");
+}

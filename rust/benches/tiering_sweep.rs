@@ -57,6 +57,7 @@ fn tiered_store(hot_frac: f64, promote: bool, ranking: Option<Vec<u32>>) -> Feat
             reserve_bytes: 0,
             promote,
             ranking,
+            ..TierConfig::default()
         },
     )
     .expect("tiered store")

@@ -132,6 +132,14 @@ pub fn run_config_from(args: &Args) -> Result<RunConfig> {
     if args.flag("no-promote") {
         cfg.tier_promote = false;
     }
+    if let Some(p) = args.get_u64("page-rows")? {
+        cfg.page_rows = usize::try_from(p)
+            .map_err(|_| Error::Config(format!("--page-rows {p} out of range")))?;
+    }
+    if let Some(e) = args.get("eviction") {
+        cfg.eviction = crate::config::EvictionPolicy::parse(e)
+            .ok_or_else(|| Error::Config(format!("unknown eviction policy `{e}`")))?;
+    }
     if let Some(n) = args.get_u64("num-gpus")? {
         // Checked conversion: a wrapping `as` cast could smuggle huge
         // values into the valid [1, 64] window.
@@ -283,13 +291,21 @@ TIERED ACCESS MODE (--mode tiered):
   memory and served at device speed — kernel launch only, like gpu mode —
   while the remaining cold rows go through the pyd zero-copy PCIe path.
   Capacity is the GPU memory left after --gpu-reserve, capped by
-  --hot-frac; an online LFU policy promotes frequently-missed rows, so
-  repeated epochs warm the cache.  This follows the Data Tiering follow-up
-  paper (arXiv:2111.05894) to PyTorch-Direct.
+  --hot-frac; an online eviction policy (--eviction, default lfu) promotes
+  frequently-missed pages, so repeated epochs warm the cache.  Residency is
+  tracked per fixed-size page of --page-rows rows through one shared paged
+  cache (DESIGN.md §12); in-flight gathers pin their pages.  This follows
+  the Data Tiering follow-up paper (arXiv:2111.05894) to PyTorch-Direct.
   --hot-frac F      target hot fraction of the feature rows, 0..1 (0.25)
   --gpu-reserve F   GPU-memory fraction reserved for model/activations (0.5)
-  --no-promote      disable online LFU promotion (static placement)
-  Per-epoch reporting gains tier columns: hit rate, hot bytes, promotions.
+  --no-promote      disable online promotion (static placement)
+  --page-rows N     feature rows per cache page, 1..65536 (1; 1 is
+                    row-granular and bit-exact to the pre-page cache)
+  --eviction P      static|lfu|lru|clock page eviction policy (lfu);
+                    static freezes the degree-ranked preseed
+  The tier flags apply to sharded (per-GPU tiers) and nvme (GPU tier) too.
+  Per-epoch reporting gains tier columns: hit rate, hot bytes, promotions,
+  pages, and pin counters.
 
 SHARDED ACCESS MODE (--mode sharded):
   The feature table is partitioned across N simulated GPUs; each GPU pins
@@ -430,7 +446,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         if let Some(tier) = &r.tier {
             println!(
                 "  tier: hit rate {} ({} hits / {} misses), hot {} / cap {}, \
-                 {} promotions, {} evictions",
+                 {} promotions, {} evictions, {}/{} pages x{} rows, \
+                 {} pins ({} blocked)",
                 pct(tier.hit_rate()),
                 tier.hits,
                 tier.misses,
@@ -438,6 +455,11 @@ fn cmd_train(args: &Args) -> Result<()> {
                 human_bytes(tier.capacity_bytes),
                 tier.promotions,
                 tier.evictions,
+                tier.resident_pages,
+                tier.capacity_pages,
+                tier.page_rows,
+                tier.pins,
+                tier.pin_blocked,
             );
         }
         if let Some(nvme) = &r.nvme {
@@ -771,11 +793,46 @@ mod tests {
     }
 
     #[test]
+    fn page_cache_cli_overrides() {
+        let a = Args::parse(&sv(&[
+            "train",
+            "--mode",
+            "tiered",
+            "--page-rows",
+            "16",
+            "--eviction",
+            "clock",
+        ]))
+        .unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        assert_eq!(cfg.page_rows, 16);
+        assert_eq!(cfg.eviction, crate::config::EvictionPolicy::Clock);
+        // Defaults are the bit-exact anchor knobs.
+        let d = run_config_from(&Args::parse(&sv(&["train"])).unwrap()).unwrap();
+        assert_eq!(d.page_rows, 1);
+        assert_eq!(d.eviction, crate::config::EvictionPolicy::Lfu);
+    }
+
+    #[test]
+    fn page_cache_cli_rejects_bad_values() {
+        let a = Args::parse(&sv(&["train", "--page-rows", "0"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--page-rows", "100000"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--page-rows", "many"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--eviction", "fifo"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+    }
+
+    #[test]
     fn help_documents_tiered_mode() {
         assert!(HELP.contains("tiered"));
         assert!(HELP.contains("--hot-frac"));
         assert!(HELP.contains("--gpu-reserve"));
         assert!(HELP.contains("--backend"));
+        assert!(HELP.contains("--page-rows"));
+        assert!(HELP.contains("--eviction"));
     }
 
     #[test]

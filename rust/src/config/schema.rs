@@ -136,6 +136,62 @@ impl ShardPolicy {
     }
 }
 
+/// Eviction policy of the shared paged feature cache (`--eviction`,
+/// DESIGN.md §12).  Every hot tier in the memory hierarchy — tiered,
+/// per-GPU sharded, and the NVMe store's GPU tier — runs one of these
+/// over fixed-size pages of `page_rows` feature rows.
+///
+/// `Static` is today's degree-ranked prefix: the preseeded resident set
+/// never changes (`--no-promote` forces it whatever `--eviction` says).
+/// `Lfu` is the historical default — at `page_rows = 1` it reproduces the
+/// pre-refactor row-granular LFU heap bit-exactly, the pinned anchor of
+/// `tests/pagecache_properties.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EvictionPolicy {
+    /// Static degree-ranked prefix placement; no admissions, no evictions.
+    Static,
+    /// Least-frequently-used: admit a cold page only when it is strictly
+    /// more frequent than the least-frequent resident page.
+    Lfu,
+    /// Least-recently-used: always admit on miss, evicting the page with
+    /// the oldest access stamp.
+    Lru,
+    /// CLOCK (second chance): a circular hand clears reference bits and
+    /// evicts the first unreferenced, unpinned page it finds.
+    Clock,
+}
+
+impl EvictionPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" | "none" => Some(EvictionPolicy::Static),
+            "lfu" => Some(EvictionPolicy::Lfu),
+            "lru" => Some(EvictionPolicy::Lru),
+            "clock" | "second-chance" => Some(EvictionPolicy::Clock),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvictionPolicy::Static => "static",
+            EvictionPolicy::Lfu => "lfu",
+            EvictionPolicy::Lru => "lru",
+            EvictionPolicy::Clock => "clock",
+        }
+    }
+
+    /// All policies, in the order benches sweep them.
+    pub fn all() -> [EvictionPolicy; 4] {
+        [
+            EvictionPolicy::Static,
+            EvictionPolicy::Lfu,
+            EvictionPolicy::Lru,
+            EvictionPolicy::Clock,
+        ]
+    }
+}
+
 /// Which engine executes the training step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Backend {
@@ -211,6 +267,15 @@ pub struct RunConfig {
     /// `Tiered` mode: enable online LFU promotion (cache warming across
     /// epochs).
     pub tier_promote: bool,
+    /// Feature rows per page of the shared paged cache (every hot tier:
+    /// tiered, per-GPU sharded, NVMe GPU tier).  Residency, eviction, and
+    /// pinning are page-granular; `1` is row-granular and reproduces the
+    /// pre-refactor caches bit-exactly (DESIGN.md §12).
+    pub page_rows: usize,
+    /// Eviction policy of the paged cache (see [`EvictionPolicy`]).
+    /// `--no-promote` (`tier_promote = false`) forces `Static` whatever
+    /// this says — the two knobs compose, they don't conflict.
+    pub eviction: EvictionPolicy,
     /// `Sharded` mode: number of simulated GPUs the feature table is
     /// partitioned across (1 degenerates bit-exactly to `Tiered`).
     pub num_gpus: u32,
@@ -300,6 +365,8 @@ impl Default for RunConfig {
             hot_frac: 0.25,
             gpu_reserve_frac: 0.5,
             tier_promote: true,
+            page_rows: 1,
+            eviction: EvictionPolicy::Lfu,
             num_gpus: 1,
             shard_policy: ShardPolicy::Hash,
             nvlink_gb_per_s: None,
@@ -402,6 +469,16 @@ impl RunConfig {
         }
         if let Some(v) = doc.get_bool("run.tier_promote") {
             cfg.tier_promote = v;
+        }
+        if let Some(v) = doc.get_i64("run.page_rows") {
+            // Checked conversion: a wrapping `as` cast could smuggle huge
+            // or negative values past the [1, 65536] validation window.
+            cfg.page_rows = usize::try_from(v)
+                .map_err(|_| Error::Config(format!("page_rows {v} out of range")))?;
+        }
+        if let Some(v) = doc.get_str("run.eviction") {
+            cfg.eviction = EvictionPolicy::parse(v)
+                .ok_or_else(|| Error::Config(format!("unknown eviction policy `{v}`")))?;
         }
         if let Some(v) = doc.get_i64("run.num_gpus") {
             // Checked conversion: a wrapping `as` cast could smuggle huge
@@ -578,6 +655,12 @@ impl RunConfig {
                 self.gpu_reserve_frac
             )));
         }
+        if !(1..=65536).contains(&self.page_rows) {
+            return Err(Error::Config(format!(
+                "page_rows must be in [1, 65536], got {}",
+                self.page_rows
+            )));
+        }
         if !(1..=64).contains(&self.num_gpus) {
             return Err(Error::Config(format!(
                 "num_gpus must be in [1, 64], got {}",
@@ -716,6 +799,45 @@ seed = 99
         assert_eq!(ShardPolicy::parse("modulo"), None);
         assert_eq!(ShardPolicy::all().len(), 3);
         assert_eq!(ShardPolicy::Degree.label(), "degree");
+    }
+
+    #[test]
+    fn eviction_policy_aliases() {
+        assert_eq!(EvictionPolicy::parse("static"), Some(EvictionPolicy::Static));
+        assert_eq!(EvictionPolicy::parse("NONE"), Some(EvictionPolicy::Static));
+        assert_eq!(EvictionPolicy::parse("lfu"), Some(EvictionPolicy::Lfu));
+        assert_eq!(EvictionPolicy::parse("LRU"), Some(EvictionPolicy::Lru));
+        assert_eq!(EvictionPolicy::parse("clock"), Some(EvictionPolicy::Clock));
+        assert_eq!(
+            EvictionPolicy::parse("second-chance"),
+            Some(EvictionPolicy::Clock)
+        );
+        assert_eq!(EvictionPolicy::parse("fifo"), None);
+        assert_eq!(EvictionPolicy::all().len(), 4);
+        assert_eq!(EvictionPolicy::Clock.label(), "clock");
+    }
+
+    #[test]
+    fn page_cache_knobs_parse_and_default_to_the_anchor() {
+        // Defaults are the pre-refactor semantics: row-granular LFU.
+        let d = RunConfig::default();
+        assert_eq!(d.page_rows, 1);
+        assert_eq!(d.eviction, EvictionPolicy::Lfu);
+
+        let cfg = RunConfig::from_toml(
+            "[run]\npage_rows = 8\neviction = \"clock\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.page_rows, 8);
+        assert_eq!(cfg.eviction, EvictionPolicy::Clock);
+    }
+
+    #[test]
+    fn page_cache_knobs_reject_bad_values() {
+        assert!(RunConfig::from_toml("[run]\npage_rows = 0").is_err());
+        assert!(RunConfig::from_toml("[run]\npage_rows = -4").is_err());
+        assert!(RunConfig::from_toml("[run]\npage_rows = 100000").is_err());
+        assert!(RunConfig::from_toml("[run]\neviction = \"fifo\"").is_err());
     }
 
     #[test]

@@ -55,7 +55,7 @@ use crate::coordinator::schedule::link_window;
 use crate::coordinator::simclock::{ResourceBusy, ResourceKind, SimResource};
 use crate::coordinator::trainer::Breakdown;
 use crate::error::{Error, Result};
-use crate::featurestore::FeatureStore;
+use crate::featurestore::{FeatureStore, TierStats};
 use crate::graph::{Csr, DatasetPreset};
 use crate::interconnect::TransferCost;
 use crate::runtime::Manifest;
@@ -94,6 +94,12 @@ pub struct ServingReport {
     pub busy: ResourceBusy,
     /// Resource with the largest busy share — what bound the run.
     pub bound_by: ResourceKind,
+    /// Hot-tier cache activity over this run (tiered / sharded / nvme
+    /// modes; `None` otherwise).  With `--clients 2`+ the streams share
+    /// one paged cache, so this is the *combined* residency picture —
+    /// `tests/serving_properties.rs` pins that sharing never changes
+    /// results and never hurts the hit rate under static placement.
+    pub tier: Option<TierStats>,
 }
 
 impl ServingReport {
@@ -272,6 +278,7 @@ impl ServingEngine {
             offered = clients;
         }
 
+        let tier_start = self.store.tier_stats();
         let mut report = ServingReport::default();
         let mut blocks: Vec<Vec<f32>> = if capture {
             vec![Vec::new(); total as usize]
@@ -421,6 +428,10 @@ impl ServingEngine {
             report.busy.add(r.kind(), r.busy_s());
         }
         report.bound_by = report.busy.max_kind();
+        report.tier = self.store.tier_stats().map(|now| match &tier_start {
+            Some(s) => now.since(s),
+            None => now,
+        });
         Ok((report, blocks))
     }
 
@@ -436,6 +447,15 @@ impl ServingEngine {
     /// * no coalesce + dedup: the batch runner's per-request
     ///   `gather_planned`;
     /// * neither: the per-request duplicated gather.
+    ///
+    /// Each shape pins its window's rows in the paged hot-tier cache for
+    /// the scatter's duration: between the gather and the last member's
+    /// copy-out, a concurrent stream's admissions must not evict a page
+    /// this batch is still reading (DESIGN.md §12).  The pin lands
+    /// *after* `gather_into`/`gather_planned` returns — admission for
+    /// this batch already ran inside `record()` — so pinning shifts no
+    /// eviction decision and the single-client degeneracy anchor keeps
+    /// its bit-exact reports.
     fn gather_batch(
         &mut self,
         members: &[Pending],
@@ -453,6 +473,7 @@ impl ServingEngine {
                 debug_assert!(plan.validate(&streams).is_ok());
                 let mut uniq = vec![0f32; plan.unique_rows() * dim];
                 let cost = self.store.gather_into(plan.unique_nodes(), &mut uniq)?;
+                self.store.pin_rows(plan.unique_nodes());
                 report.requested_rows += plan.requested_rows() as u64;
                 report.unique_rows += plan.unique_rows() as u64;
                 let mut out = vec![0f32; self.gather_rows * dim];
@@ -463,6 +484,7 @@ impl ServingEngine {
                         blocks[m.id as usize] = out.clone();
                     }
                 }
+                self.store.unpin_rows(plan.unique_nodes());
                 Ok(cost)
             } else {
                 let mut concat: Vec<u32> = Vec::new();
@@ -471,6 +493,7 @@ impl ServingEngine {
                 }
                 let mut out = vec![0f32; concat.len() * dim];
                 let cost = self.store.gather_into(&concat, &mut out)?;
+                self.store.pin_rows(&concat);
                 report.requested_rows += concat.len() as u64;
                 report.unique_rows += concat.len() as u64;
                 if capture {
@@ -481,6 +504,7 @@ impl ServingEngine {
                         lo = hi;
                     }
                 }
+                self.store.unpin_rows(&concat);
                 Ok(cost)
             }
         } else {
@@ -492,11 +516,17 @@ impl ServingEngine {
                 let plan = mb.compact();
                 report.requested_rows += plan.requested_rows() as u64;
                 report.unique_rows += plan.unique_rows() as u64;
-                self.store.gather_planned(&plan, &mut out)?
+                let cost = self.store.gather_planned(&plan, &mut out)?;
+                self.store.pin_rows(plan.unique_nodes());
+                self.store.unpin_rows(plan.unique_nodes());
+                cost
             } else {
+                let cost = self.store.gather_into(&mb.src_nodes, &mut out)?;
                 report.requested_rows += mb.src_nodes.len() as u64;
                 report.unique_rows += mb.src_nodes.len() as u64;
-                self.store.gather_into(&mb.src_nodes, &mut out)?
+                self.store.pin_rows(&mb.src_nodes);
+                self.store.unpin_rows(&mb.src_nodes);
+                cost
             };
             if capture {
                 blocks[m.id as usize] = out;

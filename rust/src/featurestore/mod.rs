@@ -44,6 +44,7 @@
 //! ```
 
 pub mod nvme;
+pub mod pagecache;
 pub mod placement;
 pub mod sharded;
 pub mod staging;
@@ -52,6 +53,7 @@ pub mod synth;
 pub mod tiered;
 
 pub use nvme::{NvmeStats, NvmeStore, NvmeStoreConfig};
+pub use pagecache::{Admission, EvictionEngine, PageCache, PageView};
 pub use sharded::{assign_owners, GpuShardStats, ShardConfig, ShardStats, ShardedStore};
 pub use staging::StagingPool;
 pub use store::FeatureStore;

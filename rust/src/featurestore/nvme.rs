@@ -115,6 +115,12 @@ pub struct NvmeStats {
     /// Distinct-row payload behind the storage reads (the amplification
     /// denominator; see [`NvmeTraffic`](crate::interconnect::NvmeTraffic)).
     pub storage_distinct_bytes: u64,
+    /// Distinct cold *cache pages* behind the gathers (summed per gather).
+    /// When `row_bytes × page_rows == block_bytes` and every cold row is
+    /// storage-resident (`host_frac = 0`), pages line up 1:1 with the
+    /// storage blocks and `cold_pages == ios` — the alignment contract
+    /// `page_reads_line_up_with_block_ios` pins.
+    pub cold_pages: u64,
     /// Rows resident in host memory / spilled to storage (gauges).
     pub host_resident_rows: usize,
     pub spilled_rows: usize,
@@ -153,6 +159,7 @@ impl NvmeStats {
             storage_bytes_on_link: self.storage_bytes_on_link - earlier.storage_bytes_on_link,
             storage_distinct_bytes: self.storage_distinct_bytes
                 - earlier.storage_distinct_bytes,
+            cold_pages: self.cold_pages - earlier.cold_pages,
             ..*self
         }
     }
@@ -179,6 +186,7 @@ pub struct NvmeStore {
     storage_bytes: u64,
     storage_bytes_on_link: u64,
     storage_distinct_bytes: u64,
+    cold_pages: u64,
 }
 
 const HOST_RESIDENT: u32 = u32::MAX;
@@ -222,6 +230,7 @@ impl NvmeStore {
             storage_bytes: 0,
             storage_bytes_on_link: 0,
             storage_distinct_bytes: 0,
+            cold_pages: 0,
         }
     }
 
@@ -249,9 +258,21 @@ impl NvmeStore {
             storage_bytes: self.storage_bytes,
             storage_bytes_on_link: self.storage_bytes_on_link,
             storage_distinct_bytes: self.storage_distinct_bytes,
+            cold_pages: self.cold_pages,
             host_resident_rows: self.host_resident_rows,
             spilled_rows: self.spilled_rows,
         }
+    }
+
+    /// Pin the pages covering `idx` in the GPU hot tier; pair with
+    /// [`NvmeStore::unpin_rows`].
+    pub fn pin_rows(&mut self, idx: &[u32]) {
+        self.cache.pin_rows(idx);
+    }
+
+    /// Release the pins [`NvmeStore::pin_rows`] took.
+    pub fn unpin_rows(&mut self, idx: &[u32]) {
+        self.cache.unpin_rows(idx);
     }
 
     /// Account one gather step and return its simulated cost.
@@ -297,6 +318,14 @@ impl NvmeStore {
                 },
             };
         }
+        // Distinct cold pages this gather touched (the page-granular read
+        // set; aligns 1:1 with storage block IOs when a page is a block).
+        let pr = self.cache.page_rows().max(1) as u32;
+        let mut pages: Vec<u32> = cold.iter().map(|&r| r / pr).collect();
+        pages.sort_unstable();
+        pages.dedup();
+        self.cold_pages += pages.len() as u64;
+
         let mut host_stream = Vec::new();
         let mut storage_slots = Vec::new();
         for &r in &cold {
@@ -369,9 +398,9 @@ mod tests {
             host_frac,
             tier: TierConfig {
                 hot_frac,
-                reserve_bytes: 0,
                 promote: false,
                 ranking,
+                ..TierConfig::default()
             },
         }
     }
@@ -482,6 +511,34 @@ mod tests {
         assert!(c.split.storage_time_s > 0.0);
         let want = sys().kernel_launch_s + c.split.host_time_s + c.split.storage_time_s;
         assert!((c.time_s - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn page_reads_line_up_with_block_ios() {
+        // 512 B rows at 8 rows/page: one cache page == one 4096 B NVMe
+        // block.  With host_frac 0 every cold row is storage-resident and
+        // slots equal row ids, so the distinct cold pages of each gather
+        // must line up 1:1 with its block IOs.
+        assert_eq!(sys().nvme.block_bytes, 512 * 8);
+        let mut c = cfg(0.0, 0.25, Some((0..128).collect()));
+        c.tier.page_rows = 8;
+        let mut st = NvmeStore::new(128, 512, &sys(), &c);
+        let idx: Vec<u32> = (0..300u32).map(|i| i * 11 % 128).collect();
+        st.gather_cost(&idx, 128, &sys());
+        st.gather_cost(&idx, 128, &sys());
+        let s = st.stats();
+        assert!(s.ios > 0);
+        assert_eq!(s.ios, s.cold_pages, "cold pages must line up 1:1 with block IOs");
+    }
+
+    #[test]
+    fn pins_forward_to_the_gpu_tier_and_balance() {
+        let mut st = NvmeStore::new(100, 64, &sys(), &cfg(0.5, 0.2, Some((0..100).collect())));
+        st.pin_rows(&[0, 1, 50, 99]);
+        assert!(st.stats().tier.pins > 0);
+        st.unpin_rows(&[0, 1, 50, 99]);
+        let t = st.stats().tier;
+        assert_eq!(t.pins, t.unpins);
     }
 
     #[test]

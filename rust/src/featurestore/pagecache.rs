@@ -1,0 +1,811 @@
+//! Shared paged feature cache: fixed-size refcounted pages of feature
+//! rows under a pluggable eviction policy (DESIGN.md §12).
+//!
+//! Every hot tier in the memory hierarchy — the single-GPU tiered cache,
+//! the sharded store's per-GPU tiers, and the NVMe store's GPU tier —
+//! used to run its own bespoke row-granular LFU walk.  [`PageCache`] is
+//! the one implementation they now share, generalized along three axes:
+//!
+//! * **Pages** (`--page-rows`): residency is tracked per fixed-size page
+//!   of `page_rows` consecutive feature rows (page `p` covers rows
+//!   `[p·page_rows, (p+1)·page_rows)`), the paged-KV `BlockRef` idiom.
+//!   `page_rows = 1` is row-granular and reproduces the pre-refactor
+//!   caches bit-exactly — the pinned anchor of
+//!   `tests/pagecache_properties.rs`.
+//! * **Eviction** ([`EvictionEngine`], `--eviction`): `static` (the
+//!   degree-ranked prefix, never admits), `lfu` (the historical lazy
+//!   min-heap), `lru` (oldest access stamp), and `clock` (second
+//!   chance).  Model-based properties live in
+//!   `tests/eviction_policies.rs`.
+//! * **Pins** (refcounts): every gather pins the pages it touches for the
+//!   duration of the classification, and serving streams keep a batch's
+//!   pages pinned while per-request blocks scatter out of it — a pinned
+//!   page is never a victim, whatever the policy says.  Refcounts return
+//!   to zero after every gather (`pins == unpins` when no external pin
+//!   is held).
+//!
+//! Like the caches it subsumes, this is placement metadata only: the
+//! cache never stores feature *values*, so numerics stay bitwise
+//! identical across access modes and only the
+//! [`TransferCost`](crate::interconnect::TransferCost) attribution
+//! changes.
+//!
+//! ```
+//! use ptdirect::config::EvictionPolicy;
+//! use ptdirect::featurestore::PageCache;
+//!
+//! // 10 rows, 2 rows per page, 2-page capacity, rows 0..4 preseeded.
+//! let ranking: Vec<u32> = (0..10).collect();
+//! let mut c = PageCache::build(10, 64, 2, EvictionPolicy::Static, 4, Some(&ranking));
+//! let cold = c.record(&[0, 3, 9]);
+//! assert_eq!(cold, vec![9]); // rows 0 and 3 sit on resident pages 0, 1
+//! assert_eq!(c.stats().hits, 2);
+//! assert_eq!(c.stats().resident_pages, 2);
+//! ```
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::fmt;
+
+use crate::config::EvictionPolicy;
+use crate::featurestore::tiered::TierStats;
+
+/// "No slot" marker for the CLOCK engine's page→slot map.
+const NO_SLOT: u32 = u32::MAX;
+
+/// Read-only view of the cache's per-page state, handed to eviction
+/// engines when they pick a victim — engines own their *order* structures
+/// (heaps, stamps, the clock hand) but never duplicate residency,
+/// frequency, or refcount state.
+pub struct PageView<'a> {
+    /// Per-page cumulative access counts (the LFU signal).
+    pub freq: &'a [u64],
+    /// Per-page residency.
+    pub resident: &'a [bool],
+    /// Per-page pin refcounts; a page with `refcount > 0` has a gather
+    /// in flight over it and must never be chosen as a victim.
+    pub refcount: &'a [u32],
+}
+
+/// Outcome of an admission attempt against a full cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Admit the candidate after evicting this resident victim page (the
+    /// engine has already forgotten the victim's order entry).
+    Evict(u32),
+    /// The candidate loses (LFU not frequent enough, static placement).
+    Reject,
+    /// Every would-be victim is pinned; admission is blocked.
+    Blocked,
+}
+
+/// The pluggable eviction policy: order bookkeeping + victim selection.
+///
+/// The cache owns residency/frequency/refcount state and calls the
+/// engine at three points: every access ([`EvictionEngine::touch`]),
+/// every insertion ([`EvictionEngine::admitted`] — preseed or
+/// promotion), and every full-cache admission attempt
+/// ([`EvictionEngine::decide`]).  Free-capacity inserts bypass `decide`
+/// entirely.  Victim selection must skip pinned pages, and ties must
+/// break deterministically (lowest page id for the heap engines, hand
+/// order for CLOCK) so reports are reproducible across runs.
+pub trait EvictionEngine: fmt::Debug {
+    fn label(&self) -> &'static str;
+    /// Whether misses are ever admitted (`false` freezes the preseeded
+    /// placement — the `static` policy and the `--no-promote` flag).
+    fn admits(&self) -> bool {
+        true
+    }
+    /// Note one access to `page` at logical time `tick` (one tick per
+    /// `record` call).
+    fn touch(&mut self, page: u32, resident: bool, tick: u64);
+    /// `page` became resident with the given frequency, at `tick`.
+    fn admitted(&mut self, page: u32, freq: u64, tick: u64);
+    /// Pick the fate of missed page `cand` when the cache is full.
+    fn decide(&mut self, cand: u32, view: PageView<'_>) -> Admission;
+}
+
+/// Static degree-ranked prefix: the preseed is the placement, forever.
+#[derive(Debug, Default)]
+struct StaticEngine;
+
+impl EvictionEngine for StaticEngine {
+    fn label(&self) -> &'static str {
+        "static"
+    }
+    fn admits(&self) -> bool {
+        false
+    }
+    fn touch(&mut self, _page: u32, _resident: bool, _tick: u64) {}
+    fn admitted(&mut self, _page: u32, _freq: u64, _tick: u64) {}
+    fn decide(&mut self, _cand: u32, _view: PageView<'_>) -> Admission {
+        Admission::Reject
+    }
+}
+
+/// Least-frequently-used: the pre-refactor lazy min-heap, verbatim.
+/// Entries are `(freq-at-insert, page)`; they go stale when a page's
+/// frequency moves or it is evicted, and are repaired/discarded on
+/// inspection.  A candidate is admitted only when *strictly* more
+/// frequent than the least-frequent unpinned resident page.
+#[derive(Debug, Default)]
+struct LfuEngine {
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
+}
+
+impl EvictionEngine for LfuEngine {
+    fn label(&self) -> &'static str {
+        "lfu"
+    }
+    fn touch(&mut self, _page: u32, _resident: bool, _tick: u64) {
+        // Frequencies live in the cache; stale heap keys repair lazily.
+    }
+    fn admitted(&mut self, page: u32, freq: u64, _tick: u64) {
+        self.heap.push(Reverse((freq, page)));
+    }
+    fn decide(&mut self, cand: u32, view: PageView<'_>) -> Admission {
+        // Pinned minima are set aside (stash) and restored afterwards so
+        // their heap entries survive; with no pins held this loop is the
+        // historical refresh_min + evict_min sequence bit-exactly.
+        let mut stash: Vec<Reverse<(u64, u32)>> = Vec::new();
+        let decision = loop {
+            let Some(&Reverse((f, page))) = self.heap.peek() else {
+                break Admission::Blocked;
+            };
+            let pi = page as usize;
+            if !view.resident[pi] {
+                self.heap.pop(); // page was evicted; stale duplicate entry
+                continue;
+            }
+            let current = view.freq[pi];
+            if current != f {
+                self.heap.pop();
+                self.heap.push(Reverse((current, page)));
+                continue;
+            }
+            if view.refcount[pi] > 0 {
+                self.heap.pop();
+                stash.push(Reverse((f, page)));
+                continue;
+            }
+            if view.freq[cand as usize] > f {
+                self.heap.pop();
+                break Admission::Evict(page);
+            }
+            break Admission::Reject;
+        };
+        for e in stash {
+            self.heap.push(e);
+        }
+        decision
+    }
+}
+
+/// Least-recently-used: same lazy-heap machinery keyed by access stamp
+/// instead of frequency.  Every miss is admitted (evicting the oldest
+/// unpinned page); stamp ties — preseeded pages all carry stamp 0 —
+/// break toward the lowest page id.
+#[derive(Debug)]
+struct LruEngine {
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
+    /// Per-page last-access tick (index = page id).
+    stamp: Vec<u64>,
+}
+
+impl EvictionEngine for LruEngine {
+    fn label(&self) -> &'static str {
+        "lru"
+    }
+    fn touch(&mut self, page: u32, _resident: bool, tick: u64) {
+        self.stamp[page as usize] = tick;
+    }
+    fn admitted(&mut self, page: u32, _freq: u64, tick: u64) {
+        let s = self.stamp[page as usize].max(tick);
+        self.stamp[page as usize] = s;
+        self.heap.push(Reverse((s, page)));
+    }
+    fn decide(&mut self, _cand: u32, view: PageView<'_>) -> Admission {
+        let mut stash: Vec<Reverse<(u64, u32)>> = Vec::new();
+        let decision = loop {
+            let Some(&Reverse((s, page))) = self.heap.peek() else {
+                break Admission::Blocked;
+            };
+            let pi = page as usize;
+            if !view.resident[pi] {
+                self.heap.pop();
+                continue;
+            }
+            let current = self.stamp[pi];
+            if current != s {
+                self.heap.pop();
+                self.heap.push(Reverse((current, page)));
+                continue;
+            }
+            if view.refcount[pi] > 0 {
+                self.heap.pop();
+                stash.push(Reverse((s, page)));
+                continue;
+            }
+            self.heap.pop();
+            break Admission::Evict(page);
+        };
+        for e in stash {
+            self.heap.push(e);
+        }
+        decision
+    }
+}
+
+/// CLOCK (second chance): resident pages sit in a circular buffer; a
+/// touch sets the page's reference bit; the hand clears bits as it
+/// sweeps and evicts the first unreferenced, unpinned page it reaches.
+/// A page referenced since the hand last passed it is never the victim
+/// (the property `tests/eviction_policies.rs` pins); pinned pages are
+/// skipped *without* losing their reference bit.
+#[derive(Debug)]
+struct ClockEngine {
+    /// Circular frame buffer of resident page ids.
+    slots: Vec<u32>,
+    /// Page id → slot index (`NO_SLOT` when not resident).
+    pos: Vec<u32>,
+    /// Per-page reference bits (index = page id).
+    referenced: Vec<bool>,
+    hand: usize,
+}
+
+impl EvictionEngine for ClockEngine {
+    fn label(&self) -> &'static str {
+        "clock"
+    }
+    fn touch(&mut self, page: u32, resident: bool, _tick: u64) {
+        if resident {
+            self.referenced[page as usize] = true;
+        }
+    }
+    fn admitted(&mut self, page: u32, _freq: u64, _tick: u64) {
+        // `decide` places replacement admissions in the victim's slot
+        // itself; only free-capacity inserts and preseeds land here with
+        // no slot yet.
+        if self.pos[page as usize] == NO_SLOT {
+            self.pos[page as usize] = self.slots.len() as u32;
+            self.slots.push(page);
+        }
+        self.referenced[page as usize] = false;
+    }
+    fn decide(&mut self, cand: u32, view: PageView<'_>) -> Admission {
+        let n = self.slots.len();
+        if n == 0 {
+            return Admission::Blocked;
+        }
+        // Two full sweeps suffice when any unpinned page exists: the
+        // first clears reference bits, the second must find a victim.
+        // The bound only triggers when every frame is pinned.
+        let mut steps = 0usize;
+        while steps < 2 * n + 1 {
+            let page = self.slots[self.hand];
+            let pi = page as usize;
+            if view.refcount[pi] > 0 {
+                self.hand = (self.hand + 1) % n;
+                steps += 1;
+                continue;
+            }
+            if self.referenced[pi] {
+                self.referenced[pi] = false; // second chance spent
+                self.hand = (self.hand + 1) % n;
+                steps += 1;
+                continue;
+            }
+            // Victim: the candidate takes over this frame in place.
+            self.slots[self.hand] = cand;
+            self.pos[pi] = NO_SLOT;
+            self.pos[cand as usize] = self.hand as u32;
+            self.referenced[cand as usize] = false;
+            self.hand = (self.hand + 1) % n;
+            return Admission::Evict(page);
+        }
+        Admission::Blocked
+    }
+}
+
+/// One paged, refcounted feature cache (membership metadata only — the
+/// unified feature table stays the single source of truth for values).
+#[derive(Debug)]
+pub struct PageCache {
+    rows: usize,
+    page_rows: usize,
+    row_bytes: u64,
+    policy: EvictionPolicy,
+    capacity_pages: usize,
+    /// Per-page residency / pin refcount / access frequency.
+    resident: Vec<bool>,
+    refcount: Vec<u32>,
+    freq: Vec<u64>,
+    engine: Box<dyn EvictionEngine + Send>,
+    /// Logical clock: one tick per `record` call (the LRU stamp source).
+    tick: u64,
+    resident_pages: usize,
+    /// Rows covered by resident pages (partial last page counted by its
+    /// actual span, so `hot_bytes` never overstates the table).
+    resident_rows: usize,
+    pinned_pages: usize,
+    hits: u64,
+    misses: u64,
+    promotions: u64,
+    evictions: u64,
+    pins: u64,
+    unpins: u64,
+    pin_blocked: u64,
+}
+
+impl PageCache {
+    /// Build a cache over a `rows`-row table of `row_bytes`-byte rows:
+    /// `capacity_rows` of budget at `page_rows` granularity (the page
+    /// capacity is `capacity_rows / page_rows` — whole pages only), with
+    /// the ranking's distinct in-range prefix preseeded page-wise.
+    ///
+    /// At `page_rows = 1` the preseed walk is exactly
+    /// [`ranked_prefix`](crate::featurestore::placement::ranked_prefix)
+    /// plus insertion, and the `Lfu` policy replays the pre-refactor
+    /// [`TieredCache`](crate::featurestore::tiered::TieredCache)
+    /// arithmetic bit-exactly.
+    pub fn build(
+        rows: usize,
+        row_bytes: u64,
+        page_rows: usize,
+        policy: EvictionPolicy,
+        capacity_rows: usize,
+        ranking: Option<&[u32]>,
+    ) -> PageCache {
+        let page_rows = page_rows.max(1);
+        let num_pages = rows.div_ceil(page_rows);
+        let capacity_pages = (capacity_rows / page_rows).min(num_pages);
+        let engine: Box<dyn EvictionEngine + Send> = match policy {
+            EvictionPolicy::Static => Box::new(StaticEngine),
+            EvictionPolicy::Lfu => Box::new(LfuEngine::default()),
+            EvictionPolicy::Lru => Box::new(LruEngine {
+                heap: BinaryHeap::new(),
+                stamp: vec![0; num_pages],
+            }),
+            EvictionPolicy::Clock => Box::new(ClockEngine {
+                slots: Vec::new(),
+                pos: vec![NO_SLOT; num_pages],
+                referenced: vec![false; num_pages],
+                hand: 0,
+            }),
+        };
+        let mut cache = PageCache {
+            rows,
+            page_rows,
+            row_bytes,
+            policy,
+            capacity_pages,
+            resident: vec![false; num_pages],
+            refcount: vec![0; num_pages],
+            freq: vec![0; num_pages],
+            engine,
+            tick: 0,
+            resident_pages: 0,
+            resident_rows: 0,
+            pinned_pages: 0,
+            hits: 0,
+            misses: 0,
+            promotions: 0,
+            evictions: 0,
+            pins: 0,
+            unpins: 0,
+            pin_blocked: 0,
+        };
+        if let Some(rk) = ranking {
+            for &r in rk {
+                if cache.resident_pages >= cache.capacity_pages {
+                    break;
+                }
+                if (r as usize) < rows {
+                    let p = (r as usize / page_rows) as u32;
+                    if !cache.resident[p as usize] {
+                        cache.insert(p);
+                    }
+                }
+            }
+        }
+        cache
+    }
+
+    pub fn policy(&self) -> EvictionPolicy {
+        self.policy
+    }
+
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    pub fn num_pages(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn capacity_pages(&self) -> usize {
+        self.capacity_pages
+    }
+
+    pub fn resident_pages(&self) -> usize {
+        self.resident_pages
+    }
+
+    /// Rows covered by resident pages (partial last page by actual span).
+    pub fn resident_rows(&self) -> usize {
+        self.resident_rows
+    }
+
+    pub fn pinned_pages(&self) -> usize {
+        self.pinned_pages
+    }
+
+    /// Page a row lives on.
+    pub fn page_of(&self, row: u32) -> u32 {
+        (row as usize / self.page_rows) as u32
+    }
+
+    /// Rows page `p` actually covers (the last page may be partial).
+    pub fn page_span(&self, p: usize) -> usize {
+        let start = p * self.page_rows;
+        debug_assert!(start < self.rows.max(1));
+        (self.rows - start.min(self.rows)).min(self.page_rows)
+    }
+
+    pub fn is_resident_page(&self, page: u32) -> bool {
+        self.resident[page as usize]
+    }
+
+    /// Whether a row's page is resident (the row-level membership the
+    /// stores classify against).
+    pub fn is_resident(&self, row: u32) -> bool {
+        self.resident[row as usize / self.page_rows]
+    }
+
+    /// Current pin refcount of a page.
+    pub fn refcount_of(&self, page: u32) -> u32 {
+        self.refcount[page as usize]
+    }
+
+    /// Resident page ids in ascending order (test/diagnostic helper).
+    pub fn resident_page_ids(&self) -> Vec<u32> {
+        (0..self.resident.len() as u32)
+            .filter(|&p| self.resident[p as usize])
+            .collect()
+    }
+
+    /// Counters and gauges in the shared [`TierStats`] shape.
+    pub fn stats(&self) -> TierStats {
+        TierStats {
+            hits: self.hits,
+            misses: self.misses,
+            promotions: self.promotions,
+            evictions: self.evictions,
+            hot_rows: self.resident_rows,
+            hot_bytes: self.resident_rows as u64 * self.row_bytes,
+            capacity_rows: self.capacity_pages * self.page_rows,
+            capacity_bytes: (self.capacity_pages * self.page_rows) as u64 * self.row_bytes,
+            pins: self.pins,
+            unpins: self.unpins,
+            pin_blocked: self.pin_blocked,
+            resident_pages: self.resident_pages,
+            capacity_pages: self.capacity_pages,
+            page_rows: self.page_rows,
+        }
+    }
+
+    /// Pin the pages covering `idx` (one refcount each per occurrence's
+    /// page, deduplicated per call): a pinned page is never evicted.
+    /// Callers must pair every `pin_rows` with an `unpin_rows` of the
+    /// same `idx` — the serving engine holds a batch's pins while the
+    /// per-request blocks scatter out of the gathered buffer.
+    pub fn pin_rows(&mut self, idx: &[u32]) {
+        let pages = self.pages_of(idx);
+        self.pin_pages(&pages);
+    }
+
+    /// Release the pins `pin_rows(idx)` took.
+    pub fn unpin_rows(&mut self, idx: &[u32]) {
+        let pages = self.pages_of(idx);
+        self.unpin_pages(&pages);
+    }
+
+    /// Distinct pages behind an id stream, ascending.
+    fn pages_of(&self, idx: &[u32]) -> Vec<u32> {
+        let mut pages: Vec<u32> = idx
+            .iter()
+            .map(|&r| (r as usize / self.page_rows) as u32)
+            .collect();
+        pages.sort_unstable();
+        pages.dedup();
+        pages
+    }
+
+    fn pin_pages(&mut self, pages: &[u32]) {
+        for &p in pages {
+            let pi = p as usize;
+            if self.refcount[pi] == 0 {
+                self.pinned_pages += 1;
+            }
+            self.refcount[pi] += 1;
+            self.pins += 1;
+        }
+    }
+
+    fn unpin_pages(&mut self, pages: &[u32]) {
+        for &p in pages {
+            let pi = p as usize;
+            debug_assert!(self.refcount[pi] > 0, "unpin of unpinned page {p}");
+            if self.refcount[pi] > 0 {
+                self.refcount[pi] -= 1;
+                if self.refcount[pi] == 0 {
+                    self.pinned_pages -= 1;
+                }
+                self.unpins += 1;
+            }
+        }
+    }
+
+    /// Account one gather: splits `idx` into hits and the returned cold
+    /// subset (original order preserved — the cold rows form the link
+    /// request stream), bumps page frequencies, then runs the policy's
+    /// admission pass over the missed pages (sorted, deduplicated).
+    ///
+    /// The touched pages are pinned for the duration of the
+    /// classification and released before admission — the gather in
+    /// flight can never lose its own pages, and promotion (which runs
+    /// *between* batches: the first toucher still pays cold cost) sees
+    /// the unpinned refcounts, exactly the pre-refactor semantics.
+    pub fn record(&mut self, idx: &[u32]) -> Vec<u32> {
+        self.tick += 1;
+        let touched = self.pages_of(idx);
+        self.pin_pages(&touched);
+        let mut cold = Vec::new();
+        for &r in idx {
+            let p = r as usize / self.page_rows;
+            self.freq[p] += 1;
+            let resident = self.resident[p];
+            self.engine.touch(p as u32, resident, self.tick);
+            if resident {
+                self.hits += 1;
+            } else {
+                self.misses += 1;
+                cold.push(r);
+            }
+        }
+        self.unpin_pages(&touched);
+        if self.engine.admits() && self.capacity_pages > 0 && !cold.is_empty() {
+            let mut candidates: Vec<u32> = cold
+                .iter()
+                .map(|&r| (r as usize / self.page_rows) as u32)
+                .collect();
+            candidates.sort_unstable();
+            candidates.dedup();
+            for p in candidates {
+                self.maybe_admit(p);
+            }
+        }
+        cold
+    }
+
+    fn maybe_admit(&mut self, p: u32) {
+        if self.resident[p as usize] {
+            return;
+        }
+        if self.resident_pages < self.capacity_pages {
+            self.insert(p);
+            self.promotions += 1;
+            return;
+        }
+        let decision = self.engine.decide(
+            p,
+            PageView {
+                freq: &self.freq,
+                resident: &self.resident,
+                refcount: &self.refcount,
+            },
+        );
+        match decision {
+            Admission::Evict(victim) => {
+                self.evict(victim);
+                self.insert(p);
+                self.promotions += 1;
+            }
+            Admission::Reject => {}
+            Admission::Blocked => self.pin_blocked += 1,
+        }
+    }
+
+    fn insert(&mut self, p: u32) {
+        let pi = p as usize;
+        debug_assert!(!self.resident[pi]);
+        self.resident[pi] = true;
+        self.resident_pages += 1;
+        self.resident_rows += self.page_span(pi);
+        self.engine.admitted(p, self.freq[pi], self.tick);
+    }
+
+    fn evict(&mut self, p: u32) {
+        let pi = p as usize;
+        debug_assert!(self.resident[pi]);
+        debug_assert_eq!(self.refcount[pi], 0, "pinned page {p} evicted");
+        self.resident[pi] = false;
+        self.resident_pages -= 1;
+        self.resident_rows -= self.page_span(pi);
+        self.evictions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build(
+        rows: usize,
+        page_rows: usize,
+        policy: EvictionPolicy,
+        capacity_rows: usize,
+        ranking: Option<Vec<u32>>,
+    ) -> PageCache {
+        PageCache::build(rows, 4, page_rows, policy, capacity_rows, ranking.as_deref())
+    }
+
+    #[test]
+    fn pages_tile_the_table_with_a_partial_tail() {
+        let c = build(10, 4, EvictionPolicy::Static, 8, None);
+        assert_eq!(c.num_pages(), 3);
+        assert_eq!(c.page_span(0), 4);
+        assert_eq!(c.page_span(1), 4);
+        assert_eq!(c.page_span(2), 2); // rows 8, 9 only
+        for r in 0..10u32 {
+            assert_eq!(c.page_of(r), r / 4);
+        }
+    }
+
+    #[test]
+    fn preseed_walks_the_ranking_page_wise() {
+        // Ranking hits pages 2, 0, 2 (duplicate page skipped), 1 — but
+        // capacity is 2 pages, so pages 2 and 0 go resident.
+        let c = build(12, 4, EvictionPolicy::Static, 8, Some(vec![9, 1, 10, 4]));
+        assert_eq!(c.resident_page_ids(), vec![0, 2]);
+        assert_eq!(c.resident_rows(), 8);
+    }
+
+    #[test]
+    fn record_splits_hits_by_page_membership() {
+        let mut c = build(12, 4, EvictionPolicy::Static, 4, Some(vec![0]));
+        // Page 0 resident: rows 0..4 hit; everything else is cold.
+        let cold = c.record(&[1, 3, 4, 11, 1]);
+        assert_eq!(cold, vec![4, 11]);
+        let s = c.stats();
+        assert_eq!(s.hits, 3);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.page_rows, 4);
+    }
+
+    #[test]
+    fn static_never_admits_or_evicts() {
+        let mut c = build(20, 1, EvictionPolicy::Static, 2, Some(vec![0, 1]));
+        for _ in 0..10 {
+            c.record(&[5, 6, 7]);
+        }
+        assert_eq!(c.resident_page_ids(), vec![0, 1]);
+        let s = c.stats();
+        assert_eq!(s.promotions, 0);
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn lfu_admits_only_strictly_more_frequent_pages() {
+        let mut c = build(10, 1, EvictionPolicy::Lfu, 2, None);
+        c.record(&[1, 2]); // both promoted into free capacity
+        assert!(c.is_resident(1) && c.is_resident(2));
+        c.record(&[2]); // freq: p1=1, p2=2
+        c.record(&[3]); // freq p3=1 == min -> rejected (strict >)
+        assert!(!c.is_resident(3));
+        c.record(&[3]); // freq p3=2 > freq p1=1 -> displaces the minimum
+        assert!(c.is_resident(3) && !c.is_resident(1));
+        c.record(&[3]); // now a hit
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn lru_evicts_the_oldest_stamp() {
+        let mut c = build(10, 1, EvictionPolicy::Lru, 2, None);
+        c.record(&[1]); // tick 1
+        c.record(&[2]); // tick 2
+        c.record(&[3]); // tick 3: page 1 (stamp 1) is the oldest
+        assert!(!c.is_resident(1));
+        assert!(c.is_resident(2) && c.is_resident(3));
+        c.record(&[2]); // refresh 2's stamp
+        c.record(&[4]); // evicts 3 (stamp 3 < stamp 4 of page 2)
+        assert!(c.is_resident(2) && c.is_resident(4) && !c.is_resident(3));
+    }
+
+    #[test]
+    fn lru_breaks_preseed_stamp_ties_by_lowest_page_id() {
+        // Preseeded pages all carry stamp 0; the first eviction must take
+        // the lowest page id deterministically.
+        let mut c = build(10, 1, EvictionPolicy::Lru, 3, Some(vec![7, 2, 5]));
+        c.record(&[9]);
+        assert!(!c.is_resident(2), "lowest-id stamp-0 page must go first");
+        assert!(c.is_resident(5) && c.is_resident(7) && c.is_resident(9));
+    }
+
+    #[test]
+    fn clock_grants_a_second_chance_to_referenced_pages() {
+        let mut c = build(10, 1, EvictionPolicy::Clock, 2, Some(vec![0, 1]));
+        c.record(&[0]); // reference page 0
+        // Miss on page 5: hand starts at slot 0 (page 0, referenced ->
+        // spent), moves to page 1 (unreferenced) -> victim.
+        c.record(&[5]);
+        assert!(c.is_resident(0), "referenced page survived the sweep");
+        assert!(!c.is_resident(1));
+        assert!(c.is_resident(5));
+    }
+
+    #[test]
+    fn pinned_pages_are_never_victims() {
+        for policy in [
+            EvictionPolicy::Lfu,
+            EvictionPolicy::Lru,
+            EvictionPolicy::Clock,
+        ] {
+            let mut c = build(10, 1, policy, 2, Some(vec![0, 1]));
+            c.pin_rows(&[0, 1]);
+            // Make the intruder overwhelmingly admissible under LFU.
+            for _ in 0..5 {
+                c.record(&[5]);
+            }
+            assert!(
+                c.is_resident(0) && c.is_resident(1),
+                "{policy:?} evicted a pinned page"
+            );
+            assert!(!c.is_resident(5), "{policy:?} admitted over pinned frames");
+            assert!(c.stats().pin_blocked > 0, "{policy:?} never reported blocking");
+            c.unpin_rows(&[0, 1]);
+            assert_eq!(c.pinned_pages(), 0);
+            // Unpinned again: the admission goes through.
+            c.record(&[5]);
+            assert!(c.is_resident(5), "{policy:?} stayed blocked after unpin");
+        }
+    }
+
+    #[test]
+    fn refcounts_return_to_zero_after_every_record() {
+        let mut c = build(20, 2, EvictionPolicy::Lfu, 10, None);
+        for step in 0..5u32 {
+            c.record(&[step, step + 3, step + 7, step]);
+            assert_eq!(c.pinned_pages(), 0, "step {step}");
+            for p in 0..c.num_pages() as u32 {
+                assert_eq!(c.refcount_of(p), 0, "page {p} after step {step}");
+            }
+        }
+        let s = c.stats();
+        assert_eq!(s.pins, s.unpins, "gather pins must balance");
+        assert!(s.pins > 0);
+    }
+
+    #[test]
+    fn residency_never_exceeds_the_page_budget() {
+        let mut c = build(100, 8, EvictionPolicy::Lru, 30, None);
+        assert_eq!(c.capacity_pages(), 3); // whole pages only: 30 / 8
+        for i in 0..200u32 {
+            c.record(&[(i * 13) % 100]);
+            assert!(c.resident_pages() <= c.capacity_pages());
+            assert!(c.resident_rows() <= c.capacity_pages() * c.page_rows());
+        }
+        let s = c.stats();
+        assert_eq!(s.capacity_rows, 24);
+        assert!(s.hot_rows <= s.capacity_rows);
+    }
+
+    #[test]
+    fn partial_tail_page_reports_its_true_span() {
+        // 10 rows at 4 rows/page: page 2 covers rows 8..10 only.
+        let c = build(10, 4, EvictionPolicy::Static, 12, Some((0..10).collect()));
+        assert_eq!(c.resident_pages(), 3);
+        assert_eq!(c.resident_rows(), 10);
+        assert_eq!(c.stats().hot_bytes, 10 * 4);
+    }
+}

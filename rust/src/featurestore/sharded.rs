@@ -285,6 +285,8 @@ impl ShardedStore {
                     reserve_bytes: cfg.tier.reserve_bytes,
                     promote: cfg.tier.promote,
                     ranking,
+                    page_rows: cfg.tier.page_rows,
+                    eviction: cfg.tier.eviction,
                 };
                 TieredCache::with_row_basis(rows, shard_rows[g], row_bytes, sys, &tier_cfg)
             })
@@ -321,6 +323,34 @@ impl ShardedStore {
     /// One GPU's hot-tier counters/gauges.
     pub fn tier_stats(&self, gpu: usize) -> TierStats {
         self.tiers[gpu].stats()
+    }
+
+    /// Pin the pages covering `idx` in each row's *owner* tier, so an
+    /// in-flight gather's pages survive concurrent admissions; pair with
+    /// [`ShardedStore::unpin_rows`].
+    pub fn pin_rows(&mut self, idx: &[u32]) {
+        self.route_pins(idx, true);
+    }
+
+    /// Release the pins [`ShardedStore::pin_rows`] took.
+    pub fn unpin_rows(&mut self, idx: &[u32]) {
+        self.route_pins(idx, false);
+    }
+
+    fn route_pins(&mut self, idx: &[u32], pin: bool) {
+        let mut per_owner: Vec<Vec<u32>> = vec![Vec::new(); self.num_gpus];
+        for &r in idx {
+            per_owner[self.owner[r as usize] as usize].push(r);
+        }
+        for (o, rows) in per_owner.iter().enumerate() {
+            if !rows.is_empty() {
+                if pin {
+                    self.tiers[o].pin_rows(rows);
+                } else {
+                    self.tiers[o].unpin_rows(rows);
+                }
+            }
+        }
     }
 
     /// Snapshot of per-GPU counters + gauges.
@@ -493,9 +523,9 @@ mod tests {
             policy,
             tier: TierConfig {
                 hot_frac,
-                reserve_bytes: 0,
                 promote: false,
                 ranking: Some((0..1000).collect()),
+                ..TierConfig::default()
             },
         }
     }
@@ -564,9 +594,9 @@ mod tests {
             &sys(),
             &TierConfig {
                 hot_frac: 0.25,
-                reserve_bytes: 0,
                 promote: false,
                 ranking: Some((0..1000).collect()),
+                ..TierConfig::default()
             },
         );
         let idx: Vec<u32> = (0..500u32).map(|i| i * 13 % 800).collect();
@@ -598,9 +628,9 @@ mod tests {
             policy: ShardPolicy::Degree,
             tier: TierConfig {
                 hot_frac: 1.0,
-                reserve_bytes: 0,
                 promote: false,
                 ranking: Some([2u32, 3, 0, 1].into_iter().chain(4..100).collect()),
+                ..TierConfig::default()
             },
         };
         let mut st = ShardedStore::new(100, 64, &sys(), &cfg);
@@ -683,6 +713,25 @@ mod tests {
             ],
         };
         assert!((skewed.load_imbalance() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pins_route_to_owner_tiers_and_balance() {
+        let mut st = ShardedStore::new(100, 64, &sys(), &shard_cfg(3, ShardPolicy::Contig, 0.5));
+        let idx: Vec<u32> = (0..100).collect();
+        st.pin_rows(&idx);
+        let pinned: u64 = (0..3).map(|g| st.tier_stats(g).pins).sum();
+        assert!(pinned > 0);
+        // Contig with 100 rows over 3 GPUs: every shard holds rows, so
+        // every tier must have taken pins.
+        for g in 0..3 {
+            assert!(st.tier_stats(g).pins > 0, "gpu {g} got no pins");
+        }
+        st.unpin_rows(&idx);
+        for g in 0..3 {
+            let ts = st.tier_stats(g);
+            assert_eq!(ts.pins, ts.unpins, "gpu {g} pins unbalanced");
+        }
     }
 
     #[test]

@@ -251,6 +251,36 @@ impl FeatureStore {
         self.nvme.as_ref().map(|s| Self::lock(s).stats())
     }
 
+    /// Pin the cache pages covering `idx` in whichever hot tier this mode
+    /// has (tiered / sharded / nvme; no-op elsewhere), so the pages of an
+    /// in-flight gather are never evicted while its rows scatter out —
+    /// the serving engine holds these across a coalesced window's
+    /// per-request scatters.  Pair with [`FeatureStore::unpin_rows`].
+    pub fn pin_rows(&self, idx: &[u32]) {
+        if let Some(t) = self.tier.as_ref() {
+            Self::lock(t).pin_rows(idx);
+        }
+        if let Some(s) = self.shard.as_ref() {
+            Self::lock(s).pin_rows(idx);
+        }
+        if let Some(n) = self.nvme.as_ref() {
+            Self::lock(n).pin_rows(idx);
+        }
+    }
+
+    /// Release the pins [`FeatureStore::pin_rows`] took.
+    pub fn unpin_rows(&self, idx: &[u32]) {
+        if let Some(t) = self.tier.as_ref() {
+            Self::lock(t).unpin_rows(idx);
+        }
+        if let Some(s) = self.shard.as_ref() {
+            Self::lock(s).unpin_rows(idx);
+        }
+        if let Some(n) = self.nvme.as_ref() {
+            Self::lock(n).unpin_rows(idx);
+        }
+    }
+
     /// Simulated cost of a GPU zero-copy gather of `idx` over PCIe —
     /// shared by the `UnifiedNaive`/`UnifiedAligned` arms and the tiered
     /// cold path, so "tiered at hot_frac 0 costs exactly UnifiedAligned"
@@ -612,9 +642,9 @@ mod tests {
             42,
             crate::featurestore::tiered::TierConfig {
                 hot_frac,
-                reserve_bytes: 0,
                 promote: false,
                 ranking: Some((0..500).collect()),
+                ..Default::default()
             },
         )
         .unwrap()
@@ -688,9 +718,9 @@ mod tests {
                 policy: crate::config::ShardPolicy::Hash,
                 tier: crate::featurestore::tiered::TierConfig {
                     hot_frac,
-                    reserve_bytes: 0,
                     promote: false,
                     ranking: Some((0..500).collect()),
+                    ..Default::default()
                 },
             },
         )
@@ -744,9 +774,9 @@ mod tests {
                 host_frac,
                 tier: crate::featurestore::tiered::TierConfig {
                     hot_frac,
-                    reserve_bytes: 0,
                     promote: false,
                     ranking: Some((0..500).collect()),
+                    ..Default::default()
                 },
             },
         )
@@ -795,6 +825,20 @@ mod tests {
         assert!(stats.amplification() >= 1.0);
         assert_eq!(stats.host_resident_rows, 250);
         assert_eq!(stats.spilled_rows, 250);
+    }
+
+    #[test]
+    fn pin_rows_reaches_the_hot_tier_and_is_a_noop_elsewhere() {
+        let st = tiered_store(0.25);
+        st.pin_rows(&[0, 1, 2]);
+        assert!(st.tier_stats().unwrap().pins > 0);
+        st.unpin_rows(&[0, 1, 2]);
+        let ts = st.tier_stats().unwrap();
+        assert_eq!(ts.pins, ts.unpins);
+        // Modes without a hot tier accept (and ignore) pins.
+        let flat = store(AccessMode::UnifiedAligned);
+        flat.pin_rows(&[0, 1, 2]);
+        flat.unpin_rows(&[0, 1, 2]);
     }
 
     #[test]

@@ -9,16 +9,26 @@
 //! the GPU-resident speedup without the out-of-memory wall; GIDS
 //! (arXiv:2306.16384) ships the same hot/cold split in production.
 //!
-//! [`TieredCache`] tracks which rows are hot.  Placement comes from two
-//! sources that compose:
+//! [`TieredCache`] tracks which rows are hot.  It is a thin
+//! policy/capacity wrapper over the shared paged cache
+//! ([`PageCache`](crate::featurestore::PageCache), DESIGN.md §12):
+//! residency is per fixed-size page of `--page-rows` consecutive rows,
+//! placement comes from two sources that compose:
 //!
 //! * a static *ranking* (descending node degree, [`degree_ranking`]) used
-//!   to pre-seed the hot set, and
-//! * an optional online LFU promotion policy: per-row access frequencies
-//!   are counted on every gather, and a cold row that becomes more frequent
-//!   than the coldest hot row displaces it (lazy min-heap, stale entries
-//!   repaired on inspection).  Repeated epochs therefore warm the cache
-//!   even from an empty start.
+//!   to pre-seed the hot set page-wise, and
+//! * an optional online eviction policy (`--eviction`, default LFU):
+//!   per-page access frequencies are counted on every gather, and a cold
+//!   page that the policy admits displaces a victim (for LFU: a page that
+//!   becomes more frequent than the coldest hot page; lazy min-heap,
+//!   stale entries repaired on inspection).  Repeated epochs therefore
+//!   warm the cache even from an empty start.  `--no-promote` forces the
+//!   `static` policy: the preseeded placement is frozen.
+//!
+//! `--eviction static --page-rows 1` (equivalently `--no-promote`) and
+//! the default `--eviction lfu --page-rows 1` both reproduce the
+//! pre-refactor row-granular cache bit-exactly — the differential anchor
+//! of `tests/pagecache_properties.rs`.
 //!
 //! Capacity is `SystemProfile::gpu_mem_bytes` minus a configurable
 //! model/activation reserve, and additionally capped by the `hot_frac`
@@ -44,9 +54,9 @@
 //! [`TransferCost`]: crate::interconnect::TransferCost
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 
-use crate::config::{RunConfig, SystemProfile};
+use crate::config::{EvictionPolicy, RunConfig, SystemProfile};
+use crate::featurestore::pagecache::PageCache;
 use crate::graph::Csr;
 
 /// Placement/capacity knobs for the tiered store.
@@ -58,11 +68,17 @@ pub struct TierConfig {
     /// GPU bytes reserved for model parameters + activations; the hot tier
     /// may only use what remains of `gpu_mem_bytes`.
     pub reserve_bytes: u64,
-    /// Enable online LFU promotion (epoch-over-epoch warming).
+    /// Enable online promotion (epoch-over-epoch warming).  `false`
+    /// forces the `static` eviction policy regardless of `eviction`.
     pub promote: bool,
     /// Static placement ranking, hottest first (usually descending degree).
     /// `None` starts the cache cold and relies on promotion.
     pub ranking: Option<Vec<u32>>,
+    /// Rows per cache page (`--page-rows`); 1 is row-granular and
+    /// reproduces the pre-refactor cache bit-exactly.
+    pub page_rows: usize,
+    /// Eviction policy for online promotion (`--eviction`).
+    pub eviction: EvictionPolicy,
 }
 
 impl Default for TierConfig {
@@ -72,6 +88,8 @@ impl Default for TierConfig {
             reserve_bytes: 0,
             promote: true,
             ranking: None,
+            page_rows: 1,
+            eviction: EvictionPolicy::Lfu,
         }
     }
 }
@@ -87,6 +105,8 @@ impl TierConfig {
                 * cfg.gpu_reserve_frac.clamp(0.0, 1.0)) as u64,
             promote: cfg.tier_promote,
             ranking: Some(degree_ranking(graph)),
+            page_rows: cfg.page_rows,
+            eviction: cfg.eviction,
         }
     }
 }
@@ -107,16 +127,26 @@ pub struct TierStats {
     pub hits: u64,
     /// Rows served over PCIe from the unified cold tier.
     pub misses: u64,
-    /// Online LFU promotions performed.
+    /// Online promotions performed (pages admitted).
     pub promotions: u64,
-    /// Hot rows displaced by promotions.
+    /// Hot pages displaced by promotions.
     pub evictions: u64,
     /// Current hot-set size, rows / bytes.
     pub hot_rows: usize,
     pub hot_bytes: u64,
-    /// Hot-set capacity, rows / bytes (never exceeded).
+    /// Hot-set capacity, rows / bytes (never exceeded; whole pages only).
     pub capacity_rows: usize,
     pub capacity_bytes: u64,
+    /// Page pins taken / released (gathers in flight plus serving
+    /// streams holding scatter windows; equal whenever no pin is held).
+    pub pins: u64,
+    pub unpins: u64,
+    /// Admissions that found every would-be victim pinned.
+    pub pin_blocked: u64,
+    /// Current resident pages / page capacity / page granularity.
+    pub resident_pages: usize,
+    pub capacity_pages: usize,
+    pub page_rows: usize,
 }
 
 impl TierStats {
@@ -138,30 +168,19 @@ impl TierStats {
             misses: self.misses - earlier.misses,
             promotions: self.promotions - earlier.promotions,
             evictions: self.evictions - earlier.evictions,
+            pins: self.pins - earlier.pins,
+            unpins: self.unpins - earlier.unpins,
+            pin_blocked: self.pin_blocked - earlier.pin_blocked,
             ..*self
         }
     }
 }
 
-/// Hot-set membership + LFU machinery for one feature table.
+/// Hot-set membership for one feature table: capacity/policy resolution
+/// over the shared [`PageCache`].
 #[derive(Debug)]
 pub struct TieredCache {
-    /// Per-row hot membership.
-    hot: Vec<bool>,
-    /// Per-row access counts (LFU signal).
-    freq: Vec<u64>,
-    /// Lazy min-heap over hot rows as `(freq-at-insert, row)`; entries go
-    /// stale when a row's frequency moves or it is evicted, and are
-    /// repaired/discarded on inspection.
-    heap: BinaryHeap<Reverse<(u64, u32)>>,
-    hot_rows: usize,
-    capacity_rows: usize,
-    row_bytes: u64,
-    promote: bool,
-    hits: u64,
-    misses: u64,
-    promotions: u64,
-    evictions: u64,
+    cache: PageCache,
 }
 
 impl TieredCache {
@@ -196,138 +215,72 @@ impl TieredCache {
         };
         let target_rows = (cfg.hot_frac.clamp(0.0, 1.0) * basis_rows as f64).floor() as usize;
         let capacity_rows = target_rows.min(budget_rows);
-        let mut cache = TieredCache {
-            hot: vec![false; rows],
-            freq: vec![0; rows],
-            heap: BinaryHeap::new(),
-            hot_rows: 0,
-            capacity_rows,
-            row_bytes,
-            promote: cfg.promote,
-            hits: 0,
-            misses: 0,
-            promotions: 0,
-            evictions: 0,
+        // `--no-promote` freezes the preseeded placement no matter which
+        // eviction policy is configured.
+        let policy = if cfg.promote {
+            cfg.eviction
+        } else {
+            EvictionPolicy::Static
         };
-        if let Some(ranking) = &cfg.ranking {
-            for v in crate::featurestore::placement::ranked_prefix(rows, capacity_rows, ranking) {
-                cache.insert_hot(v);
-            }
+        TieredCache {
+            cache: PageCache::build(
+                rows,
+                row_bytes,
+                cfg.page_rows,
+                policy,
+                capacity_rows,
+                cfg.ranking.as_deref(),
+            ),
         }
-        cache
     }
 
+    /// Row capacity at page granularity (whole pages only; equal to the
+    /// budgeted row capacity when `page_rows == 1`).
     pub fn capacity_rows(&self) -> usize {
-        self.capacity_rows
+        self.cache.capacity_pages() * self.cache.page_rows()
     }
 
     pub fn hot_rows(&self) -> usize {
-        self.hot_rows
+        self.cache.resident_rows()
+    }
+
+    pub fn page_rows(&self) -> usize {
+        self.cache.page_rows()
     }
 
     pub fn is_hot(&self, row: u32) -> bool {
-        self.hot[row as usize]
+        self.cache.is_resident(row)
     }
 
     pub fn stats(&self) -> TierStats {
-        TierStats {
-            hits: self.hits,
-            misses: self.misses,
-            promotions: self.promotions,
-            evictions: self.evictions,
-            hot_rows: self.hot_rows,
-            hot_bytes: self.hot_rows as u64 * self.row_bytes,
-            capacity_rows: self.capacity_rows,
-            capacity_bytes: self.capacity_rows as u64 * self.row_bytes,
-        }
+        self.cache.stats()
+    }
+
+    /// Pin the pages covering `idx` so in-flight gathers are never
+    /// evicted; pair with [`TieredCache::unpin_rows`].
+    pub fn pin_rows(&mut self, idx: &[u32]) {
+        self.cache.pin_rows(idx);
+    }
+
+    /// Release the pins [`TieredCache::pin_rows`] took.
+    pub fn unpin_rows(&mut self, idx: &[u32]) {
+        self.cache.unpin_rows(idx);
     }
 
     /// Account one gather: splits `idx` into hits and the returned cold
     /// subset (original order preserved — the cold rows form the PCIe
-    /// request stream), bumps LFU frequencies, then applies promotions.
+    /// request stream), bumps page frequencies, then applies the eviction
+    /// policy's admission pass ([`PageCache::record`]).
     ///
     /// Promotion runs *after* the split on purpose: the batch that first
-    /// touches a row still pays its cold cost; only later batches benefit.
+    /// touches a page still pays its cold cost; only later batches benefit.
     ///
     /// Under the default gather deduplication (DESIGN.md §10) `idx` is
     /// already the batch's *compacted* unique stream, so hits/misses and
-    /// LFU frequencies count each distinct row once per batch; with
+    /// page frequencies count each distinct row once per batch; with
     /// `--no-dedup` every duplicated occurrence counts, as before.
     pub fn record(&mut self, idx: &[u32]) -> Vec<u32> {
-        let mut cold = Vec::new();
-        for &r in idx {
-            let ri = r as usize;
-            self.freq[ri] += 1;
-            if self.hot[ri] {
-                self.hits += 1;
-            } else {
-                self.misses += 1;
-                cold.push(r);
-            }
-        }
-        if self.promote && self.capacity_rows > 0 && !cold.is_empty() {
-            let mut candidates = cold.clone();
-            candidates.sort_unstable();
-            candidates.dedup();
-            for r in candidates {
-                self.maybe_promote(r);
-            }
-        }
-        cold
-    }
-
-    fn maybe_promote(&mut self, r: u32) {
-        if self.hot[r as usize] {
-            return;
-        }
-        if self.hot_rows < self.capacity_rows {
-            self.insert_hot(r);
-            self.promotions += 1;
-            return;
-        }
-        match self.refresh_min() {
-            Some((min_freq, _)) if self.freq[r as usize] > min_freq => {
-                self.evict_min();
-                self.insert_hot(r);
-                self.promotions += 1;
-            }
-            _ => {}
-        }
-    }
-
-    fn insert_hot(&mut self, r: u32) {
-        debug_assert!(!self.hot[r as usize]);
-        self.hot[r as usize] = true;
-        self.hot_rows += 1;
-        self.heap.push(Reverse((self.freq[r as usize], r)));
-    }
-
-    /// Make the heap top a valid `(current_freq, hot_row)` minimum, fixing
-    /// stale entries (evicted rows, outdated frequencies) along the way.
-    fn refresh_min(&mut self) -> Option<(u64, u32)> {
-        while let Some(&Reverse((f, row))) = self.heap.peek() {
-            if !self.hot[row as usize] {
-                self.heap.pop(); // row was evicted; duplicate entry
-                continue;
-            }
-            let current = self.freq[row as usize];
-            if current != f {
-                self.heap.pop();
-                self.heap.push(Reverse((current, row)));
-                continue;
-            }
-            return Some((f, row));
-        }
-        None
-    }
-
-    fn evict_min(&mut self) {
-        if let Some((_, row)) = self.refresh_min() {
-            self.heap.pop();
-            self.hot[row as usize] = false;
-            self.hot_rows -= 1;
-            self.evictions += 1;
-        }
+        self.cache.record(idx)
     }
 }
 
@@ -342,9 +295,9 @@ mod tests {
     fn cfg(hot_frac: f64, promote: bool, ranking: Option<Vec<u32>>) -> TierConfig {
         TierConfig {
             hot_frac,
-            reserve_bytes: 0,
             promote,
             ranking,
+            ..TierConfig::default()
         }
     }
 
@@ -482,6 +435,66 @@ mod tests {
         assert_eq!(delta.hits, 2);
         assert_eq!(delta.misses, 1);
         assert!((delta.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn page_rows_truncates_capacity_to_whole_pages() {
+        let mut tc = cfg(0.5, false, Some((0..100).collect()));
+        tc.page_rows = 8;
+        // 100 rows at hot_frac 0.5 -> 50-row budget -> 6 whole pages.
+        let c = TieredCache::new(100, 4, &sys(), &tc);
+        assert_eq!(c.page_rows(), 8);
+        assert_eq!(c.capacity_rows(), 48);
+        assert_eq!(c.stats().capacity_pages, 6);
+        assert_eq!(c.stats().resident_pages, 6);
+        // Row 47 sits on resident page 5; row 48 on page 6 (cold).
+        assert!(c.is_hot(47));
+        assert!(!c.is_hot(48));
+    }
+
+    #[test]
+    fn eviction_knob_reaches_the_engine() {
+        // Under LRU every miss is admitted; under LFU a once-seen row
+        // cannot displace an equally-frequent resident (strict >).
+        let mut lru = cfg(0.2, true, None);
+        lru.eviction = EvictionPolicy::Lru;
+        let mut lfu = cfg(0.2, true, None);
+        lfu.eviction = EvictionPolicy::Lfu;
+        let mut a = TieredCache::new(10, 4, &sys(), &lru);
+        let mut b = TieredCache::new(10, 4, &sys(), &lfu);
+        for c in [&mut a, &mut b] {
+            c.record(&[1, 2]); // fill capacity 2
+            c.record(&[3]); // one-shot intruder
+        }
+        assert!(a.is_hot(3), "LRU admits every miss");
+        assert!(!b.is_hot(3), "LFU rejects a non-hotter intruder");
+    }
+
+    #[test]
+    fn no_promote_overrides_the_eviction_knob() {
+        let mut tc = cfg(0.2, false, Some(vec![0, 1]));
+        tc.eviction = EvictionPolicy::Lru;
+        let mut c = TieredCache::new(10, 4, &sys(), &tc);
+        for _ in 0..5 {
+            c.record(&[7, 8]);
+        }
+        assert!(c.is_hot(0) && c.is_hot(1), "static placement was disturbed");
+        assert_eq!(c.stats().promotions, 0);
+    }
+
+    #[test]
+    fn pins_block_eviction_until_released() {
+        let mut c = TieredCache::new(10, 4, &sys(), &cfg(0.2, true, Some(vec![0, 1])));
+        c.pin_rows(&[0, 1]);
+        for _ in 0..3 {
+            c.record(&[5]); // freq 3 > 0 would normally displace row 0
+        }
+        assert!(c.is_hot(0) && c.is_hot(1));
+        assert!(c.stats().pin_blocked > 0);
+        c.unpin_rows(&[0, 1]);
+        c.record(&[5]);
+        assert!(c.is_hot(5), "admission still blocked after unpin");
+        assert_eq!(c.stats().pins, c.stats().unpins);
     }
 
     #[test]

@@ -369,6 +369,79 @@ mod tests {
     }
 
     #[test]
+    fn adversarial_id_ranges_agree_across_paths_property() {
+        // Sparse-path stress: ids drawn from the *full* u32 range (far
+        // past the dense slot-table cutoff) against the dense path run
+        // on the equality-pattern-preserving compaction of the same
+        // stream (rank ids by first appearance).  The plan depends only
+        // on the equality pattern, so the two scatter maps must agree
+        // position for position and the unique streams must correspond
+        // rank for rank.
+        check(40, |g: &mut Gen| {
+            let n = g.usize_in(1, 200);
+            // A small pool forces heavy duplication even across a huge
+            // id range; a large pool approaches duplicate-free.
+            let pool_sz = g.usize_in(1, 48);
+            let pool: Vec<u32> = (0..pool_sz)
+                .map(|_| g.u64_in(0, u32::MAX as u64) as u32)
+                .collect();
+            let wild: Vec<u32> = (0..n).map(|_| pool[g.usize_in(0, pool_sz - 1)]).collect();
+            let wild_plan = GatherPlan::build(&wild);
+            wild_plan.validate(&wild).map_err(|e| e)?;
+
+            let mut rank: HashMap<u32, u32> = HashMap::new();
+            let dense: Vec<u32> = wild
+                .iter()
+                .map(|&r| {
+                    let next = rank.len() as u32;
+                    *rank.entry(r).or_insert(next)
+                })
+                .collect();
+            let dense_plan = GatherPlan::build(&dense);
+            dense_plan.validate(&dense).map_err(|e| e)?;
+            prop_assert(
+                wild_plan.scatter_map() == dense_plan.scatter_map(),
+                "scatter maps diverged between sparse and dense paths",
+            )?;
+            let ranked: Vec<u32> = wild_plan.unique_nodes().iter().map(|&r| rank[&r]).collect();
+            prop_assert(
+                ranked == dense_plan.unique_nodes(),
+                "unique order diverged between sparse and dense paths",
+            )
+        });
+    }
+
+    #[test]
+    fn all_duplicate_and_singleton_batches_collapse_correctly_property() {
+        check(40, |g: &mut Gen| {
+            // All-duplicate: n copies of one id anywhere in the u32
+            // range (huge ids exercise the sparse path, small ones the
+            // dense one) collapse to a single fetched row.
+            let n = g.usize_in(1, 300);
+            let id = g.u64_in(0, u32::MAX as u64) as u32;
+            let dup = vec![id; n];
+            let plan = GatherPlan::build(&dup);
+            plan.validate(&dup).map_err(|e| e)?;
+            prop_assert(plan.unique_nodes() == [id], "all-duplicate unique != [id]")?;
+            prop_assert(
+                plan.scatter_map().iter().all(|&s| s == 0),
+                "all-duplicate scatter not all-zero",
+            )?;
+            prop_assert(
+                (plan.dedup_ratio() - n as f64).abs() < 1e-9,
+                "all-duplicate ratio != n",
+            )?;
+
+            // Singleton batch: one slot, arbitrary id — the identity plan.
+            let solo = g.u64_in(0, u32::MAX as u64) as u32;
+            let plan = GatherPlan::build(&[solo]);
+            plan.validate(&[solo]).map_err(|e| e)?;
+            prop_assert(plan.unique_nodes() == [solo], "singleton unique != [id]")?;
+            prop_assert(plan.scatter_map() == [0], "singleton scatter != [0]")
+        });
+    }
+
+    #[test]
     fn empty_stream_is_empty_plan() {
         let plan = GatherPlan::build(&[]);
         assert_eq!(plan.unique_rows(), 0);

@@ -1,0 +1,630 @@
+//! Model-based property tests for the page cache's eviction policies
+//! (DESIGN.md §12, `featurestore::pagecache`):
+//!
+//! * **LRU** and **LFU** replayed against naive reference models (an
+//!   O(pages) argmin scan per eviction — no lazy heaps, no stale-entry
+//!   repair) over random traces: hit/miss/promotion/eviction counters
+//!   and the resident page set must match after every gather;
+//! * **CLOCK** replayed against a straightforward second-chance model
+//!   that additionally *proves* the second-chance contract on every
+//!   eviction: the victim's reference bit is clear, and any reference
+//!   it ever received was consumed by a later hand visit;
+//! * **monotonicity** — the hit count never decreases with cache size:
+//!   for every policy on cyclic sequential traces (where the behavior
+//!   is provable), for Static/LRU/LFU on random traces (nested static
+//!   prefixes, the LRU stack property, LFU inclusion from full nested
+//!   preseeds), and the full-capacity endpoint for everything;
+//! * **tie-breaking** — stamp/frequency ties evict the lowest page id,
+//!   pinned by explicit scenarios, and whole-trace replays are
+//!   deterministic for every policy.
+
+use ptdirect::config::EvictionPolicy;
+use ptdirect::featurestore::PageCache;
+use ptdirect::util::proptest::{check, prop_assert, Gen};
+use ptdirect::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Reference models (page-granular, no pins — the serving pins are covered
+// by tests/pagecache_properties.rs)
+// ---------------------------------------------------------------------------
+
+struct ModelState {
+    resident: Vec<bool>,
+    cap: usize,
+    hits: u64,
+    misses: u64,
+    promotions: u64,
+    evictions: u64,
+}
+
+impl ModelState {
+    fn new(num_pages: usize, cap: usize) -> ModelState {
+        ModelState {
+            resident: vec![false; num_pages],
+            cap,
+            hits: 0,
+            misses: 0,
+            promotions: 0,
+            evictions: 0,
+        }
+    }
+
+    fn resident_ids(&self) -> Vec<u32> {
+        (0..self.resident.len() as u32)
+            .filter(|&p| self.resident[p as usize])
+            .collect()
+    }
+
+    fn resident_count(&self) -> usize {
+        self.resident.iter().filter(|&&r| r).count()
+    }
+
+    /// Split one gather into hits/misses against the *current* residency
+    /// (no admissions mid-split, matching `PageCache::record`) and return
+    /// the missed pages, sorted and deduplicated.
+    fn split(&mut self, idx: &[u32], page_rows: usize) -> Vec<usize> {
+        let mut cold = Vec::new();
+        for &r in idx {
+            let p = r as usize / page_rows;
+            if self.resident[p] {
+                self.hits += 1;
+            } else {
+                self.misses += 1;
+                cold.push(p);
+            }
+        }
+        cold.sort_unstable();
+        cold.dedup();
+        cold
+    }
+}
+
+/// Naive LRU: per-page last-access stamps, victim = argmin (stamp, page).
+struct LruModel {
+    s: ModelState,
+    stamp: Vec<u64>,
+    tick: u64,
+}
+
+impl LruModel {
+    fn new(num_pages: usize, cap: usize, preseed: &[u32]) -> LruModel {
+        let mut m = LruModel {
+            s: ModelState::new(num_pages, cap),
+            stamp: vec![0; num_pages],
+            tick: 0,
+        };
+        for &p in preseed {
+            m.s.resident[p as usize] = true;
+        }
+        m
+    }
+
+    fn record(&mut self, idx: &[u32], page_rows: usize) {
+        self.tick += 1;
+        for &r in idx {
+            self.stamp[r as usize / page_rows] = self.tick;
+        }
+        let cold = self.s.split(idx, page_rows);
+        if self.s.cap == 0 {
+            return;
+        }
+        for p in cold {
+            if self.s.resident[p] {
+                continue;
+            }
+            if self.s.resident_count() < self.s.cap {
+                self.s.resident[p] = true;
+                self.s.promotions += 1;
+                continue;
+            }
+            let victim = (0..self.s.resident.len())
+                .filter(|&q| self.s.resident[q])
+                .min_by_key(|&q| (self.stamp[q], q))
+                .unwrap();
+            self.s.resident[victim] = false;
+            self.s.evictions += 1;
+            self.s.resident[p] = true;
+            self.s.promotions += 1;
+        }
+    }
+}
+
+/// Naive LFU: victim = argmin (freq, page); admit only on strictly
+/// greater candidate frequency.
+struct LfuModel {
+    s: ModelState,
+    freq: Vec<u64>,
+}
+
+impl LfuModel {
+    fn new(num_pages: usize, cap: usize, preseed: &[u32]) -> LfuModel {
+        let mut m = LfuModel {
+            s: ModelState::new(num_pages, cap),
+            freq: vec![0; num_pages],
+        };
+        for &p in preseed {
+            m.s.resident[p as usize] = true;
+        }
+        m
+    }
+
+    fn record(&mut self, idx: &[u32], page_rows: usize) {
+        for &r in idx {
+            self.freq[r as usize / page_rows] += 1;
+        }
+        let cold = self.s.split(idx, page_rows);
+        if self.s.cap == 0 {
+            return;
+        }
+        for p in cold {
+            if self.s.resident[p] {
+                continue;
+            }
+            if self.s.resident_count() < self.s.cap {
+                self.s.resident[p] = true;
+                self.s.promotions += 1;
+                continue;
+            }
+            let victim = (0..self.s.resident.len())
+                .filter(|&q| self.s.resident[q])
+                .min_by_key(|&q| (self.freq[q], q))
+                .unwrap();
+            if self.freq[p] > self.freq[victim] {
+                self.s.resident[victim] = false;
+                self.s.evictions += 1;
+                self.s.resident[p] = true;
+                self.s.promotions += 1;
+            }
+        }
+    }
+}
+
+/// Straightforward second-chance CLOCK over a circular frame buffer,
+/// instrumented to prove the contract on every eviction: the victim was
+/// not referenced since the hand's last clearing visit.
+struct ClockModel {
+    s: ModelState,
+    slots: Vec<u32>,
+    referenced: Vec<bool>,
+    hand: usize,
+    /// Global event counter; bumped on every reference and hand visit.
+    seq: u64,
+    /// Event of each page's last reference-bit set.
+    ref_seq: Vec<u64>,
+    /// Event of each page's last bit-consuming hand visit (or admission,
+    /// which starts the page unreferenced).
+    cleared_seq: Vec<u64>,
+}
+
+impl ClockModel {
+    fn new(num_pages: usize, cap: usize, preseed: &[u32]) -> ClockModel {
+        let mut m = ClockModel {
+            s: ModelState::new(num_pages, cap),
+            slots: Vec::new(),
+            referenced: vec![false; num_pages],
+            hand: 0,
+            seq: 0,
+            ref_seq: vec![0; num_pages],
+            cleared_seq: vec![0; num_pages],
+        };
+        for &p in preseed {
+            m.s.resident[p as usize] = true;
+            m.slots.push(p);
+        }
+        m
+    }
+
+    fn record(&mut self, idx: &[u32], page_rows: usize) -> Result<(), String> {
+        for &r in idx {
+            let p = r as usize / page_rows;
+            if self.s.resident[p] {
+                self.seq += 1;
+                self.referenced[p] = true;
+                self.ref_seq[p] = self.seq;
+            }
+        }
+        let cold = self.s.split(idx, page_rows);
+        if self.s.cap == 0 {
+            return Ok(());
+        }
+        for p in cold {
+            if self.s.resident[p] {
+                continue;
+            }
+            if self.s.resident_count() < self.s.cap {
+                self.s.resident[p] = true;
+                self.s.promotions += 1;
+                self.slots.push(p as u32);
+                self.referenced[p] = false;
+                self.seq += 1;
+                self.cleared_seq[p] = self.seq;
+                continue;
+            }
+            // Sweep: spend reference bits until an unreferenced frame.
+            loop {
+                let v = self.slots[self.hand] as usize;
+                self.seq += 1;
+                if self.referenced[v] {
+                    self.referenced[v] = false;
+                    self.cleared_seq[v] = self.seq;
+                    self.hand = (self.hand + 1) % self.slots.len();
+                    continue;
+                }
+                // The second-chance contract, proved at the victim:
+                if self.ref_seq[v] > self.cleared_seq[v] {
+                    return Err(format!(
+                        "clock evicted page {v} referenced at event {} after its \
+                         last clearing visit at event {}",
+                        self.ref_seq[v], self.cleared_seq[v]
+                    ));
+                }
+                self.slots[self.hand] = p as u32;
+                self.s.resident[v] = false;
+                self.s.evictions += 1;
+                self.s.resident[p] = true;
+                self.s.promotions += 1;
+                self.referenced[p] = false;
+                self.cleared_seq[p] = self.seq;
+                self.hand = (self.hand + 1) % self.slots.len();
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared generators
+// ---------------------------------------------------------------------------
+
+/// A built cache plus the page-level preseed the models should mirror.
+fn build_with_preseed(
+    g: &mut Gen,
+    rows: usize,
+    page_rows: usize,
+    policy: EvictionPolicy,
+    cap_rows: usize,
+) -> (PageCache, Vec<u32>) {
+    let ranking = if g.bool() {
+        let mut order: Vec<u32> = (0..rows as u32).collect();
+        Rng::new(g.seed ^ 0xC0FFEE).shuffle(&mut order);
+        Some(order)
+    } else {
+        None
+    };
+    let cache = PageCache::build(rows, 64, page_rows, policy, cap_rows, ranking.as_deref());
+    // Replay the preseed walk the cache performed, page-wise.
+    let mut preseed = Vec::new();
+    let mut seen = vec![false; rows.div_ceil(page_rows)];
+    if let Some(rk) = &ranking {
+        for &r in rk {
+            if preseed.len() >= cache.capacity_pages() {
+                break;
+            }
+            if (r as usize) < rows {
+                let p = r as usize / page_rows;
+                if !seen[p] {
+                    seen[p] = true;
+                    preseed.push(p as u32);
+                }
+            }
+        }
+    }
+    (cache, preseed)
+}
+
+fn random_trace(g: &mut Gen, rows: usize) -> Vec<Vec<u32>> {
+    let n_gathers = g.usize_in(1, 10);
+    (0..n_gathers)
+        .map(|_| {
+            let len = g.usize_in(1, 120);
+            g.vec_u32(len, 0, (rows - 1) as u32)
+        })
+        .collect()
+}
+
+fn assert_cache_matches_model(
+    cache: &PageCache,
+    m: &ModelState,
+    what: &str,
+) -> Result<(), String> {
+    let s = cache.stats();
+    prop_assert(
+        s.hits == m.hits && s.misses == m.misses,
+        format!(
+            "{what}: hit/miss diverged: cache {}/{} vs model {}/{}",
+            s.hits, s.misses, m.hits, m.misses
+        ),
+    )?;
+    prop_assert(
+        s.promotions == m.promotions && s.evictions == m.evictions,
+        format!(
+            "{what}: promote/evict diverged: cache {}/{} vs model {}/{}",
+            s.promotions, s.evictions, m.promotions, m.evictions
+        ),
+    )?;
+    prop_assert(
+        cache.resident_page_ids() == m.resident_ids(),
+        format!("{what}: resident page sets diverged"),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// 1. Model equivalence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lru_matches_the_naive_reference_model() {
+    check(30, |g: &mut Gen| {
+        let rows = g.usize_in(2, 250);
+        let page_rows = g.usize_in(1, 4);
+        let cap_rows = g.usize_in(0, rows);
+        let (mut cache, preseed) =
+            build_with_preseed(g, rows, page_rows, EvictionPolicy::Lru, cap_rows);
+        let mut model = LruModel::new(
+            rows.div_ceil(page_rows),
+            cache.capacity_pages(),
+            &preseed,
+        );
+        for (i, idx) in random_trace(g, rows).into_iter().enumerate() {
+            cache.record(&idx);
+            model.record(&idx, page_rows);
+            assert_cache_matches_model(&cache, &model.s, &format!("lru gather {i}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lfu_matches_the_naive_reference_model() {
+    check(30, |g: &mut Gen| {
+        let rows = g.usize_in(2, 250);
+        let page_rows = g.usize_in(1, 4);
+        let cap_rows = g.usize_in(0, rows);
+        let (mut cache, preseed) =
+            build_with_preseed(g, rows, page_rows, EvictionPolicy::Lfu, cap_rows);
+        let mut model = LfuModel::new(
+            rows.div_ceil(page_rows),
+            cache.capacity_pages(),
+            &preseed,
+        );
+        for (i, idx) in random_trace(g, rows).into_iter().enumerate() {
+            cache.record(&idx);
+            model.record(&idx, page_rows);
+            assert_cache_matches_model(&cache, &model.s, &format!("lfu gather {i}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn clock_matches_the_second_chance_model_and_honors_references() {
+    check(30, |g: &mut Gen| {
+        let rows = g.usize_in(2, 250);
+        let page_rows = g.usize_in(1, 4);
+        let cap_rows = g.usize_in(0, rows);
+        let (mut cache, preseed) =
+            build_with_preseed(g, rows, page_rows, EvictionPolicy::Clock, cap_rows);
+        let mut model = ClockModel::new(
+            rows.div_ceil(page_rows),
+            cache.capacity_pages(),
+            &preseed,
+        );
+        for (i, idx) in random_trace(g, rows).into_iter().enumerate() {
+            cache.record(&idx);
+            // The model itself fails if an eviction ever breaks the
+            // second-chance contract.
+            model.record(&idx, page_rows)?;
+            assert_cache_matches_model(&cache, &model.s, &format!("clock gather {i}"))?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 2. Hit-count monotonicity in cache size
+// ---------------------------------------------------------------------------
+
+/// Hits of one full replay of `trace` through a fresh cache of
+/// `cap_rows` budget, preseeded from the identity ranking.
+fn replay_hits(
+    policy: EvictionPolicy,
+    rows: usize,
+    cap_rows: usize,
+    preseed: bool,
+    trace: &[Vec<u32>],
+) -> u64 {
+    let ranking: Vec<u32> = (0..rows as u32).collect();
+    let mut cache = PageCache::build(
+        rows,
+        64,
+        1,
+        policy,
+        cap_rows,
+        if preseed { Some(&ranking) } else { None },
+    );
+    for idx in trace {
+        cache.record(idx);
+    }
+    cache.stats().hits
+}
+
+#[test]
+fn every_policy_is_monotone_on_cyclic_sequential_traces() {
+    // Round-robin over D distinct rows, one row per gather, preseeded
+    // full from the identity ranking — the canonical trace where all
+    // four policies' behavior is provable (LRU/CLOCK thrash past the
+    // capacity, LFU and static freeze the prefix), so the hit count
+    // must be non-decreasing in the capacity for each of them.
+    check(15, |g: &mut Gen| {
+        let d = g.usize_in(2, 40);
+        let cycles = g.usize_in(2, 5);
+        let trace: Vec<Vec<u32>> = (0..cycles)
+            .flat_map(|_| (0..d as u32).map(|r| vec![r]))
+            .collect();
+        for policy in EvictionPolicy::all() {
+            let mut prev = 0u64;
+            for cap in 0..=d {
+                let hits = replay_hits(policy, d, cap, true, &trace);
+                prop_assert(
+                    hits >= prev,
+                    format!("{policy:?}: hits dropped {prev} -> {hits} at capacity {cap}/{d}"),
+                )?;
+                prev = hits;
+            }
+            // Full capacity: everything preseeded, every access hits.
+            prop_assert(
+                prev == (cycles * d) as u64,
+                format!("{policy:?}: full cache missed on a cyclic trace"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn static_and_lru_are_monotone_on_random_traces() {
+    // Static: nested ranked prefixes — a bigger cache's resident set
+    // contains the smaller one's, forever.  LRU: the classic stack
+    // property (single-row gathers, cold start).  Both make hit counts
+    // monotone on *any* trace.
+    check(20, |g: &mut Gen| {
+        let rows = g.usize_in(2, 120);
+        let n = g.usize_in(1, 400);
+        let trace: Vec<Vec<u32>> = g
+            .vec_u32(n, 0, (rows - 1) as u32)
+            .into_iter()
+            .map(|r| vec![r])
+            .collect();
+        let caps: Vec<usize> = {
+            let mut c: Vec<usize> = (0..4).map(|_| g.usize_in(0, rows)).collect();
+            c.sort_unstable();
+            c
+        };
+        for (policy, preseed) in [(EvictionPolicy::Static, true), (EvictionPolicy::Lru, false)] {
+            let mut prev = 0u64;
+            for &cap in &caps {
+                let hits = replay_hits(policy, rows, cap, preseed, &trace);
+                prop_assert(
+                    hits >= prev,
+                    format!("{policy:?}: hits dropped {prev} -> {hits} at capacity {cap}"),
+                )?;
+                prev = hits;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lfu_is_monotone_on_random_traces_from_full_preseeds() {
+    // LFU inclusion: two caches preseeded full from nested prefixes of
+    // the same ranking stay nested under strict-greater admission (the
+    // smaller cache's minimum frequency is at least the bigger one's),
+    // so hits are monotone — batch gathers included.
+    check(20, |g: &mut Gen| {
+        let rows = g.usize_in(2, 120);
+        let trace = random_trace(g, rows);
+        let caps: Vec<usize> = {
+            let mut c: Vec<usize> = (0..4).map(|_| g.usize_in(0, rows)).collect();
+            c.sort_unstable();
+            c
+        };
+        let mut prev = 0u64;
+        for &cap in &caps {
+            let hits = replay_hits(EvictionPolicy::Lfu, rows, cap, true, &trace);
+            prop_assert(
+                hits >= prev,
+                format!("lfu: hits dropped {prev} -> {hits} at capacity {cap}"),
+            )?;
+            prev = hits;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_capacity_is_the_hit_count_ceiling_for_every_policy() {
+    // With the whole table preseeded resident nothing is ever cold, so
+    // the full-capacity cache's hit count bounds every smaller cache's
+    // on the same trace — the endpoint every policy must respect
+    // (including CLOCK, whose interior points admit Belady anomalies on
+    // adversarial traces and are deliberately only pinned on the cyclic
+    // trace above).
+    check(20, |g: &mut Gen| {
+        let rows = g.usize_in(2, 120);
+        let trace = random_trace(g, rows);
+        let total: u64 = trace.iter().map(|t| t.len() as u64).sum();
+        for policy in EvictionPolicy::all() {
+            let full = replay_hits(policy, rows, rows, true, &trace);
+            prop_assert(
+                full == total,
+                format!("{policy:?}: full cache missed ({full} of {total})"),
+            )?;
+            let cap = g.usize_in(0, rows);
+            let partial = replay_hits(policy, rows, cap, true, &trace);
+            prop_assert(
+                partial <= full,
+                format!("{policy:?}: partial cache out-hit the full cache"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 3. Deterministic tie-breaking and replay determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lfu_breaks_frequency_ties_toward_the_lowest_page_id() {
+    // Pages 0..2 preseeded at frequency zero; the first admission must
+    // displace page 0, then page 1 — lowest id first among equals.
+    let ranking: Vec<u32> = (0..10).collect();
+    let mut cache = PageCache::build(10, 64, 1, EvictionPolicy::Lfu, 3, Some(&ranking));
+    cache.record(&[9]);
+    assert!(!cache.is_resident(0), "freq tie must evict page 0 first");
+    assert!(cache.is_resident(1) && cache.is_resident(2) && cache.is_resident(9));
+    cache.record(&[8]);
+    assert!(!cache.is_resident(1), "next freq tie must evict page 1");
+    assert!(cache.is_resident(2) && cache.is_resident(8) && cache.is_resident(9));
+}
+
+#[test]
+fn lru_breaks_stamp_ties_toward_the_lowest_page_id() {
+    // Preseeded pages all carry stamp 0; evictions walk them in id
+    // order until the stamps differentiate.
+    let ranking: Vec<u32> = (0..10).collect();
+    let mut cache = PageCache::build(10, 64, 1, EvictionPolicy::Lru, 3, Some(&ranking));
+    cache.record(&[5]);
+    assert!(!cache.is_resident(0), "stamp tie must evict page 0 first");
+    cache.record(&[6]);
+    assert!(!cache.is_resident(1), "next stamp tie must evict page 1");
+    assert!(cache.is_resident(2) && cache.is_resident(5) && cache.is_resident(6));
+}
+
+#[test]
+fn identical_replays_produce_identical_stats_for_every_policy() {
+    check(15, |g: &mut Gen| {
+        let rows = g.usize_in(2, 200);
+        let page_rows = g.usize_in(1, 8);
+        let cap = g.usize_in(0, rows);
+        let trace = random_trace(g, rows);
+        let ranking: Vec<u32> = (0..rows as u32).collect();
+        for policy in EvictionPolicy::all() {
+            let mut a = PageCache::build(rows, 64, page_rows, policy, cap, Some(&ranking));
+            let mut b = PageCache::build(rows, 64, page_rows, policy, cap, Some(&ranking));
+            for idx in &trace {
+                let cold_a = a.record(idx);
+                let cold_b = b.record(idx);
+                prop_assert(cold_a == cold_b, format!("{policy:?}: cold streams diverged"))?;
+            }
+            prop_assert(a.stats() == b.stats(), format!("{policy:?}: stats diverged"))?;
+            prop_assert(
+                a.resident_page_ids() == b.resident_page_ids(),
+                format!("{policy:?}: resident sets diverged"),
+            )?;
+        }
+        Ok(())
+    });
+}

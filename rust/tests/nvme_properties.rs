@@ -34,6 +34,7 @@ fn random_nvme_cfg(g: &mut Gen, rows: usize) -> NvmeStoreConfig {
             reserve_bytes: 0,
             promote: g.bool(),
             ranking,
+            ..TierConfig::default()
         },
     }
 }
@@ -163,6 +164,7 @@ fn host_frac_zero_with_cold_gpu_tier_serves_everything_from_storage() {
                 reserve_bytes: 0,
                 promote: false,
                 ranking: None,
+                ..TierConfig::default()
             },
         };
         let store = FeatureStore::build_nvme(rows, dim, 8, &sys, g.seed, cfg)

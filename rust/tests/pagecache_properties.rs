@@ -1,0 +1,572 @@
+//! Lock-down layer for the shared paged feature cache (DESIGN.md §12):
+//!
+//! * **differential** — a frozen, verbatim copy of the pre-refactor
+//!   row-granular `TieredCache` (static preseed + LFU min-heap
+//!   promotion) replayed against the paged cache at `--page-rows 1`
+//!   over random traces, capacities, and rankings: cold streams and
+//!   every counter must match bit-exactly, for both the static and the
+//!   LFU spelling;
+//! * **anchor spellings** — at the trainer level, the explicit
+//!   `--eviction static --page-rows 1` knobs reproduce the legacy
+//!   `--no-tier-promote` reports bit-exactly in all eight access modes,
+//!   and the knobs are inert in the modes that have no tier;
+//! * **refcounts** — pinned pages are never evicted, refcounts return
+//!   to zero after every gather and after every balanced pin/unpin;
+//! * **residency conservation** — resident pages never exceed the page
+//!   budget, pages partition the row space, and the resident-row gauge
+//!   equals the sum of resident page spans.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use ptdirect::config::{AccessMode, Backend, EvictionPolicy, RunConfig, ShardPolicy, SystemProfile};
+use ptdirect::coordinator::Trainer;
+use ptdirect::featurestore::{FeatureStore, PageCache, TierConfig, TieredCache};
+use ptdirect::util::proptest::{check, prop_assert, Gen};
+use ptdirect::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Frozen pre-refactor reference: the row-granular TieredCache exactly as it
+// shipped before the paged-cache refactor.  Do not "improve" this code — its
+// value is that it is the old arithmetic, verbatim.
+// ---------------------------------------------------------------------------
+
+struct ReferenceRowCache {
+    hot: Vec<bool>,
+    freq: Vec<u64>,
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
+    hot_rows: usize,
+    capacity_rows: usize,
+    promote: bool,
+    hits: u64,
+    misses: u64,
+    promotions: u64,
+    evictions: u64,
+}
+
+impl ReferenceRowCache {
+    fn new(
+        rows: usize,
+        row_bytes: u64,
+        sys: &SystemProfile,
+        hot_frac: f64,
+        reserve_bytes: u64,
+        promote: bool,
+        ranking: Option<&[u32]>,
+    ) -> ReferenceRowCache {
+        let budget_bytes = sys.gpu_mem_bytes.saturating_sub(reserve_bytes);
+        let budget_rows = if row_bytes == 0 {
+            0
+        } else {
+            (budget_bytes / row_bytes).min(rows as u64) as usize
+        };
+        let target = (hot_frac.clamp(0.0, 1.0) * rows as f64).floor() as usize;
+        let capacity_rows = target.min(budget_rows);
+        let mut cache = ReferenceRowCache {
+            hot: vec![false; rows],
+            freq: vec![0; rows],
+            heap: BinaryHeap::new(),
+            hot_rows: 0,
+            capacity_rows,
+            promote,
+            hits: 0,
+            misses: 0,
+            promotions: 0,
+            evictions: 0,
+        };
+        // Pre-refactor preseed: the ranking's first `capacity_rows`
+        // distinct in-range ids (`placement::ranked_prefix`), inserted
+        // without counting as promotions; no ranking = cold start.
+        if let Some(order) = ranking {
+            for &r in order {
+                if cache.hot_rows >= cache.capacity_rows {
+                    break;
+                }
+                if (r as usize) < rows && !cache.hot[r as usize] {
+                    cache.insert_hot(r);
+                }
+            }
+        }
+        cache
+    }
+
+    fn record(&mut self, idx: &[u32]) -> Vec<u32> {
+        let mut cold = Vec::new();
+        for &r in idx {
+            let ri = r as usize;
+            self.freq[ri] += 1;
+            if self.hot[ri] {
+                self.hits += 1;
+            } else {
+                self.misses += 1;
+                cold.push(r);
+            }
+        }
+        if self.promote && self.capacity_rows > 0 && !cold.is_empty() {
+            let mut candidates = cold.clone();
+            candidates.sort_unstable();
+            candidates.dedup();
+            for r in candidates {
+                self.maybe_promote(r);
+            }
+        }
+        cold
+    }
+
+    fn maybe_promote(&mut self, r: u32) {
+        if self.hot[r as usize] {
+            return;
+        }
+        if self.hot_rows < self.capacity_rows {
+            self.insert_hot(r);
+            self.promotions += 1;
+            return;
+        }
+        match self.refresh_min() {
+            Some((min_freq, _)) if self.freq[r as usize] > min_freq => {
+                self.evict_min();
+                self.insert_hot(r);
+                self.promotions += 1;
+            }
+            _ => {}
+        }
+    }
+
+    fn insert_hot(&mut self, r: u32) {
+        self.hot[r as usize] = true;
+        self.hot_rows += 1;
+        self.heap.push(Reverse((self.freq[r as usize], r)));
+    }
+
+    fn refresh_min(&mut self) -> Option<(u64, u32)> {
+        while let Some(&Reverse((f, row))) = self.heap.peek() {
+            if !self.hot[row as usize] {
+                self.heap.pop();
+            } else if self.freq[row as usize] != f {
+                self.heap.pop();
+                self.heap.push(Reverse((self.freq[row as usize], row)));
+            } else {
+                return Some((f, row));
+            }
+        }
+        None
+    }
+
+    fn evict_min(&mut self) {
+        if self.refresh_min().is_some() {
+            let Reverse((_, row)) = self.heap.pop().unwrap();
+            self.hot[row as usize] = false;
+            self.hot_rows -= 1;
+            self.evictions += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared generators
+// ---------------------------------------------------------------------------
+
+fn random_ranking(g: &mut Gen, rows: usize) -> Option<Vec<u32>> {
+    if g.bool() {
+        let mut order: Vec<u32> = (0..rows as u32).collect();
+        Rng::new(g.seed ^ 0xC0FFEE).shuffle(&mut order);
+        Some(order)
+    } else {
+        None
+    }
+}
+
+fn random_gathers(g: &mut Gen, rows: usize) -> Vec<Vec<u32>> {
+    let n_gathers = g.usize_in(1, 8);
+    (0..n_gathers)
+        .map(|_| {
+            let len = g.usize_in(1, 200);
+            g.vec_u32(len, 0, (rows - 1) as u32)
+        })
+        .collect()
+}
+
+/// Hermetic trainer config mirroring `e2e_train.rs` / `dedup_properties.rs`.
+fn trainer_cfg(mode: AccessMode) -> RunConfig {
+    RunConfig {
+        dataset: "product".into(),
+        arch: "sage".into(),
+        mode,
+        steps_per_epoch: 4,
+        scale: 2048,
+        feature_budget: 8 << 20,
+        seed: 42,
+        backend: Backend::Native,
+        artifacts_dir: "this-directory-does-not-exist".into(),
+        num_gpus: if mode == AccessMode::Sharded { 4 } else { 1 },
+        shard_policy: ShardPolicy::Degree,
+        ..RunConfig::default()
+    }
+}
+
+fn assert_reports_bit_equal(
+    a: &ptdirect::coordinator::EpochReport,
+    b: &ptdirect::coordinator::EpochReport,
+    what: &str,
+) {
+    assert_eq!(a.losses, b.losses, "{what}: losses diverged");
+    assert_eq!(a.accs, b.accs, "{what}: accuracies diverged");
+    assert_eq!(a.bytes_on_link, b.bytes_on_link, "{what}: link bytes diverged");
+    assert_eq!(a.requests, b.requests, "{what}: request counts diverged");
+    assert_eq!(
+        a.breakdown_sim.transfer_s, b.breakdown_sim.transfer_s,
+        "{what}: simulated transfer time diverged"
+    );
+    assert_eq!(a.tier, b.tier, "{what}: tier stats diverged");
+    assert_eq!(
+        a.shard.as_ref().map(|s| s.per_gpu.clone()),
+        b.shard.as_ref().map(|s| s.per_gpu.clone()),
+        "{what}: shard stats diverged"
+    );
+    assert_eq!(a.nvme, b.nvme, "{what}: nvme stats diverged");
+}
+
+// ---------------------------------------------------------------------------
+// 1. Differential: paged cache @ page_rows = 1 vs the frozen reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn page_rows_one_replays_the_frozen_row_cache_bit_exactly() {
+    // Both the LFU (promote on) and static (promote off) spellings, over
+    // random tables, budgets, rankings, and traces: the paged cache at
+    // row granularity *is* the old cache — same cold streams, same
+    // counters, same hot set, gather after gather.
+    check(25, |g: &mut Gen| {
+        let rows = g.usize_in(2, 300);
+        let dim = g.usize_in(1, 32);
+        let row_bytes = dim as u64 * 4;
+        let mut sys = SystemProfile::system1();
+        // Shrink the GPU so the byte budget actually binds sometimes.
+        sys.gpu_mem_bytes = g.u64_in(0, 80) * row_bytes;
+        let hot_frac = g.f64_in(0.0, 1.0);
+        let reserve = g.u64_in(0, 8) * row_bytes;
+        let promote = g.bool();
+        let ranking = random_ranking(g, rows);
+
+        let mut reference = ReferenceRowCache::new(
+            rows,
+            row_bytes,
+            &sys,
+            hot_frac,
+            reserve,
+            promote,
+            ranking.as_deref(),
+        );
+        let mut paged = TieredCache::new(
+            rows,
+            row_bytes,
+            &sys,
+            &TierConfig {
+                hot_frac,
+                reserve_bytes: reserve,
+                promote,
+                ranking: ranking.clone(),
+                page_rows: 1,
+                eviction: EvictionPolicy::Lfu,
+            },
+        );
+
+        prop_assert(
+            paged.capacity_rows() == reference.capacity_rows,
+            format!(
+                "capacity diverged: paged {} vs reference {}",
+                paged.capacity_rows(),
+                reference.capacity_rows
+            ),
+        )?;
+        for (i, idx) in random_gathers(g, rows).into_iter().enumerate() {
+            let cold_ref = reference.record(&idx);
+            let cold_new = paged.record(&idx);
+            prop_assert(
+                cold_new == cold_ref,
+                format!("gather {i}: cold stream diverged (promote={promote})"),
+            )?;
+            let s = paged.stats();
+            prop_assert(
+                s.hits == reference.hits
+                    && s.misses == reference.misses
+                    && s.promotions == reference.promotions
+                    && s.evictions == reference.evictions,
+                format!(
+                    "gather {i}: counters diverged: paged {}/{}/{}/{} vs \
+                     reference {}/{}/{}/{}",
+                    s.hits,
+                    s.misses,
+                    s.promotions,
+                    s.evictions,
+                    reference.hits,
+                    reference.misses,
+                    reference.promotions,
+                    reference.evictions
+                ),
+            )?;
+            prop_assert(
+                paged.hot_rows() == reference.hot_rows,
+                format!("gather {i}: hot_rows diverged"),
+            )?;
+            for r in 0..rows as u32 {
+                prop_assert(
+                    paged.is_hot(r) == reference.hot[r as usize],
+                    format!("gather {i}: hot set diverged at row {r}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 2. Trainer-level anchor: explicit static/page-1 knobs == legacy reports
+//    in all eight access modes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn static_page1_reproduces_legacy_reports_in_all_eight_modes() {
+    for mode in AccessMode::all() {
+        // Legacy spelling of the static walk: promotion off, knobs at
+        // their defaults (exactly the pre-refactor no-promote path).
+        let mut legacy = trainer_cfg(mode);
+        legacy.tier_promote = false;
+        // New spelling: the ISSUE's pinned anchor flags, stated
+        // explicitly.
+        let mut anchor = trainer_cfg(mode);
+        anchor.tier_promote = false;
+        anchor.eviction = EvictionPolicy::Static;
+        anchor.page_rows = 1;
+
+        let r_legacy = Trainer::new(legacy).unwrap().run_epoch().unwrap();
+        let r_anchor = Trainer::new(anchor).unwrap().run_epoch().unwrap();
+        assert_reports_bit_equal(&r_legacy, &r_anchor, &format!("{mode:?} static anchor"));
+
+        // With the policy pinned to Static, the promote flag itself is
+        // inert — promotion-on-but-never-admitting is the same walk.
+        let mut static_promote = trainer_cfg(mode);
+        static_promote.eviction = EvictionPolicy::Static;
+        static_promote.page_rows = 1;
+        let r_sp = Trainer::new(static_promote).unwrap().run_epoch().unwrap();
+        assert_reports_bit_equal(&r_legacy, &r_sp, &format!("{mode:?} static+promote"));
+    }
+}
+
+#[test]
+fn page_cache_knobs_are_inert_outside_the_tier_modes() {
+    // Modes without a hot tier must not read the knobs at all: cranking
+    // them produces byte-identical reports.
+    for mode in [
+        AccessMode::CpuGather,
+        AccessMode::UnifiedNaive,
+        AccessMode::UnifiedAligned,
+        AccessMode::Uvm,
+        AccessMode::GpuResident,
+    ] {
+        let base = trainer_cfg(mode);
+        let mut cranked = trainer_cfg(mode);
+        cranked.page_rows = 64;
+        cranked.eviction = EvictionPolicy::Clock;
+        let r_base = Trainer::new(base).unwrap().run_epoch().unwrap();
+        let r_cranked = Trainer::new(cranked).unwrap().run_epoch().unwrap();
+        assert_reports_bit_equal(&r_base, &r_cranked, &format!("{mode:?} knob inertness"));
+    }
+}
+
+#[test]
+fn losses_are_bitwise_invariant_across_policies_and_page_sizes() {
+    // The repo's single-source-of-truth invariant extended to the new
+    // knobs: placement policy and page granularity may move cost, never
+    // numerics.  Reference: the untouched default config per mode.
+    for mode in [AccessMode::Tiered, AccessMode::Sharded, AccessMode::Nvme] {
+        let reference = Trainer::new(trainer_cfg(mode)).unwrap().run_epoch().unwrap();
+        for policy in EvictionPolicy::all() {
+            for page_rows in [1usize, 8] {
+                let mut c = trainer_cfg(mode);
+                c.eviction = policy;
+                c.page_rows = page_rows;
+                let r = Trainer::new(c).unwrap().run_epoch().unwrap();
+                assert_eq!(
+                    r.losses, reference.losses,
+                    "{mode:?} {policy:?} page_rows={page_rows}: losses diverged"
+                );
+                assert_eq!(
+                    r.accs, reference.accs,
+                    "{mode:?} {policy:?} page_rows={page_rows}: accuracies diverged"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Refcount invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn refcounts_return_to_zero_after_every_gather() {
+    check(25, |g: &mut Gen| {
+        let rows = g.usize_in(2, 300);
+        let page_rows = g.usize_in(1, 16);
+        let policy = *g.choose(&EvictionPolicy::all());
+        let cap = g.usize_in(0, rows);
+        let ranking: Vec<u32> = (0..rows as u32).collect();
+        let mut cache = PageCache::build(rows, 64, page_rows, policy, cap, Some(&ranking));
+        for idx in random_gathers(g, rows) {
+            cache.record(&idx);
+            prop_assert(
+                cache.pinned_pages() == 0,
+                format!("{policy:?}: pages left pinned after record"),
+            )?;
+            for p in 0..cache.num_pages() as u32 {
+                prop_assert(
+                    cache.refcount_of(p) == 0,
+                    format!("{policy:?}: page {p} refcount nonzero after record"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pinned_pages_survive_arbitrary_traffic_and_unpin_balances() {
+    check(25, |g: &mut Gen| {
+        let rows = g.usize_in(4, 300);
+        let page_rows = g.usize_in(1, 8);
+        let policy = *g.choose(&[EvictionPolicy::Lfu, EvictionPolicy::Lru, EvictionPolicy::Clock]);
+        let cap = g.usize_in(1, rows);
+        let ranking: Vec<u32> = (0..rows as u32).collect();
+        let mut cache = PageCache::build(rows, 64, page_rows, policy, cap, Some(&ranking));
+
+        // Pin a random subset of whatever is resident.
+        let resident = cache.resident_page_ids();
+        let pin_pages: Vec<u32> = resident
+            .iter()
+            .copied()
+            .filter(|_| g.bool())
+            .collect();
+        let pin_rows: Vec<u32> = pin_pages
+            .iter()
+            .map(|&p| p * page_rows as u32) // first row of each pinned page
+            .collect();
+        cache.pin_rows(&pin_rows);
+
+        for idx in random_gathers(g, rows) {
+            cache.record(&idx);
+            for &p in &pin_pages {
+                prop_assert(
+                    cache.is_resident_page(p),
+                    format!("{policy:?}: pinned page {p} was evicted"),
+                )?;
+                prop_assert(
+                    cache.refcount_of(p) > 0,
+                    format!("{policy:?}: pinned page {p} lost its refcount"),
+                )?;
+            }
+        }
+
+        cache.unpin_rows(&pin_rows);
+        prop_assert(cache.pinned_pages() == 0, "unpin did not balance the pin")?;
+        for p in 0..cache.num_pages() as u32 {
+            prop_assert(
+                cache.refcount_of(p) == 0,
+                format!("page {p} refcount nonzero after balanced unpin"),
+            )?;
+        }
+        let s = cache.stats();
+        prop_assert(s.pins == s.unpins, "pin/unpin counters unbalanced")
+    });
+}
+
+#[test]
+fn store_level_pins_balance_and_never_change_gathered_values() {
+    // FeatureStore-level: pin/unpin around gathers is invisible to the
+    // data (placement metadata only) and the tier counters balance.
+    let sys = SystemProfile::system1();
+    check(10, |g: &mut Gen| {
+        let rows = g.usize_in(4, 200);
+        let dim = g.usize_in(1, 24);
+        let cfg = TierConfig {
+            hot_frac: g.f64_in(0.1, 1.0),
+            reserve_bytes: 0,
+            promote: g.bool(),
+            ranking: None,
+            page_rows: g.usize_in(1, 8),
+            eviction: *g.choose(&EvictionPolicy::all()),
+        };
+        let plain = FeatureStore::build_tiered(rows, dim, 8, &sys, 7, cfg.clone())
+            .map_err(|e| e.to_string())?;
+        let pinned = FeatureStore::build_tiered(rows, dim, 8, &sys, 7, cfg)
+            .map_err(|e| e.to_string())?;
+        for idx in random_gathers(g, rows) {
+            let (want, _) = plain.gather(&idx).map_err(|e| e.to_string())?;
+            let (got, _) = pinned.gather(&idx).map_err(|e| e.to_string())?;
+            pinned.pin_rows(&idx);
+            pinned.unpin_rows(&idx);
+            prop_assert(got == want, "pinning changed gathered values")?;
+        }
+        let s = pinned.tier_stats().expect("tiered store has stats");
+        prop_assert(s.pins == s.unpins, "store-level pin/unpin counters unbalanced")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 4. Residency conservation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn residency_never_exceeds_the_budget_and_pages_partition_the_rows() {
+    check(25, |g: &mut Gen| {
+        let rows = g.usize_in(1, 400);
+        let page_rows = g.usize_in(1, 32);
+        let policy = *g.choose(&EvictionPolicy::all());
+        let cap = g.usize_in(0, rows + page_rows);
+        let ranking = random_ranking(g, rows);
+        let mut cache =
+            PageCache::build(rows, 64, page_rows, policy, cap, ranking.as_deref());
+
+        // Pages partition the row space: every row lands in exactly one
+        // page, and the page spans tile [0, rows) without overlap.
+        let num_pages = cache.num_pages();
+        prop_assert(
+            num_pages == rows.div_ceil(page_rows),
+            "page count is not ceil(rows / page_rows)",
+        )?;
+        let span_sum: usize = (0..num_pages).map(|p| cache.page_span(p)).sum();
+        prop_assert(span_sum == rows, "page spans do not tile the table")?;
+        for r in 0..rows as u32 {
+            prop_assert(
+                cache.page_of(r) == r / page_rows as u32,
+                format!("row {r} maps to the wrong page"),
+            )?;
+        }
+
+        for idx in random_gathers(g, rows) {
+            cache.record(&idx);
+            prop_assert(
+                cache.resident_pages() <= cache.capacity_pages(),
+                format!(
+                    "{policy:?}: {} resident pages exceed budget {}",
+                    cache.resident_pages(),
+                    cache.capacity_pages()
+                ),
+            )?;
+            prop_assert(
+                cache.resident_rows() <= cache.capacity_pages() * cache.page_rows(),
+                format!("{policy:?}: resident rows exceed the row budget"),
+            )?;
+            let by_span: usize = cache
+                .resident_page_ids()
+                .iter()
+                .map(|&p| cache.page_span(p as usize))
+                .sum();
+            prop_assert(
+                by_span == cache.resident_rows(),
+                format!("{policy:?}: resident-row gauge diverges from page spans"),
+            )?;
+        }
+        Ok(())
+    });
+}

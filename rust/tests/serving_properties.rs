@@ -13,7 +13,11 @@
 //! * **load** — mean end-to-end latency is monotone non-decreasing in the
 //!   open-loop arrival rate (Lindley: compressing arrivals can only grow
 //!   waiting), and `admitted + rejected == offered` always balances;
-//! * **coverage** — `serve` completes in every access mode.
+//! * **coverage** — `serve` completes in every access mode;
+//! * **shared residency** — concurrent closed-loop clients stream over
+//!   one paged cache (DESIGN.md §12): blocks stay bitwise identical to a
+//!   solo run and the combined hit rate never drops under static
+//!   placement.
 
 use ptdirect::config::{AccessMode, Backend, RunConfig, ShardPolicy};
 use ptdirect::coordinator::{InferenceRunner, ServingEngine};
@@ -176,6 +180,65 @@ fn serve_reports_are_sane_in_all_modes() {
         );
         assert!(r.busy.total() > 0.0, "{mode:?}: no resource was ever busy");
     }
+}
+
+#[test]
+fn concurrent_streams_share_one_cache_without_changing_results() {
+    // Two closed-loop clients interleave their requests over the *same*
+    // paged cache (one `FeatureStore`, hence one `PageCache`).  Under
+    // static placement the residency set never moves, so sharing must be
+    // observationally free:
+    //  * every request's scattered block is bitwise identical to the
+    //    solo run's (values come from one source-of-truth table);
+    //  * the combined stream's hit rate is no worse than either solo
+    //    client's — with coalescing off and a frozen hot set it is
+    //    exactly equal, since hits are a per-row property of placement.
+    let base = || {
+        let mut c = cfg(AccessMode::Tiered);
+        c.arrival_rps = 0.0; // closed loop
+        c.coalesce = false; // identical per-request gathers in both runs
+        c.tier_promote = false; // static placement: residency never moves
+        c
+    };
+
+    let mut solo_cfg = base();
+    solo_cfg.clients = 1;
+    let mut solo = ServingEngine::new(solo_cfg).unwrap();
+    let (r_solo, blocks_solo) = solo.run_with_blocks().unwrap();
+
+    let mut shared_cfg = base();
+    shared_cfg.clients = 2;
+    let mut shared = ServingEngine::new(shared_cfg).unwrap();
+    let (r_shared, blocks_shared) = shared.run_with_blocks().unwrap();
+
+    assert_eq!(r_solo.completed, REQUESTS);
+    assert_eq!(r_shared.completed, REQUESTS);
+    assert_eq!(blocks_solo.len(), blocks_shared.len());
+    for (r, (a, b)) in blocks_solo.iter().zip(&blocks_shared).enumerate() {
+        assert!(!a.is_empty(), "request {r} served no block");
+        assert_eq!(a, b, "request {r}: sharing the cache changed the feature block");
+    }
+
+    let t_solo = r_solo.tier.expect("tiered serving must report tier stats");
+    let t_shared = r_shared.tier.expect("tiered serving must report tier stats");
+    assert_eq!(
+        t_solo.hits + t_solo.misses,
+        t_shared.hits + t_shared.misses,
+        "both runs must look up the same number of rows"
+    );
+    assert!(
+        t_shared.hit_rate() >= t_solo.hit_rate() - 1e-12,
+        "sharing the cache hurt the hit rate: {} < {}",
+        t_shared.hit_rate(),
+        t_solo.hit_rate()
+    );
+    assert_eq!(
+        (t_shared.hits, t_shared.misses, t_shared.evictions),
+        (t_solo.hits, t_solo.misses, t_solo.evictions),
+        "static placement makes the shared and solo streams hit identically"
+    );
+    assert_eq!(t_shared.pins, t_shared.unpins, "in-flight pins must all release");
+    assert_eq!(t_shared.pin_blocked, 0, "static placement never blocks on pins");
 }
 
 #[test]

@@ -38,6 +38,7 @@ fn random_shard_cfg(g: &mut Gen, rows: usize) -> ShardConfig {
             reserve_bytes: 0,
             promote: g.bool(),
             ranking,
+            ..TierConfig::default()
         },
     }
 }
@@ -188,6 +189,7 @@ fn one_gpu_reproduces_the_tiered_cost_bit_exactly() {
             reserve_bytes: 0,
             promote,
             ranking: Some(ranking.clone()),
+            ..TierConfig::default()
         };
         let tiered = FeatureStore::build_tiered(rows, dim, 8, &sys, seed, tier_cfg.clone())
             .map_err(|e| e.to_string())?;

@@ -28,6 +28,7 @@ fn random_tier_cfg(g: &mut Gen, rows: usize) -> TierConfig {
         reserve_bytes: 0,
         promote: g.bool(),
         ranking,
+        ..TierConfig::default()
     }
 }
 
@@ -152,6 +153,7 @@ fn hot_frac_endpoints_reproduce_the_reference_modes() {
                 reserve_bytes: 0,
                 promote: g.bool(),
                 ranking: Some((0..rows as u32).collect()),
+                ..TierConfig::default()
             },
         )
         .map_err(|e| e.to_string())?;
@@ -174,6 +176,7 @@ fn hot_frac_endpoints_reproduce_the_reference_modes() {
                 reserve_bytes: 0,
                 promote: false,
                 ranking: Some((0..rows as u32).collect()),
+                ..TierConfig::default()
             },
         )
         .map_err(|e| e.to_string())?;
