@@ -241,6 +241,10 @@ pub fn run_config_from(args: &Args) -> Result<RunConfig> {
         cfg.coalesce_limit = usize::try_from(l)
             .map_err(|_| Error::Config(format!("--coalesce-limit {l} out of range")))?;
     }
+    if let Some(p) = args.get("precision") {
+        cfg.precision = crate::config::Precision::parse(p)
+            .ok_or_else(|| Error::Config(format!("unknown precision `{p}`")))?;
+    }
     // `--system` replaced the whole profile above; restore the TOML's (and
     // the CLI's) NVLink/NVMe overrides on top of the selected profile.
     cfg.apply_link_overrides();
@@ -357,6 +361,21 @@ ONLINE SERVING (serve; all access modes):
   --coalesce          merge queued requests into one batch (default)
   --no-coalesce       dispatch one request per batch
   --coalesce-limit K  max requests per coalesced batch, 1..65536 (8)
+
+PRECISION TIERS (all modes):
+  Cold/host/NVMe tiers can store feature rows in reduced precision
+  (the Data Tiering follow-up, arXiv:2111.05894): fp16 halves and int8
+  quarters every byte that crosses PCIe/NVLink/NVMe — link bytes, NVMe
+  block IOs, cache page bytes and coalesced serving payloads all price
+  the narrowed row.  int8 uses per-row scale+zero-point affine
+  quantization computed once at load (the 8 B/row side table crosses
+  once and is not charged per gather).  The whole table is round-tripped
+  through the storage format at build time, so all eight access modes
+  stay bitwise identical to *each other* at any precision; only the
+  fp32 reference moves, within the bands DESIGN.md §13 documents.
+  --precision fp32|fp16|int8   cold-tier storage precision (fp32);
+                               fp32 is a bit-exact no-op — the
+                               degeneracy-chain anchor
 
 NVME STORAGE MODE (--mode nvme):
   For feature tables bigger than host memory (GIDS, arXiv:2306.16384):
@@ -1117,6 +1136,52 @@ mod tests {
         let cfg = run_config_from(&a).unwrap();
         assert_eq!(cfg.system.name, "System3");
         assert!((cfg.system.nvme.peak_bw - 12.5e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn precision_cli_overrides() {
+        let a = Args::parse(&sv(&["train", "--precision", "fp16"])).unwrap();
+        assert_eq!(run_config_from(&a).unwrap().precision, crate::config::Precision::Fp16);
+        let a = Args::parse(&sv(&["train", "--precision", "int8"])).unwrap();
+        assert_eq!(run_config_from(&a).unwrap().precision, crate::config::Precision::Int8);
+        // Default is the bit-exact anchor.
+        let d = run_config_from(&Args::parse(&sv(&["train"])).unwrap()).unwrap();
+        assert_eq!(d.precision, crate::config::Precision::Fp32);
+    }
+
+    #[test]
+    fn precision_cli_rejects_bad_values() {
+        let a = Args::parse(&sv(&["train", "--precision", "fp64"])).unwrap();
+        let err = run_config_from(&a).unwrap_err();
+        assert!(err.to_string().contains("unknown precision"), "{err}");
+        let a = Args::parse(&sv(&["train", "--precision", "int4"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+    }
+
+    #[test]
+    fn precision_cli_overrides_toml() {
+        let dir = std::env::temp_dir()
+            .join(format!("ptdirect_precision_override_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.toml");
+        std::fs::write(&path, "[run]\nprecision = \"int8\"\n").unwrap();
+        let a = Args::parse(&sv(&[
+            "train",
+            "--config",
+            path.to_str().unwrap(),
+            "--precision",
+            "fp16",
+        ]))
+        .unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(cfg.precision, crate::config::Precision::Fp16);
+    }
+
+    #[test]
+    fn help_documents_precision() {
+        assert!(HELP.contains("--precision fp32|fp16|int8"));
+        assert!(HELP.contains("scale+zero-point"));
     }
 
     #[test]

@@ -5,5 +5,5 @@ pub mod schema;
 pub mod systems;
 pub mod toml;
 
-pub use schema::{AccessMode, Backend, EvictionPolicy, RunConfig, ShardPolicy};
+pub use schema::{AccessMode, Backend, EvictionPolicy, Precision, RunConfig, ShardPolicy};
 pub use systems::{NvlinkConfig, NvmeConfig, PcieConfig, PowerProfile, SystemProfile};

@@ -192,6 +192,74 @@ impl EvictionPolicy {
     }
 }
 
+/// Storage precision of the feature table's cold tiers (`--precision`,
+/// DESIGN.md §13).  Following the Data Tiering follow-up
+/// (arXiv:2111.05894), cold/host/NVMe rows may be held in reduced
+/// precision and dequantized on gather: every link-byte, block-IO, and
+/// page-size computation prices the narrowed row width
+/// (`dim × elem_bytes`), halving (`Fp16`) or quartering (`Int8`) the
+/// traffic of every transfer-paying mode.
+///
+/// Quantization happens **once at table build**: the synthetic features
+/// are round-tripped through the storage format before any mode sees
+/// them, so all eight access modes stay *bitwise identical to each
+/// other* at every precision — only the fp32 reference values move,
+/// within the documented error bounds (`tests/quant_properties.rs`).
+/// `Fp32` is the identity round-trip and reproduces every pre-precision
+/// report bit-exactly — the newest link of the degeneracy chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full f32 rows (4 B/element) — the identity format and the
+    /// bit-exact anchor.
+    Fp32,
+    /// IEEE 754 binary16 rows (2 B/element), round-to-nearest-even;
+    /// exact for values with ≤ 11 significand bits in [2⁻¹⁴, 65504].
+    Fp16,
+    /// Affine int8 rows (1 B/element) with per-row scale + zero-point
+    /// computed once at load; element error ≤ scale/2.
+    Int8,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" | "f32" | "float" | "full" => Some(Precision::Fp32),
+            "fp16" | "f16" | "half" => Some(Precision::Fp16),
+            "int8" | "i8" | "q8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Fp16 => "fp16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Bytes per stored feature element (4 / 2 / 1) — the factor every
+    /// row-width computation narrows by.
+    pub fn elem_bytes(&self) -> u64 {
+        match self {
+            Precision::Fp32 => 4,
+            Precision::Fp16 => 2,
+            Precision::Int8 => 1,
+        }
+    }
+
+    /// Stored bytes of one feature row of `dim` elements.
+    pub fn row_bytes(&self, dim: usize) -> u64 {
+        dim as u64 * self.elem_bytes()
+    }
+
+    /// All precisions, widest first — the order the benches and the
+    /// monotone-reduction tests sweep them.
+    pub fn all() -> [Precision; 3] {
+        [Precision::Fp32, Precision::Fp16, Precision::Int8]
+    }
+}
+
 /// Which engine executes the training step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Backend {
@@ -341,6 +409,11 @@ pub struct RunConfig {
     pub coalesce: bool,
     /// `serve` mode: max requests folded into one coalesced batch.
     pub coalesce_limit: usize,
+    /// Storage precision of the feature table (see [`Precision`]): cold
+    /// tiers hold rows at this width and every cost model prices it.
+    /// `Fp32` (the default) is the identity format and reproduces all
+    /// pre-precision reports bit-exactly.
+    pub precision: Precision,
 }
 
 impl Default for RunConfig {
@@ -384,6 +457,7 @@ impl Default for RunConfig {
             admit_depth: 32,
             coalesce: true,
             coalesce_limit: 8,
+            precision: Precision::Fp32,
         }
     }
 }
@@ -576,6 +650,10 @@ impl RunConfig {
         if let Some(v) = doc.get_i64("run.coalesce_limit") {
             cfg.coalesce_limit = usize::try_from(v)
                 .map_err(|_| Error::Config(format!("coalesce_limit {v} out of range")))?;
+        }
+        if let Some(v) = doc.get_str("run.precision") {
+            cfg.precision = Precision::parse(v)
+                .ok_or_else(|| Error::Config(format!("unknown precision `{v}`")))?;
         }
         cfg.apply_link_overrides();
         cfg.validate()?;
@@ -1035,6 +1113,32 @@ coalesce_limit = 4
         // the same queue is fine under an open-loop arrival stream
         RunConfig::from_toml("[run]\nclients = 64\nadmit_depth = 8\narrival_rps = 100.0")
             .unwrap();
+    }
+
+    #[test]
+    fn precision_aliases_and_widths() {
+        assert_eq!(Precision::parse("fp32"), Some(Precision::Fp32));
+        assert_eq!(Precision::parse("FP16"), Some(Precision::Fp16));
+        assert_eq!(Precision::parse("half"), Some(Precision::Fp16));
+        assert_eq!(Precision::parse("int8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("i8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("fp64"), None);
+        assert_eq!(Precision::all().len(), 3);
+        assert_eq!(Precision::Fp32.elem_bytes(), 4);
+        assert_eq!(Precision::Fp16.elem_bytes(), 2);
+        assert_eq!(Precision::Int8.elem_bytes(), 1);
+        assert_eq!(Precision::Fp16.row_bytes(100), 200);
+        assert_eq!(Precision::Int8.label(), "int8");
+    }
+
+    #[test]
+    fn precision_knob_parses_and_defaults_fp32() {
+        assert_eq!(RunConfig::default().precision, Precision::Fp32);
+        let cfg = RunConfig::from_toml("[run]\nprecision = \"fp16\"").unwrap();
+        assert_eq!(cfg.precision, Precision::Fp16);
+        let cfg = RunConfig::from_toml("[run]\nprecision = \"int8\"").unwrap();
+        assert_eq!(cfg.precision, Precision::Int8);
+        assert!(RunConfig::from_toml("[run]\nprecision = \"bf16\"").is_err());
     }
 
     #[test]

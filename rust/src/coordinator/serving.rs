@@ -147,6 +147,16 @@ struct Pending {
     client: u32,
 }
 
+/// Pop the next batch off the admission queue in FIFO order: up to
+/// `limit` requests when coalescing, exactly one otherwise.  The batch
+/// size is clamped to the queue length, so an empty queue (or a coalesce
+/// window that raced the queue empty) yields an empty batch instead of
+/// panicking on `pop_front`.
+fn take_batch(queue: &mut VecDeque<Pending>, coalesce: bool, limit: usize) -> Vec<Pending> {
+    let k = if coalesce { queue.len().min(limit) } else { 1 };
+    queue.drain(..k.min(queue.len())).collect()
+}
+
 /// Request-driven serving engine over the full data path (sampler +
 /// feature store of the configured access mode) with simulated timing.
 ///
@@ -290,8 +300,13 @@ impl ServingEngine {
 
         while !queue.is_empty() || !arrivals.is_empty() {
             if queue.is_empty() {
-                // idle until the next arrival (an empty queue can't reject)
-                let (t_a, client) = arrivals.pop_front().unwrap();
+                // idle until the next arrival (an empty queue can't reject);
+                // the loop condition guarantees arrivals is non-empty here,
+                // and an unreachable break beats a panic in the serving loop.
+                let (t_a, client) = match arrivals.pop_front() {
+                    Some(a) => a,
+                    None => break,
+                };
                 queue.push_back(Pending {
                     id: next_id,
                     arrival_s: t_a,
@@ -308,15 +323,20 @@ impl ServingEngine {
             // immediately for the queue head's arrival, if later).
             let lane = cpu.earliest_lane();
             let (lane_free, _) = cpu.peek(lane);
-            let t_start = lane_free.max(queue.front().unwrap().arrival_s);
+            let t_start = lane_free.max(
+                queue
+                    .front()
+                    .expect("dispatch path runs only with a non-empty queue (empty case continues above)")
+                    .arrival_s,
+            );
 
             // Everything arriving up to the dispatch instant faces the
             // admission check against the queue it actually finds.
-            while let Some(&(t_a, _)) = arrivals.front() {
+            while let Some(&(t_a, client)) = arrivals.front() {
                 if t_a > t_start {
                     break;
                 }
-                let (t_a, client) = arrivals.pop_front().unwrap();
+                arrivals.pop_front();
                 if queue.len() >= self.cfg.admit_depth {
                     report.rejected += 1;
                 } else {
@@ -333,12 +353,13 @@ impl ServingEngine {
             }
 
             // Form the batch: FIFO order == request-id order.
-            let k = if self.cfg.coalesce {
-                queue.len().min(self.cfg.coalesce_limit)
-            } else {
-                1
-            };
-            let members: Vec<Pending> = (0..k).map(|_| queue.pop_front().unwrap()).collect();
+            let members = take_batch(&mut queue, self.cfg.coalesce, self.cfg.coalesce_limit);
+            if members.is_empty() {
+                // Unreachable (queue is non-empty past the branch above),
+                // but an empty batch must loop, not divide by zero below.
+                continue;
+            }
+            let k = members.len();
             report.queue_depth.add(queue.len() as f64);
 
             // Sample each member (id order keeps the fork(1) stream
@@ -533,5 +554,41 @@ impl ServingEngine {
             }
             Ok(cost)
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_queue_coalesce_window_cannot_panic() {
+        // Regression: the coalesce window used to `pop_front().unwrap()`
+        // `k` times — an empty queue must yield an empty batch in both
+        // arms, never panic.
+        let mut q: VecDeque<Pending> = VecDeque::new();
+        assert!(take_batch(&mut q, true, 8).is_empty());
+        assert!(take_batch(&mut q, false, 8).is_empty());
+
+        for id in 0..5 {
+            q.push_back(Pending {
+                id,
+                arrival_s: 0.0,
+                client: 0,
+            });
+        }
+        // Coalesced pops keep FIFO order and respect the limit.
+        let b = take_batch(&mut q, true, 3);
+        assert_eq!(b.iter().map(|p| p.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        // Non-coalesced pops exactly one.
+        let b = take_batch(&mut q, false, 3);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].id, 3);
+        // A limit past the queue length drains what's there and no more.
+        let b = take_batch(&mut q, true, 99);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].id, 4);
+        assert!(q.is_empty());
+        assert!(take_batch(&mut q, true, 99).is_empty());
     }
 }

@@ -152,43 +152,23 @@ pub(crate) fn build_store(
     graph: &Csr,
     preset: &DatasetPreset,
 ) -> Result<FeatureStore> {
-    if cfg.mode == AccessMode::Tiered {
-        FeatureStore::build_tiered(
-            graph.num_nodes(),
-            preset.feat_dim as usize,
-            preset.classes,
-            &cfg.system,
-            cfg.seed ^ 0xFEA7,
-            TierConfig::from_run(cfg, graph),
-        )
-    } else if cfg.mode == AccessMode::Sharded {
-        FeatureStore::build_sharded(
-            graph.num_nodes(),
-            preset.feat_dim as usize,
-            preset.classes,
-            &cfg.system,
-            cfg.seed ^ 0xFEA7,
-            ShardConfig::from_run(cfg, graph),
-        )
-    } else if cfg.mode == AccessMode::Nvme {
-        FeatureStore::build_nvme(
-            graph.num_nodes(),
-            preset.feat_dim as usize,
-            preset.classes,
-            &cfg.system,
-            cfg.seed ^ 0xFEA7,
-            NvmeStoreConfig::from_run(cfg, graph),
-        )
-    } else {
-        FeatureStore::build(
-            graph.num_nodes(),
-            preset.feat_dim as usize,
-            preset.classes,
-            cfg.mode,
-            &cfg.system,
-            cfg.seed ^ 0xFEA7,
-        )
-    }
+    let tier_cfg = (cfg.mode == AccessMode::Tiered).then(|| TierConfig::from_run(cfg, graph));
+    let shard_cfg = (cfg.mode == AccessMode::Sharded).then(|| ShardConfig::from_run(cfg, graph));
+    let nvme_cfg = (cfg.mode == AccessMode::Nvme).then(|| NvmeStoreConfig::from_run(cfg, graph));
+    let mut store = FeatureStore::build_quantized(
+        graph.num_nodes(),
+        preset.feat_dim as usize,
+        preset.classes,
+        cfg.mode,
+        &cfg.system,
+        cfg.seed ^ 0xFEA7,
+        cfg.precision,
+        tier_cfg,
+        shard_cfg,
+        nvme_cfg,
+    )?;
+    store.set_gather_workers(cfg.sampler_workers.max(1));
+    Ok(store)
 }
 
 /// Apply a run's `--classes` override onto its dataset preset — shared
@@ -397,7 +377,7 @@ impl Trainer {
         let mut report = EpochReport::default();
         let dim = self.store.dim();
         let dedup_on = self.cfg.dedup;
-        let row_bytes = dim as u64 * 4;
+        let row_bytes = self.cfg.precision.row_bytes(dim);
         report.dedup.enabled = dedup_on;
         let tier_epoch_start = self.store.tier_stats();
         let shard_epoch_start = self.store.shard_stats();

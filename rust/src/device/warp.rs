@@ -39,6 +39,34 @@ impl Default for WarpModel {
 }
 
 impl WarpModel {
+    /// Model for a given element width, keeping the 128-byte hardware
+    /// cacheline: narrower elements pack more per line (`cl_elems` =
+    /// 128 / `elem_bytes`), so fp16/int8 storage (DESIGN.md §13) halves
+    /// or quarters `bytes_moved` without touching the warp geometry.
+    /// `for_elem_bytes(4)` equals `WarpModel::default()` — the fp32
+    /// bit-exact anchor.  Widths that don't divide 128 round `cl_elems`
+    /// down to the nearest power of two (the counter requires one).
+    pub fn for_elem_bytes(elem_bytes: u64) -> WarpModel {
+        let eb = elem_bytes.clamp(1, 128);
+        let raw = (128 / eb).max(1);
+        let cl = 1u64 << (63 - raw.leading_zeros());
+        WarpModel { warp: 32, cl_elems: cl, elem_bytes: eb }
+    }
+
+    /// Recover the precision a store's constructor encoded in its row
+    /// width: `elem_bytes = row_bytes / feat_elems`.  The sharded/NVMe
+    /// cost models call this instead of `WarpModel::default()` so that
+    /// a table built with `--precision fp16|int8` prices the narrowed
+    /// row on every link.  Falls back to the f32 default when the
+    /// division is not exact (defensive: no existing caller hits it).
+    pub fn for_row_layout(row_bytes: u64, feat_elems: u64) -> WarpModel {
+        if feat_elems > 0 && row_bytes >= feat_elems && row_bytes % feat_elems == 0 {
+            WarpModel::for_elem_bytes(row_bytes / feat_elems)
+        } else {
+            WarpModel::default()
+        }
+    }
+
     /// Whether the circular-shift optimization applies to a feature width.
     ///
     /// The paper's kernel "appl[ies] this optimization only when ... the
@@ -462,6 +490,46 @@ mod tests {
         let model = WarpModel::default();
         assert_eq!(count_requests(&[], 10, model, false).requests, 0);
         assert_eq!(count_requests(&[1], 0, model, true).requests, 0);
+    }
+
+    #[test]
+    fn precision_constructors() {
+        // fp32 layout reproduces the default model field-for-field —
+        // the degeneracy anchor for every pre-precision report.
+        let d = WarpModel::default();
+        let fp32 = WarpModel::for_elem_bytes(4);
+        assert_eq!((fp32.warp, fp32.cl_elems, fp32.elem_bytes), (d.warp, d.cl_elems, d.elem_bytes));
+        // Narrower elements pack more per 128 B line.
+        let fp16 = WarpModel::for_elem_bytes(2);
+        assert_eq!((fp16.cl_elems, fp16.elem_bytes), (64, 2));
+        let int8 = WarpModel::for_elem_bytes(1);
+        assert_eq!((int8.cl_elems, int8.elem_bytes), (128, 1));
+        // Row-layout recovery: row_bytes / feat_elems.
+        let m = WarpModel::for_row_layout(129 * 2, 129);
+        assert_eq!(m.elem_bytes, 2);
+        let m = WarpModel::for_row_layout(516, 129); // fp32 rows
+        assert_eq!((m.cl_elems, m.elem_bytes), (32, 4));
+        // Non-exact division falls back to the default.
+        let m = WarpModel::for_row_layout(100, 33);
+        assert_eq!(m.elem_bytes, 4);
+    }
+
+    #[test]
+    fn narrower_elements_strictly_reduce_bytes_moved() {
+        // Same index stream, same feature count: fp16 and int8 layouts
+        // move strictly fewer link bytes than fp32 (tentpole invariant;
+        // the integration version lives in tests/quant_properties.rs).
+        let mut rng = crate::util::Rng::new(3);
+        let idx: Vec<u32> = (0..128).map(|_| rng.gen_range(100_000) as u32).collect();
+        let f = 256u64;
+        let by_width: Vec<u64> = [4u64, 2, 1]
+            .iter()
+            .map(|&eb| {
+                let m = WarpModel::for_elem_bytes(eb);
+                count_requests(&idx, f, m, m.shift_applies(f)).bytes_moved
+            })
+            .collect();
+        assert!(by_width[0] > by_width[1] && by_width[1] > by_width[2], "{by_width:?}");
     }
 
     #[test]

@@ -46,6 +46,7 @@
 pub mod nvme;
 pub mod pagecache;
 pub mod placement;
+pub mod quant;
 pub mod sharded;
 pub mod staging;
 pub mod store;

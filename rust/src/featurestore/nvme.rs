@@ -344,8 +344,10 @@ impl NvmeStore {
 
         if !host_stream.is_empty() {
             // Same arithmetic as the tiered cold path (aligned zero-copy),
-            // so `host_frac = 1` reproduces `Tiered` bit-exactly.
-            let model = WarpModel::default();
+            // so `host_frac = 1` reproduces `Tiered` bit-exactly; the
+            // storage precision is recovered from the constructor's row
+            // width so fp16/int8 rows narrow the host stream too.
+            let model = WarpModel::for_row_layout(self.row_bytes, feat_elems);
             let shifted = model.shift_applies(feat_elems);
             let c = PcieLink::new(sys)
                 .direct_gather(&count_requests(&host_stream, feat_elems, model, shifted));

@@ -1,0 +1,368 @@
+//! Quantized cold-tier storage formats (`--precision`, DESIGN.md §13).
+//!
+//! The Data Tiering follow-up (arXiv:2111.05894) observes that after
+//! placement has done its work, the remaining lever on the bottleneck
+//! link is the *row width itself*: storing cold features as fp16 or int8
+//! halves or quarters every byte that crosses PCIe/NVLink/NVMe, at a
+//! bounded numeric cost.  This module owns the two storage formats:
+//!
+//! * **fp16** — IEEE 754 binary16, round-to-nearest-even, implemented by
+//!   hand on the bit patterns (no `half` crate in the offline build).
+//!   Exact for every value with ≤ 11 significand bits inside the normal
+//!   range `[2⁻¹⁴, 65504]`; relative error ≤ 2⁻¹¹ otherwise.
+//! * **int8** — affine per-row quantization: `q = round((x − zp) / scale)`
+//!   with `zp = row_min` and `scale = (row_max − row_min) / 255`, both
+//!   computed **once at table build**.  Element error ≤ `scale / 2`
+//!   (plus f32 arithmetic epsilon); a constant row (`scale = 0`) is
+//!   stored exactly.
+//!
+//! The repo's core invariant — bitwise-identical numerics across all
+//! eight access modes — survives by construction: [`quantize_table`]
+//! round-trips the whole synthetic table through the storage format
+//! *before* any mode sees it, so every mode gathers the same
+//! already-dequantized values.  Only the fp32 *reference* moves (within
+//! the bounds above), which is where the tolerance-based comparator of
+//! `util::approx` takes over from `assert_eq!` on bits
+//! (`tests/quant_properties.rs`).  `Precision::Fp32` is the identity
+//! round-trip: bit-exact, the newest link of the degeneracy chain.
+//!
+//! The int8 side table (one `(zero_point, scale)` f32 pair per row, 8 B)
+//! lives in GPU memory next to the dequant kernel and is *not* counted
+//! against the link budget — it crosses once at load, is ≪ 1% of the
+//! table for any realistic `dim`, and never moves per-gather.
+//!
+//! ```
+//! use ptdirect::config::Precision;
+//! use ptdirect::featurestore::quant::{self, quantize_table};
+//!
+//! let mut rows = vec![1.5f32, -0.25, 1024.0, 0.1]; // one 4-wide row
+//! let before = rows.clone();
+//! quantize_table(&mut rows, 4, Precision::Fp16);
+//! assert_eq!(&rows[..3], &before[..3]); // ≤ 11-bit values are exact
+//! assert!((rows[3] - 0.1).abs() < 1e-4); // 0.1 rounds to the nearest half
+//! assert_eq!(quant::f16_round_trip(f32::INFINITY), f32::INFINITY);
+//! ```
+
+use crate::config::Precision;
+
+/// Convert an `f32` to IEEE 754 binary16 bits, round-to-nearest-even.
+///
+/// Overflow saturates to ±infinity (binary16 max finite is 65504); NaN
+/// maps to a quiet half NaN; values below the subnormal floor flush to
+/// signed zero.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Infinity keeps a zero mantissa; NaN keeps a nonzero one.
+        let payload = if man != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | payload;
+    }
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7C00; // overflow → ±inf
+    }
+    if e >= -14 {
+        // Normal half: keep 10 mantissa bits, round-to-nearest-even on
+        // the 13 dropped bits.
+        let mut m = man >> 13;
+        let rem = man & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            // Mantissa carried out: bump the exponent (may reach inf).
+            m = 0;
+            he += 1;
+            if he >= 31 {
+                return sign | 0x7C00;
+            }
+        }
+        return sign | ((he as u16) << 10) | (m as u16);
+    }
+    if e >= -24 && exp != 0 {
+        // Subnormal half: value = round(|x| × 2²⁴) units of 2⁻²⁴.  The
+        // implicit bit joins the mantissa and the whole thing shifts
+        // right by (−1 − e), again rounding to nearest even.
+        let full = man | 0x0080_0000;
+        let shift = (-1 - e) as u32;
+        let mut m = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && (m & 1) == 1) {
+            m += 1;
+        }
+        // A carry into bit 10 lands exactly on the smallest normal —
+        // the bit pattern is already correct.
+        return sign | (m as u16);
+    }
+    sign // underflow → signed zero
+}
+
+/// Convert IEEE 754 binary16 bits back to an exactly-representable `f32`.
+///
+/// Every finite binary16 value is exactly representable in binary32, so
+/// this direction is lossless — the pair of conversions is the storage
+/// round-trip [`f16_round_trip`] applies.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 31 {
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal half (value = man × 2⁻²⁴) normalizes in f32:
+            // top set bit p gives exponent p − 24.
+            let p = 31 - man.leading_zeros();
+            let e32 = p + 103; // (p − 24) + 127
+            let m32 = (man << (23 - p)) & 0x007F_FFFF;
+            sign | (e32 << 23) | m32
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13) // 112 = 127 − 15
+    };
+    f32::from_bits(bits)
+}
+
+/// The fp16 storage round-trip: what a gathered element looks like after
+/// living in a half-precision cold tier.
+pub fn f16_round_trip(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Per-row affine int8 parameters: `stored = round((x − zero_point) /
+/// scale)`, `dequant = zero_point + stored × scale`.
+///
+/// `scale = 0` marks a constant row (every element equals
+/// `zero_point`), which dequantizes exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Int8RowParams {
+    pub zero_point: f32,
+    pub scale: f32,
+}
+
+/// Compute the affine parameters of one row: `zero_point = min`,
+/// `scale = (max − min) / 255` (the full unsigned-8-bit range).
+pub fn int8_row_params(row: &[f32]) -> Int8RowParams {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in row {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !(lo.is_finite() && hi.is_finite()) || lo >= hi {
+        return Int8RowParams {
+            zero_point: if lo.is_finite() { lo } else { 0.0 },
+            scale: 0.0,
+        };
+    }
+    Int8RowParams {
+        zero_point: lo,
+        scale: (hi - lo) / 255.0,
+    }
+}
+
+/// The int8 storage round-trip of one element under row parameters `p`.
+pub fn int8_round_trip(x: f32, p: Int8RowParams) -> f32 {
+    if p.scale == 0.0 {
+        return p.zero_point;
+    }
+    let q = ((x - p.zero_point) / p.scale).round().clamp(0.0, 255.0);
+    p.zero_point + q * p.scale
+}
+
+/// Round-trip a whole feature table (`rows × dim`, row-major) through
+/// the storage format of `precision`, in place — the one call
+/// `FeatureStore::build_inner` makes before any access mode sees the
+/// values.  `Fp32` is the identity (bit-exact by construction).
+pub fn quantize_table(data: &mut [f32], dim: usize, precision: Precision) {
+    match precision {
+        Precision::Fp32 => {}
+        Precision::Fp16 => {
+            for x in data.iter_mut() {
+                *x = f16_round_trip(*x);
+            }
+        }
+        Precision::Int8 => {
+            if dim == 0 {
+                return;
+            }
+            for row in data.chunks_mut(dim) {
+                let p = int8_row_params(row);
+                if p.scale == 0.0 {
+                    continue; // constant row stored exactly
+                }
+                for x in row.iter_mut() {
+                    *x = int8_round_trip(*x, p);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp16_exact_for_representable_values() {
+        // ≤ 11 significand bits inside the normal range round-trip
+        // bit-exactly.
+        for &x in &[
+            0.0f32, -0.0, 1.0, -1.0, 1.5, 0.25, -0.375, 2048.0, 65504.0, 6.1035156e-5,
+            -3.140625, 0.0009765625,
+        ] {
+            let y = f16_round_trip(x);
+            assert_eq!(x.to_bits(), y.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn fp16_relative_error_bounded_for_normals() {
+        // Pseudo-random normal-range values: relative error ≤ 2⁻¹¹.
+        let mut state = 0x9E37_79B9u32;
+        for _ in 0..2000 {
+            state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+            let mag = (state >> 8) as f32 / (1 << 24) as f32; // [0, 1)
+            let x = (mag * 2000.0 - 1000.0) + 0.001; // avoid exact zero
+            let y = f16_round_trip(x);
+            let rel = ((y - x) / x).abs();
+            assert!(rel <= 1.0 / 2048.0 + 1e-7, "x={x} y={y} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn fp16_idempotent() {
+        // A value already on the fp16 grid stays put: round-tripping
+        // twice equals once (what repeated load cycles would see).
+        let mut state = 0xB5297A4Du32;
+        for _ in 0..500 {
+            state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+            let x = f32::from_bits(0x3F00_0000 | (state & 0x007F_FFFF)); // [0.5, 1)
+            let once = f16_round_trip(x);
+            let twice = f16_round_trip(once);
+            assert_eq!(once.to_bits(), twice.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn fp16_specials() {
+        assert_eq!(f16_round_trip(f32::INFINITY), f32::INFINITY);
+        assert_eq!(f16_round_trip(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(f16_round_trip(f32::NAN).is_nan());
+        // Overflow saturates to infinity at the binary16 boundary.
+        assert_eq!(f16_round_trip(65520.0), f32::INFINITY);
+        assert_eq!(f16_round_trip(1e38), f32::INFINITY);
+        assert_eq!(f16_round_trip(-1e38), f32::NEG_INFINITY);
+        // Deep underflow flushes to signed zero.
+        assert_eq!(f16_round_trip(1e-30).to_bits(), 0.0f32.to_bits());
+        assert_eq!(f16_round_trip(-1e-30).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn fp16_subnormals_round_trip_in_units_of_2_pow_minus_24() {
+        // The smallest half subnormal and multiples of it are exact.
+        let ulp = f32::from_bits(0x3380_0000); // 2⁻²⁴
+        for k in [1u32, 2, 3, 511, 1023] {
+            let x = k as f32 * ulp;
+            assert_eq!(f16_round_trip(x), x, "k={k}");
+        }
+        // Half of the smallest subnormal ties to even → zero.
+        assert_eq!(f16_round_trip(ulp * 0.5), 0.0);
+        // 1.5 ulp rounds up to 2 ulp (nearest even).
+        assert_eq!(f16_round_trip(ulp * 1.5), ulp * 2.0);
+    }
+
+    #[test]
+    fn fp16_round_to_nearest_even_ties() {
+        // 1 + 2⁻¹¹ sits exactly between 1.0 and 1 + 2⁻¹⁰: ties to even
+        // keeps the even mantissa (1.0).
+        let tie = f32::from_bits(0x3F80_1000);
+        assert_eq!(f16_round_trip(tie), 1.0);
+        // 1 + 3·2⁻¹¹ ties between odd/even mantissas → rounds up.
+        let tie_up = f32::from_bits(0x3F80_3000);
+        assert_eq!(f16_round_trip(tie_up), 1.0 + 2.0 / 1024.0);
+    }
+
+    #[test]
+    fn int8_error_within_half_scale() {
+        let mut state = 0xDEADBEEFu32;
+        let mut row = Vec::with_capacity(64);
+        for _ in 0..64 {
+            state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+            row.push((state >> 8) as f32 / (1 << 20) as f32 - 8.0);
+        }
+        let p = int8_row_params(&row);
+        assert!(p.scale > 0.0);
+        for &x in &row {
+            let y = int8_round_trip(x, p);
+            assert!(
+                (y - x).abs() <= p.scale * 0.5 + p.scale * 1e-5,
+                "x={x} y={y} scale={}",
+                p.scale
+            );
+        }
+    }
+
+    #[test]
+    fn int8_endpoints_exact_and_constant_rows_lossless() {
+        let row = [2.0f32, 7.0, 4.5, 3.25];
+        let p = int8_row_params(&row);
+        assert_eq!(int8_round_trip(2.0, p), 2.0, "row min is the zero point");
+        // Constant rows have scale 0 and dequantize exactly.
+        let flat = [3.75f32; 16];
+        let pf = int8_row_params(&flat);
+        assert_eq!(pf.scale, 0.0);
+        assert_eq!(int8_round_trip(3.75, pf), 3.75);
+        let mut data = flat.to_vec();
+        quantize_table(&mut data, 16, Precision::Int8);
+        assert!(data.iter().all(|&x| x == 3.75));
+    }
+
+    #[test]
+    fn quantize_table_fp32_is_identity() {
+        let mut data: Vec<f32> = (0..256).map(|i| (i as f32).sin()).collect();
+        let before = data.clone();
+        quantize_table(&mut data, 16, Precision::Fp32);
+        for (a, b) in data.iter().zip(&before) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn quantize_table_is_per_row_for_int8() {
+        // Two rows with very different ranges: each gets its own scale,
+        // so the small-range row keeps fine resolution.
+        let mut data = vec![0.0f32, 0.001, 0.002, 0.003, 0.0, 250.0, 500.0, 1000.0];
+        quantize_table(&mut data, 4, Precision::Int8);
+        // Row 0 scale ≈ 0.003/255: error ≤ 6e-6.
+        assert!((data[1] - 0.001).abs() < 1e-5);
+        // Row 1 scale ≈ 1000/255 ≈ 3.9: error ≤ ~2.
+        assert!((data[5] - 250.0).abs() <= 2.0);
+    }
+
+    #[test]
+    fn quantize_table_idempotent_for_both_formats() {
+        // Round-tripping an already-quantized table changes nothing —
+        // the stored grid is a fixed point of the storage map.
+        let base: Vec<f32> = (0..128).map(|i| (i as f32 * 0.7).cos() * 3.0).collect();
+        for prec in [Precision::Fp16, Precision::Int8] {
+            let mut once = base.clone();
+            quantize_table(&mut once, 8, prec);
+            let mut twice = once.clone();
+            quantize_table(&mut twice, 8, prec);
+            for (a, b) in once.iter().zip(&twice) {
+                // int8 re-derives params from the quantized row; the grid
+                // endpoints (min/max) are preserved, so params — and with
+                // them every grid point — are identical.
+                assert_eq!(a.to_bits(), b.to_bits(), "{prec:?}");
+            }
+        }
+    }
+}

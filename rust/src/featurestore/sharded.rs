@@ -400,7 +400,11 @@ impl ShardedStore {
         sys: &SystemProfile,
     ) -> TransferCost {
         let n = self.num_gpus;
-        let model = WarpModel::default();
+        // Recover the storage precision from the constructor's row width
+        // (row_bytes / feat_elems): fp32 rows reproduce the default model
+        // bit-exactly; fp16/int8 rows (DESIGN.md §13) narrow every NVLink
+        // and PCIe byte priced below.
+        let model = WarpModel::for_row_layout(self.row_bytes, feat_elems);
         let shifted = model.shift_applies(feat_elems);
         let pcie = PcieLink::new(sys);
         let nvlink = NvlinkLink::new(sys);

@@ -2,10 +2,11 @@
 
 use std::sync::{Mutex, PoisonError};
 
-use crate::config::{AccessMode, SystemProfile};
+use crate::config::{AccessMode, Precision, SystemProfile};
 use crate::device::warp::{count_requests, WarpModel};
 use crate::error::{Error, Result};
 use crate::featurestore::nvme::{NvmeStats, NvmeStore, NvmeStoreConfig};
+use crate::featurestore::quant;
 use crate::featurestore::sharded::{ShardConfig, ShardStats, ShardedStore};
 use crate::featurestore::staging::StagingPool;
 use crate::featurestore::synth::SyntheticFeatures;
@@ -20,6 +21,17 @@ pub struct FeatureStore {
     synth: SyntheticFeatures,
     rows: usize,
     mode: AccessMode,
+    /// Storage precision of the table (DESIGN.md §13).  The table's
+    /// values are the storage round-trip of the synthesized fp32 rows —
+    /// quantized once at build, so every access mode gathers identical
+    /// values — and every per-row cost below prices
+    /// `precision.row_bytes(dim)` instead of `dim * 4`.
+    precision: Precision,
+    /// Worker threads for the measured host-side gather/scatter copies
+    /// (`--sampler-workers`).  Purely a wall-clock knob: outputs are
+    /// bitwise identical at every count (disjoint whole-row chunks —
+    /// see `tensor::indexing::gather_rows_into_parallel`).
+    gather_workers: usize,
     sys: SystemProfile,
     staging: StagingPool,
     uvm: Option<Mutex<UvmSpace>>,
@@ -62,7 +74,30 @@ impl FeatureStore {
         sys: &SystemProfile,
         seed: u64,
     ) -> Result<FeatureStore> {
-        Self::build_inner(rows, dim, classes, mode, sys, seed, None, None, None)
+        Self::build_inner(rows, dim, classes, mode, sys, seed, Precision::Fp32, None, None, None)
+    }
+
+    /// Build with an explicit storage precision (DESIGN.md §13) plus
+    /// whichever mode-specific placement knobs apply — the trainer's
+    /// entry point.  `Precision::Fp32` reproduces the plain builders
+    /// bit-exactly; fp16/int8 round-trip the table through the narrow
+    /// format once at build and price the narrowed row on every link.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_quantized(
+        rows: usize,
+        dim: usize,
+        classes: u32,
+        mode: AccessMode,
+        sys: &SystemProfile,
+        seed: u64,
+        precision: Precision,
+        tier_cfg: Option<TierConfig>,
+        shard_cfg: Option<ShardConfig>,
+        nvme_cfg: Option<NvmeStoreConfig>,
+    ) -> Result<FeatureStore> {
+        Self::build_inner(
+            rows, dim, classes, mode, sys, seed, precision, tier_cfg, shard_cfg, nvme_cfg,
+        )
     }
 
     /// Build a `Tiered` store with explicit tier placement/capacity knobs.
@@ -81,6 +116,7 @@ impl FeatureStore {
             AccessMode::Tiered,
             sys,
             seed,
+            Precision::Fp32,
             Some(tier_cfg),
             None,
             None,
@@ -103,6 +139,7 @@ impl FeatureStore {
             AccessMode::Sharded,
             sys,
             seed,
+            Precision::Fp32,
             None,
             Some(shard_cfg),
             None,
@@ -126,6 +163,7 @@ impl FeatureStore {
             AccessMode::Nvme,
             sys,
             seed,
+            Precision::Fp32,
             None,
             None,
             Some(nvme_cfg),
@@ -140,11 +178,13 @@ impl FeatureStore {
         mode: AccessMode,
         sys: &SystemProfile,
         seed: u64,
+        precision: Precision,
         tier_cfg: Option<TierConfig>,
         shard_cfg: Option<ShardConfig>,
         nvme_cfg: Option<NvmeStoreConfig>,
     ) -> Result<FeatureStore> {
-        let bytes = rows as u64 * dim as u64 * 4;
+        let row_bytes = precision.row_bytes(dim);
+        let bytes = rows as u64 * row_bytes;
         if mode == AccessMode::GpuResident && bytes > sys.gpu_mem_bytes {
             return Err(Error::GpuOom {
                 need: bytes,
@@ -152,7 +192,12 @@ impl FeatureStore {
             });
         }
         let synth = SyntheticFeatures::new(dim, classes, seed);
-        let data = synth.build_table(rows);
+        let mut data = synth.build_table(rows);
+        // Round-trip the whole table through the storage format up front:
+        // every access mode then gathers the same already-dequantized
+        // values, preserving bitwise cross-mode equality at any precision
+        // (fp32 is the identity — DESIGN.md §13).
+        quant::quantize_table(&mut data, dim, precision);
         let device = match mode {
             AccessMode::CpuGather => Device::Cpu,
             AccessMode::GpuResident => Device::Cuda,
@@ -168,19 +213,19 @@ impl FeatureStore {
         };
         let tier = if mode == AccessMode::Tiered {
             let cfg = tier_cfg.unwrap_or_default();
-            Some(Mutex::new(TieredCache::new(rows, dim as u64 * 4, sys, &cfg)))
+            Some(Mutex::new(TieredCache::new(rows, row_bytes, sys, &cfg)))
         } else {
             None
         };
         let shard = if mode == AccessMode::Sharded {
             let cfg = shard_cfg.unwrap_or_default();
-            Some(Mutex::new(ShardedStore::new(rows, dim as u64 * 4, sys, &cfg)))
+            Some(Mutex::new(ShardedStore::new(rows, row_bytes, sys, &cfg)))
         } else {
             None
         };
         let nvme = if mode == AccessMode::Nvme {
             let cfg = nvme_cfg.unwrap_or_default();
-            Some(Mutex::new(NvmeStore::new(rows, dim as u64 * 4, sys, &cfg)))
+            Some(Mutex::new(NvmeStore::new(rows, row_bytes, sys, &cfg)))
         } else {
             None
         };
@@ -189,6 +234,8 @@ impl FeatureStore {
             synth,
             rows,
             mode,
+            precision,
+            gather_workers: 1,
             sys: sys.clone(),
             staging: StagingPool::new(),
             uvm,
@@ -219,8 +266,25 @@ impl FeatureStore {
         self.synth.label(node)
     }
 
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Set the worker-thread count for the measured gather/scatter copies
+    /// (`--sampler-workers`); 0 is clamped to 1.  Bitwise invariant:
+    /// `tests/parallel_gather.rs` pins gathers at 1/2/7/16 workers to the
+    /// same bytes in every access mode.
+    pub fn set_gather_workers(&mut self, workers: usize) {
+        self.gather_workers = workers.max(1);
+    }
+
+    pub fn gather_workers(&self) -> usize {
+        self.gather_workers
+    }
+
+    /// Bytes the stored table occupies at this store's precision.
     pub fn table_bytes(&self) -> u64 {
-        self.rows as u64 * self.synth.dim as u64 * 4
+        self.rows as u64 * self.precision.row_bytes(self.synth.dim)
     }
 
     pub fn measured_gather_s(&self) -> f64 {
@@ -287,7 +351,9 @@ impl FeatureStore {
     /// holds structurally rather than by duplicated arithmetic.
     fn zero_copy_cost(&self, idx: &[u32], aligned: bool) -> TransferCost {
         let f = self.synth.dim as u64;
-        let model = WarpModel::default();
+        // fp32 yields WarpModel::default() field-for-field (the bit-exact
+        // anchor); fp16/int8 pack 64/128 elements per 128 B cacheline.
+        let model = WarpModel::for_elem_bytes(self.precision.elem_bytes());
         let shifted = aligned && model.shift_applies(f);
         let traffic = count_requests(idx, f, model, shifted);
         PcieLink::new(&self.sys).direct_gather(&traffic)
@@ -310,7 +376,7 @@ impl FeatureStore {
                 bound: self.rows,
             });
         }
-        let row_bytes = (f * 4) as u64;
+        let row_bytes = self.precision.row_bytes(f);
         let src = self.table.f32_data();
 
         let cost = match self.mode {
@@ -318,7 +384,13 @@ impl FeatureStore {
                 // ① gather into the pinned staging buffer (real memcpys)
                 let timer = Timer::start();
                 let mut staging = self.staging.take(idx.len() * f);
-                crate::tensor::indexing::gather_rows_into(src, f, idx, &mut staging);
+                crate::tensor::indexing::gather_rows_into_parallel(
+                    src,
+                    f,
+                    idx,
+                    &mut staging,
+                    self.gather_workers,
+                )?;
                 // ④ DMA lands the contiguous buffer in device memory
                 out.copy_from_slice(&staging);
                 self.staging.give(staging);
@@ -328,13 +400,25 @@ impl FeatureStore {
             AccessMode::UnifiedNaive | AccessMode::UnifiedAligned => {
                 // GPU zero-copy: device fetches rows directly; no staging.
                 let timer = Timer::start();
-                crate::tensor::indexing::gather_rows_into(src, f, idx, out);
+                crate::tensor::indexing::gather_rows_into_parallel(
+                    src,
+                    f,
+                    idx,
+                    out,
+                    self.gather_workers,
+                )?;
                 *Self::lock(&self.measured_gather) += timer.elapsed_s();
                 self.zero_copy_cost(idx, self.mode == AccessMode::UnifiedAligned)
             }
             AccessMode::Uvm => {
                 let timer = Timer::start();
-                crate::tensor::indexing::gather_rows_into(src, f, idx, out);
+                crate::tensor::indexing::gather_rows_into_parallel(
+                    src,
+                    f,
+                    idx,
+                    out,
+                    self.gather_workers,
+                )?;
                 *Self::lock(&self.measured_gather) += timer.elapsed_s();
                 let mut uvm = Self::lock(self.uvm.as_ref().unwrap());
                 let mut c = uvm.access_rows(idx, row_bytes);
@@ -345,7 +429,13 @@ impl FeatureStore {
             }
             AccessMode::GpuResident => {
                 let timer = Timer::start();
-                crate::tensor::indexing::gather_rows_into(src, f, idx, out);
+                crate::tensor::indexing::gather_rows_into_parallel(
+                    src,
+                    f,
+                    idx,
+                    out,
+                    self.gather_workers,
+                )?;
                 *Self::lock(&self.measured_gather) += timer.elapsed_s();
                 TransferCost {
                     time_s: self.sys.kernel_launch_s,
@@ -361,7 +451,13 @@ impl FeatureStore {
             }
             AccessMode::Tiered => {
                 let timer = Timer::start();
-                crate::tensor::indexing::gather_rows_into(src, f, idx, out);
+                crate::tensor::indexing::gather_rows_into_parallel(
+                    src,
+                    f,
+                    idx,
+                    out,
+                    self.gather_workers,
+                )?;
                 *Self::lock(&self.measured_gather) += timer.elapsed_s();
                 let tier = self.tier.as_ref().expect("tiered store has a cache");
                 let cold = Self::lock(tier).record(idx);
@@ -393,14 +489,26 @@ impl FeatureStore {
             }
             AccessMode::Sharded => {
                 let timer = Timer::start();
-                crate::tensor::indexing::gather_rows_into(src, f, idx, out);
+                crate::tensor::indexing::gather_rows_into_parallel(
+                    src,
+                    f,
+                    idx,
+                    out,
+                    self.gather_workers,
+                )?;
                 *Self::lock(&self.measured_gather) += timer.elapsed_s();
                 Self::lock(self.shard.as_ref().expect("sharded store has placement"))
                     .gather_cost(idx, f as u64, &self.sys)
             }
             AccessMode::Nvme => {
                 let timer = Timer::start();
-                crate::tensor::indexing::gather_rows_into(src, f, idx, out);
+                crate::tensor::indexing::gather_rows_into_parallel(
+                    src,
+                    f,
+                    idx,
+                    out,
+                    self.gather_workers,
+                )?;
                 *Self::lock(&self.measured_gather) += timer.elapsed_s();
                 Self::lock(self.nvme.as_ref().expect("nvme store has placement"))
                     .gather_cost(idx, f as u64, &self.sys)
@@ -441,7 +549,15 @@ impl FeatureStore {
         let mut uniq = vec![0f32; plan.unique_rows() * f];
         let cost = self.gather_into(plan.unique_nodes(), &mut uniq)?;
         let timer = Timer::start();
-        plan.scatter_rows(&uniq, f, out);
+        // Scatter is the same copy loop as gather with the plan's scatter map
+        // as the index stream, so it parallelizes through the same seam.
+        crate::tensor::indexing::gather_rows_into_parallel(
+            &uniq,
+            f,
+            plan.scatter_map(),
+            out,
+            self.gather_workers,
+        )?;
         *Self::lock(&self.measured_gather) += timer.elapsed_s();
         Ok(cost)
     }
@@ -846,5 +962,71 @@ mod tests {
         assert!(store(AccessMode::UnifiedAligned).nvme_stats().is_none());
         assert!(tiered_store(0.5).nvme_stats().is_none());
         assert!(nvme_store(0.5, 0.2).nvme_stats().is_some());
+    }
+
+    fn quantized_store(mode: AccessMode, precision: Precision) -> FeatureStore {
+        FeatureStore::build_quantized(500, 24, 8, mode, &sys(), 42, precision, None, None, None)
+            .unwrap()
+    }
+
+    #[test]
+    fn fp32_quantized_builder_is_bit_exact_vs_plain_builder() {
+        // The degeneracy anchor: Precision::Fp32 through build_quantized
+        // must reproduce the plain builder's values *and* costs exactly.
+        let idx: Vec<u32> = (0..128u32).map(|i| i * 37 % 500).collect();
+        for mode in AccessMode::all() {
+            let (vp, cp) = store(mode).gather(&idx).unwrap();
+            let (vq, cq) = quantized_store(mode, Precision::Fp32).gather(&idx).unwrap();
+            assert_eq!(vp, vq, "{mode:?} values moved");
+            assert_eq!(cp.time_s, cq.time_s, "{mode:?}");
+            assert_eq!(cp.bytes_on_link, cq.bytes_on_link, "{mode:?}");
+            assert_eq!(cp.requests, cq.requests, "{mode:?}");
+            assert_eq!(cp.useful_bytes, cq.useful_bytes, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn cross_mode_equality_holds_at_every_precision() {
+        // Quantize-once-at-build keeps all eight modes bitwise identical
+        // to *each other* at any precision; only the fp32 reference moves.
+        let idx: Vec<u32> = vec![5, 499, 5, 0, 123, 321, 17];
+        for precision in Precision::all() {
+            let reference = quantized_store(AccessMode::CpuGather, precision).gather(&idx).unwrap().0;
+            for mode in AccessMode::all() {
+                let (vals, _) = quantized_store(mode, precision).gather(&idx).unwrap();
+                assert_eq!(vals, reference, "{mode:?} at {precision:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_precision_shrinks_stored_and_useful_bytes() {
+        let idx: Vec<u32> = (0..200u32).map(|i| i * 13 % 500).collect();
+        let mut last_table = u64::MAX;
+        let mut last_useful = u64::MAX;
+        for precision in Precision::all() {
+            let st = quantized_store(AccessMode::UnifiedAligned, precision);
+            assert!(st.table_bytes() < last_table, "{precision:?}");
+            last_table = st.table_bytes();
+            let (_, cost) = st.gather(&idx).unwrap();
+            assert!(cost.useful_bytes < last_useful, "{precision:?}");
+            last_useful = cost.useful_bytes;
+        }
+    }
+
+    #[test]
+    fn int8_gpu_resident_fits_where_fp32_overflows() {
+        // The point of quantized tiers: a table 2.5x over GPU capacity in
+        // fp32 fits resident at a quarter of the bytes.
+        let mut small = sys();
+        small.gpu_mem_bytes = 500 * 24 * 2; // half the fp32 table
+        let fp32 = FeatureStore::build_quantized(
+            500, 24, 8, AccessMode::GpuResident, &small, 1, Precision::Fp32, None, None, None,
+        );
+        assert!(matches!(fp32, Err(Error::GpuOom { .. })));
+        FeatureStore::build_quantized(
+            500, 24, 8, AccessMode::GpuResident, &small, 1, Precision::Int8, None, None, None,
+        )
+        .unwrap();
     }
 }

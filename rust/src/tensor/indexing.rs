@@ -190,6 +190,68 @@ pub fn gather_rows_into(src: &[f32], f: usize, idx: &[u32], dst: &mut [f32]) {
     }
 }
 
+/// Deterministic multi-threaded row gather (`--sampler-workers`).
+///
+/// The output is split into contiguous whole-row chunks, one per worker,
+/// and each worker runs the serial [`gather_rows_into`] on its disjoint
+/// slice via `std::thread::scope`.  Chunk boundaries only *partition*
+/// the copy — they never reorder or restructure it — so the result is
+/// bitwise identical to the single-threaded gather at every worker
+/// count (pinned by `tests/parallel_gather.rs`).  The plan scatter is
+/// the same operation with `idx = scatter_map`, so it parallelizes
+/// through this one seam too.
+///
+/// A panic in any worker is caught at join and surfaced as
+/// [`Error::Pipeline`] — never a hang, and never an abort of the
+/// calling thread.  Workers that already wrote their chunks leave the
+/// buffer partially filled; the caller must treat the error as fatal
+/// for this batch (the pipeline executor does).
+pub fn gather_rows_into_parallel(
+    src: &[f32],
+    f: usize,
+    idx: &[u32],
+    dst: &mut [f32],
+    workers: usize,
+) -> Result<()> {
+    debug_assert_eq!(dst.len(), idx.len() * f);
+    let w = workers.max(1).min(idx.len());
+    if w <= 1 || f == 0 {
+        gather_rows_into(src, f, idx, dst);
+        return Ok(());
+    }
+    let chunk_rows = (idx.len() + w - 1) / w;
+    let joined: Vec<std::thread::Result<()>> = std::thread::scope(|s| {
+        let handles: Vec<_> = idx
+            .chunks(chunk_rows)
+            .zip(dst.chunks_mut(chunk_rows * f))
+            .map(|(idx_c, dst_c)| s.spawn(move || gather_rows_into(src, f, idx_c, dst_c)))
+            .collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    });
+    for r in joined {
+        if let Err(p) = r {
+            return Err(Error::Pipeline(format!(
+                "gather worker panicked: {}",
+                worker_panic_msg(p.as_ref())
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Best-effort panic payload extraction (mirrors the pipeline
+/// executor's): `panic!` literals arrive as `&str`, formatted ones as
+/// `String`, anything else gets a placeholder.
+fn worker_panic_msg(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
 /// Internal helper: mutable f32 view of a freshly created, uniquely owned
 /// tensor (avoids exposing `f32_mut` publicly).
 fn unsafe_f32_mut(t: &mut Tensor) -> &mut [f32] {
@@ -298,6 +360,48 @@ mod tests {
         assert_eq!(planned.cost.time_s, unique.cost.time_s);
         assert_eq!(planned.cost.requests, unique.cost.requests);
         assert_eq!(planned.cost.bytes_on_link, unique.cost.bytes_on_link);
+    }
+
+    #[test]
+    fn parallel_gather_bitwise_matches_serial_at_every_worker_count() {
+        let mut rng = Rng::new(17);
+        let table: Vec<f32> = (0..500 * 13).map(|_| rng.gen_f32_range(-2.0, 2.0)).collect();
+        let idx: Vec<u32> = (0..331u32).map(|i| i * 7 % 500).collect();
+        let mut serial = vec![0f32; idx.len() * 13];
+        gather_rows_into(&table, 13, &idx, &mut serial);
+        for workers in [1usize, 2, 7, 16, 100] {
+            let mut par = vec![0f32; idx.len() * 13];
+            gather_rows_into_parallel(&table, 13, &idx, &mut par, workers).unwrap();
+            assert_eq!(par, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn parallel_gather_handles_degenerate_shapes() {
+        // Empty stream, single row, more workers than rows.
+        let table: Vec<f32> = (0..40).map(|i| i as f32).collect();
+        let mut empty: Vec<f32> = vec![];
+        gather_rows_into_parallel(&table, 4, &[], &mut empty, 8).unwrap();
+        let mut one = vec![0f32; 4];
+        gather_rows_into_parallel(&table, 4, &[9], &mut one, 8).unwrap();
+        assert_eq!(one, &table[36..40]);
+    }
+
+    #[test]
+    fn parallel_gather_worker_panic_surfaces_as_pipeline_error() {
+        // Row 99 is out of range for a 10-row table: the owning worker's
+        // slice index panics, which must come back as Error::Pipeline —
+        // not a hang, not a process abort.
+        let table: Vec<f32> = (0..10 * 4).map(|i| i as f32).collect();
+        let idx: Vec<u32> = vec![0, 1, 2, 3, 99, 5, 6, 7];
+        let mut out = vec![0f32; idx.len() * 4];
+        let err = gather_rows_into_parallel(&table, 4, &idx, &mut out, 4).unwrap_err();
+        match err {
+            Error::Pipeline(msg) => {
+                assert!(msg.contains("gather worker panicked"), "{msg}")
+            }
+            other => panic!("expected Error::Pipeline, got {other}"),
+        }
     }
 
     #[test]

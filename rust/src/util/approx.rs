@@ -1,0 +1,195 @@
+//! Tolerance-based float comparison (ULP distance + absolute tolerance).
+//!
+//! Everything this repo pins is *bitwise*: the eight access modes gather
+//! identical bytes, dedup and coalescing change cost only, `--precision
+//! fp32` reproduces every report exactly (DESIGN.md §13's degeneracy
+//! chain).  Quantized tiers are the first place where exact equality is
+//! the *wrong* spec — fp16/int8 runs track the fp32 loss trajectory
+//! within a documented band, not to the bit.  This module is the one
+//! sanctioned comparator for those bands, so "how close is close enough"
+//! lives in a single tested place instead of ad-hoc `(a - b).abs() < eps`
+//! scattered through tests.
+//!
+//! **ULP distance.**  Reinterpreting an IEEE 754 float's bits as a
+//! sign-magnitude integer and unfolding the negative half-line onto
+//! two's complement makes the integer distance between two finite floats
+//! equal to the number of representable values between them (their
+//! distance in Units in the Last Place).  ULP distance is scale-free —
+//! 1 ULP near 1e-30 and 1 ULP near 1e+30 are both "adjacent" — which is
+//! exactly the right ruler for "these two computations should have taken
+//! the same path up to rounding".  Near zero, however, ULPs are absurdly
+//! fine (adjacent subnormals differ by 1e-45), so [`approx_eq`] pairs the
+//! ULP bound with an absolute floor: values within `abs_tol` pass
+//! regardless of their ULP distance.
+//!
+//! ```
+//! use ptdirect::util::approx::{approx_eq, ulp_diff};
+//!
+//! assert_eq!(ulp_diff(1.0, 1.0), 0);
+//! assert_eq!(ulp_diff(1.0, 1.0 + f32::EPSILON), 1);
+//! assert!(approx_eq(1.0, 1.0 + 2.0 * f32::EPSILON, 0.0, 4));
+//! assert!(!approx_eq(1.0, 1.1, 0.0, 4));
+//! ```
+
+/// Map an `f32`'s bits onto a monotone signed integer line: positive
+/// floats keep their bit pattern, negative floats fold below zero so
+/// that integer order equals float order.  Both zeros map to 0, so the
+/// two sides of the number line join without a phantom step.
+fn monotone_bits(x: f32) -> i64 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 == 0 {
+        b as i64
+    } else {
+        -((b & 0x7FFF_FFFF) as i64)
+    }
+}
+
+/// Number of representable `f32` values between `a` and `b` (their ULP
+/// distance).  0 means bitwise equal up to the sign of zero (`-0.0` and
+/// `+0.0` are 1 apart on the monotone line but compare equal as floats,
+/// so they report 0).  Any NaN involvement reports `u64::MAX` — NaNs are
+/// never "close" to anything, including themselves.
+pub fn ulp_diff(a: f32, b: f32) -> u64 {
+    if a.is_nan() || b.is_nan() {
+        return u64::MAX;
+    }
+    if a == b {
+        // covers -0.0 == +0.0 and inf == inf
+        return 0;
+    }
+    if a.is_infinite() || b.is_infinite() {
+        // finite-vs-inf (or opposing infinities): not a rounding story.
+        return u64::MAX;
+    }
+    (monotone_bits(a) - monotone_bits(b)).unsigned_abs()
+}
+
+/// True when `a` and `b` agree within `abs_tol` *or* within `max_ulps`
+/// representable values.  The absolute arm handles the near-zero regime
+/// (where ULPs are vanishingly small) and sign-crossing noise; the ULP
+/// arm handles every other magnitude scale-freely.  NaN never compares
+/// equal; infinities compare equal only to themselves (exactly).
+pub fn approx_eq(a: f32, b: f32, abs_tol: f32, max_ulps: u64) -> bool {
+    if a.is_nan() || b.is_nan() {
+        return false;
+    }
+    if a == b {
+        return true;
+    }
+    if (a - b).abs() <= abs_tol {
+        return true;
+    }
+    ulp_diff(a, b) <= max_ulps
+}
+
+/// Slice form of [`approx_eq`]: `Ok(())` when the slices have equal
+/// length and agree element-wise, `Err(msg)` naming the first offending
+/// index with both values and their ULP distance — so a failing
+/// tolerance-band test reports *where* and *by how much*, not just
+/// `assertion failed`.
+pub fn approx_eq_slice(a: &[f32], b: &[f32], abs_tol: f32, max_ulps: u64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        if !approx_eq(x, y, abs_tol, max_ulps) {
+            return Err(format!(
+                "index {i}: {x:?} vs {y:?} (|Δ| = {:e}, {} ulps; abs_tol {abs_tol:e}, max_ulps {max_ulps})",
+                (x - y).abs(),
+                ulp_diff(x, y),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Largest ULP distance between corresponding elements (for reporting a
+/// measured band next to its documented bound).  `u64::MAX` on length
+/// mismatch or any NaN.
+pub fn max_ulp_diff(a: &[f32], b: &[f32]) -> u64 {
+    if a.len() != b.len() {
+        return u64::MAX;
+    }
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| ulp_diff(x, y))
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ulp_diff_counts_representable_steps() {
+        assert_eq!(ulp_diff(1.0, 1.0), 0);
+        // Adjacent floats are 1 ULP apart, at every scale.
+        assert_eq!(ulp_diff(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_diff(1.0, 1.0 + f32::EPSILON), 1);
+        assert_eq!(ulp_diff(1e30, f32::from_bits(1e30f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_diff(1e-38, f32::from_bits(1e-38f32.to_bits() + 1)), 1);
+        // Multiple steps accumulate.
+        assert_eq!(ulp_diff(1.0, 1.0 + 4.0 * f32::EPSILON), 4);
+        // Symmetric.
+        assert_eq!(ulp_diff(1.5, 2.5), ulp_diff(2.5, 1.5));
+    }
+
+    #[test]
+    fn ulp_diff_crosses_zero_through_subnormals() {
+        // The monotone mapping joins the halves at a shared zero:
+        // +tiny → 0 → -tiny is two steps.
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        assert_eq!(ulp_diff(tiny, -tiny), 2);
+        assert_eq!(ulp_diff(0.0, tiny), 1);
+        assert_eq!(ulp_diff(-0.0, 0.0), 0); // equal as floats
+        assert_eq!(ulp_diff(-0.0, tiny), 1);
+    }
+
+    #[test]
+    fn ulp_diff_rejects_nan_and_mixed_infinities() {
+        assert_eq!(ulp_diff(f32::NAN, f32::NAN), u64::MAX);
+        assert_eq!(ulp_diff(f32::NAN, 1.0), u64::MAX);
+        assert_eq!(ulp_diff(f32::INFINITY, 1.0), u64::MAX);
+        assert_eq!(ulp_diff(f32::INFINITY, f32::NEG_INFINITY), u64::MAX);
+        // Same infinity is exactly equal.
+        assert_eq!(ulp_diff(f32::INFINITY, f32::INFINITY), 0);
+    }
+
+    #[test]
+    fn approx_eq_combines_abs_and_ulp_arms() {
+        // ULP arm: small relative drift passes, big drift fails.
+        assert!(approx_eq(1.0, 1.0 + 2.0 * f32::EPSILON, 0.0, 2));
+        assert!(!approx_eq(1.0, 1.0 + 8.0 * f32::EPSILON, 0.0, 2));
+        // Abs arm: near-zero sign-crossing noise passes only with a floor.
+        assert!(!approx_eq(1e-9, -1e-9, 0.0, 16));
+        assert!(approx_eq(1e-9, -1e-9, 1e-8, 0));
+        // NaN never, infinity only exactly.
+        assert!(!approx_eq(f32::NAN, f32::NAN, f32::INFINITY, u64::MAX));
+        assert!(approx_eq(f32::INFINITY, f32::INFINITY, 0.0, 0));
+        assert!(!approx_eq(f32::INFINITY, 1.0, 1e30, 4));
+    }
+
+    #[test]
+    fn slice_comparator_reports_first_offender() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert!(approx_eq_slice(&a, &[1.0, 2.0, 3.0], 0.0, 0).is_ok());
+        let msg = approx_eq_slice(&a, &[1.0, 2.5, 3.0], 0.0, 4).unwrap_err();
+        assert!(msg.contains("index 1"), "{msg}");
+        assert!(
+            approx_eq_slice(&a, &[1.0, 2.0], 0.0, 0)
+                .unwrap_err()
+                .contains("length mismatch")
+        );
+    }
+
+    #[test]
+    fn max_ulp_diff_reports_worst_element() {
+        let a = [1.0f32, 2.0, 3.0];
+        let mut b = a;
+        assert_eq!(max_ulp_diff(&a, &b), 0);
+        b[1] = f32::from_bits(b[1].to_bits() + 7);
+        assert_eq!(max_ulp_diff(&a, &b), 7);
+        assert_eq!(max_ulp_diff(&a, &b[..2]), u64::MAX);
+    }
+}

@@ -6,6 +6,7 @@
 //! modules below is a from-scratch replacement scoped to exactly what this
 //! project needs.
 
+pub mod approx;
 pub mod bytes;
 pub mod logging;
 pub mod proptest;

@@ -157,6 +157,43 @@ fn injected_panics_abort_cleanly_in_every_stage() {
 }
 
 #[test]
+fn gather_worker_panic_inside_a_stage_aborts_the_pipeline_cleanly() {
+    // The parallel-gather seam under the pipeline: one item's gather runs
+    // `gather_rows_into_parallel` with an out-of-range row, so a *worker
+    // thread two levels down* panics.  The worker join converts it to
+    // `Error::Pipeline`, the stage returns Err, and the executor aborts
+    // through the same close-on-error protocol as a direct stage failure
+    // — never a hang on the dead gather stage.
+    use ptdirect::tensor::indexing::gather_rows_into_parallel;
+
+    let src = vec![1.0f32; 10 * 4];
+    let result = run_pipeline(
+        64,
+        4,
+        Ok,
+        move |b| {
+            let idx = if b == 23 {
+                vec![0u32, 1, 99, 2] // row 99 of a 10-row table
+            } else {
+                vec![0u32, 1, 2, 3]
+            };
+            let mut dst = vec![0f32; idx.len() * 4];
+            gather_rows_into_parallel(&src, 4, &idx, &mut dst, 4)?;
+            Ok(b)
+        },
+        |_f| Ok(()),
+    );
+    match result {
+        Err(Error::Pipeline(msg)) => assert!(
+            msg.contains("gather worker panicked"),
+            "worker panic payload lost: {msg}"
+        ),
+        Err(e) => panic!("unexpected error kind {e}"),
+        Ok(r) => panic!("injected worker panic vanished ({} items)", r.items),
+    }
+}
+
+#[test]
 fn unbalanced_stage_mix_keeps_exact_counts() {
     // One stage much slower than the others, all queue depths, both
     // directions — the backpressure and starvation corners.

@@ -1,0 +1,250 @@
+//! Cross-layer properties of the quantized cold-tier feature storage
+//! (`--precision fp32|fp16|int8`, DESIGN.md §13):
+//!
+//! * `fp32` is the identity — the quantized builder reproduces the plain
+//!   builder bit-for-bit (values *and* transfer costs) in all eight
+//!   access modes, so every pre-existing report is unchanged.
+//! * Quantization happens once at table build, so *within* a precision
+//!   all eight modes still share one bitwise loss trajectory — the
+//!   repo's core invariant survives narrowing.
+//! * `fp16`/`int8` trajectories track the fp32 reference inside
+//!   documented tolerance bands (the repo's first tolerance-based
+//!   equivalence, via `util::approx`), and their round-trip error obeys
+//!   the per-format bounds through the public store API.
+//! * Narrower rows strictly reduce what every transfer-paying mode
+//!   moves: link bytes in all seven paying modes, NVMe block I/Os in
+//!   storage mode.
+
+use ptdirect::config::{AccessMode, Backend, Precision, RunConfig, SystemProfile};
+use ptdirect::coordinator::Trainer;
+use ptdirect::featurestore::quant;
+use ptdirect::featurestore::FeatureStore;
+use ptdirect::util::approx::{approx_eq, approx_eq_slice};
+
+const STEPS: u32 = 8;
+
+/// Documented tolerance bands for quantized loss trajectories vs the
+/// fp32 reference (absolute, per step — see DESIGN.md §13).  fp16 keeps
+/// 11 significand bits, so per-element feature error is ~5e-4 relative;
+/// int8 rows span ~[-0.05, 1.05] giving scale ≈ 1.1/255 and per-element
+/// error ≤ scale/2 ≈ 2.2e-3 — both orders of magnitude below these
+/// bands, which absorb amplification through aggregation and softmax.
+const FP16_LOSS_TOL: f32 = 2e-2;
+const INT8_LOSS_TOL: f32 = 1.5e-1;
+
+/// Hermetic config: native backend, no artifacts needed (the
+/// `e2e_train.rs` builder with a precision knob).
+fn cfg(mode: AccessMode, precision: Precision) -> RunConfig {
+    RunConfig {
+        dataset: "product".into(),
+        arch: "sage".into(),
+        mode,
+        precision,
+        steps_per_epoch: STEPS,
+        scale: 2048,
+        feature_budget: 8 << 20,
+        seed: 42,
+        backend: Backend::Native,
+        artifacts_dir: "this-directory-does-not-exist".into(),
+        ..RunConfig::default()
+    }
+}
+
+fn epoch(c: RunConfig) -> ptdirect::coordinator::EpochReport {
+    Trainer::new(c).unwrap().run_epoch().unwrap()
+}
+
+#[test]
+fn fp32_matches_the_unquantized_builder_bit_exactly() {
+    // The pinned degeneracy link: `--precision fp32` must leave every
+    // existing report untouched, because the quantized builder with the
+    // identity format IS the plain builder.
+    let sys = SystemProfile::system1();
+    let idx: Vec<u32> = (0..300).map(|i| (i * 7) % 500).collect();
+    for mode in AccessMode::all() {
+        let plain = FeatureStore::build(500, 24, 8, mode, &sys, 42).unwrap();
+        let quantized = FeatureStore::build_quantized(
+            500,
+            24,
+            8,
+            mode,
+            &sys,
+            42,
+            Precision::Fp32,
+            None,
+            None,
+            None,
+        )
+        .unwrap();
+        let (a, ca) = plain.gather(&idx).unwrap();
+        let (b, cb) = quantized.gather(&idx).unwrap();
+        assert_eq!(a, b, "{mode:?} fp32 values diverged");
+        assert_eq!(ca.time_s, cb.time_s, "{mode:?}");
+        assert_eq!(ca.bytes_on_link, cb.bytes_on_link, "{mode:?}");
+        assert_eq!(ca.useful_bytes, cb.useful_bytes, "{mode:?}");
+        assert_eq!(ca.requests, cb.requests, "{mode:?}");
+    }
+}
+
+#[test]
+fn all_modes_share_one_loss_trajectory_at_every_precision_and_track_fp32() {
+    // Quantize-once-at-build: within a precision, all eight modes gather
+    // the same already-dequantized table, so the bitwise cross-mode
+    // equality survives narrowing; only the fp32 *reference* moves, and
+    // only within the documented band.
+    for precision in [Precision::Fp16, Precision::Int8] {
+        let tol = match precision {
+            Precision::Fp16 => FP16_LOSS_TOL,
+            _ => INT8_LOSS_TOL,
+        };
+        let mut reference: Option<(Vec<f32>, Vec<f32>)> = None;
+        for mode in AccessMode::all() {
+            let r32 = epoch(cfg(mode, Precision::Fp32));
+            let rq = epoch(cfg(mode, precision));
+            assert_eq!(rq.steps, STEPS as u64, "{mode:?} {precision:?}");
+            assert!(
+                rq.losses.iter().all(|l| l.is_finite()),
+                "{mode:?} {precision:?} non-finite loss"
+            );
+            // Band vs fp32 (abs-tol arm only: losses sit near ln(8), so
+            // the band, not ULP distance, is the spec).
+            approx_eq_slice(&r32.losses, &rq.losses, tol, 0).unwrap_or_else(|e| {
+                panic!("{mode:?} {precision:?} loss left the ±{tol} band: {e}")
+            });
+            // Bitwise across modes at this precision.
+            match &reference {
+                None => reference = Some((rq.losses.clone(), rq.accs.clone())),
+                Some((ref_losses, ref_accs)) => {
+                    assert_eq!(
+                        &rq.losses, ref_losses,
+                        "{mode:?} {precision:?} loss trajectory diverged across modes"
+                    );
+                    assert_eq!(
+                        &rq.accs, ref_accs,
+                        "{mode:?} {precision:?} accuracy trajectory diverged across modes"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn narrower_precision_strictly_reduces_link_bytes_in_every_paying_mode() {
+    // The whole point of quantized cold tiers: fp32 -> fp16 -> int8 must
+    // strictly shrink what crosses the links, in every mode that pays
+    // for transfers.  (product rows are 100 floats, so rows span 4 / 2 /
+    // 1 cachelines and even request-granular models narrow strictly.)
+    for mode in AccessMode::all() {
+        if mode == AccessMode::GpuResident {
+            continue; // priced link-free below
+        }
+        let mut bytes = Vec::new();
+        for precision in Precision::all() {
+            let mut c = cfg(mode, precision);
+            if mode == AccessMode::Sharded {
+                c.num_gpus = 4; // exercise the peer path too
+            }
+            if mode == AccessMode::Nvme {
+                c.host_frac = 0.2; // force real storage traffic
+            }
+            let r = epoch(c);
+            if mode == AccessMode::Nvme {
+                let ios = r.nvme.expect("nvme epoch reports storage stats").ios;
+                bytes.push((precision, r.bytes_on_link, Some(ios)));
+            } else {
+                bytes.push((precision, r.bytes_on_link, None));
+            }
+        }
+        for pair in bytes.windows(2) {
+            let (p_wide, b_wide, io_wide) = pair[0];
+            let (p_narrow, b_narrow, io_narrow) = pair[1];
+            assert!(
+                b_wide > b_narrow && b_narrow > 0,
+                "{mode:?}: {p_wide:?} moved {b_wide} B, {p_narrow:?} moved {b_narrow} B \
+                 (expected a strict reduction)"
+            );
+            if let (Some(iw), Some(inn)) = (io_wide, io_narrow) {
+                assert!(
+                    iw > inn && inn > 0,
+                    "{mode:?}: {p_wide:?} issued {iw} block IOs, {p_narrow:?} {inn} \
+                     (expected a strict reduction)"
+                );
+            }
+        }
+    }
+    // GPU-resident gathers never touch a link, at any precision.
+    for precision in Precision::all() {
+        assert_eq!(epoch(cfg(AccessMode::GpuResident, precision)).bytes_on_link, 0);
+    }
+}
+
+#[test]
+fn round_trip_error_bounds_hold_through_the_store() {
+    // Gather the same rows from a plain fp32 store and each quantized
+    // store; the element-wise error must obey the per-format bounds
+    // (fp16: half an fp16 ULP == 4096 f32 ULPs for normals, abs 2^-25
+    // near zero; int8: scale/2 per row).
+    let sys = SystemProfile::system1();
+    let (rows, dim) = (600usize, 100usize);
+    let idx: Vec<u32> = (0..rows as u32).collect();
+    let build = |p| {
+        FeatureStore::build_quantized(
+            rows,
+            dim,
+            8,
+            AccessMode::UnifiedAligned,
+            &sys,
+            7,
+            p,
+            None,
+            None,
+            None,
+        )
+        .unwrap()
+    };
+    let (f32_vals, _) = build(Precision::Fp32).gather(&idx).unwrap();
+
+    let (f16_vals, _) = build(Precision::Fp16).gather(&idx).unwrap();
+    for (i, (&x, &y)) in f32_vals.iter().zip(f16_vals.iter()).enumerate() {
+        assert!(
+            approx_eq(x, y, 3.0e-8, 4096),
+            "fp16 element {i}: {x} -> {y} exceeds half-ULP bound"
+        );
+    }
+
+    let (i8_vals, _) = build(Precision::Int8).gather(&idx).unwrap();
+    for (r, (orig, quantized)) in f32_vals
+        .chunks_exact(dim)
+        .zip(i8_vals.chunks_exact(dim))
+        .enumerate()
+    {
+        // Recompute the row's affine params from the fp32 original —
+        // the same data the builder derived them from.
+        let p = quant::int8_row_params(orig);
+        let bound = p.scale * 0.5 * (1.0 + 1e-5) + 1e-7;
+        for (i, (&x, &y)) in orig.iter().zip(quantized.iter()).enumerate() {
+            assert!(
+                (x - y).abs() <= bound,
+                "int8 row {r} element {i}: {x} -> {y} exceeds scale/2 = {bound}"
+            );
+        }
+    }
+}
+
+#[test]
+fn quantized_training_still_learns() {
+    // The band test bounds per-step drift; this pins the end-to-end
+    // claim that int8 features remain *useful* — the loss still falls
+    // across epochs, as it does for fp32.
+    let mut t = Trainer::new(cfg(AccessMode::UnifiedAligned, Precision::Int8)).unwrap();
+    let first = t.run_epoch().unwrap().mean_loss();
+    let mut last = first;
+    for _ in 0..4 {
+        last = t.run_epoch().unwrap().mean_loss();
+    }
+    assert!(
+        last < first,
+        "int8 mean loss did not improve across epochs: {first} -> {last}"
+    );
+}
