@@ -14,7 +14,11 @@
 //!    legacy promotion-off tiered replay bit-exactly (the refactor
 //!    anchor), and a full-size cache hits on every access;
 //!  * every cell's internal gather pins balance (`pins == unpins`,
-//!    nothing blocked) and residency stays within the page budget.
+//!    nothing blocked) and residency stays within the page budget;
+//!  * a `--precision` axis (fp32/fp16/int8 storage, DESIGN.md §13) over
+//!    one representative cell: hit rates must be precision-invariant
+//!    (placement is row-count based, bytes never steer residency) and
+//!    warm transfer time must be non-increasing as storage narrows.
 //!
 //! Emits `BENCH_cache.json` — one record per grid cell, derived purely
 //! from simulated quantities, so back-to-back runs are byte-identical
@@ -23,7 +27,7 @@
 mod bench_common;
 
 use bench_common::{expect, replay, scaled, skewed_trace, static_tier_cfg};
-use ptdirect::config::{EvictionPolicy, SystemProfile};
+use ptdirect::config::{AccessMode, EvictionPolicy, Precision, SystemProfile};
 use ptdirect::coordinator::report::{ms, pct, Table};
 use ptdirect::featurestore::{degree_ranking, FeatureStore, TierConfig, TierStats};
 use ptdirect::graph::generator::{rmat, RmatParams};
@@ -151,13 +155,85 @@ fn main() {
     }
     t.print();
 
+    // ---- precision axis (DESIGN.md §13) over one representative cell ----
+    // Storage precision must never steer placement: the static/page-8/
+    // hot-0.25 cell replays with bitwise-identical hit rates at every
+    // precision, while the warm transfer time can only shrink as the
+    // cold-path row narrows.
+    let mut pt = Table::new(
+        "Cache sweep precision axis — static, 8-row pages, hot 0.25",
+        &["precision", "hit cold", "hit warm", "xfer ms"],
+    );
+    let mut precision_rows = Vec::new();
+    let mut precision_invariant = true;
+    let mut narrowing_monotone = true;
+    let mut ref_hits: Option<(f64, f64)> = None;
+    let mut prev_time = f64::INFINITY;
+    for precision in Precision::all() {
+        let cfg = TierConfig {
+            page_rows: 8,
+            eviction: EvictionPolicy::Static,
+            ..static_tier_cfg(0.25, ranking.clone())
+        };
+        let store = FeatureStore::build_quantized(
+            NODES,
+            DIM,
+            CLASSES,
+            AccessMode::Tiered,
+            &SystemProfile::system1(),
+            SEED,
+            precision,
+            Some(cfg),
+            None,
+            None,
+        )
+        .expect("quantized tiered store");
+        let (_, cold) = epoch(&store, &trace);
+        let (time, warm) = epoch(&store, &trace);
+        match ref_hits {
+            None => ref_hits = Some((cold.hit_rate(), warm.hit_rate())),
+            Some(r) => precision_invariant &= r == (cold.hit_rate(), warm.hit_rate()),
+        }
+        narrowing_monotone &= time <= prev_time;
+        prev_time = time;
+        pt.row(&[
+            precision.label().into(),
+            pct(cold.hit_rate()),
+            pct(warm.hit_rate()),
+            ms(time),
+        ]);
+        precision_rows.push(format!(
+            "    {{\"precision\": {}, \"hit_rate_cold\": {:.6}, \"hit_rate_warm\": {:.6}, \
+             \"transfer_ms_warm\": {:.6}}}",
+            json_str(precision.label()),
+            cold.hit_rate(),
+            warm.hit_rate(),
+            time * 1e3,
+        ));
+    }
+    pt.print();
+
     let json = format!(
         "{{\n  \"bench\": \"cache_sweep\", \"nodes\": {NODES}, \"dim\": {DIM}, \
-         \"batches\": {batches}, \"batch_rows\": {BATCH_ROWS},\n  \"cells\": [\n{}\n  ]\n}}\n",
-        json_rows.join(",\n")
+         \"batches\": {batches}, \"batch_rows\": {BATCH_ROWS},\n  \"cells\": [\n{}\n  ],\n  \
+         \"precision_cells\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n"),
+        precision_rows.join(",\n")
     );
     std::fs::write("BENCH_cache.json", &json).expect("write BENCH_cache.json");
-    println!("wrote BENCH_cache.json ({} cells)", json_rows.len());
+    println!(
+        "wrote BENCH_cache.json ({} cells + {} precision cells)",
+        json_rows.len(),
+        precision_rows.len()
+    );
+    expect(
+        precision_invariant,
+        "hit rates are precision-invariant (placement never follows bytes)",
+    );
+    expect(
+        narrowing_monotone,
+        "warm transfer time non-increasing as storage precision narrows",
+    );
 
     // ---- structural checks ----
     expect(books_balance, "gather pins balance in every cell (pins == unpins, none blocked)");

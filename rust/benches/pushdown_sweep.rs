@@ -1,0 +1,258 @@
+//! Push-down sweep — aggregation push-down (`--aggregate-pushdown`,
+//! DESIGN.md §14) over a fanout × access-mode × precision grid.
+//!
+//! For every cell the bench prices each batch twice against the *same*
+//! pre-batch tier state: the pushed-down stream (per-destination partial
+//! aggregates + counts, `FeatureStore::pushdown_cost` before the physical
+//! gather) and the raw deduplicated gather the trainer would otherwise
+//! pay.  Checks:
+//!
+//!  * strict link-byte reduction in every transfer-paying cell — all
+//!    modes except `gpu` (nothing crosses a link either way) and `uvm`
+//!    (the fault machinery cannot be re-run read-only; DESIGN.md §14
+//!    documents the ideal-link compromise, so uvm is priced but not
+//!    gated);
+//!  * `gpu` ships zero bytes raw *and* pushed;
+//!  * near-memory FLOPs equal off-GPU neighbor slots × feature dim in
+//!    every cell;
+//!  * row accounting (dst / neighbor / aggregate rows) is precision-
+//!    invariant — narrowing storage moves bytes, never classification;
+//!  * the measured pinned-order reduction is bitwise identical across
+//!    all eight modes at each precision;
+//!  * dedup × pushdown compose: dedup shrinks the self stream, leaves
+//!    the aggregate stream untouched, and the composed cost still beats
+//!    the raw deduplicated gather.
+//!
+//! Emits `BENCH_pushdown.json` — every field derives from simulated
+//! quantities under fixed seeds, so back-to-back runs are byte-identical
+//! (the CI smoke loop diffs two digests).
+
+mod bench_common;
+
+use bench_common::{expect, scaled};
+use ptdirect::config::{AccessMode, Precision, ShardPolicy, SystemProfile};
+use ptdirect::coordinator::report::{ratio, Table};
+use ptdirect::featurestore::{
+    degree_ranking, FeatureStore, NvmeStoreConfig, ShardConfig, TierConfig,
+};
+use ptdirect::graph::generator::{rmat, RmatParams};
+use ptdirect::sampler::{AggregatePlan, GatherPlan, MiniBatch, NeighborSampler};
+use ptdirect::util::bytes::human_bytes;
+use ptdirect::util::rng::Rng;
+
+const NODES: usize = 4000;
+const EDGES: usize = 40_000;
+const DIM: usize = 64;
+const CLASSES: u32 = 16;
+const SEEDS_PER_BATCH: usize = 64;
+const SEED: u64 = 42;
+
+const FANOUTS: [usize; 3] = [4, 8, 16];
+
+/// Minimal JSON string escape (labels here are plain ASCII).
+fn json_str(s: &str) -> String {
+    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
+/// Static (promotion-off) placement everywhere, so the raw-vs-pushed
+/// comparison replays against identical residency in every cell.
+fn build_store(mode: AccessMode, precision: Precision, ranking: &[u32]) -> FeatureStore {
+    let sys = SystemProfile::system1();
+    let tier = |hot: f64| TierConfig {
+        hot_frac: hot,
+        reserve_bytes: 0,
+        promote: false,
+        ranking: Some(ranking.to_vec()),
+        ..TierConfig::default()
+    };
+    let (tc, sc, nc) = match mode {
+        AccessMode::Tiered => (Some(tier(0.25)), None, None),
+        AccessMode::Sharded => (
+            None,
+            Some(ShardConfig { num_gpus: 4, policy: ShardPolicy::Hash, tier: tier(0.5) }),
+            None,
+        ),
+        AccessMode::Nvme => (None, None, Some(NvmeStoreConfig { host_frac: 0.9, tier: tier(0.1) })),
+        _ => (None, None, None),
+    };
+    FeatureStore::build_quantized(NODES, DIM, CLASSES, mode, &sys, SEED, precision, tc, sc, nc)
+        .expect("store")
+}
+
+fn main() {
+    let batches = scaled(6usize, 2);
+    let graph = rmat(NODES, EDGES, RmatParams::default(), 0x71E5).expect("graph");
+    let ranking = degree_ranking(&graph);
+
+    // One trace per fanout, shared across every (mode, precision) cell so
+    // cross-cell comparisons see identical batches.
+    let traces: Vec<Vec<MiniBatch>> = FANOUTS
+        .iter()
+        .map(|&fo| {
+            let sampler = NeighborSampler::new(&graph, &[fo], CLASSES);
+            let mut rng = Rng::new(0xA11CE ^ fo as u64);
+            (0..batches)
+                .map(|_| {
+                    let seeds: Vec<u32> = (0..SEEDS_PER_BATCH)
+                        .map(|_| rng.gen_range(NODES as u64) as u32)
+                        .collect();
+                    sampler.sample(&seeds, &mut rng)
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut t = Table::new(
+        &format!(
+            "Push-down sweep — {batches} x {SEEDS_PER_BATCH}-seed batches, \
+             {NODES} x {DIM} table (System1, dedup on)"
+        ),
+        &["mode", "prec", "fanout", "raw link", "pushed link", "reduction", "nm MFLOP"],
+    );
+    let mut json_rows = Vec::new();
+    let mut strict_reduction = true;
+    let mut gpu_ships_nothing = true;
+    let mut flops_match = true;
+    let mut rows_precision_invariant = true;
+    let mut reduction_bitwise = true;
+    // Row accounting from the fp32 pass, keyed by (mode, fanout) position.
+    let mut fp32_rows: Vec<Vec<(u64, u64, u64)>> = Vec::new();
+    // Reference reduction bits per precision (set by the first mode seen).
+    let mut agg_ref: Vec<Option<Vec<u32>>> = vec![None; Precision::all().len()];
+
+    for (mi, &mode) in AccessMode::all().iter().enumerate() {
+        for (pi, &precision) in Precision::all().iter().enumerate() {
+            for (fi, &fo) in FANOUTS.iter().enumerate() {
+                let store = build_store(mode, precision, &ranking);
+                let mut raw_bytes = 0u64;
+                let mut pushed_bytes = 0u64;
+                let mut nm_flops = 0u64;
+                let mut dst_rows = 0u64;
+                let mut nbr_rows = 0u64;
+                let mut agg_rows = 0u64;
+                for (bi, mb) in traces[fi].iter().enumerate() {
+                    let plan = AggregatePlan::build(mb).expect("plan");
+                    // Price the pushed stream BEFORE the physical gather:
+                    // classification must see the pre-batch tier state the
+                    // raw gather's own classifier sees.
+                    let pd = store.pushdown_cost(&plan, true).expect("pushdown");
+                    let gplan = GatherPlan::build(&mb.src_nodes);
+                    let mut x0 = vec![0f32; gplan.requested_rows() * DIM];
+                    let raw = store.gather_planned(&gplan, &mut x0).expect("gather");
+                    raw_bytes += raw.bytes_on_link;
+                    pushed_bytes += pd.cost.bytes_on_link;
+                    nm_flops += pd.near_mem_flops;
+                    dst_rows += pd.dst_rows;
+                    nbr_rows += pd.neighbor_rows;
+                    agg_rows += pd.agg_rows;
+                    flops_match &= pd.near_mem_flops == pd.off_gpu_neighbor_rows * DIM as u64;
+                    if bi == 0 && fi == 0 {
+                        // The measured pinned-order reduction must be
+                        // bitwise identical in every mode (same precision).
+                        let mut agg = vec![0f32; plan.n_dst() * DIM];
+                        let mut counts = vec![0u32; plan.n_dst()];
+                        plan.aggregate_gathered(&x0, DIM, &mut agg, &mut counts).expect("reduce");
+                        let bits: Vec<u32> = agg.iter().map(|v| v.to_bits()).collect();
+                        match &agg_ref[pi] {
+                            None => agg_ref[pi] = Some(bits),
+                            Some(r) => reduction_bitwise &= &bits == r,
+                        }
+                    }
+                }
+                match mode {
+                    AccessMode::GpuResident => {
+                        gpu_ships_nothing &= raw_bytes == 0 && pushed_bytes == 0;
+                    }
+                    AccessMode::Uvm => {} // priced, not gated (DESIGN.md §14)
+                    _ => strict_reduction &= pushed_bytes < raw_bytes,
+                }
+                if precision == Precision::Fp32 {
+                    if fp32_rows.len() == mi {
+                        fp32_rows.push(Vec::new());
+                    }
+                    fp32_rows[mi].push((dst_rows, nbr_rows, agg_rows));
+                } else {
+                    rows_precision_invariant &=
+                        fp32_rows[mi][fi] == (dst_rows, nbr_rows, agg_rows);
+                }
+                let reduction =
+                    if pushed_bytes == 0 { 1.0 } else { raw_bytes as f64 / pushed_bytes as f64 };
+                t.row(&[
+                    mode.label().into(),
+                    precision.label().into(),
+                    fo.to_string(),
+                    human_bytes(raw_bytes),
+                    human_bytes(pushed_bytes),
+                    ratio(reduction),
+                    format!("{:.1}", nm_flops as f64 / 1e6),
+                ]);
+                json_rows.push(format!(
+                    "    {{\"mode\": {}, \"precision\": {}, \"fanout\": {}, \
+                     \"raw_bytes_on_link\": {}, \"pushed_bytes_on_link\": {}, \
+                     \"reduction\": {:.6}, \"dst_rows\": {}, \"neighbor_rows\": {}, \
+                     \"agg_rows\": {}, \"near_mem_flops\": {}}}",
+                    json_str(mode.label()),
+                    json_str(precision.label()),
+                    fo,
+                    raw_bytes,
+                    pushed_bytes,
+                    reduction,
+                    dst_rows,
+                    nbr_rows,
+                    agg_rows,
+                    nm_flops,
+                ));
+            }
+        }
+    }
+    t.print();
+
+    let json = format!(
+        "{{\n  \"bench\": \"pushdown_sweep\", \"nodes\": {NODES}, \"dim\": {DIM}, \
+         \"batches\": {batches}, \"seeds_per_batch\": {SEEDS_PER_BATCH},\n  \"cells\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    std::fs::write("BENCH_pushdown.json", &json).expect("write BENCH_pushdown.json");
+    println!("wrote BENCH_pushdown.json ({} cells)", json_rows.len());
+
+    // ---- structural checks ----
+    expect(
+        strict_reduction,
+        "pushed stream strictly cuts link bytes in every transfer-paying cell",
+    );
+    expect(gpu_ships_nothing, "gpu-resident ships zero link bytes raw and pushed");
+    expect(flops_match, "near-memory FLOPs == off-GPU neighbor slots x dim in every cell");
+    expect(
+        rows_precision_invariant,
+        "dst/neighbor/aggregate row accounting is precision-invariant",
+    );
+    expect(
+        reduction_bitwise,
+        "pinned-order reduction is bitwise identical across all modes at each precision",
+    );
+
+    // ---- dedup x pushdown composition (duplicated destinations) ----
+    let store = build_store(AccessMode::UnifiedAligned, Precision::Fp32, &ranking);
+    let sampler = NeighborSampler::new(&graph, &[8], CLASSES);
+    let mut rng = Rng::new(0xD0D0);
+    let seeds: Vec<u32> = (0..SEEDS_PER_BATCH as u32).map(|i| (i % 9) * 17 % NODES as u32).collect();
+    let mb = sampler.sample(&seeds, &mut rng);
+    let plan = AggregatePlan::build(&mb).expect("plan");
+    let pd_no = store.pushdown_cost(&plan, false).expect("pushdown");
+    let pd_de = store.pushdown_cost(&plan, true).expect("pushdown dedup");
+    let gplan = GatherPlan::build(&mb.src_nodes);
+    let mut x0 = vec![0f32; gplan.requested_rows() * DIM];
+    let raw_de = store.gather_planned(&gplan, &mut x0).expect("gather");
+    expect(
+        pd_de.self_bytes_on_link < pd_no.self_bytes_on_link,
+        "dedup shrinks the pushed self stream on duplicated destinations",
+    );
+    expect(
+        pd_de.agg_bytes_on_link == pd_no.agg_bytes_on_link,
+        "dedup leaves the aggregate stream untouched",
+    );
+    expect(
+        pd_de.cost.bytes_on_link < raw_de.bytes_on_link,
+        "dedup x pushdown still strictly beats the raw deduplicated gather",
+    );
+}

@@ -245,6 +245,15 @@ pub fn run_config_from(args: &Args) -> Result<RunConfig> {
         cfg.precision = crate::config::Precision::parse(p)
             .ok_or_else(|| Error::Config(format!("unknown precision `{p}`")))?;
     }
+    // `--aggregate-pushdown` re-enables after a TOML
+    // `aggregate_pushdown = false`; `--no-pushdown` wins when both are
+    // given (the bit-exact pre-pushdown regression anchor).
+    if args.flag("aggregate-pushdown") {
+        cfg.aggregate_pushdown = true;
+    }
+    if args.flag("no-pushdown") {
+        cfg.aggregate_pushdown = false;
+    }
     // `--system` replaced the whole profile above; restore the TOML's (and
     // the CLI's) NVLink/NVMe overrides on top of the selected profile.
     cfg.apply_link_overrides();
@@ -377,6 +386,26 @@ PRECISION TIERS (all modes):
                                fp32 is a bit-exact no-op — the
                                degeneracy-chain anchor
 
+AGGREGATION PUSH-DOWN (all modes; default off):
+  Each tier reduces the neighbor rows it already holds into per-
+  destination partial sums *near the data* (after GNNear,
+  arXiv:2111.00680) and ships one partial-aggregate row plus a 4-byte
+  neighbor count per destination instead of every raw neighbor row, so
+  link traffic shrinks by roughly the fanout.  The destination (self)
+  rows still pay the mode's normal per-row price — and still dedup, so
+  push-down composes multiplicatively with --dedup.  The reduction is
+  computed once from the gathered block in a pinned canonical order
+  (ascending neighbor id per destination), so losses are bitwise
+  identical with the knob on or off, in all eight access modes at every
+  --precision.
+  --aggregate-pushdown  price near-memory aggregation push-down
+  --no-pushdown         ship raw neighbor rows (default; bit-exact
+                        pre-pushdown accounting — the regression anchor)
+  Per-epoch reporting gains a pushdown line: raw vs shipped link bytes,
+  the traffic-reduction factor, and the near-memory FLOPs the tiers
+  performed (charged at the profile's near-memory compute rate, and as
+  power draw against its near-memory budget).
+
 NVME STORAGE MODE (--mode nvme):
   For feature tables bigger than host memory (GIDS, arXiv:2306.16384):
   host memory holds only the hottest --host-frac of the rows (by degree
@@ -460,6 +489,21 @@ fn cmd_train(args: &Args) -> Result<()> {
                 r.dedup.unique_rows,
                 ratio(r.dedup.ratio()),
                 human_bytes(r.dedup.bytes_saved),
+            );
+        }
+        if r.pushdown.enabled {
+            let p = &r.pushdown;
+            println!(
+                "  pushdown: link {} raw -> {} shipped ({} reduction), {} neighbor rows -> \
+                 {} aggregate rows for {} dsts, near-mem {:.1} MFLOP ({} ms)",
+                human_bytes(p.raw_bytes_on_link),
+                human_bytes(p.pushed_bytes_on_link),
+                ratio(p.reduction()),
+                p.neighbor_rows,
+                p.agg_rows,
+                p.dst_rows,
+                p.near_mem_flops as f64 / 1e6,
+                ms(p.near_mem_s),
             );
         }
         if let Some(tier) = &r.tier {
@@ -564,6 +608,16 @@ fn cmd_infer(args: &Args) -> Result<()> {
         ms(r.breakdown_sim.transfer_s),
         ms(r.breakdown_sim.train_s),
     );
+    if r.pushdown.enabled {
+        let p = &r.pushdown;
+        println!(
+            "pushdown: link {} raw -> {} shipped ({} reduction), near-mem {:.1} MFLOP",
+            human_bytes(p.raw_bytes_on_link),
+            human_bytes(p.pushed_bytes_on_link),
+            ratio(p.reduction()),
+            p.near_mem_flops as f64 / 1e6,
+        );
+    }
     Ok(())
 }
 
@@ -613,6 +667,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ms(b.train_s),
         r.bound_by.label(),
     );
+    if r.pushdown.enabled {
+        let p = &r.pushdown;
+        println!(
+            "pushdown: link {} raw -> {} shipped ({} reduction, per-request aggregates), \
+             near-mem {:.1} MFLOP",
+            human_bytes(p.raw_bytes_on_link),
+            human_bytes(p.pushed_bytes_on_link),
+            ratio(p.reduction()),
+            p.near_mem_flops as f64 / 1e6,
+        );
+    }
     Ok(())
 }
 
@@ -1182,6 +1247,44 @@ mod tests {
     fn help_documents_precision() {
         assert!(HELP.contains("--precision fp32|fp16|int8"));
         assert!(HELP.contains("scale+zero-point"));
+    }
+
+    #[test]
+    fn pushdown_cli_flags() {
+        let cfg = run_config_from(&Args::parse(&sv(&["train"])).unwrap()).unwrap();
+        assert!(!cfg.aggregate_pushdown, "pushdown must default off");
+        let a = Args::parse(&sv(&["train", "--aggregate-pushdown"])).unwrap();
+        assert!(run_config_from(&a).unwrap().aggregate_pushdown);
+        // --no-pushdown wins over --aggregate-pushdown (the regression
+        // anchor escape hatch, mirroring --no-dedup).
+        let a = Args::parse(&sv(&["train", "--aggregate-pushdown", "--no-pushdown"])).unwrap();
+        assert!(!run_config_from(&a).unwrap().aggregate_pushdown);
+    }
+
+    #[test]
+    fn pushdown_cli_overrides_toml() {
+        let dir = std::env::temp_dir()
+            .join(format!("ptdirect_pushdown_override_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.toml");
+        std::fs::write(&path, "[run]\naggregate_pushdown = true\n").unwrap();
+        let a = Args::parse(&sv(&[
+            "train",
+            "--config",
+            path.to_str().unwrap(),
+            "--no-pushdown",
+        ]))
+        .unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(!cfg.aggregate_pushdown, "--no-pushdown must override TOML");
+    }
+
+    #[test]
+    fn help_documents_pushdown() {
+        assert!(HELP.contains("--aggregate-pushdown"));
+        assert!(HELP.contains("--no-pushdown"));
+        assert!(HELP.contains("AGGREGATION PUSH-DOWN"));
     }
 
     #[test]

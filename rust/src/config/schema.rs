@@ -414,6 +414,17 @@ pub struct RunConfig {
     /// `Fp32` (the default) is the identity format and reproduces all
     /// pre-precision reports bit-exactly.
     pub precision: Precision,
+    /// Near-memory aggregation push-down (GNNear, arXiv:2111.00680;
+    /// DESIGN.md §14): each tier computes per-destination partial sums
+    /// over its locally-resident layer-0 neighbor rows and ships one
+    /// partial-aggregate row (plus a 4 B count) per destination instead
+    /// of `fanout` raw rows — every cost model reprices the aggregate
+    /// stream and a near-memory compute term joins the power model.
+    /// Numerics are untouched (the physical gather still runs; the
+    /// reduction order is pinned to ascending global neighbor id), so
+    /// loss trajectories stay bitwise identical.  Off by default;
+    /// `--no-pushdown` reproduces every pre-pushdown report bit-exactly.
+    pub aggregate_pushdown: bool,
 }
 
 impl Default for RunConfig {
@@ -458,6 +469,7 @@ impl Default for RunConfig {
             coalesce: true,
             coalesce_limit: 8,
             precision: Precision::Fp32,
+            aggregate_pushdown: false,
         }
     }
 }
@@ -654,6 +666,9 @@ impl RunConfig {
         if let Some(v) = doc.get_str("run.precision") {
             cfg.precision = Precision::parse(v)
                 .ok_or_else(|| Error::Config(format!("unknown precision `{v}`")))?;
+        }
+        if let Some(v) = doc.get_bool("run.aggregate_pushdown") {
+            cfg.aggregate_pushdown = v;
         }
         cfg.apply_link_overrides();
         cfg.validate()?;
@@ -1139,6 +1154,27 @@ coalesce_limit = 4
         let cfg = RunConfig::from_toml("[run]\nprecision = \"int8\"").unwrap();
         assert_eq!(cfg.precision, Precision::Int8);
         assert!(RunConfig::from_toml("[run]\nprecision = \"bf16\"").is_err());
+    }
+
+    #[test]
+    fn pushdown_knob_parses_and_defaults_off() {
+        assert!(
+            !RunConfig::default().aggregate_pushdown,
+            "pushdown must default off (the bit-exact anchor)"
+        );
+        let cfg = RunConfig::from_toml("[run]\naggregate_pushdown = true").unwrap();
+        assert!(cfg.aggregate_pushdown);
+        let cfg = RunConfig::from_toml("[run]\naggregate_pushdown = false").unwrap();
+        assert!(!cfg.aggregate_pushdown);
+    }
+
+    #[test]
+    fn empty_fanouts_rejected_with_clear_error() {
+        // The empty-fanout satellite: `fanouts = []` must be a config
+        // error with a clear message, not a panic in the sampler.
+        let err = RunConfig::from_toml("[run]\nfanouts = []").unwrap_err();
+        assert!(err.to_string().contains("fanouts must be non-empty"), "{err}");
+        assert!(RunConfig::from_toml("[run]\nfanouts = [5, 0]").is_err());
     }
 
     #[test]

@@ -102,6 +102,11 @@ pub struct PowerProfile {
     /// NVMe SSD max additional draw over idle at 100% read utilization
     /// (the `Nvme` storage tier's active power; DESIGN.md §8).
     pub ssd_max_w: f64,
+    /// Near-memory aggregation engine max additional draw at 100%
+    /// utilization (the `--aggregate-pushdown` reduction units on the
+    /// host/peer/storage side; GNNear-class DIMM engines draw an order of
+    /// magnitude less than the GPU board — DESIGN.md §14).
+    pub near_mem_max_w: f64,
 }
 
 impl PowerProfile {
@@ -146,6 +151,11 @@ pub struct SystemProfile {
     /// Achieved fraction of peak for small-batch GNN kernels (GNN training
     /// is notoriously memory-bound; 10-20% is typical for these models).
     pub gpu_efficiency: f64,
+    /// Near-memory reduction throughput, FLOP/s — the aggregate rate of
+    /// the memory-side sum units `--aggregate-pushdown` runs on (GNNear's
+    /// DIMM-side accelerators; DESIGN.md §14).  Deliberately below
+    /// `gpu_fp32_flops`: push-down trades compute rate for link bytes.
+    pub near_mem_fp32_flops: f64,
     /// Host-side graph work (sampling, subgraph construction) per examined
     /// edge, seconds — multithreaded DGL dataloader equivalent.
     pub sample_s_per_edge: f64,
@@ -189,6 +199,7 @@ impl SystemProfile {
             uvm_page_bytes: 4096,
             gpu_fp32_flops: 12.1e12,
             gpu_efficiency: 0.12,
+            near_mem_fp32_flops: 2.0e12,
             sample_s_per_edge: 28e-9,
             pcie: PcieConfig {
                 peak_bw: 15.75e9, // PCIe 3.0 x16
@@ -220,6 +231,7 @@ impl SystemProfile {
                 gpu_max_w: 250.0,
                 io_max_w: 25.0,
                 ssd_max_w: 9.0,
+                near_mem_max_w: 12.0,
             },
         }
     }
@@ -243,6 +255,7 @@ impl SystemProfile {
             uvm_page_bytes: 4096,
             gpu_fp32_flops: 14.9e12,
             gpu_efficiency: 0.12,
+            near_mem_fp32_flops: 2.4e12,
             sample_s_per_edge: 35e-9,
             pcie: PcieConfig {
                 peak_bw: 15.75e9,
@@ -275,6 +288,7 @@ impl SystemProfile {
                 gpu_max_w: 300.0,
                 io_max_w: 25.0,
                 ssd_max_w: 12.0,
+                near_mem_max_w: 15.0,
             },
         }
     }
@@ -296,6 +310,7 @@ impl SystemProfile {
             uvm_page_bytes: 4096,
             gpu_fp32_flops: 5.0e12,
             gpu_efficiency: 0.12,
+            near_mem_fp32_flops: 1.6e12,
             sample_s_per_edge: 60e-9,
             pcie: PcieConfig {
                 peak_bw: 15.75e9,
@@ -327,6 +342,7 @@ impl SystemProfile {
                 gpu_max_w: 120.0,
                 io_max_w: 20.0,
                 ssd_max_w: 6.0,
+                near_mem_max_w: 10.0,
             },
         }
     }
@@ -402,6 +418,26 @@ mod tests {
         // SSD active power is its own affine term, clamped like the rest.
         assert!(p.watts(0.0, 0.0, 0.0, 1.0) > p.watts(0.0, 0.0, 0.0, 0.0));
         assert_eq!(p.watts(0.0, 0.0, 0.0, 5.0), p.watts(0.0, 0.0, 0.0, 1.0));
+    }
+
+    #[test]
+    fn near_memory_engine_is_modest_on_every_profile() {
+        // Push-down's premise: the memory-side reduction units are slower
+        // and far lower-power than the GPU — the win is link bytes, not
+        // compute.  Both constants must stay strictly below their GPU
+        // counterparts or the cost model's trade-off inverts.
+        for s in SystemProfile::all() {
+            assert!(
+                s.near_mem_fp32_flops > 0.0 && s.near_mem_fp32_flops < s.gpu_fp32_flops,
+                "{}: near-mem FLOPs must sit below the GPU's",
+                s.name
+            );
+            assert!(
+                s.power.near_mem_max_w > 0.0 && s.power.near_mem_max_w < s.power.gpu_max_w / 5.0,
+                "{}: near-mem power must be a small fraction of the GPU board",
+                s.name
+            );
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ use std::path::Path;
 
 use crate::config::{Backend, RunConfig};
 use crate::coordinator::costmodel::{ComputeModel, DEFAULT_HIDDEN};
-use crate::coordinator::trainer::Breakdown;
+use crate::coordinator::trainer::{Breakdown, PushdownReport};
 use crate::error::{Error, Result};
 use crate::featurestore::FeatureStore;
 use crate::graph::{Csr, DatasetPreset};
@@ -41,6 +41,10 @@ pub struct InferenceReport {
     /// transfer + execute estimate).
     pub sim_latency: Summary,
     pub breakdown_sim: Breakdown,
+    /// Aggregation push-down accounting (`--aggregate-pushdown`,
+    /// DESIGN.md §14): raw vs pushed-down link bytes and the near-memory
+    /// reduction work, accumulated over all batches.
+    pub pushdown: PushdownReport,
 }
 
 /// Execution backend for the forward pass.
@@ -86,6 +90,10 @@ impl InferenceRunner {
     /// Build the stack; load `{arch}_{dataset}_infer` or fall back to the
     /// native forward model per the backend selection rules above.
     pub fn new(cfg: RunConfig) -> Result<InferenceRunner> {
+        // Programmatic configs bypass the CLI's validation pass; reject
+        // impossible shapes (e.g. empty `fanouts`) before the sampler
+        // can panic on them.
+        cfg.validate()?;
         let mut preset = DatasetPreset::by_abbv(&cfg.dataset)
             .ok_or_else(|| Error::Config(format!("unknown dataset `{}`", cfg.dataset)))?;
         crate::coordinator::trainer::apply_classes_override(&cfg, &mut preset);
@@ -137,12 +145,13 @@ impl InferenceRunner {
                 "backend: native forward model (softmax over roots) — no AOT \
                  artifacts needed"
             );
-            let state = NativeTrainState::init(
+            let mut state = NativeTrainState::init(
                 preset.feat_dim as usize,
                 preset.classes,
                 native::DEFAULT_LR,
                 cfg.seed ^ 0x9A23,
             );
+            state.set_workers(cfg.sampler_workers.max(1));
             let compute = ComputeModel::from_shape(
                 &cfg.arch,
                 cfg.batch,
@@ -175,6 +184,7 @@ impl InferenceRunner {
         let sampler = NeighborSampler::new(&self.graph, &self.cfg.fanouts, self.preset.classes);
         let mut rng = self.rng.fork(1);
         let mut report = InferenceReport::default();
+        report.pushdown.enabled = self.cfg.aggregate_pushdown;
         let mut correct = 0u64;
         let mut total = 0u64;
         let n_nodes = self.graph.num_nodes();
@@ -187,12 +197,38 @@ impl InferenceRunner {
                 .map(|k| ((b as usize * self.cfg.batch + k) % n_nodes) as u32)
                 .collect();
             let mb = sampler.sample(&seeds, &mut rng);
+            // Push-down prices the batch before the physical gather
+            // mutates tier state (read-only, pre-batch classification —
+            // the trainer's ordering, DESIGN.md §14).
+            let pd = if self.cfg.aggregate_pushdown {
+                let plan = crate::sampler::AggregatePlan::build(&mb)?;
+                Some(self.store.pushdown_cost(&plan, self.cfg.dedup)?)
+            } else {
+                None
+            };
             // Serving uses the same dedup plan as training: fetch each
             // distinct row once, scatter back (bitwise-identical x0).
-            let cost = if self.cfg.dedup {
+            let raw_cost = if self.cfg.dedup {
                 self.store.gather_planned(&mb.compact(), &mut x0)?
             } else {
                 self.store.gather_into(&mb.src_nodes, &mut x0)?
+            };
+            // Pushed-down batches pay the pushed cost; the raw costing
+            // rides along for the reduction factor.
+            let cost = match pd {
+                Some(p) => {
+                    let r = &mut report.pushdown;
+                    r.raw_bytes_on_link += raw_cost.bytes_on_link;
+                    r.pushed_bytes_on_link += p.cost.bytes_on_link;
+                    r.agg_bytes_on_link += p.agg_bytes_on_link;
+                    r.dst_rows += p.dst_rows;
+                    r.neighbor_rows += p.neighbor_rows;
+                    r.agg_rows += p.agg_rows;
+                    r.near_mem_flops += p.near_mem_flops;
+                    r.near_mem_s += p.near_mem_s;
+                    p.cost
+                }
+                None => raw_cost,
             };
 
             let t_exec = Timer::start();

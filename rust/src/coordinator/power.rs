@@ -37,6 +37,9 @@ pub struct PowerReport {
     pub io_util: f64,
     /// NVMe read utilization (the `Nvme` storage tier; zero elsewhere).
     pub storage_util: f64,
+    /// Near-memory aggregation-engine utilization (`--aggregate-pushdown`'s
+    /// memory-side reduction duty cycle; zero when push-down is off).
+    pub near_mem_util: f64,
     pub watts: f64,
     pub energy_j: f64,
 }
@@ -61,6 +64,12 @@ pub struct PowerReport {
 /// (`PowerProfile::ssd_max_w`, DESIGN.md §8) rather than the PCIe/NVLink
 /// I/O term — the SSD's draw scales with its own read duty cycle, not
 /// with the host link's.
+///
+/// `near_mem_s` is the epoch's memory-side reduction busy time
+/// (`--aggregate-pushdown`, DESIGN.md §14; zero otherwise).  Its duty
+/// cycle drives the near-memory engine's own affine term
+/// (`PowerProfile::near_mem_max_w`) — like the SSD, the engine's draw
+/// scales with its own utilization, not the CPU's or GPU's.
 pub fn epoch_power(
     sys: &SystemProfile,
     b: &Breakdown,
@@ -68,6 +77,7 @@ pub fn epoch_power(
     host_bytes_on_link: u64,
     peer_bytes_on_link: u64,
     storage_bytes_on_link: u64,
+    near_mem_s: f64,
 ) -> PowerReport {
     let epoch = b.total_s().max(1e-12);
     let cpu_util = ((b.sample_s * CPU_W_SAMPLE + cpu_gather_s * CPU_W_GATHER)
@@ -82,12 +92,15 @@ pub fn epoch_power(
         .clamp(0.0, 1.0);
     let storage_util =
         (storage_bytes_on_link as f64 / epoch / sys.nvme.peak_bw).clamp(0.0, 1.0);
-    let watts = sys.power.watts(cpu_util, gpu_util, io_util, storage_util);
+    let near_mem_util = (near_mem_s / epoch).clamp(0.0, 1.0);
+    let watts = sys.power.watts(cpu_util, gpu_util, io_util, storage_util)
+        + near_mem_util * sys.power.near_mem_max_w;
     PowerReport {
         cpu_util,
         gpu_util,
         io_util,
         storage_util,
+        near_mem_util,
         watts,
         energy_j: watts * epoch,
     }
@@ -111,10 +124,10 @@ mod tests {
         let sys = SystemProfile::system1();
         // Py: 10s epoch with 3s CPU gather inside the 4s transfer phase.
         let py = breakdown(2.0, 4.0, 3.5, 0.5);
-        let p_py = epoch_power(&sys, &py, 3.0, 40 << 30, 0, 0);
+        let p_py = epoch_power(&sys, &py, 3.0, 40 << 30, 0, 0, 0.0);
         // PyD: gather gone, transfer shrinks, same train.
         let pyd = breakdown(2.0, 1.8, 3.5, 0.5);
-        let p_pyd = epoch_power(&sys, &pyd, 0.0, 42 << 30, 0, 0);
+        let p_pyd = epoch_power(&sys, &pyd, 0.0, 42 << 30, 0, 0, 0.0);
         assert!(p_pyd.watts < p_py.watts);
         let saving = 1.0 - p_pyd.watts / p_py.watts;
         assert!(
@@ -126,7 +139,7 @@ mod tests {
     #[test]
     fn idle_epoch_is_idle_power() {
         let sys = SystemProfile::system1();
-        let p = epoch_power(&sys, &breakdown(0.0, 0.0, 0.0, 1.0), 0.0, 0, 0, 0);
+        let p = epoch_power(&sys, &breakdown(0.0, 0.0, 0.0, 1.0), 0.0, 0, 0, 0, 0.0);
         assert!(p.watts < sys.power.idle_w + 0.2 * sys.power.cpu_max_w);
     }
 
@@ -140,9 +153,33 @@ mod tests {
             u64::MAX,
             u64::MAX,
             u64::MAX,
+            f64::MAX,
         );
         assert!(p.cpu_util <= 1.0 && p.gpu_util <= 1.0 && p.io_util <= 1.0);
         assert!(p.storage_util <= 1.0);
+        assert!(p.near_mem_util <= 1.0);
+    }
+
+    #[test]
+    fn near_mem_seconds_drive_their_own_power_term() {
+        // Push-down's reduction time heats the near-memory engine only:
+        // every other utilization is untouched, and the added draw is
+        // bounded by the engine's (deliberately modest) max wattage.
+        let sys = SystemProfile::system1();
+        let b = breakdown(1.0, 1.0, 1.0, 0.1);
+        let off = epoch_power(&sys, &b, 0.0, 8 << 30, 0, 0, 0.0);
+        let on = epoch_power(&sys, &b, 0.0, 8 << 30, 0, 0, 0.5);
+        assert_eq!(off.near_mem_util, 0.0);
+        assert!(on.near_mem_util > 0.0);
+        assert_eq!(on.cpu_util, off.cpu_util);
+        assert_eq!(on.gpu_util, off.gpu_util);
+        assert_eq!(on.io_util, off.io_util);
+        assert_eq!(on.storage_util, off.storage_util);
+        assert!(on.watts > off.watts);
+        assert!(
+            on.watts - off.watts <= sys.power.near_mem_max_w + 1e-9,
+            "near-mem term bounded by its max draw"
+        );
     }
 
     #[test]
@@ -151,8 +188,8 @@ mod tests {
         // than as host PCIe traffic (NVLink peak is several times higher).
         let sys = SystemProfile::system1();
         let b = breakdown(1.0, 1.0, 1.0, 0.1);
-        let as_host = epoch_power(&sys, &b, 0.0, 8 << 30, 0, 0);
-        let as_peer = epoch_power(&sys, &b, 0.0, 0, 8 << 30, 0);
+        let as_host = epoch_power(&sys, &b, 0.0, 8 << 30, 0, 0, 0.0);
+        let as_peer = epoch_power(&sys, &b, 0.0, 0, 8 << 30, 0, 0.0);
         assert!(as_peer.io_util < as_host.io_util);
         assert!(as_peer.watts <= as_host.watts);
     }
@@ -163,8 +200,8 @@ mod tests {
         // and a storage-quiet epoch pays no SSD active power at all.
         let sys = SystemProfile::system1();
         let b = breakdown(1.0, 1.0, 1.0, 0.1);
-        let quiet = epoch_power(&sys, &b, 0.0, 0, 0, 0);
-        let busy = epoch_power(&sys, &b, 0.0, 0, 0, 4 << 30);
+        let quiet = epoch_power(&sys, &b, 0.0, 0, 0, 0, 0.0);
+        let busy = epoch_power(&sys, &b, 0.0, 0, 0, 4 << 30, 0.0);
         assert_eq!(quiet.storage_util, 0.0);
         assert!(busy.storage_util > 0.0);
         assert_eq!(busy.io_util, quiet.io_util);

@@ -53,13 +53,13 @@ use crate::config::{Backend, RunConfig};
 use crate::coordinator::costmodel::{ComputeModel, DEFAULT_HIDDEN};
 use crate::coordinator::schedule::link_window;
 use crate::coordinator::simclock::{ResourceBusy, ResourceKind, SimResource};
-use crate::coordinator::trainer::Breakdown;
+use crate::coordinator::trainer::{Breakdown, PushdownReport};
 use crate::error::{Error, Result};
 use crate::featurestore::{FeatureStore, TierStats};
 use crate::graph::{Csr, DatasetPreset};
 use crate::interconnect::TransferCost;
 use crate::runtime::Manifest;
-use crate::sampler::{CoalescedGatherPlan, MiniBatch, NeighborSampler};
+use crate::sampler::{AggregatePlan, CoalescedGatherPlan, MiniBatch, NeighborSampler};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -100,6 +100,14 @@ pub struct ServingReport {
     /// `tests/serving_properties.rs` pins that sharing never changes
     /// results and never hurts the hit rate under static placement.
     pub tier: Option<TierStats>,
+    /// Aggregation push-down accounting (`--aggregate-pushdown`,
+    /// DESIGN.md §14).  Partial-aggregate payloads are *per request* —
+    /// each client needs its own per-destination sums, so coalescing
+    /// merges nothing across members on the aggregate streams (unlike
+    /// the raw path's cross-request dedup); the engine prices one
+    /// pushed-down stream per member and sums them into the batch's
+    /// transfer window.
+    pub pushdown: PushdownReport,
 }
 
 impl ServingReport {
@@ -157,6 +165,26 @@ fn take_batch(queue: &mut VecDeque<Pending>, coalesce: bool, limit: usize) -> Ve
     queue.drain(..k.min(queue.len())).collect()
 }
 
+/// Sum one member's pushed-down transfer cost into the batch's combined
+/// window (times serialize on the shared links, bytes and requests add).
+fn add_cost(acc: &mut TransferCost, c: &TransferCost) {
+    acc.time_s += c.time_s;
+    acc.bytes_on_link += c.bytes_on_link;
+    acc.useful_bytes += c.useful_bytes;
+    acc.requests += c.requests;
+    acc.cpu_time_s += c.cpu_time_s;
+    acc.split.local_bytes += c.split.local_bytes;
+    acc.split.peer_bytes += c.split.peer_bytes;
+    acc.split.host_bytes += c.split.host_bytes;
+    acc.split.storage_bytes += c.split.storage_bytes;
+    acc.split.peer_bytes_on_link += c.split.peer_bytes_on_link;
+    acc.split.host_bytes_on_link += c.split.host_bytes_on_link;
+    acc.split.storage_bytes_on_link += c.split.storage_bytes_on_link;
+    acc.split.peer_time_s += c.split.peer_time_s;
+    acc.split.host_time_s += c.split.host_time_s;
+    acc.split.storage_time_s += c.split.storage_time_s;
+}
+
 /// Request-driven serving engine over the full data path (sampler +
 /// feature store of the configured access mode) with simulated timing.
 ///
@@ -178,6 +206,10 @@ impl ServingEngine {
     /// shapes — matching `InferenceRunner::new`'s model selection so the
     /// degeneracy anchor holds in both environments.
     pub fn new(cfg: RunConfig) -> Result<ServingEngine> {
+        // Programmatic configs bypass the CLI's validation pass; reject
+        // impossible shapes (e.g. empty `fanouts`) before the sampler
+        // can panic on them.
+        cfg.validate()?;
         let mut preset = DatasetPreset::by_abbv(&cfg.dataset)
             .ok_or_else(|| Error::Config(format!("unknown dataset `{}`", cfg.dataset)))?;
         crate::coordinator::trainer::apply_classes_override(&cfg, &mut preset);
@@ -290,6 +322,7 @@ impl ServingEngine {
 
         let tier_start = self.store.tier_stats();
         let mut report = ServingReport::default();
+        report.pushdown.enabled = self.cfg.aggregate_pushdown;
         let mut blocks: Vec<Vec<f32>> = if capture {
             vec![Vec::new(); total as usize]
         } else {
@@ -385,8 +418,42 @@ impl ServingEngine {
             ev += 1;
             let mut t = t_start + sample_dur;
 
+            // Push-down prices each member's streams *before* the
+            // physical gather mutates tier state (read-only, pre-batch
+            // classification — the trainer's ordering, DESIGN.md §14).
+            // Aggregate payloads are per request, so the members' costs
+            // sum; the raw gather cost below rides along for the
+            // reduction factor.
+            let pushed_cost = if self.cfg.aggregate_pushdown {
+                let mut sum = TransferCost::default();
+                for mb in &mbs {
+                    let plan = AggregatePlan::build(mb)?;
+                    let pd = self.store.pushdown_cost(&plan, self.cfg.dedup)?;
+                    add_cost(&mut sum, &pd.cost);
+                    let p = &mut report.pushdown;
+                    p.pushed_bytes_on_link += pd.cost.bytes_on_link;
+                    p.agg_bytes_on_link += pd.agg_bytes_on_link;
+                    p.dst_rows += pd.dst_rows;
+                    p.neighbor_rows += pd.neighbor_rows;
+                    p.agg_rows += pd.agg_rows;
+                    p.near_mem_flops += pd.near_mem_flops;
+                    p.near_mem_s += pd.near_mem_s;
+                }
+                Some(sum)
+            } else {
+                None
+            };
+
             // Gather (real rows, priced by the store's access mode).
-            let cost = self.gather_batch(&members, &mbs, dim, capture, &mut blocks, &mut report)?;
+            let raw_cost =
+                self.gather_batch(&members, &mbs, dim, capture, &mut blocks, &mut report)?;
+            let cost = match pushed_cost {
+                Some(c) => {
+                    report.pushdown.raw_bytes_on_link += raw_cost.bytes_on_link;
+                    c
+                }
+                None => raw_cost,
+            };
             report.breakdown_sim.transfer_s += cost.time_s;
 
             // Transfer window → CPU share, launch-only pre-segment, and

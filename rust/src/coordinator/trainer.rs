@@ -34,7 +34,7 @@ use crate::runtime::native::{self, NativeTrainState};
 use crate::runtime::state::{StepBatch, TrainState};
 use crate::runtime::{ArtifactKind, ArtifactSpec, LoadedArtifact, Manifest, Runtime};
 use crate::graph::{Csr, DatasetPreset};
-use crate::sampler::NeighborSampler;
+use crate::sampler::{AggregatePlan, NeighborSampler};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
@@ -91,6 +91,52 @@ impl DedupReport {
     }
 }
 
+/// Per-epoch aggregation push-down accounting (`--aggregate-pushdown`,
+/// DESIGN.md §14): what the epoch's gathers would have paid shipping raw
+/// neighbor rows versus what the pushed-down streams actually paid, plus
+/// the near-memory reduction work that bought the difference.  With
+/// `--no-pushdown` (the default) nothing here is populated
+/// (`enabled = false`) and every report reproduces the pre-pushdown
+/// numbers bit-exactly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PushdownReport {
+    /// Whether aggregation push-down priced this epoch's transfers.
+    pub enabled: bool,
+    /// Link bytes the raw (gather-every-neighbor-row) path pays for the
+    /// same batches — the store's unchanged gather costing, accumulated
+    /// alongside for the reduction factor.
+    pub raw_bytes_on_link: u64,
+    /// Link bytes the pushed-down epoch actually paid (self streams +
+    /// aggregate streams; this is what lands in
+    /// [`EpochReport::bytes_on_link`] when push-down is on).
+    pub pushed_bytes_on_link: u64,
+    /// Aggregate-stream share of `pushed_bytes_on_link` (partial rows +
+    /// counts + the NVMe block reads behind storage-side partials).
+    pub agg_bytes_on_link: u64,
+    /// Destination self-stream rows priced (post-dedup when dedup is on).
+    pub dst_rows: u64,
+    /// Masked neighbor slots the aggregate streams replaced.
+    pub neighbor_rows: u64,
+    /// Partial-aggregate rows shipped across all tiers.
+    pub agg_rows: u64,
+    /// Near-memory reduction FLOPs (one add per off-GPU neighbor element).
+    pub near_mem_flops: u64,
+    /// Near-memory reduction seconds (serialized into the simulated
+    /// transfer time; drives the power model's near-memory duty cycle).
+    pub near_mem_s: f64,
+}
+
+impl PushdownReport {
+    /// Raw over pushed-down link bytes (≥ 0; 1.0 when nothing moved).
+    pub fn reduction(&self) -> f64 {
+        if self.pushed_bytes_on_link == 0 {
+            1.0
+        } else {
+            self.raw_bytes_on_link as f64 / self.pushed_bytes_on_link as f64
+        }
+    }
+}
+
 /// One epoch's results.
 #[derive(Clone, Debug, Default)]
 pub struct EpochReport {
@@ -126,6 +172,10 @@ pub struct EpochReport {
     /// Minibatch gather-deduplication accounting (DESIGN.md §10):
     /// requested vs unique rows and the transfer bytes saved.
     pub dedup: DedupReport,
+    /// Aggregation push-down accounting (DESIGN.md §14): raw vs
+    /// pushed-down link bytes, the traffic-reduction factor, and the
+    /// near-memory reduction work.
+    pub pushdown: PushdownReport,
 }
 
 impl EpochReport {
@@ -219,6 +269,10 @@ impl Trainer {
     /// is not loaded (pipeline/transfer accounting only — used by benches
     /// that sweep all 12 variants without paying 12 compilations).
     pub fn new(cfg: RunConfig) -> Result<Trainer> {
+        // Programmatic configs (benches, library users) bypass the CLI's
+        // validation pass; reject impossible shapes here (an empty
+        // `fanouts` would otherwise panic deep in the sampler).
+        cfg.validate()?;
         let mut preset = DatasetPreset::by_abbv(&cfg.dataset)
             .ok_or_else(|| Error::Config(format!("unknown dataset `{}`", cfg.dataset)))?;
         apply_classes_override(&cfg, &mut preset);
@@ -311,12 +365,13 @@ impl Trainer {
                      needed",
                     native::DEFAULT_LR
                 );
-                let nstate = NativeTrainState::init(
+                let mut nstate = NativeTrainState::init(
                     preset.feat_dim as usize,
                     preset.classes,
                     native::DEFAULT_LR,
                     cfg.seed ^ 0x9A23,
                 );
+                nstate.set_workers(cfg.sampler_workers.max(1));
                 (None, None, None, Some(nstate))
             }
         };
@@ -377,8 +432,10 @@ impl Trainer {
         let mut report = EpochReport::default();
         let dim = self.store.dim();
         let dedup_on = self.cfg.dedup;
+        let pushdown_on = self.cfg.aggregate_pushdown;
         let row_bytes = self.cfg.precision.row_bytes(dim);
         report.dedup.enabled = dedup_on;
+        report.pushdown.enabled = pushdown_on;
         let tier_epoch_start = self.store.tier_stats();
         let shard_epoch_start = self.store.shard_stats();
         let nvme_epoch_start = self.store.nvme_stats();
@@ -387,6 +444,9 @@ impl Trainer {
         // different peaks (and the storage bytes drive the SSD term).
         let (mut host_link_bytes, mut peer_link_bytes, mut storage_link_bytes) =
             (0u64, 0u64, 0u64);
+        // Near-memory reduction busy seconds (`--aggregate-pushdown`):
+        // feeds the power model's near-memory duty cycle.
+        let mut near_mem_busy_s = 0.0f64;
         // Per-step resource demands for the overlap engine.
         let mut demands: Vec<ResourceDemand> = Vec::with_capacity(seeds.len());
 
@@ -403,6 +463,7 @@ impl Trainer {
             let host_link_bytes = &mut host_link_bytes;
             let peer_link_bytes = &mut peer_link_bytes;
             let storage_link_bytes = &mut storage_link_bytes;
+            let near_mem_busy_s = &mut near_mem_busy_s;
             run_pipeline(
                 seeds.len() as u64,
                 queue_depth,
@@ -422,20 +483,54 @@ impl Trainer {
                 // scatter rebuilds the requested layout bitwise
                 // identically (DESIGN.md §10) ---
                 |mb| {
+                    // Push-down prices the step *before* the physical
+                    // gather: `pushdown_cost` is read-only, so the tier /
+                    // shard / storage classification sees the same
+                    // pre-batch state the raw costing below will record
+                    // against (DESIGN.md §14).
+                    let pushed = if pushdown_on {
+                        Some(AggregatePlan::build(&mb)?)
+                    } else {
+                        None
+                    };
+                    let pd = match &pushed {
+                        Some(plan) => Some(store.pushdown_cost(plan, dedup_on)?),
+                        None => None,
+                    };
                     let mut x0 = vec![0f32; mb.gather_rows() * dim];
-                    if dedup_on {
+                    let (raw_cost, unique) = if dedup_on {
                         let plan = mb.compact();
                         let cost = store.gather_planned(&plan, &mut x0)?;
-                        let unique = plan.unique_rows() as u64;
-                        Ok((mb, x0, cost, unique))
+                        (cost, plan.unique_rows() as u64)
                     } else {
                         let cost = store.gather_into(&mb.src_nodes, &mut x0)?;
-                        let unique = mb.gather_rows() as u64;
-                        Ok((mb, x0, cost, unique))
+                        (cost, mb.gather_rows() as u64)
+                    };
+                    if let Some(plan) = &pushed {
+                        // Measured counterpart of the near-memory work:
+                        // the pinned-order reduction over the gathered
+                        // rows — by construction bitwise identical to
+                        // what the tiers' combined partials produce, so
+                        // numerics never depend on the knob.
+                        let mut agg = vec![0f32; plan.n_dst() * dim];
+                        let mut counts = vec![0u32; plan.n_dst()];
+                        plan.aggregate_gathered(&x0, dim, &mut agg, &mut counts)?;
+                        debug_assert_eq!(
+                            counts.iter().map(|&c| c as usize).sum::<usize>(),
+                            plan.neighbor_rows()
+                        );
+                    }
+                    // When push-down is on the epoch pays the pushed-down
+                    // cost; the raw cost rides along for the reduction
+                    // factor (its link bytes are what `--no-pushdown`
+                    // would have reported).
+                    match pd {
+                        Some(p) => Ok((mb, x0, p.cost, unique, Some((p, raw_cost.bytes_on_link)))),
+                        None => Ok((mb, x0, raw_cost, unique, None)),
                     }
                 },
                 // --- train (calling thread, FIFO) ---
-                |(mb, x0, cost, unique_rows)| {
+                |(mb, x0, cost, unique_rows, pushed)| {
                     let requested_rows = mb.gather_rows() as u64;
                     report.dedup.requested_rows += requested_rows;
                     report.dedup.unique_rows += unique_rows;
@@ -448,6 +543,17 @@ impl Trainer {
                     *storage_link_bytes += cost.split.storage_bytes_on_link;
                     report.requests += cost.requests;
                     demands.push(cost.demand());
+                    if let Some((pd, raw_bytes)) = pushed {
+                        report.pushdown.raw_bytes_on_link += raw_bytes;
+                        report.pushdown.pushed_bytes_on_link += pd.cost.bytes_on_link;
+                        report.pushdown.agg_bytes_on_link += pd.agg_bytes_on_link;
+                        report.pushdown.dst_rows += pd.dst_rows;
+                        report.pushdown.neighbor_rows += pd.neighbor_rows;
+                        report.pushdown.agg_rows += pd.agg_rows;
+                        report.pushdown.near_mem_flops += pd.near_mem_flops;
+                        report.pushdown.near_mem_s += pd.near_mem_s;
+                        *near_mem_busy_s += pd.near_mem_s;
+                    }
 
                     if let (Some(artifact), Some(state)) = (artifact, state.as_deref_mut()) {
                         let t = Timer::start();
@@ -542,6 +648,7 @@ impl Trainer {
             // One SSD regardless of GPU count (only `Nvme` mode produces
             // storage traffic, and it is single-GPU).
             storage_link_bytes,
+            near_mem_busy_s,
         );
         report.tier = self.store.tier_stats().map(|now| match &tier_epoch_start {
             Some(start) => now.since(start),
@@ -609,6 +716,61 @@ mod tests {
         assert!(r_on.dedup.bytes_saved > 0);
         assert!(r_on.bytes_on_link < r_off.bytes_on_link);
         assert!(r_on.breakdown_sim.transfer_s < r_off.breakdown_sim.transfer_s);
+    }
+
+    #[test]
+    fn empty_fanouts_rejected_at_build_not_panicking() {
+        // Regression: `fanouts = []` used to panic deep in the sampler
+        // (`layers.last().unwrap()`); programmatic configs bypass the CLI
+        // validation, so Trainer::new must validate itself.
+        let mut cfg = small_cfg(AccessMode::UnifiedAligned);
+        cfg.fanouts = vec![];
+        match Trainer::new(cfg) {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("fanouts must be non-empty"), "unhelpful: {msg}")
+            }
+            Err(e) => panic!("expected Config error, got {e}"),
+            Ok(_) => panic!("empty fanouts accepted"),
+        }
+    }
+
+    #[test]
+    fn pushdown_cuts_link_bytes_and_keeps_numerics() {
+        // The tentpole at the epoch level: same seeds, pushdown on vs off
+        // — the on-run's raw costing reproduces the off-run's bytes, the
+        // pushed-down epoch pays strictly less, the near-memory engine
+        // heats up, and the loss trajectory is bitwise unchanged.
+        let mut off_cfg = small_cfg(AccessMode::UnifiedAligned);
+        off_cfg.skip_train = false;
+        off_cfg.backend = Backend::Native;
+        off_cfg.artifacts_dir = "definitely/not/a/real/dir".into();
+        let mut on_cfg = off_cfg.clone();
+        on_cfg.aggregate_pushdown = true;
+        let r_on = Trainer::new(on_cfg).unwrap().run_epoch().unwrap();
+        let r_off = Trainer::new(off_cfg).unwrap().run_epoch().unwrap();
+
+        assert!(r_on.pushdown.enabled);
+        assert!(!r_off.pushdown.enabled);
+        assert_eq!(r_off.pushdown.raw_bytes_on_link, 0, "off-run reports nothing");
+        assert_eq!(r_on.pushdown.raw_bytes_on_link, r_off.bytes_on_link);
+        assert_eq!(r_on.bytes_on_link, r_on.pushdown.pushed_bytes_on_link);
+        assert!(
+            r_on.bytes_on_link < r_off.bytes_on_link,
+            "pushdown {} !< raw {}",
+            r_on.bytes_on_link,
+            r_off.bytes_on_link
+        );
+        assert!(r_on.pushdown.reduction() > 1.0);
+        assert!(r_on.pushdown.agg_rows > 0);
+        assert!(r_on.pushdown.near_mem_flops > 0);
+        assert!(r_on.pushdown.near_mem_s > 0.0);
+        assert!(r_on.power.near_mem_util > 0.0);
+        assert_eq!(r_off.power.near_mem_util, 0.0);
+        assert_eq!(
+            r_on.losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            r_off.losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            "numerics must not depend on the pushdown knob"
+        );
     }
 
     #[test]

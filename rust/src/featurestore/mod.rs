@@ -57,6 +57,6 @@ pub use nvme::{NvmeStats, NvmeStore, NvmeStoreConfig};
 pub use pagecache::{Admission, EvictionEngine, PageCache, PageView};
 pub use sharded::{assign_owners, GpuShardStats, ShardConfig, ShardStats, ShardedStore};
 pub use staging::StagingPool;
-pub use store::FeatureStore;
+pub use store::{FeatureStore, PushdownCost};
 pub use synth::SyntheticFeatures;
 pub use tiered::{degree_ranking, TierConfig, TierStats, TieredCache};

@@ -240,6 +240,28 @@ impl NvmeStore {
         self.slot[row as usize] == HOST_RESIDENT
     }
 
+    /// Whether `row` currently sits in the GPU hot tier — the read-only
+    /// pre-step residency view [`NvmeStore::gather_cost`] classifies
+    /// against before recording.  The push-down classifier
+    /// (`FeatureStore::pushdown_cost`, DESIGN.md §14) uses it to replicate
+    /// that classification without mutating tier state.
+    pub fn is_gpu_hot(&self, row: u32) -> bool {
+        self.cache.is_hot(row)
+    }
+
+    /// Cold-store slot of `row`, or `None` when it is host-resident — the
+    /// read-only placement view the push-down classifier prices storage
+    /// block IOs from (same slots [`NvmeStore::gather_cost`] feeds
+    /// [`count_block_ios`]).
+    pub fn cold_slot(&self, row: u32) -> Option<u32> {
+        let s = self.slot[row as usize];
+        if s == HOST_RESIDENT {
+            None
+        } else {
+            Some(s)
+        }
+    }
+
     pub fn host_resident_rows(&self) -> usize {
         self.host_resident_rows
     }

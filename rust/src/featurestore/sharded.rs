@@ -320,6 +320,15 @@ impl ShardedStore {
         self.owner[row as usize] as usize
     }
 
+    /// Whether `row` currently sits in its owner GPU's hot tier — the
+    /// read-only pre-step residency view [`ShardedStore::gather_cost`]
+    /// classifies against before recording.  The push-down classifier
+    /// (`FeatureStore::pushdown_cost`, DESIGN.md §14) uses it to replicate
+    /// that classification without mutating tier state.
+    pub fn is_hot_in_owner(&self, row: u32) -> bool {
+        self.tiers[self.owner[row as usize] as usize].is_hot(row)
+    }
+
     /// One GPU's hot-tier counters/gauges.
     pub fn tier_stats(&self, gpu: usize) -> TierStats {
         self.tiers[gpu].stats()

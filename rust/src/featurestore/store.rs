@@ -3,7 +3,7 @@
 use std::sync::{Mutex, PoisonError};
 
 use crate::config::{AccessMode, Precision, SystemProfile};
-use crate::device::warp::{count_requests, WarpModel};
+use crate::device::warp::{count_requests, GatherTraffic, WarpModel};
 use crate::error::{Error, Result};
 use crate::featurestore::nvme::{NvmeStats, NvmeStore, NvmeStoreConfig};
 use crate::featurestore::quant;
@@ -11,7 +11,10 @@ use crate::featurestore::sharded::{ShardConfig, ShardStats, ShardedStore};
 use crate::featurestore::staging::StagingPool;
 use crate::featurestore::synth::SyntheticFeatures;
 use crate::featurestore::tiered::{TierConfig, TierStats, TieredCache};
-use crate::interconnect::{DmaEngine, PathSplit, PcieLink, TransferCost, UvmSpace};
+use crate::interconnect::{
+    count_block_ios, DmaEngine, NvlinkLink, NvmeLink, PathSplit, PcieLink, TransferCost, UvmSpace,
+};
+use crate::sampler::aggregate::AggregatePlan;
 use crate::tensor::{Device, Tensor};
 use crate::util::timer::Timer;
 
@@ -568,6 +571,485 @@ impl FeatureStore {
         let cost = self.gather_into(idx, &mut out)?;
         Ok((out, cost))
     }
+
+    /// Price a pushed-down gather (`--aggregate-pushdown`, DESIGN.md §14)
+    /// WITHOUT mutating any tier/placement state — call it *before* the
+    /// physical gather, so the residency classification sees exactly the
+    /// pre-batch state the raw path's own accounting will.
+    ///
+    /// Instead of `n_unique` raw neighbor rows, the pushed-down step ships
+    /// two streams:
+    ///
+    /// * the **self stream** — every layer-0 destination still needs its
+    ///   own feature row on the GPU; priced with this mode's raw gather
+    ///   arithmetic on `agg.dst_nodes()` (deduplicated first when `dedup`,
+    ///   which is how push-down composes with DESIGN.md §10), replicated
+    ///   read-only via the stores' residency views
+    ///   ([`TieredCache::is_hot`], [`ShardedStore::is_hot_in_owner`],
+    ///   [`NvmeStore::is_gpu_hot`]/[`NvmeStore::cold_slot`]);
+    /// * the **aggregate streams** — for each tier holding ≥ 1 of a
+    ///   destination's neighbors, one partial-aggregate row plus a 4-byte
+    ///   neighbor count (`row_bytes + 4`) crosses that tier's link as a
+    ///   *contiguous* payload (the near-memory engine emits a dense
+    ///   `n_dst × dim` block, so no warp-coalescing penalty applies): host
+    ///   partials at the PCIe ideal-transfer rate, peer partials at the
+    ///   effective NVLink bandwidth, and NVMe-cold partials pay their
+    ///   block reads as *internal* storage-link occupancy
+    ///   ([`count_block_ios`], unchanged) while only the aggregate bytes
+    ///   cross the host link.  Neighbors resident in the requesting GPU's
+    ///   own hot tier reduce locally: no link bytes, no near-memory work.
+    ///
+    /// The near-memory reduction time (off-GPU neighbor elements divided
+    /// by [`SystemProfile::near_mem_fp32_flops`]) serializes into
+    /// `cost.time_s` and feeds the power model's near-memory duty cycle;
+    /// it is *not* CPU time — the engines sit beside the memory, off the
+    /// cores — and it never loads a link occupancy.
+    ///
+    /// `Uvm`'s self stream is priced as a host ideal transfer plus one
+    /// launch: re-running the fault machinery read-only is impossible, so
+    /// push-down deliberately models UVM's post-migration steady state
+    /// (the §14 compromise; `Uvm` is excluded from the strict-reduction
+    /// acceptance set for the same reason).
+    ///
+    /// Numerics are untouched: the pushed-down aggregate itself is
+    /// computed once on the gathered rows in the plan's pinned order
+    /// ([`AggregatePlan::aggregate_gathered`]) — this method only reprices
+    /// the traffic.
+    pub fn pushdown_cost(&self, agg: &AggregatePlan, dedup: bool) -> Result<PushdownCost> {
+        let f = self.synth.dim;
+        let row_bytes = self.precision.row_bytes(f);
+        let dst = agg.dst_nodes();
+        for j in 0..agg.n_dst() {
+            if let Some(&bad) = agg.neighbor_ids(j).iter().find(|&&r| r as usize >= self.rows) {
+                return Err(Error::IndexOutOfBounds {
+                    index: bad as usize,
+                    bound: self.rows,
+                });
+            }
+        }
+        if let Some(&bad) = dst.iter().find(|&&r| r as usize >= self.rows) {
+            return Err(Error::IndexOutOfBounds {
+                index: bad as usize,
+                bound: self.rows,
+            });
+        }
+        // Self stream: the destinations' own rows, deduplicated like any
+        // other gather stream when dedup is on (pushdown × dedup compose).
+        let plan;
+        let self_ids: &[u32] = if dedup {
+            plan = crate::sampler::compact::GatherPlan::build(dst);
+            plan.unique_nodes()
+        } else {
+            dst
+        };
+        let self_useful = self_ids.len() as u64 * row_bytes;
+        let launch_only = || TransferCost {
+            time_s: self.sys.kernel_launch_s,
+            bytes_on_link: 0,
+            useful_bytes: self_useful,
+            requests: 0,
+            cpu_time_s: 0.0,
+            split: PathSplit {
+                local_bytes: self_useful,
+                ..PathSplit::default()
+            },
+        };
+        let mut cost = match self.mode {
+            AccessMode::CpuGather => {
+                DmaEngine::new(&self.sys).cpu_gather_transfer(self_ids.len() as u64, row_bytes)
+            }
+            AccessMode::UnifiedNaive | AccessMode::UnifiedAligned => {
+                self.zero_copy_cost(self_ids, self.mode == AccessMode::UnifiedAligned)
+            }
+            AccessMode::Uvm => {
+                // Post-migration steady state (see the doc comment): the
+                // self stream rides the host link at the ideal rate plus
+                // the gather-kernel launch.
+                let mut c = PcieLink::new(&self.sys).ideal(self_useful);
+                c.time_s += self.sys.kernel_launch_s;
+                c
+            }
+            AccessMode::GpuResident => launch_only(),
+            AccessMode::Tiered => {
+                let tier = self.tier.as_ref().expect("tiered store has a cache");
+                let cold: Vec<u32> = {
+                    let t = Self::lock(tier);
+                    self_ids.iter().copied().filter(|&r| !t.is_hot(r)).collect()
+                };
+                if cold.is_empty() {
+                    launch_only()
+                } else {
+                    let mut c = self.zero_copy_cost(&cold, true);
+                    c.useful_bytes = self_useful;
+                    c.split.local_bytes = self_useful - c.split.host_bytes;
+                    c
+                }
+            }
+            AccessMode::Sharded => {
+                let shard = Self::lock(self.shard.as_ref().expect("sharded store has placement"));
+                Self::sharded_classify_cost(&shard, self_ids, f as u64, row_bytes, &self.sys)
+            }
+            AccessMode::Nvme => {
+                let nv = Self::lock(self.nvme.as_ref().expect("nvme store has placement"));
+                Self::nvme_classify_cost(&nv, self_ids, f as u64, row_bytes, &self.sys)
+            }
+        };
+        let self_bytes_on_link = cost.bytes_on_link;
+
+        // Aggregate streams: classify every masked neighbor slot against
+        // the same pre-batch residency and count, per destination, one
+        // partial-aggregate row per contributing off-GPU tier.
+        let mut agg_rows_host = 0u64; // partials computed host-side
+        let mut agg_rows_peer = 0u64; // partials computed on peer GPUs
+        let mut agg_rows_storage = 0u64; // partials computed storage-side
+        let mut off_gpu_slots = 0u64; // neighbor slots reduced off the requesting GPU
+        let mut storage_slots: Vec<u32> = Vec::new();
+        match self.mode {
+            AccessMode::CpuGather
+            | AccessMode::UnifiedNaive
+            | AccessMode::UnifiedAligned
+            | AccessMode::Uvm => {
+                // Single host tier: every destination with neighbors gets
+                // one host-side partial.
+                for j in 0..agg.n_dst() {
+                    let n = agg.neighbor_ids(j).len() as u64;
+                    if n > 0 {
+                        agg_rows_host += 1;
+                        off_gpu_slots += n;
+                    }
+                }
+            }
+            // Everything already sits in device memory: the GPU reduces
+            // its own rows exactly as before — push-down moves nothing.
+            AccessMode::GpuResident => {}
+            AccessMode::Tiered => {
+                let t = Self::lock(self.tier.as_ref().expect("tiered store has a cache"));
+                for j in 0..agg.n_dst() {
+                    let cold = agg.neighbor_ids(j).iter().filter(|&&r| !t.is_hot(r)).count() as u64;
+                    if cold > 0 {
+                        agg_rows_host += 1;
+                        off_gpu_slots += cold;
+                    }
+                }
+            }
+            AccessMode::Sharded => {
+                // Destinations split across the GPUs with the same
+                // contiguous chunk rule as the raw gather; each GPU's
+                // neighbors classify local / peer-partial / host-partial.
+                let shard = Self::lock(self.shard.as_ref().expect("sharded store has placement"));
+                let n = shard.num_gpus();
+                let nd = agg.n_dst();
+                let mut peer_owner_seen = vec![false; n];
+                for g in 0..n {
+                    for j in g * nd / n..(g + 1) * nd / n {
+                        let mut host_any = false;
+                        for seen in peer_owner_seen.iter_mut() {
+                            *seen = false;
+                        }
+                        for &r in agg.neighbor_ids(j) {
+                            let o = shard.owner_of(r);
+                            if shard.is_hot_in_owner(r) {
+                                if o != g {
+                                    peer_owner_seen[o] = true;
+                                    off_gpu_slots += 1;
+                                }
+                            } else {
+                                host_any = true;
+                                off_gpu_slots += 1;
+                            }
+                        }
+                        agg_rows_peer +=
+                            peer_owner_seen.iter().filter(|&&seen| seen).count() as u64;
+                        if host_any {
+                            agg_rows_host += 1;
+                        }
+                    }
+                }
+            }
+            AccessMode::Nvme => {
+                let nv = Self::lock(self.nvme.as_ref().expect("nvme store has placement"));
+                for j in 0..agg.n_dst() {
+                    let mut host_any = false;
+                    let mut storage_any = false;
+                    for &r in agg.neighbor_ids(j) {
+                        if nv.is_gpu_hot(r) {
+                            continue;
+                        }
+                        off_gpu_slots += 1;
+                        match nv.cold_slot(r) {
+                            None => host_any = true,
+                            Some(s) => {
+                                storage_any = true;
+                                storage_slots.push(s);
+                            }
+                        }
+                    }
+                    if host_any {
+                        agg_rows_host += 1;
+                    }
+                    if storage_any {
+                        agg_rows_storage += 1;
+                    }
+                }
+            }
+        }
+
+        // Price the aggregate payloads.  Partials are `row_bytes` of sums
+        // plus the 4-byte neighbor count the consumer finishes a mean
+        // with; storage-side partials cross the host link too (the SSD
+        // hangs off the same PCIe root), paying their block reads as
+        // internal storage occupancy.
+        let agg_row_bytes = row_bytes + 4;
+        let host_agg_bytes = (agg_rows_host + agg_rows_storage) * agg_row_bytes;
+        let peer_agg_bytes = agg_rows_peer * agg_row_bytes;
+        let mut agg_bytes_on_link = 0u64;
+        if host_agg_bytes > 0 {
+            let c = PcieLink::new(&self.sys).ideal(host_agg_bytes);
+            cost.time_s += c.time_s;
+            cost.bytes_on_link += c.bytes_on_link;
+            cost.useful_bytes += host_agg_bytes;
+            cost.requests += c.requests;
+            cost.split.host_bytes += host_agg_bytes;
+            cost.split.host_bytes_on_link += c.bytes_on_link;
+            cost.split.host_time_s += c.time_s;
+            agg_bytes_on_link += c.bytes_on_link;
+        }
+        if peer_agg_bytes > 0 {
+            let nv = &self.sys.nvlink;
+            let t = peer_agg_bytes as f64 / (nv.peak_bw * nv.direct_efficiency);
+            cost.time_s += t;
+            cost.bytes_on_link += peer_agg_bytes;
+            cost.useful_bytes += peer_agg_bytes;
+            cost.requests += peer_agg_bytes / nv.cacheline_bytes.max(1);
+            cost.split.peer_bytes += peer_agg_bytes;
+            cost.split.peer_bytes_on_link += peer_agg_bytes;
+            cost.split.peer_time_s += t;
+            agg_bytes_on_link += peer_agg_bytes;
+        }
+        if !storage_slots.is_empty() {
+            let traffic = count_block_ios(&storage_slots, row_bytes, self.sys.nvme.block_bytes);
+            let c = NvmeLink::new(&self.sys).read(&traffic);
+            cost.time_s += c.split.storage_time_s;
+            cost.bytes_on_link += c.bytes_on_link;
+            cost.requests += c.requests;
+            cost.split.storage_bytes += c.split.storage_bytes;
+            cost.split.storage_bytes_on_link += c.split.storage_bytes_on_link;
+            cost.split.storage_time_s += c.split.storage_time_s;
+            agg_bytes_on_link += c.bytes_on_link;
+        }
+        let near_mem_flops = off_gpu_slots * f as u64;
+        let near_mem_s = if near_mem_flops > 0 {
+            near_mem_flops as f64 / self.sys.near_mem_fp32_flops
+        } else {
+            0.0
+        };
+        cost.time_s += near_mem_s;
+
+        Ok(PushdownCost {
+            cost,
+            self_bytes_on_link,
+            agg_bytes_on_link,
+            dst_rows: self_ids.len() as u64,
+            neighbor_rows: agg.neighbor_rows() as u64,
+            off_gpu_neighbor_rows: off_gpu_slots,
+            agg_rows: agg_rows_host + agg_rows_peer + agg_rows_storage,
+            near_mem_flops,
+            near_mem_s,
+        })
+    }
+
+    /// Read-only replica of [`ShardedStore::gather_cost`]'s pricing (same
+    /// chunk rule, same per-owner peer streams, same link arithmetic) with
+    /// the recording step omitted — classification against pre-step state
+    /// is identical because `gather_cost` itself classifies before it
+    /// records.
+    fn sharded_classify_cost(
+        shard: &ShardedStore,
+        idx: &[u32],
+        feat_elems: u64,
+        row_bytes: u64,
+        sys: &SystemProfile,
+    ) -> TransferCost {
+        let n = shard.num_gpus();
+        let model = WarpModel::for_row_layout(row_bytes, feat_elems);
+        let shifted = model.shift_applies(feat_elems);
+        let pcie = PcieLink::new(sys);
+        let nvlink = NvlinkLink::new(sys);
+
+        let mut peer_by_owner: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut split = PathSplit::default();
+        let mut step_time = 0.0f64;
+        let mut link_bytes = 0u64;
+        let mut requests = 0u64;
+        let mut host = Vec::new();
+
+        for g in 0..n {
+            let chunk = &idx[g * idx.len() / n..(g + 1) * idx.len() / n];
+            let mut local_rows = 0u64;
+            host.clear();
+            for v in &mut peer_by_owner {
+                v.clear();
+            }
+            for &r in chunk {
+                let o = shard.owner_of(r);
+                if shard.is_hot_in_owner(r) {
+                    if o == g {
+                        local_rows += 1;
+                    } else {
+                        peer_by_owner[o].push(r);
+                    }
+                } else {
+                    host.push(r);
+                }
+            }
+            let mut time_g = sys.kernel_launch_s;
+            let mut peer_traffic = GatherTraffic::default();
+            let mut peer_rows = 0u64;
+            for rows_o in &peer_by_owner {
+                if rows_o.is_empty() {
+                    continue;
+                }
+                peer_rows += rows_o.len() as u64;
+                let t = count_requests(rows_o, feat_elems, model, shifted);
+                peer_traffic.requests += t.requests;
+                peer_traffic.cachelines += t.cachelines;
+                peer_traffic.bytes_moved += t.bytes_moved;
+                peer_traffic.useful_bytes += t.useful_bytes;
+            }
+            if peer_rows > 0 {
+                let c = nvlink.peer_gather(&peer_traffic);
+                time_g = time_g.max(c.time_s);
+                link_bytes += c.bytes_on_link;
+                requests += c.requests;
+                split.peer_bytes += c.useful_bytes;
+                split.peer_bytes_on_link += c.split.peer_bytes_on_link;
+                split.peer_time_s += c.split.peer_time_s;
+            }
+            if !host.is_empty() {
+                let c = pcie.direct_gather(&count_requests(&host, feat_elems, model, shifted));
+                time_g = time_g.max(c.time_s);
+                link_bytes += c.bytes_on_link;
+                requests += c.requests;
+                split.host_bytes += c.useful_bytes;
+                split.host_bytes_on_link += c.split.host_bytes_on_link;
+                split.host_time_s += c.split.host_time_s;
+            }
+            split.local_bytes += local_rows * row_bytes;
+            step_time = step_time.max(time_g);
+        }
+
+        TransferCost {
+            time_s: step_time,
+            bytes_on_link: link_bytes,
+            useful_bytes: idx.len() as u64 * row_bytes,
+            requests,
+            cpu_time_s: 0.0,
+            split,
+        }
+    }
+
+    /// Read-only replica of [`NvmeStore::gather_cost`]'s pricing (hot
+    /// split, host zero-copy stream, storage block reads, serialized link
+    /// occupancies) with the recording step omitted.
+    fn nvme_classify_cost(
+        nv: &NvmeStore,
+        idx: &[u32],
+        feat_elems: u64,
+        row_bytes: u64,
+        sys: &SystemProfile,
+    ) -> TransferCost {
+        let useful = idx.len() as u64 * row_bytes;
+        let mut host_stream = Vec::new();
+        let mut storage_slots = Vec::new();
+        for &r in idx {
+            if nv.is_gpu_hot(r) {
+                continue;
+            }
+            match nv.cold_slot(r) {
+                None => host_stream.push(r),
+                Some(s) => storage_slots.push(s),
+            }
+        }
+        if host_stream.is_empty() && storage_slots.is_empty() {
+            return TransferCost {
+                time_s: sys.kernel_launch_s,
+                bytes_on_link: 0,
+                useful_bytes: useful,
+                requests: 0,
+                cpu_time_s: 0.0,
+                split: PathSplit {
+                    local_bytes: useful,
+                    ..PathSplit::default()
+                },
+            };
+        }
+        let mut time_s = sys.kernel_launch_s;
+        let mut bytes_on_link = 0u64;
+        let mut requests = 0u64;
+        let mut split = PathSplit::default();
+        if !host_stream.is_empty() {
+            let model = WarpModel::for_row_layout(row_bytes, feat_elems);
+            let shifted = model.shift_applies(feat_elems);
+            let c = PcieLink::new(sys)
+                .direct_gather(&count_requests(&host_stream, feat_elems, model, shifted));
+            time_s += c.split.host_time_s;
+            bytes_on_link += c.bytes_on_link;
+            requests += c.requests;
+            split.host_bytes = c.split.host_bytes;
+            split.host_bytes_on_link = c.split.host_bytes_on_link;
+            split.host_time_s = c.split.host_time_s;
+        }
+        if !storage_slots.is_empty() {
+            let traffic = count_block_ios(&storage_slots, row_bytes, sys.nvme.block_bytes);
+            let c = NvmeLink::new(sys).read(&traffic);
+            time_s += c.split.storage_time_s;
+            bytes_on_link += c.bytes_on_link;
+            requests += c.requests;
+            split.storage_bytes = c.split.storage_bytes;
+            split.storage_bytes_on_link = c.split.storage_bytes_on_link;
+            split.storage_time_s = c.split.storage_time_s;
+        }
+        split.local_bytes = useful - split.host_bytes - split.storage_bytes;
+        TransferCost {
+            time_s,
+            bytes_on_link,
+            useful_bytes: useful,
+            requests,
+            cpu_time_s: 0.0,
+            split,
+        }
+    }
+}
+
+/// Traffic accounting of one pushed-down gather
+/// ([`FeatureStore::pushdown_cost`], DESIGN.md §14).  `cost` is what the
+/// simulated epoch pays instead of the raw gather's [`TransferCost`]; the
+/// remaining fields decompose it for `EpochReport::pushdown` and the
+/// `pushdown_sweep` bench's reduction factors.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PushdownCost {
+    /// Simulated transfer cost of the pushed-down step: self stream +
+    /// aggregate streams + near-memory reduction time, serialized.
+    pub cost: TransferCost,
+    /// Link bytes of the destination self stream alone.
+    pub self_bytes_on_link: u64,
+    /// Link bytes of the aggregate streams (all tiers; includes the NVMe
+    /// block reads behind storage-side partials).
+    pub agg_bytes_on_link: u64,
+    /// Destination rows the self stream priced (post-dedup when dedup on).
+    pub dst_rows: u64,
+    /// Masked neighbor slots the aggregate streams replace.
+    pub neighbor_rows: u64,
+    /// Neighbor slots reduced off the requesting GPU (host / peer /
+    /// storage side) — the near-memory workload.
+    pub off_gpu_neighbor_rows: u64,
+    /// Partial-aggregate rows shipped across all tiers.
+    pub agg_rows: u64,
+    /// Near-memory reduction FLOPs (one add per off-GPU neighbor element).
+    pub near_mem_flops: u64,
+    /// Near-memory reduction seconds (`near_mem_flops /
+    /// near_mem_fp32_flops`), serialized into `cost.time_s`.
+    pub near_mem_s: f64,
 }
 
 #[cfg(test)]
@@ -1028,5 +1510,145 @@ mod tests {
             500, 24, 8, AccessMode::GpuResident, &small, 1, Precision::Int8, None, None, None,
         )
         .unwrap();
+    }
+
+    /// Deterministic single-layer batch over this fixture's 500-row table:
+    /// destination `j` is `j*7 % 500`, neighbor `k` of `j` is
+    /// `(j*13 + k*29) % 500`, all slots masked in.
+    fn pushdown_batch(n_dst: usize, fanout: usize) -> crate::sampler::batch::MiniBatch {
+        let mut src: Vec<u32> = (0..n_dst as u32).map(|j| j * 7 % 500).collect();
+        let mut nbr = Vec::new();
+        for j in 0..n_dst {
+            for k in 0..fanout {
+                nbr.push((n_dst + j * fanout + k) as i32);
+                src.push((j as u32 * 13 + k as u32 * 29) % 500);
+            }
+        }
+        crate::sampler::batch::MiniBatch {
+            src_nodes: src,
+            layers: vec![crate::sampler::batch::LayerBlock {
+                n_dst,
+                fanout,
+                nbr,
+                mask: vec![1.0; n_dst * fanout],
+            }],
+            seeds: vec![0; n_dst],
+            labels: vec![0; n_dst],
+        }
+    }
+
+    #[test]
+    fn gpu_resident_pushdown_is_launch_only() {
+        // Everything already sits in device memory: push-down moves
+        // nothing, reduces nothing near-memory, and costs one launch.
+        let st = store(AccessMode::GpuResident);
+        let plan = AggregatePlan::build(&pushdown_batch(16, 5)).unwrap();
+        let pd = st.pushdown_cost(&plan, true).unwrap();
+        assert_eq!(pd.cost.bytes_on_link, 0);
+        assert_eq!(pd.agg_rows, 0);
+        assert_eq!(pd.near_mem_flops, 0);
+        assert_eq!(pd.off_gpu_neighbor_rows, 0);
+        assert_eq!(pd.cost.time_s, sys().kernel_launch_s);
+    }
+
+    #[test]
+    fn pushdown_cuts_link_bytes_vs_raw_gather_when_fanout_amplifies() {
+        // The tentpole claim at the store level: shipping one partial per
+        // destination beats shipping `fanout` raw neighbor rows on every
+        // link-paying single-tier mode (push-down priced *before* the raw
+        // gather, so stateful tiers classify the same pre-batch state).
+        let mb = pushdown_batch(32, 8);
+        let plan = AggregatePlan::build(&mb).unwrap();
+        for (label, st) in [
+            ("cpu", store(AccessMode::CpuGather)),
+            ("naive", store(AccessMode::UnifiedNaive)),
+            ("aligned", store(AccessMode::UnifiedAligned)),
+            ("tiered", tiered_store(0.2)),
+            ("sharded", sharded_store(4, 0.5)),
+            ("nvme", nvme_store(0.9, 0.1)),
+        ] {
+            let pd = st.pushdown_cost(&plan, false).unwrap();
+            let raw = st.gather(&mb.src_nodes).unwrap().1;
+            assert!(
+                pd.cost.bytes_on_link < raw.bytes_on_link,
+                "{label}: pushdown {} !< raw {}",
+                pd.cost.bytes_on_link,
+                raw.bytes_on_link
+            );
+            assert_eq!(pd.neighbor_rows, 32 * 8);
+            assert_eq!(pd.near_mem_flops, pd.off_gpu_neighbor_rows * 24);
+        }
+    }
+
+    #[test]
+    fn pushdown_composes_with_dedup_on_the_self_stream() {
+        // Repeated destinations (hub seeds) dedup away from the self
+        // stream exactly like any other gather stream.
+        let mut mb = pushdown_batch(40, 4);
+        for j in 0..40 {
+            mb.src_nodes[j] = (j as u32 % 10) * 3; // 10 distinct dsts
+        }
+        let plan = AggregatePlan::build(&mb).unwrap();
+        let st = store(AccessMode::UnifiedAligned);
+        let raw = st.pushdown_cost(&plan, false).unwrap();
+        let ded = st.pushdown_cost(&plan, true).unwrap();
+        assert_eq!(raw.dst_rows, 40);
+        assert_eq!(ded.dst_rows, 10);
+        assert!(ded.self_bytes_on_link < raw.self_bytes_on_link);
+        // The aggregate streams are per-destination-slot either way.
+        assert_eq!(ded.agg_bytes_on_link, raw.agg_bytes_on_link);
+        assert_eq!(ded.agg_rows, raw.agg_rows);
+    }
+
+    #[test]
+    fn fully_hot_tiered_pushdown_ships_nothing() {
+        let st = tiered_store(1.0);
+        let plan = AggregatePlan::build(&pushdown_batch(16, 6)).unwrap();
+        let pd = st.pushdown_cost(&plan, true).unwrap();
+        assert_eq!(pd.cost.bytes_on_link, 0);
+        assert_eq!(pd.agg_rows, 0);
+        assert_eq!(pd.near_mem_flops, 0);
+    }
+
+    #[test]
+    fn pushdown_cost_is_read_only() {
+        // Pricing the pushed-down step must not perturb tier state: two
+        // calls agree bitwise, and the store's subsequent raw gather costs
+        // exactly what a fresh store's does.
+        let mb = pushdown_batch(24, 6);
+        let plan = AggregatePlan::build(&mb).unwrap();
+        for (label, mk) in [
+            ("tiered", (|| tiered_store(0.3)) as fn() -> FeatureStore),
+            ("sharded", || sharded_store(4, 0.5)),
+            ("nvme", || nvme_store(0.8, 0.2)),
+        ] {
+            let st = mk();
+            let a = st.pushdown_cost(&plan, true).unwrap();
+            let b = st.pushdown_cost(&plan, true).unwrap();
+            assert_eq!(a.cost.bytes_on_link, b.cost.bytes_on_link, "{label}");
+            assert_eq!(a.cost.time_s.to_bits(), b.cost.time_s.to_bits(), "{label}");
+            assert_eq!(a.agg_rows, b.agg_rows, "{label}");
+            let priced = st.gather(&mb.src_nodes).unwrap().1;
+            let fresh = mk().gather(&mb.src_nodes).unwrap().1;
+            assert_eq!(priced.bytes_on_link, fresh.bytes_on_link, "{label}");
+            assert_eq!(priced.time_s.to_bits(), fresh.time_s.to_bits(), "{label}");
+        }
+    }
+
+    #[test]
+    fn sharded_pushdown_ships_peer_partials_and_nvme_pays_block_reads() {
+        let plan = AggregatePlan::build(&pushdown_batch(24, 6)).unwrap();
+        // 4 GPUs, fully hot shards: neighbors owned elsewhere arrive as
+        // NVLink peer partials, none via the host.
+        let pd = sharded_store(4, 1.0).pushdown_cost(&plan, true).unwrap();
+        assert!(pd.cost.split.peer_bytes > 0);
+        assert_eq!(pd.cost.split.host_bytes, 0);
+        assert!(pd.agg_rows > 0 && pd.near_mem_flops > 0);
+        // Mostly-cold NVMe store: storage-side partials pay their block
+        // reads (storage occupancy) and cross the host link as aggregates.
+        let pd = nvme_store(0.2, 0.05).pushdown_cost(&plan, true).unwrap();
+        assert!(pd.cost.split.storage_bytes_on_link > 0);
+        assert!(pd.cost.split.storage_time_s > 0.0);
+        assert!(pd.agg_bytes_on_link > 0);
     }
 }

@@ -23,6 +23,7 @@
 
 use crate::error::{Error, Result};
 use crate::runtime::state::StepMetrics;
+use crate::tensor::indexing::gather_rows_into_parallel;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
@@ -34,6 +35,10 @@ pub struct NativeTrainState {
     dim: usize,
     classes: usize,
     lr: f32,
+    /// Worker count for the chunked root-row `index_select`
+    /// (`--sampler-workers`); chunking only partitions the copy, so the
+    /// numerics are bitwise identical at every value.
+    workers: usize,
     /// Weights `[dim, classes]`, row-major.
     w: Vec<f32>,
     /// Bias `[classes]`.
@@ -55,10 +60,17 @@ impl NativeTrainState {
             dim,
             classes,
             lr,
+            workers: 1,
             w,
             b: vec![0.0; classes],
             steps: 0,
         }
+    }
+
+    /// Fan the root-row extraction across `n` workers (clamped to at
+    /// least 1).  Purely a throughput knob: see [`NativeTrainState::step`].
+    pub fn set_workers(&mut self, n: usize) {
+        self.workers = n.max(1);
     }
 
     pub fn dim(&self) -> usize {
@@ -105,6 +117,17 @@ impl NativeTrainState {
         }
         let t = Timer::start();
 
+        // Chunked `index_select` of the root block: the roots are the
+        // destination prefix of the gathered features, and extracting them
+        // goes through the same parallel-gather seam as every other row
+        // copy (`--sampler-workers` fans the memcpy).  The chunking only
+        // partitions the copy, never reorders it, so the extracted block —
+        // and therefore every loss — is bitwise identical at any worker
+        // count (pinned by `root_extraction_is_worker_count_invariant`).
+        let root_idx: Vec<u32> = (0..n as u32).collect();
+        let mut roots = vec![0f32; n * self.dim];
+        gather_rows_into_parallel(x, self.dim, &root_idx, &mut roots, self.workers)?;
+
         let mut grad_w = vec![0f32; self.dim * k];
         let mut grad_b = vec![0f32; k];
         let mut logits = vec![0f32; k];
@@ -119,7 +142,7 @@ impl NativeTrainState {
                 )));
             }
             let y = y as usize;
-            let xi = &x[i * self.dim..(i + 1) * self.dim];
+            let xi = &roots[i * self.dim..(i + 1) * self.dim];
 
             self.logits_into(xi, &mut logits);
 
@@ -228,6 +251,31 @@ mod tests {
             losses
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn root_extraction_is_worker_count_invariant() {
+        // The chunked index_select over the root block must be bitwise
+        // neutral: any `--sampler-workers` value produces the exact same
+        // loss sequence AND the exact same final parameters as workers=1.
+        let synth = SyntheticFeatures::new(24, 6, 9);
+        let run = |workers: usize| {
+            let mut s = NativeTrainState::init(24, 6, DEFAULT_LR, 13);
+            s.set_workers(workers);
+            let mut losses = Vec::new();
+            for step in 0..6u32 {
+                let nodes: Vec<u32> = (0..11u32).map(|i| (step * 11 + i) % 64).collect();
+                let (x, labels) = batch(&synth, &nodes);
+                losses.push(s.step(&x, &labels).unwrap().loss.to_bits());
+            }
+            let w_bits: Vec<u32> = s.w.iter().map(|v| v.to_bits()).collect();
+            let b_bits: Vec<u32> = s.b.iter().map(|v| v.to_bits()).collect();
+            (losses, w_bits, b_bits)
+        };
+        let reference = run(1);
+        for workers in [2usize, 3, 8, 64] {
+            assert_eq!(run(workers), reference, "workers={workers}");
+        }
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Per-destination aggregation plan for near-memory push-down (DESIGN.md §14).
+//!
+//! GNNear's observation (arXiv:2111.00680): the first thing a SAGE-style
+//! layer does with the gathered neighbor rows is *reduce* them (sum/mean per
+//! destination).  If the reduction moves to where the rows live, the link
+//! only has to carry one partial-aggregate row per destination plus a
+//! per-destination neighbor count — a model-aware traffic cut of up to the
+//! fan-out factor, multiplicative with the PR 5 dedup.
+//!
+//! [`AggregatePlan`] is the sampler-side artifact, built beside
+//! [`GatherPlan`](crate::sampler::compact::GatherPlan) from a mini-batch's
+//! input layer (layer 0, the widest one — the layer whose sources are the
+//! full `src_nodes` gather stream).  It records, for every layer-0
+//! destination, the *masked* neighbor slots in a pinned canonical order:
+//! **ascending global neighbor id** (stable, so duplicate ids keep their
+//! slot order — bitwise harmless, identical rows sum identically in either
+//! order).  That single pinned order is what makes the pushed-down sum
+//! bitwise reproducible: every tier sums its resident subsequence in this
+//! order and the tier partials combine by ascending id again, which is
+//! associativity-free — each destination's neighbors are summed left to
+//! right over one globally sorted list, no matter how placement slices it.
+//!
+//! The plan is placement-agnostic: tier classification (which neighbors are
+//! GPU-hot, host-resident, peer-sharded, or NVMe-cold) happens in
+//! [`FeatureStore::pushdown_cost`](crate::featurestore::FeatureStore::pushdown_cost),
+//! which walks `neighbor_ids()` read-only against the store's current
+//! residency maps.
+
+use crate::sampler::batch::MiniBatch;
+use crate::error::{Error, Result};
+
+/// CSR of each layer-0 destination's masked neighbors, sorted ascending by
+/// global id — the pinned floating-point reduction order for push-down.
+#[derive(Clone, Debug)]
+pub struct AggregatePlan {
+    n_dst: usize,
+    fanout: usize,
+    /// Global ids of the `n_dst` destinations (the `src_nodes` prefix).
+    dst_nodes: Vec<u32>,
+    /// CSR offsets, `n_dst + 1` entries.
+    offsets: Vec<u32>,
+    /// Global neighbor ids, ascending within each destination's segment.
+    nbr_ids: Vec<u32>,
+    /// Matching local row index into the `src_nodes` feature matrix.
+    nbr_slots: Vec<u32>,
+}
+
+impl AggregatePlan {
+    /// Build the plan from a batch's input layer (`mb.layers[0]`).
+    pub fn build(mb: &MiniBatch) -> Result<AggregatePlan> {
+        let l0 = mb
+            .layers
+            .first()
+            .ok_or_else(|| Error::Pipeline("aggregate plan needs >= 1 layer".into()))?;
+        let n_dst = l0.n_dst;
+        let fanout = l0.fanout;
+        if mb.src_nodes.len() != l0.n_src() {
+            return Err(Error::Pipeline(format!(
+                "src_nodes {} != layer0 n_src {}",
+                mb.src_nodes.len(),
+                l0.n_src()
+            )));
+        }
+        let dst_nodes = mb.src_nodes[..n_dst].to_vec();
+        let mut offsets = Vec::with_capacity(n_dst + 1);
+        let mut nbr_ids = Vec::with_capacity(n_dst * fanout);
+        let mut nbr_slots = Vec::with_capacity(n_dst * fanout);
+        let mut seg: Vec<(u32, u32)> = Vec::with_capacity(fanout);
+        offsets.push(0u32);
+        for j in 0..n_dst {
+            seg.clear();
+            for k in 0..fanout {
+                let s = j * fanout + k;
+                if l0.mask[s] == 1.0 {
+                    let slot = l0.nbr[s] as u32;
+                    seg.push((mb.src_nodes[slot as usize], slot));
+                }
+            }
+            // Pinned canonical order: ascending global id, stable on ties.
+            seg.sort_by_key(|&(id, _)| id);
+            for &(id, slot) in &seg {
+                nbr_ids.push(id);
+                nbr_slots.push(slot);
+            }
+            offsets.push(nbr_ids.len() as u32);
+        }
+        Ok(AggregatePlan {
+            n_dst,
+            fanout,
+            dst_nodes,
+            offsets,
+            nbr_ids,
+            nbr_slots,
+        })
+    }
+
+    pub fn n_dst(&self) -> usize {
+        self.n_dst
+    }
+
+    pub fn fanout(&self) -> usize {
+        self.fanout
+    }
+
+    /// Global ids of the destinations — the push-down *self stream* (each
+    /// destination still needs its own feature row on the GPU).
+    pub fn dst_nodes(&self) -> &[u32] {
+        &self.dst_nodes
+    }
+
+    /// Total masked neighbor slots across all destinations — the raw rows
+    /// the aggregate stream replaces.
+    pub fn neighbor_rows(&self) -> usize {
+        self.nbr_ids.len()
+    }
+
+    /// Global neighbor ids for destination `j`, ascending.
+    pub fn neighbor_ids(&self, j: usize) -> &[u32] {
+        let lo = self.offsets[j] as usize;
+        let hi = self.offsets[j + 1] as usize;
+        &self.nbr_ids[lo..hi]
+    }
+
+    /// Per-destination masked neighbor counts (shipped alongside the
+    /// aggregate rows so the consumer can finish a mean).
+    pub fn counts(&self) -> Vec<u32> {
+        (0..self.n_dst)
+            .map(|j| self.offsets[j + 1] - self.offsets[j])
+            .collect()
+    }
+
+    /// Reference reduction over a gathered feature matrix: `x0` holds
+    /// `src_nodes.len()` rows of `f` floats in src order (exactly what the
+    /// gather stage produces), and the output gets one summed row per
+    /// destination — zeros for isolated destinations — plus the counts.
+    ///
+    /// The summation walks each destination's neighbors in the plan's
+    /// pinned ascending-id order, left to right, so the result is the
+    /// bitwise reference every pushed-down tier combination must hit.
+    pub fn aggregate_gathered(
+        &self,
+        x0: &[f32],
+        f: usize,
+        agg_out: &mut [f32],
+        counts_out: &mut [u32],
+    ) -> Result<()> {
+        if agg_out.len() != self.n_dst * f {
+            return Err(Error::Pipeline(format!(
+                "agg_out len {} != n_dst {} * f {}",
+                agg_out.len(),
+                self.n_dst,
+                f
+            )));
+        }
+        if counts_out.len() != self.n_dst {
+            return Err(Error::Pipeline("counts_out len != n_dst".into()));
+        }
+        agg_out.fill(0.0);
+        for j in 0..self.n_dst {
+            let lo = self.offsets[j] as usize;
+            let hi = self.offsets[j + 1] as usize;
+            counts_out[j] = (hi - lo) as u32;
+            let dst = &mut agg_out[j * f..(j + 1) * f];
+            for &slot in &self.nbr_slots[lo..hi] {
+                let row = slot as usize * f;
+                let src = x0
+                    .get(row..row + f)
+                    .ok_or_else(|| Error::Pipeline("x0 too short for plan slot".into()))?;
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d += s;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// FLOPs of the reduction itself (`off-link` or on-GPU, the work is the
+    /// same): one add per neighbor element.
+    pub fn reduction_flops(&self, f: usize) -> u64 {
+        self.nbr_ids.len() as u64 * f as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{rmat, RmatParams};
+    use crate::sampler::batch::LayerBlock;
+    use crate::sampler::neighbor::NeighborSampler;
+    use crate::util::rng::Rng;
+
+    fn hand_batch() -> MiniBatch {
+        // 2 dsts, fanout 2; dst0 has neighbors [9, 3] (unsorted on purpose),
+        // dst1 is isolated (mask 0).
+        MiniBatch {
+            src_nodes: vec![7, 5, 9, 3, 5, 5],
+            layers: vec![LayerBlock {
+                n_dst: 2,
+                fanout: 2,
+                nbr: vec![2, 3, 4, 5],
+                mask: vec![1.0, 1.0, 0.0, 0.0],
+            }],
+            seeds: vec![7, 5],
+            labels: vec![0, 1],
+        }
+    }
+
+    #[test]
+    fn neighbors_sorted_ascending_per_destination() {
+        let plan = AggregatePlan::build(&hand_batch()).unwrap();
+        assert_eq!(plan.n_dst(), 2);
+        assert_eq!(plan.dst_nodes(), &[7, 5]);
+        assert_eq!(plan.neighbor_ids(0), &[3, 9]); // sorted, was [9, 3]
+        assert_eq!(plan.neighbor_ids(1), &[] as &[u32]);
+        assert_eq!(plan.counts(), vec![2, 0]);
+        assert_eq!(plan.neighbor_rows(), 2);
+        assert_eq!(plan.reduction_flops(4), 8);
+    }
+
+    #[test]
+    fn aggregate_matches_hand_sum_and_zeros_isolated() {
+        let plan = AggregatePlan::build(&hand_batch()).unwrap();
+        let f = 2;
+        // row r = [r, 10r]
+        let x0: Vec<f32> = hand_batch()
+            .src_nodes
+            .iter()
+            .flat_map(|&r| vec![r as f32, 10.0 * r as f32])
+            .collect();
+        let mut agg = vec![f32::NAN; 2 * f];
+        let mut counts = vec![0u32; 2];
+        plan.aggregate_gathered(&x0, f, &mut agg, &mut counts).unwrap();
+        // dst0: rows for 9 and 3 -> [12, 120]; dst1 isolated -> zeros.
+        assert_eq!(agg, vec![12.0, 120.0, 0.0, 0.0]);
+        assert_eq!(counts, vec![2, 0]);
+    }
+
+    #[test]
+    fn pinned_order_is_slot_permutation_invariant() {
+        // Two batches with the same (dst, neighbor-multiset) content but
+        // different slot orderings must produce bitwise-identical sums —
+        // that is what "pinned ascending-id order" buys.
+        let mut a = hand_batch();
+        a.layers[0].mask = vec![1.0, 1.0, 1.0, 1.0];
+        let mut b = a.clone();
+        // swap dst0's two neighbor slots (and their src rows stay in place;
+        // nbr indirection is what moves).
+        b.layers[0].nbr = vec![3, 2, 4, 5];
+        let f = 3;
+        let x0: Vec<f32> = a
+            .src_nodes
+            .iter()
+            .flat_map(|&r| vec![0.1 + r as f32, 0.7 * r as f32, -(r as f32)])
+            .collect();
+        let (pa, pb) = (AggregatePlan::build(&a).unwrap(), AggregatePlan::build(&b).unwrap());
+        let mut ra = vec![0.0; 2 * f];
+        let mut rb = vec![0.0; 2 * f];
+        let mut c = vec![0u32; 2];
+        pa.aggregate_gathered(&x0, f, &mut ra, &mut c).unwrap();
+        pb.aggregate_gathered(&x0, f, &mut rb, &mut c).unwrap();
+        assert_eq!(ra.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   rb.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sampled_batches_build_consistent_plans() {
+        let g = rmat(400, 3000, RmatParams::default(), 11).unwrap();
+        let s = NeighborSampler::new(&g, &[3, 2], 10);
+        let mut rng = Rng::new(5);
+        let seeds: Vec<u32> = (0..8).collect();
+        let mb = s.sample(&seeds, &mut rng);
+        let plan = AggregatePlan::build(&mb).unwrap();
+        assert_eq!(plan.n_dst(), mb.layers[0].n_dst);
+        assert_eq!(plan.dst_nodes(), &mb.src_nodes[..plan.n_dst()]);
+        // masked slots == plan rows
+        let masked: usize = mb.layers[0].mask.iter().filter(|&&m| m == 1.0).count();
+        assert_eq!(plan.neighbor_rows(), masked);
+        for j in 0..plan.n_dst() {
+            let ids = plan.neighbor_ids(j);
+            assert!(ids.windows(2).all(|w| w[0] <= w[1]), "unsorted at dst {j}");
+        }
+    }
+
+    #[test]
+    fn empty_layer_batch_is_rejected_not_panicking() {
+        let mb = MiniBatch {
+            src_nodes: vec![],
+            layers: vec![],
+            seeds: vec![],
+            labels: vec![],
+        };
+        assert!(AggregatePlan::build(&mb).is_err());
+    }
+}

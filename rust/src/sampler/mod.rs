@@ -23,11 +23,18 @@
 //! so [`compact`] plans a deduplicated gather ([`GatherPlan`]): fetch each
 //! distinct row once, scatter back via the inverse permutation.  Enabled
 //! by default (`--no-dedup` restores the duplicated stream bit-exactly).
+//!
+//! [`aggregate`] plans the near-memory push-down (`--aggregate-pushdown`,
+//! DESIGN.md §14): each layer-0 destination's masked neighbors in pinned
+//! ascending-global-id order, so tiers can ship one partial-aggregate row
+//! per destination instead of `fanout` raw rows, bitwise-reproducibly.
 
+pub mod aggregate;
 pub mod batch;
 pub mod compact;
 pub mod neighbor;
 
+pub use aggregate::AggregatePlan;
 pub use batch::{LayerBlock, MiniBatch};
 pub use compact::{CoalescedGatherPlan, GatherPlan};
 pub use neighbor::NeighborSampler;

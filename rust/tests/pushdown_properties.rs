@@ -1,0 +1,235 @@
+//! Cross-layer properties of aggregation push-down
+//! (`sampler::aggregate::AggregatePlan` + `FeatureStore::pushdown_cost`,
+//! DESIGN.md §14):
+//!
+//! * **numerics** — the pinned-order reduction is bitwise identical in
+//!   all eight access modes at every storage precision (the aggregate is
+//!   computed once from the gathered block; placement can never touch
+//!   it), and the trainer's loss/accuracy trajectories are bitwise
+//!   identical with the knob on or off;
+//! * **traffic** — with fanout > 1, push-down strictly reduces the
+//!   simulated link bytes in every transfer-paying mode (uvm is priced
+//!   but not gated — DESIGN.md §14 documents its ideal-link compromise);
+//! * **composition** — dedup shrinks the pushed self stream, leaves the
+//!   aggregate stream untouched, and the composed run still beats raw;
+//! * **anchoring** — `--no-pushdown` runs are bit-reproducible with an
+//!   all-zero push-down report and no near-memory power term (the
+//!   pre-PR accounting, untouched);
+//! * **bookkeeping** — pushed-down epochs leave every page-cache pin
+//!   balanced (`pins == unpins`, nothing blocked).
+
+use ptdirect::config::{AccessMode, Backend, Precision, RunConfig, ShardPolicy, SystemProfile};
+use ptdirect::coordinator::{ServingEngine, Trainer};
+use ptdirect::featurestore::FeatureStore;
+use ptdirect::graph::generator::{rmat, RmatParams};
+use ptdirect::sampler::{AggregatePlan, NeighborSampler};
+use ptdirect::util::rng::Rng;
+
+const STEPS: u32 = 6;
+
+/// Hermetic config mirroring `dedup_properties.rs`: native backend, no
+/// artifacts, sharded runs get real partitioning.
+fn cfg(mode: AccessMode, pushdown: bool) -> RunConfig {
+    RunConfig {
+        dataset: "product".into(),
+        arch: "sage".into(),
+        mode,
+        steps_per_epoch: STEPS,
+        scale: 2048,
+        feature_budget: 8 << 20,
+        seed: 42,
+        backend: Backend::Native,
+        artifacts_dir: "this-directory-does-not-exist".into(),
+        aggregate_pushdown: pushdown,
+        num_gpus: if mode == AccessMode::Sharded { 4 } else { 1 },
+        shard_policy: ShardPolicy::Degree,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn reduction_bitwise_identical_across_modes_and_precisions() {
+    // The pushed-down aggregate is defined as the pinned ascending-id
+    // reduction over the gathered block — gather values are mode-invariant
+    // at a fixed precision, so the aggregate must be too, bit for bit.
+    let sys = SystemProfile::system1();
+    let g = rmat(500, 5000, RmatParams::default(), 11).unwrap();
+    let s = NeighborSampler::new(&g, &[7], 8);
+    let mut rng = Rng::new(3);
+    let seeds: Vec<u32> = (0..24u32).map(|i| i * 19 % 500).collect();
+    let mb = s.sample(&seeds, &mut rng);
+    let plan = AggregatePlan::build(&mb).unwrap();
+    let f = 16usize;
+    for precision in Precision::all() {
+        let mut reference: Option<Vec<u32>> = None;
+        for mode in AccessMode::all() {
+            let st = FeatureStore::build_quantized(
+                500, f, 8, mode, &sys, 7, precision, None, None, None,
+            )
+            .unwrap();
+            let (x0, _) = st.gather(&mb.src_nodes).unwrap();
+            let mut agg = vec![0f32; plan.n_dst() * f];
+            let mut counts = vec![0u32; plan.n_dst()];
+            plan.aggregate_gathered(&x0, f, &mut agg, &mut counts).unwrap();
+            assert_eq!(counts, plan.counts(), "{mode:?} {precision:?}");
+            let bits: Vec<u32> = agg.iter().map(|v| v.to_bits()).collect();
+            match &reference {
+                None => reference = Some(bits),
+                Some(r) => assert_eq!(
+                    &bits, r,
+                    "{mode:?} {precision:?}: placement changed the aggregate"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn losses_bitwise_identical_with_pushdown_on_and_off_in_all_modes() {
+    // Push-down is a pricing change only: the training numerics may never
+    // notice the knob, in any mode.
+    for mode in AccessMode::all() {
+        let r_on = Trainer::new(cfg(mode, true)).unwrap().run_epoch().unwrap();
+        let r_off = Trainer::new(cfg(mode, false)).unwrap().run_epoch().unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&r_on.losses), bits(&r_off.losses), "{mode:?}: loss trajectory moved");
+        assert_eq!(bits(&r_on.accs), bits(&r_off.accs), "{mode:?}: accuracy trajectory moved");
+    }
+}
+
+#[test]
+fn pushdown_strictly_reduces_link_bytes_in_every_transfer_paying_mode() {
+    // Default fanouts are > 1, so the aggregate stream (one row + count
+    // per destination) must strictly undercut shipping raw neighbor rows
+    // wherever a link is paid at all.
+    for mode in [
+        AccessMode::CpuGather,
+        AccessMode::UnifiedNaive,
+        AccessMode::UnifiedAligned,
+        AccessMode::Tiered,
+        AccessMode::Sharded,
+        AccessMode::Nvme,
+    ] {
+        let r_on = Trainer::new(cfg(mode, true)).unwrap().run_epoch().unwrap();
+        let r_off = Trainer::new(cfg(mode, false)).unwrap().run_epoch().unwrap();
+        assert!(r_on.pushdown.enabled, "{mode:?}");
+        assert_eq!(
+            r_on.pushdown.raw_bytes_on_link, r_off.bytes_on_link,
+            "{mode:?}: raw side of the report must be the off-run's bytes"
+        );
+        assert_eq!(
+            r_on.bytes_on_link, r_on.pushdown.pushed_bytes_on_link,
+            "{mode:?}: epoch accounting must price the pushed stream"
+        );
+        assert!(
+            r_on.bytes_on_link < r_off.bytes_on_link,
+            "{mode:?}: pushed {} !< raw {}",
+            r_on.bytes_on_link,
+            r_off.bytes_on_link
+        );
+        assert!(r_on.pushdown.reduction() > 1.0, "{mode:?}");
+        assert!(r_on.pushdown.near_mem_flops > 0, "{mode:?}: no near-memory work recorded");
+        assert!(r_on.pushdown.near_mem_s > 0.0, "{mode:?}");
+    }
+    // GpuResident: nothing crosses a link either way, and every neighbor
+    // is local — no near-memory work at all.
+    let r = Trainer::new(cfg(AccessMode::GpuResident, true)).unwrap().run_epoch().unwrap();
+    assert_eq!(r.bytes_on_link, 0);
+    assert_eq!(r.pushdown.pushed_bytes_on_link, 0);
+    assert_eq!(r.pushdown.near_mem_flops, 0);
+    // Uvm: priced (report populated) but not byte-gated (DESIGN.md §14).
+    let r = Trainer::new(cfg(AccessMode::Uvm, true)).unwrap().run_epoch().unwrap();
+    assert!(r.pushdown.enabled);
+    assert!(r.pushdown.pushed_bytes_on_link > 0);
+}
+
+#[test]
+fn pushdown_composes_with_dedup() {
+    // dedup off vs on, push-down on in both: dedup may only shrink the
+    // (self-stream) bytes further, and both stay under their raw
+    // counterparts — the two optimizations multiply, never fight.
+    for mode in [AccessMode::UnifiedAligned, AccessMode::Tiered, AccessMode::Nvme] {
+        let mut c_nd = cfg(mode, true);
+        c_nd.dedup = false;
+        let r_push_nodedup = Trainer::new(c_nd).unwrap().run_epoch().unwrap();
+        let r_push_dedup = Trainer::new(cfg(mode, true)).unwrap().run_epoch().unwrap();
+        let mut c_raw_nd = cfg(mode, false);
+        c_raw_nd.dedup = false;
+        let r_raw_nodedup = Trainer::new(c_raw_nd).unwrap().run_epoch().unwrap();
+        assert!(
+            r_push_dedup.bytes_on_link <= r_push_nodedup.bytes_on_link,
+            "{mode:?}: dedup worsened the pushed stream"
+        );
+        assert!(
+            r_push_nodedup.bytes_on_link < r_raw_nodedup.bytes_on_link,
+            "{mode:?}: push-down alone must beat raw"
+        );
+        assert!(
+            r_push_dedup.bytes_on_link < r_raw_nodedup.bytes_on_link,
+            "{mode:?}: composed must beat raw"
+        );
+        // The aggregate stream itself is per-destination and therefore
+        // untouched by self-stream dedup.
+        assert_eq!(
+            r_push_dedup.pushdown.agg_bytes_on_link,
+            r_push_nodedup.pushdown.agg_bytes_on_link,
+            "{mode:?}"
+        );
+    }
+}
+
+#[test]
+fn no_pushdown_anchor_is_bit_reproducible_and_report_free() {
+    // The off-path never calls pushdown_cost, so two identical off runs
+    // must agree bit for bit and carry an empty report — the pre-PR
+    // accounting, untouched.
+    for mode in [AccessMode::CpuGather, AccessMode::Tiered, AccessMode::Nvme] {
+        let a = Trainer::new(cfg(mode, false)).unwrap().run_epoch().unwrap();
+        let b = Trainer::new(cfg(mode, false)).unwrap().run_epoch().unwrap();
+        assert_eq!(a.losses, b.losses, "{mode:?}");
+        assert_eq!(a.bytes_on_link, b.bytes_on_link, "{mode:?}");
+        assert_eq!(a.requests, b.requests, "{mode:?}");
+        assert_eq!(a.breakdown_sim.transfer_s, b.breakdown_sim.transfer_s, "{mode:?}");
+        assert!(!a.pushdown.enabled, "{mode:?}");
+        assert_eq!(a.pushdown.pushed_bytes_on_link, 0, "{mode:?}");
+        assert_eq!(a.pushdown.raw_bytes_on_link, 0, "{mode:?}");
+        assert_eq!(a.pushdown.near_mem_flops, 0, "{mode:?}");
+        assert_eq!(a.power.near_mem_util, 0.0, "{mode:?}: near-mem power without pushdown");
+    }
+}
+
+#[test]
+fn pushed_down_epochs_leave_page_cache_pins_balanced() {
+    // pushdown_cost walks residency read-only; the physical gather still
+    // pins and unpins pages.  After a pushed-down epoch the books must
+    // balance exactly as they do without the knob.
+    let r = Trainer::new(cfg(AccessMode::Tiered, true)).unwrap().run_epoch().unwrap();
+    let tier = r.tier.expect("tiered run reports tier stats");
+    assert_eq!(tier.pins, tier.unpins, "unbalanced pins under pushdown");
+    assert_eq!(tier.pin_blocked, 0);
+    let r = Trainer::new(cfg(AccessMode::Nvme, true)).unwrap().run_epoch().unwrap();
+    let nvme = r.nvme.expect("nvme run reports storage stats");
+    assert_eq!(nvme.tier.pins, nvme.tier.unpins, "unbalanced nvme pins under pushdown");
+    assert_eq!(nvme.tier.pin_blocked, 0);
+}
+
+#[test]
+fn serving_prices_per_request_pushdown() {
+    // The serving engine prices aggregates per admitted request (no
+    // cross-request merging on the aggregate streams) and must still
+    // undercut the raw coalesced gather.
+    let mut c = cfg(AccessMode::UnifiedAligned, true);
+    c.serve_requests = 24;
+    c.arrival_rps = 50_000.0;
+    c.admit_depth = 4096;
+    let r = ServingEngine::new(c).unwrap().run().unwrap();
+    assert!(r.pushdown.enabled);
+    assert!(r.pushdown.pushed_bytes_on_link > 0);
+    assert!(
+        r.pushdown.pushed_bytes_on_link < r.pushdown.raw_bytes_on_link,
+        "pushed {} !< raw {}",
+        r.pushdown.pushed_bytes_on_link,
+        r.pushdown.raw_bytes_on_link
+    );
+    assert!(r.pushdown.reduction() > 1.0);
+}
