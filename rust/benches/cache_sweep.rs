@@ -15,10 +15,11 @@
 //!    anchor), and a full-size cache hits on every access;
 //!  * every cell's internal gather pins balance (`pins == unpins`,
 //!    nothing blocked) and residency stays within the page budget;
-//!  * a `--precision` axis (fp32/fp16/int8 storage, DESIGN.md §13) over
-//!    one representative cell: hit rates must be precision-invariant
-//!    (placement is row-count based, bytes never steer residency) and
-//!    warm transfer time must be non-increasing as storage narrows.
+//!  * an `--eviction` × `--precision` axis (fp32/fp16/int8 storage,
+//!    DESIGN.md §13) over the page-8/hot-0.25 cell: within every eviction
+//!    policy, hit rates must be precision-invariant (placement is
+//!    row-count based, bytes never steer residency) and warm transfer
+//!    time must be non-increasing as storage narrows.
 //!
 //! Emits `BENCH_cache.json` — one record per grid cell, derived purely
 //! from simulated quantities, so back-to-back runs are byte-identical
@@ -155,61 +156,78 @@ fn main() {
     }
     t.print();
 
-    // ---- precision axis (DESIGN.md §13) over one representative cell ----
-    // Storage precision must never steer placement: the static/page-8/
-    // hot-0.25 cell replays with bitwise-identical hit rates at every
-    // precision, while the warm transfer time can only shrink as the
+    // ---- eviction × precision axis (DESIGN.md §13) ----
+    // Storage precision must never steer placement under *any* eviction
+    // policy: the page-8/hot-0.25 cell replays with bitwise-identical hit
+    // rates at every precision (static prefixes and warmed dynamic caches
+    // alike — promotion decisions are row-count based, bytes never steer
+    // residency), while the warm transfer time can only shrink as the
     // cold-path row narrows.
     let mut pt = Table::new(
-        "Cache sweep precision axis — static, 8-row pages, hot 0.25",
-        &["precision", "hit cold", "hit warm", "xfer ms"],
+        "Cache sweep eviction x precision axis — 8-row pages, hot 0.25",
+        &["policy", "precision", "hit cold", "hit warm", "xfer ms"],
     );
     let mut precision_rows = Vec::new();
     let mut precision_invariant = true;
     let mut narrowing_monotone = true;
-    let mut ref_hits: Option<(f64, f64)> = None;
-    let mut prev_time = f64::INFINITY;
-    for precision in Precision::all() {
-        let cfg = TierConfig {
-            page_rows: 8,
-            eviction: EvictionPolicy::Static,
-            ..static_tier_cfg(0.25, ranking.clone())
-        };
-        let store = FeatureStore::build_quantized(
-            NODES,
-            DIM,
-            CLASSES,
-            AccessMode::Tiered,
-            &SystemProfile::system1(),
-            SEED,
-            precision,
-            Some(cfg),
-            None,
-            None,
-        )
-        .expect("quantized tiered store");
-        let (_, cold) = epoch(&store, &trace);
-        let (time, warm) = epoch(&store, &trace);
-        match ref_hits {
-            None => ref_hits = Some((cold.hit_rate(), warm.hit_rate())),
-            Some(r) => precision_invariant &= r == (cold.hit_rate(), warm.hit_rate()),
+    for policy in EvictionPolicy::all() {
+        let mut ref_hits: Option<(f64, f64)> = None;
+        let mut prev_time = f64::INFINITY;
+        for precision in Precision::all() {
+            let cfg = if policy == EvictionPolicy::Static {
+                TierConfig {
+                    page_rows: 8,
+                    eviction: EvictionPolicy::Static,
+                    ..static_tier_cfg(0.25, ranking.clone())
+                }
+            } else {
+                TierConfig {
+                    hot_frac: 0.25,
+                    reserve_bytes: 0,
+                    promote: true,
+                    ranking: None,
+                    page_rows: 8,
+                    eviction: policy,
+                }
+            };
+            let store = FeatureStore::build_quantized(
+                NODES,
+                DIM,
+                CLASSES,
+                AccessMode::Tiered,
+                &SystemProfile::system1(),
+                SEED,
+                precision,
+                Some(cfg),
+                None,
+                None,
+            )
+            .expect("quantized tiered store");
+            let (_, cold) = epoch(&store, &trace);
+            let (time, warm) = epoch(&store, &trace);
+            match ref_hits {
+                None => ref_hits = Some((cold.hit_rate(), warm.hit_rate())),
+                Some(r) => precision_invariant &= r == (cold.hit_rate(), warm.hit_rate()),
+            }
+            narrowing_monotone &= time <= prev_time;
+            prev_time = time;
+            pt.row(&[
+                policy.label().into(),
+                precision.label().into(),
+                pct(cold.hit_rate()),
+                pct(warm.hit_rate()),
+                ms(time),
+            ]);
+            precision_rows.push(format!(
+                "    {{\"eviction\": {}, \"precision\": {}, \"hit_rate_cold\": {:.6}, \
+                 \"hit_rate_warm\": {:.6}, \"transfer_ms_warm\": {:.6}}}",
+                json_str(policy.label()),
+                json_str(precision.label()),
+                cold.hit_rate(),
+                warm.hit_rate(),
+                time * 1e3,
+            ));
         }
-        narrowing_monotone &= time <= prev_time;
-        prev_time = time;
-        pt.row(&[
-            precision.label().into(),
-            pct(cold.hit_rate()),
-            pct(warm.hit_rate()),
-            ms(time),
-        ]);
-        precision_rows.push(format!(
-            "    {{\"precision\": {}, \"hit_rate_cold\": {:.6}, \"hit_rate_warm\": {:.6}, \
-             \"transfer_ms_warm\": {:.6}}}",
-            json_str(precision.label()),
-            cold.hit_rate(),
-            warm.hit_rate(),
-            time * 1e3,
-        ));
     }
     pt.print();
 
@@ -228,11 +246,11 @@ fn main() {
     );
     expect(
         precision_invariant,
-        "hit rates are precision-invariant (placement never follows bytes)",
+        "hit rates are precision-invariant under every eviction policy",
     );
     expect(
         narrowing_monotone,
-        "warm transfer time non-increasing as storage precision narrows",
+        "warm transfer time non-increasing as storage narrows, per policy",
     );
 
     // ---- structural checks ----

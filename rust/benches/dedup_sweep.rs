@@ -57,6 +57,7 @@ fn build_store(mode: AccessMode, ranking: &[u32]) -> FeatureStore {
                 num_gpus: 4,
                 policy: ShardPolicy::Degree,
                 tier: static_tier_cfg(HOT_FRAC, ranking.to_vec()),
+                ..ShardConfig::default()
             },
         ),
         AccessMode::Nvme => FeatureStore::build_nvme(

@@ -1,0 +1,255 @@
+//! Net sweep — multi-host scaling over the network tier (DESIGN.md §15).
+//!
+//! Replays the shared degree-skewed trace against sharded stores spanning
+//! hosts 1 -> 8 × placement policy × fetch strategy:
+//!
+//!  * the `--num-hosts 1` cell must reproduce the plain single-host
+//!    sharded replay bit-exactly under every policy and strategy (the
+//!    degeneracy anchor of the topology refactor);
+//!  * `partition-local` never pays the network at any host count — its
+//!    cost is bitwise the single-host cost, and only the halo counter
+//!    records the replicated rows a real deployment would store;
+//!  * `remote-fetch` remote bytes grow monotonically with the host count
+//!    under every policy (host 0's shard only shrinks as hosts double),
+//!    and the network is priced exactly when remote rows exist;
+//!  * rows served is conserved across every cell (homing rows remotely
+//!    reclassifies traffic, it never invents or drops rows);
+//!  * widening the network link monotonically shrinks the time spent on
+//!    it (the NetLink bandwidth/latency price responds to the knobs).
+//!
+//! Emits `BENCH_net.json` — one record per grid cell, derived purely from
+//! simulated quantities, so back-to-back runs are byte-identical (the CI
+//! smoke loop diffs two digests).
+
+mod bench_common;
+
+use bench_common::{expect, replay, scaled, skewed_trace, static_tier_cfg};
+use ptdirect::config::{FetchStrategy, ShardPolicy, SystemProfile};
+use ptdirect::coordinator::report::{ms, ratio, Table};
+use ptdirect::featurestore::{degree_ranking, FeatureStore, GpuShardStats, ShardConfig};
+use ptdirect::graph::generator::{rmat, RmatParams};
+use ptdirect::util::bytes::human_bytes;
+use ptdirect::util::rng::Rng;
+
+const NODES: usize = 20_000;
+const EDGES: usize = 200_000;
+/// Misaligned 516 B rows so every path prices like `UnifiedAligned`.
+const DIM: usize = 129;
+const CLASSES: u32 = 16;
+const BATCH_ROWS: usize = 1024;
+const SEED: u64 = 42;
+const HOT_FRAC: f64 = 0.25;
+const NUM_GPUS: usize = 2;
+
+const HOSTS: [u32; 4] = [1, 2, 4, 8];
+
+/// Minimal JSON string escape (labels here are plain ASCII).
+fn json_str(s: &str) -> String {
+    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
+fn store(
+    sys: &SystemProfile,
+    num_hosts: u32,
+    policy: ShardPolicy,
+    strategy: FetchStrategy,
+    ranking: Vec<u32>,
+) -> FeatureStore {
+    FeatureStore::build_sharded(
+        NODES,
+        DIM,
+        CLASSES,
+        sys,
+        SEED,
+        ShardConfig {
+            num_gpus: NUM_GPUS,
+            num_hosts,
+            policy,
+            fetch_strategy: strategy,
+            tier: static_tier_cfg(HOT_FRAC, ranking),
+            ..ShardConfig::default()
+        },
+    )
+    .expect("sharded store")
+}
+
+fn main() {
+    let sys = SystemProfile::system1();
+    let batches = scaled(64usize, 8);
+    let graph = rmat(NODES, EDGES, RmatParams::default(), 0x71E5).expect("graph");
+    let mut rng = Rng::new(0x5EE9);
+    let trace = skewed_trace(&graph, &mut rng, batches, BATCH_ROWS);
+    let ranking = degree_ranking(&graph);
+
+    // Single-host reference per policy: a plain ShardConfig (no host
+    // knobs at all) — the anchor every hosts=1 cell must reproduce.
+    let anchor: Vec<f64> = ShardPolicy::all()
+        .iter()
+        .map(|&policy| {
+            let st = FeatureStore::build_sharded(
+                NODES,
+                DIM,
+                CLASSES,
+                &sys,
+                SEED,
+                ShardConfig {
+                    num_gpus: NUM_GPUS,
+                    policy,
+                    tier: static_tier_cfg(HOT_FRAC, ranking.clone()),
+                    ..ShardConfig::default()
+                },
+            )
+            .expect("anchor store");
+            replay(&st, &trace)
+        })
+        .collect();
+
+    let mut t = Table::new(
+        &format!(
+            "Net sweep — {batches} x {BATCH_ROWS}-row degree-skewed gathers, \
+             {NODES} x {DIM} f32 table, {NUM_GPUS} GPUs/host, hot-frac {HOT_FRAC} (System1)"
+        ),
+        &[
+            "hosts", "policy", "strategy", "transfer ms", "remote rows", "halo rows",
+            "remote B", "net ms", "vs 1 host",
+        ],
+    );
+    let mut json_rows = Vec::new();
+    let mut anchored = true;
+    let mut local_degenerate = true;
+    let mut remote_monotone = true;
+    let mut net_priced_iff_remote = true;
+    let mut rows_conserved = true;
+    let mut remote_at_8 = true;
+
+    for (pi, &policy) in ShardPolicy::all().iter().enumerate() {
+        for strategy in FetchStrategy::all() {
+            let mut base_time = f64::NAN;
+            let mut base_rows = 0u64;
+            let mut prev_remote = 0u64;
+            for &hosts in &HOSTS {
+                let st = store(&sys, hosts, policy, strategy, ranking.clone());
+                let time = replay(&st, &trace);
+                let stats = st.shard_stats().expect("shard stats");
+                let totals: GpuShardStats = stats.totals();
+
+                if hosts == 1 {
+                    base_time = time;
+                    base_rows = totals.rows_served();
+                    anchored &= time == anchor[pi];
+                }
+                match strategy {
+                    // Replication is cost-degenerate at every host count.
+                    FetchStrategy::PartitionLocal => {
+                        local_degenerate &= time == base_time
+                            && totals.remote_rows == 0
+                            && totals.remote_bytes == 0
+                            && totals.net_time_s == 0.0;
+                    }
+                    // Host 0's shard only shrinks as hosts double.
+                    FetchStrategy::RemoteFetch => {
+                        remote_monotone &= totals.remote_bytes >= prev_remote;
+                        prev_remote = totals.remote_bytes;
+                        if hosts == 8 {
+                            remote_at_8 &= totals.remote_bytes > 0;
+                        }
+                    }
+                }
+                net_priced_iff_remote &=
+                    (totals.net_time_s > 0.0) == (totals.remote_bytes > 0);
+                // Halo rows are double-listed (their normal class plus the
+                // halo counter), so rows_served alone is the conserved sum.
+                rows_conserved &= totals.rows_served() == base_rows;
+
+                t.row(&[
+                    hosts.to_string(),
+                    policy.label().into(),
+                    strategy.label().into(),
+                    ms(time),
+                    totals.remote_rows.to_string(),
+                    totals.halo_rows.to_string(),
+                    human_bytes(totals.remote_bytes),
+                    ms(totals.net_time_s),
+                    ratio(time / base_time),
+                ]);
+                json_rows.push(format!(
+                    "    {{\"hosts\": {}, \"policy\": {}, \"strategy\": {}, \
+                     \"transfer_ms\": {:.6}, \"remote_rows\": {}, \"halo_rows\": {}, \
+                     \"remote_bytes\": {}, \"net_ms\": {:.6}, \"imbalance\": {:.6}}}",
+                    hosts,
+                    json_str(policy.label()),
+                    json_str(strategy.label()),
+                    time * 1e3,
+                    totals.remote_rows,
+                    totals.halo_rows,
+                    totals.remote_bytes,
+                    totals.net_time_s * 1e3,
+                    stats.load_imbalance(),
+                ));
+            }
+        }
+    }
+    t.print();
+
+    expect(
+        anchored,
+        "hosts=1 reproduces the plain sharded replay bit-exactly under every policy/strategy",
+    );
+    expect(
+        local_degenerate,
+        "partition-local costs bitwise the single-host epoch at every host count",
+    );
+    expect(
+        remote_monotone,
+        "remote-fetch bytes monotone non-decreasing as hosts grow 1 -> 8, every policy",
+    );
+    expect(remote_at_8, "an 8-host split homes rows remotely under every policy");
+    expect(
+        net_priced_iff_remote,
+        "the network lane is priced exactly when remote rows exist",
+    );
+    expect(rows_conserved, "rows served conserved across every cell of the grid");
+
+    // ---- network-link sensitivity at 4 hosts, hash, remote-fetch ----
+    // `--net-gb-per-s`/`--net-latency-us` reach the NetLink price: a
+    // link that is strictly wider and lower-latency can only shrink the
+    // time spent on it.
+    let mut nt = Table::new(
+        "Net-link sensitivity — 4 hosts, hash placement, remote-fetch",
+        &["net GB/s", "latency us", "net ms", "transfer ms"],
+    );
+    let mut net_times = Vec::new();
+    for (bw_gb, lat_us) in [(3.125, 15.0), (12.5, 10.0), (25.0, 2.0), (100.0, 1.0)] {
+        let mut s = SystemProfile::system1();
+        s.net.peak_bw = bw_gb * 1e9;
+        s.net.latency_s = lat_us * 1e-6;
+        let st = store(&s, 4, ShardPolicy::Hash, FetchStrategy::RemoteFetch, ranking.clone());
+        let time = replay(&st, &trace);
+        let totals = st.shard_stats().expect("shard stats").totals();
+        nt.row(&[
+            format!("{bw_gb}"),
+            format!("{lat_us}"),
+            ms(totals.net_time_s),
+            ms(time),
+        ]);
+        net_times.push(totals.net_time_s);
+    }
+    nt.print();
+    expect(
+        net_times.windows(2).all(|w| w[1] <= w[0] + 1e-15),
+        "net time monotone non-increasing as the link widens and latency drops",
+    );
+    expect(
+        net_times[0] > *net_times.last().unwrap(),
+        "a 32x wider link strictly beats the slow-Ethernet price",
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"net_sweep\", \"nodes\": {NODES}, \"dim\": {DIM}, \
+         \"batches\": {batches}, \"batch_rows\": {BATCH_ROWS}, \"num_gpus\": {NUM_GPUS},\n  \
+         \"cells\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    std::fs::write("BENCH_net.json", &json).expect("write BENCH_net.json");
+    println!("wrote BENCH_net.json ({} cells)", json_rows.len());
+}

@@ -69,7 +69,12 @@ fn build_store(mode: AccessMode, precision: Precision, ranking: &[u32]) -> Featu
         AccessMode::Tiered => (Some(tier(0.25)), None, None),
         AccessMode::Sharded => (
             None,
-            Some(ShardConfig { num_gpus: 4, policy: ShardPolicy::Hash, tier: tier(0.5) }),
+            Some(ShardConfig {
+                num_gpus: 4,
+                policy: ShardPolicy::Hash,
+                tier: tier(0.5),
+                ..ShardConfig::default()
+            }),
             None,
         ),
         AccessMode::Nvme => (None, None, Some(NvmeStoreConfig { host_frac: 0.9, tier: tier(0.1) })),

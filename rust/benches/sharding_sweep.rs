@@ -49,6 +49,7 @@ fn sharded_store(num_gpus: usize, policy: ShardPolicy, ranking: Vec<u32>) -> Fea
             num_gpus,
             policy,
             tier: tier_cfg(ranking),
+            ..ShardConfig::default()
         },
     )
     .expect("sharded store")
@@ -127,6 +128,7 @@ fn main() {
                     hot_frac: 0.0,
                     ..tier_cfg(ranking.clone())
                 },
+                ..ShardConfig::default()
             },
         )
         .expect("cold sharded store");

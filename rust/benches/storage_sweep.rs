@@ -80,6 +80,7 @@ fn main() {
             num_gpus: 1,
             policy: ShardPolicy::Hash,
             tier: tier_cfg(ranking.clone()),
+            ..ShardConfig::default()
         },
     )
     .expect("sharded store");

@@ -12,7 +12,9 @@
 
 use std::collections::BTreeMap;
 
-use crate::config::{AccessMode, Backend, RunConfig, ShardPolicy, SystemProfile};
+use crate::config::{
+    AccessMode, Backend, FetchStrategy, RunConfig, ShardPolicy, SystemProfile, LINK_KNOBS,
+};
 use crate::coordinator::microbench::{fig6_grid, fig7_sizes, run_cell};
 use crate::coordinator::report::{
     critical_path_summary, latency_line, ms, pct, ratio, shard_table, Table,
@@ -153,28 +155,30 @@ pub fn run_config_from(args: &Args) -> Result<RunConfig> {
     if let Some(f) = args.get_f64("host-frac")? {
         cfg.host_frac = f;
     }
-    if let Some(v) = args.get_f64("nvme-gb-per-s")? {
-        if !(v.is_finite() && v > 0.0) {
-            return Err(Error::Config(format!(
-                "--nvme-gb-per-s must be positive and finite, got {v}"
-            )));
+    // Link-constant overrides: one walk over the same LINK_KNOBS table
+    // the TOML path uses.  Adds `--nvlink-gb-per-s` and the `--net-*`
+    // flags for free — the per-knob arms this replaces had silently
+    // missed the NVLink one.
+    for k in LINK_KNOBS {
+        if let Some(v) = args.get_f64(k.flag.trim_start_matches("--"))? {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(Error::Config(format!(
+                    "{} must be positive and finite, got {v}",
+                    k.flag
+                )));
+            }
+            (k.set)(&mut cfg, v)?;
         }
-        cfg.nvme_gb_per_s = Some(v);
     }
-    if let Some(v) = args.get_f64("nvme-iops")? {
-        if !(v.is_finite() && v > 0.0) {
-            return Err(Error::Config(format!(
-                "--nvme-iops must be positive and finite, got {v}"
-            )));
-        }
-        cfg.nvme_iops = Some(v);
+    if let Some(n) = args.get_u64("num-hosts")? {
+        // Checked conversion; the [1, 64] window (and the sharded-mode
+        // requirement) lives in `RunConfig::validate` below.
+        cfg.num_hosts = u32::try_from(n)
+            .map_err(|_| Error::Config(format!("--num-hosts {n} out of range")))?;
     }
-    if let Some(n) = args.get_u64("nvme-queue-depth")? {
-        let qd = u32::try_from(n)
-            .ok()
-            .filter(|&q| q >= 1)
-            .ok_or_else(|| Error::Config(format!("--nvme-queue-depth {n} out of range")))?;
-        cfg.nvme_queue_depth = Some(qd);
+    if let Some(f) = args.get("fetch-strategy") {
+        cfg.fetch_strategy = FetchStrategy::parse(f)
+            .ok_or_else(|| Error::Config(format!("unknown fetch strategy `{f}`")))?;
     }
     if let Some(n) = args.get_u64("prefetch-depth")? {
         // Checked conversion: a wrapping `as` cast could smuggle huge
@@ -255,7 +259,8 @@ pub fn run_config_from(args: &Args) -> Result<RunConfig> {
         cfg.aggregate_pushdown = false;
     }
     // `--system` replaced the whole profile above; restore the TOML's (and
-    // the CLI's) NVLink/NVMe overrides on top of the selected profile.
+    // the CLI's) link overrides (NVLink/NVMe/network — every LINK_KNOBS
+    // entry) on top of the selected profile.
     cfg.apply_link_overrides();
     cfg.validate()?;
     Ok(cfg)
@@ -334,8 +339,31 @@ SHARDED ACCESS MODE (--mode sharded):
                                 (spreads hot rows evenly),
                        contig = contiguous id ranges (cheapest metadata,
                                 skew-prone on id-correlated graphs)
+  --nvlink-gb-per-s B  override NVLink peer bandwidth, GB/s
   Per-epoch reporting gains a per-GPU table: local/peer/host row, byte and
   time splits, plus the load-imbalance factor (slowest GPU over mean).
+
+MULTI-HOST NETWORK TIER (--mode sharded; DESIGN.md §15):
+  The feature table is first partitioned across N hosts — the same
+  placement policies as --shard-policy, applied at host granularity —
+  and the trainer models host 0, whose minibatches inevitably touch
+  rows homed on other hosts.  --num-hosts 1 (the default) reproduces
+  every single-host sharded report bit-exactly.  Foreign-homed rows are
+  priced per --fetch-strategy over an Ethernet/InfiniBand link model
+  (max of a bandwidth term and a per-message latency term; one batched
+  RPC per remote host per GPU), and the overlap engine schedules the
+  network as its own resource lane.
+  --num-hosts N        hosts the table is partitioned across, 1..64 (1)
+  --fetch-strategy S   remote|local handling of foreign-homed rows:
+                       remote = fetch over the network at gather time
+                                (DistDGL-style remote pulls),
+                       local  = replicate the halo into the local tiers
+                                (zero steady-state network bytes; the
+                                mirrored rows are reported as halo)
+  --net-gb-per-s B     override inter-host network bandwidth, GB/s
+  --net-latency-us U   override per-message network latency, microseconds
+  Per-epoch reporting gains remote/halo row counters plus network byte
+  and time columns in the shard table.
 
 OVERLAP ENGINE (all modes):
   Each epoch is scheduled twice: the additive serial breakdown (sample +
@@ -543,13 +571,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         if let Some(shard) = &r.shard {
             let totals = shard.totals();
             println!(
-                "  shard: {} local / {} peer / {} host rows, peer {} host {}, \
-                 imbalance {:.2}x",
+                "  shard: {} local / {} peer / {} host / {} remote rows ({} halo), \
+                 peer {} host {} net {}, imbalance {:.2}x",
                 totals.local_rows,
                 totals.peer_rows,
                 totals.host_rows,
+                totals.remote_rows,
+                totals.halo_rows,
                 human_bytes(totals.peer_bytes),
                 human_bytes(totals.host_bytes),
+                human_bytes(totals.remote_bytes),
                 shard.load_imbalance(),
             );
             shard_table(shard).print();
@@ -1285,6 +1316,80 @@ mod tests {
         assert!(HELP.contains("--aggregate-pushdown"));
         assert!(HELP.contains("--no-pushdown"));
         assert!(HELP.contains("AGGREGATION PUSH-DOWN"));
+    }
+
+    #[test]
+    fn multi_host_cli_overrides() {
+        let a = Args::parse(&sv(&[
+            "train",
+            "--mode",
+            "sharded",
+            "--num-hosts",
+            "4",
+            "--fetch-strategy",
+            "local",
+            "--net-gb-per-s",
+            "50",
+            "--net-latency-us",
+            "5",
+        ]))
+        .unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        assert_eq!(cfg.num_hosts, 4);
+        assert_eq!(cfg.fetch_strategy, FetchStrategy::PartitionLocal);
+        assert!((cfg.system.net.peak_bw - 50e9).abs() < 1.0);
+        assert!((cfg.system.net.latency_s - 5e-6).abs() < 1e-12);
+        // Defaults are the single-host anchor.
+        let d = run_config_from(&Args::parse(&sv(&["train"])).unwrap()).unwrap();
+        assert_eq!(d.num_hosts, 1);
+        assert_eq!(d.fetch_strategy, FetchStrategy::RemoteFetch);
+    }
+
+    #[test]
+    fn multi_host_cli_rejects_bad_values() {
+        let a = Args::parse(&sv(&["train", "--mode", "sharded", "--num-hosts", "0"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--mode", "sharded", "--num-hosts", "65"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        // hosts > 1 needs the sharded store's host-owner map.
+        let a = Args::parse(&sv(&["train", "--mode", "tiered", "--num-hosts", "2"])).unwrap();
+        let err = run_config_from(&a).unwrap_err();
+        assert!(err.to_string().contains("sharded"), "{err}");
+        let a = Args::parse(&sv(&["train", "--fetch-strategy", "teleport"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--net-gb-per-s", "-1"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+        let a = Args::parse(&sv(&["train", "--net-latency-us", "nan"])).unwrap();
+        assert!(run_config_from(&a).is_err());
+    }
+
+    #[test]
+    fn nvlink_cli_flag_reaches_the_profile() {
+        // The table-driven knob walk adds the long-missing CLI arm for
+        // the NVLink override (previously TOML-only).
+        let a = Args::parse(&sv(&[
+            "train",
+            "--mode",
+            "sharded",
+            "--nvlink-gb-per-s",
+            "100",
+            "--system",
+            "system2",
+        ]))
+        .unwrap();
+        let cfg = run_config_from(&a).unwrap();
+        assert_eq!(cfg.system.name, "System2");
+        assert!((cfg.system.nvlink.peak_bw - 100e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn help_documents_the_multi_host_tier() {
+        assert!(HELP.contains("MULTI-HOST NETWORK TIER"));
+        assert!(HELP.contains("--num-hosts"));
+        assert!(HELP.contains("--fetch-strategy"));
+        assert!(HELP.contains("--net-gb-per-s"));
+        assert!(HELP.contains("--net-latency-us"));
+        assert!(HELP.contains("--nvlink-gb-per-s"));
     }
 
     #[test]

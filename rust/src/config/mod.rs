@@ -5,5 +5,8 @@ pub mod schema;
 pub mod systems;
 pub mod toml;
 
-pub use schema::{AccessMode, Backend, EvictionPolicy, Precision, RunConfig, ShardPolicy};
-pub use systems::{NvlinkConfig, NvmeConfig, PcieConfig, PowerProfile, SystemProfile};
+pub use schema::{
+    AccessMode, Backend, EvictionPolicy, FetchStrategy, LinkKnob, Precision, RunConfig,
+    ShardPolicy, LINK_KNOBS,
+};
+pub use systems::{NetConfig, NvlinkConfig, NvmeConfig, PcieConfig, PowerProfile, SystemProfile};

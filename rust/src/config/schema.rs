@@ -136,6 +136,53 @@ impl ShardPolicy {
     }
 }
 
+/// How a multi-host run (`--num-hosts > 1`, DESIGN.md §15) handles
+/// feature rows homed on another host's partition.
+///
+/// The trainer models host 0's perspective: the graph's feature rows are
+/// partitioned across hosts by the same [`ShardPolicy`] that splits each
+/// host's slice across its GPUs, and a minibatch inevitably touches rows
+/// another host owns.  The two classic designs trade network traffic
+/// against memory capacity:
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FetchStrategy {
+    /// Fetch remote rows over the network at gather time (DistDGL-style
+    /// remote KVStore pulls): zero extra memory, every foreign-homed row
+    /// pays a [`crate::interconnect::NetLink`] RPC.
+    RemoteFetch,
+    /// Replicate the halo: every row a local minibatch can touch is
+    /// mirrored into the host's own tiers ahead of time, so sampling is
+    /// partition-local and the steady-state gather pays zero network
+    /// bytes — at the cost of the mirrored halo's capacity (reported as
+    /// `halo_rows`).  Cost-wise this reproduces the single-host run
+    /// bit-exactly; the halo counter is the only difference.
+    PartitionLocal,
+}
+
+impl FetchStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "remote" | "remote-fetch" | "fetch" => Some(FetchStrategy::RemoteFetch),
+            "local" | "partition-local" | "replicate" | "halo" => {
+                Some(FetchStrategy::PartitionLocal)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FetchStrategy::RemoteFetch => "remote-fetch",
+            FetchStrategy::PartitionLocal => "partition-local",
+        }
+    }
+
+    /// Both strategies, in the order benches sweep them.
+    pub fn all() -> [FetchStrategy; 2] {
+        [FetchStrategy::RemoteFetch, FetchStrategy::PartitionLocal]
+    }
+}
+
 /// Eviction policy of the shared paged feature cache (`--eviction`,
 /// DESIGN.md §12).  Every hot tier in the memory hierarchy — tiered,
 /// per-GPU sharded, and the NVMe store's GPU tier — runs one of these
@@ -365,8 +412,25 @@ pub struct RunConfig {
     pub nvme_gb_per_s: Option<f64>,
     /// NVMe device IOPS-ceiling override (4 KiB read commands per second).
     pub nvme_iops: Option<f64>,
-    /// NVMe outstanding-command (queue depth) override.
+    /// NVMe outstanding-command (queue depth) override.  Held as a knob
+    /// value like the bandwidth overrides; integrality is enforced at
+    /// parse time (see [`LINK_KNOBS`]).
     pub nvme_queue_depth: Option<u32>,
+    /// Inter-host network bandwidth override, gigaBYTES per second
+    /// (applies to the profile's [`crate::config::NetConfig`]).  Stored
+    /// like [`RunConfig::nvlink_gb_per_s`] so it survives a later
+    /// `system` replacement.
+    pub net_gb_per_s: Option<f64>,
+    /// Inter-host network per-message latency override, microseconds.
+    pub net_latency_us: Option<f64>,
+    /// Number of hosts the feature table is partitioned across
+    /// (DESIGN.md §15).  `1` (the default) is the single-host anchor and
+    /// reproduces every existing report bit-exactly; `> 1` requires
+    /// `mode = "sharded"` — the only store with a partitionable owner
+    /// map — and prices foreign-homed rows per [`FetchStrategy`].
+    pub num_hosts: u32,
+    /// Remote-row handling of a multi-host run (see [`FetchStrategy`]).
+    pub fetch_strategy: FetchStrategy,
     /// Bounded prefetch window of the simulated overlap engine
     /// (DESIGN.md §9): up to this many steps may be in flight ahead of
     /// training (`sample(i)` waits for `train(i - depth)`).  `0` disables
@@ -427,6 +491,101 @@ pub struct RunConfig {
     pub aggregate_pushdown: bool,
 }
 
+/// One table row per hardware-constant override knob.
+///
+/// TOML parsing, CLI flag matching, positivity validation, and
+/// profile application used to be five hand-written call sites per knob
+/// (`from_toml` block, CLI arm, HELP line, `apply_link_overrides` line,
+/// default) that each new link had to extend in lockstep; the NVMe PR
+/// already missed the CLI arm for `--nvlink-gb-per-s`.  Now a knob is
+/// one [`LinkKnob`] entry and every site iterates [`LINK_KNOBS`].
+pub struct LinkKnob {
+    /// TOML key under `[run]` (also the name in error messages).
+    pub key: &'static str,
+    /// CLI flag that sets it (`ptdirect ... --nvme-gb-per-s 7`).
+    pub flag: &'static str,
+    /// Read the stored override back (as f64 whatever the storage type).
+    pub get: fn(&RunConfig) -> Option<f64>,
+    /// Store a parsed value; fallible so integer-valued knobs can reject
+    /// fractional input.  The shared positivity/finiteness check runs
+    /// before this is called.
+    pub set: fn(&mut RunConfig, f64) -> Result<()>,
+    /// Push the stored value onto a system profile (units converted
+    /// here: `*_gb_per_s` are gigaBYTES/s, `*_us` microseconds).
+    pub apply: fn(&mut SystemProfile, f64),
+}
+
+/// Every link-constant override, in HELP display order.
+pub const LINK_KNOBS: &[LinkKnob] = &[
+    LinkKnob {
+        key: "nvlink_gb_per_s",
+        flag: "--nvlink-gb-per-s",
+        get: |c| c.nvlink_gb_per_s,
+        set: |c, v| {
+            c.nvlink_gb_per_s = Some(v);
+            Ok(())
+        },
+        apply: |s, v| s.nvlink.peak_bw = v * 1e9,
+    },
+    LinkKnob {
+        key: "nvme_gb_per_s",
+        flag: "--nvme-gb-per-s",
+        get: |c| c.nvme_gb_per_s,
+        set: |c, v| {
+            c.nvme_gb_per_s = Some(v);
+            Ok(())
+        },
+        apply: |s, v| s.nvme.peak_bw = v * 1e9,
+    },
+    LinkKnob {
+        key: "nvme_iops",
+        flag: "--nvme-iops",
+        get: |c| c.nvme_iops,
+        set: |c, v| {
+            c.nvme_iops = Some(v);
+            Ok(())
+        },
+        apply: |s, v| s.nvme.iops = v,
+    },
+    LinkKnob {
+        key: "nvme_queue_depth",
+        flag: "--nvme-queue-depth",
+        get: |c| c.nvme_queue_depth.map(|q| q as f64),
+        set: |c, v| {
+            // Positivity is already checked; reject fractions and u32
+            // overflow (a wrapping cast would smuggle 2^32+1 through).
+            if v.fract() != 0.0 || v > u32::MAX as f64 {
+                return Err(Error::Config(format!(
+                    "nvme_queue_depth {v} out of range"
+                )));
+            }
+            c.nvme_queue_depth = Some(v as u32);
+            Ok(())
+        },
+        apply: |s, v| s.nvme.queue_depth = v as u32,
+    },
+    LinkKnob {
+        key: "net_gb_per_s",
+        flag: "--net-gb-per-s",
+        get: |c| c.net_gb_per_s,
+        set: |c, v| {
+            c.net_gb_per_s = Some(v);
+            Ok(())
+        },
+        apply: |s, v| s.net.peak_bw = v * 1e9,
+    },
+    LinkKnob {
+        key: "net_latency_us",
+        flag: "--net-latency-us",
+        get: |c| c.net_latency_us,
+        set: |c, v| {
+            c.net_latency_us = Some(v);
+            Ok(())
+        },
+        apply: |s, v| s.net.latency_s = v * 1e-6,
+    },
+];
+
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
@@ -458,6 +617,10 @@ impl Default for RunConfig {
             nvme_gb_per_s: None,
             nvme_iops: None,
             nvme_queue_depth: None,
+            net_gb_per_s: None,
+            net_latency_us: None,
+            num_hosts: 1,
+            fetch_strategy: FetchStrategy::RemoteFetch,
             prefetch_depth: 2,
             no_overlap: false,
             dedup: true,
@@ -576,43 +739,35 @@ impl RunConfig {
             cfg.shard_policy = ShardPolicy::parse(v)
                 .ok_or_else(|| Error::Config(format!("unknown shard policy `{v}`")))?;
         }
-        if let Some(v) = doc.get_f64("run.nvlink_gb_per_s") {
-            // `v <= 0.0` alone would wave NaN through (comparisons with
-            // NaN are false) and poison every downstream cost.
-            if !(v.is_finite() && v > 0.0) {
-                return Err(Error::Config(format!(
-                    "nvlink_gb_per_s must be positive and finite, got {v}"
-                )));
+        // Link-constant overrides: one table walk instead of a
+        // hand-written block per knob.  `as_f64` coerces TOML ints, so
+        // integer-valued knobs (queue depth) flow through the same path
+        // and enforce integrality in their `set`.
+        for k in LINK_KNOBS {
+            if let Some(v) = doc.get_f64(&format!("run.{}", k.key)) {
+                // `v <= 0.0` alone would wave NaN through (comparisons
+                // with NaN are false) and poison every downstream cost.
+                if !(v.is_finite() && v > 0.0) {
+                    return Err(Error::Config(format!(
+                        "{} must be positive and finite, got {v}",
+                        k.key
+                    )));
+                }
+                (k.set)(&mut cfg, v)?;
             }
-            cfg.nvlink_gb_per_s = Some(v);
         }
         if let Some(v) = doc.get_f64("run.host_frac") {
             cfg.host_frac = v;
         }
-        if let Some(v) = doc.get_f64("run.nvme_gb_per_s") {
-            if !(v.is_finite() && v > 0.0) {
-                return Err(Error::Config(format!(
-                    "nvme_gb_per_s must be positive and finite, got {v}"
-                )));
-            }
-            cfg.nvme_gb_per_s = Some(v);
+        if let Some(v) = doc.get_i64("run.num_hosts") {
+            // Checked conversion: a wrapping `as` cast could smuggle huge
+            // or negative values into the valid [1, 64] window.
+            cfg.num_hosts = u32::try_from(v)
+                .map_err(|_| Error::Config(format!("num_hosts {v} out of range")))?;
         }
-        if let Some(v) = doc.get_f64("run.nvme_iops") {
-            if !(v.is_finite() && v > 0.0) {
-                return Err(Error::Config(format!(
-                    "nvme_iops must be positive and finite, got {v}"
-                )));
-            }
-            cfg.nvme_iops = Some(v);
-        }
-        if let Some(v) = doc.get_i64("run.nvme_queue_depth") {
-            // Checked conversion + positivity: depth 0 would starve the
-            // link model's command rate into a division artifact.
-            let qd = u32::try_from(v)
-                .ok()
-                .filter(|&q| q >= 1)
-                .ok_or_else(|| Error::Config(format!("nvme_queue_depth {v} out of range")))?;
-            cfg.nvme_queue_depth = Some(qd);
+        if let Some(v) = doc.get_str("run.fetch_strategy") {
+            cfg.fetch_strategy = FetchStrategy::parse(v)
+                .ok_or_else(|| Error::Config(format!("unknown fetch strategy `{v}`")))?;
         }
         if let Some(v) = doc.get_i64("run.prefetch_depth") {
             // Checked conversion: a wrapping `as` cast could smuggle huge
@@ -686,23 +841,16 @@ impl RunConfig {
         }
     }
 
-    /// Re-apply the stored link overrides (`nvlink_gb_per_s`, `nvme_*`)
-    /// onto the current system profile.  Needed wherever the profile is
-    /// replaced *after* TOML loading (the CLI's `--system` flag) —
-    /// applying in place at parse time alone would silently clobber the
-    /// configured constants.
+    /// Re-apply the stored link overrides (`nvlink_gb_per_s`, `nvme_*`,
+    /// `net_*`) onto the current system profile — a walk over
+    /// [`LINK_KNOBS`].  Needed wherever the profile is replaced *after*
+    /// TOML loading (the CLI's `--system` flag) — applying in place at
+    /// parse time alone would silently clobber the configured constants.
     pub fn apply_link_overrides(&mut self) {
-        if let Some(v) = self.nvlink_gb_per_s {
-            self.system.nvlink.peak_bw = v * 1e9;
-        }
-        if let Some(v) = self.nvme_gb_per_s {
-            self.system.nvme.peak_bw = v * 1e9;
-        }
-        if let Some(v) = self.nvme_iops {
-            self.system.nvme.iops = v;
-        }
-        if let Some(v) = self.nvme_queue_depth {
-            self.system.nvme.queue_depth = v;
+        for k in LINK_KNOBS {
+            if let Some(v) = (k.get)(self) {
+                (k.apply)(&mut self.system, v);
+            }
         }
     }
 
@@ -758,6 +906,22 @@ impl RunConfig {
             return Err(Error::Config(format!(
                 "num_gpus must be in [1, 64], got {}",
                 self.num_gpus
+            )));
+        }
+        if !(1..=64).contains(&self.num_hosts) {
+            return Err(Error::Config(format!(
+                "num_hosts must be in [1, 64], got {}",
+                self.num_hosts
+            )));
+        }
+        if self.num_hosts > 1 && self.mode != AccessMode::Sharded {
+            // Only the sharded store carries the host-owner map that the
+            // network tier partitions over; every other mode would
+            // silently ignore the knob and misreport a multi-host run.
+            return Err(Error::Config(format!(
+                "num_hosts > 1 requires mode = \"sharded\", got {} hosts with mode {}",
+                self.num_hosts,
+                self.mode.label()
             )));
         }
         if !(0.0..=1.0).contains(&self.host_frac) {
@@ -1014,6 +1178,109 @@ nvme_queue_depth = 64
         assert!(RunConfig::from_toml("[run]\nnvme_queue_depth = -1").is_err());
         // 2^32 + 1 must not wrap into the valid window via `as` truncation.
         assert!(RunConfig::from_toml("[run]\nnvme_queue_depth = 4294967297").is_err());
+        // The shared f64 path must still reject fractional depths.
+        assert!(RunConfig::from_toml("[run]\nnvme_queue_depth = 2.5").is_err());
+    }
+
+    #[test]
+    fn fetch_strategy_aliases() {
+        assert_eq!(
+            FetchStrategy::parse("remote"),
+            Some(FetchStrategy::RemoteFetch)
+        );
+        assert_eq!(
+            FetchStrategy::parse("Remote-Fetch"),
+            Some(FetchStrategy::RemoteFetch)
+        );
+        assert_eq!(
+            FetchStrategy::parse("local"),
+            Some(FetchStrategy::PartitionLocal)
+        );
+        assert_eq!(
+            FetchStrategy::parse("halo"),
+            Some(FetchStrategy::PartitionLocal)
+        );
+        assert_eq!(FetchStrategy::parse("teleport"), None);
+        assert_eq!(FetchStrategy::all().len(), 2);
+        assert_eq!(FetchStrategy::RemoteFetch.label(), "remote-fetch");
+        assert_eq!(FetchStrategy::PartitionLocal.label(), "partition-local");
+    }
+
+    #[test]
+    fn multi_host_knobs_parse_and_validate() {
+        // Defaults are the single-host anchor.
+        let d = RunConfig::default();
+        assert_eq!(d.num_hosts, 1);
+        assert_eq!(d.fetch_strategy, FetchStrategy::RemoteFetch);
+
+        let cfg = RunConfig::from_toml(
+            r#"
+[run]
+mode = "sharded"
+num_hosts = 4
+fetch_strategy = "partition-local"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.num_hosts, 4);
+        assert_eq!(cfg.fetch_strategy, FetchStrategy::PartitionLocal);
+
+        assert!(RunConfig::from_toml("[run]\nmode = \"sharded\"\nnum_hosts = 0").is_err());
+        assert!(RunConfig::from_toml("[run]\nmode = \"sharded\"\nnum_hosts = 65").is_err());
+        assert!(RunConfig::from_toml("[run]\nmode = \"sharded\"\nnum_hosts = -1").is_err());
+        // 2^32 + 2 must not wrap into the valid window via `as` truncation.
+        assert!(
+            RunConfig::from_toml("[run]\nmode = \"sharded\"\nnum_hosts = 4294967298").is_err()
+        );
+        assert!(RunConfig::from_toml("[run]\nfetch_strategy = \"teleport\"").is_err());
+        // Only the sharded store carries a host-owner map.
+        let err = RunConfig::from_toml("[run]\nmode = \"tiered\"\nnum_hosts = 2").unwrap_err();
+        assert!(err.to_string().contains("sharded"), "{err}");
+    }
+
+    #[test]
+    fn net_knobs_parse_and_apply_to_the_profile() {
+        let cfg = RunConfig::from_toml("[run]\nnet_gb_per_s = 50.0\nnet_latency_us = 5.0")
+            .unwrap();
+        assert!((cfg.system.net.peak_bw - 50e9).abs() < 1.0);
+        assert!((cfg.system.net.latency_s - 5e-6).abs() < 1e-12);
+
+        assert!(RunConfig::from_toml("[run]\nnet_gb_per_s = -1.0").is_err());
+        assert!(RunConfig::from_toml("[run]\nnet_gb_per_s = nan").is_err());
+        assert!(RunConfig::from_toml("[run]\nnet_latency_us = inf").is_err());
+        assert!(RunConfig::from_toml("[run]\nnet_latency_us = 0.0").is_err());
+    }
+
+    #[test]
+    fn link_knob_table_covers_every_override_and_survives_system_swap() {
+        assert_eq!(LINK_KNOBS.len(), 6, "one entry per link-constant knob");
+        let mut cfg = RunConfig::from_toml(
+            r#"
+[run]
+nvlink_gb_per_s = 100.0
+nvme_gb_per_s = 7.0
+nvme_iops = 1000000
+nvme_queue_depth = 64
+net_gb_per_s = 50.0
+net_latency_us = 5.0
+"#,
+        )
+        .unwrap();
+        // Every entry stored a value, so `get` must see all six.
+        for k in LINK_KNOBS {
+            assert!((k.get)(&cfg).is_some(), "{} not stored", k.key);
+            assert!(k.flag.starts_with("--"), "{} flag malformed", k.key);
+        }
+        // A later profile replacement (the CLI's `--system` flag) must
+        // not clobber the stored overrides.
+        cfg.system = SystemProfile::system2();
+        cfg.apply_link_overrides();
+        assert!((cfg.system.nvlink.peak_bw - 100e9).abs() < 1.0);
+        assert!((cfg.system.nvme.peak_bw - 7e9).abs() < 1.0);
+        assert!((cfg.system.nvme.iops - 1e6).abs() < 1e-6);
+        assert_eq!(cfg.system.nvme.queue_depth, 64);
+        assert!((cfg.system.net.peak_bw - 50e9).abs() < 1.0);
+        assert!((cfg.system.net.latency_s - 5e-6).abs() < 1e-12);
     }
 
     #[test]

@@ -88,6 +88,25 @@ pub struct NvmeConfig {
     pub block_bytes: u64,
 }
 
+/// Cross-host network-link constants (the multi-host tier's
+/// host↔host path; DESIGN.md §15).
+///
+/// Sits one level above NVLink in the memory hierarchy: remote feature
+/// fetches under `--num-hosts > 1` leave the machine over Ethernet or
+/// InfiniBand.  The model is deliberately coarser than the zero-copy
+/// links — no warp request stream crosses the NIC; remote reads are
+/// batched per-host RPCs, so the cost is the larger of a wire-bandwidth
+/// bound and a per-message latency bound (one round trip per distinct
+/// remote host in the batch).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Per-host NIC bandwidth, bytes/s (unidirectional).
+    pub peak_bw: f64,
+    /// One-way message latency, seconds (switch + NIC + software stack);
+    /// each distinct remote host in a batch pays one.
+    pub latency_s: f64,
+}
+
 /// Affine whole-system power model (paper Fig. 9; meter-level).
 #[derive(Clone, Debug)]
 pub struct PowerProfile {
@@ -169,6 +188,10 @@ pub struct SystemProfile {
     /// (`--mode nvme`, DESIGN.md §8); the SSD class each platform would
     /// plausibly carry.
     pub nvme: NvmeConfig,
+    /// Cross-host network constants for the multi-host tier
+    /// (`--num-hosts`, DESIGN.md §15); the NIC class each platform would
+    /// plausibly carry.
+    pub net: NetConfig,
     pub power: PowerProfile,
 }
 
@@ -224,6 +247,11 @@ impl SystemProfile {
                 queue_depth: 256,
                 read_latency_s: 90e-6,
                 block_bytes: 4096,
+            },
+            // Workstation 100GbE NIC (ConnectX-5 class).
+            net: NetConfig {
+                peak_bw: 12.5e9,
+                latency_s: 10e-6,
             },
             power: PowerProfile {
                 idle_w: 105.0,
@@ -282,6 +310,11 @@ impl SystemProfile {
                 read_latency_s: 80e-6,
                 block_bytes: 4096,
             },
+            // Datacenter InfiniBand HDR 200Gb (the V100 cluster fabric).
+            net: NetConfig {
+                peak_bw: 25.0e9,
+                latency_s: 2e-6,
+            },
             power: PowerProfile {
                 idle_w: 130.0,
                 cpu_max_w: 2.0 * 125.0,
@@ -335,6 +368,12 @@ impl SystemProfile {
                 queue_depth: 128,
                 read_latency_s: 120e-6,
                 block_bytes: 4096,
+            },
+            // Desktop 25GbE NIC: the budget box scales out over the office
+            // switch, with commodity latency.
+            net: NetConfig {
+                peak_bw: 3.125e9,
+                latency_s: 15e-6,
             },
             power: PowerProfile {
                 idle_w: 70.0,
@@ -435,6 +474,27 @@ mod tests {
             assert!(
                 s.power.near_mem_max_w > 0.0 && s.power.near_mem_max_w < s.power.gpu_max_w / 5.0,
                 "{}: near-mem power must be a small fraction of the GPU board",
+                s.name
+            );
+        }
+    }
+
+    #[test]
+    fn net_sits_below_nvlink_on_every_profile() {
+        // The multi-host tier's premise: the network is the slowest
+        // transfer link above storage latency class — remote fetches must
+        // never be cheaper per byte than the intra-host peer link, or the
+        // partition-locality trade-off inverts.
+        for s in SystemProfile::all() {
+            assert!(
+                s.net.peak_bw < s.nvlink.peak_bw,
+                "{}: net bw must sit below NVLink",
+                s.name
+            );
+            assert!(s.net.peak_bw > 0.0, "{}", s.name);
+            assert!(
+                s.net.latency_s > s.nvlink.request_issue_s,
+                "{}: a network round trip must dwarf an NVLink request",
                 s.name
             );
         }

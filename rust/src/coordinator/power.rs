@@ -12,9 +12,19 @@
 //! (~0.95 — the paper's Fig. 3 shows CPU util far above one core), other
 //! host work idles most of the package (~0.15).  GPU training keeps the
 //! board near-fully busy; zero-copy transfers burn only the copy engines.
+//!
+//! Link power is topology-driven (DESIGN.md §15): the epoch's wire bytes
+//! arrive as a per-link [`LinkBytes`] map, each registered link's duty
+//! cycle is its bytes over its own peak bandwidth, and the duty cycles
+//! sum onto the link's power rail — PCIe, NVLink, and the NIC share the
+//! host I/O-complex term ([`crate::config::PowerProfile::io_max_w`]), the
+//! SSD draws its own ([`crate::config::PowerProfile::ssd_max_w`]).  A new
+//! link enters the power model by joining the topology registry, not by
+//! growing this function's signature again.
 
 use crate::config::SystemProfile;
 use crate::coordinator::trainer::Breakdown;
+use crate::interconnect::{LinkBytes, LinkShare, PowerRail, Topology};
 
 /// Per-phase package-utilization weights.
 pub const CPU_W_SAMPLE: f64 = 0.70;
@@ -34,12 +44,16 @@ pub const WORKER_OVERSUBSCRIPTION: f64 = 1.5;
 pub struct PowerReport {
     pub cpu_util: f64,
     pub gpu_util: f64,
+    /// Summed duty cycle of the I/O-rail links (PCIe + NVLink + NIC).
     pub io_util: f64,
     /// NVMe read utilization (the `Nvme` storage tier; zero elsewhere).
     pub storage_util: f64,
     /// Near-memory aggregation-engine utilization (`--aggregate-pushdown`'s
     /// memory-side reduction duty cycle; zero when push-down is off).
     pub near_mem_util: f64,
+    /// Per-link duty cycles (each link's bytes over its own peak), the
+    /// per-link decomposition of `io_util`/`storage_util`.
+    pub link_util: LinkShare,
     pub watts: f64,
     pub energy_j: f64,
 }
@@ -47,23 +61,22 @@ pub struct PowerReport {
 /// Average power over an epoch with the given breakdown.
 ///
 /// `cpu_gather_s` must be the CPU seconds spent gathering (zero for the
-/// GPU-centric modes — that is the entire Fig. 9 story).  Link bytes are
-/// split per link: `host_bytes_on_link` is normalized by the PCIe peak,
-/// `peer_bytes_on_link` (the `Sharded` mode's NVLink traffic, zero
-/// everywhere else) by the much larger NVLink peak — charging peer bytes
-/// against PCIe bandwidth would saturate `io_util` with traffic that
-/// never touches the host link.  Both peaks are *per-link* budgets (every
-/// simulated GPU owns its own PCIe link and NVLink ingress — the topology
-/// the sharded timing model prices, DESIGN.md §6), so callers must pass
-/// per-link-average byte loads: the trainer divides its fleet-wide sums
-/// by `num_gpus` (1 outside `Sharded` mode).
+/// GPU-centric modes — that is the entire Fig. 9 story).  `wire` carries
+/// the epoch's bytes per transfer link; each registered link of
+/// [`Topology::from_sys`] is normalized by its *own* peak bandwidth —
+/// charging NVLink peer bytes against PCIe bandwidth would saturate
+/// `io_util` with traffic that never touches the host link.  Peaks are
+/// *per-link* budgets (every simulated GPU owns its own PCIe link and
+/// NVLink ingress — the topology the sharded timing model prices,
+/// DESIGN.md §6), so callers must pass per-link-average byte loads: the
+/// trainer divides its fleet-wide host/peer sums by `num_gpus` (1 outside
+/// `Sharded` mode).  Storage and network bytes are never divided — the
+/// SSD and host 0's NIC are single devices.
 ///
-/// `storage_bytes_on_link` (the `Nvme` mode's block-read traffic, zero
-/// everywhere else) is normalized by the NVMe peak into its own
-/// `storage_util`, which drives the SSD active-power term
-/// (`PowerProfile::ssd_max_w`, DESIGN.md §8) rather than the PCIe/NVLink
-/// I/O term — the SSD's draw scales with its own read duty cycle, not
-/// with the host link's.
+/// Each link's duty cycle sums onto its power rail: the I/O-complex term
+/// for PCIe/NVLink/NIC, the SSD active-power term for NVMe
+/// (`PowerProfile::ssd_max_w`, DESIGN.md §8) — the SSD's draw scales with
+/// its own read duty cycle, not with the host link's.
 ///
 /// `near_mem_s` is the epoch's memory-side reduction busy time
 /// (`--aggregate-pushdown`, DESIGN.md §14; zero otherwise).  Its duty
@@ -74,9 +87,7 @@ pub fn epoch_power(
     sys: &SystemProfile,
     b: &Breakdown,
     cpu_gather_s: f64,
-    host_bytes_on_link: u64,
-    peer_bytes_on_link: u64,
-    storage_bytes_on_link: u64,
+    wire: &LinkBytes,
     near_mem_s: f64,
 ) -> PowerReport {
     let epoch = b.total_s().max(1e-12);
@@ -87,11 +98,20 @@ pub fn epoch_power(
         .clamp(0.0, 1.0);
     let gpu_util = ((b.train_s * GPU_W_TRAIN + b.transfer_s * GPU_W_TRANSFER) / epoch)
         .clamp(0.0, 1.0);
-    let io_util = (host_bytes_on_link as f64 / epoch / sys.pcie.peak_bw
-        + peer_bytes_on_link as f64 / epoch / sys.nvlink.peak_bw)
-        .clamp(0.0, 1.0);
-    let storage_util =
-        (storage_bytes_on_link as f64 / epoch / sys.nvme.peak_bw).clamp(0.0, 1.0);
+    let mut link_util = LinkShare::default();
+    let mut io_util = 0.0;
+    let mut storage_util = 0.0;
+    for l in Topology::from_sys(sys).links() {
+        let duty = wire.get(l.kind) as f64 / epoch / l.peak_bw;
+        link_util.set(l.kind, duty.clamp(0.0, 1.0));
+        match l.rail {
+            Some(PowerRail::Io) => io_util += duty,
+            Some(PowerRail::Storage) => storage_util += duty,
+            None => {}
+        }
+    }
+    let io_util = io_util.clamp(0.0, 1.0);
+    let storage_util = storage_util.clamp(0.0, 1.0);
     let near_mem_util = (near_mem_s / epoch).clamp(0.0, 1.0);
     let watts = sys.power.watts(cpu_util, gpu_util, io_util, storage_util)
         + near_mem_util * sys.power.near_mem_max_w;
@@ -101,6 +121,7 @@ pub fn epoch_power(
         io_util,
         storage_util,
         near_mem_util,
+        link_util,
         watts,
         energy_j: watts * epoch,
     }
@@ -109,6 +130,7 @@ pub fn epoch_power(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::interconnect::ResourceKind;
 
     fn breakdown(sample: f64, transfer: f64, train: f64, other: f64) -> Breakdown {
         Breakdown {
@@ -119,15 +141,23 @@ mod tests {
         }
     }
 
+    fn wire(host: u64, peer: u64, storage: u64) -> LinkBytes {
+        let mut w = LinkBytes::default();
+        w.set(ResourceKind::HostLink, host);
+        w.set(ResourceKind::PeerLink, peer);
+        w.set(ResourceKind::StorageLink, storage);
+        w
+    }
+
     #[test]
     fn removing_cpu_gather_lowers_power() {
         let sys = SystemProfile::system1();
         // Py: 10s epoch with 3s CPU gather inside the 4s transfer phase.
         let py = breakdown(2.0, 4.0, 3.5, 0.5);
-        let p_py = epoch_power(&sys, &py, 3.0, 40 << 30, 0, 0, 0.0);
+        let p_py = epoch_power(&sys, &py, 3.0, &wire(40 << 30, 0, 0), 0.0);
         // PyD: gather gone, transfer shrinks, same train.
         let pyd = breakdown(2.0, 1.8, 3.5, 0.5);
-        let p_pyd = epoch_power(&sys, &pyd, 0.0, 42 << 30, 0, 0, 0.0);
+        let p_pyd = epoch_power(&sys, &pyd, 0.0, &wire(42 << 30, 0, 0), 0.0);
         assert!(p_pyd.watts < p_py.watts);
         let saving = 1.0 - p_pyd.watts / p_py.watts;
         assert!(
@@ -139,25 +169,22 @@ mod tests {
     #[test]
     fn idle_epoch_is_idle_power() {
         let sys = SystemProfile::system1();
-        let p = epoch_power(&sys, &breakdown(0.0, 0.0, 0.0, 1.0), 0.0, 0, 0, 0, 0.0);
+        let p = epoch_power(&sys, &breakdown(0.0, 0.0, 0.0, 1.0), 0.0, &LinkBytes::default(), 0.0);
         assert!(p.watts < sys.power.idle_w + 0.2 * sys.power.cpu_max_w);
     }
 
     #[test]
     fn utils_clamped() {
         let sys = SystemProfile::system2();
-        let p = epoch_power(
-            &sys,
-            &breakdown(100.0, 100.0, 100.0, 0.0),
-            300.0,
-            u64::MAX,
-            u64::MAX,
-            u64::MAX,
-            f64::MAX,
-        );
+        let mut w = wire(u64::MAX, u64::MAX, u64::MAX);
+        w.set(ResourceKind::NetLink, u64::MAX);
+        let p = epoch_power(&sys, &breakdown(100.0, 100.0, 100.0, 0.0), 300.0, &w, f64::MAX);
         assert!(p.cpu_util <= 1.0 && p.gpu_util <= 1.0 && p.io_util <= 1.0);
         assert!(p.storage_util <= 1.0);
         assert!(p.near_mem_util <= 1.0);
+        for kind in ResourceKind::all() {
+            assert!(p.link_util.get(kind) <= 1.0);
+        }
     }
 
     #[test]
@@ -167,8 +194,8 @@ mod tests {
         // bounded by the engine's (deliberately modest) max wattage.
         let sys = SystemProfile::system1();
         let b = breakdown(1.0, 1.0, 1.0, 0.1);
-        let off = epoch_power(&sys, &b, 0.0, 8 << 30, 0, 0, 0.0);
-        let on = epoch_power(&sys, &b, 0.0, 8 << 30, 0, 0, 0.5);
+        let off = epoch_power(&sys, &b, 0.0, &wire(8 << 30, 0, 0), 0.0);
+        let on = epoch_power(&sys, &b, 0.0, &wire(8 << 30, 0, 0), 0.5);
         assert_eq!(off.near_mem_util, 0.0);
         assert!(on.near_mem_util > 0.0);
         assert_eq!(on.cpu_util, off.cpu_util);
@@ -188,10 +215,15 @@ mod tests {
         // than as host PCIe traffic (NVLink peak is several times higher).
         let sys = SystemProfile::system1();
         let b = breakdown(1.0, 1.0, 1.0, 0.1);
-        let as_host = epoch_power(&sys, &b, 0.0, 8 << 30, 0, 0, 0.0);
-        let as_peer = epoch_power(&sys, &b, 0.0, 0, 8 << 30, 0, 0.0);
+        let as_host = epoch_power(&sys, &b, 0.0, &wire(8 << 30, 0, 0), 0.0);
+        let as_peer = epoch_power(&sys, &b, 0.0, &wire(0, 8 << 30, 0), 0.0);
         assert!(as_peer.io_util < as_host.io_util);
         assert!(as_peer.watts <= as_host.watts);
+        // The per-link decomposition attributes each load to its lane.
+        assert!(as_host.link_util.get(ResourceKind::HostLink) > 0.0);
+        assert_eq!(as_host.link_util.get(ResourceKind::PeerLink), 0.0);
+        assert!(as_peer.link_util.get(ResourceKind::PeerLink) > 0.0);
+        assert_eq!(as_peer.link_util.get(ResourceKind::HostLink), 0.0);
     }
 
     #[test]
@@ -200,8 +232,8 @@ mod tests {
         // and a storage-quiet epoch pays no SSD active power at all.
         let sys = SystemProfile::system1();
         let b = breakdown(1.0, 1.0, 1.0, 0.1);
-        let quiet = epoch_power(&sys, &b, 0.0, 0, 0, 0, 0.0);
-        let busy = epoch_power(&sys, &b, 0.0, 0, 0, 4 << 30, 0.0);
+        let quiet = epoch_power(&sys, &b, 0.0, &wire(0, 0, 0), 0.0);
+        let busy = epoch_power(&sys, &b, 0.0, &wire(0, 0, 4 << 30), 0.0);
         assert_eq!(quiet.storage_util, 0.0);
         assert!(busy.storage_util > 0.0);
         assert_eq!(busy.io_util, quiet.io_util);
@@ -210,5 +242,28 @@ mod tests {
             busy.watts - quiet.watts <= sys.power.ssd_max_w + 1e-9,
             "SSD term bounded by its max draw"
         );
+    }
+
+    #[test]
+    fn net_bytes_load_the_io_rail_at_nic_bandwidth() {
+        // Remote-fetch traffic heats the host I/O complex (the NIC shares
+        // the rail with PCIe/NVLink), normalized by the NIC's own peak —
+        // the same byte volume costs *more* duty than over NVLink, since
+        // the NIC is the slower link.
+        let sys = SystemProfile::system1();
+        let b = breakdown(1.0, 1.0, 1.0, 0.1);
+        let mut w = LinkBytes::default();
+        w.set(ResourceKind::NetLink, 4 << 30);
+        let with_net = epoch_power(&sys, &b, 0.0, &w, 0.0);
+        let quiet = epoch_power(&sys, &b, 0.0, &LinkBytes::default(), 0.0);
+        assert!(with_net.io_util > quiet.io_util);
+        assert_eq!(with_net.storage_util, quiet.storage_util);
+        assert!(with_net.link_util.get(ResourceKind::NetLink) > 0.0);
+        let mut p = LinkBytes::default();
+        p.set(ResourceKind::PeerLink, 4 << 30);
+        let as_peer = epoch_power(&sys, &b, 0.0, &p, 0.0);
+        assert!(with_net.io_util > as_peer.io_util);
+        // A net-quiet epoch's report is bitwise free of the new lane.
+        assert_eq!(quiet.link_util.get(ResourceKind::NetLink), 0.0);
     }
 }

@@ -89,8 +89,8 @@ pub fn shard_table(stats: &ShardStats) -> Table {
             stats.load_imbalance()
         ),
         &[
-            "gpu", "shard rows", "hot/cap", "local", "peer", "host", "peer B", "host B",
-            "peer ms", "host ms", "busy ms",
+            "gpu", "shard rows", "hot/cap", "local", "peer", "host", "remote", "halo",
+            "peer B", "host B", "net B", "peer ms", "host ms", "net ms", "busy ms",
         ],
     );
     for (g, s) in stats.per_gpu.iter().enumerate() {
@@ -101,10 +101,14 @@ pub fn shard_table(stats: &ShardStats) -> Table {
             s.local_rows.to_string(),
             s.peer_rows.to_string(),
             s.host_rows.to_string(),
+            s.remote_rows.to_string(),
+            s.halo_rows.to_string(),
             human_bytes(s.peer_bytes),
             human_bytes(s.host_bytes),
+            human_bytes(s.remote_bytes),
             ms(s.peer_time_s),
             ms(s.host_time_s),
+            ms(s.net_time_s),
             ms(s.busy_s),
         ]);
     }

@@ -54,7 +54,7 @@
 //!
 //! // Four steps: 1 ms sampling, 1 ms zero-copy transfer, 1 ms training.
 //! let step = ResourceDemand {
-//!     total_s: 1e-3, cpu_s: 0.0, host_s: 1e-3, peer_s: 0.0, storage_s: 0.0,
+//!     total_s: 1e-3, cpu_s: 0.0, host_s: 1e-3, peer_s: 0.0, storage_s: 0.0, net_s: 0.0,
 //! };
 //! let demands = vec![step; 4];
 //! let serial = 4.0 * 3e-3;
@@ -73,7 +73,7 @@
 //! [`ResourceDemand`]: crate::interconnect::ResourceDemand
 
 use crate::coordinator::simclock::{ResourceBusy, ResourceKind, SimResource};
-use crate::interconnect::ResourceDemand;
+use crate::interconnect::{ResourceDemand, Topology};
 
 /// Epoch-level inputs of the overlap engine (everything the per-step
 /// [`ResourceDemand`]s don't carry).
@@ -142,11 +142,7 @@ impl OverlapReport {
 fn dominant_link(d: &ResourceDemand) -> ResourceKind {
     let mut kind = ResourceKind::Gpu;
     let mut best = 0.0;
-    for (k, s) in [
-        (ResourceKind::HostLink, d.host_s),
-        (ResourceKind::PeerLink, d.peer_s),
-        (ResourceKind::StorageLink, d.storage_s),
-    ] {
+    for (k, s) in d.links() {
         if s > best {
             kind = k;
             best = s;
@@ -173,7 +169,7 @@ pub(crate) struct LinkWindow {
 
 pub(crate) fn link_window(d: &ResourceDemand) -> LinkWindow {
     let link_dur_s = (d.total_s - d.cpu_s).max(0.0);
-    let raw_class_s = d.host_s + d.peer_s + d.storage_s;
+    let raw_class_s = d.link_total();
     let scale = if raw_class_s > link_dur_s && raw_class_s > 0.0 {
         link_dur_s / raw_class_s
     } else {
@@ -204,11 +200,16 @@ pub fn schedule_epoch(demands: &[ResourceDemand], p: &OverlapParams) -> OverlapR
 
     let lanes = p.sampler_lanes.max(1);
     let depth = p.prefetch_depth as usize;
-    let mut cpu = SimResource::new(ResourceKind::Sampler, lanes);
-    let mut host = SimResource::new(ResourceKind::HostLink, 1);
-    let mut peer = SimResource::new(ResourceKind::PeerLink, 1);
-    let mut storage = SimResource::new(ResourceKind::StorageLink, 1);
-    let mut gpu = SimResource::new(ResourceKind::Gpu, 1);
+    // One lane set per registered resource, in canonical topology order
+    // (indexed by kind ordinal — a new link joins the schedule by joining
+    // the topology, DESIGN.md §15).
+    let mut resources: Vec<SimResource> = Topology::lanes(lanes)
+        .links()
+        .iter()
+        .map(|l| SimResource::new(l.kind, l.lanes))
+        .collect();
+    let sampler = ResourceKind::Sampler.ordinal();
+    let gpu = ResourceKind::Gpu.ordinal();
     let mut events: Vec<Event> = Vec::with_capacity(4 * demands.len());
     // (finish, event id) of each step's train stage — the window gates.
     let mut train_done: Vec<(f64, usize)> = Vec::with_capacity(demands.len());
@@ -223,14 +224,14 @@ pub fn schedule_epoch(demands: &[ResourceDemand], p: &OverlapParams) -> OverlapR
             start = finish;
             bind = Some(ev);
         }
-        let (free, last) = cpu.peek(lane);
+        let (free, last) = resources[sampler].peek(lane);
         if free > start {
             start = free;
             bind = last;
         }
         let ev = events.len();
         events.push(Event { res: ResourceKind::Sampler, dur_s: p.sample_step_s, binding: bind });
-        cpu.occupy(lane, start, p.sample_step_s, ev);
+        resources[sampler].occupy(lane, start, p.sample_step_s, ev);
         let mut t = start + p.sample_step_s;
         let mut prev = ev;
 
@@ -239,7 +240,7 @@ pub fn schedule_epoch(demands: &[ResourceDemand], p: &OverlapParams) -> OverlapR
         if d.cpu_s > 0.0 {
             let ev = events.len();
             events.push(Event { res: ResourceKind::Sampler, dur_s: d.cpu_s, binding: Some(prev) });
-            cpu.occupy(lane, t, d.cpu_s, ev);
+            resources[sampler].occupy(lane, t, d.cpu_s, ev);
             t += d.cpu_s;
             prev = ev;
         }
@@ -247,14 +248,15 @@ pub fn schedule_epoch(demands: &[ResourceDemand], p: &OverlapParams) -> OverlapR
         // --- link transfer: the step's transfer window minus its CPU
         // share, split into a chain-only GPU pre-segment (kernel-launch
         // overhead — it delays the step but occupies no link) and the
-        // *launch-free* per-class occupancies of `PathSplit`, laid out
-        // host -> peer -> storage inside the window (an NVMe-mode step's
-        // storage reads drain right behind its host reads on the shared
-        // PCIe root complex, DESIGN.md §8).  When the summed class
-        // occupancies exceed the window (the sharded per-GPU times sum
-        // across concurrent GPUs; the baseline's host_time includes its
-        // CPU share), they are scaled to fit — per-link busy time never
-        // exceeds what the step actually spends on the link.
+        // *launch-free* per-class occupancies of `PathSplit`, laid out in
+        // canonical link order (host -> peer -> storage -> net) inside the
+        // window (an NVMe-mode step's storage reads drain right behind its
+        // host reads on the shared PCIe root complex, DESIGN.md §8).  When
+        // the summed class occupancies exceed the window (the sharded
+        // per-GPU times sum across concurrent GPUs; the baseline's
+        // host_time includes its CPU share), they are scaled to fit —
+        // per-link busy time never exceeds what the step actually spends
+        // on the link.
         let win = link_window(d);
         let scale = win.scale;
         if win.pre_s > 0.0 {
@@ -264,14 +266,9 @@ pub fn schedule_epoch(demands: &[ResourceDemand], p: &OverlapParams) -> OverlapR
             prev = ev;
         }
         let (mut start, mut bind) = (t, Some(prev));
-        let classes = [
-            (d.host_s, &mut host),
-            (d.peer_s, &mut peer),
-            (d.storage_s, &mut storage),
-        ];
-        for (class_s, res) in &classes {
-            if *class_s > 0.0 {
-                let (free, last) = res.peek(0);
+        for (kind, class_s) in d.links() {
+            if class_s > 0.0 {
+                let (free, last) = resources[kind.ordinal()].peek(0);
                 if free > start {
                     start = free;
                     bind = last;
@@ -280,13 +277,13 @@ pub fn schedule_epoch(demands: &[ResourceDemand], p: &OverlapParams) -> OverlapR
         }
         let mut seg = start;
         let mut first = true;
-        for (class_s, res) in classes {
+        for (kind, class_s) in d.links() {
             if class_s > 0.0 {
                 let dur = class_s * scale;
                 let ev = events.len();
                 let binding = if first { bind } else { Some(prev) };
-                events.push(Event { res: res.kind(), dur_s: dur, binding });
-                res.occupy(0, seg, dur, ev);
+                events.push(Event { res: kind, dur_s: dur, binding });
+                resources[kind.ordinal()].occupy(0, seg, dur, ev);
                 seg += dur;
                 prev = ev;
                 first = false;
@@ -296,14 +293,14 @@ pub fn schedule_epoch(demands: &[ResourceDemand], p: &OverlapParams) -> OverlapR
 
         // --- train: the single GPU, in step order ---
         let (mut start, mut bind) = (t, Some(prev));
-        let (free, last) = gpu.peek(0);
+        let (free, last) = resources[gpu].peek(0);
         if free > start {
             start = free;
             bind = last;
         }
         let ev = events.len();
         events.push(Event { res: ResourceKind::Gpu, dur_s: p.train_step_s, binding: bind });
-        gpu.occupy(0, start, p.train_step_s, ev);
+        resources[gpu].occupy(0, start, p.train_step_s, ev);
         train_done.push((start + p.train_step_s, ev));
     }
 
@@ -321,7 +318,7 @@ pub fn schedule_epoch(demands: &[ResourceDemand], p: &OverlapParams) -> OverlapR
     }
 
     let mut busy = ResourceBusy::default();
-    for r in [&cpu, &host, &peer, &storage, &gpu] {
+    for r in &resources {
         busy.add(r.kind(), r.busy_s());
     }
 
@@ -345,11 +342,7 @@ fn serial_anchor(demands: &[ResourceDemand], p: &OverlapParams) -> OverlapReport
         let link_dur = link_window(d).link_dur_s;
         busy.add(ResourceKind::Sampler, p.sample_step_s + d.cpu_s);
         critical.add(ResourceKind::Sampler, p.sample_step_s + d.cpu_s);
-        for (kind, s) in [
-            (ResourceKind::HostLink, d.host_s),
-            (ResourceKind::PeerLink, d.peer_s),
-            (ResourceKind::StorageLink, d.storage_s),
-        ] {
+        for (kind, s) in d.links() {
             if s > 0.0 {
                 busy.add(kind, link_dur);
             }
@@ -377,8 +370,7 @@ mod tests {
             total_s,
             cpu_s: 0.0,
             host_s: total_s,
-            peer_s: 0.0,
-            storage_s: 0.0,
+            ..ResourceDemand::default()
         }
     }
 
@@ -461,20 +453,19 @@ mod tests {
                 total_s: 2e-3,
                 cpu_s: 1e-3,
                 host_s: 2e-3,
-                peer_s: 0.0,
-                storage_s: 0.0,
+                ..ResourceDemand::default()
             })
             .collect();
         let mut p = params(8, 0.0);
         p.serial_s = serial_of(&demands, &p);
         let r = schedule_epoch(&demands, &p);
         let cpu_busy = 6.0 * (1e-3 + 1e-3);
-        assert!((r.busy.sampler_s - cpu_busy).abs() < 1e-12);
+        assert!((r.busy.get(ResourceKind::Sampler) - cpu_busy).abs() < 1e-12);
         assert!(r.overlapped_s >= cpu_busy);
         // Sample + gather saturate the single CPU lane: the epoch is
         // CPU-bound and the attribution says so.
         assert_eq!(r.bound_by, ResourceKind::Sampler);
-        assert!(r.critical.sampler_s > r.critical.host_link_s);
+        assert!(r.critical.get(ResourceKind::Sampler) > r.critical.get(ResourceKind::HostLink));
     }
 
     #[test]
@@ -485,7 +476,7 @@ mod tests {
                 cpu_s: if i % 2 == 0 { 2e-4 } else { 0.0 },
                 host_s: 8e-4,
                 peer_s: if i % 3 == 0 { 3e-4 } else { 0.0 },
-                storage_s: 0.0,
+                ..ResourceDemand::default()
             })
             .collect();
         let mut last = f64::INFINITY;
@@ -536,10 +527,8 @@ mod tests {
                 } else {
                     ResourceDemand {
                         total_s: 2e-3,
-                        cpu_s: 0.0,
-                        host_s: 0.0,
-                        peer_s: 0.0,
                         storage_s: 2e-3,
+                        ..ResourceDemand::default()
                     }
                 }
             })
@@ -551,7 +540,45 @@ mod tests {
         let serialised = schedule_epoch(&demands, &p1);
         let piped = schedule_epoch(&demands, &p4);
         assert!(piped.overlapped_s < serialised.overlapped_s);
-        assert!(piped.busy.storage_link_s > 0.0 && piped.busy.host_link_s > 0.0);
+        assert!(
+            piped.busy.get(ResourceKind::StorageLink) > 0.0
+                && piped.busy.get(ResourceKind::HostLink) > 0.0
+        );
+    }
+
+    #[test]
+    fn net_demand_occupies_the_net_lane() {
+        // Remote-fetch-shaped steps: part of the transfer window rides the
+        // network lane.  The engine must track its busy time separately
+        // and still overlap it against the other links across steps.
+        let demands: Vec<ResourceDemand> = (0..8)
+            .map(|i| {
+                if i % 2 == 0 {
+                    host_step(2e-3)
+                } else {
+                    ResourceDemand {
+                        total_s: 2e-3,
+                        host_s: 1e-3,
+                        net_s: 1e-3,
+                        ..ResourceDemand::default()
+                    }
+                }
+            })
+            .collect();
+        let mut p = params(4, 0.0);
+        p.serial_s = serial_of(&demands, &p);
+        let r = schedule_epoch(&demands, &p);
+        assert!((r.busy.get(ResourceKind::NetLink) - 4.0 * 1e-3).abs() < 1e-12);
+        assert!(r.busy.get(ResourceKind::HostLink) > 0.0);
+        // Net-free steps leave the lane untouched in the serial anchor too.
+        let mut p0 = params(0, 0.0);
+        p0.serial_s = serial_of(&demands, &p0);
+        let anchor = schedule_epoch(&demands, &p0);
+        assert!(anchor.busy.get(ResourceKind::NetLink) > 0.0);
+        let host_only = vec![host_step(2e-3); 4];
+        let mut ph = params(0, 0.0);
+        ph.serial_s = serial_of(&host_only, &ph);
+        assert_eq!(schedule_epoch(&host_only, &ph).busy.get(ResourceKind::NetLink), 0.0);
     }
 
     #[test]

@@ -57,7 +57,7 @@ use crate::coordinator::trainer::{Breakdown, PushdownReport};
 use crate::error::{Error, Result};
 use crate::featurestore::{FeatureStore, TierStats};
 use crate::graph::{Csr, DatasetPreset};
-use crate::interconnect::TransferCost;
+use crate::interconnect::{Topology, TransferCost};
 use crate::runtime::Manifest;
 use crate::sampler::{AggregatePlan, CoalescedGatherPlan, MiniBatch, NeighborSampler};
 use crate::util::rng::Rng;
@@ -163,26 +163,6 @@ struct Pending {
 fn take_batch(queue: &mut VecDeque<Pending>, coalesce: bool, limit: usize) -> Vec<Pending> {
     let k = if coalesce { queue.len().min(limit) } else { 1 };
     queue.drain(..k.min(queue.len())).collect()
-}
-
-/// Sum one member's pushed-down transfer cost into the batch's combined
-/// window (times serialize on the shared links, bytes and requests add).
-fn add_cost(acc: &mut TransferCost, c: &TransferCost) {
-    acc.time_s += c.time_s;
-    acc.bytes_on_link += c.bytes_on_link;
-    acc.useful_bytes += c.useful_bytes;
-    acc.requests += c.requests;
-    acc.cpu_time_s += c.cpu_time_s;
-    acc.split.local_bytes += c.split.local_bytes;
-    acc.split.peer_bytes += c.split.peer_bytes;
-    acc.split.host_bytes += c.split.host_bytes;
-    acc.split.storage_bytes += c.split.storage_bytes;
-    acc.split.peer_bytes_on_link += c.split.peer_bytes_on_link;
-    acc.split.host_bytes_on_link += c.split.host_bytes_on_link;
-    acc.split.storage_bytes_on_link += c.split.storage_bytes_on_link;
-    acc.split.peer_time_s += c.split.peer_time_s;
-    acc.split.host_time_s += c.split.host_time_s;
-    acc.split.storage_time_s += c.split.storage_time_s;
 }
 
 /// Request-driven serving engine over the full data path (sampler +
@@ -291,11 +271,15 @@ impl ServingEngine {
         let sim_fwd = self.compute.train_step_s(&self.cfg.system) / 3.0;
 
         let lanes = self.cfg.sampler_workers.max(1);
-        let mut cpu = SimResource::new(ResourceKind::Sampler, lanes);
-        let mut host = SimResource::new(ResourceKind::HostLink, 1);
-        let mut peer = SimResource::new(ResourceKind::PeerLink, 1);
-        let mut storage = SimResource::new(ResourceKind::StorageLink, 1);
-        let mut gpu = SimResource::new(ResourceKind::Gpu, 1);
+        // One lane set per registered resource, canonical topology order
+        // (kind-ordinal indexed — the epoch engine's layout, DESIGN.md §15).
+        let mut resources: Vec<SimResource> = Topology::lanes(lanes)
+            .links()
+            .iter()
+            .map(|l| SimResource::new(l.kind, l.lanes))
+            .collect();
+        let sampler = ResourceKind::Sampler.ordinal();
+        let gpu = ResourceKind::Gpu.ordinal();
         let mut ev = 0usize; // occupancy tags (no critical-path walk here)
 
         // Arrival times are non-decreasing by construction: the open loop
@@ -354,8 +338,8 @@ impl ServingEngine {
 
             // The next batch starts sampling when a sampler lane frees (or
             // immediately for the queue head's arrival, if later).
-            let lane = cpu.earliest_lane();
-            let (lane_free, _) = cpu.peek(lane);
+            let lane = resources[sampler].earliest_lane();
+            let (lane_free, _) = resources[sampler].peek(lane);
             let t_start = lane_free.max(
                 queue
                     .front()
@@ -414,7 +398,7 @@ impl ServingEngine {
                 report.breakdown_sim.sample_s += sim_sample;
                 mbs.push(mb);
             }
-            cpu.occupy(lane, t_start, sample_dur, ev);
+            resources[sampler].occupy(lane, t_start, sample_dur, ev);
             ev += 1;
             let mut t = t_start + sample_dur;
 
@@ -429,7 +413,7 @@ impl ServingEngine {
                 for mb in &mbs {
                     let plan = AggregatePlan::build(mb)?;
                     let pd = self.store.pushdown_cost(&plan, self.cfg.dedup)?;
-                    add_cost(&mut sum, &pd.cost);
+                    sum.absorb(&pd.cost);
                     let p = &mut report.pushdown;
                     p.pushed_bytes_on_link += pd.cost.bytes_on_link;
                     p.agg_bytes_on_link += pd.agg_bytes_on_link;
@@ -461,29 +445,24 @@ impl ServingEngine {
             // decomposition, shared via `link_window`).
             let d = cost.demand();
             if d.cpu_s > 0.0 {
-                cpu.occupy(lane, t, d.cpu_s, ev);
+                resources[sampler].occupy(lane, t, d.cpu_s, ev);
                 ev += 1;
                 t += d.cpu_s;
             }
             let win = link_window(&d);
             t += win.pre_s;
             let mut start = t;
-            let classes = [
-                (d.host_s, &mut host),
-                (d.peer_s, &mut peer),
-                (d.storage_s, &mut storage),
-            ];
-            for (class_s, res) in &classes {
-                if *class_s > 0.0 {
-                    let (free, _) = res.peek(0);
+            for (kind, class_s) in d.links() {
+                if class_s > 0.0 {
+                    let (free, _) = resources[kind.ordinal()].peek(0);
                     start = start.max(free);
                 }
             }
             let mut seg = start;
-            for (class_s, res) in classes {
+            for (kind, class_s) in d.links() {
                 if class_s > 0.0 {
                     let dur = class_s * win.scale;
-                    res.occupy(0, seg, dur, ev);
+                    resources[kind.ordinal()].occupy(0, seg, dur, ev);
                     ev += 1;
                     seg += dur;
                 }
@@ -492,9 +471,9 @@ impl ServingEngine {
             // Execute: the forward estimate scales with the member count.
             let exec_dur = sim_fwd * k as f64;
             report.breakdown_sim.train_s += exec_dur;
-            let (gpu_free, _) = gpu.peek(0);
+            let (gpu_free, _) = resources[gpu].peek(0);
             let exec_start = seg.max(gpu_free);
-            gpu.occupy(0, exec_start, exec_dur, ev);
+            resources[gpu].occupy(0, exec_start, exec_dur, ev);
             ev += 1;
             let completion = exec_start + exec_dur;
             report.makespan_s = report.makespan_s.max(completion);
@@ -512,7 +491,7 @@ impl ServingEngine {
         }
 
         report.offered = offered;
-        for r in [&cpu, &host, &peer, &storage, &gpu] {
+        for r in &resources {
             report.busy.add(r.kind(), r.busy_s());
         }
         report.bound_by = report.busy.max_kind();

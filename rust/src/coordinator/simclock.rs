@@ -9,6 +9,14 @@
 //! different hardware — which is how the paper's pipelined epoch hides the
 //! feature-copy time under training compute.
 //!
+//! The resource vocabulary itself — [`ResourceKind`], its canonical
+//! order, and the per-kind [`ResourceBusy`] accounting — lives in the
+//! link-topology registry (`interconnect::topology`, DESIGN.md §15) and
+//! is re-exported here: the overlap engine builds its lane set from
+//! [`Topology::lanes`](crate::interconnect::Topology::lanes) rather than
+//! naming resources, so a new link enters the schedule by joining the
+//! topology, not by editing the scheduler.
+//!
 //! A [`SimResource`] is one piece of hardware with one or more service
 //! lanes (the CPU sampler has `sampler_workers` lanes; the links and the
 //! GPU have one).  Lanes are busy-until scalars: the scheduler asks when a
@@ -29,97 +37,7 @@
 //! assert_eq!(link.busy_s(), 1.0);
 //! ```
 
-/// The shared hardware resources a training step's stages contend for.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
-pub enum ResourceKind {
-    /// CPU sampler lanes (neighbor sampling, plus the CPU half of the
-    /// baseline's gather/staging work — they fight for the same cores).
-    Sampler,
-    /// The host link: PCIe zero-copy reads, DMA copies, UVM migrations.
-    HostLink,
-    /// The NVLink peer-ingress budget of the sharded store.
-    PeerLink,
-    /// The NVMe command queue / storage link of the three-tier store.
-    StorageLink,
-    /// The GPU compute engine (training steps; kernel-launch-only
-    /// transfers are attributed here without occupying it).
-    #[default]
-    Gpu,
-}
-
-impl ResourceKind {
-    /// All kinds, in reporting order.
-    pub fn all() -> [ResourceKind; 5] {
-        [
-            ResourceKind::Sampler,
-            ResourceKind::HostLink,
-            ResourceKind::PeerLink,
-            ResourceKind::StorageLink,
-            ResourceKind::Gpu,
-        ]
-    }
-
-    pub fn label(&self) -> &'static str {
-        match self {
-            ResourceKind::Sampler => "sampler",
-            ResourceKind::HostLink => "host-link",
-            ResourceKind::PeerLink => "peer-link",
-            ResourceKind::StorageLink => "storage-link",
-            ResourceKind::Gpu => "gpu",
-        }
-    }
-}
-
-/// Seconds accounted per resource (busy time, or critical-path share).
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub struct ResourceBusy {
-    pub sampler_s: f64,
-    pub host_link_s: f64,
-    pub peer_link_s: f64,
-    pub storage_link_s: f64,
-    pub gpu_s: f64,
-}
-
-impl ResourceBusy {
-    pub fn add(&mut self, kind: ResourceKind, seconds: f64) {
-        match kind {
-            ResourceKind::Sampler => self.sampler_s += seconds,
-            ResourceKind::HostLink => self.host_link_s += seconds,
-            ResourceKind::PeerLink => self.peer_link_s += seconds,
-            ResourceKind::StorageLink => self.storage_link_s += seconds,
-            ResourceKind::Gpu => self.gpu_s += seconds,
-        }
-    }
-
-    pub fn get(&self, kind: ResourceKind) -> f64 {
-        match kind {
-            ResourceKind::Sampler => self.sampler_s,
-            ResourceKind::HostLink => self.host_link_s,
-            ResourceKind::PeerLink => self.peer_link_s,
-            ResourceKind::StorageLink => self.storage_link_s,
-            ResourceKind::Gpu => self.gpu_s,
-        }
-    }
-
-    pub fn total(&self) -> f64 {
-        self.sampler_s + self.host_link_s + self.peer_link_s + self.storage_link_s + self.gpu_s
-    }
-
-    /// Resource with the largest share (ties resolved in
-    /// [`ResourceKind::all`] order, so the result is deterministic).
-    pub fn max_kind(&self) -> ResourceKind {
-        let mut best = ResourceKind::Sampler;
-        let mut best_s = self.get(best);
-        for kind in ResourceKind::all() {
-            let s = self.get(kind);
-            if s > best_s {
-                best = kind;
-                best_s = s;
-            }
-        }
-        best
-    }
-}
+pub use crate::interconnect::topology::{ResourceBusy, ResourceKind};
 
 /// One piece of simulated hardware: `lanes` busy-until scalars plus the
 /// id of each lane's most recent user (for critical-path bookkeeping) and
@@ -232,31 +150,13 @@ mod tests {
     }
 
     #[test]
-    fn busy_accumulates_by_kind() {
+    fn reexported_kinds_are_the_topology_kinds() {
+        // The scheduler's resource vocabulary IS the topology's — one
+        // canonical order, re-exported (DESIGN.md §15).
+        use crate::interconnect::topology;
+        assert_eq!(ResourceKind::all(), topology::ResourceKind::all());
         let mut b = ResourceBusy::default();
-        b.add(ResourceKind::HostLink, 1.0);
-        b.add(ResourceKind::HostLink, 0.5);
-        b.add(ResourceKind::Gpu, 2.0);
-        assert!((b.get(ResourceKind::HostLink) - 1.5).abs() < 1e-12);
-        assert!((b.total() - 3.5).abs() < 1e-12);
-        assert_eq!(b.max_kind(), ResourceKind::Gpu);
-    }
-
-    #[test]
-    fn max_kind_tie_break_is_deterministic() {
-        let mut b = ResourceBusy::default();
-        b.add(ResourceKind::Gpu, 1.0);
-        b.add(ResourceKind::Sampler, 1.0);
-        // Equal shares: reporting order wins (Sampler precedes Gpu).
-        assert_eq!(b.max_kind(), ResourceKind::Sampler);
-        assert_eq!(ResourceBusy::default().max_kind(), ResourceKind::Sampler);
-    }
-
-    #[test]
-    fn labels_cover_every_kind() {
-        for kind in ResourceKind::all() {
-            assert!(!kind.label().is_empty());
-        }
-        assert_eq!(ResourceKind::all().len(), 5);
+        b.add(ResourceKind::HostLink, 1.5);
+        assert_eq!(b.get(topology::ResourceKind::HostLink), 1.5);
     }
 }

@@ -28,7 +28,7 @@ use crate::featurestore::nvme::NvmeStoreConfig;
 use crate::featurestore::sharded::ShardConfig;
 use crate::featurestore::tiered::TierConfig;
 use crate::featurestore::{FeatureStore, NvmeStats, ShardStats, TierStats};
-use crate::interconnect::ResourceDemand;
+use crate::interconnect::{LinkBytes, ResourceDemand, ResourceKind};
 use crate::pipeline::executor::{run_pipeline, PipelineReport};
 use crate::runtime::native::{self, NativeTrainState};
 use crate::runtime::state::{StepBatch, TrainState};
@@ -439,11 +439,10 @@ impl Trainer {
         let tier_epoch_start = self.store.tier_stats();
         let shard_epoch_start = self.store.shard_stats();
         let nvme_epoch_start = self.store.nvme_stats();
-        // Per-link byte accumulators for the power model: host (PCIe/DMA),
-        // NVLink peer, and NVMe storage traffic are normalized by
-        // different peaks (and the storage bytes drive the SSD term).
-        let (mut host_link_bytes, mut peer_link_bytes, mut storage_link_bytes) =
-            (0u64, 0u64, 0u64);
+        // Per-link wire-byte accumulator for the power model, keyed by
+        // topology kind (DESIGN.md §15): each link is normalized by its
+        // own peak, and the rail tags decide which power term it loads.
+        let mut wire_bytes = LinkBytes::default();
         // Near-memory reduction busy seconds (`--aggregate-pushdown`):
         // feeds the power model's near-memory duty cycle.
         let mut near_mem_busy_s = 0.0f64;
@@ -460,9 +459,7 @@ impl Trainer {
             let mut native = self.native.as_mut();
             let report = &mut report;
             let demands = &mut demands;
-            let host_link_bytes = &mut host_link_bytes;
-            let peer_link_bytes = &mut peer_link_bytes;
-            let storage_link_bytes = &mut storage_link_bytes;
+            let wire_bytes = &mut wire_bytes;
             let near_mem_busy_s = &mut near_mem_busy_s;
             run_pipeline(
                 seeds.len() as u64,
@@ -538,9 +535,10 @@ impl Trainer {
                     report.breakdown_sim.transfer_s += cost.time_s;
                     report.cpu_gather_s += cost.cpu_time_s;
                     report.bytes_on_link += cost.bytes_on_link;
-                    *host_link_bytes += cost.split.host_bytes_on_link;
-                    *peer_link_bytes += cost.split.peer_bytes_on_link;
-                    *storage_link_bytes += cost.split.storage_bytes_on_link;
+                    wire_bytes.add(ResourceKind::HostLink, cost.split.host_bytes_on_link);
+                    wire_bytes.add(ResourceKind::PeerLink, cost.split.peer_bytes_on_link);
+                    wire_bytes.add(ResourceKind::StorageLink, cost.split.storage_bytes_on_link);
+                    wire_bytes.add(ResourceKind::NetLink, cost.split.net_bytes_on_link);
                     report.requests += cost.requests;
                     demands.push(cost.demand());
                     if let Some((pd, raw_bytes)) = pushed {
@@ -639,15 +637,28 @@ impl Trainer {
         } else {
             1
         };
+        let mut wire = LinkBytes::default();
+        wire.set(
+            ResourceKind::HostLink,
+            wire_bytes.get(ResourceKind::HostLink) / n_links,
+        );
+        wire.set(
+            ResourceKind::PeerLink,
+            wire_bytes.get(ResourceKind::PeerLink) / n_links,
+        );
+        // One SSD and one NIC per host regardless of GPU count (only
+        // `Nvme` mode produces storage traffic; network bytes leave
+        // through the host's single NIC).
+        wire.set(
+            ResourceKind::StorageLink,
+            wire_bytes.get(ResourceKind::StorageLink),
+        );
+        wire.set(ResourceKind::NetLink, wire_bytes.get(ResourceKind::NetLink));
         report.power = epoch_power(
             &self.cfg.system,
             &report.breakdown_sim,
             report.cpu_gather_s,
-            host_link_bytes / n_links,
-            peer_link_bytes / n_links,
-            // One SSD regardless of GPU count (only `Nvme` mode produces
-            // storage traffic, and it is single-GPU).
-            storage_link_bytes,
+            &wire,
             near_mem_busy_s,
         );
         report.tier = self.store.tier_stats().map(|now| match &tier_epoch_start {

@@ -17,11 +17,21 @@
 //! is split into `num_gpus` contiguous sub-batches, each GPU resolves its
 //! sub-batch against the three paths of the cost matrix (DESIGN.md §4):
 //!
-//! | path  | condition                          | cost model              |
-//! |-------|------------------------------------|-------------------------|
-//! | local | row hot in the requester's tier    | kernel launch only      |
-//! | peer  | row hot in another GPU's tier      | [`NvlinkLink`] zero-copy|
-//! | host  | row cold in its owner's tier       | [`PcieLink`] zero-copy  |
+//! | path   | condition                           | cost model              |
+//! |--------|-------------------------------------|-------------------------|
+//! | local  | row hot in the requester's tier     | kernel launch only      |
+//! | peer   | row hot in another GPU's tier       | [`NvlinkLink`] zero-copy|
+//! | host   | row cold in its owner's tier        | [`PcieLink`] zero-copy  |
+//! | remote | row homed on another host           | [`NetLink`] RPC fetch   |
+//!
+//! The remote path only exists with `--num-hosts > 1` under the
+//! `RemoteFetch` strategy (DESIGN.md §15): the table is partitioned a
+//! second time at *host* granularity with the same placement policy, the
+//! trainer models host 0's perspective, and foreign-homed rows arrive as
+//! batched per-home RPCs over the network link.  `PartitionLocal` instead
+//! replicates the halo on every host — foreign-homed rows classify through
+//! the normal local/peer/host matrix (counted as `halo_rows`), zero bytes
+//! touch the NIC, and the gather cost is bitwise the `--num-hosts 1` cost.
 //!
 //! and the step's transfer time is the *maximum* over GPUs (they run
 //! concurrently; the epoch-level spread is surfaced as the load-imbalance
@@ -34,21 +44,30 @@
 //! [`TransferCost`]: crate::interconnect::TransferCost
 //! [`NvlinkLink`]: crate::interconnect::NvlinkLink
 //! [`PcieLink`]: crate::interconnect::PcieLink
+//! [`NetLink`]: crate::interconnect::NetLink
 
-use crate::config::{RunConfig, ShardPolicy, SystemProfile};
+use crate::config::{FetchStrategy, RunConfig, ShardPolicy, SystemProfile};
 use crate::device::warp::{count_requests, GatherTraffic, WarpModel};
 use crate::featurestore::placement;
 use crate::featurestore::tiered::{TierConfig, TierStats, TieredCache};
 use crate::graph::Csr;
-use crate::interconnect::{NvlinkLink, PathSplit, PcieLink, TransferCost};
+use crate::interconnect::{NetLink, NvlinkLink, PathSplit, PcieLink, TransferCost};
 
 /// Placement + capacity knobs for the sharded store.
 #[derive(Clone, Debug)]
 pub struct ShardConfig {
     /// Number of simulated GPUs the table is partitioned across.
     pub num_gpus: usize,
-    /// Row-to-shard placement policy.
+    /// Number of simulated *hosts* the table is partitioned across above
+    /// the GPU layer (`--num-hosts`, DESIGN.md §15).  The trainer models
+    /// host 0's perspective; rows homed elsewhere are reached per
+    /// `fetch_strategy`.  1 = the single-node model, bit-exactly.
+    pub num_hosts: usize,
+    /// Row-to-shard placement policy (reused at host granularity for the
+    /// host partition, so both layers split the table the same way).
     pub policy: ShardPolicy,
+    /// How rows homed on other hosts are reached when `num_hosts > 1`.
+    pub fetch_strategy: FetchStrategy,
     /// Per-GPU hot-tier knobs (`hot_frac` applies to each *shard*, so the
     /// aggregate hot set stays a `hot_frac` share of the whole table); the
     /// ranking is the global one — each GPU seeds from its shard's slice.
@@ -59,7 +78,9 @@ impl Default for ShardConfig {
     fn default() -> Self {
         ShardConfig {
             num_gpus: 1,
+            num_hosts: 1,
             policy: ShardPolicy::Hash,
+            fetch_strategy: FetchStrategy::RemoteFetch,
             tier: TierConfig::default(),
         }
     }
@@ -67,12 +88,15 @@ impl Default for ShardConfig {
 
 impl ShardConfig {
     /// Derive the shard configuration a training run wants: the run's
-    /// `num_gpus`/`shard_policy` knobs plus the tier knobs (degree ranking
-    /// from the graph, `hot_frac`, reserve, promotion).
+    /// `num_gpus`/`num_hosts`/`shard_policy`/`fetch_strategy` knobs plus
+    /// the tier knobs (degree ranking from the graph, `hot_frac`, reserve,
+    /// promotion).
     pub fn from_run(cfg: &RunConfig, graph: &Csr) -> ShardConfig {
         ShardConfig {
             num_gpus: cfg.num_gpus as usize,
+            num_hosts: cfg.num_hosts as usize,
             policy: cfg.shard_policy,
+            fetch_strategy: cfg.fetch_strategy,
             tier: TierConfig::from_run(cfg, graph),
         }
     }
@@ -124,13 +148,21 @@ pub struct GpuShardStats {
     pub peer_rows: u64,
     /// Rows this GPU fetched from host memory over the host link.
     pub host_rows: u64,
+    /// Rows this GPU fetched from other hosts over the network link
+    /// (`RemoteFetch` with `num_hosts > 1`; always 0 otherwise).
+    pub remote_rows: u64,
+    /// Rows homed on other hosts that this host served from its local
+    /// replica (`PartitionLocal` halo; always 0 under `RemoteFetch`).
+    pub halo_rows: u64,
     /// Useful bytes per path (rows × row size).
     pub local_bytes: u64,
     pub peer_bytes: u64,
     pub host_bytes: u64,
-    /// Simulated seconds of NVLink / host-link occupancy.
+    pub remote_bytes: u64,
+    /// Simulated seconds of NVLink / host-link / network occupancy.
     pub peer_time_s: f64,
     pub host_time_s: f64,
+    pub net_time_s: f64,
     /// Simulated seconds this GPU was busy in gather steps (the per-step
     /// maximum of its path times; the step barrier waits on the slowest
     /// GPU, so `max(busy) / mean(busy)` is the load-imbalance factor).
@@ -145,9 +177,9 @@ pub struct GpuShardStats {
 }
 
 impl GpuShardStats {
-    /// Rows this GPU requested, across all three paths.
+    /// Rows this GPU requested, across all paths.
     pub fn rows_served(&self) -> u64 {
-        self.local_rows + self.peer_rows + self.host_rows
+        self.local_rows + self.peer_rows + self.host_rows + self.remote_rows
     }
 
     /// Counter deltas relative to an `earlier` snapshot; gauges keep their
@@ -157,11 +189,15 @@ impl GpuShardStats {
             local_rows: self.local_rows - earlier.local_rows,
             peer_rows: self.peer_rows - earlier.peer_rows,
             host_rows: self.host_rows - earlier.host_rows,
+            remote_rows: self.remote_rows - earlier.remote_rows,
+            halo_rows: self.halo_rows - earlier.halo_rows,
             local_bytes: self.local_bytes - earlier.local_bytes,
             peer_bytes: self.peer_bytes - earlier.peer_bytes,
             host_bytes: self.host_bytes - earlier.host_bytes,
+            remote_bytes: self.remote_bytes - earlier.remote_bytes,
             peer_time_s: self.peer_time_s - earlier.peer_time_s,
             host_time_s: self.host_time_s - earlier.host_time_s,
+            net_time_s: self.net_time_s - earlier.net_time_s,
             busy_s: self.busy_s - earlier.busy_s,
             ..*self
         }
@@ -201,11 +237,15 @@ impl ShardStats {
             t.local_rows += g.local_rows;
             t.peer_rows += g.peer_rows;
             t.host_rows += g.host_rows;
+            t.remote_rows += g.remote_rows;
+            t.halo_rows += g.halo_rows;
             t.local_bytes += g.local_bytes;
             t.peer_bytes += g.peer_bytes;
             t.host_bytes += g.host_bytes;
+            t.remote_bytes += g.remote_bytes;
             t.peer_time_s += g.peer_time_s;
             t.host_time_s += g.host_time_s;
+            t.net_time_s += g.net_time_s;
             t.busy_s += g.busy_s;
             t.shard_rows += g.shard_rows;
             t.hot_rows += g.hot_rows;
@@ -236,6 +276,10 @@ impl ShardStats {
 pub struct ShardedStore {
     /// Per-row owner GPU.
     owner: Vec<u8>,
+    /// Per-row home *host* (`--num-hosts`): the same placement policy
+    /// applied at host granularity.  All-zero when `num_hosts == 1`, so
+    /// the single-node arithmetic is untouched by construction.
+    host_owner: Vec<u8>,
     /// One hot tier per GPU, over that GPU's shard.  Row ids stay global,
     /// so each tier's membership/frequency vectors span the whole table —
     /// O(num_gpus × rows) metadata, ~9 bytes × rows per GPU.  Deliberate:
@@ -246,6 +290,8 @@ pub struct ShardedStore {
     tiers: Vec<TieredCache>,
     policy: ShardPolicy,
     num_gpus: usize,
+    num_hosts: usize,
+    fetch_strategy: FetchStrategy,
     row_bytes: u64,
     /// Per-GPU cumulative counters (gauges are derived from `tiers`).
     acc: Vec<GpuShardStats>,
@@ -267,6 +313,8 @@ impl ShardedStore {
     ) -> ShardedStore {
         let n = cfg.num_gpus.clamp(1, 255);
         let owner = assign_owners(rows, n, cfg.policy, cfg.tier.ranking.as_deref());
+        let hosts = cfg.num_hosts.clamp(1, 255);
+        let host_owner = assign_owners(rows, hosts, cfg.policy, cfg.tier.ranking.as_deref());
         let mut shard_rows = vec![0usize; n];
         for &o in &owner {
             shard_rows[o as usize] += 1;
@@ -299,9 +347,12 @@ impl ShardedStore {
             .collect();
         ShardedStore {
             owner,
+            host_owner,
             tiers,
             policy: cfg.policy,
             num_gpus: n,
+            num_hosts: hosts,
+            fetch_strategy: cfg.fetch_strategy,
             row_bytes,
             acc,
         }
@@ -311,13 +362,34 @@ impl ShardedStore {
         self.num_gpus
     }
 
+    pub fn num_hosts(&self) -> usize {
+        self.num_hosts
+    }
+
     pub fn policy(&self) -> ShardPolicy {
         self.policy
+    }
+
+    pub fn fetch_strategy(&self) -> FetchStrategy {
+        self.fetch_strategy
     }
 
     /// Owner GPU of a row.
     pub fn owner_of(&self, row: u32) -> usize {
         self.owner[row as usize] as usize
+    }
+
+    /// Home host of a row (0 when `num_hosts == 1`).
+    pub fn host_of(&self, row: u32) -> usize {
+        self.host_owner[row as usize] as usize
+    }
+
+    /// Whether this row must travel the network under the configured
+    /// fetch strategy: homed on a host other than the trainer's (host 0)
+    /// with `RemoteFetch`.  `PartitionLocal` replicates the halo locally,
+    /// so nothing is ever remote.
+    pub fn is_remote(&self, row: u32) -> bool {
+        self.fetch_strategy == FetchStrategy::RemoteFetch && self.host_owner[row as usize] != 0
     }
 
     /// Whether `row` currently sits in its owner GPU's hot tier — the
@@ -417,6 +489,7 @@ impl ShardedStore {
         let shifted = model.shift_applies(feat_elems);
         let pcie = PcieLink::new(sys);
         let nvlink = NvlinkLink::new(sys);
+        let net = NetLink::new(sys);
         let row_bytes = self.row_bytes;
 
         let mut per_owner: Vec<Vec<u32>> = vec![Vec::new(); n];
@@ -426,15 +499,30 @@ impl ShardedStore {
         let mut link_bytes = 0u64;
         let mut requests = 0u64;
         let mut host = Vec::new();
+        let mut remote = Vec::new();
+        let mut hosts_seen = vec![false; self.num_hosts];
 
         for g in 0..n {
             let chunk = &idx[g * idx.len() / n..(g + 1) * idx.len() / n];
             let mut local_rows = 0u64;
+            let mut halo_rows = 0u64;
             host.clear();
+            remote.clear();
             for v in &mut peer_by_owner {
                 v.clear();
             }
             for &r in chunk {
+                // Host layer first (DESIGN.md §15): under `RemoteFetch` a
+                // row homed elsewhere never touches this host's tiers —
+                // it arrives over the NIC; under `PartitionLocal` the halo
+                // is replicated here and classifies like any local row.
+                if self.is_remote(r) {
+                    remote.push(r);
+                    continue;
+                }
+                if self.host_owner[r as usize] != 0 {
+                    halo_rows += 1;
+                }
                 let o = self.owner[r as usize] as usize;
                 per_owner[o].push(r);
                 if self.tiers[o].is_hot(r) {
@@ -491,14 +579,40 @@ impl ShardedStore {
                 split.host_time_s += c.split.host_time_s;
                 self.acc[g].host_time_s += c.split.host_time_s;
             }
+            if !remote.is_empty() {
+                // Batched per-host RPCs: one message per distinct remote
+                // home, each carrying that home's rows for this GPU.
+                for s in &mut hosts_seen {
+                    *s = false;
+                }
+                let mut messages = 0u64;
+                for &r in &remote {
+                    let h = self.host_owner[r as usize] as usize;
+                    if !hosts_seen[h] {
+                        hosts_seen[h] = true;
+                        messages += 1;
+                    }
+                }
+                let c = net.fetch(remote.len() as u64 * row_bytes, messages);
+                time_g = time_g.max(c.time_s);
+                link_bytes += c.bytes_on_link;
+                requests += c.requests;
+                split.net_bytes += c.split.net_bytes;
+                split.net_bytes_on_link += c.split.net_bytes_on_link;
+                split.net_time_s += c.split.net_time_s;
+                self.acc[g].net_time_s += c.split.net_time_s;
+            }
             split.local_bytes += local_rows * row_bytes;
             let a = &mut self.acc[g];
             a.local_rows += local_rows;
             a.peer_rows += peer_rows;
             a.host_rows += host.len() as u64;
+            a.remote_rows += remote.len() as u64;
+            a.halo_rows += halo_rows;
             a.local_bytes += local_rows * row_bytes;
             a.peer_bytes += peer_rows * row_bytes;
             a.host_bytes += host.len() as u64 * row_bytes;
+            a.remote_bytes += remote.len() as u64 * row_bytes;
             a.busy_s += time_g;
             step_time = step_time.max(time_g);
         }
@@ -744,6 +858,76 @@ mod tests {
         for g in 0..3 {
             let ts = st.tier_stats(g);
             assert_eq!(ts.pins, ts.unpins, "gpu {g} pins unbalanced");
+        }
+    }
+
+    fn host_cfg(hosts: usize, strategy: FetchStrategy) -> ShardConfig {
+        ShardConfig {
+            num_hosts: hosts,
+            fetch_strategy: strategy,
+            ..shard_cfg(2, ShardPolicy::Hash, 0.5)
+        }
+    }
+
+    #[test]
+    fn partition_local_reproduces_the_single_host_cost_bitwise() {
+        // Halo replication keeps every row on the local fast paths: the
+        // gather arithmetic must be the `num_hosts = 1` arithmetic exactly.
+        let idx: Vec<u32> = (0..400u32).map(|i| i * 7 % 1000).collect();
+        let mut one = ShardedStore::new(1000, 64, &sys(), &host_cfg(1, FetchStrategy::RemoteFetch));
+        let mut halo =
+            ShardedStore::new(1000, 64, &sys(), &host_cfg(4, FetchStrategy::PartitionLocal));
+        let c1 = one.gather_cost(&idx, 16, &sys());
+        let ch = halo.gather_cost(&idx, 16, &sys());
+        assert_eq!(c1.time_s.to_bits(), ch.time_s.to_bits());
+        assert_eq!(c1.bytes_on_link, ch.bytes_on_link);
+        assert_eq!(c1.requests, ch.requests);
+        assert_eq!(ch.split.net_bytes, 0);
+        assert_eq!(ch.split.net_time_s, 0.0);
+        let t = halo.stats().totals();
+        assert!(t.halo_rows > 0, "a 4-host partition must home rows elsewhere");
+        assert_eq!(t.remote_rows, 0);
+    }
+
+    #[test]
+    fn remote_fetch_routes_foreign_rows_over_the_network() {
+        let idx: Vec<u32> = (0..400u32).map(|i| i * 7 % 1000).collect();
+        let mut st =
+            ShardedStore::new(1000, 64, &sys(), &host_cfg(4, FetchStrategy::RemoteFetch));
+        let c = st.gather_cost(&idx, 16, &sys());
+        assert!(c.split.net_bytes > 0, "3/4 of the table is foreign-homed");
+        assert!(c.split.net_time_s > 0.0);
+        let t = st.stats().totals();
+        assert!(t.remote_rows > 0);
+        assert_eq!(t.halo_rows, 0, "RemoteFetch never replicates");
+        assert_eq!(t.rows_served(), 400);
+        // RPC payloads ride the wire unamplified: useful == on-link.
+        assert_eq!(c.split.net_bytes_on_link, t.remote_bytes);
+        assert!(t.net_time_s > 0.0);
+    }
+
+    #[test]
+    fn net_bytes_grow_monotonically_with_the_host_count() {
+        // Host-0-local sets are nested as the host count doubles under
+        // every policy (hash modulus, ranking round-robin, contiguous
+        // chunks), so the wire bytes never shrink along 1 -> 2 -> 4 -> 8.
+        let idx: Vec<u32> = (0..600u32).map(|i| i * 13 % 1000).collect();
+        for policy in ShardPolicy::all() {
+            let mut last = 0u64;
+            for hosts in [1usize, 2, 4, 8] {
+                let cfg = ShardConfig {
+                    num_hosts: hosts,
+                    ..shard_cfg(2, policy, 0.5)
+                };
+                let mut st = ShardedStore::new(1000, 64, &sys(), &cfg);
+                let c = st.gather_cost(&idx, 16, &sys());
+                assert!(
+                    c.split.net_bytes_on_link >= last,
+                    "{policy:?}: net bytes shrank at {hosts} hosts"
+                );
+                last = c.split.net_bytes_on_link;
+            }
+            assert!(last > 0, "{policy:?}: 8 hosts must push bytes onto the wire");
         }
     }
 

@@ -12,7 +12,8 @@ use crate::featurestore::staging::StagingPool;
 use crate::featurestore::synth::SyntheticFeatures;
 use crate::featurestore::tiered::{TierConfig, TierStats, TieredCache};
 use crate::interconnect::{
-    count_block_ios, DmaEngine, NvlinkLink, NvmeLink, PathSplit, PcieLink, TransferCost, UvmSpace,
+    count_block_ios, count_block_ios_excluding, DmaEngine, NetLink, NvlinkLink, NvmeLink,
+    PathSplit, PcieLink, TransferCost, UvmSpace,
 };
 use crate::sampler::aggregate::AggregatePlan;
 use crate::tensor::{Device, Tensor};
@@ -702,8 +703,16 @@ impl FeatureStore {
         let mut agg_rows_host = 0u64; // partials computed host-side
         let mut agg_rows_peer = 0u64; // partials computed on peer GPUs
         let mut agg_rows_storage = 0u64; // partials computed storage-side
+        let mut agg_rows_net = 0u64; // partials computed on remote hosts
         let mut off_gpu_slots = 0u64; // neighbor slots reduced off the requesting GPU
         let mut storage_slots: Vec<u32> = Vec::new();
+        // Self-stream cold slots (`Nvme` mode): their block reads are
+        // already priced inside the self stream above, so the aggregate
+        // stream must not charge the shared blocks again (DESIGN.md §14).
+        let mut self_storage_slots: Vec<u32> = Vec::new();
+        // Distinct remote homes contributing partials this step — the
+        // batched per-host RPC count the network link charges latency for.
+        let mut remote_homes = 0u64;
         match self.mode {
             AccessMode::CpuGather
             | AccessMode::UnifiedNaive
@@ -735,18 +744,32 @@ impl FeatureStore {
             AccessMode::Sharded => {
                 // Destinations split across the GPUs with the same
                 // contiguous chunk rule as the raw gather; each GPU's
-                // neighbors classify local / peer-partial / host-partial.
+                // neighbors classify local / peer-partial / host-partial /
+                // net-partial (remote-homed neighbors reduce on their home
+                // host and ship one partial per contributing home).
                 let shard = Self::lock(self.shard.as_ref().expect("sharded store has placement"));
                 let n = shard.num_gpus();
                 let nd = agg.n_dst();
                 let mut peer_owner_seen = vec![false; n];
+                let mut remote_home_seen = vec![false; shard.num_hosts()];
+                let mut step_home_seen = vec![false; shard.num_hosts()];
                 for g in 0..n {
                     for j in g * nd / n..(g + 1) * nd / n {
                         let mut host_any = false;
                         for seen in peer_owner_seen.iter_mut() {
                             *seen = false;
                         }
+                        for seen in remote_home_seen.iter_mut() {
+                            *seen = false;
+                        }
                         for &r in agg.neighbor_ids(j) {
+                            if shard.is_remote(r) {
+                                let h = shard.host_of(r);
+                                remote_home_seen[h] = true;
+                                step_home_seen[h] = true;
+                                off_gpu_slots += 1;
+                                continue;
+                            }
                             let o = shard.owner_of(r);
                             if shard.is_hot_in_owner(r) {
                                 if o != g {
@@ -760,14 +783,28 @@ impl FeatureStore {
                         }
                         agg_rows_peer +=
                             peer_owner_seen.iter().filter(|&&seen| seen).count() as u64;
+                        agg_rows_net +=
+                            remote_home_seen.iter().filter(|&&seen| seen).count() as u64;
                         if host_any {
                             agg_rows_host += 1;
                         }
                     }
                 }
+                remote_homes = step_home_seen.iter().filter(|&&seen| seen).count() as u64;
             }
             AccessMode::Nvme => {
                 let nv = Self::lock(self.nvme.as_ref().expect("nvme store has placement"));
+                // Replicate the self stream's cold-slot set under the same
+                // lock: `nvme_classify_cost` above already paid these
+                // slots' block reads, so the aggregate pricing below
+                // excludes their blocks instead of charging them twice.
+                for &r in self_ids {
+                    if !nv.is_gpu_hot(r) {
+                        if let Some(s) = nv.cold_slot(r) {
+                            self_storage_slots.push(s);
+                        }
+                    }
+                }
                 for j in 0..agg.n_dst() {
                     let mut host_any = false;
                     let mut storage_any = false;
@@ -826,8 +863,27 @@ impl FeatureStore {
             cost.split.peer_time_s += t;
             agg_bytes_on_link += peer_agg_bytes;
         }
+        let net_agg_bytes = agg_rows_net * agg_row_bytes;
+        if net_agg_bytes > 0 {
+            let c = NetLink::new(&self.sys).fetch(net_agg_bytes, remote_homes);
+            cost.time_s += c.time_s;
+            cost.bytes_on_link += c.bytes_on_link;
+            cost.useful_bytes += net_agg_bytes;
+            cost.requests += c.requests;
+            cost.split.net_bytes += net_agg_bytes;
+            cost.split.net_bytes_on_link += c.split.net_bytes_on_link;
+            cost.split.net_time_s += c.split.net_time_s;
+            agg_bytes_on_link += c.bytes_on_link;
+        }
         if !storage_slots.is_empty() {
-            let traffic = count_block_ios(&storage_slots, row_bytes, self.sys.nvme.block_bytes);
+            // Blocks the self stream already read are free here: the SSD
+            // serves each distinct block once per step (DESIGN.md §14).
+            let traffic = count_block_ios_excluding(
+                &storage_slots,
+                row_bytes,
+                self.sys.nvme.block_bytes,
+                &self_storage_slots,
+            );
             let c = NvmeLink::new(&self.sys).read(&traffic);
             cost.time_s += c.split.storage_time_s;
             cost.bytes_on_link += c.bytes_on_link;
@@ -852,7 +908,7 @@ impl FeatureStore {
             dst_rows: self_ids.len() as u64,
             neighbor_rows: agg.neighbor_rows() as u64,
             off_gpu_neighbor_rows: off_gpu_slots,
-            agg_rows: agg_rows_host + agg_rows_peer + agg_rows_storage,
+            agg_rows: agg_rows_host + agg_rows_peer + agg_rows_storage + agg_rows_net,
             near_mem_flops,
             near_mem_s,
         })
@@ -875,6 +931,7 @@ impl FeatureStore {
         let shifted = model.shift_applies(feat_elems);
         let pcie = PcieLink::new(sys);
         let nvlink = NvlinkLink::new(sys);
+        let net = NetLink::new(sys);
 
         let mut peer_by_owner: Vec<Vec<u32>> = vec![Vec::new(); n];
         let mut split = PathSplit::default();
@@ -882,15 +939,22 @@ impl FeatureStore {
         let mut link_bytes = 0u64;
         let mut requests = 0u64;
         let mut host = Vec::new();
+        let mut remote = Vec::new();
+        let mut hosts_seen = vec![false; shard.num_hosts()];
 
         for g in 0..n {
             let chunk = &idx[g * idx.len() / n..(g + 1) * idx.len() / n];
             let mut local_rows = 0u64;
             host.clear();
+            remote.clear();
             for v in &mut peer_by_owner {
                 v.clear();
             }
             for &r in chunk {
+                if shard.is_remote(r) {
+                    remote.push(r);
+                    continue;
+                }
                 let o = shard.owner_of(r);
                 if shard.is_hot_in_owner(r) {
                     if o == g {
@@ -933,6 +997,26 @@ impl FeatureStore {
                 split.host_bytes += c.useful_bytes;
                 split.host_bytes_on_link += c.split.host_bytes_on_link;
                 split.host_time_s += c.split.host_time_s;
+            }
+            if !remote.is_empty() {
+                for s in &mut hosts_seen {
+                    *s = false;
+                }
+                let mut messages = 0u64;
+                for &r in &remote {
+                    let h = shard.host_of(r);
+                    if !hosts_seen[h] {
+                        hosts_seen[h] = true;
+                        messages += 1;
+                    }
+                }
+                let c = net.fetch(remote.len() as u64 * row_bytes, messages);
+                time_g = time_g.max(c.time_s);
+                link_bytes += c.bytes_on_link;
+                requests += c.requests;
+                split.net_bytes += c.split.net_bytes;
+                split.net_bytes_on_link += c.split.net_bytes_on_link;
+                split.net_time_s += c.split.net_time_s;
             }
             split.local_bytes += local_rows * row_bytes;
             step_time = step_time.max(time_g);
@@ -1320,6 +1404,30 @@ mod tests {
                     ranking: Some((0..500).collect()),
                     ..Default::default()
                 },
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    fn multi_host_store(num_hosts: usize, strategy: crate::config::FetchStrategy) -> FeatureStore {
+        FeatureStore::build_sharded(
+            500,
+            24,
+            8,
+            &sys(),
+            42,
+            crate::featurestore::sharded::ShardConfig {
+                num_gpus: 2,
+                num_hosts,
+                policy: crate::config::ShardPolicy::Hash,
+                fetch_strategy: strategy,
+                tier: crate::featurestore::tiered::TierConfig {
+                    hot_frac: 0.5,
+                    promote: false,
+                    ranking: Some((0..500).collect()),
+                    ..Default::default()
+                },
             },
         )
         .unwrap()
@@ -1650,5 +1758,87 @@ mod tests {
         assert!(pd.cost.split.storage_bytes_on_link > 0);
         assert!(pd.cost.split.storage_time_s > 0.0);
         assert!(pd.agg_bytes_on_link > 0);
+    }
+
+    #[test]
+    fn nvme_pushdown_reads_each_shared_block_once() {
+        // Self-stream destinations and aggregate-stream neighbors land in
+        // the same SSD blocks in this fixture; the step must pay the
+        // *union* of their block sets, not the sum (the DESIGN.md §14
+        // double-count fix).
+        let mb = pushdown_batch(32, 6);
+        let plan = AggregatePlan::build(&mb).unwrap();
+        let st = nvme_store(0.2, 0.05);
+        let pd = st.pushdown_cost(&plan, true).unwrap();
+
+        // Recompute both cold-slot streams from the same residency state.
+        let nv = FeatureStore::lock(st.nvme.as_ref().unwrap());
+        let row_bytes = st.precision.row_bytes(st.synth.dim);
+        let block = sys().nvme.block_bytes;
+        let cold = |ids: &[u32]| -> Vec<u32> {
+            ids.iter()
+                .filter(|&&r| !nv.is_gpu_hot(r))
+                .filter_map(|&r| nv.cold_slot(r))
+                .collect()
+        };
+        let gplan = crate::sampler::compact::GatherPlan::build(plan.dst_nodes());
+        let self_slots = cold(gplan.unique_nodes());
+        let mut nbr_slots = Vec::new();
+        for j in 0..plan.n_dst() {
+            nbr_slots.extend(cold(plan.neighbor_ids(j)));
+        }
+        assert!(!self_slots.is_empty() && !nbr_slots.is_empty());
+
+        let link = NvmeLink::new(&sys());
+        let self_c = link.read(&count_block_ios(&self_slots, row_bytes, block));
+        let agg_c = link.read(&count_block_ios_excluding(
+            &nbr_slots, row_bytes, block, &self_slots,
+        ));
+        assert_eq!(
+            pd.cost.split.storage_bytes_on_link,
+            self_c.split.storage_bytes_on_link + agg_c.split.storage_bytes_on_link,
+            "pushdown must price the aggregate stream net of self-stream blocks"
+        );
+        // The fixture really overlaps: the naive double-charge is strictly
+        // more, and self + excluded-aggregate together equal the union.
+        let naive = link.read(&count_block_ios(&nbr_slots, row_bytes, block));
+        assert!(agg_c.bytes_on_link < naive.bytes_on_link, "no shared blocks in fixture");
+        let union: Vec<u32> = self_slots.iter().chain(&nbr_slots).copied().collect();
+        let union_t = count_block_ios(&union, row_bytes, block);
+        assert_eq!(
+            count_block_ios(&self_slots, row_bytes, block).ios
+                + count_block_ios_excluding(&nbr_slots, row_bytes, block, &self_slots).ios,
+            union_t.ios
+        );
+    }
+
+    #[test]
+    fn multi_host_gather_and_pushdown_price_the_network() {
+        let mb = pushdown_batch(24, 6);
+        let plan = AggregatePlan::build(&mb).unwrap();
+        // RemoteFetch: foreign-homed rows hit the wire in both the raw
+        // gather and the pushed-down step.
+        let st = multi_host_store(4, crate::config::FetchStrategy::RemoteFetch);
+        let raw = st.gather(&mb.src_nodes).unwrap().1;
+        assert!(raw.split.net_bytes > 0);
+        let pd = st.pushdown_cost(&plan, true).unwrap();
+        assert!(pd.cost.split.net_bytes > 0);
+        assert!(pd.cost.split.net_time_s > 0.0);
+        // Partials undercut raw remote rows: fanout 6 ships 6 rows raw,
+        // one partial (+count) per contributing home pushed down.
+        assert!(pd.cost.split.net_bytes_on_link < raw.split.net_bytes_on_link);
+
+        // PartitionLocal halo: bitwise the single-host pricing, both ways.
+        let one = multi_host_store(1, crate::config::FetchStrategy::RemoteFetch);
+        let halo = multi_host_store(4, crate::config::FetchStrategy::PartitionLocal);
+        let c1 = one.gather(&mb.src_nodes).unwrap().1;
+        let ch = halo.gather(&mb.src_nodes).unwrap().1;
+        assert_eq!(c1.time_s.to_bits(), ch.time_s.to_bits());
+        assert_eq!(c1.bytes_on_link, ch.bytes_on_link);
+        let p1 = one.pushdown_cost(&plan, true).unwrap();
+        let ph = halo.pushdown_cost(&plan, true).unwrap();
+        assert_eq!(p1.cost.time_s.to_bits(), ph.cost.time_s.to_bits());
+        assert_eq!(p1.cost.bytes_on_link, ph.cost.bytes_on_link);
+        assert_eq!(ph.cost.split.net_bytes, 0);
     }
 }

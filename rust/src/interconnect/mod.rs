@@ -30,27 +30,35 @@
 //! ```
 
 pub mod dma;
+pub mod net;
 pub mod nvlink;
 pub mod nvme;
 pub mod pcie;
+pub mod topology;
 pub mod uvm;
 
 pub use dma::DmaEngine;
+pub use net::NetLink;
 pub use nvlink::NvlinkLink;
-pub use nvme::{count_block_ios, NvmeLink, NvmeTraffic};
+pub use nvme::{count_block_ios, count_block_ios_excluding, NvmeLink, NvmeTraffic};
 pub use pcie::PcieLink;
+pub use topology::{
+    Link, LinkBytes, LinkShare, LinkSpec, PowerRail, ResourceBusy, ResourceKind, Topology,
+    NUM_RESOURCE_KINDS,
+};
 pub use uvm::UvmSpace;
 
 use crate::device::warp::GatherTraffic;
 
-/// Byte/time attribution of one transfer across the four access paths of
-/// the cost matrix (DESIGN.md §4/§8): requester-local HBM, NVLink peer,
-/// the host link (PCIe zero-copy, DMA, or UVM migration), and the NVMe
-/// storage link.
+/// Byte/time attribution of one transfer across the five access paths of
+/// the cost matrix (DESIGN.md §4/§8/§15): requester-local HBM, NVLink
+/// peer, the host link (PCIe zero-copy, DMA, or UVM migration), the NVMe
+/// storage link, and the cross-host network link.
 ///
 /// Single-path modes fill exactly one class (`CpuGather`/`Uvm`/the unified
 /// modes are all-host, `GpuResident` is all-local); `Tiered` splits
-/// local/host; `Sharded` uses local/peer/host; `Nvme` uses
+/// local/host; `Sharded` uses local/peer/host (plus net under
+/// `--num-hosts > 1` with remote fetching); `Nvme` uses
 /// local/host/storage.  `*_bytes` count *useful* payload (the requester's
 /// perspective); `*_bytes_on_link` decompose
 /// [`TransferCost::bytes_on_link`] (amplification included) per link, which
@@ -65,12 +73,17 @@ pub struct PathSplit {
     pub host_bytes: u64,
     /// Useful bytes read from the NVMe cold store.
     pub storage_bytes: u64,
-    /// Amplified bytes that crossed the NVLink / host / storage link
-    /// respectively (their sum is [`TransferCost::bytes_on_link`]).
+    /// Useful bytes fetched from a remote host over the network.
+    pub net_bytes: u64,
+    /// Amplified bytes that crossed the NVLink / host / storage / network
+    /// link respectively (their sum is [`TransferCost::bytes_on_link`]).
     pub peer_bytes_on_link: u64,
     pub host_bytes_on_link: u64,
     /// Block-granular bytes the SSD actually read (`ios × block_bytes`).
     pub storage_bytes_on_link: u64,
+    /// Wire bytes of the remote-fetch RPC payloads (no amplification —
+    /// batched RPCs ship contiguous row payloads).
+    pub net_bytes_on_link: u64,
     /// Simulated seconds of NVLink occupancy (summed across GPUs).  For
     /// the zero-copy links this excludes the gather-kernel launch, which
     /// is charged once per step in [`TransferCost::time_s`].
@@ -82,6 +95,28 @@ pub struct PathSplit {
     /// Simulated seconds of NVMe-link occupancy (launch-free, like the
     /// other link occupancies).
     pub storage_time_s: f64,
+    /// Simulated seconds of network-link occupancy (host 0's NIC).
+    pub net_time_s: f64,
+}
+
+impl PathSplit {
+    /// Field-wise accumulate another split into this one — the merge used
+    /// when composing a step's cost from several priced streams.
+    pub fn absorb(&mut self, other: &PathSplit) {
+        self.local_bytes += other.local_bytes;
+        self.peer_bytes += other.peer_bytes;
+        self.host_bytes += other.host_bytes;
+        self.storage_bytes += other.storage_bytes;
+        self.net_bytes += other.net_bytes;
+        self.peer_bytes_on_link += other.peer_bytes_on_link;
+        self.host_bytes_on_link += other.host_bytes_on_link;
+        self.storage_bytes_on_link += other.storage_bytes_on_link;
+        self.net_bytes_on_link += other.net_bytes_on_link;
+        self.peer_time_s += other.peer_time_s;
+        self.host_time_s += other.host_time_s;
+        self.storage_time_s += other.storage_time_s;
+        self.net_time_s += other.net_time_s;
+    }
 }
 
 /// Which link a [`ZeroCopyLink`] cost is attributed to in [`PathSplit`].
@@ -170,6 +205,18 @@ pub struct TransferCost {
 }
 
 impl TransferCost {
+    /// Accumulate another priced stream into this cost: serial durations,
+    /// link bytes, requests, CPU time, and the full per-path split all
+    /// add field-wise.
+    pub fn absorb(&mut self, other: &TransferCost) {
+        self.time_s += other.time_s;
+        self.bytes_on_link += other.bytes_on_link;
+        self.useful_bytes += other.useful_bytes;
+        self.requests += other.requests;
+        self.cpu_time_s += other.cpu_time_s;
+        self.split.absorb(&other.split);
+    }
+
     /// Effective throughput seen by the consumer.
     pub fn effective_bw(&self) -> f64 {
         if self.time_s > 0.0 {
@@ -195,6 +242,7 @@ impl TransferCost {
             host_s: self.split.host_time_s,
             peer_s: self.split.peer_time_s,
             storage_s: self.split.storage_time_s,
+            net_s: self.split.net_time_s,
         }
     }
 }
@@ -215,4 +263,28 @@ pub struct ResourceDemand {
     pub peer_s: f64,
     /// Launch-free NVMe storage-link occupancy seconds.
     pub storage_s: f64,
+    /// Launch-free network-link occupancy seconds (remote fetches).
+    pub net_s: f64,
+}
+
+impl ResourceDemand {
+    /// The transfer-link occupancies in canonical topology order — what
+    /// the overlap/serving engines iterate instead of naming links.
+    pub fn links(&self) -> [(ResourceKind, f64); 4] {
+        [
+            (ResourceKind::HostLink, self.host_s),
+            (ResourceKind::PeerLink, self.peer_s),
+            (ResourceKind::StorageLink, self.storage_s),
+            (ResourceKind::NetLink, self.net_s),
+        ]
+    }
+
+    /// Sum of the link occupancies, in canonical order.
+    pub fn link_total(&self) -> f64 {
+        let mut t = 0.0;
+        for (_, s) in self.links() {
+            t += s;
+        }
+        t
+    }
 }

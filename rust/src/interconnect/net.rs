@@ -1,0 +1,144 @@
+//! Cross-host network link — the multi-host tier's host↔host path
+//! (DESIGN.md §15).
+//!
+//! Symmetric in *placement* with [`crate::interconnect::NvlinkLink`] (a
+//! thin wrapper over the profile constants, one pricing method, a
+//! [`PathSplit`] class of its own) but deliberately coarser in
+//! *mechanism*: no warp request stream crosses the NIC.  Remote feature
+//! fetches under `--num-hosts > 1` are batched per-host RPCs — host 0
+//! sends one request per distinct remote owner host per step, each reply
+//! carries that host's rows as one contiguous payload.  The cost is
+//! therefore the larger of a wire-bandwidth bound and a per-message
+//! round-trip bound:
+//!
+//! ```text
+//! time = max(wire_bytes / peak_bw, messages × latency_s)
+//! ```
+//!
+//! with no kernel launch (the caller composes the step's launches) and no
+//! CPU term (the NIC DMAs straight to pinned buffers — the same
+//! CPU-bypass story the paper tells for PCIe, one level up).
+//!
+//! ```
+//! use ptdirect::config::SystemProfile;
+//! use ptdirect::interconnect::NetLink;
+//!
+//! let sys = SystemProfile::system1();
+//! // 1 MiB of remote rows spread over 3 remote hosts.
+//! let cost = NetLink::new(&sys).fetch(1 << 20, 3);
+//! assert_eq!(cost.useful_bytes, 1 << 20);
+//! assert_eq!(cost.cpu_time_s, 0.0); // NIC DMA: no CPU on the path
+//! ```
+
+use crate::config::{NetConfig, SystemProfile};
+
+use super::topology::{Link, ResourceKind};
+use super::{PathSplit, TransferCost};
+
+/// Simulated cross-host network link (Ethernet/InfiniBand).
+#[derive(Clone, Debug)]
+pub struct NetLink {
+    cfg: NetConfig,
+}
+
+impl NetLink {
+    pub fn new(sys: &SystemProfile) -> Self {
+        NetLink { cfg: sys.net.clone() }
+    }
+
+    pub fn config(&self) -> &NetConfig {
+        &self.cfg
+    }
+
+    /// Price a batched remote fetch: `wire_bytes` of row payload pulled
+    /// from `messages` distinct remote hosts (one RPC round trip each).
+    ///
+    /// An empty fetch (no bytes, no messages) is free — the degeneracy
+    /// the `--num-hosts 1` anchor leans on.
+    pub fn fetch(&self, wire_bytes: u64, messages: u64) -> TransferCost {
+        let bw_bound = wire_bytes as f64 / self.cfg.peak_bw;
+        let msg_bound = messages as f64 * self.cfg.latency_s;
+        let link_time_s = bw_bound.max(msg_bound);
+        TransferCost {
+            time_s: link_time_s,
+            bytes_on_link: wire_bytes,
+            useful_bytes: wire_bytes,
+            requests: messages,
+            cpu_time_s: 0.0,
+            split: PathSplit {
+                net_bytes: wire_bytes,
+                net_bytes_on_link: wire_bytes,
+                net_time_s: link_time_s,
+                ..PathSplit::default()
+            },
+        }
+    }
+}
+
+impl Link for NetLink {
+    fn kind(&self) -> ResourceKind {
+        ResourceKind::NetLink
+    }
+
+    fn peak_bw(&self) -> f64 {
+        self.cfg.peak_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_fetch_is_free() {
+        let c = NetLink::new(&SystemProfile::system1()).fetch(0, 0);
+        assert_eq!(c.time_s, 0.0);
+        assert_eq!(c.bytes_on_link, 0);
+        assert_eq!(c.requests, 0);
+        assert_eq!(c.split.net_time_s, 0.0);
+        assert_eq!(c.split.net_bytes_on_link, 0);
+    }
+
+    #[test]
+    fn large_payloads_are_bandwidth_bound() {
+        let sys = SystemProfile::system1();
+        let bytes = 1u64 << 30;
+        let c = NetLink::new(&sys).fetch(bytes, 1);
+        assert_eq!(c.time_s, bytes as f64 / sys.net.peak_bw);
+        assert_eq!(c.useful_bytes, bytes);
+        assert_eq!(c.bytes_on_link, bytes, "no amplification on batched RPCs");
+    }
+
+    #[test]
+    fn tiny_payloads_are_latency_bound() {
+        let sys = SystemProfile::system1();
+        let c = NetLink::new(&sys).fetch(64, 7);
+        assert_eq!(c.time_s, 7.0 * sys.net.latency_s);
+        assert_eq!(c.requests, 7);
+    }
+
+    #[test]
+    fn split_attributes_everything_to_the_net_class() {
+        let c = NetLink::new(&SystemProfile::system2()).fetch(1 << 20, 2);
+        assert_eq!(c.split.net_bytes, 1 << 20);
+        assert_eq!(c.split.net_bytes_on_link, c.bytes_on_link);
+        assert_eq!(c.split.net_time_s, c.time_s);
+        assert_eq!(c.split.host_bytes, 0);
+        assert_eq!(c.split.peer_bytes, 0);
+        assert_eq!(c.split.storage_bytes, 0);
+        assert_eq!(c.cpu_time_s, 0.0);
+        // The demand view routes the whole occupancy to the net lane.
+        let d = c.demand();
+        assert_eq!(d.net_s, c.time_s);
+        assert_eq!(d.host_s + d.peer_s + d.storage_s + d.cpu_s, 0.0);
+    }
+
+    #[test]
+    fn link_trait_reports_kind_and_bandwidth() {
+        let sys = SystemProfile::system3();
+        let l = NetLink::new(&sys);
+        assert_eq!(l.kind(), ResourceKind::NetLink);
+        assert_eq!(l.peak_bw(), sys.net.peak_bw);
+        assert_eq!(l.label(), "net-link");
+    }
+}

@@ -25,6 +25,7 @@
 
 use crate::config::{NvlinkConfig, SystemProfile};
 use crate::device::warp::GatherTraffic;
+use crate::interconnect::topology::{Link, ResourceKind};
 use crate::interconnect::{LinkPath, TransferCost, ZeroCopyLink};
 
 /// Zero-copy peer read path over NVLink.
@@ -70,6 +71,16 @@ impl NvlinkLink {
             kernel_launch_s: self.kernel_launch_s,
         }
         .gather(traffic, LinkPath::Peer)
+    }
+}
+
+impl Link for NvlinkLink {
+    fn kind(&self) -> ResourceKind {
+        ResourceKind::PeerLink
+    }
+
+    fn peak_bw(&self) -> f64 {
+        self.cfg.peak_bw
     }
 }
 

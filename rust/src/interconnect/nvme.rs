@@ -49,6 +49,7 @@
 //! ```
 
 use crate::config::{NvmeConfig, SystemProfile};
+use crate::interconnect::topology::{Link, ResourceKind};
 use crate::interconnect::{PathSplit, TransferCost};
 
 /// Block-level I/O statistics for one storage gather (the NVMe analogue
@@ -126,6 +127,77 @@ pub fn count_block_ios(slots: &[u32], row_bytes: u64, block_bytes: u64) -> NvmeT
     }
 }
 
+/// [`count_block_ios`], minus the blocks another stream of the same step
+/// already reads.
+///
+/// A composite step can touch one cold-store block from two priced
+/// streams — e.g. an aggregation push-down step reads storage partials
+/// for the neighbor aggregate *and* raw rows for the destination self
+/// stream.  The SSD serves a block once per step, so the second stream
+/// must not charge the blocks covered by `already_read` (the other
+/// stream's slots) again.  `useful_bytes`/`distinct_bytes` keep their row
+/// semantics — only the block I/Os and their wire bytes are deduplicated
+/// against the companion stream.
+pub fn count_block_ios_excluding(
+    slots: &[u32],
+    row_bytes: u64,
+    block_bytes: u64,
+    already_read: &[u32],
+) -> NvmeTraffic {
+    let full = count_block_ios(slots, row_bytes, block_bytes);
+    if already_read.is_empty() || row_bytes == 0 || full.ios == 0 {
+        return full;
+    }
+    let bs = block_bytes.max(1);
+    let mut covered: Vec<u64> = Vec::new();
+    let mut sorted: Vec<u32> = already_read.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let mut last: Option<u64> = None;
+    for &s in &sorted {
+        let start_b = s as u64 * row_bytes / bs;
+        let end_b = (s as u64 * row_bytes + row_bytes - 1) / bs;
+        let from = match last {
+            Some(l) if l >= start_b => l + 1,
+            _ => start_b,
+        };
+        for b in from..=end_b {
+            covered.push(b);
+        }
+        if end_b >= from {
+            last = Some(end_b);
+        }
+    }
+    // Re-walk this stream's blocks, skipping the companion's.
+    let mut own: Vec<u32> = slots.to_vec();
+    own.sort_unstable();
+    own.dedup();
+    let mut ios = 0u64;
+    let mut last_counted: Option<u64> = None;
+    for &s in &own {
+        let start_b = s as u64 * row_bytes / bs;
+        let end_b = (s as u64 * row_bytes + row_bytes - 1) / bs;
+        let from = match last_counted {
+            Some(l) if l >= start_b => l + 1,
+            _ => start_b,
+        };
+        for b in from..=end_b {
+            if covered.binary_search(&b).is_err() {
+                ios += 1;
+            }
+        }
+        if end_b >= from {
+            last_counted = Some(end_b);
+        }
+    }
+    NvmeTraffic {
+        ios,
+        bytes_on_link: ios * bs,
+        useful_bytes: full.useful_bytes,
+        distinct_bytes: full.distinct_bytes,
+    }
+}
+
 /// GPU-initiated block-read path to the NVMe cold store.
 #[derive(Clone, Debug)]
 pub struct NvmeLink {
@@ -175,6 +247,16 @@ impl NvmeLink {
                 ..PathSplit::default()
             },
         }
+    }
+}
+
+impl Link for NvmeLink {
+    fn kind(&self) -> ResourceKind {
+        ResourceKind::StorageLink
+    }
+
+    fn peak_bw(&self) -> f64 {
+        self.cfg.peak_bw
     }
 }
 
@@ -236,6 +318,57 @@ mod tests {
                 assert!(t.bytes_on_link >= t.distinct_bytes);
             }
         }
+    }
+
+    #[test]
+    fn excluding_covered_blocks_counts_each_block_once() {
+        // 512 B rows, 8 per 4 KiB block: slots 0..8 are block 0, 8..16
+        // block 1.  If a companion stream already reads slots 0..8 (block
+        // 0), a stream over slots 4..12 only pays for block 1.
+        let companion: Vec<u32> = (0..8).collect();
+        let own: Vec<u32> = (4..12).collect();
+        let t = count_block_ios_excluding(&own, 512, 4096, &companion);
+        assert_eq!(t.ios, 1);
+        assert_eq!(t.bytes_on_link, 4096);
+        // Row semantics unchanged: useful/distinct still count own rows.
+        assert_eq!(t.useful_bytes, 8 * 512);
+        assert_eq!(t.distinct_bytes, 8 * 512);
+        // Together the two streams read exactly the union of blocks.
+        let union: Vec<u32> = (0..12).collect();
+        let comp = count_block_ios(&companion, 512, 4096);
+        assert_eq!(comp.ios + t.ios, count_block_ios(&union, 512, 4096).ios);
+    }
+
+    #[test]
+    fn excluding_nothing_matches_the_plain_count() {
+        let slots = [3u32, 77, 12, 3, 900];
+        let plain = count_block_ios(&slots, 516, 4096);
+        let excl = count_block_ios_excluding(&slots, 516, 4096, &[]);
+        assert_eq!(plain, excl);
+        // Disjoint block coverage also changes nothing.
+        let far: Vec<u32> = (5000..5010).collect();
+        let excl = count_block_ios_excluding(&slots, 516, 4096, &far);
+        assert_eq!(plain, excl);
+    }
+
+    #[test]
+    fn excluding_a_superset_leaves_zero_ios() {
+        let slots = [1u32, 2, 9];
+        let t = count_block_ios_excluding(&slots, 512, 4096, &[0, 1, 2, 3, 9]);
+        assert_eq!(t.ios, 0);
+        assert_eq!(t.bytes_on_link, 0);
+        assert_eq!(t.useful_bytes, 3 * 512);
+    }
+
+    #[test]
+    fn excluding_handles_straddling_rows() {
+        // 3000 B rows: slot 1 spans blocks 0-1, slot 2 spans 1-2.  With
+        // slot 1 already read, slot 2 only pays block 2.
+        let t = count_block_ios_excluding(&[2], 3000, 4096, &[1]);
+        assert_eq!(t.ios, 1);
+        let both = count_block_ios(&[1, 2], 3000, 4096);
+        let first = count_block_ios(&[1], 3000, 4096);
+        assert_eq!(first.ios + t.ios, both.ios);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 
 use crate::config::{PcieConfig, SystemProfile};
 use crate::device::warp::GatherTraffic;
+use crate::interconnect::topology::{Link, ResourceKind};
 use crate::interconnect::{LinkPath, PathSplit, TransferCost, ZeroCopyLink};
 
 /// Zero-copy read path over PCIe.
@@ -70,6 +71,16 @@ impl PcieLink {
             kernel_launch_s: self.kernel_launch_s,
         }
         .gather(traffic, LinkPath::Host)
+    }
+}
+
+impl Link for PcieLink {
+    fn kind(&self) -> ResourceKind {
+        ResourceKind::HostLink
+    }
+
+    fn peak_bw(&self) -> f64 {
+        self.cfg.peak_bw
     }
 }
 

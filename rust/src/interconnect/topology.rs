@@ -1,0 +1,370 @@
+//! Unified link-topology registry (DESIGN.md §15).
+//!
+//! Every schedulable resource of the simulated machine — the CPU sampler,
+//! the four transfer links (PCIe host, NVLink peer, NVMe storage, and the
+//! cross-host network), and the GPU — is one [`ResourceKind`].  The kinds
+//! carry a *canonical order* (the order [`ResourceKind::all`] returns and
+//! every per-kind map iterates), which is load-bearing: totals and
+//! utilizations are summed in canonical order, so appending a new kind
+//! with a zero contribution leaves every pre-existing sum bitwise intact
+//! (`x + 0.0 == x` for the non-NaN, non-negative values these maps hold).
+//! That is how the network lane joined the topology without moving a
+//! single pre-network report.
+//!
+//! [`Topology`] is the registry the cost/schedule/power layers iterate
+//! instead of naming links: [`Topology::lanes`] gives the overlap engine
+//! its lane shape, [`Topology::from_sys`] gives the power model each
+//! link's peak bandwidth and power rail.  The concrete link models
+//! (`pcie.rs`, `nvlink.rs`, `nvme.rs`, `net.rs`, `uvm.rs`) implement the
+//! [`Link`] trait so generic code can ask any of them for its kind and
+//! peak bandwidth.
+//!
+//! The per-kind maps ([`ResourceBusy`], [`LinkBytes`], [`LinkShare`]) are
+//! fixed arrays indexed by the kind's ordinal — this module is the *one*
+//! place that owns the kind count, so growing the topology is a one-file
+//! change plus the link model itself.
+
+use crate::config::SystemProfile;
+
+/// Number of [`ResourceKind`] variants — the single home of the kind
+/// count; every per-kind array in the crate is sized by this.
+pub const NUM_RESOURCE_KINDS: usize = 6;
+
+/// A schedulable resource of the simulated testbed: the CPU sampler
+/// lanes, one of the four transfer links, or the GPU.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ResourceKind {
+    /// CPU sampler lanes (neighbor sampling + host-side gather share).
+    Sampler,
+    /// The PCIe host link (zero-copy host reads, DMA copies).
+    HostLink,
+    /// The NVLink peer link (sharded mode's GPU↔GPU reads).
+    PeerLink,
+    /// The NVMe storage link (GPU-initiated block reads).
+    StorageLink,
+    /// The cross-host network link (Ethernet/InfiniBand remote fetches).
+    NetLink,
+    /// The GPU compute engine (training / inference steps).
+    #[default]
+    Gpu,
+}
+
+impl ResourceKind {
+    /// All kinds in canonical order — the order every per-kind sum,
+    /// report line, and lane vector iterates.
+    pub fn all() -> [ResourceKind; NUM_RESOURCE_KINDS] {
+        [
+            ResourceKind::Sampler,
+            ResourceKind::HostLink,
+            ResourceKind::PeerLink,
+            ResourceKind::StorageLink,
+            ResourceKind::NetLink,
+            ResourceKind::Gpu,
+        ]
+    }
+
+    /// Index of this kind in the canonical order (the array slot of the
+    /// per-kind maps).
+    pub const fn ordinal(self) -> usize {
+        match self {
+            ResourceKind::Sampler => 0,
+            ResourceKind::HostLink => 1,
+            ResourceKind::PeerLink => 2,
+            ResourceKind::StorageLink => 3,
+            ResourceKind::NetLink => 4,
+            ResourceKind::Gpu => 5,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ResourceKind::Sampler => "sampler",
+            ResourceKind::HostLink => "host-link",
+            ResourceKind::PeerLink => "peer-link",
+            ResourceKind::StorageLink => "storage-link",
+            ResourceKind::NetLink => "net-link",
+            ResourceKind::Gpu => "gpu",
+        }
+    }
+}
+
+/// Per-kind busy seconds (scheduling and critical-path attribution).
+///
+/// Array-backed so it stays `Copy` — `OverlapReport` and `ServingReport`
+/// embed it by value.  `total` and `max_kind` iterate the canonical
+/// order, preserving the pre-topology five-kind arithmetic bitwise when
+/// the net lane is idle.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResourceBusy {
+    by_kind: [f64; NUM_RESOURCE_KINDS],
+}
+
+impl ResourceBusy {
+    pub fn add(&mut self, kind: ResourceKind, s: f64) {
+        self.by_kind[kind.ordinal()] += s;
+    }
+
+    pub fn get(&self, kind: ResourceKind) -> f64 {
+        self.by_kind[kind.ordinal()]
+    }
+
+    /// Sum over all kinds, in canonical order.
+    pub fn total(&self) -> f64 {
+        let mut t = 0.0;
+        for kind in ResourceKind::all() {
+            t += self.by_kind[kind.ordinal()];
+        }
+        t
+    }
+
+    /// The busiest kind (first in canonical order wins ties).
+    pub fn max_kind(&self) -> ResourceKind {
+        let mut best = ResourceKind::Sampler;
+        let mut best_s = 0.0;
+        for kind in ResourceKind::all() {
+            let s = self.get(kind);
+            if s > best_s {
+                best_s = s;
+                best = kind;
+            }
+        }
+        best
+    }
+}
+
+/// Per-kind wire bytes (`bytes_on_link` attribution) — what the trainer
+/// accumulates per epoch and hands to the power model.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkBytes {
+    by_kind: [u64; NUM_RESOURCE_KINDS],
+}
+
+impl LinkBytes {
+    pub fn add(&mut self, kind: ResourceKind, bytes: u64) {
+        self.by_kind[kind.ordinal()] += bytes;
+    }
+
+    pub fn set(&mut self, kind: ResourceKind, bytes: u64) {
+        self.by_kind[kind.ordinal()] = bytes;
+    }
+
+    pub fn get(&self, kind: ResourceKind) -> u64 {
+        self.by_kind[kind.ordinal()]
+    }
+}
+
+/// Per-kind fraction-of-epoch duty cycle — the power model's per-link
+/// utilization attribution (`PowerReport::link_util`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LinkShare {
+    by_kind: [f64; NUM_RESOURCE_KINDS],
+}
+
+impl LinkShare {
+    pub fn set(&mut self, kind: ResourceKind, share: f64) {
+        self.by_kind[kind.ordinal()] = share;
+    }
+
+    pub fn get(&self, kind: ResourceKind) -> f64 {
+        self.by_kind[kind.ordinal()]
+    }
+}
+
+/// Which power rail a link draws from ([`crate::config::PowerProfile`]):
+/// the host I/O complex (PCIe + NVLink + NIC) or the SSD.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PowerRail {
+    Io,
+    Storage,
+}
+
+/// One registered resource: its kind, lane count, and — when priced from
+/// a [`SystemProfile`] — its peak bandwidth and power rail.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    pub kind: ResourceKind,
+    /// Service lanes the overlap engine schedules onto (1 for every link
+    /// and the GPU; the sampler divides across its worker lanes).
+    pub lanes: usize,
+    /// Peak bandwidth in B/s (0 for the compute resources, whose cost is
+    /// time, not bytes).
+    pub peak_bw: f64,
+    /// Power rail the link's wire bytes draw from (`None` for compute
+    /// resources — their power terms are duty-cycle based).
+    pub rail: Option<PowerRail>,
+}
+
+/// The registry of every resource in canonical order.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    links: Vec<LinkSpec>,
+}
+
+impl Topology {
+    /// Shape-only topology for the overlap/serving engines: canonical
+    /// kinds with their lane counts and no pricing.
+    pub fn lanes(sampler_lanes: usize) -> Topology {
+        Topology {
+            links: ResourceKind::all()
+                .iter()
+                .map(|&kind| LinkSpec {
+                    kind,
+                    lanes: if kind == ResourceKind::Sampler { sampler_lanes } else { 1 },
+                    peak_bw: 0.0,
+                    rail: None,
+                })
+                .collect(),
+        }
+    }
+
+    /// Priced topology for the power model: each transfer link with its
+    /// profile bandwidth and power rail, in canonical order.
+    pub fn from_sys(sys: &SystemProfile) -> Topology {
+        Topology {
+            links: vec![
+                LinkSpec {
+                    kind: ResourceKind::HostLink,
+                    lanes: 1,
+                    peak_bw: sys.pcie.peak_bw,
+                    rail: Some(PowerRail::Io),
+                },
+                LinkSpec {
+                    kind: ResourceKind::PeerLink,
+                    lanes: 1,
+                    peak_bw: sys.nvlink.peak_bw,
+                    rail: Some(PowerRail::Io),
+                },
+                LinkSpec {
+                    kind: ResourceKind::StorageLink,
+                    lanes: 1,
+                    peak_bw: sys.nvme.peak_bw,
+                    rail: Some(PowerRail::Storage),
+                },
+                LinkSpec {
+                    kind: ResourceKind::NetLink,
+                    lanes: 1,
+                    peak_bw: sys.net.peak_bw,
+                    rail: Some(PowerRail::Io),
+                },
+            ],
+        }
+    }
+
+    pub fn links(&self) -> &[LinkSpec] {
+        &self.links
+    }
+}
+
+/// Common face of the concrete link models (`PcieLink`, `NvlinkLink`,
+/// `NvmeLink`, `NetLink`, `UvmSpace`): which resource lane their traffic
+/// occupies and the raw bandwidth their pricing races against.
+pub trait Link {
+    fn kind(&self) -> ResourceKind;
+
+    fn peak_bw(&self) -> f64;
+
+    fn label(&self) -> &'static str {
+        self.kind().label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_cover_every_kind_in_canonical_order() {
+        let all = ResourceKind::all();
+        assert_eq!(all.len(), NUM_RESOURCE_KINDS);
+        let labels: Vec<&str> = all.iter().map(|k| k.label()).collect();
+        assert_eq!(
+            labels,
+            vec!["sampler", "host-link", "peer-link", "storage-link", "net-link", "gpu"]
+        );
+        for (i, kind) in all.iter().enumerate() {
+            assert_eq!(kind.ordinal(), i, "{kind:?} out of canonical position");
+        }
+    }
+
+    #[test]
+    fn busy_accumulates_and_totals_in_canonical_order() {
+        let mut b = ResourceBusy::default();
+        b.add(ResourceKind::Sampler, 1.0);
+        b.add(ResourceKind::Sampler, 0.5);
+        b.add(ResourceKind::Gpu, 2.0);
+        assert_eq!(b.get(ResourceKind::Sampler), 1.5);
+        assert_eq!(b.get(ResourceKind::Gpu), 2.0);
+        assert_eq!(b.get(ResourceKind::NetLink), 0.0);
+        assert_eq!(b.total(), 3.5);
+    }
+
+    #[test]
+    fn idle_net_lane_leaves_the_five_kind_total_bitwise() {
+        // The degeneracy argument in one assertion: summing the canonical
+        // order with a zero net term is bitwise the five-kind sum.
+        let parts = [0.1, 0.2, 0.3, 0.4, 0.7];
+        let old = (((parts[0] + parts[1]) + parts[2]) + parts[3]) + parts[4];
+        let mut b = ResourceBusy::default();
+        b.add(ResourceKind::Sampler, parts[0]);
+        b.add(ResourceKind::HostLink, parts[1]);
+        b.add(ResourceKind::PeerLink, parts[2]);
+        b.add(ResourceKind::StorageLink, parts[3]);
+        b.add(ResourceKind::Gpu, parts[4]);
+        assert_eq!(b.total().to_bits(), old.to_bits());
+    }
+
+    #[test]
+    fn max_kind_tie_break_is_deterministic() {
+        let mut b = ResourceBusy::default();
+        assert_eq!(b.max_kind(), ResourceKind::Sampler, "all-zero defaults to sampler");
+        b.add(ResourceKind::HostLink, 1.0);
+        b.add(ResourceKind::Gpu, 1.0);
+        // Equal loads: first in canonical order wins.
+        assert_eq!(b.max_kind(), ResourceKind::HostLink);
+        b.add(ResourceKind::Gpu, 0.5);
+        assert_eq!(b.max_kind(), ResourceKind::Gpu);
+    }
+
+    #[test]
+    fn link_bytes_tracks_per_kind() {
+        let mut w = LinkBytes::default();
+        w.add(ResourceKind::HostLink, 100);
+        w.add(ResourceKind::HostLink, 28);
+        w.set(ResourceKind::NetLink, 64);
+        assert_eq!(w.get(ResourceKind::HostLink), 128);
+        assert_eq!(w.get(ResourceKind::NetLink), 64);
+        assert_eq!(w.get(ResourceKind::StorageLink), 0);
+    }
+
+    #[test]
+    fn lane_topology_covers_every_kind() {
+        let t = Topology::lanes(3);
+        assert_eq!(t.links().len(), NUM_RESOURCE_KINDS);
+        for (spec, kind) in t.links().iter().zip(ResourceKind::all()) {
+            assert_eq!(spec.kind, kind);
+            let want = if kind == ResourceKind::Sampler { 3 } else { 1 };
+            assert_eq!(spec.lanes, want, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn priced_topology_reads_the_profile_and_rails() {
+        let sys = SystemProfile::system1();
+        let t = Topology::from_sys(&sys);
+        let find = |k: ResourceKind| {
+            t.links().iter().find(|l| l.kind == k).copied().expect("registered link")
+        };
+        assert_eq!(find(ResourceKind::HostLink).peak_bw, sys.pcie.peak_bw);
+        assert_eq!(find(ResourceKind::PeerLink).peak_bw, sys.nvlink.peak_bw);
+        assert_eq!(find(ResourceKind::StorageLink).peak_bw, sys.nvme.peak_bw);
+        assert_eq!(find(ResourceKind::NetLink).peak_bw, sys.net.peak_bw);
+        assert_eq!(find(ResourceKind::HostLink).rail, Some(PowerRail::Io));
+        assert_eq!(find(ResourceKind::NetLink).rail, Some(PowerRail::Io));
+        assert_eq!(find(ResourceKind::StorageLink).rail, Some(PowerRail::Storage));
+        // Canonical order holds within the priced registry too.
+        let ordinals: Vec<usize> = t.links().iter().map(|l| l.kind.ordinal()).collect();
+        let mut sorted = ordinals.clone();
+        sorted.sort_unstable();
+        assert_eq!(ordinals, sorted);
+    }
+}

@@ -12,6 +12,7 @@
 use std::collections::HashMap;
 
 use crate::config::SystemProfile;
+use crate::interconnect::topology::{Link, ResourceKind};
 use crate::interconnect::{PathSplit, TransferCost};
 use crate::util::bytes::span_units;
 
@@ -106,6 +107,18 @@ impl UvmSpace {
             }
         }
         self.resident.insert(page, self.tick);
+    }
+}
+
+impl Link for UvmSpace {
+    /// UVM migrations ride the host link — same lane as PCIe zero-copy.
+    fn kind(&self) -> ResourceKind {
+        ResourceKind::HostLink
+    }
+
+    /// Effective migration bandwidth (DMA-efficiency-derated PCIe).
+    fn peak_bw(&self) -> f64 {
+        self.bw
     }
 }
 

@@ -25,16 +25,18 @@ const REL_EPS: f64 = 1e-9;
 fn random_demands(g: &mut Gen, n: usize) -> Vec<ResourceDemand> {
     (0..n)
         .map(|_| {
-            // Pick a link mix: host-only, peer+host, storage+host, or
-            // launch-only — the shapes the five access modes emit.
-            let shape = g.usize_in(0, 3);
+            // Pick a link mix: host-only, peer+host, storage+host,
+            // net+host (a multi-host remote fetch), or launch-only — the
+            // shapes the access modes emit.
+            let shape = g.usize_in(0, 4);
             let link_s = g.f64_in(0.0, 3e-3);
             let cpu_s = if g.bool() { g.f64_in(0.0, 1e-3) } else { 0.0 };
-            let (host_s, peer_s, storage_s) = match shape {
-                0 => (link_s, 0.0, 0.0),
-                1 => (link_s * 0.6, link_s * 0.4, 0.0),
-                2 => (link_s * 0.3, 0.0, link_s * 0.7),
-                _ => (0.0, 0.0, 0.0),
+            let (host_s, peer_s, storage_s, net_s) = match shape {
+                0 => (link_s, 0.0, 0.0, 0.0),
+                1 => (link_s * 0.6, link_s * 0.4, 0.0, 0.0),
+                2 => (link_s * 0.3, 0.0, link_s * 0.7, 0.0),
+                3 => (link_s * 0.5, 0.0, 0.0, link_s * 0.5),
+                _ => (0.0, 0.0, 0.0, 0.0),
             };
             ResourceDemand {
                 total_s: cpu_s + link_s,
@@ -42,6 +44,7 @@ fn random_demands(g: &mut Gen, n: usize) -> Vec<ResourceDemand> {
                 host_s,
                 peer_s,
                 storage_s,
+                net_s,
             }
         })
         .collect()

@@ -40,6 +40,7 @@ fn random_shard_cfg(g: &mut Gen, rows: usize) -> ShardConfig {
             ranking,
             ..TierConfig::default()
         },
+        ..ShardConfig::default()
     }
 }
 
@@ -205,6 +206,7 @@ fn one_gpu_reproduces_the_tiered_cost_bit_exactly() {
                 num_gpus: 1,
                 policy,
                 tier: tier_cfg,
+                ..ShardConfig::default()
             },
         )
         .map_err(|e| e.to_string())?;

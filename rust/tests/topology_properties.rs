@@ -1,0 +1,220 @@
+//! Integration tests for the link-topology registry and the multi-host
+//! network tier (DESIGN.md §15):
+//!
+//!  * the `--num-hosts`/`--fetch-strategy` knobs are inert at one host —
+//!    every access mode replays its single-host epoch bit-exactly through
+//!    the topology-driven engines;
+//!  * the network resource lane exists in every schedule but stays idle
+//!    (exactly 0.0 busy seconds) on a single host, and per-link busy
+//!    shares stay within the serial envelope;
+//!  * remote fetching and partition-local replication agree bitwise on
+//!    numerics (placement and pricing never touch values);
+//!  * partition-local replication reproduces the single-host cost
+//!    bit-exactly, reporting the mirrored halo instead of paying bytes;
+//!  * remote bytes grow monotonically with the host count under every
+//!    placement policy (host 0's shard only shrinks as hosts double).
+
+use ptdirect::config::{AccessMode, Backend, FetchStrategy, RunConfig, ShardPolicy};
+use ptdirect::coordinator::simclock::ResourceKind;
+use ptdirect::coordinator::Trainer;
+use ptdirect::interconnect::NUM_RESOURCE_KINDS;
+
+const STEPS: u32 = 8;
+
+/// Hermetic config: native backend, no artifacts needed.
+fn cfg(mode: AccessMode) -> RunConfig {
+    RunConfig {
+        dataset: "product".into(),
+        arch: "sage".into(),
+        mode,
+        steps_per_epoch: STEPS,
+        scale: 2048,
+        feature_budget: 8 << 20,
+        seed: 42,
+        backend: Backend::Native,
+        artifacts_dir: "this-directory-does-not-exist".into(),
+        ..RunConfig::default()
+    }
+}
+
+fn multi_host_cfg(num_hosts: u32, strategy: FetchStrategy) -> RunConfig {
+    RunConfig {
+        num_gpus: 2,
+        num_hosts,
+        fetch_strategy: strategy,
+        ..cfg(AccessMode::Sharded)
+    }
+}
+
+#[test]
+fn single_host_knobs_are_inert_in_every_mode() {
+    // `--num-hosts 1` is the degeneracy anchor: with either fetch
+    // strategy, every access mode must replay the default epoch report
+    // bit-exactly — same numerics, same costs, same power.
+    for mode in AccessMode::all() {
+        let base = Trainer::new(cfg(mode)).unwrap().run_epoch().unwrap();
+        for strategy in FetchStrategy::all() {
+            let mut c = cfg(mode);
+            c.num_hosts = 1;
+            c.fetch_strategy = strategy;
+            let r = Trainer::new(c).unwrap().run_epoch().unwrap();
+            assert_eq!(r.losses, base.losses, "{mode:?} {strategy:?}");
+            assert_eq!(r.accs, base.accs, "{mode:?} {strategy:?}");
+            for (got, want, what) in [
+                (r.breakdown_sim.sample_s, base.breakdown_sim.sample_s, "sample"),
+                (r.breakdown_sim.transfer_s, base.breakdown_sim.transfer_s, "transfer"),
+                (r.breakdown_sim.train_s, base.breakdown_sim.train_s, "train"),
+                (r.breakdown_sim.other_s, base.breakdown_sim.other_s, "other"),
+                (r.overlap.overlapped_s, base.overlap.overlapped_s, "overlapped"),
+                (r.power.watts, base.power.watts, "watts"),
+            ] {
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{mode:?} {strategy:?}: {what} diverged at one host"
+                );
+            }
+            assert_eq!(r.bytes_on_link, base.bytes_on_link, "{mode:?} {strategy:?}");
+            assert_eq!(r.requests, base.requests, "{mode:?} {strategy:?}");
+        }
+    }
+}
+
+#[test]
+fn the_net_lane_exists_everywhere_but_idles_on_a_single_host() {
+    assert_eq!(ResourceKind::all().len(), NUM_RESOURCE_KINDS);
+    assert!(ResourceKind::all().contains(&ResourceKind::NetLink));
+    for mode in AccessMode::all() {
+        let mut c = cfg(mode);
+        c.prefetch_depth = 4;
+        let sampler_lanes = c.sampler_workers.max(1) as f64;
+        let r = Trainer::new(c).unwrap().run_epoch().unwrap();
+        let o = &r.overlap;
+        assert_eq!(
+            o.busy.get(ResourceKind::NetLink),
+            0.0,
+            "{mode:?}: network lane busy on a single host"
+        );
+        // Per-link busy conservation: every lane stays inside the serial
+        // envelope, and no single-lane resource outlasts the epoch.
+        for kind in ResourceKind::all() {
+            let busy = o.busy.get(kind);
+            assert!(busy >= 0.0, "{mode:?}: negative {kind:?} busy");
+            assert!(
+                busy <= o.serial_s * (1.0 + 1e-9),
+                "{mode:?}: {kind:?} busy {busy} exceeds serial {}",
+                o.serial_s
+            );
+            let lanes = if kind == ResourceKind::Sampler {
+                sampler_lanes
+            } else {
+                1.0
+            };
+            assert!(
+                o.overlapped_s >= busy / lanes - 1e-9 * o.serial_s,
+                "{mode:?}: {kind:?} busy {busy} exceeds the epoch {}",
+                o.overlapped_s
+            );
+        }
+    }
+}
+
+#[test]
+fn remote_fetch_prices_the_network_in_a_multi_host_epoch() {
+    let r = Trainer::new(multi_host_cfg(4, FetchStrategy::RemoteFetch))
+        .unwrap()
+        .run_epoch()
+        .unwrap();
+    let totals = r.shard.as_ref().expect("sharded epoch reports shard stats").totals();
+    assert!(totals.remote_rows > 0, "4-host hash split must home rows remotely");
+    assert!(totals.remote_bytes > 0);
+    assert!(totals.net_time_s > 0.0);
+    assert_eq!(totals.halo_rows, 0, "remote fetching replicates nothing");
+    // Row conservation still holds with the fourth class in the split.
+    assert_eq!(totals.rows_served(), r.dedup.unique_rows);
+    // The overlap engine scheduled the fetches on the network lane.
+    assert!(
+        r.overlap.busy.get(ResourceKind::NetLink) > 0.0,
+        "remote fetches never occupied the net lane"
+    );
+}
+
+#[test]
+fn fetch_strategies_agree_bitwise_on_numerics() {
+    // Placement and pricing never touch values: the two remote-row
+    // strategies disagree on cost, never on the loss trajectory.
+    let remote = Trainer::new(multi_host_cfg(4, FetchStrategy::RemoteFetch))
+        .unwrap()
+        .run_epoch()
+        .unwrap();
+    let local = Trainer::new(multi_host_cfg(4, FetchStrategy::PartitionLocal))
+        .unwrap()
+        .run_epoch()
+        .unwrap();
+    assert_eq!(remote.losses, local.losses, "fetch strategy changed numerics");
+    assert_eq!(remote.accs, local.accs);
+    let lt = local.shard.as_ref().unwrap().totals();
+    assert!(lt.halo_rows > 0, "partition-local must report the mirrored halo");
+    assert_eq!(lt.remote_rows, 0);
+    assert_eq!(lt.remote_bytes, 0);
+    assert_eq!(lt.net_time_s, 0.0);
+}
+
+#[test]
+fn partition_local_reproduces_the_single_host_epoch_bit_exactly() {
+    // The replication strategy's steady state *is* the single-host run:
+    // identical cost, bytes, schedule, and power — only the halo counter
+    // records that a real deployment would spend memory for it.
+    let one = Trainer::new(multi_host_cfg(1, FetchStrategy::PartitionLocal))
+        .unwrap()
+        .run_epoch()
+        .unwrap();
+    let four = Trainer::new(multi_host_cfg(4, FetchStrategy::PartitionLocal))
+        .unwrap()
+        .run_epoch()
+        .unwrap();
+    assert_eq!(four.losses, one.losses);
+    for (got, want, what) in [
+        (four.breakdown_sim.sample_s, one.breakdown_sim.sample_s, "sample"),
+        (four.breakdown_sim.transfer_s, one.breakdown_sim.transfer_s, "transfer"),
+        (four.breakdown_sim.train_s, one.breakdown_sim.train_s, "train"),
+        (four.breakdown_sim.other_s, one.breakdown_sim.other_s, "other"),
+        (four.overlap.overlapped_s, one.overlap.overlapped_s, "overlapped"),
+        (four.power.watts, one.power.watts, "watts"),
+    ] {
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "partition-local 4 hosts diverged from 1 host on {what}"
+        );
+    }
+    assert_eq!(four.bytes_on_link, one.bytes_on_link);
+    assert_eq!(four.requests, one.requests);
+    assert_eq!(one.shard.as_ref().unwrap().totals().halo_rows, 0);
+    assert!(four.shard.as_ref().unwrap().totals().halo_rows > 0);
+}
+
+#[test]
+fn remote_bytes_grow_monotonically_with_the_host_count() {
+    // Host 0's shard only shrinks as the host count doubles (hash keeps
+    // multiples, degree round-robin keeps every 2k-th rank, contig halves
+    // the range), so the remote byte volume can only grow.
+    for policy in ShardPolicy::all() {
+        let mut last = 0u64;
+        for hosts in [1u32, 2, 4, 8] {
+            let mut c = multi_host_cfg(hosts, FetchStrategy::RemoteFetch);
+            c.shard_policy = policy;
+            let r = Trainer::new(c).unwrap().run_epoch().unwrap();
+            let t = r.shard.as_ref().unwrap().totals();
+            assert!(
+                t.remote_bytes >= last,
+                "{policy:?}: remote bytes shrank from {last} at {hosts} hosts"
+            );
+            last = t.remote_bytes;
+            if hosts == 1 {
+                assert_eq!(t.remote_bytes, 0, "{policy:?}: one host has no remote rows");
+            }
+        }
+        assert!(last > 0, "{policy:?}: eight hosts never paid the network");
+    }
+}
